@@ -1,0 +1,33 @@
+//! Figure 4: end-to-end verification time across models (parallelism 2,
+//! one layer — the paper's setup). The paper's shape to reproduce: times
+//! positively correlated with operator count; all models well under the
+//! 3-minute envelope; ByteDance bwd > fwd.
+
+use graphguard::coordinator::{report_table, Coordinator};
+use graphguard::models;
+
+fn main() {
+    println!("Figure 4 — end-to-end verification time (parallelism 2, 1 layer)\n");
+    let mut jobs = models::table2_workloads(2);
+    let (gs, gd, ri) = models::bytedance::bwd_pair(2).unwrap();
+    jobs.push(models::Workload {
+        name: "bytedance_bwd_2".into(),
+        gs,
+        gd,
+        ri,
+        strategies: vec!["ep"],
+    });
+    let coord = Coordinator::default();
+    // serial run_one for per-model timing fidelity (no scheduler noise)
+    let results: Vec<_> = jobs.iter().map(|w| coord.run_one(w)).collect();
+    print!("{}", report_table(&results));
+    println!("\n(paper: 6–167 s on CloudLab; shape to match = monotone in #operators)");
+    // correlation check printed for EXPERIMENTS.md
+    let mut pairs: Vec<(usize, f64)> = results
+        .iter()
+        .map(|r| (r.gs_ops + r.gd_ops, r.duration.as_secs_f64()))
+        .collect();
+    pairs.sort_by_key(|p| p.0);
+    println!("ops→time series: {:?}", pairs);
+    assert!(results.iter().all(|r| r.ok), "all Table-2 workloads must refine");
+}

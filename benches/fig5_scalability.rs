@@ -1,0 +1,62 @@
+//! Figure 5: verification time vs parallelism size {2,4,6,8} and #layers
+//! {1,2,3,4}, for GPT (TP+SP+VP) and Llama-3 (TP). Shapes to reproduce:
+//! growth with parallelism degree dominates growth with layer count, and
+//! Llama-3 has NO size-6 point (uneven partition).
+
+use graphguard::bench::fmt_dur;
+use graphguard::coordinator::Coordinator;
+use graphguard::models::{gpt, llama, Workload};
+use std::time::Duration;
+
+fn time_workload(coord: &Coordinator, name: String, build: impl FnOnce() -> anyhow::Result<(graphguard::ir::Graph, graphguard::ir::Graph, graphguard::relation::Relation)>) -> Option<(Duration, usize)> {
+    match build() {
+        Ok((gs, gd, ri)) => {
+            let ops = gs.num_nodes() + gd.num_nodes();
+            let r = coord.run_one(&Workload { name, gs, gd, ri, strategies: vec![] });
+            assert!(r.ok, "{}: {:?}", r.name, r.error);
+            Some((r.duration, ops))
+        }
+        Err(_) => None, // uneven partition (the Llama-3 size-6 hole)
+    }
+}
+
+fn main() {
+    let coord = Coordinator::default();
+    let gpt_cfg = gpt::GptConfig::sweep();
+    let llama_cfg = llama::LlamaConfig::default();
+
+    println!("Figure 5a — time vs parallelism size (1 layer)");
+    println!("{:<6} {:>14} {:>14}", "size", "gpt(tp+sp+vp)", "llama3(tp)");
+    for ranks in [2usize, 3, 4, 6] {
+        let g = time_workload(&coord, format!("gpt_p{ranks}"), || {
+            gpt::tp_sp_vp_pair(ranks, 1, &gpt_cfg)
+        });
+        let l = time_workload(&coord, format!("llama_p{ranks}"), || {
+            llama::tp_pair(ranks, 1, &llama_cfg)
+        });
+        println!(
+            "{:<6} {:>14} {:>14}",
+            ranks,
+            g.map(|(d, _)| fmt_dur(d)).unwrap_or_else(|| "—".into()),
+            l.map(|(d, _)| fmt_dur(d)).unwrap_or_else(|| "— (uneven)".into()),
+        );
+    }
+
+    println!("\nFigure 5b — time vs #layers (parallelism 2)");
+    println!("{:<7} {:>14} {:>14}", "layers", "gpt(tp+sp+vp)", "llama3(tp)");
+    for layers in [1usize, 2, 3, 4] {
+        let g = time_workload(&coord, format!("gpt_l{layers}"), || {
+            gpt::tp_sp_vp_pair(2, layers, &gpt_cfg)
+        });
+        let l = time_workload(&coord, format!("llama_l{layers}"), || {
+            llama::tp_pair(2, layers, &llama_cfg)
+        });
+        println!(
+            "{:<7} {:>14} {:>14}",
+            layers,
+            g.map(|(d, _)| fmt_dur(d)).unwrap(),
+            l.map(|(d, _)| fmt_dur(d)).unwrap(),
+        );
+    }
+    println!("\n(paper shape: parallelism degree has the bigger impact; layers ~linear)");
+}

@@ -1,0 +1,43 @@
+//! Figure 6: the effort to support customized operators — (a) #operators,
+//! #lemmas, avg operators-per-lemma for each model's custom ops; (b) the
+//! CDF of lines-of-code per lemma (paper: all < 55 LoC, most simple).
+
+use graphguard::lemmas;
+
+fn main() {
+    let lib = lemmas::metadata();
+
+    println!("Figure 6a — custom-operator lemma effort per model/frontend");
+    println!("{:<12} {:>8} {:>8} {:>16}", "origin", "#lemmas", "#ops", "avg ops/lemma");
+    for (group, label) in [("pallas", "pallas (L1)"), ("v", "vllm/qwen2"), ("h", "hlo/llama3")] {
+        let lems: Vec<_> = lib.iter().filter(|m| m.group == group).collect();
+        let ops: u32 = lems.iter().map(|m| m.complexity).sum();
+        println!(
+            "{:<12} {:>8} {:>8} {:>16.2}",
+            label,
+            lems.len(),
+            ops,
+            ops as f64 / lems.len().max(1) as f64
+        );
+    }
+    let builtin = lib.iter().filter(|m| matches!(m.group, "c" | "core")).count();
+    println!("(+ {builtin} built-in ATen-style lemmas, {} total)", lib.len());
+
+    println!("\nFigure 6b — CDF of LoC per lemma");
+    let mut locs: Vec<u32> = lib.iter().map(|m| m.loc).collect();
+    locs.sort_unstable();
+    for pct in [10usize, 25, 50, 75, 90, 100] {
+        let idx = (pct * locs.len()).div_ceil(100).saturating_sub(1);
+        println!("  p{pct:<3} ≤ {:>3} LoC", locs[idx]);
+    }
+    let max = *locs.last().unwrap();
+    assert!(max < 60, "paper: every lemma under ~55 LoC (max here {max})");
+    println!("  max = {max} LoC (paper: < 55)");
+
+    println!("\ncomplexity histogram (#operators per lemma):");
+    let maxc = lib.iter().map(|m| m.complexity).max().unwrap();
+    for c in 1..=maxc {
+        let n = lib.iter().filter(|m| m.complexity == c).count();
+        println!("  {c} ops: {}", "#".repeat(n));
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end driver proving all three layers compose.
+//!
+//! 1. **L1/L2 (build time)**: `make artifacts` lowered the JAX Llama block
+//!    (with its Pallas RMSNorm + attention kernels, interpret-lowered) and
+//!    the HF-style regression pair to HLO text, and captured their jaxprs
+//!    to GraphGuard graph JSON.
+//! 2. **L3 (static)**: load the captured `G_s`/`G_d` graphs and the user
+//!    `R_i`, run iterative relation inference, obtain `R_o`.
+//! 3. **Runtime (dynamic)**: compile both HLO artifacts on the PJRT CPU
+//!    client, execute them on the recorded example inputs, evaluate the
+//!    inferred `R_o` expression over `G_d`'s outputs with the Rust
+//!    expression interpreter, and assert it reproduces `G_s`'s outputs.
+//!
+//! Run: `make artifacts && cargo run --release --example cross_validate`
+
+use anyhow::{ensure, Context, Result};
+use graphguard::expr::eval::{eval_expr, Env};
+use graphguard::expr::TensorRef;
+use graphguard::infer::{check_refinement, InferConfig};
+use graphguard::ir::{json_io, Graph};
+use graphguard::relation::Relation;
+use graphguard::runtime::Runtime;
+use graphguard::util::json::Json;
+use graphguard::util::ndarray::NdArray;
+use std::time::Instant;
+
+fn load_json(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+fn load_graph(path: &str) -> Result<Graph> {
+    json_io::from_json(&load_json(path)?)
+}
+
+fn load_inputs(path: &str) -> Result<Vec<NdArray>> {
+    load_json(path)?
+        .as_arr()
+        .context("inputs file must be a list")?
+        .iter()
+        .map(|entry| {
+            let shape: Vec<i64> = entry
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .filter_map(|d| d.as_i64())
+                .collect();
+            let data: Vec<f32> = entry
+                .get("data")
+                .as_arr()
+                .context("data")?
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as f32))
+                .collect();
+            NdArray::new(shape, data)
+        })
+        .collect()
+}
+
+fn cross_validate(pair: &str, gs_name: &str, gd_name: &str, ri_name: &str) -> Result<()> {
+    println!("━━ {pair} ━━");
+    let gs = load_graph(&format!("artifacts/graphs/{gs_name}.json"))?;
+    let gd = load_graph(&format!("artifacts/graphs/{gd_name}.json"))?;
+    let ri = Relation::from_json(&load_json(&format!("artifacts/graphs/{ri_name}.json"))?, &gs, &gd)?;
+    ri.validate_shapes(&gs, &gd)?;
+
+    // static: infer R_o on the captured graphs
+    let t0 = Instant::now();
+    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "  static:  refinement holds in {} ({} G_s ops, {} lemma applications)",
+        graphguard::bench::fmt_dur(t0.elapsed()),
+        gs.num_nodes(),
+        out.stats.total_applications()
+    );
+
+    // dynamic: run the AOT artifacts via PJRT
+    let rt = Runtime::cpu()?;
+    let m_s = rt.load_hlo_text(&format!("artifacts/{gs_name}.hlo.txt"))?;
+    let m_d = rt.load_hlo_text(&format!("artifacts/{gd_name}.hlo.txt"))?;
+    let in_s = load_inputs(&format!("artifacts/graphs/{gs_name}_inputs.json"))?;
+    let in_d = load_inputs(&format!("artifacts/graphs/{gd_name}_inputs.json"))?;
+    let t1 = Instant::now();
+    let out_s = m_s.execute(&in_s)?;
+    let out_d = m_d.execute(&in_d)?;
+    println!(
+        "  runtime: executed both HLO modules on {} in {}",
+        rt.platform(),
+        graphguard::bench::fmt_dur(t1.elapsed())
+    );
+
+    // reconstruct G_s outputs from G_d outputs via R_o
+    let mut env: Env = Env::default();
+    for (i, &t) in gd.outputs.iter().enumerate() {
+        env.insert(TensorRef::d(t), out_d[i].clone());
+    }
+    for (i, &o) in gs.outputs.iter().enumerate() {
+        let cands = out.relation.get(o);
+        ensure!(!cands.is_empty(), "no R_o mapping for output {i}");
+        for cand in cands {
+            let rebuilt = eval_expr(&cand.expr, &env)?;
+            let diff = rebuilt.max_abs_diff(&out_s[i]);
+            ensure!(
+                rebuilt.allclose(&out_s[i], 1e-4, 1e-5),
+                "R_o mapping failed to reconstruct output {i}: |Δ|={diff}"
+            );
+            println!("  dynamic: R_o reconstructs output '{}' (|Δ| = {diff:.2e}) ✓", gs.tensor(o).name);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    ensure!(
+        std::path::Path::new("artifacts/llama_seq.hlo.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    cross_validate("llama TP=2 (Pallas kernels inside)", "llama_seq", "llama_tp2", "llama_ri")?;
+    cross_validate("regression grad-accum k=2", "regression_seq", "regression_ga2", "regression_ri")?;
+    println!("\nall layers compose: AOT artifacts ⇄ captured graphs ⇄ inferred relations ✓");
+    Ok(())
+}

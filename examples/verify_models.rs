@@ -1,0 +1,47 @@
+//! Verify the full Table-2 workload suite — the paper's end-to-end use:
+//! every model (GPT/Megatron, Qwen2/vLLM, HF regression, Llama-3, the
+//! ByteDance-style MoE block) against its distributed implementation, run
+//! through the multi-threaded coordinator, reporting the Fig-4-style table.
+//!
+//! Run: `cargo run --release --example verify_models [-- --ranks 4]`
+
+use graphguard::coordinator::{report_table, Coordinator};
+use graphguard::infer::InferConfig;
+use graphguard::models;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let ranks = args
+        .iter()
+        .position(|a| a == "--ranks")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2usize);
+
+    println!("verifying the Table-2 suite at parallelism {ranks}...\n");
+    let mut jobs = models::table2_workloads(ranks);
+    // fwd+bwd variant of the ByteDance-style model (paper's "Bwd" bar)
+    let (gs, gd, ri) = models::bytedance::bwd_pair(ranks)?;
+    jobs.push(models::Workload {
+        name: format!("bytedance_bwd_{ranks}"),
+        gs,
+        gd,
+        ri,
+        strategies: vec!["ep"],
+    });
+
+    let coord = Coordinator::default();
+    let results = coord.run_batch(jobs);
+    print!("{}", report_table(&results));
+
+    let total: std::time::Duration = results.iter().map(|r| r.duration).sum();
+    println!("\ntotal wall time: {}", graphguard::bench::fmt_dur(total));
+    for r in &results {
+        if let Some(e) = &r.error {
+            println!("\n{}:\n{e}", r.name);
+        }
+    }
+    anyhow::ensure!(results.iter().all(|r| r.ok), "some workloads failed");
+    println!("all models refine ✓");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT artifact builder: lower the L2 models to HLO *text* + capture their
+graphs to GraphGuard JSON.
+
+Run once by `make artifacts`; the Rust binary is self-contained afterwards.
+HLO text (not `.serialize()`d protos) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  llama_seq.hlo.txt, llama_tp2.hlo.txt        PJRT-executable modules
+  regression_seq.hlo.txt, regression_ga2.hlo.txt
+  graphs/llama_{seq,tp2}.json                 captured graphs
+  graphs/regression_{seq,ga2}.json
+  graphs/llama_ri.json, graphs/regression_ri.json   clean input relations
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .capture import capture
+
+
+def to_hlo_text(fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def llama_ri():
+    """Clean input relation for the TP=2 Llama pair, in G_d tensor names."""
+    ri = {
+        "x": ["x"],
+        "cos": ["cos"],
+        "sin": ["sin"],
+        "w_rms1": ["w_rms1"],
+        "w_rms2": ["w_rms2"],
+    }
+    for w, dim in (("wq", 1), ("wk", 1), ("wv", 1), ("wg", 1), ("wu", 1), ("wo", 0), ("wd", 0)):
+        ri[w] = [f"concat({w}0, {w}1; dim={dim})"]
+    return ri
+
+
+def regression_ri():
+    return {
+        "x": ["concat(x0, x1; dim=0)"],
+        "y": ["concat(y0, y1; dim=0)"],
+        "w": ["w"],
+        "b": ["b"],
+    }
+
+
+def build(outdir):
+    os.makedirs(os.path.join(outdir, "graphs"), exist_ok=True)
+
+    seq_args = model.llama_example_args()
+    tp_args = model.split_for_tp2(seq_args)
+    reg_args = model.regression_example_args()
+    x, y, w, b = reg_args
+    ga_args = (x[:4], x[4:], y[:4], y[4:], w, b)
+
+    jobs = [
+        ("llama_seq", model.llama_block_seq, seq_args),
+        ("llama_tp2", model.llama_block_tp2, tp_args),
+        ("regression_seq", model.regression_seq, reg_args),
+        ("regression_ga2", model.regression_grad_accum, ga_args),
+    ]
+    for name, fn, args in jobs:
+        hlo = to_hlo_text(fn, args)
+        with open(os.path.join(outdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+        graph = capture(fn, args, name)
+        with open(os.path.join(outdir, "graphs", f"{name}.json"), "w") as f:
+            json.dump(graph, f, indent=1)
+        print(f"  {name}: {len(hlo)} chars HLO, {len(graph['nodes'])} captured nodes")
+
+    with open(os.path.join(outdir, "graphs", "llama_ri.json"), "w") as f:
+        json.dump(llama_ri(), f, indent=1)
+    with open(os.path.join(outdir, "graphs", "regression_ri.json"), "w") as f:
+        json.dump(regression_ri(), f, indent=1)
+
+    # example input bundles for cross-validation (flat f32 lists)
+    import numpy as np
+
+    def dump_inputs(name, args):
+        payload = [
+            {"shape": list(np.asarray(a).shape), "data": np.asarray(a).ravel().tolist()}
+            for a in args
+        ]
+        with open(os.path.join(outdir, "graphs", f"{name}_inputs.json"), "w") as f:
+            json.dump(payload, f)
+
+    dump_inputs("llama_seq", seq_args)
+    dump_inputs("llama_tp2", tp_args)
+    dump_inputs("regression_seq", reg_args)
+    dump_inputs("regression_ga2", ga_args)
+    print(f"artifacts written to {outdir}")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    a = p.parse_args()
+    build(a.out)

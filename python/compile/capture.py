@@ -1,0 +1,286 @@
+"""Computation-graph capture: jaxpr → GraphGuard graph JSON (paper §5.1).
+
+The analog of the paper's TorchDynamo capture (and of their 377-line
+XLA→intermediate-format utility). `capture(fn, args, name)` traces the
+function, walks the jaxpr, and emits the JSON schema `rust/src/ir/json_io.rs`
+parses: inputs with shapes/dtypes, one node per supported primitive, named
+outputs.
+
+Pallas kernels appear as `pallas_call` equations; they are identified by
+their argument signature ((x[s,h], w[h]) → pallas_rms_norm;
+(q,k,v of one shape) → pallas_attention) — the same practical naming
+workaround as the paper's `log_tensor` CustomOp.
+"""
+
+import json
+
+import jax
+import numpy as np
+
+_UNARY = {
+    "neg": "neg",
+    "exp": "exp",
+    "log": "log",
+    "sqrt": "sqrt",
+    "rsqrt": "rsqrt",
+    "tanh": "tanh",
+    "logistic": "sigmoid",
+}
+_BINARY = {"add": "add", "sub": "sub", "mul": "mul", "div": "div", "max": "maximum"}
+
+
+class _Capture:
+    def __init__(self, name):
+        self.name = name
+        self.inputs = []
+        self.nodes = []
+        self.names = {}  # jaxpr var -> tensor name
+        self.consts = {}  # jaxpr var -> python scalar
+        self.counter = 0
+
+    def fresh(self, base):
+        self.counter += 1
+        return f"{base}_{self.counter}"
+
+    def node(self, op, inputs, out_var, attrs=None, base=None):
+        name = self.fresh(base or op)
+        entry = {"op": op, "name": name, "inputs": inputs}
+        if attrs:
+            entry["attrs"] = attrs
+        self.nodes.append(entry)
+        self.names[out_var] = name
+        return name
+
+    def ref(self, atom):
+        """Name for a jaxpr atom (variable or literal)."""
+        try:
+            from jax.extend.core import Literal
+        except ImportError:  # older jax
+            from jax.core import Literal
+
+        if isinstance(atom, Literal):
+            v = np.asarray(atom.val)
+            if v.ndim == 0:
+                return ("scalar", float(v))
+            raise NotImplementedError(f"non-scalar literal {v.shape}")
+        if atom in self.consts:
+            return ("scalar", self.consts[atom])
+        return ("tensor", self.names[atom])
+
+
+def _dims_attr(x):
+    return [int(d) for d in x]
+
+
+def capture(fn, args, name):
+    """Trace ``fn(*args)`` and return the graph as a JSON-able dict."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    cap = _Capture(name)
+
+    import inspect
+
+    try:
+        argnames = list(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):
+        argnames = []
+    for i, var in enumerate(jaxpr.jaxpr.invars):
+        aval = var.aval
+        tname = argnames[i] if i < len(argnames) else f"arg{i}"
+        dtype = "i64" if np.issubdtype(aval.dtype, np.integer) else "f32"
+        cap.inputs.append(
+            {"name": tname, "shape": [int(d) for d in aval.shape], "dtype": dtype}
+        )
+        cap.names[var] = tname
+    for var, val in zip(jaxpr.jaxpr.constvars, jaxpr.consts):
+        v = np.asarray(val)
+        if v.ndim == 0:
+            cap.consts[var] = float(v)
+        else:
+            cname = cap.fresh("const")
+            cap.inputs.append(
+                {"name": cname, "shape": list(v.shape), "dtype": "f32", "value": v.tolist()}
+            )
+            cap.names[var] = cname
+
+    for eqn in jaxpr.jaxpr.eqns:
+        _lower_eqn(cap, eqn)
+
+    outputs = []
+    for var in jaxpr.jaxpr.outvars:
+        kind, ref = cap.ref(var)
+        if kind != "tensor":
+            raise NotImplementedError("scalar literal output")
+        outputs.append(ref)
+    return {"name": name, "inputs": cap.inputs, "nodes": cap.nodes, "outputs": outputs}
+
+
+def _lower_eqn(cap, eqn):
+    prim = eqn.primitive.name
+    out = eqn.outvars[0]
+
+    def tensor_in(i):
+        kind, ref = cap.ref(eqn.invars[i])
+        if kind != "tensor":
+            raise NotImplementedError(f"{prim}: scalar where tensor expected")
+        return ref
+
+    if prim in _UNARY:
+        cap.node(_UNARY[prim], [tensor_in(0)], out)
+    elif prim in _BINARY:
+        refs = [cap.ref(v) for v in eqn.invars]
+        kinds = [k for k, _ in refs]
+        if "scalar" in kinds:
+            # fold scalar operand into scale/add_scalar
+            (scalar_idx, tensor_idx) = (0, 1) if kinds[0] == "scalar" else (1, 0)
+            c = refs[scalar_idx][1]
+            t = refs[tensor_idx][1]
+            if prim == "mul":
+                cap.node("scale", [t], out, {"c": c})
+            elif prim == "add":
+                cap.node("add_scalar", [t], out, {"c": c})
+            elif prim == "sub" and scalar_idx == 1:
+                cap.node("add_scalar", [t], out, {"c": -c})
+            elif prim == "div" and scalar_idx == 1:
+                cap.node("scale", [t], out, {"c": 1.0 / c})
+            else:
+                raise NotImplementedError(f"{prim} with scalar on side {scalar_idx}")
+        else:
+            cap.node(_BINARY[prim], [refs[0][1], refs[1][1]], out)
+    elif prim == "dot_general":
+        ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+        la = eqn.invars[0].aval
+        if list(lb) or list(rb):
+            raise NotImplementedError("batched dot_general in capture")
+        if list(lc) == [len(la.shape) - 1] and list(rc) == [0]:
+            cap.node("matmul", [tensor_in(0), tensor_in(1)], out)
+        else:
+            raise NotImplementedError(f"dot_general dims {eqn.params['dimension_numbers']}")
+    elif prim == "transpose":
+        cap.node(
+            "transpose", [tensor_in(0)], out, {"perm": _dims_attr(eqn.params["permutation"])}
+        )
+    elif prim == "reshape":
+        cap.node(
+            "reshape",
+            [tensor_in(0)],
+            out,
+            {"shape": [int(d) for d in eqn.outvars[0].aval.shape]},
+        )
+    elif prim == "concatenate":
+        cap.node(
+            "concat",
+            [tensor_in(i) for i in range(len(eqn.invars))],
+            out,
+            {"dim": int(eqn.params["dimension"])},
+        )
+    elif prim == "slice":
+        starts = eqn.params["start_indices"]
+        limits = eqn.params["limit_indices"]
+        strides = eqn.params.get("strides") or [1] * len(starts)
+        if any(s != 1 for s in strides):
+            raise NotImplementedError("strided slice")
+        src_shape = eqn.invars[0].aval.shape
+        cur = tensor_in(0)
+        for d, (a, b) in enumerate(zip(starts, limits)):
+            if (a, b) != (0, src_shape[d]):
+                nxt = cap.fresh("slice")
+                cap.nodes.append(
+                    {
+                        "op": "slice",
+                        "name": nxt,
+                        "inputs": [cur],
+                        "attrs": {"dim": d, "start": int(a), "end": int(b)},
+                    }
+                )
+                cur = nxt
+        cap.node("identity", [cur], out)
+    elif prim == "reduce_sum":
+        axes = sorted(eqn.params["axes"])
+        cur = tensor_in(0)
+        for removed, d in enumerate(axes):
+            nxt = cap.fresh("rsum")
+            cap.nodes.append(
+                {
+                    "op": "reduce_sum",
+                    "name": nxt,
+                    "inputs": [cur],
+                    "attrs": {"dim": d - removed, "keepdim": False},
+                }
+            )
+            cur = nxt
+        cap.node("identity", [cur], out)
+    elif prim == "reduce_max":
+        axes = sorted(eqn.params["axes"])
+        cur = tensor_in(0)
+        for removed, d in enumerate(axes):
+            nxt = cap.fresh("rmax")
+            cap.nodes.append(
+                {
+                    "op": "reduce_max",
+                    "name": nxt,
+                    "inputs": [cur],
+                    "attrs": {"dim": d - removed, "keepdim": False},
+                }
+            )
+            cur = nxt
+        cap.node("identity", [cur], out)
+    elif prim == "broadcast_in_dim":
+        # keepdim-style broadcasts are representational; our binary ops
+        # broadcast natively, so pass the operand through (reshape when the
+        # rank changed in a way identity can't express).
+        kind, ref = cap.ref(eqn.invars[0])
+        if kind == "scalar":
+            cap.consts[out] = ref
+            return
+        in_shape = list(eqn.invars[0].aval.shape)
+        out_shape = [int(d) for d in eqn.outvars[0].aval.shape]
+        if int(np.prod(in_shape)) == int(np.prod(out_shape)):
+            cap.node("reshape", [ref], out, {"shape": out_shape})
+        else:
+            raise NotImplementedError(
+                f"materializing broadcast {in_shape} -> {out_shape}"
+            )
+    elif prim == "convert_element_type":
+        kind, ref = cap.ref(eqn.invars[0])
+        if kind == "scalar":
+            cap.consts[out] = ref
+        else:
+            cap.node("identity", [ref], out)
+    elif prim == "squeeze":
+        out_shape = [int(d) for d in eqn.outvars[0].aval.shape]
+        cap.node("reshape", [tensor_in(0)], out, {"shape": out_shape})
+    elif prim == "pallas_call":
+        in_shapes = [tuple(v.aval.shape) for v in eqn.invars]
+        if len(in_shapes) == 2 and len(in_shapes[1]) == 1:
+            cap.node(
+                "pallas_rms_norm", [tensor_in(0), tensor_in(1)], out, base="pallas_rms"
+            )
+        elif len(in_shapes) == 3 and len({s for s in in_shapes}) == 1:
+            cap.node(
+                "pallas_attention",
+                [tensor_in(0), tensor_in(1), tensor_in(2)],
+                out,
+                base="pallas_attn",
+            )
+        else:
+            raise NotImplementedError(f"unrecognized pallas_call signature {in_shapes}")
+    elif prim == "integer_pow":
+        p = int(eqn.params["y"])
+        if p == 2:
+            cap.node("square", [tensor_in(0)], out)
+        else:
+            raise NotImplementedError(f"integer_pow {p}")
+    elif prim == "stop_gradient" or prim == "copy":
+        cap.node("identity", [tensor_in(0)], out)
+    else:
+        raise NotImplementedError(
+            f"primitive '{prim}' not supported by capture — define a CustomOp "
+            f"mapping (§5.1 best practices)"
+        )
+
+
+def capture_to_file(fn, args, name, path):
+    graph = capture(fn, args, name)
+    with open(path, "w") as f:
+        json.dump(graph, f, indent=1)
+    return graph

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: row-blocked attention core softmax(q·kᵀ/√d)·v.
+
+The grid walks query-row blocks; each step holds a (block_q, d) query tile
+plus the full K/V for the (short) sequence in VMEM and fuses score
+computation, the numerically-stable softmax, and the value matmul. This is
+the flash-attention insight re-expressed for the TPU memory hierarchy:
+BlockSpec plays the role of the CUDA threadblock tiling (no online-softmax
+running rescale is needed while K/V fit in VMEM; see DESIGN.md
+§Hardware-Adaptation for the scaling discussion).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    d = q.shape[-1]
+    scores = jnp.matmul(q, k.T) * (1.0 / (d**0.5))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.matmul(p, v)
+
+
+def attention(q, k, v, *, block_q=8, interpret=True):
+    """softmax(q·kᵀ/√d)·v for ``q,k,v: [s, d]`` (one head)."""
+    s, d = q.shape
+    if s % block_q != 0:
+        block_q = s
+    grid = (s // block_q,)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

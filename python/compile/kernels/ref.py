@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference the
+pytest suite asserts against (and the semantics the Rust lemma library and
+custom-op registry replicate for `pallas_rms_norm` / `pallas_attention`)."""
+
+import jax.numpy as jnp
+
+
+def rms_norm_ref(x, w, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * w
+
+
+def attention_ref(q, k, v):
+    d = q.shape[-1]
+    scores = jnp.matmul(q, k.T) / jnp.sqrt(jnp.float32(d))
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.matmul(p, v)
+
+
+def rope_ref(x, cos, sin):
+    """Rotate-half RoPE, matching the Rust Op::Rope semantics."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    rot = jnp.concatenate([-x2, x1], axis=-1)
+    return x * cos + rot * sin

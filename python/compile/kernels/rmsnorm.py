@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused RMSNorm.
+
+Rows are tiled into VMEM-sized blocks via BlockSpec — (block_rows, hidden)
+per grid step — with the mean-square reduction and the rescale fused in one
+pass over the tile (one HBM read, one HBM write per element; the GPU
+formulation would assign a threadblock per row group, the TPU formulation
+expresses the same schedule with the BlockSpec index map).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops for both the pytest
+oracle checks and the Rust runtime. Real-TPU perf is estimated from the
+VMEM footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_EPS = 1e-6
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x / jnp.sqrt(ms + eps) * w_ref[...]
+
+
+def rms_norm(x, w, *, eps=DEFAULT_EPS, block_rows=8, interpret=True):
+    """RMS-normalize the last dim of ``x: [s, h]`` with weight ``w: [h]``."""
+    s, h = x.shape
+    if s % block_rows != 0:
+        block_rows = s  # degenerate single-tile fallback for small inputs
+    grid = (s // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, h), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def vmem_footprint_bytes(block_rows, hidden, dtype_bytes=4):
+    """Static VMEM estimate per grid step: x tile + w + out tile + ms column.
+
+    Used by DESIGN.md §Perf: with the default (8, 4096) f32 tile this is
+    8·4096·4 · 2 + 4096·4 + 8·4 ≈ 278 KiB — far below the ~16 MiB VMEM
+    budget, so block_rows can grow to ~240 before spilling.
+    """
+    tile = block_rows * hidden * dtype_bytes
+    return 2 * tile + hidden * dtype_bytes + block_rows * dtype_bytes

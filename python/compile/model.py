@@ -1,0 +1,164 @@
+"""L2 JAX models (build-time only; never on the request path).
+
+A Llama-style block built on the L1 Pallas kernels, in a sequential variant
+`G_s` and a rank-simulated tensor-parallel variant `G_d` (per-rank weight
+shards as separate arguments, collectives as their single-program semantic
+equivalents — exactly the form the paper's single-process graph capture
+sees), plus the HF-style regression pair for gradient accumulation.
+
+These are the *captured* workloads: `capture.py` walks their jaxprs into
+the GraphGuard graph JSON, and `aot.py` lowers them to HLO text for the
+Rust PJRT runtime. Model structure deliberately mirrors
+`rust/src/models/llama.rs` / `regression.rs` so the two capture paths
+cross-check each other.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.ref import rope_ref
+from .kernels.rmsnorm import rms_norm
+
+SEQ = 8
+HEADS = 4
+HEAD_DIM = 4
+HIDDEN = HEADS * HEAD_DIM
+FFN = 32
+
+
+def _heads(q, k, v, cos, sin, heads, head_dim):
+    outs = []
+    for i in range(heads):
+        lo, hi = i * head_dim, (i + 1) * head_dim
+        qi = rope_ref(q[:, lo:hi], cos, sin)
+        ki = rope_ref(k[:, lo:hi], cos, sin)
+        outs.append(attention(qi, ki, v[:, lo:hi]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def llama_block_seq(x, cos, sin, w_rms1, wq, wk, wv, wo, w_rms2, wg, wu, wd):
+    """Sequential Llama block (G_s): Pallas RMSNorm + per-head RoPE
+    attention (Pallas kernel) + SwiGLU MLP with an explicit sigmoid-based
+    silu (kept as primitive ops the capture layer understands)."""
+    n1 = rms_norm(x, w_rms1)
+    q, k, v = n1 @ wq, n1 @ wk, n1 @ wv
+    attn = _heads(q, k, v, cos, sin, HEADS, HEAD_DIM)
+    x1 = x + attn @ wo
+    n2 = rms_norm(x1, w_rms2)
+    gate = n2 @ wg
+    act = gate * jax.nn.sigmoid(gate) * (n2 @ wu)
+    return (x1 + act @ wd,)
+
+
+def llama_block_tp2(
+    x, cos, sin, w_rms1, wq0, wq1, wk0, wk1, wv0, wv1, wo0, wo1, w_rms2, wg0, wg1, wu0, wu1, wd0, wd1
+):
+    """Rank-simulated TP=2 Llama block: G_d.
+
+    Column-parallel QKV/gate/up (per-rank halves as separate args),
+    row-parallel projections whose partial products are summed — the
+    single-program form of the all-reduce.
+    """
+    heads_per = HEADS // 2
+    n1 = rms_norm(x, w_rms1)
+    parts = []
+    for wq_r, wk_r, wv_r, wo_r in ((wq0, wk0, wv0, wo0), (wq1, wk1, wv1, wo1)):
+        q, k, v = n1 @ wq_r, n1 @ wk_r, n1 @ wv_r
+        attn = _heads(q, k, v, cos, sin, heads_per, HEAD_DIM)
+        parts.append(attn @ wo_r)
+    proj = parts[0] + parts[1]  # all-reduce
+    x1 = x + proj
+    n2 = rms_norm(x1, w_rms2)
+    mlp_parts = []
+    for wg_r, wu_r, wd_r in ((wg0, wu0, wd0), (wg1, wu1, wd1)):
+        gate = n2 @ wg_r
+        act = gate * jax.nn.sigmoid(gate) * (n2 @ wu_r)
+        mlp_parts.append(act @ wd_r)
+    mlp = mlp_parts[0] + mlp_parts[1]  # all-reduce
+    return (x1 + mlp,)
+
+
+def llama_example_args():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    f = lambda *s: jnp.asarray(rng.normal(size=s, scale=0.5), dtype=jnp.float32)
+    x = f(SEQ, HIDDEN)
+    cos = jnp.asarray(np.cos(np.arange(SEQ * HEAD_DIM).reshape(SEQ, HEAD_DIM) * 0.1), jnp.float32)
+    sin = jnp.asarray(np.sin(np.arange(SEQ * HEAD_DIM).reshape(SEQ, HEAD_DIM) * 0.1), jnp.float32)
+    seq_args = (
+        x,
+        cos,
+        sin,
+        f(HIDDEN),
+        f(HIDDEN, HIDDEN),
+        f(HIDDEN, HIDDEN),
+        f(HIDDEN, HIDDEN),
+        f(HIDDEN, HIDDEN),
+        f(HIDDEN),
+        f(HIDDEN, FFN),
+        f(HIDDEN, FFN),
+        f(FFN, HIDDEN),
+    )
+    return seq_args
+
+
+def split_for_tp2(seq_args):
+    """Shard the sequential arguments the way the TP=2 variant expects."""
+    (x, cos, sin, w_rms1, wq, wk, wv, wo, w_rms2, wg, wu, wd) = seq_args
+    h2 = HIDDEN // 2
+    f2 = FFN // 2
+    return (
+        x,
+        cos,
+        sin,
+        w_rms1,
+        wq[:, :h2],
+        wq[:, h2:],
+        wk[:, :h2],
+        wk[:, h2:],
+        wv[:, :h2],
+        wv[:, h2:],
+        wo[:h2, :],
+        wo[h2:, :],
+        w_rms2,
+        wg[:, :f2],
+        wg[:, f2:],
+        wu[:, :f2],
+        wu[:, f2:],
+        wd[:f2, :],
+        wd[f2:, :],
+    )
+
+
+# ---- HF-style regression with gradient accumulation (bug 6 workload) ----
+
+BATCH = 8
+IN_DIM = 4
+OUT_DIM = 2
+
+
+def regression_seq(x, y, w, b):
+    pred = x @ w + b
+    diff = pred - y
+    loss = jnp.mean(diff * diff)
+    return (loss,)
+
+
+def regression_grad_accum(x0, x1, y0, y1, w, b, *, scaled=True):
+    losses = []
+    for xi, yi in ((x0, y0), (x1, y1)):
+        pred = xi @ w + b
+        diff = pred - yi
+        li = jnp.mean(diff * diff)
+        losses.append(li * 0.5 if scaled else li)
+    return (losses[0] + losses[1],)
+
+
+def regression_example_args():
+    import numpy as np
+
+    rng = np.random.default_rng(1)
+    f = lambda *s: jnp.asarray(rng.normal(size=s, scale=0.5), dtype=jnp.float32)
+    return f(BATCH, IN_DIM), f(BATCH, OUT_DIM), f(IN_DIM, OUT_DIM), f(OUT_DIM)

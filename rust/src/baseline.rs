@@ -1,0 +1,168 @@
+//! Monolithic whole-graph equivalence checker — the Aerify/Tensat-style
+//! baseline GraphGuard's iterative approach is compared against (§7).
+//!
+//! Instead of processing one `G_s` operator at a time in a fresh e-graph,
+//! this checker builds a SINGLE e-graph containing all of `G_s`, all of
+//! `G_d`'s definitional equalities, and the input relation, then saturates
+//! globally and asks whether each `G_s` output class contains a clean
+//! expression over `G_d` outputs. Sound, but the e-graph grows with the
+//! whole model, so saturation cost explodes with graph size — the
+//! scalability gap `benches/baseline_compare.rs` measures.
+
+use crate::egraph::{extract_clean, saturate, EGraph, RewriteCtx, SatStats, SaturationLimits};
+use crate::expr::{Side, TensorRef};
+use crate::ir::Graph;
+use crate::lemmas;
+use crate::relation::Relation;
+use anyhow::{bail, Result};
+
+pub struct BaselineOutput {
+    pub relation: Relation,
+    pub stats: SatStats,
+    pub egraph_nodes: usize,
+}
+
+pub fn check_refinement_monolithic(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    limits: SaturationLimits,
+) -> Result<BaselineOutput> {
+    let rules = lemmas::standard_rewrites();
+    let ctx = RewriteCtx::default();
+    let mut eg = EGraph::new();
+
+    // all of G_s as expressions over S-leaves
+    let mut s_class = vec![0u32; gs.num_tensors()];
+    for &i in &gs.inputs {
+        s_class[i as usize] = eg.add_leaf(TensorRef::s(i), gs.shape(i).to_vec());
+    }
+    for nid in gs.topo_order() {
+        let node = gs.node(nid);
+        let children = node.inputs.iter().map(|&t| s_class[t as usize]).collect();
+        s_class[node.output as usize] = eg
+            .add_op(node.op.clone(), children)
+            .map_err(|e| anyhow::anyhow!("G_s node '{}': {e}", node.name))?;
+    }
+    // all of G_d's definitional equalities
+    for &i in &gd.inputs {
+        eg.add_leaf(TensorRef::d(i), gd.shape(i).to_vec());
+    }
+    for nid in gd.topo_order() {
+        let node = gd.node(nid);
+        let children = node
+            .inputs
+            .iter()
+            .map(|&t| eg.add_leaf(TensorRef::d(t), gd.shape(t).to_vec()))
+            .collect();
+        let out = eg.add_leaf(TensorRef::d(node.output), gd.shape(node.output).to_vec());
+        if let Ok(def) = eg.add_op(node.op.clone(), children) {
+            let _ = eg.union(out, def);
+        }
+    }
+    // input relation
+    let gd_leaf_shape = |t: TensorRef| (t.side == Side::D).then(|| gd.shape(t.id).to_vec());
+    for t in ri.tensors() {
+        for cand in ri.get(t) {
+            if let Ok(root) = eg.add_expr(&cand.expr, &gd_leaf_shape) {
+                let _ = eg.union(s_class[t as usize], root);
+            }
+        }
+    }
+    eg.rebuild();
+
+    // one global saturation
+    let stats = saturate(&mut eg, &rules, &ctx, limits);
+
+    // extract clean mappings for each G_s output
+    let cands = extract_clean(&eg, &|t| t.side == Side::D);
+    let mut rel = Relation::new();
+    for &o in &gs.outputs {
+        let class = eg.find(s_class[o as usize]);
+        match cands.get(&class) {
+            Some(cs) if !cs.is_empty() => rel.insert_all(o, cs.iter().cloned()),
+            _ => bail!(
+                "monolithic baseline: no clean mapping for output '{}'",
+                gs.tensor(o).name
+            ),
+        }
+    }
+    Ok(BaselineOutput { relation: rel, stats, egraph_nodes: eg.n_nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn baseline_agrees_on_running_example() {
+        // same workload as infer::tests::running_example
+        let mut gs = Graph::new("gs");
+        let a = gs.input("A", vec![4, 6]);
+        let b = gs.input("B", vec![6, 4]);
+        let e = gs.input("E", vec![4, 4]);
+        let c = gs.matmul("C", a, b);
+        let f = gs.sub2("F", c, e);
+        gs.mark_output(f);
+
+        let mut gd = Graph::new("gd");
+        let a1 = gd.input("A_1", vec![4, 3]);
+        let a2 = gd.input("A_2", vec![4, 3]);
+        let b1 = gd.input("B_1", vec![3, 4]);
+        let b2 = gd.input("B_2", vec![3, 4]);
+        let e1 = gd.input("E_1", vec![2, 4]);
+        let e2 = gd.input("E_2", vec![2, 4]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        let c2 = gd.matmul("C_2", a2, b2);
+        let d1 = gd.reduce_scatter("D_1", vec![c1, c2], 0, 0);
+        let d2 = gd.reduce_scatter("D_2", vec![c1, c2], 0, 1);
+        let f1 = gd.sub2("F_1", d1, e1);
+        let f2 = gd.sub2("F_2", d2, e2);
+        let ff = gd.all_gather("F_full", vec![f1, f2], 0);
+        gd.mark_output(ff);
+
+        let ri = Relation::from_json(
+            &Json::parse(
+                r#"{"A": ["concat(A_1, A_2; dim=1)"],
+                    "B": ["concat(B_1, B_2; dim=0)"],
+                    "E": ["concat(E_1, E_2; dim=0)"]}"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let out = check_refinement_monolithic(
+            &gs,
+            &gd,
+            &ri,
+            SaturationLimits { max_iters: 12, max_nodes: 200_000 },
+        )
+        .unwrap();
+        assert!(out.relation.contains(gs.tensor_by_name("F").unwrap()));
+        crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 3).unwrap();
+    }
+
+    #[test]
+    fn baseline_egraph_grows_with_whole_model() {
+        // the structural reason the iterative approach wins: baseline node
+        // count covers BOTH graphs at once.
+        let mut gs = Graph::new("gs");
+        let mut x = gs.input("x", vec![4, 4]);
+        for i in 0..6 {
+            x = gs.op(&format!("g{i}"), crate::ir::Op::Gelu, vec![x]);
+        }
+        gs.mark_output(x);
+        let mut gd = Graph::new("gd");
+        let mut y = gd.input("x_0", vec![4, 4]);
+        for i in 0..6 {
+            y = gd.op(&format!("g{i}_0"), crate::ir::Op::Gelu, vec![y]);
+        }
+        gd.mark_output(y);
+        let ri =
+            Relation::from_json(&Json::parse(r#"{"x": ["x_0"]}"#).unwrap(), &gs, &gd).unwrap();
+        let out = check_refinement_monolithic(&gs, &gd, &ri, Default::default()).unwrap();
+        assert!(out.egraph_nodes >= 12, "holds both graphs: {}", out.egraph_nodes);
+    }
+}

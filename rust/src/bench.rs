@@ -1,0 +1,110 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup, timed
+//! iterations, mean/p50/p95, and aligned table output matching the rows and
+//! series the paper's tables/figures report.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+    }
+}
+
+/// Single-shot measurement (for long-running end-to-end verifications).
+pub fn measure<T>(name: &str, mut f: impl FnMut() -> T) -> (T, BenchResult) {
+    let t0 = Instant::now();
+    let out = f();
+    let d = t0.elapsed();
+    (out, BenchResult { name: name.to_string(), iters: 1, mean: d, p50: d, p95: d })
+}
+
+/// Render results as an aligned table.
+pub fn table(title: &str, results: &[BenchResult]) -> String {
+    let mut s = format!("== {title} ==\n");
+    let w = results.iter().map(|r| r.name.len()).max().unwrap_or(10).max(10);
+    s.push_str(&format!(
+        "{:<w$}  {:>10}  {:>10}  {:>10}  {:>6}\n",
+        "case", "mean", "p50", "p95", "iters",
+    ));
+    for r in results {
+        s.push_str(&format!(
+            "{:<w$}  {:>10}  {:>10}  {:>10}  {:>6}\n",
+            r.name,
+            fmt_dur(r.mean),
+            fmt_dur(r.p50),
+            fmt_dur(r.p95),
+            r.iters,
+        ));
+    }
+    s
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop", 2, 16, || 1 + 1);
+        assert_eq!(r.iters, 16);
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn table_renders() {
+        let r = bench("x", 0, 4, || std::thread::sleep(Duration::from_micros(50)));
+        let t = table("demo", &[r]);
+        assert!(t.contains("demo") && t.contains("x"));
+    }
+
+    #[test]
+    fn measure_returns_value() {
+        let (v, r) = measure("calc", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+}

@@ -1,0 +1,412 @@
+//! The six real-world case-study bugs (§6.2), reproduced as graph pairs.
+//!
+//! Each injector builds `(G_s, G_d, R_i)` where `G_d` carries the bug, plus
+//! the corresponding fixed variant, so tests assert both "fixed refines" and
+//! "buggy is detected with the paper's localization". Bug 5 is special: per
+//! the paper it does NOT fail refinement — the user spots it by reading the
+//! inferred relation — and our reproduction returns the suspicious `R_o`.
+
+use crate::infer::{check_refinement, InferConfig};
+use crate::ir::{Graph, Op};
+use crate::relation::Relation;
+use crate::strategies::{chunks, replicate_input, shard_input, RiBuilder};
+use anyhow::Result;
+
+pub struct BugCase {
+    pub id: usize,
+    pub name: &'static str,
+    pub description: &'static str,
+    pub gs: Graph,
+    pub gd: Graph,
+    pub ri: Relation,
+    /// substring expected in the failing operator's name (None for bug 5,
+    /// which passes refinement)
+    pub expected_locus: Option<&'static str>,
+}
+
+impl BugCase {
+    /// Run GraphGuard on the case; returns (detected, report text). A
+    /// successful run also renders how `G_d` computes each of its outputs —
+    /// the "inspect the relation/implementation" step of bug 5's workflow.
+    pub fn run(&self) -> (bool, String) {
+        match check_refinement(&self.gs, &self.gd, &self.ri, &InferConfig::default()) {
+            Ok(out) => {
+                let ro = out.relation.to_json(&self.gs, &self.gd).to_string_pretty();
+                let mut trace = String::new();
+                for &o in &self.gd.outputs {
+                    trace.push_str(&format!(
+                        "  {} := {}\n",
+                        self.gd.tensor(o).name,
+                        trace_producer(&self.gd, o, 5)
+                    ));
+                }
+                (false, format!("refinement HOLDS; R_o =\n{ro}\nG_d output computation:\n{trace}"))
+            }
+            Err(e) => (true, format!("{e}")),
+        }
+    }
+}
+
+/// Render the producing expression of a G_d tensor to bounded depth.
+fn trace_producer(gd: &Graph, t: crate::ir::TensorId, depth: usize) -> String {
+    match gd.producer(t) {
+        None => gd.tensor(t).name.clone(),
+        Some(_) if depth == 0 => gd.tensor(t).name.clone(),
+        Some(node) => {
+            let args: Vec<String> =
+                node.inputs.iter().map(|&i| trace_producer(gd, i, depth - 1)).collect();
+            format!("{}({})", node.op, args.join(", "))
+        }
+    }
+}
+
+/// Bug 1 — incorrect offset in RoPE with SP (found in a hand-written
+/// `torch.autograd.Function.backward`): every rank slices the cos/sin
+/// tables from offset 0 instead of its own sequence offset.
+pub fn bug1_rope_offset(buggy: bool) -> Result<BugCase> {
+    const SEQ: i64 = 8;
+    const D: i64 = 4;
+    let ranks = 2usize;
+    let mut gs = Graph::new("rope_gs");
+    let x = gs.input("x", vec![SEQ, D]);
+    let cos = gs.input("full_cos", vec![SEQ, D]);
+    let sin = gs.input("full_sin", vec![SEQ, D]);
+    let r = gs.op("roped", Op::Rope, vec![x, cos, sin]);
+    // a consumer after rope (the paper localizes at the RoPE operator when
+    // inferring its output relation)
+    let w = gs.input("w", vec![D, D]);
+    let y = gs.matmul("y", r, w);
+    gs.mark_output(y);
+
+    let mut gd = Graph::new(if buggy { "rope_gd_buggy" } else { "rope_gd" });
+    let mut ri = RiBuilder::new();
+    let xs = shard_input(&mut gd, &mut ri, "x", &[SEQ, D], 0, ranks)?;
+    let cos_d = replicate_input(&mut gd, &mut ri, "full_cos", &[SEQ, D]);
+    let sin_d = replicate_input(&mut gd, &mut ri, "full_sin", &[SEQ, D]);
+    let w_d = replicate_input(&mut gd, &mut ri, "w", &[D, D]);
+    let mut parts = Vec::new();
+    for (rk, &(lo, hi)) in chunks(SEQ, ranks).iter().enumerate() {
+        // THE BUG: backward/forward slice offsets — buggy version always
+        // slices [0, chunk) regardless of rank.
+        let (slo, shi) = if buggy { (0, hi - lo) } else { (lo, hi) };
+        let c = gd.slice(&format!("cos_r{rk}"), cos_d, 0, slo, shi);
+        let s = gd.slice(&format!("sin_r{rk}"), sin_d, 0, slo, shi);
+        let roped = gd.op(&format!("roped_r{rk}"), Op::Rope, vec![xs[rk], c, s]);
+        parts.push(gd.matmul(&format!("y_r{rk}"), roped, w_d));
+    }
+    let y = gd.all_gather("y_ag", parts, 0);
+    gd.mark_output(y);
+    let ri = ri.finish(&gs, &gd)?;
+    Ok(BugCase {
+        id: 1,
+        name: "rope_sp_offset",
+        description: "RoPE under SP: cos/sin sliced at the wrong offset (backward pass)",
+        gs,
+        gd,
+        ri,
+        expected_locus: if buggy { Some("roped") } else { None },
+    })
+}
+
+/// Bug 2 — auxiliary loss not scaled by TP size: the per-rank aux losses
+/// are summed by the gradient all-reduce, so each rank must divide by T.
+pub fn bug2_aux_loss_scaling(buggy: bool) -> Result<BugCase> {
+    const S: i64 = 4;
+    const H: i64 = 8;
+    const E: i64 = 4;
+    let ranks = 2usize;
+    let mut gs = Graph::new("aux_gs");
+    let x = gs.input("x", vec![S, H]);
+    let wg = gs.input("router_w", vec![H, E]);
+    let scores = gs.matmul("scores", x, wg);
+    let gates = gs.softmax("gates", scores, 1);
+    let sq = gs.op("aux_sq", Op::Square, vec![gates]);
+    let m1 = gs.op("aux_m1", Op::ReduceMean { dim: 1, keepdim: false }, vec![sq]);
+    let m0 = gs.op("aux_m0", Op::ReduceMean { dim: 0, keepdim: false }, vec![m1]);
+    let aux = gs.scale("aux", m0, E as f64);
+    gs.mark_output(aux);
+
+    let mut gd = Graph::new(if buggy { "aux_gd_buggy" } else { "aux_gd" });
+    let mut ri = RiBuilder::new();
+    let x_d = replicate_input(&mut gd, &mut ri, "x", &[S, H]);
+    let wg_d = replicate_input(&mut gd, &mut ri, "router_w", &[H, E]);
+    let scores_d = gd.matmul("scores_d", x_d, wg_d);
+    let gates_d = gd.softmax("gates_d", scores_d, 1);
+    let sq_d = gd.op("aux_sq_d", Op::Square, vec![gates_d]);
+    let m1_d = gd.op("aux_m1_d", Op::ReduceMean { dim: 1, keepdim: false }, vec![sq_d]);
+    let m0_d = gd.op("aux_m0_d", Op::ReduceMean { dim: 0, keepdim: false }, vec![m1_d]);
+    let full = gd.scale("aux_full", m0_d, E as f64);
+    // each TP rank contributes its aux loss; a later reduce-scatter/all-
+    // reduce on gradients SUMS the contributions, modeled here by the
+    // all-reduce over the per-rank values. Correct code divides by T first.
+    let per_rank: Vec<_> = (0..ranks)
+        .map(|rk| {
+            if buggy {
+                gd.op(&format!("aux_r{rk}"), Op::Identity, vec![full]) // BUG: no 1/T
+            } else {
+                gd.scale(&format!("aux_r{rk}"), full, 1.0 / ranks as f64)
+            }
+        })
+        .collect();
+    let aux_out = gd.all_reduce("aux_ar", per_rank);
+    gd.mark_output(aux_out);
+    let ri = ri.finish(&gs, &gd)?;
+    Ok(BugCase {
+        id: 2,
+        name: "aux_loss_tp_scaling",
+        description: "MoE aux loss under TP must be divided by T before the gradient sum",
+        gs,
+        gd,
+        ri,
+        expected_locus: if buggy { Some("aux") } else { None },
+    })
+}
+
+/// Bug 3 — mismatched padding and slicing around an all-gather: the pad
+/// adds 2 elements at the back, but the slice drops 2 from the front.
+pub fn bug3_pad_slice_mismatch(buggy: bool) -> Result<BugCase> {
+    const SEQ: i64 = 6; // not divisible by 4 -> padding needed for gather
+    const H: i64 = 4;
+    let ranks = 2usize;
+    let mut gs = Graph::new("pad_gs");
+    let x = gs.input("x", vec![SEQ, H]);
+    let w = gs.input("w", vec![H, H]);
+    let gx = gs.op("act", Op::Gelu, vec![x]);
+    let y = gs.matmul("y", gx, w);
+    gs.mark_output(y);
+
+    let mut gd = Graph::new(if buggy { "pad_gd_buggy" } else { "pad_gd" });
+    let mut ri = RiBuilder::new();
+    let xs = shard_input(&mut gd, &mut ri, "x", &[SEQ, H], 0, ranks)?;
+    let w_d = replicate_input(&mut gd, &mut ri, "w", &[H, H]);
+    // per-rank: pad the 3-row shard to 4 rows (all-gather wants equal
+    // shapes), activation, gather, then drop the padding.
+    let padded: Vec<_> = xs
+        .iter()
+        .enumerate()
+        .map(|(rk, &xr)| {
+            let p = gd.op(
+                &format!("pad_r{rk}"),
+                Op::Pad { dim: 0, before: 0.into(), after: 1.into(), value: crate::ir::FBits::new(0.0) },
+                vec![xr],
+            );
+            gd.op(&format!("act_r{rk}"), Op::Gelu, vec![p])
+        })
+        .collect();
+    let gathered = gd.all_gather("act_ag", padded, 0); // [8, H]
+    // reassemble the 6 real rows: rows 0..3 from rank0, rows 4..7 hold
+    // rank1's 3 rows + pad
+    let part0 = gd.slice("unpad_0", gathered, 0, 0, 3);
+    let part1 = if buggy {
+        // BUG: off-by-one — drops a real row and keeps a padded one
+        gd.slice("unpad_1", gathered, 0, 5, 8)
+    } else {
+        gd.slice("unpad_1", gathered, 0, 4, 7)
+    };
+    let act_full = gd.concat("act_full", vec![part0, part1], 0);
+    let y = gd.matmul("y_d", act_full, w_d);
+    gd.mark_output(y);
+    let ri = ri.finish(&gs, &gd)?;
+    Ok(BugCase {
+        id: 3,
+        name: "pad_slice_mismatch",
+        description: "inconsistent pad/slice parameters around an all-gather drop real rows",
+        gs,
+        gd,
+        ri,
+        // detected at the operator whose shards lost a real row (the paper
+        // reports its analog at the op consuming the mis-sliced tensor)
+        expected_locus: if buggy { Some("act") } else { None },
+    })
+}
+
+/// Bug 4 — incompatible configuration: switching MoE from TP to SP requires
+/// replicating expert weights, but they remained sharded; the diagonal
+/// blocks X₁A₂, X₂A₁ are never computed.
+pub fn bug4_sharded_experts(buggy: bool) -> Result<BugCase> {
+    const S: i64 = 8;
+    const H: i64 = 8;
+    const F: i64 = 8;
+    let ranks = 2usize;
+    let mut gs = Graph::new("moe_cfg_gs");
+    let x = gs.input("x", vec![S, H]);
+    let a = gs.input("a", vec![H, F]);
+    let b = gs.input("b", vec![F, H]);
+    let h1 = gs.matmul("h1", x, a);
+    let y = gs.matmul("y", h1, b);
+    gs.mark_output(y);
+
+    let mut gd = Graph::new(if buggy { "moe_cfg_gd_buggy" } else { "moe_cfg_gd" });
+    let mut ri = RiBuilder::new();
+    let xs = shard_input(&mut gd, &mut ri, "x", &[S, H], 0, ranks)?; // SP
+    let (a_parts, b_parts) = if buggy {
+        // BUG: weights still sharded as under TP
+        let a = crate::strategies::col_shard_weight(&mut gd, &mut ri, "a", &[H, F], ranks)?;
+        let b = crate::strategies::row_shard_weight(&mut gd, &mut ri, "b", &[F, H], ranks)?;
+        (a, b)
+    } else {
+        // correct SP: replicate the expert weights
+        let a = replicate_input(&mut gd, &mut ri, "a", &[H, F]);
+        let b = replicate_input(&mut gd, &mut ri, "b", &[F, H]);
+        (vec![a; ranks], vec![b; ranks])
+    };
+    let parts: Vec<_> = (0..ranks)
+        .map(|rk| {
+            let h1 = gd.matmul(&format!("h1_r{rk}"), xs[rk], a_parts[rk]);
+            gd.matmul(&format!("y_r{rk}"), h1, b_parts[rk])
+        })
+        .collect();
+    // note: output shape matches G_s either way — the type checker cannot
+    // catch this (paper §2.2)
+    let y = gd.all_gather("y_ag", parts, 0);
+    gd.mark_output(y);
+    let ri = ri.finish(&gs, &gd)?;
+    Ok(BugCase {
+        id: 4,
+        name: "sp_sharded_expert_weights",
+        description: "SP requires replicated expert weights; sharding loses off-diagonal blocks",
+        gs,
+        gd,
+        ri,
+        expected_locus: if buggy { Some("h1") } else { None },
+    })
+}
+
+/// Bug 5 — missing gradient aggregation for a layernorm weight: the weight
+/// was never registered with the SP-group optimizer, so its per-rank
+/// gradient is used directly instead of the all-reduced one. Refinement
+/// SUCCEEDS (the per-rank value is a legitimate clean mapping under the
+/// user-provided replication relation) — the bug shows up when the user
+/// reads `R_o` and sees the update built from `g_ln_r0` instead of
+/// `sum(g_ln_r0, g_ln_r1)`.
+pub fn bug5_missing_aggregation(buggy: bool) -> Result<BugCase> {
+    const H: i64 = 8;
+    let mut gs = Graph::new("opt_gs");
+    let w = gs.input("w_ln", vec![H]);
+    let grad = gs.input("g_ln", vec![H]);
+    let step = gs.scale("step", grad, 0.1);
+    let w_new = gs.sub2("w_new", w, step);
+    gs.mark_output(w_new);
+
+    let mut gd = Graph::new(if buggy { "opt_gd_buggy" } else { "opt_gd" });
+    let mut ri = RiBuilder::new();
+    let w_d = replicate_input(&mut gd, &mut ri, "w_ln", &[H]);
+    // per-rank partial gradients; the user ASSUMES they are identical
+    // replicas and writes g_ln -> g_ln_r0 (that assumption is what hides
+    // the bug from refinement checking).
+    let g0 = gd.input("g_ln_r0", vec![H]);
+    let g1 = gd.input("g_ln_r1", vec![H]);
+    ri.map("g_ln", "g_ln_r0".into());
+    ri.map("g_ln", "g_ln_r1".into());
+    let grad_used = if buggy {
+        g0 // BUG: not registered with the optimizer's all-reduce group
+    } else {
+        let ar = gd.all_reduce("g_ln_ar", vec![g0, g1]);
+        gd.scale("g_ln_avg", ar, 0.5)
+    };
+    let step = gd.scale("step_d", grad_used, 0.1);
+    let w_new = gd.sub2("w_new_d", w_d, step);
+    gd.mark_output(w_new);
+    let ri = ri.finish(&gs, &gd)?;
+    Ok(BugCase {
+        id: 5,
+        name: "missing_layernorm_aggregation",
+        description: "layernorm weight not registered for gradient all-reduce (R_o inspection)",
+        gs,
+        gd,
+        ri,
+        expected_locus: None, // refinement holds either way; see run_bug5()
+    })
+}
+
+/// Bug 6 — wrong scaling in gradient accumulation (HF issue #14638/#2175):
+/// delegated to the regression model builders.
+pub fn bug6_grad_accum(buggy: bool) -> Result<BugCase> {
+    let (gs, gd, ri) = if buggy {
+        crate::models::regression::grad_accum_buggy_pair(2)?
+    } else {
+        crate::models::regression::grad_accum_pair(2)?
+    };
+    Ok(BugCase {
+        id: 6,
+        name: "grad_accum_scaling",
+        description: "gradient-accumulation loss must be rescaled by 1/k (HF trainer bug)",
+        gs,
+        gd,
+        ri,
+        expected_locus: if buggy { Some("loss") } else { None },
+    })
+}
+
+/// All six cases, buggy or fixed.
+pub fn all_cases(buggy: bool) -> Vec<BugCase> {
+    vec![
+        bug1_rope_offset(buggy).unwrap(),
+        bug2_aux_loss_scaling(buggy).unwrap(),
+        bug3_pad_slice_mismatch(buggy).unwrap(),
+        bug4_sharded_experts(buggy).unwrap(),
+        bug5_missing_aggregation(buggy).unwrap(),
+        bug6_grad_accum(buggy).unwrap(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+
+    #[test]
+    fn fixed_variants_all_refine() {
+        for case in all_cases(false) {
+            let out = check_refinement(&case.gs, &case.gd, &case.ri, &InferConfig::default())
+                .unwrap_or_else(|e| panic!("fixed {} failed: {e}", case.name));
+            if case.id != 5 {
+                // bug 5's user-assumed replication relation is not
+                // numerically faithful (partial grads differ in reality)
+                verify_numeric(&case.gs, &case.gd, &case.ri, &out.relation, case.id as u64)
+                    .unwrap_or_else(|e| panic!("fixed {} numeric: {e:#}", case.name));
+            }
+        }
+    }
+
+    #[test]
+    fn buggy_variants_detected_with_localization() {
+        for case in all_cases(true) {
+            let (detected, report) = case.run();
+            match case.expected_locus {
+                Some(locus) => {
+                    assert!(detected, "{} not detected; report:\n{report}", case.name);
+                    assert!(
+                        report.contains(locus),
+                        "{}: locus '{locus}' not in report:\n{report}",
+                        case.name
+                    );
+                }
+                None => {
+                    // bug 5: passes refinement; the report carries R_o for
+                    // user inspection and must reveal the rank-0-only use
+                    assert!(!detected, "{} unexpectedly failed:\n{report}", case.name);
+                    assert!(
+                        report.contains("g_ln_r0") && !report.contains("g_ln_ar"),
+                        "bug-5 trace should expose the unaggregated gradient:\n{report}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bug5_fixed_relation_differs_visibly() {
+        // the fixed variant's implementation trace shows the all-reduce;
+        // the buggy one shows a bare rank-0 gradient — the diff the user
+        // reviews per §6.2.
+        let fixed = bug5_missing_aggregation(false).unwrap();
+        let (detected, report_fixed) = fixed.run();
+        assert!(!detected);
+        assert!(report_fixed.contains("all_reduce"), "{report_fixed}");
+        let buggy = bug5_missing_aggregation(true).unwrap();
+        let (detected, report_buggy) = buggy.run();
+        assert!(!detected);
+        assert!(!report_buggy.contains("all_reduce"), "{report_buggy}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Verification coordinator (L3 service layer).
+//!
+//! The paper's tool runs one verification per model; at ByteDance scale a
+//! team verifies many model/strategy/degree combinations per CI run. The
+//! coordinator owns that loop: a work queue of [`Workload`]s, a thread pool
+//! of verification workers (each `check_refinement` call is independent —
+//! fresh e-graphs per operator), wall-clock metrics per job, and report
+//! rendering used by the CLI and the benches.
+
+use crate::infer::{check_refinement, InferConfig, NodeTiming};
+use crate::models::Workload;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct JobResult {
+    pub name: String,
+    pub ok: bool,
+    pub duration: Duration,
+    pub gs_ops: usize,
+    pub gd_ops: usize,
+    pub mappings: usize,
+    pub lemma_applications: u64,
+    /// per-lemma application counts (Fig 7 raw data)
+    pub lemma_counts: Vec<(&'static str, u64)>,
+    pub per_node: Vec<NodeTiming>,
+    pub error: Option<String>,
+}
+
+pub struct Coordinator {
+    pub threads: usize,
+    pub cfg: InferConfig,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Coordinator { threads, cfg: InferConfig::default() }
+    }
+}
+
+impl Coordinator {
+    pub fn new(threads: usize, cfg: InferConfig) -> Self {
+        Coordinator { threads: threads.max(1), cfg }
+    }
+
+    /// Verify a single workload, timing it.
+    pub fn run_one(&self, w: &Workload) -> JobResult {
+        let t0 = Instant::now();
+        let out = check_refinement(&w.gs, &w.gd, &w.ri, &self.cfg);
+        let duration = t0.elapsed();
+        match out {
+            Ok(o) => {
+                let mut counts: Vec<(&'static str, u64)> =
+                    o.stats.applied.iter().map(|(&k, &v)| (k, v)).collect();
+                counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+                JobResult {
+                    name: w.name.clone(),
+                    ok: true,
+                    duration,
+                    gs_ops: w.gs.num_nodes(),
+                    gd_ops: w.gd.num_nodes(),
+                    mappings: o.relation.len(),
+                    lemma_applications: o.stats.total_applications(),
+                    lemma_counts: counts,
+                    per_node: o.per_node,
+                    error: None,
+                }
+            }
+            Err(e) => JobResult {
+                name: w.name.clone(),
+                ok: false,
+                duration,
+                gs_ops: w.gs.num_nodes(),
+                gd_ops: w.gd.num_nodes(),
+                mappings: 0,
+                lemma_applications: 0,
+                lemma_counts: vec![],
+                per_node: vec![],
+                error: Some(format!("{e}")),
+            },
+        }
+    }
+
+    /// Verify a batch of workloads across the thread pool; results come
+    /// back in submission order.
+    pub fn run_batch(&self, jobs: Vec<Workload>) -> Vec<JobResult> {
+        let n = jobs.len();
+        let queue: Arc<Mutex<VecDeque<(usize, Workload)>>> =
+            Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+        let (tx, rx) = mpsc::channel::<(usize, JobResult)>();
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(n.max(1)) {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let cfg = self.cfg.clone();
+                let threads = self.threads;
+                scope.spawn(move || {
+                    let me = Coordinator { threads, cfg };
+                    loop {
+                        let job = queue.lock().unwrap().pop_front();
+                        let Some((idx, w)) = job else { break };
+                        let result = me.run_one(&w);
+                        if tx.send((idx, result)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
+            for (idx, res) in rx {
+                out[idx] = Some(res);
+            }
+            out.into_iter().map(|r| r.expect("worker delivered result")).collect()
+        })
+    }
+}
+
+/// Render the Fig-4-style verification table.
+pub fn report_table(results: &[JobResult]) -> String {
+    let w = results.iter().map(|r| r.name.len()).max().unwrap_or(8).max(8);
+    let mut s = format!(
+        "{:<w$}  {:>7}  {:>7}  {:>9}  {:>9}  {:>8}  result\n",
+        "model", "ops(Gs)", "ops(Gd)", "time", "lemmas", "mappings",
+    );
+    for r in results {
+        s.push_str(&format!(
+            "{:<w$}  {:>7}  {:>7}  {:>9}  {:>9}  {:>8}  {}\n",
+            r.name,
+            r.gs_ops,
+            r.gd_ops,
+            crate::bench::fmt_dur(r.duration),
+            r.lemma_applications,
+            r.mappings,
+            if r.ok { "refines" } else { "BUG" },
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_runs_all_table2_workloads_in_parallel() {
+        let jobs = crate::models::table2_workloads(2);
+        let n = jobs.len();
+        let names: Vec<String> = jobs.iter().map(|w| w.name.clone()).collect();
+        let coord = Coordinator::new(4, InferConfig::default());
+        let results = coord.run_batch(jobs);
+        assert_eq!(results.len(), n);
+        for (r, name) in results.iter().zip(&names) {
+            assert_eq!(&r.name, name, "order preserved");
+            assert!(r.ok, "{}: {:?}", r.name, r.error);
+            assert!(r.duration > Duration::ZERO);
+            assert!(r.lemma_applications > 0);
+        }
+        let table = report_table(&results);
+        assert!(table.contains("refines"));
+    }
+
+    #[test]
+    fn failing_workload_reports_error() {
+        let (gs, gd, ri) = crate::models::regression::grad_accum_buggy_pair(2).unwrap();
+        let w = Workload {
+            name: "buggy".into(),
+            gs,
+            gd,
+            ri,
+            strategies: vec!["grad_accum"],
+        };
+        let coord = Coordinator::default();
+        let r = coord.run_one(&w);
+        assert!(!r.ok);
+        assert!(r.error.as_deref().unwrap_or("").contains("FAILED"));
+    }
+}

@@ -1,0 +1,312 @@
+//! E-matching: find all substitutions under which a pattern matches an
+//! e-class. Patterns bind tensor-expression variables (`Var`), whole
+//! operator attributes (`Bind`), and variadic child lists (`Children::
+//! Variadic`) — the last is what lets one lemma cover concat/sum of any
+//! parallelism degree.
+
+use super::enode::{EGraph, ELang, ENode, Id};
+use crate::ir::{Op, OpTag};
+
+/// Operator matcher within a pattern node.
+#[derive(Debug, Clone)]
+pub enum POp {
+    /// Exact operator (attributes included).
+    Exact(Op),
+    /// Any operator with this tag; the concrete op is bound to `slot`.
+    Bind { tag: OpTag, slot: u32 },
+    /// Any unary elementwise op, bound to `slot`.
+    AnyUnaryEltwise { slot: u32 },
+    /// Any binary elementwise op, bound to `slot`.
+    AnyBinaryEltwise { slot: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub enum Children {
+    Fixed(Vec<Pat>),
+    /// Match any arity; bind the child class list to list-slot `slot`.
+    Variadic { slot: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub enum Pat {
+    /// Matches any class, binding it to var `slot` (consistently).
+    Var(u32),
+    Node { op: POp, children: Children },
+}
+
+impl Pat {
+    pub fn var(slot: u32) -> Pat {
+        Pat::Var(slot)
+    }
+    pub fn exact(op: Op, children: Vec<Pat>) -> Pat {
+        Pat::Node { op: POp::Exact(op), children: Children::Fixed(children) }
+    }
+    pub fn bind(tag: OpTag, slot: u32, children: Vec<Pat>) -> Pat {
+        Pat::Node { op: POp::Bind { tag, slot }, children: Children::Fixed(children) }
+    }
+    pub fn bind_variadic(tag: OpTag, slot: u32, list_slot: u32) -> Pat {
+        Pat::Node { op: POp::Bind { tag, slot }, children: Children::Variadic { slot: list_slot } }
+    }
+    pub fn node(op: POp, children: Vec<Pat>) -> Pat {
+        Pat::Node { op, children: Children::Fixed(children) }
+    }
+}
+
+/// A substitution: tensor-expression vars, bound ops, and bound child lists.
+#[derive(Debug, Clone, Default)]
+pub struct Subst {
+    pub vars: Vec<Option<Id>>,
+    pub ops: Vec<Option<Op>>,
+    pub lists: Vec<Option<Vec<Id>>>,
+}
+
+impl Subst {
+    fn ensure(&mut self, nv: usize, no: usize, nl: usize) {
+        if self.vars.len() < nv {
+            self.vars.resize(nv, None);
+        }
+        if self.ops.len() < no {
+            self.ops.resize(no, None);
+        }
+        if self.lists.len() < nl {
+            self.lists.resize(nl, None);
+        }
+    }
+
+    pub fn var(&self, slot: u32) -> Id {
+        self.vars[slot as usize].expect("unbound var")
+    }
+    pub fn op(&self, slot: u32) -> &Op {
+        self.ops[slot as usize].as_ref().expect("unbound op")
+    }
+    pub fn list(&self, slot: u32) -> &[Id] {
+        self.lists[slot as usize].as_deref().expect("unbound list")
+    }
+}
+
+/// Maximum substitutions per (rule, class) — guards pathological blowup.
+const MAX_MATCHES_PER_CLASS: usize = 64;
+
+/// Match `pat` against class `root`; return all substitutions.
+pub fn ematch(eg: &EGraph, pat: &Pat, root: Id) -> Vec<Subst> {
+    let mut out = Vec::new();
+    let init = Subst::default();
+    match_pat(eg, pat, eg.find(root), &init, &mut out);
+    out.truncate(MAX_MATCHES_PER_CLASS);
+    out
+}
+
+/// Match `pat` against every class in the graph; returns (root, subst).
+pub fn ematch_all(eg: &EGraph, pat: &Pat) -> Vec<(Id, Subst)> {
+    let mut out = Vec::new();
+    for id in eg.class_ids() {
+        for s in ematch(eg, pat, id) {
+            out.push((id, s));
+        }
+    }
+    out
+}
+
+fn match_pat(eg: &EGraph, pat: &Pat, class: Id, subst: &Subst, out: &mut Vec<Subst>) {
+    if out.len() >= MAX_MATCHES_PER_CLASS {
+        return;
+    }
+    match pat {
+        Pat::Var(slot) => {
+            let mut s = subst.clone();
+            s.ensure(*slot as usize + 1, 0, 0);
+            match s.vars[*slot as usize] {
+                Some(bound) if eg.find(bound) != class => {} // inconsistent
+                _ => {
+                    s.vars[*slot as usize] = Some(class);
+                    out.push(s);
+                }
+            }
+        }
+        Pat::Node { op, children } => {
+            for node in &eg.class(class).nodes {
+                if let Some(s2) = match_op(op, node, subst) {
+                    match children {
+                        Children::Fixed(pats) => {
+                            if pats.len() != node.children.len() {
+                                continue;
+                            }
+                            match_children(eg, pats, &node.children, &s2, out);
+                        }
+                        Children::Variadic { slot } => {
+                            let mut s3 = s2.clone();
+                            s3.ensure(0, 0, *slot as usize + 1);
+                            match &s3.lists[*slot as usize] {
+                                Some(bound)
+                                    if bound.len() != node.children.len()
+                                        || bound
+                                            .iter()
+                                            .zip(&node.children)
+                                            .any(|(&a, &b)| eg.find(a) != eg.find(b)) => {}
+                                _ => {
+                                    s3.lists[*slot as usize] = Some(node.children.clone());
+                                    out.push(s3);
+                                }
+                            }
+                        }
+                    }
+                }
+                if out.len() >= MAX_MATCHES_PER_CLASS {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn match_children(eg: &EGraph, pats: &[Pat], children: &[Id], subst: &Subst, out: &mut Vec<Subst>) {
+    // depth-first product of per-child matches, with consistent bindings
+    fn rec(
+        eg: &EGraph,
+        pats: &[Pat],
+        children: &[Id],
+        i: usize,
+        subst: &Subst,
+        out: &mut Vec<Subst>,
+    ) {
+        if out.len() >= MAX_MATCHES_PER_CLASS {
+            return;
+        }
+        if i == pats.len() {
+            out.push(subst.clone());
+            return;
+        }
+        let mut partial = Vec::new();
+        match_pat(eg, &pats[i], eg.find(children[i]), subst, &mut partial);
+        for s in partial {
+            rec(eg, pats, children, i + 1, &s, out);
+        }
+    }
+    rec(eg, pats, children, 0, subst, out);
+}
+
+fn match_op(pop: &POp, node: &ENode, subst: &Subst) -> Option<Subst> {
+    let op = match &node.lang {
+        ELang::Op(op) => op,
+        ELang::Leaf(_) => return None,
+    };
+    match pop {
+        POp::Exact(want) => (op == want).then(|| subst.clone()),
+        POp::Bind { tag, slot } => (op.tag() == *tag).then(|| {
+            let mut s = subst.clone();
+            s.ensure(0, *slot as usize + 1, 0);
+            s.ops[*slot as usize] = Some(op.clone());
+            s
+        }),
+        POp::AnyUnaryEltwise { slot } => op.is_unary_elementwise().then(|| {
+            let mut s = subst.clone();
+            s.ensure(0, *slot as usize + 1, 0);
+            s.ops[*slot as usize] = Some(op.clone());
+            s
+        }),
+        POp::AnyBinaryEltwise { slot } => op.is_binary_elementwise().then(|| {
+            let mut s = subst.clone();
+            s.ensure(0, *slot as usize + 1, 0);
+            s.ops[*slot as usize] = Some(op.clone());
+            s
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::TensorRef;
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn match_exact_matmul() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 3]);
+        let b = eg.add_leaf(t(1), vec![3, 2]);
+        let m = eg.add_op(Op::MatMul, vec![a, b]).unwrap();
+        let pat = Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)]);
+        let subs = ematch(&eg, &pat, m);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].var(0), a);
+        assert_eq!(subs[0].var(1), b);
+        // no match against a leaf class
+        assert!(ematch(&eg, &pat, a).is_empty());
+    }
+
+    #[test]
+    fn bind_op_attrs() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![8]);
+        let s = eg
+            .add_op(Op::Slice { dim: 0, start: 2.into(), end: 6.into() }, vec![x])
+            .unwrap();
+        let pat = Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]);
+        let subs = ematch(&eg, &pat, s);
+        assert_eq!(subs.len(), 1);
+        match subs[0].op(0) {
+            Op::Slice { start, end, .. } => {
+                assert_eq!(start.as_const(), Some(2));
+                assert_eq!(end.as_const(), Some(6));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn variadic_concat() {
+        let mut eg = EGraph::new();
+        let parts: Vec<Id> = (0..3).map(|i| eg.add_leaf(t(i), vec![2, 4])).collect();
+        let c = eg.add_op(Op::Concat { dim: 0 }, parts.clone()).unwrap();
+        let pat = Pat::bind_variadic(OpTag::Concat, 0, 0);
+        let subs = ematch(&eg, &pat, c);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].list(0), &parts[..]);
+    }
+
+    #[test]
+    fn consistent_var_binding() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let aa = eg.add_op(Op::Add, vec![a, a]).unwrap();
+        let ab = eg.add_op(Op::Add, vec![a, b]).unwrap();
+        // pattern add(x, x) must match add(a,a) but not add(a,b)
+        let pat = Pat::exact(Op::Add, vec![Pat::var(0), Pat::var(0)]);
+        assert_eq!(ematch(&eg, &pat, aa).len(), 1);
+        assert!(ematch(&eg, &pat, ab).is_empty());
+    }
+
+    #[test]
+    fn nested_pattern() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 3]);
+        let b = eg.add_leaf(t(1), vec![3, 2]);
+        let m = eg.add_op(Op::MatMul, vec![a, b]).unwrap();
+        let n = eg.add_op(Op::Neg, vec![m]).unwrap();
+        let pat = Pat::exact(
+            Op::Neg,
+            vec![Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)])],
+        );
+        let subs = ematch(&eg, &pat, n);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].var(0), a);
+    }
+
+    #[test]
+    fn matches_across_merged_classes() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let na = eg.add_op(Op::Neg, vec![a]).unwrap();
+        eg.union(na, b).unwrap();
+        eg.rebuild();
+        // b's class now contains neg(a); pattern neg(x) must match it
+        let pat = Pat::exact(Op::Neg, vec![Pat::var(0)]);
+        let subs = ematch(&eg, &pat, b);
+        assert_eq!(subs.len(), 1);
+    }
+}

@@ -1,0 +1,338 @@
+//! E-nodes, e-classes and the core e-graph with hash-consing, congruence
+//! closure, and a shape analysis (every e-class carries the tensor shape its
+//! terms evaluate to; unions of shape-distinct classes are rejected — they
+//! would indicate an unsound lemma).
+
+use super::unionfind::UnionFind;
+use crate::expr::{Expr, TensorRef};
+use crate::ir::Op;
+use anyhow::{bail, Result};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+pub type Id = u32;
+
+/// The e-graph language: IR operators over child classes, or tensor leaves.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ELang {
+    Leaf(TensorRef),
+    Op(Op),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ENode {
+    pub lang: ELang,
+    pub children: Vec<Id>,
+}
+
+impl ENode {
+    pub fn leaf(t: TensorRef) -> Self {
+        ENode { lang: ELang::Leaf(t), children: vec![] }
+    }
+    pub fn op(op: Op, children: Vec<Id>) -> Self {
+        ENode { lang: ELang::Op(op), children }
+    }
+
+    fn canonicalize(&self, uf: &UnionFind) -> ENode {
+        ENode {
+            lang: self.lang.clone(),
+            children: self.children.iter().map(|&c| uf.find(c)).collect(),
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EClass {
+    pub nodes: Vec<ENode>,
+    /// (parent enode, parent class) pairs for congruence repair.
+    pub parents: Vec<(ENode, Id)>,
+}
+
+#[derive(Debug, Default)]
+pub struct EGraph {
+    uf: UnionFind,
+    /// canonical id -> class data (non-canonical ids have empty slots).
+    classes: FxHashMap<Id, EClass>,
+    memo: FxHashMap<ENode, Id>,
+    /// classes whose parents need congruence repair.
+    dirty: Vec<Id>,
+    /// shape analysis per canonical id.
+    shapes: FxHashMap<Id, Vec<i64>>,
+    /// total enodes ever added (limit enforcement).
+    pub n_nodes: usize,
+}
+
+impl EGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn find(&self, id: Id) -> Id {
+        self.uf.find(id)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn class(&self, id: Id) -> &EClass {
+        &self.classes[&self.uf.find(id)]
+    }
+
+    pub fn class_ids(&self) -> Vec<Id> {
+        self.classes.keys().copied().collect()
+    }
+
+    pub fn shape(&self, id: Id) -> Option<&[i64]> {
+        self.shapes.get(&self.uf.find(id)).map(|v| v.as_slice())
+    }
+
+    /// Add a leaf with known shape.
+    pub fn add_leaf(&mut self, t: TensorRef, shape: Vec<i64>) -> Id {
+        let node = ENode::leaf(t);
+        if let Some(&id) = self.memo.get(&node) {
+            return self.uf.find(id);
+        }
+        let id = self.new_class(node, shape);
+        id
+    }
+
+    /// Add an op node over existing classes; computes the shape analysis.
+    /// Fails if the op is ill-shaped over its children.
+    pub fn add_op(&mut self, op: Op, children: Vec<Id>) -> Result<Id> {
+        let children: Vec<Id> = children.iter().map(|&c| self.uf.find(c)).collect();
+        let node = ENode::op(op.clone(), children.clone());
+        if let Some(&id) = self.memo.get(&node) {
+            return Ok(self.uf.find(id));
+        }
+        let child_shapes: Vec<Vec<i64>> = children
+            .iter()
+            .map(|c| {
+                self.shape(*c)
+                    .map(|s| s.to_vec())
+                    .ok_or_else(|| anyhow::anyhow!("child class without shape"))
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&[i64]> = child_shapes.iter().map(|s| s.as_slice()).collect();
+        let shape = op.infer_shape(&refs, None)?;
+        let id = self.new_class(node.clone(), shape);
+        for &c in &children {
+            if let Some(class) = self.classes.get_mut(&c) {
+                class.parents.push((node.clone(), id));
+            }
+        }
+        Ok(id)
+    }
+
+    fn new_class(&mut self, node: ENode, shape: Vec<i64>) -> Id {
+        let id = self.uf.make_set();
+        self.memo.insert(node.clone(), id);
+        self.classes.insert(id, EClass { nodes: vec![node], parents: vec![] });
+        self.shapes.insert(id, shape);
+        self.n_nodes += 1;
+        id
+    }
+
+    /// Look up a node without inserting (drives *constrained lemmas*,
+    /// §4.3.2: a rewrite only fires if its target already exists).
+    pub fn lookup(&self, op: &Op, children: &[Id]) -> Option<Id> {
+        let node = ENode::op(
+            op.clone(),
+            children.iter().map(|&c| self.uf.find(c)).collect(),
+        );
+        self.memo.get(&node).map(|&id| self.uf.find(id))
+    }
+
+    pub fn lookup_leaf(&self, t: TensorRef) -> Option<Id> {
+        self.memo.get(&ENode::leaf(t)).map(|&id| self.uf.find(id))
+    }
+
+    /// Insert an expression tree; leaves must already exist (or carry shapes
+    /// via `leaf_shape`).
+    pub fn add_expr(
+        &mut self,
+        e: &Expr,
+        leaf_shape: &dyn Fn(TensorRef) -> Option<Vec<i64>>,
+    ) -> Result<Id> {
+        match e {
+            Expr::Leaf(t) => {
+                if let Some(id) = self.lookup_leaf(*t) {
+                    Ok(id)
+                } else {
+                    let shape = leaf_shape(*t)
+                        .ok_or_else(|| anyhow::anyhow!("unknown shape for leaf {:?}", t))?;
+                    Ok(self.add_leaf(*t, shape))
+                }
+            }
+            Expr::Op(op, args) => {
+                let children: Vec<Id> = args
+                    .iter()
+                    .map(|a| self.add_expr(a, leaf_shape))
+                    .collect::<Result<_>>()?;
+                self.add_op(op.clone(), children)
+            }
+        }
+    }
+
+    /// Merge two classes. Shape-distinct unions are rejected as unsound.
+    pub fn union(&mut self, a: Id, b: Id) -> Result<bool> {
+        let (ra, rb) = (self.uf.find(a), self.uf.find(b));
+        if ra == rb {
+            return Ok(false);
+        }
+        if let (Some(sa), Some(sb)) = (self.shapes.get(&ra), self.shapes.get(&rb)) {
+            if sa != sb {
+                bail!("union of shape-distinct classes {:?} vs {:?} — unsound rewrite", sa, sb);
+            }
+        }
+        let (keep, drop) = self.uf.union(ra, rb).expect("distinct roots");
+        let dropped = self.classes.remove(&drop).unwrap_or_default();
+        self.shapes.remove(&drop);
+        let kept = self.classes.get_mut(&keep).expect("kept class");
+        kept.nodes.extend(dropped.nodes);
+        kept.parents.extend(dropped.parents);
+        self.dirty.push(keep);
+        Ok(true)
+    }
+
+    /// Restore congruence: parents of merged classes may now be equal.
+    pub fn rebuild(&mut self) {
+        while let Some(id) = self.dirty.pop() {
+            let id = self.uf.find(id);
+            let parents = match self.classes.get_mut(&id) {
+                Some(c) => std::mem::take(&mut c.parents),
+                None => continue,
+            };
+            let mut seen: FxHashMap<ENode, Id> = FxHashMap::default();
+            let mut new_parents = Vec::with_capacity(parents.len());
+            let mut pending: Vec<(Id, Id)> = Vec::new();
+            for (node, pid) in parents {
+                let canon = node.canonicalize(&self.uf);
+                let pid = self.uf.find(pid);
+                // re-memoize under the canonical key
+                if let Some(&existing) = self.memo.get(&canon) {
+                    let existing = self.uf.find(existing);
+                    if existing != pid {
+                        pending.push((existing, pid));
+                    }
+                } else {
+                    self.memo.insert(canon.clone(), pid);
+                }
+                if let Some(&dup) = seen.get(&canon) {
+                    if dup != pid {
+                        pending.push((dup, pid));
+                    }
+                } else {
+                    seen.insert(canon.clone(), pid);
+                    new_parents.push((canon, pid));
+                }
+            }
+            if let Some(c) = self.classes.get_mut(&id) {
+                c.parents = new_parents;
+            }
+            for (a, b) in pending {
+                // unions during rebuild share the same shape by construction
+                let _ = self.union(a, b);
+            }
+        }
+        // canonicalize node lists (cheap; keeps matching exact)
+        let ids: Vec<Id> = self.classes.keys().copied().collect();
+        for id in ids {
+            if let Some(mut class) = self.classes.remove(&id) {
+                let mut set: FxHashSet<ENode> = FxHashSet::default();
+                class.nodes = class
+                    .nodes
+                    .drain(..)
+                    .map(|n| n.canonicalize(&self.uf))
+                    .filter(|n| set.insert(n.clone()))
+                    .collect();
+                self.classes.insert(id, class);
+            }
+        }
+    }
+
+    /// Are the two ids in the same class?
+    pub fn same(&self, a: Id, b: Id) -> bool {
+        self.uf.find(a) == self.uf.find(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn hashcons_dedupes() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 2]);
+        let b = eg.add_leaf(t(1), vec![2, 2]);
+        let m1 = eg.add_op(Op::MatMul, vec![a, b]).unwrap();
+        let m2 = eg.add_op(Op::MatMul, vec![a, b]).unwrap();
+        assert_eq!(m1, m2);
+        assert_eq!(eg.num_classes(), 3);
+    }
+
+    #[test]
+    fn congruence_after_union() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 2]);
+        let b = eg.add_leaf(t(1), vec![2, 2]);
+        let c = eg.add_leaf(t(2), vec![2, 2]);
+        let ac = eg.add_op(Op::Add, vec![a, c]).unwrap();
+        let bc = eg.add_op(Op::Add, vec![b, c]).unwrap();
+        assert!(!eg.same(ac, bc));
+        eg.union(a, b).unwrap();
+        eg.rebuild();
+        assert!(eg.same(ac, bc), "congruence must merge add(a,c) and add(b,c)");
+    }
+
+    #[test]
+    fn shape_mismatch_union_rejected() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 2]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        assert!(eg.union(a, b).is_err());
+    }
+
+    #[test]
+    fn lookup_does_not_insert() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        assert!(eg.lookup(&Op::Neg, &[a]).is_none());
+        let n = eg.add_op(Op::Neg, vec![a]).unwrap();
+        assert_eq!(eg.lookup(&Op::Neg, &[a]), Some(n));
+    }
+
+    #[test]
+    fn add_expr_roundtrip() {
+        use crate::expr::Expr;
+        let mut eg = EGraph::new();
+        let e = Expr::op(
+            Op::Concat { dim: 0 },
+            vec![Expr::leaf(t(0)), Expr::leaf(t(1))],
+        );
+        let shapes = |_tr: TensorRef| Some(vec![2, 3]);
+        let id = eg.add_expr(&e, &shapes).unwrap();
+        assert_eq!(eg.shape(id), Some(&[4, 3][..]));
+    }
+
+    #[test]
+    fn deep_congruence_chain() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2]);
+        let b = eg.add_leaf(t(1), vec![2]);
+        // neg(neg(neg(a))) vs neg(neg(neg(b)))
+        let mut x = a;
+        let mut y = b;
+        for _ in 0..3 {
+            x = eg.add_op(Op::Neg, vec![x]).unwrap();
+            y = eg.add_op(Op::Neg, vec![y]).unwrap();
+        }
+        eg.union(a, b).unwrap();
+        eg.rebuild();
+        assert!(eg.same(x, y));
+    }
+}

@@ -1,0 +1,254 @@
+//! Clean-expression extraction.
+//!
+//! After saturation, each e-class holds many equivalent terms. The relation
+//! inference needs, per class, the *clean* expressions (rearrangement +
+//! reduction ops over allowed leaf tensors, §3.2) — and it needs several of
+//! them: the running example keeps both `sum(C_1, C_2)` and
+//! `concat(D_1, D_2)` for the same tensor, because either may pair with a
+//! later operator's lemmas.
+//!
+//! We keep up to K candidates per class, at most one per distinct *leaf
+//! signature* (sorted distinct leaf set). Candidates with the same leaf
+//! signature are self-provably equivalent in the sense of §4.3.2 (their
+//! equivalence is witnessed inside the e-graph without extra graph facts),
+//! so keeping only the smallest of each signature is exactly the paper's
+//! self-provable pruning.
+
+use super::enode::{EGraph, ELang, Id};
+use crate::expr::{Expr, TensorRef};
+use rustc_hash::FxHashMap;
+
+#[derive(Debug, Clone)]
+pub struct CleanCand {
+    pub expr: Expr,
+    /// nested-op count (the paper's simplicity measure)
+    pub cost: u32,
+    /// sorted distinct leaves
+    pub leaves: Vec<TensorRef>,
+}
+
+/// Max candidates kept per class.
+pub const K_PER_CLASS: usize = 4;
+/// Max child-combination expansions per enode per round.
+const MAX_COMBOS: usize = 64;
+
+/// Extract clean candidates for every class. `allowed` filters which leaf
+/// tensors may appear (e.g. only `T_rel`, or only `O(G_d)` for the final
+/// output relation).
+pub fn extract_clean(
+    eg: &EGraph,
+    allowed: &dyn Fn(TensorRef) -> bool,
+) -> FxHashMap<Id, Vec<CleanCand>> {
+    let mut cands: FxHashMap<Id, Vec<CleanCand>> = FxHashMap::default();
+    // Fixpoint: classes gain candidates as their children do. Graphs here
+    // are small (per-operator subproblems), so a simple loop suffices; the
+    // round bound guards against cyclic classes.
+    for _round in 0..24 {
+        let mut changed = false;
+        for id in eg.class_ids() {
+            let class = eg.class(id);
+            let mut fresh: Vec<CleanCand> = Vec::new();
+            for node in &class.nodes {
+                match &node.lang {
+                    ELang::Leaf(t) => {
+                        if allowed(*t) {
+                            fresh.push(CleanCand {
+                                expr: Expr::Leaf(*t),
+                                cost: 0,
+                                leaves: vec![*t],
+                            });
+                        }
+                    }
+                    ELang::Op(op) => {
+                        if !op.is_clean() {
+                            continue;
+                        }
+                        // all children must have candidates
+                        let child_cands: Option<Vec<&Vec<CleanCand>>> = node
+                            .children
+                            .iter()
+                            .map(|c| cands.get(&eg.find(*c)))
+                            .collect();
+                        let Some(child_cands) = child_cands else { continue };
+                        if child_cands.iter().any(|v| v.is_empty()) {
+                            continue;
+                        }
+                        combine(op.clone(), &child_cands, &mut fresh);
+                    }
+                }
+            }
+            if fresh.is_empty() {
+                continue;
+            }
+            let entry = cands.entry(id).or_default();
+            for cand in fresh {
+                changed |= insert_cand(entry, cand);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    cands
+}
+
+/// Candidate combination for one clean enode: cartesian over child
+/// candidates, bounded.
+fn combine(op: crate::ir::Op, children: &[&Vec<CleanCand>], out: &mut Vec<CleanCand>) {
+    let mut combos: Vec<(Vec<Expr>, u32, Vec<TensorRef>)> = vec![(vec![], 1, vec![])];
+    for child in children {
+        let mut next = Vec::new();
+        for (args, cost, leaves) in &combos {
+            for cand in child.iter() {
+                if next.len() >= MAX_COMBOS {
+                    break;
+                }
+                let mut args2 = args.clone();
+                args2.push(cand.expr.clone());
+                let mut leaves2 = leaves.clone();
+                leaves2.extend_from_slice(&cand.leaves);
+                next.push((args2, cost + cand.cost, leaves2));
+            }
+        }
+        combos = next;
+        if combos.len() > MAX_COMBOS {
+            combos.truncate(MAX_COMBOS);
+        }
+    }
+    for (args, cost, mut leaves) in combos {
+        leaves.sort();
+        leaves.dedup();
+        out.push(CleanCand { expr: Expr::Op(op.clone(), args), cost, leaves });
+    }
+}
+
+/// Insert keeping ≤ K_PER_CLASS candidates, one per leaf signature (min
+/// cost). Returns true if the set changed.
+fn insert_cand(set: &mut Vec<CleanCand>, cand: CleanCand) -> bool {
+    if let Some(existing) = set.iter_mut().find(|c| c.leaves == cand.leaves) {
+        if cand.cost < existing.cost {
+            *existing = cand;
+            return true;
+        }
+        return false;
+    }
+    if set.len() < K_PER_CLASS {
+        set.push(cand);
+        set.sort_by_key(|c| c.cost);
+        return true;
+    }
+    // evict the most expensive if strictly better
+    if let Some(worst) = set.last() {
+        if cand.cost < worst.cost {
+            set.pop();
+            set.push(cand);
+            set.sort_by_key(|c| c.cost);
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn extracts_leaf_and_clean_op() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 2]);
+        let b = eg.add_leaf(t(1), vec![2, 2]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let cands = extract_clean(&eg, &|_| true);
+        assert_eq!(cands[&a][0].cost, 0);
+        let c = &cands[&cat];
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].cost, 1);
+        assert_eq!(c[0].leaves, vec![t(0), t(1)]);
+    }
+
+    #[test]
+    fn unclean_ops_are_skipped() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 2]);
+        let b = eg.add_leaf(t(1), vec![2, 2]);
+        let mm = eg.add_op(Op::MatMul, vec![a, b]).unwrap();
+        let cands = extract_clean(&eg, &|_| true);
+        assert!(!cands.contains_key(&mm), "matmul is not clean");
+    }
+
+    #[test]
+    fn allowed_filter_prunes_leaves() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2]);
+        let b = eg.add_leaf(t(1), vec![2]);
+        let s = eg.add_op(Op::SumN, vec![a, b]).unwrap();
+        // only t(0) allowed -> sum can't be built
+        let cands = extract_clean(&eg, &|tr| tr == t(0));
+        assert!(cands.contains_key(&a));
+        assert!(!cands.contains_key(&b));
+        assert!(!cands.contains_key(&s));
+    }
+
+    #[test]
+    fn multiple_leaf_signatures_kept() {
+        // class containing both sum(C1,C2) and concat(D1,D2):
+        let mut eg = EGraph::new();
+        let c1 = eg.add_leaf(t(0), vec![4, 4]);
+        let c2 = eg.add_leaf(t(1), vec![4, 4]);
+        let d1 = eg.add_leaf(t(2), vec![2, 4]);
+        let d2 = eg.add_leaf(t(3), vec![2, 4]);
+        let sum = eg.add_op(Op::SumN, vec![c1, c2]).unwrap();
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![d1, d2]).unwrap();
+        eg.union(sum, cat).unwrap();
+        eg.rebuild();
+        let cands = extract_clean(&eg, &|_| true);
+        let got = &cands[&eg.find(sum)];
+        assert_eq!(got.len(), 2, "both signatures: {:?}", got);
+        let sigs: Vec<&Vec<TensorRef>> = got.iter().map(|c| &c.leaves).collect();
+        assert!(sigs.contains(&&vec![t(0), t(1)]));
+        assert!(sigs.contains(&&vec![t(2), t(3)]));
+    }
+
+    #[test]
+    fn self_provable_pruning_keeps_smallest() {
+        // same leaf signature, different size: slice(X,16..48) vs
+        // concat(slice(X,16..32), slice(X,32..48)) — keep the former.
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![64]);
+        let big = eg
+            .add_op(Op::Slice { dim: 0, start: 16.into(), end: 48.into() }, vec![x])
+            .unwrap();
+        let l = eg
+            .add_op(Op::Slice { dim: 0, start: 16.into(), end: 32.into() }, vec![x])
+            .unwrap();
+        let r = eg
+            .add_op(Op::Slice { dim: 0, start: 32.into(), end: 48.into() }, vec![x])
+            .unwrap();
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![l, r]).unwrap();
+        eg.union(big, cat).unwrap();
+        eg.rebuild();
+        let cands = extract_clean(&eg, &|_| true);
+        let got = &cands[&eg.find(big)];
+        assert_eq!(got.len(), 1, "one signature -> one candidate");
+        assert_eq!(got[0].cost, 1, "smallest representative wins");
+    }
+
+    #[test]
+    fn nested_clean_chain() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4, 4]);
+        let s = eg
+            .add_op(Op::Slice { dim: 0, start: 0.into(), end: 2.into() }, vec![a])
+            .unwrap();
+        let tr = eg.add_op(Op::Transpose { perm: vec![1, 0] }, vec![s]).unwrap();
+        let cands = extract_clean(&eg, &|_| true);
+        assert_eq!(cands[&tr][0].cost, 2);
+        assert!(cands[&tr][0].expr.is_clean());
+    }
+}

@@ -1,0 +1,25 @@
+//! Equality-saturation engine (the role `egg` plays in the paper, §4.2.2).
+//!
+//! The offline environment has no `egg` crate, so this is a from-scratch
+//! e-graph: hash-consed e-nodes, union-find over e-classes, congruence
+//! closure, conditional pattern rewrites, bounded saturation, and a
+//! *clean-expression* extractor that implements the paper's self-provable
+//! pruning (§4.3.2) by keeping only the cheapest candidate per distinct
+//! leaf signature.
+//!
+//! The e-graph language is exactly the IR's [`Op`](crate::ir::Op) plus
+//! tensor leaves, so expressions ([`crate::expr::Expr`]) insert and extract
+//! without translation.
+
+pub mod enode;
+pub mod extract;
+pub mod ematch;
+pub mod rewrite;
+pub mod unionfind;
+
+pub use enode::{EClass, EGraph, ELang, ENode, Id};
+pub use extract::CleanCand;
+pub use ematch::{ematch, ematch_all, Children, POp, Pat, Subst};
+pub use extract::extract_clean;
+pub use rewrite::saturate;
+pub use rewrite::{Rewrite, RewriteCtx, SatStats, SaturationLimits};

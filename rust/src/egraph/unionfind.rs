@@ -1,0 +1,85 @@
+//! Union-find with path halving. Ids are dense `u32`s allocated by the
+//! e-graph.
+
+use super::enode::Id;
+
+#[derive(Debug, Default, Clone)]
+pub struct UnionFind {
+    parent: Vec<Id>,
+}
+
+impl UnionFind {
+    pub fn make_set(&mut self) -> Id {
+        let id = self.parent.len() as Id;
+        self.parent.push(id);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    pub fn find(&self, mut x: Id) -> Id {
+        while self.parent[x as usize] != x {
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    /// find with path-halving (mutable fast path).
+    pub fn find_mut(&mut self, mut x: Id) -> Id {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Union two sets; returns (new_root, merged_away) or None if already
+    /// one set. The smaller id wins — deterministic canonical ids.
+    pub fn union(&mut self, a: Id, b: Id) -> Option<(Id, Id)> {
+        let ra = self.find_mut(a);
+        let rb = self.find_mut(b);
+        if ra == rb {
+            return None;
+        }
+        let (keep, drop) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.parent[drop as usize] = keep;
+        Some((keep, drop))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::default();
+        let a = uf.make_set();
+        let b = uf.make_set();
+        let c = uf.make_set();
+        assert_ne!(uf.find(a), uf.find(b));
+        assert_eq!(uf.union(a, b), Some((a, b)));
+        assert_eq!(uf.find(b), a);
+        assert_eq!(uf.union(b, a), None);
+        uf.union(b, c);
+        assert_eq!(uf.find(c), a);
+    }
+
+    #[test]
+    fn canonical_is_smallest_id() {
+        let mut uf = UnionFind::default();
+        let ids: Vec<Id> = (0..10).map(|_| uf.make_set()).collect();
+        for w in ids.windows(2) {
+            uf.union(w[1], w[0]);
+        }
+        for &i in &ids {
+            assert_eq!(uf.find(i), ids[0]);
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Numeric interpreter for operators, expressions and whole graphs.
+//!
+//! Three consumers: lemma validation (every rewrite rule is spot-checked on
+//! random tensors), relation soundness checks (an inferred `R_o` is replayed
+//! numerically to confirm it reconstructs `G_s`'s outputs), and the
+//! `cross_validate` example which compares against PJRT-executed HLO.
+
+use super::{Expr, TensorRef};
+use crate::ir::{Graph, Op, TensorId};
+use crate::util::ndarray::NdArray;
+use anyhow::{bail, ensure, Context, Result};
+use rustc_hash::FxHashMap;
+
+/// Evaluate a single operator application.
+pub fn eval_op(op: &Op, args: &[&NdArray]) -> Result<NdArray> {
+    let unary = |f: fn(f32) -> f32| -> Result<NdArray> {
+        ensure!(args.len() == 1, "{} arity", op.name());
+        Ok(args[0].map(f))
+    };
+    match op {
+        Op::Identity => unary(|x| x),
+        Op::Neg => unary(|x| -x),
+        Op::Exp => unary(f32::exp),
+        Op::Log => unary(f32::ln),
+        Op::Sqrt => unary(f32::sqrt),
+        Op::Rsqrt => unary(|x| 1.0 / x.sqrt()),
+        Op::Square => unary(|x| x * x),
+        Op::Tanh => unary(f32::tanh),
+        Op::Sigmoid => unary(|x| 1.0 / (1.0 + (-x).exp())),
+        Op::Relu => unary(|x| x.max(0.0)),
+        Op::Gelu => unary(|x| {
+            0.5 * x * (1.0 + ((2.0f32 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+        }),
+        Op::Silu => unary(|x| x / (1.0 + (-x).exp())),
+        Op::Scale { c } => {
+            let c = c.get() as f32;
+            unary_dyn(args, move |x| x * c)
+        }
+        Op::AddScalar { c } => {
+            let c = c.get() as f32;
+            unary_dyn(args, move |x| x + c)
+        }
+        Op::Add => binop(args, |a, b| a + b),
+        Op::Sub => binop(args, |a, b| a - b),
+        Op::Mul => binop(args, |a, b| a * b),
+        Op::Div => binop(args, |a, b| a / b),
+        Op::Maximum => binop(args, f32::max),
+        Op::SumN | Op::AllReduce { .. } => {
+            ensure!(!args.is_empty(), "sum arity");
+            let mut acc = args[0].clone();
+            for a in &args[1..] {
+                acc = acc.zip(a, |x, y| x + y)?;
+            }
+            Ok(acc)
+        }
+        Op::MatMul => {
+            ensure!(args.len() == 2, "matmul arity");
+            args[0].matmul(args[1])
+        }
+        Op::Slice { dim, start, end } => {
+            ensure!(args.len() == 1, "slice arity");
+            args[0].slice(*dim, const_of(start)?, const_of(end)?)
+        }
+        Op::Concat { dim } => NdArray::concat(&args.to_vec(), *dim),
+        Op::AllGather { dim, .. } => NdArray::concat(&args.to_vec(), *dim),
+        Op::Transpose { perm } => {
+            ensure!(args.len() == 1, "transpose arity");
+            args[0].transpose(perm)
+        }
+        Op::Reshape { shape } => {
+            ensure!(args.len() == 1, "reshape arity");
+            let dims: Vec<i64> = shape.iter().map(const_of).collect::<Result<_>>()?;
+            args[0].reshape(dims)
+        }
+        Op::Pad { dim, before, after, value } => {
+            ensure!(args.len() == 1, "pad arity");
+            args[0].pad(*dim, const_of(before)?, const_of(after)?, value.get() as f32)
+        }
+        Op::ReduceSum { dim, keepdim } => args[0].sum_dim(*dim, *keepdim),
+        Op::ReduceMean { dim, keepdim } => args[0].mean_dim(*dim, *keepdim),
+        Op::ReduceMax { dim, keepdim } => args[0].max_dim(*dim, *keepdim),
+        Op::Softmax { dim } => {
+            ensure!(args.len() == 1, "softmax arity");
+            let x = args[0];
+            let max = x.max_dim(*dim, true)?;
+            let shifted = x.zip(&max, |a, m| (a - m).exp())?;
+            let denom = shifted.sum_dim(*dim, true)?;
+            shifted.zip(&denom, |e, d| e / d)
+        }
+        Op::RmsNorm { eps } => {
+            ensure!(args.len() == 2, "rms_norm arity");
+            let (x, w) = (args[0], args[1]);
+            let last = x.ndim() - 1;
+            let ms = x.map(|v| v * v).mean_dim(last, true)?;
+            let eps = eps.get() as f32;
+            let normed = x.zip(&ms, move |v, m| v / (m + eps).sqrt())?;
+            normed.zip(w, |v, wi| v * wi)
+        }
+        Op::LayerNorm { eps } => {
+            ensure!(args.len() == 3, "layer_norm arity");
+            let (x, w, b) = (args[0], args[1], args[2]);
+            let last = x.ndim() - 1;
+            let mean = x.mean_dim(last, true)?;
+            let centered = x.zip(&mean, |v, m| v - m)?;
+            let var = centered.map(|v| v * v).mean_dim(last, true)?;
+            let eps = eps.get() as f32;
+            let normed = centered.zip(&var, move |v, s| v / (s + eps).sqrt())?;
+            normed.zip(w, |v, wi| v * wi)?.zip(b, |v, bi| v + bi)
+        }
+        Op::Rope => {
+            ensure!(args.len() == 3, "rope arity");
+            let (x, cos, sin) = (args[0], args[1], args[2]);
+            let last = x.ndim() - 1;
+            let d = *x.shape().last().unwrap();
+            ensure!(d % 2 == 0, "rope head dim");
+            // rotate_half(x) = concat(-x2, x1)
+            let x1 = x.slice(last, 0, d / 2)?;
+            let x2 = x.slice(last, d / 2, d)?;
+            let rot = NdArray::concat(&[&x2.map(|v| -v), &x1], last)?;
+            let a = x.zip(cos, |v, c| v * c)?;
+            let b = rot.zip(sin, |v, s| v * s)?;
+            a.zip(&b, |p, q| p + q)
+        }
+        Op::Embedding => {
+            ensure!(args.len() == 2, "embedding arity");
+            args[0].gather_rows(args[1])
+        }
+        Op::MseLoss => {
+            ensure!(args.len() == 2, "mse arity");
+            let d = args[0].zip(args[1], |a, b| (a - b) * (a - b))?;
+            let n = d.len() as f32;
+            Ok(NdArray::scalar(d.data().iter().sum::<f32>() / n))
+        }
+        Op::ReduceScatter { dim, ranks, index } => {
+            let sum = eval_op(&Op::SumN, args)?;
+            let chunk = sum.shape()[*dim] / *ranks as i64;
+            sum.slice(*dim, *index as i64 * chunk, (*index as i64 + 1) * chunk)
+        }
+        Op::Custom { name } => crate::lemmas::custom::registry_eval(name, args),
+    }
+}
+
+fn unary_dyn(args: &[&NdArray], f: impl Fn(f32) -> f32) -> Result<NdArray> {
+    ensure!(args.len() == 1, "unary arity");
+    Ok(args[0].map(f))
+}
+
+fn binop(args: &[&NdArray], f: impl Fn(f32, f32) -> f32) -> Result<NdArray> {
+    ensure!(args.len() == 2, "binary arity");
+    args[0].zip(args[1], f)
+}
+
+fn const_of(s: &crate::symbolic::Scalar) -> Result<i64> {
+    s.as_const().ok_or_else(|| anyhow::anyhow!("symbolic scalar in numeric eval"))
+}
+
+/// Environment mapping leaf tensors to values.
+pub type Env = FxHashMap<TensorRef, NdArray>;
+
+/// Evaluate an expression under `env`.
+pub fn eval_expr(e: &Expr, env: &Env) -> Result<NdArray> {
+    match e {
+        Expr::Leaf(t) => env
+            .get(t)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unbound leaf {:?} in expression", t)),
+        Expr::Op(op, args) => {
+            let vals: Vec<NdArray> =
+                args.iter().map(|a| eval_expr(a, env)).collect::<Result<_>>()?;
+            let refs: Vec<&NdArray> = vals.iter().collect();
+            eval_op(op, &refs).with_context(|| format!("evaluating {}", op))
+        }
+    }
+}
+
+/// Evaluate an entire graph given values for its inputs; returns values for
+/// every tensor (by `TensorId`).
+pub fn eval_graph(g: &Graph, inputs: &FxHashMap<TensorId, NdArray>) -> Result<Vec<NdArray>> {
+    let mut vals: Vec<Option<NdArray>> = vec![None; g.num_tensors()];
+    for &i in &g.inputs {
+        let v = inputs
+            .get(&i)
+            .ok_or_else(|| anyhow::anyhow!("missing input '{}'", g.tensor(i).name))?;
+        ensure!(
+            v.shape() == g.shape(i),
+            "input '{}' shape {:?} != declared {:?}",
+            g.tensor(i).name,
+            v.shape(),
+            g.shape(i)
+        );
+        vals[i as usize] = Some(v.clone());
+    }
+    for nid in g.topo_order() {
+        let node = g.node(nid);
+        let args: Vec<&NdArray> = node
+            .inputs
+            .iter()
+            .map(|&t| {
+                vals[t as usize]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("tensor '{}' unset", g.tensor(t).name))
+            })
+            .collect::<Result<_>>()?;
+        let out = eval_op(&node.op, &args).with_context(|| format!("node '{}'", node.name))?;
+        vals[node.output as usize] = Some(out);
+    }
+    vals.into_iter()
+        .enumerate()
+        .map(|(i, v)| v.ok_or_else(|| anyhow::anyhow!("tensor {} never computed", i)))
+        .collect()
+}
+
+/// Random input environment for a graph (deterministic per seed).
+pub fn random_inputs(g: &Graph, seed: u64) -> FxHashMap<TensorId, NdArray> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut out = FxHashMap::default();
+    for &i in &g.inputs {
+        let t = g.tensor(i);
+        let n: i64 = t.shape.iter().product();
+        let data = match t.dtype {
+            crate::ir::DType::F32 => rng.buf(n as usize, 0.5),
+            // integral ids: keep them in a small safe range
+            crate::ir::DType::I64 => (0..n).map(|_| rng.below(8) as f32).collect(),
+        };
+        out.insert(i, NdArray::new(t.shape.clone(), data).unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::FBits;
+
+    fn nd(shape: Vec<i64>, data: Vec<f32>) -> NdArray {
+        NdArray::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = nd(vec![2, 3], vec![1., 2., 3., 0., 0., 0.]);
+        let s = eval_op(&Op::Softmax { dim: 1 }, &[&x]).unwrap();
+        let sums = s.sum_dim(1, false).unwrap();
+        assert!(sums.allclose(&nd(vec![2], vec![1., 1.]), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn rmsnorm_matches_manual() {
+        let x = nd(vec![1, 4], vec![1., 2., 3., 4.]);
+        let w = nd(vec![4], vec![1., 1., 1., 1.]);
+        let out = eval_op(&Op::RmsNorm { eps: FBits::new(0.0) }, &[&x, &w]).unwrap();
+        let ms = (1. + 4. + 9. + 16.) / 4.0f32;
+        let expect = x.map(|v| v / ms.sqrt());
+        assert!(out.allclose(&expect, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        // RoPE is a rotation: per-pair L2 norm is preserved when cos²+sin²=1.
+        let theta = 0.3f32;
+        let x = nd(vec![1, 4], vec![1., 2., 3., 4.]);
+        let cos = NdArray::full(vec![1, 4], theta.cos());
+        let sin = NdArray::full(vec![1, 4], theta.sin());
+        let out = eval_op(&Op::Rope, &[&x, &cos, &sin]).unwrap();
+        let n_in: f32 = x.data().iter().map(|v| v * v).sum();
+        let n_out: f32 = out.data().iter().map(|v| v * v).sum();
+        assert!((n_in - n_out).abs() < 1e-4, "{n_in} vs {n_out}");
+    }
+
+    #[test]
+    fn reduce_scatter_is_slice_of_sum() {
+        let a = nd(vec![4], vec![1., 2., 3., 4.]);
+        let b = nd(vec![4], vec![10., 20., 30., 40.]);
+        let out = eval_op(&Op::ReduceScatter { dim: 0, ranks: 2, index: 1 }, &[&a, &b]).unwrap();
+        assert_eq!(out.data(), &[33., 44.]);
+    }
+
+    #[test]
+    fn mse_loss_scalar() {
+        let a = nd(vec![2], vec![1., 3.]);
+        let b = nd(vec![2], vec![0., 0.]);
+        let out = eval_op(&Op::MseLoss, &[&a, &b]).unwrap();
+        assert_eq!(out.shape(), &[] as &[i64]);
+        assert!((out.data()[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn graph_eval_end_to_end() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 2]);
+        let b = g.input("b", vec![2, 2]);
+        let c = g.matmul("c", a, b);
+        let d = g.scale("d", c, 2.0);
+        g.mark_output(d);
+        let mut env = FxHashMap::default();
+        env.insert(a, nd(vec![2, 2], vec![1., 2., 3., 4.]));
+        env.insert(b, nd(vec![2, 2], vec![1., 0., 0., 1.]));
+        let vals = eval_graph(&g, &env).unwrap();
+        assert_eq!(vals[d as usize].data(), &[2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn expr_eval_with_env() {
+        let e = Expr::op(
+            Op::Concat { dim: 0 },
+            vec![Expr::leaf(TensorRef::d(0)), Expr::leaf(TensorRef::d(1))],
+        );
+        let mut env = Env::default();
+        env.insert(TensorRef::d(0), nd(vec![1], vec![1.]));
+        env.insert(TensorRef::d(1), nd(vec![1], vec![2.]));
+        assert_eq!(eval_expr(&e, &env).unwrap().data(), &[1., 2.]);
+        // unbound leaf errors
+        let bad = Expr::leaf(TensorRef::d(7));
+        assert!(eval_expr(&bad, &env).is_err());
+    }
+}

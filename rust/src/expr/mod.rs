@@ -1,0 +1,154 @@
+//! The expression language ρ (paper §3.2).
+//!
+//! A relation maps a tensor `t ∈ T(G_s)` to expressions over tensors of
+//! `G_d`. Expressions are op trees whose leaves are tensor references; an
+//! expression is *clean* when every operator in it merely rearranges
+//! elements or combines distributed partial results (`Op::is_clean`).
+
+pub mod eval;
+pub mod parse;
+pub mod print;
+
+use crate::ir::{Op, TensorId};
+
+/// Which graph a leaf tensor lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Side {
+    /// Sequential specification `G_s`.
+    S,
+    /// Distributed implementation `G_d`.
+    D,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorRef {
+    pub side: Side,
+    pub id: TensorId,
+}
+
+impl TensorRef {
+    pub fn s(id: TensorId) -> Self {
+        TensorRef { side: Side::S, id }
+    }
+    pub fn d(id: TensorId) -> Self {
+        TensorRef { side: Side::D, id }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    Leaf(TensorRef),
+    Op(Op, Vec<Expr>),
+}
+
+impl Expr {
+    pub fn leaf(t: TensorRef) -> Expr {
+        Expr::Leaf(t)
+    }
+
+    pub fn op(op: Op, args: Vec<Expr>) -> Expr {
+        Expr::Op(op, args)
+    }
+
+    /// Number of operator applications (the paper's nested-expression count,
+    /// used to pick the simplest self-provable representative, §4.3.2).
+    pub fn size(&self) -> usize {
+        match self {
+            Expr::Leaf(_) => 0,
+            Expr::Op(_, args) => 1 + args.iter().map(Expr::size).sum::<usize>(),
+        }
+    }
+
+    /// Is every operator in this expression clean (§3.2)?
+    pub fn is_clean(&self) -> bool {
+        match self {
+            Expr::Leaf(_) => true,
+            Expr::Op(op, args) => op.is_clean() && args.iter().all(Expr::is_clean),
+        }
+    }
+
+    /// Distinct leaf tensors, sorted — the expression's "leaf signature".
+    pub fn leaves(&self) -> Vec<TensorRef> {
+        let mut out = Vec::new();
+        self.collect_leaves(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_leaves(&self, out: &mut Vec<TensorRef>) {
+        match self {
+            Expr::Leaf(t) => out.push(*t),
+            Expr::Op(_, args) => {
+                for a in args {
+                    a.collect_leaves(out);
+                }
+            }
+        }
+    }
+
+    /// Do all leaves satisfy `pred`?
+    pub fn leaves_all(&self, pred: &impl Fn(TensorRef) -> bool) -> bool {
+        match self {
+            Expr::Leaf(t) => pred(*t),
+            Expr::Op(_, args) => args.iter().all(|a| a.leaves_all(pred)),
+        }
+    }
+
+    /// Substitute leaves via `f` (used to splice relations together).
+    pub fn substitute(&self, f: &impl Fn(TensorRef) -> Option<Expr>) -> Expr {
+        match self {
+            Expr::Leaf(t) => f(*t).unwrap_or_else(|| self.clone()),
+            Expr::Op(op, args) => {
+                Expr::Op(op.clone(), args.iter().map(|a| a.substitute(f)).collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Expr {
+        // sum(C1, C2) with C1=matmul(A1,B1)
+        Expr::op(
+            Op::SumN,
+            vec![
+                Expr::op(Op::MatMul, vec![Expr::leaf(TensorRef::d(0)), Expr::leaf(TensorRef::d(1))]),
+                Expr::leaf(TensorRef::d(2)),
+            ],
+        )
+    }
+
+    #[test]
+    fn size_counts_ops() {
+        assert_eq!(sample().size(), 2);
+        assert_eq!(Expr::leaf(TensorRef::d(0)).size(), 0);
+    }
+
+    #[test]
+    fn clean_requires_all_ops_clean() {
+        assert!(!sample().is_clean()); // contains matmul
+        let clean = Expr::op(
+            Op::Concat { dim: 0 },
+            vec![Expr::leaf(TensorRef::d(0)), Expr::leaf(TensorRef::d(1))],
+        );
+        assert!(clean.is_clean());
+    }
+
+    #[test]
+    fn leaves_sorted_dedup() {
+        let e = Expr::op(Op::Add, vec![Expr::leaf(TensorRef::d(2)), Expr::leaf(TensorRef::d(2))]);
+        assert_eq!(e.leaves(), vec![TensorRef::d(2)]);
+    }
+
+    #[test]
+    fn substitute_splices() {
+        let e = Expr::op(Op::Neg, vec![Expr::leaf(TensorRef::s(5))]);
+        let out = e.substitute(&|t| {
+            (t == TensorRef::s(5)).then(|| Expr::leaf(TensorRef::d(9)))
+        });
+        assert_eq!(out, Expr::op(Op::Neg, vec![Expr::leaf(TensorRef::d(9))]));
+    }
+}

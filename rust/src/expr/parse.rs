@@ -1,0 +1,357 @@
+//! Textual expression parser — the format users write clean input relations
+//! `R_i` in (and the inverse of `expr::print::render`).
+//!
+//! Grammar:
+//! ```text
+//! expr  := IDENT | IDENT '(' args? (';' attrs)? ')'
+//! args  := expr (',' expr)*
+//! attrs := IDENT '=' value (',' IDENT '=' value)*
+//! value := INT | FLOAT | BOOL | '[' INT (',' INT)* ']'
+//! ```
+
+use super::{Expr, TensorRef};
+use crate::ir::{FBits, Op};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<i64>),
+}
+
+impl Value {
+    fn int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected int attr, got {:?}", self),
+        }
+    }
+    fn float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float attr"),
+        }
+    }
+    fn usize_(&self) -> Result<usize> {
+        Ok(self.int()? as usize)
+    }
+    fn list(&self) -> Result<&[i64]> {
+        match self {
+            Value::List(l) => Ok(l),
+            _ => bail!("expected list attr"),
+        }
+    }
+    fn bool_(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool attr"),
+        }
+    }
+}
+
+/// Parse an expression; `resolve` maps tensor names to graph tensors.
+pub fn parse(text: &str, resolve: &dyn Fn(&str) -> Option<TensorRef>) -> Result<Expr> {
+    let mut p = P { b: text.as_bytes(), i: 0, resolve };
+    let e = p.expr()?;
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing characters at byte {} of '{}'", p.i, text);
+    }
+    Ok(e)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+    resolve: &'a dyn Fn(&str) -> Option<TensorRef>,
+}
+
+impl P<'_> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        self.ws();
+        let start = self.i;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || matches!(c, b'_' | b'.' | b':' | b'/')) {
+            self.i += 1;
+        }
+        if self.i == start {
+            bail!("expected identifier at byte {}", start);
+        }
+        Ok(std::str::from_utf8(&self.b[start..self.i]).unwrap().to_string())
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let name = self.ident()?;
+        self.ws();
+        if self.peek() != Some(b'(') {
+            // bare tensor name
+            let t = (self.resolve)(&name).ok_or_else(|| anyhow!("unknown tensor '{name}'"))?;
+            return Ok(Expr::Leaf(t));
+        }
+        self.i += 1; // '('
+        let mut args = Vec::new();
+        let mut attrs: BTreeMap<String, Value> = BTreeMap::new();
+        self.ws();
+        if self.peek() != Some(b')') {
+            loop {
+                self.ws();
+                if self.peek() == Some(b';') {
+                    break;
+                }
+                args.push(self.expr()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b')') | Some(b';') => break,
+                    other => bail!("expected ',' ';' or ')', got {:?}", other.map(|c| c as char)),
+                }
+            }
+            if self.peek() == Some(b';') {
+                self.i += 1;
+                loop {
+                    let key = self.ident()?;
+                    self.ws();
+                    if self.peek() != Some(b'=') {
+                        bail!("expected '=' after attr '{key}'");
+                    }
+                    self.i += 1;
+                    attrs.insert(key, self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b')') => break,
+                        other => bail!("expected ',' or ')', got {:?}", other.map(|c| c as char)),
+                    }
+                }
+            }
+        }
+        if self.peek() != Some(b')') {
+            bail!("expected ')' at byte {}", self.i);
+        }
+        self.i += 1;
+        build(&name, args, &attrs)
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.ws();
+        match self.peek() {
+            Some(b'[') => {
+                self.i += 1;
+                let mut items = Vec::new();
+                loop {
+                    self.ws();
+                    if self.peek() == Some(b']') {
+                        self.i += 1;
+                        return Ok(Value::List(items));
+                    }
+                    items.push(self.number()?.int()?);
+                    self.ws();
+                    if self.peek() == Some(b',') {
+                        self.i += 1;
+                    }
+                }
+            }
+            Some(b't') | Some(b'f') => {
+                let w = self.ident()?;
+                match w.as_str() {
+                    "true" => Ok(Value::Bool(true)),
+                    "false" => Ok(Value::Bool(false)),
+                    other => bail!("bad value '{other}'"),
+                }
+            }
+            _ => self.number(),
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        self.ws();
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                self.i += 1;
+            } else if matches!(c, b'.' | b'e' | b'E' | b'-' | b'+') && self.i > start {
+                is_float = is_float || c == b'.' || c == b'e' || c == b'E';
+                if matches!(c, b'-' | b'+') && !matches!(self.b.get(self.i - 1), Some(b'e' | b'E')) {
+                    break;
+                }
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if is_float {
+            Ok(Value::Float(text.parse()?))
+        } else {
+            Ok(Value::Int(text.parse()?))
+        }
+    }
+}
+
+fn build(name: &str, args: Vec<Expr>, attrs: &BTreeMap<String, Value>) -> Result<Expr> {
+    let need = |k: &str| attrs.get(k).ok_or_else(|| anyhow!("op '{name}' needs attr '{k}'"));
+    let op = match name {
+        "identity" => Op::Identity,
+        "slice" => Op::Slice {
+            dim: need("dim")?.usize_()?,
+            start: need("start")?.int()?.into(),
+            end: need("end")?.int()?.into(),
+        },
+        "concat" => Op::Concat { dim: need("dim")?.usize_()? },
+        "transpose" => Op::Transpose {
+            perm: need("perm")?.list()?.iter().map(|&i| i as usize).collect(),
+        },
+        "reshape" => Op::Reshape {
+            shape: need("shape")?.list()?.iter().map(|&i| i.into()).collect(),
+        },
+        "pad" => Op::Pad {
+            dim: need("dim")?.usize_()?,
+            before: need("before")?.int()?.into(),
+            after: need("after")?.int()?.into(),
+            value: FBits::new(attrs.get("value").map(|v| v.float()).transpose()?.unwrap_or(0.0)),
+        },
+        "sum" => Op::SumN,
+        "add" => Op::Add,
+        "sub" => Op::Sub,
+        "mul" => Op::Mul,
+        "div" => Op::Div,
+        "maximum" => Op::Maximum,
+        "neg" => Op::Neg,
+        "exp" => Op::Exp,
+        "log" => Op::Log,
+        "sqrt" => Op::Sqrt,
+        "rsqrt" => Op::Rsqrt,
+        "square" => Op::Square,
+        "tanh" => Op::Tanh,
+        "gelu" => Op::Gelu,
+        "silu" => Op::Silu,
+        "sigmoid" => Op::Sigmoid,
+        "relu" => Op::Relu,
+        "scale" => Op::Scale { c: FBits::new(need("c")?.float()?) },
+        "add_scalar" => Op::AddScalar { c: FBits::new(need("c")?.float()?) },
+        "matmul" => Op::MatMul,
+        "reduce_sum" => Op::ReduceSum {
+            dim: need("dim")?.usize_()?,
+            keepdim: attrs.get("keepdim").map(|v| v.bool_()).transpose()?.unwrap_or(false),
+        },
+        "reduce_mean" => Op::ReduceMean {
+            dim: need("dim")?.usize_()?,
+            keepdim: attrs.get("keepdim").map(|v| v.bool_()).transpose()?.unwrap_or(false),
+        },
+        "reduce_max" => Op::ReduceMax {
+            dim: need("dim")?.usize_()?,
+            keepdim: attrs.get("keepdim").map(|v| v.bool_()).transpose()?.unwrap_or(false),
+        },
+        "softmax" => Op::Softmax { dim: need("dim")?.usize_()? },
+        "rms_norm" => Op::RmsNorm { eps: FBits::new(need("eps")?.float()?) },
+        "layer_norm" => Op::LayerNorm { eps: FBits::new(need("eps")?.float()?) },
+        "rope" => Op::Rope,
+        "embedding" => Op::Embedding,
+        "mse_loss" => Op::MseLoss,
+        "all_reduce" => Op::AllReduce { ranks: need("ranks")?.usize_()? },
+        "all_gather" => Op::AllGather {
+            dim: need("dim")?.usize_()?,
+            ranks: need("ranks")?.usize_()?,
+        },
+        "reduce_scatter" => Op::ReduceScatter {
+            dim: need("dim")?.usize_()?,
+            ranks: need("ranks")?.usize_()?,
+            index: need("index")?.usize_()?,
+        },
+        custom => Op::Custom { name: custom.to_string() },
+    };
+    Ok(Expr::Op(op, args))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::print::{render, Namer};
+    use crate::ir::Graph;
+
+    fn graphs() -> (Graph, Graph) {
+        let mut gs = Graph::new("gs");
+        gs.input("A", vec![4, 4]);
+        let mut gd = Graph::new("gd");
+        gd.input("A_1", vec![4, 2]);
+        gd.input("A_2", vec![4, 2]);
+        (gs, gd)
+    }
+
+    #[test]
+    fn parse_concat() {
+        let (gs, gd) = graphs();
+        let resolve = |n: &str| gd.tensor_by_name(n).map(TensorRef::d);
+        let e = parse("concat(A_1, A_2; dim=1)", &resolve).unwrap();
+        assert!(e.is_clean());
+        let namer = Namer { gs: &gs, gd: &gd };
+        assert_eq!(render(&e, &namer), "concat(A_1, A_2; dim=1)");
+    }
+
+    #[test]
+    fn parse_roundtrips_various() {
+        let (gs, gd) = graphs();
+        let resolve = |n: &str| gd.tensor_by_name(n).map(TensorRef::d);
+        let namer = Namer { gs: &gs, gd: &gd };
+        for src in [
+            "sum(A_1, A_2)",
+            "slice(A_1; dim=0, start=1, end=3)",
+            "transpose(A_1; perm=[1,0])",
+            "matmul(A_1, A_2)",
+            "scale(A_1; c=0.5)",
+            "reduce_sum(A_1; dim=0, keepdim=true)",
+            "all_gather(A_1, A_2; dim=1, ranks=2)",
+        ] {
+            let e = parse(src, &resolve).unwrap();
+            assert_eq!(render(&e, &namer), src, "roundtrip {src}");
+        }
+    }
+
+    #[test]
+    fn bare_tensor_leaf() {
+        let (_, gd) = graphs();
+        let resolve = |n: &str| gd.tensor_by_name(n).map(TensorRef::d);
+        let e = parse("A_1", &resolve).unwrap();
+        assert_eq!(e, Expr::Leaf(TensorRef::d(0)));
+    }
+
+    #[test]
+    fn unknown_tensor_errors() {
+        let (_, gd) = graphs();
+        let resolve = |n: &str| gd.tensor_by_name(n).map(TensorRef::d);
+        assert!(parse("nope", &resolve).is_err());
+        assert!(parse("concat(A_1; dim=9999999999999999999999)", &resolve).is_err());
+        assert!(parse("slice(A_1; dim=0)", &resolve).is_err()); // missing attrs
+    }
+
+    #[test]
+    fn custom_op_parses() {
+        let (_, gd) = graphs();
+        let resolve = |n: &str| gd.tensor_by_name(n).map(TensorRef::d);
+        let e = parse("fused_rms(A_1, A_2)", &resolve).unwrap();
+        match e {
+            Expr::Op(Op::Custom { ref name }, ref args) => {
+                assert_eq!(name, "fused_rms");
+                assert_eq!(args.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Human-readable expression rendering, used in reports, error localization
+//! output, and the textual relation format (`expr::parse` is the inverse).
+
+use super::{Expr, Side, TensorRef};
+use crate::ir::{Graph, Op};
+use std::fmt::Write;
+
+/// Resolve leaf tensor names against the two graphs.
+pub struct Namer<'a> {
+    pub gs: &'a Graph,
+    pub gd: &'a Graph,
+}
+
+impl Namer<'_> {
+    pub fn name(&self, t: TensorRef) -> String {
+        match t.side {
+            Side::S => self.gs.tensor(t.id).name.clone(),
+            Side::D => self.gd.tensor(t.id).name.clone(),
+        }
+    }
+}
+
+/// Render `e` as e.g. `sum(C_1, C_2)` / `slice(X; dim=0, start=0, end=4)`.
+pub fn render(e: &Expr, namer: &Namer) -> String {
+    let mut s = String::new();
+    go(e, namer, &mut s);
+    s
+}
+
+fn go(e: &Expr, namer: &Namer, out: &mut String) {
+    match e {
+        Expr::Leaf(t) => out.push_str(&namer.name(*t)),
+        Expr::Op(op, args) => {
+            out.push_str(head(op));
+            out.push('(');
+            for (i, a) in args.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                go(a, namer, out);
+            }
+            let attrs = attr_string(op);
+            if !attrs.is_empty() {
+                out.push_str("; ");
+                out.push_str(&attrs);
+            }
+            out.push(')');
+        }
+    }
+}
+
+fn head(op: &Op) -> &str {
+    match op {
+        Op::Custom { name } => name,
+        other => other.name(),
+    }
+}
+
+/// `key=value` attribute list for ops that carry attributes.
+pub fn attr_string(op: &Op) -> String {
+    let mut s = String::new();
+    let mut kv = |k: &str, v: String| {
+        if !s.is_empty() {
+            s.push_str(", ");
+        }
+        let _ = write!(s, "{k}={v}");
+    };
+    match op {
+        Op::Slice { dim, start, end } => {
+            kv("dim", dim.to_string());
+            kv("start", scalar_str(start));
+            kv("end", scalar_str(end));
+        }
+        Op::Concat { dim } | Op::Softmax { dim } => kv("dim", dim.to_string()),
+        Op::Transpose { perm } => kv(
+            "perm",
+            format!("[{}]", perm.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(",")),
+        ),
+        Op::Reshape { shape } => {
+            kv("shape", format!("[{}]", shape.iter().map(scalar_str).collect::<Vec<_>>().join(",")))
+        }
+        Op::Pad { dim, before, after, value } => {
+            kv("dim", dim.to_string());
+            kv("before", scalar_str(before));
+            kv("after", scalar_str(after));
+            kv("value", value.to_string());
+        }
+        Op::Scale { c } | Op::AddScalar { c } => kv("c", c.to_string()),
+        Op::ReduceSum { dim, keepdim }
+        | Op::ReduceMean { dim, keepdim }
+        | Op::ReduceMax { dim, keepdim } => {
+            kv("dim", dim.to_string());
+            kv("keepdim", keepdim.to_string());
+        }
+        Op::RmsNorm { eps } | Op::LayerNorm { eps } => kv("eps", eps.to_string()),
+        Op::AllReduce { ranks } => kv("ranks", ranks.to_string()),
+        Op::AllGather { dim, ranks } => {
+            kv("dim", dim.to_string());
+            kv("ranks", ranks.to_string());
+        }
+        Op::ReduceScatter { dim, ranks, index } => {
+            kv("dim", dim.to_string());
+            kv("ranks", ranks.to_string());
+            kv("index", index.to_string());
+        }
+        _ => {}
+    }
+    s
+}
+
+fn scalar_str(s: &crate::symbolic::Scalar) -> String {
+    match s.as_const() {
+        Some(k) => k.to_string(),
+        None => format!("?sym{:?}", s.0.terms),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_running_example() {
+        let mut gs = Graph::new("gs");
+        let _a = gs.input("A", vec![2, 2]);
+        let mut gd = Graph::new("gd");
+        let c1 = gd.input("C_1", vec![2, 2]);
+        let c2 = gd.input("C_2", vec![2, 2]);
+        let namer = Namer { gs: &gs, gd: &gd };
+        let e = Expr::op(
+            Op::SumN,
+            vec![Expr::leaf(TensorRef::d(c1)), Expr::leaf(TensorRef::d(c2))],
+        );
+        assert_eq!(render(&e, &namer), "sum(C_1, C_2)");
+        let e2 = Expr::op(
+            Op::Slice { dim: 0, start: 0.into(), end: 2.into() },
+            vec![Expr::leaf(TensorRef::d(c1))],
+        );
+        assert_eq!(render(&e2, &namer), "slice(C_1; dim=0, start=0, end=2)");
+    }
+}

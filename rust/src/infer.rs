@@ -1,0 +1,531 @@
+//! The iterative relation-inference algorithm — the paper's core
+//! contribution (Listings 1–3).
+//!
+//! [`check_refinement`] walks `G_s` in topological order (Listing 1). For
+//! each operator it builds a *fresh, small* e-graph seeded with the
+//! operator's expression over already-mapped inputs, saturates it against
+//! the lemma library, then iteratively unions in `G_d` definitional
+//! equalities restricted to the `T_rel` frontier (Listing 3) and extracts
+//! clean candidate mappings for the operator's output (Listing 2). A node
+//! with no clean mapping aborts with a [`RefinementError`] naming the
+//! operator — the paper's bug-localization output (§6.2).
+
+use crate::egraph::{
+    extract_clean, saturate, CleanCand, EGraph, Id, RewriteCtx, SatStats, SaturationLimits,
+};
+use crate::expr::{Side, TensorRef};
+use crate::ir::{Graph, NodeId, TensorId};
+use crate::lemmas;
+use crate::relation::Relation;
+use anyhow::Result;
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::fmt;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct InferConfig {
+    pub limits: SaturationLimits,
+    /// Max frontier-expansion iterations per operator (Listing 3 loop).
+    pub max_frontier_iters: usize,
+    /// Numerically re-check the final `R_o` on random inputs (soundness
+    /// certificate). Costs one evaluation of both graphs.
+    pub check_numeric: bool,
+}
+
+impl Default for InferConfig {
+    fn default() -> Self {
+        InferConfig {
+            limits: SaturationLimits { max_iters: 8, max_nodes: 60_000 },
+            max_frontier_iters: 12,
+            check_numeric: false,
+        }
+    }
+}
+
+/// Refinement failure: the operator whose outputs could not be mapped,
+/// plus the context a user needs to localize the bug (§6.2).
+#[derive(Debug, Clone)]
+pub struct RefinementError {
+    pub node: NodeId,
+    pub node_name: String,
+    pub op: String,
+    /// For each input: (tensor name, #mappings available, sample mapping).
+    pub inputs: Vec<(String, usize, Option<String>)>,
+    pub frontier_size: usize,
+    pub explored_gd_nodes: usize,
+}
+
+impl fmt::Display for RefinementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "refinement FAILED at operator '{}' ({}): no clean mapping for its output",
+            self.node_name, self.op
+        )?;
+        writeln!(f, "  input relations at this operator:")?;
+        for (name, n, sample) in &self.inputs {
+            match sample {
+                Some(s) => writeln!(f, "    {name}: {n} mapping(s), e.g. {s}")?,
+                None => writeln!(f, "    {name}: NO mapping — trace the producing operator")?,
+            }
+        }
+        write!(
+            f,
+            "  explored {} G_d operators over a frontier of {} related tensors;\n  \
+             inspect this operator and the G_d subgraph that should compute it",
+            self.explored_gd_nodes, self.frontier_size
+        )
+    }
+}
+
+impl std::error::Error for RefinementError {}
+
+#[derive(Debug, Clone, Default)]
+pub struct NodeTiming {
+    pub node_name: String,
+    pub micros: u64,
+    pub egraph_nodes: usize,
+    pub explored_gd: usize,
+}
+
+/// Successful inference output.
+#[derive(Debug)]
+pub struct InferOutput {
+    /// Complete clean output relation `R_o` (restricted to `O(G_s)`; leaves
+    /// restricted to `O(G_d)` where possible — see `relation_full`).
+    pub relation: Relation,
+    /// Mappings for every `G_s` tensor (debugging, bug-5-style inspection).
+    pub relation_full: Relation,
+    /// Aggregated lemma-application counts (Figure 7 raw data).
+    pub stats: SatStats,
+    pub per_node: Vec<NodeTiming>,
+}
+
+/// Listing 1: compute the output relation, iterating operators of `G_s`.
+pub fn check_refinement(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+) -> Result<InferOutput, RefinementError> {
+    let rules = lemmas::standard_rewrites();
+    let ctx = RewriteCtx::default();
+    let mut r = ri.clone();
+    let mut stats = SatStats { saturated: true, ..Default::default() };
+    let mut per_node = Vec::with_capacity(gs.num_nodes());
+
+    for nid in gs.topo_order() {
+        let t0 = Instant::now();
+        let node = gs.node(nid);
+        let out =
+            compute_node_out_rel(nid, gs, gd, &r, &rules, &ctx, cfg, &mut stats);
+        match out {
+            Ok((cands, timing)) => {
+                per_node.push(NodeTiming {
+                    node_name: node.name.clone(),
+                    micros: t0.elapsed().as_micros() as u64,
+                    ..timing
+                });
+                r.insert_all(node.output, cands);
+            }
+            Err(mut e) => {
+                e.node = nid;
+                return Err(e);
+            }
+        }
+    }
+
+    // Listing 1 line 9: restrict to O(G_s) with leaves in O(G_d). An output
+    // with no such expression means G_d's outputs cannot reconstruct it —
+    // an incomplete R_o, i.e. a bug (§3.1), reported against the producing
+    // operator.
+    let out_ok = |t: TensorRef| t.side == Side::D && gd.is_output(t.id);
+    let ro = r.restrict(&gs.outputs, out_ok);
+    for &o in &gs.outputs {
+        if !ro.contains(o) {
+            let node = gs
+                .producer(o)
+                .map(|n| n.name.clone())
+                .unwrap_or_else(|| gs.tensor(o).name.clone());
+            let nid = gs
+                .topo_order()
+                .find(|&n| gs.node(n).output == o)
+                .unwrap_or(0);
+            return Err(RefinementError {
+                node: nid,
+                node_name: node,
+                op: "output filter".into(),
+                inputs: vec![(
+                    gs.tensor(o).name.clone(),
+                    r.get(o).len(),
+                    r.get(o).first().map(|c| {
+                        crate::expr::print::render(
+                            &c.expr,
+                            &crate::expr::print::Namer { gs, gd },
+                        )
+                    }),
+                )],
+                frontier_size: 0,
+                explored_gd_nodes: 0,
+            });
+        }
+    }
+    Ok(InferOutput { relation: ro, relation_full: r, stats, per_node })
+}
+
+/// Listing 2 + Listing 3: clean output relation for one operator.
+#[allow(clippy::too_many_arguments)]
+fn compute_node_out_rel(
+    nid: NodeId,
+    gs: &Graph,
+    gd: &Graph,
+    r: &Relation,
+    rules: &[crate::egraph::Rewrite],
+    ctx: &RewriteCtx,
+    cfg: &InferConfig,
+    stats: &mut SatStats,
+) -> Result<(Vec<CleanCand>, NodeTiming), RefinementError> {
+    let node = gs.node(nid);
+    let mk_err = |frontier: usize, explored: usize| RefinementError {
+        node: nid,
+        node_name: node.name.clone(),
+        op: format!("{}", node.op),
+        inputs: node
+            .inputs
+            .iter()
+            .map(|&t| {
+                let cands = r.get(t);
+                let sample = cands.first().map(|c| {
+                    crate::expr::print::render(
+                        &c.expr,
+                        &crate::expr::print::Namer { gs, gd },
+                    )
+                });
+                (gs.tensor(t).name.clone(), cands.len(), sample)
+            })
+            .collect(),
+        frontier_size: frontier,
+        explored_gd_nodes: explored,
+    };
+
+    // -- Step 1 (Listing 2): seed the e-graph with v(I(v)) and the input
+    //    relation. Leaf classes for G_s inputs are unioned with each of
+    //    their G_d mapping expressions; the e-graph's congruence does the
+    //    all-combinations substitution of rewrite_t_to_expr for us.
+    let mut eg = EGraph::new();
+    let gd_leaf_shape = |t: TensorRef| -> Option<Vec<i64>> {
+        (t.side == Side::D).then(|| gd.shape(t.id).to_vec())
+    };
+    let mut t_rel: FxHashSet<TensorId> = FxHashSet::default();
+    let mut input_classes = Vec::with_capacity(node.inputs.len());
+    for &t in &node.inputs {
+        let leaf = eg.add_leaf(TensorRef::s(t), gs.shape(t).to_vec());
+        let cands = r.get(t);
+        if cands.is_empty() {
+            return Err(mk_err(0, 0));
+        }
+        for cand in cands {
+            let Ok(root) = eg.add_expr(&cand.expr, &gd_leaf_shape) else { continue };
+            let _ = eg.union(leaf, root);
+            for &l in &cand.leaves {
+                t_rel.insert(l.id);
+            }
+        }
+        input_classes.push(leaf);
+    }
+    let target = match eg.add_op(node.op.clone(), input_classes) {
+        Ok(id) => id,
+        Err(_) => return Err(mk_err(t_rel.len(), 0)),
+    };
+    eg.rebuild();
+
+    // -- Step 2: saturate with lemmas.
+    let s = saturate(&mut eg, rules, ctx, cfg.limits);
+    stats.merge(&s);
+
+    // -- Step 3 (Listing 3): frontier exploration of G_d. Add definitional
+    //    equalities t_d ≡ op(inputs) for G_d nodes all of whose inputs are
+    //    in T_rel; saturate; extract; grow T_rel from clean candidates.
+    let mut explored: FxHashSet<NodeId> = FxHashSet::default();
+    let mut best: Vec<CleanCand> = Vec::new();
+    for _iter in 0..cfg.max_frontier_iters {
+        let mut added = false;
+        for dnid in gd.topo_order() {
+            if explored.contains(&dnid) {
+                continue;
+            }
+            let dnode = gd.node(dnid);
+            if !dnode.inputs.iter().all(|t| t_rel.contains(t)) {
+                continue;
+            }
+            explored.insert(dnid);
+            added = true;
+            let children: Vec<Id> = dnode
+                .inputs
+                .iter()
+                .map(|&t| eg.add_leaf(TensorRef::d(t), gd.shape(t).to_vec()))
+                .collect();
+            let out_leaf = eg.add_leaf(TensorRef::d(dnode.output), gd.shape(dnode.output).to_vec());
+            if let Ok(def) = eg.add_op(dnode.op.clone(), children) {
+                let _ = eg.union(out_leaf, def);
+            }
+            // Forward closure: an explored node's output is related to v's
+            // inputs, so its consumers satisfy observation (i)/(ii) of
+            // §4.3.1. (Slightly broader than Listing 3's clean-expression
+            // growth — same exclusion of unrelated tensors, see DESIGN.md.)
+            t_rel.insert(dnode.output);
+        }
+        if added {
+            eg.rebuild();
+            let s = saturate(&mut eg, rules, ctx, cfg.limits);
+            stats.merge(&s);
+        }
+
+        // extract clean candidates for the target class over D-side leaves
+        let cands = extract_clean(&eg, &|t| t.side == Side::D);
+        let mut grew = false;
+        if let Some(target_cands) = cands.get(&eg.find(target)) {
+            best = target_cands.clone();
+            for c in target_cands {
+                for &l in &c.leaves {
+                    grew |= t_rel.insert(l.id);
+                }
+            }
+        }
+        if !added && !grew {
+            break;
+        }
+    }
+
+    let timing =
+        NodeTiming { node_name: String::new(), micros: 0, egraph_nodes: eg.n_nodes, explored_gd: explored.len() };
+    if best.is_empty() {
+        return Err(mk_err(t_rel.len(), explored.len()));
+    }
+    Ok((best, timing))
+}
+
+/// Numeric soundness certificate: draw random `G_d` inputs, derive `G_s`
+/// inputs via `R_i`, run both graphs, and check every `R_o` mapping
+/// reconstructs the `G_s` output (§3.3 "acts as a certificate").
+pub fn verify_numeric(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    ro: &Relation,
+    seed: u64,
+) -> Result<()> {
+    use crate::expr::eval::{eval_expr, eval_graph, random_inputs, Env};
+    let gd_inputs = random_inputs(gd, seed);
+    // env over G_d leaves for evaluating relation expressions
+    let mut env: Env = Env::default();
+    for (&t, v) in &gd_inputs {
+        env.insert(TensorRef::d(t), v.clone());
+    }
+    // derive G_s inputs from R_i
+    let mut gs_inputs: FxHashMap<TensorId, crate::util::ndarray::NdArray> = FxHashMap::default();
+    for &i in &gs.inputs {
+        let cands = ri.get(i);
+        let cand = cands
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("R_i misses input '{}'", gs.tensor(i).name))?;
+        gs_inputs.insert(i, eval_expr(&cand.expr, &env)?);
+        // all R_i mappings for the same input must agree (replication check)
+        for other in &cands[1..] {
+            let v = eval_expr(&other.expr, &env)?;
+            anyhow::ensure!(
+                v.allclose(&gs_inputs[&i], 1e-4, 1e-5),
+                "inconsistent R_i mappings for '{}'",
+                gs.tensor(i).name
+            );
+        }
+    }
+    let gs_vals = eval_graph(gs, &gs_inputs)?;
+    let gd_vals = eval_graph(gd, &gd_inputs)?;
+    let mut full_env: Env = Env::default();
+    for (t, v) in gd_vals.iter().enumerate() {
+        full_env.insert(TensorRef::d(t as TensorId), v.clone());
+    }
+    for &o in &gs.outputs {
+        let cands = ro.get(o);
+        anyhow::ensure!(!cands.is_empty(), "R_o misses output '{}'", gs.tensor(o).name);
+        for cand in cands {
+            let rebuilt = eval_expr(&cand.expr, &full_env)?;
+            anyhow::ensure!(
+                rebuilt.allclose(&gs_vals[o as usize], 2e-3, 1e-4),
+                "R_o mapping for '{}' does not reconstruct the output (|Δ|={})",
+                gs.tensor(o).name,
+                rebuilt.max_abs_diff(&gs_vals[o as usize])
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+    use crate::util::json::Json;
+
+    /// Figure 1/2 running example: G_s = matsub(matmul(A,B), E);
+    /// G_d = TP over the inner dim with reduce-scatter + all-gather.
+    fn running_example() -> (Graph, Graph, Relation) {
+        let mut gs = Graph::new("fig1_gs");
+        let a = gs.input("A", vec![4, 6]);
+        let b = gs.input("B", vec![6, 4]);
+        let e = gs.input("E", vec![4, 4]);
+        let c = gs.matmul("C", a, b);
+        let f = gs.sub2("F", c, e);
+        gs.mark_output(f);
+
+        let mut gd = Graph::new("fig1_gd");
+        let a1 = gd.input("A_1", vec![4, 3]);
+        let a2 = gd.input("A_2", vec![4, 3]);
+        let b1 = gd.input("B_1", vec![3, 4]);
+        let b2 = gd.input("B_2", vec![3, 4]);
+        let e1 = gd.input("E_1", vec![2, 4]);
+        let e2 = gd.input("E_2", vec![2, 4]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        let c2 = gd.matmul("C_2", a2, b2);
+        // reduce-scatter row chunks of the partial sums
+        let d1 = gd.reduce_scatter("D_1", vec![c1, c2], 0, 0);
+        let d2 = gd.reduce_scatter("D_2", vec![c1, c2], 0, 1);
+        let f1 = gd.sub2("F_1", d1, e1);
+        let f2 = gd.sub2("F_2", d2, e2);
+        let f = gd.all_gather("F_full", vec![f1, f2], 0);
+        gd.mark_output(f);
+
+        let ri = Relation::from_json(
+            &Json::parse(
+                r#"{
+                "A": ["concat(A_1, A_2; dim=1)"],
+                "B": ["concat(B_1, B_2; dim=0)"],
+                "E": ["concat(E_1, E_2; dim=0)"]
+            }"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        (gs, gd, ri)
+    }
+
+    #[test]
+    fn running_example_refines() {
+        let (gs, gd, ri) = running_example();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        let f = gs.tensor_by_name("F").unwrap();
+        assert!(out.relation.contains(f), "F must be mapped");
+        // the O(G_d)-only mapping should be the gathered output itself
+        let namer = crate::expr::print::Namer { gs: &gs, gd: &gd };
+        let rendered: Vec<String> = out
+            .relation
+            .get(f)
+            .iter()
+            .map(|c| crate::expr::print::render(&c.expr, &namer))
+            .collect();
+        assert!(
+            rendered.iter().any(|s| s.contains("F_full")),
+            "expected mapping via F_full, got {rendered:?}"
+        );
+        // intermediate C maps both as a shard-sum and via reduce-scatter
+        let c = gs.tensor_by_name("C").unwrap();
+        assert!(out.relation_full.contains(c));
+        // numeric certificate
+        verify_numeric(&gs, &gd, &ri, &out.relation, 42).unwrap();
+    }
+
+    #[test]
+    fn missing_computation_is_detected() {
+        // G_d that computes only the diagonal blocks (bug 4 flavor): the
+        // matmul output cannot be reconstructed.
+        let mut gs = Graph::new("gs");
+        let a = gs.input("A", vec![4, 6]);
+        let b = gs.input("B", vec![6, 4]);
+        let c = gs.matmul("C", a, b);
+        gs.mark_output(c);
+
+        let mut gd = Graph::new("gd");
+        let a1 = gd.input("A_1", vec![4, 3]);
+        let a2 = gd.input("A_2", vec![4, 3]);
+        let b1 = gd.input("B_1", vec![3, 4]);
+        let _b2 = gd.input("B_2", vec![3, 4]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        // BUG: second partial product never computed; C_2 reuses C_1's B
+        let c2 = gd.matmul("C_2", a2, b1);
+        let f = gd.all_reduce("C_sum", vec![c1, c2]);
+        gd.mark_output(f);
+
+        let ri = Relation::from_json(
+            &Json::parse(
+                r#"{"A": ["concat(A_1, A_2; dim=1)"], "B": ["concat(B_1, B_2; dim=0)"]}"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let err = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap_err();
+        assert_eq!(err.node_name, "C", "error localizes the matmul");
+        let msg = format!("{err}");
+        assert!(msg.contains("refinement FAILED"), "{msg}");
+    }
+
+    #[test]
+    fn replicated_computation_maps_directly() {
+        // G_d replicates the whole computation on 2 ranks; outputs map as
+        // plain leaves.
+        let mut gs = Graph::new("gs");
+        let x = gs.input("X", vec![4, 4]);
+        let y = gs.op("Y", Op::Gelu, vec![x]);
+        gs.mark_output(y);
+
+        let mut gd = Graph::new("gd");
+        let x0 = gd.input("X_0", vec![4, 4]);
+        let y0 = gd.op("Y_0", Op::Gelu, vec![x0]);
+        gd.mark_output(y0);
+
+        let ri = Relation::from_json(
+            &Json::parse(r#"{"X": ["X_0"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap();
+        let y_id = gs.tensor_by_name("Y").unwrap();
+        assert_eq!(out.relation.get(y_id)[0].cost, 0, "direct leaf mapping");
+        verify_numeric(&gs, &gd, &ri, &out.relation, 7).unwrap();
+    }
+
+    #[test]
+    fn frontier_excludes_unrelated_tensors() {
+        // E_i feed a side computation unrelated to the matmul being
+        // processed; Listing 3's frontier must not pull them in.
+        let (gs, gd, ri) = running_example();
+        let mut stats = SatStats { saturated: true, ..Default::default() };
+        let rules = lemmas::standard_rewrites();
+        let ctx = RewriteCtx::default();
+        let cfg = InferConfig::default();
+        // node 0 in gs is the matmul
+        let (cands, timing) =
+            compute_node_out_rel(0, &gs, &gd, &ri, &rules, &ctx, &cfg, &mut stats).unwrap();
+        assert!(!cands.is_empty());
+        // explored G_d nodes: C_1, C_2, D_1, D_2 — but not F_1/F_2 (need E)
+        assert!(
+            timing.explored_gd <= 4,
+            "frontier exploration leaked to unrelated nodes: {}",
+            timing.explored_gd
+        );
+    }
+
+    #[test]
+    fn per_node_timings_recorded() {
+        let (gs, gd, ri) = running_example();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap();
+        assert_eq!(out.per_node.len(), gs.num_nodes());
+        assert!(out.stats.total_applications() > 0, "lemmas were applied");
+    }
+}

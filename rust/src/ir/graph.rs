@@ -1,0 +1,371 @@
+//! Graph, node and tensor types plus a fluent builder API used by the
+//! in-repo model definitions (`crate::models`) and strategy transformers.
+
+use super::ops::Op;
+use anyhow::{ensure, Context, Result};
+use rustc_hash::FxHashMap;
+
+pub type TensorId = u32;
+pub type NodeId = u32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I64,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I64 => "i64",
+        }
+    }
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "float32" | "bf16" | "bfloat16" | "f16" => Some(DType::F32),
+            "i64" | "int64" | "i32" | "int32" => Some(DType::I64),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+    /// Node that produces this tensor; `None` for graph inputs.
+    pub producer: Option<NodeId>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+}
+
+/// A computation graph: DAG of single-output operators over tensors.
+/// Nodes are stored in insertion order, which is a topological order by
+/// construction (a node may only consume already-existing tensors).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    tensors: Vec<Tensor>,
+    nodes: Vec<Node>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+    by_name: FxHashMap<String, TensorId>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph { name: name.into(), ..Default::default() }
+    }
+
+    // ---- accessors ----
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id as usize]
+    }
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+    pub fn num_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn tensor_by_name(&self, name: &str) -> Option<TensorId> {
+        self.by_name.get(name).copied()
+    }
+    pub fn shape(&self, id: TensorId) -> &[i64] {
+        &self.tensors[id as usize].shape
+    }
+
+    /// Nodes in topological order (insertion order, verified by `validate`).
+    pub fn topo_order(&self) -> impl Iterator<Item = NodeId> + '_ {
+        0..self.nodes.len() as NodeId
+    }
+
+    pub fn is_input(&self, id: TensorId) -> bool {
+        self.tensors[id as usize].producer.is_none()
+    }
+
+    pub fn is_output(&self, id: TensorId) -> bool {
+        self.outputs.contains(&id)
+    }
+
+    // ---- construction ----
+
+    fn fresh_name(&self, base: &str) -> String {
+        if !self.by_name.contains_key(base) {
+            return base.to_string();
+        }
+        let mut i = 1;
+        loop {
+            let name = format!("{base}.{i}");
+            if !self.by_name.contains_key(&name) {
+                return name;
+            }
+            i += 1;
+        }
+    }
+
+    fn push_tensor(&mut self, name: String, shape: Vec<i64>, dtype: DType, producer: Option<NodeId>) -> TensorId {
+        let id = self.tensors.len() as TensorId;
+        self.by_name.insert(name.clone(), id);
+        self.tensors.push(Tensor { name, shape, dtype, producer });
+        id
+    }
+
+    /// Declare a graph input tensor.
+    pub fn input(&mut self, name: &str, shape: Vec<i64>) -> TensorId {
+        self.input_typed(name, shape, DType::F32)
+    }
+
+    pub fn input_typed(&mut self, name: &str, shape: Vec<i64>, dtype: DType) -> TensorId {
+        let name = self.fresh_name(name);
+        let id = self.push_tensor(name, shape, dtype, None);
+        self.inputs.push(id);
+        id
+    }
+
+    /// Add an operator node; infers the output shape. The output tensor is
+    /// named `name` (uniquified if taken).
+    pub fn add(&mut self, name: &str, op: Op, inputs: Vec<TensorId>) -> Result<TensorId> {
+        let in_shapes: Vec<&[i64]> =
+            inputs.iter().map(|&t| self.tensors[t as usize].shape.as_slice()).collect();
+        let out_shape = op
+            .infer_shape(&in_shapes, None)
+            .with_context(|| format!("adding node '{name}' ({op})"))?;
+        let dtype = match op {
+            Op::Embedding => DType::F32,
+            _ => self
+                .tensors
+                .get(*inputs.first().unwrap_or(&0) as usize)
+                .map(|t| t.dtype)
+                .unwrap_or(DType::F32),
+        };
+        let node_id = self.nodes.len() as NodeId;
+        let tname = self.fresh_name(name);
+        let out = self.push_tensor(tname, out_shape, dtype, Some(node_id));
+        self.nodes.push(Node { name: name.to_string(), op, inputs, output: out });
+        Ok(out)
+    }
+
+    /// Convenience: `add` that panics — for model builders where shapes are
+    /// static and a failure is a builder bug.
+    pub fn op(&mut self, name: &str, op: Op, inputs: Vec<TensorId>) -> TensorId {
+        self.add(name, op, inputs).unwrap()
+    }
+
+    pub fn mark_output(&mut self, id: TensorId) {
+        if !self.outputs.contains(&id) {
+            self.outputs.push(id);
+        }
+    }
+
+    // ---- fluent op helpers (keep model builders readable) ----
+
+    pub fn matmul(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.op(name, Op::MatMul, vec![a, b])
+    }
+    pub fn add2(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.op(name, Op::Add, vec![a, b])
+    }
+    pub fn sub2(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.op(name, Op::Sub, vec![a, b])
+    }
+    pub fn mul2(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.op(name, Op::Mul, vec![a, b])
+    }
+    pub fn concat(&mut self, name: &str, parts: Vec<TensorId>, dim: usize) -> TensorId {
+        self.op(name, Op::Concat { dim }, parts)
+    }
+    pub fn slice(&mut self, name: &str, x: TensorId, dim: usize, start: i64, end: i64) -> TensorId {
+        self.op(name, Op::Slice { dim, start: start.into(), end: end.into() }, vec![x])
+    }
+    pub fn transpose(&mut self, name: &str, x: TensorId, perm: Vec<usize>) -> TensorId {
+        self.op(name, Op::Transpose { perm }, vec![x])
+    }
+    pub fn reshape(&mut self, name: &str, x: TensorId, shape: Vec<i64>) -> TensorId {
+        self.op(
+            name,
+            Op::Reshape { shape: shape.into_iter().map(Into::into).collect() },
+            vec![x],
+        )
+    }
+    pub fn scale(&mut self, name: &str, x: TensorId, c: f64) -> TensorId {
+        self.op(name, Op::Scale { c: super::ops::FBits::new(c) }, vec![x])
+    }
+    pub fn softmax(&mut self, name: &str, x: TensorId, dim: usize) -> TensorId {
+        self.op(name, Op::Softmax { dim }, vec![x])
+    }
+    pub fn all_reduce(&mut self, name: &str, shards: Vec<TensorId>) -> TensorId {
+        let ranks = shards.len();
+        self.op(name, Op::AllReduce { ranks }, shards)
+    }
+    pub fn all_gather(&mut self, name: &str, shards: Vec<TensorId>, dim: usize) -> TensorId {
+        let ranks = shards.len();
+        self.op(name, Op::AllGather { dim, ranks }, shards)
+    }
+    pub fn reduce_scatter(
+        &mut self,
+        name: &str,
+        shards: Vec<TensorId>,
+        dim: usize,
+        index: usize,
+    ) -> TensorId {
+        let ranks = shards.len();
+        self.op(name, Op::ReduceScatter { dim, ranks, index }, shards)
+    }
+
+    // ---- validation ----
+
+    /// Check DAG/topological invariants and per-node shape consistency.
+    pub fn validate(&self) -> Result<()> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &t in &node.inputs {
+                ensure!((t as usize) < self.tensors.len(), "node {} input out of range", node.name);
+                if let Some(p) = self.tensors[t as usize].producer {
+                    ensure!(
+                        (p as usize) < i,
+                        "node '{}' consumes tensor produced later — not topological",
+                        node.name
+                    );
+                }
+            }
+            let in_shapes: Vec<&[i64]> =
+                node.inputs.iter().map(|&t| self.tensors[t as usize].shape.as_slice()).collect();
+            let expect = node.op.infer_shape(&in_shapes, None)?;
+            ensure!(
+                expect == self.tensors[node.output as usize].shape,
+                "node '{}' output shape {:?} != inferred {:?}",
+                node.name,
+                self.tensors[node.output as usize].shape,
+                expect
+            );
+        }
+        for &o in &self.outputs {
+            ensure!((o as usize) < self.tensors.len(), "output id out of range");
+        }
+        Ok(())
+    }
+
+    /// Dead-code elimination: rebuild the graph keeping only nodes whose
+    /// results reach an output. Inputs are all preserved (they are part of
+    /// the model's interface and of `R_i`). Applied identically to `G_s`
+    /// and `G_d` it respects the same-optimizations assumption (§3.3).
+    pub fn eliminate_dead_code(&self) -> Graph {
+        let mut live = vec![false; self.tensors.len()];
+        let mut stack: Vec<TensorId> = self.outputs.clone();
+        while let Some(t) = stack.pop() {
+            if std::mem::replace(&mut live[t as usize], true) {
+                continue;
+            }
+            if let Some(p) = self.tensors[t as usize].producer {
+                for &i in &self.nodes[p as usize].inputs {
+                    stack.push(i);
+                }
+            }
+        }
+        let mut g = Graph::new(self.name.clone());
+        let mut remap: FxHashMap<TensorId, TensorId> = FxHashMap::default();
+        for &i in &self.inputs {
+            let t = &self.tensors[i as usize];
+            remap.insert(i, g.input_typed(&t.name, t.shape.clone(), t.dtype));
+        }
+        for node in &self.nodes {
+            if !live[node.output as usize] {
+                continue;
+            }
+            let inputs: Vec<TensorId> = node.inputs.iter().map(|t| remap[t]).collect();
+            let out = g
+                .add(&self.tensors[node.output as usize].name, node.op.clone(), inputs)
+                .expect("DCE preserves well-formedness");
+            remap.insert(node.output, out);
+        }
+        for &o in &self.outputs {
+            g.mark_output(remap[&o]);
+        }
+        g
+    }
+
+    /// Producer node of a tensor, if any.
+    pub fn producer(&self, t: TensorId) -> Option<&Node> {
+        self.tensors[t as usize].producer.map(|n| &self.nodes[n as usize])
+    }
+
+    /// All node ids whose inputs include `t`.
+    pub fn consumers(&self, t: TensorId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.contains(&t))
+            .map(|(i, _)| i as NodeId)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_validate() {
+        let mut g = Graph::new("tiny");
+        let a = g.input("A", vec![4, 6]);
+        let b = g.input("B", vec![6, 3]);
+        let c = g.matmul("C", a, b);
+        let d = g.scale("D", c, 2.0);
+        g.mark_output(d);
+        assert_eq!(g.shape(c), &[4, 3]);
+        assert_eq!(g.num_nodes(), 2);
+        g.validate().unwrap();
+        assert!(g.is_input(a));
+        assert!(!g.is_input(c));
+        assert!(g.is_output(d));
+        assert_eq!(g.producer(c).unwrap().name, "C");
+        assert_eq!(g.consumers(c), vec![1]);
+    }
+
+    #[test]
+    fn name_uniquification() {
+        let mut g = Graph::new("t");
+        let a = g.input("x", vec![2]);
+        let b = g.input("x", vec![2]);
+        assert_ne!(g.tensor(a).name, g.tensor(b).name);
+        assert_eq!(g.tensor_by_name("x"), Some(a));
+        assert_eq!(g.tensor_by_name("x.1"), Some(b));
+    }
+
+    #[test]
+    fn add_rejects_bad_shapes() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 3]);
+        let b = g.input("b", vec![2, 3]);
+        assert!(g.add("bad", Op::MatMul, vec![a, b]).is_err());
+    }
+
+    #[test]
+    fn collectives_helpers() {
+        let mut g = Graph::new("t");
+        let a = g.input("a0", vec![2, 4]);
+        let b = g.input("a1", vec![2, 4]);
+        let gathered = g.all_gather("ag", vec![a, b], 0);
+        assert_eq!(g.shape(gathered), &[4, 4]);
+        let rs = g.reduce_scatter("rs", vec![gathered, gathered], 0, 1);
+        assert_eq!(g.shape(rs), &[2, 4]);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,307 @@
+//! Graph ⇄ JSON interchange with `python/compile/capture.py`.
+//!
+//! Schema:
+//! ```json
+//! {
+//!   "name": "gpt_seq",
+//!   "inputs":  [{"name": "A", "shape": [4, 4], "dtype": "f32"}],
+//!   "nodes":   [{"op": "matmul", "name": "C", "inputs": ["A", "B"],
+//!                "attrs": {"dim": 0}}],
+//!   "outputs": ["F"]
+//! }
+//! ```
+//! Node outputs are named by the node's `name`. Attrs mirror
+//! `expr::print::attr_string` keys.
+
+use super::graph::{DType, Graph, TensorId};
+use super::ops::{FBits, Op};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+pub fn to_json(g: &Graph) -> Json {
+    let inputs: Vec<Json> = g
+        .inputs
+        .iter()
+        .map(|&i| {
+            let t = g.tensor(i);
+            Json::obj(vec![
+                ("name", Json::str(&t.name)),
+                ("shape", Json::arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect())),
+                ("dtype", Json::str(t.dtype.name())),
+            ])
+        })
+        .collect();
+    let nodes: Vec<Json> = g
+        .nodes()
+        .iter()
+        .map(|n| {
+            let mut fields = vec![
+                ("op", Json::str(n.op.name().to_string())),
+                ("name", Json::str(&g.tensor(n.output).name)),
+                (
+                    "inputs",
+                    Json::arr(
+                        n.inputs.iter().map(|&t| Json::str(&g.tensor(t).name)).collect(),
+                    ),
+                ),
+            ];
+            let attrs = op_attrs_json(&n.op);
+            if let Json::Obj(ref o) = attrs {
+                if !o.is_empty() {
+                    fields.push(("attrs", attrs));
+                }
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(&g.name)),
+        ("inputs", Json::arr(inputs)),
+        ("nodes", Json::arr(nodes)),
+        ("outputs", Json::arr(g.outputs.iter().map(|&t| Json::str(&g.tensor(t).name)).collect())),
+    ])
+}
+
+fn op_attrs_json(op: &Op) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    match op {
+        Op::Slice { dim, start, end } => {
+            pairs.push(("dim", Json::num(*dim as f64)));
+            pairs.push(("start", Json::num(start.expect_const() as f64)));
+            pairs.push(("end", Json::num(end.expect_const() as f64)));
+        }
+        Op::Concat { dim } | Op::Softmax { dim } => pairs.push(("dim", Json::num(*dim as f64))),
+        Op::Transpose { perm } => pairs
+            .push(("perm", Json::arr(perm.iter().map(|&p| Json::num(p as f64)).collect()))),
+        Op::Reshape { shape } => pairs.push((
+            "shape",
+            Json::arr(shape.iter().map(|s| Json::num(s.expect_const() as f64)).collect()),
+        )),
+        Op::Pad { dim, before, after, value } => {
+            pairs.push(("dim", Json::num(*dim as f64)));
+            pairs.push(("before", Json::num(before.expect_const() as f64)));
+            pairs.push(("after", Json::num(after.expect_const() as f64)));
+            pairs.push(("value", Json::num(value.get())));
+        }
+        Op::Scale { c } | Op::AddScalar { c } => pairs.push(("c", Json::num(c.get()))),
+        Op::ReduceSum { dim, keepdim }
+        | Op::ReduceMean { dim, keepdim }
+        | Op::ReduceMax { dim, keepdim } => {
+            pairs.push(("dim", Json::num(*dim as f64)));
+            pairs.push(("keepdim", Json::Bool(*keepdim)));
+        }
+        Op::RmsNorm { eps } | Op::LayerNorm { eps } => pairs.push(("eps", Json::num(eps.get()))),
+        Op::AllReduce { ranks } => pairs.push(("ranks", Json::num(*ranks as f64))),
+        Op::AllGather { dim, ranks } => {
+            pairs.push(("dim", Json::num(*dim as f64)));
+            pairs.push(("ranks", Json::num(*ranks as f64)));
+        }
+        Op::ReduceScatter { dim, ranks, index } => {
+            pairs.push(("dim", Json::num(*dim as f64)));
+            pairs.push(("ranks", Json::num(*ranks as f64)));
+            pairs.push(("index", Json::num(*index as f64)));
+        }
+        Op::Custom { name } => pairs.push(("custom_name", Json::str(name.clone()))),
+        _ => {}
+    }
+    Json::obj(pairs)
+}
+
+pub fn from_json(j: &Json) -> Result<Graph> {
+    let name = j.get("name").as_str().unwrap_or("anonymous");
+    let mut g = Graph::new(name);
+    for inp in j.get("inputs").as_arr().ok_or_else(|| anyhow!("missing 'inputs'"))? {
+        let tname = inp.get("name").as_str().ok_or_else(|| anyhow!("input without name"))?;
+        let shape: Vec<i64> = inp
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("input '{tname}' without shape"))?
+            .iter()
+            .map(|d| d.as_i64().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?;
+        let dtype = inp
+            .get("dtype")
+            .as_str()
+            .and_then(DType::parse)
+            .unwrap_or(DType::F32);
+        g.input_typed(tname, shape, dtype);
+    }
+    for node in j.get("nodes").as_arr().ok_or_else(|| anyhow!("missing 'nodes'"))? {
+        let op_name = node.get("op").as_str().ok_or_else(|| anyhow!("node without op"))?;
+        let out_name = node.get("name").as_str().ok_or_else(|| anyhow!("node without name"))?;
+        let inputs: Vec<TensorId> = node
+            .get("inputs")
+            .as_arr()
+            .ok_or_else(|| anyhow!("node '{out_name}' without inputs"))?
+            .iter()
+            .map(|n| {
+                let nm = n.as_str().ok_or_else(|| anyhow!("non-string input"))?;
+                g.tensor_by_name(nm)
+                    .ok_or_else(|| anyhow!("node '{out_name}' references unknown tensor '{nm}'"))
+            })
+            .collect::<Result<_>>()?;
+        let op = op_from_json(op_name, node.get("attrs"))
+            .with_context(|| format!("node '{out_name}'"))?;
+        g.add(out_name, op, inputs)?;
+    }
+    for out in j.get("outputs").as_arr().ok_or_else(|| anyhow!("missing 'outputs'"))? {
+        let nm = out.as_str().ok_or_else(|| anyhow!("non-string output"))?;
+        let id = g.tensor_by_name(nm).ok_or_else(|| anyhow!("unknown output tensor '{nm}'"))?;
+        g.mark_output(id);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+fn op_from_json(name: &str, attrs: &Json) -> Result<Op> {
+    let dim = || attrs.get("dim").as_usize().ok_or_else(|| anyhow!("op '{name}' needs 'dim'"));
+    let int = |k: &str| attrs.get(k).as_i64().ok_or_else(|| anyhow!("op '{name}' needs '{k}'"));
+    let flt = |k: &str| attrs.get(k).as_f64().ok_or_else(|| anyhow!("op '{name}' needs '{k}'"));
+    let keepdim = attrs.get("keepdim").as_bool().unwrap_or(false);
+    Ok(match name {
+        "identity" => Op::Identity,
+        "slice" => Op::Slice { dim: dim()?, start: int("start")?.into(), end: int("end")?.into() },
+        "concat" => Op::Concat { dim: dim()? },
+        "transpose" => Op::Transpose {
+            perm: attrs
+                .get("perm")
+                .as_arr()
+                .ok_or_else(|| anyhow!("transpose needs perm"))?
+                .iter()
+                .map(|p| p.as_usize().ok_or_else(|| anyhow!("bad perm")))
+                .collect::<Result<_>>()?,
+        },
+        "reshape" => Op::Reshape {
+            shape: attrs
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("reshape needs shape"))?
+                .iter()
+                .map(|d| d.as_i64().map(Into::into).ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        },
+        "pad" => Op::Pad {
+            dim: dim()?,
+            before: int("before")?.into(),
+            after: int("after")?.into(),
+            value: FBits::new(attrs.get("value").as_f64().unwrap_or(0.0)),
+        },
+        "sum" => Op::SumN,
+        "add" => Op::Add,
+        "sub" => Op::Sub,
+        "mul" => Op::Mul,
+        "div" => Op::Div,
+        "maximum" => Op::Maximum,
+        "neg" => Op::Neg,
+        "exp" => Op::Exp,
+        "log" => Op::Log,
+        "sqrt" => Op::Sqrt,
+        "rsqrt" => Op::Rsqrt,
+        "square" => Op::Square,
+        "tanh" => Op::Tanh,
+        "gelu" => Op::Gelu,
+        "silu" => Op::Silu,
+        "sigmoid" => Op::Sigmoid,
+        "relu" => Op::Relu,
+        "scale" => Op::Scale { c: FBits::new(flt("c")?) },
+        "add_scalar" => Op::AddScalar { c: FBits::new(flt("c")?) },
+        "matmul" => Op::MatMul,
+        "reduce_sum" => Op::ReduceSum { dim: dim()?, keepdim },
+        "reduce_mean" => Op::ReduceMean { dim: dim()?, keepdim },
+        "reduce_max" => Op::ReduceMax { dim: dim()?, keepdim },
+        "softmax" => Op::Softmax { dim: dim()? },
+        "rms_norm" => Op::RmsNorm { eps: FBits::new(attrs.get("eps").as_f64().unwrap_or(1e-5)) },
+        "layer_norm" => Op::LayerNorm { eps: FBits::new(attrs.get("eps").as_f64().unwrap_or(1e-5)) },
+        "rope" => Op::Rope,
+        "embedding" => Op::Embedding,
+        "mse_loss" => Op::MseLoss,
+        "all_reduce" => Op::AllReduce { ranks: int("ranks")? as usize },
+        "all_gather" => Op::AllGather { dim: dim()?, ranks: int("ranks")? as usize },
+        "reduce_scatter" => Op::ReduceScatter {
+            dim: dim()?,
+            ranks: int("ranks")? as usize,
+            index: int("index")? as usize,
+        },
+        "custom" => Op::Custom {
+            name: attrs
+                .get("custom_name")
+                .as_str()
+                .ok_or_else(|| anyhow!("custom op needs 'custom_name'"))?
+                .to_string(),
+        },
+        other => {
+            // Unknown op names from capture map to Custom so users can
+            // attach lemmas (§6.5) without editing the enum.
+            if other.is_empty() {
+                bail!("empty op name");
+            }
+            Op::Custom { name: other.to_string() }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Graph {
+        let mut g = Graph::new("fig1");
+        let a = g.input("A", vec![4, 6]);
+        let b = g.input("B", vec![6, 4]);
+        let c = g.matmul("C", a, b);
+        let e = g.input("E", vec![4, 4]);
+        let f = g.sub2("F", c, e);
+        g.mark_output(f);
+        g
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = sample();
+        let j = to_json(&g);
+        let g2 = from_json(&j).unwrap();
+        assert_eq!(g2.name, g.name);
+        assert_eq!(g2.num_nodes(), g.num_nodes());
+        assert_eq!(g2.num_tensors(), g.num_tensors());
+        assert_eq!(to_json(&g2).to_string(), j.to_string());
+    }
+
+    #[test]
+    fn roundtrip_attrs() {
+        let mut g = Graph::new("attrs");
+        let x = g.input("x", vec![4, 8]);
+        let s = g.slice("s", x, 1, 2, 6);
+        let t = g.transpose("t", s, vec![1, 0]);
+        let p = g.op(
+            "p",
+            Op::Pad { dim: 0, before: 1.into(), after: 1.into(), value: FBits::new(0.0) },
+            vec![t],
+        );
+        let r = g.op("r", Op::ReduceSum { dim: 1, keepdim: true }, vec![p]);
+        g.mark_output(r);
+        let g2 = from_json(&to_json(&g)).unwrap();
+        assert_eq!(g2.shape(g2.tensor_by_name("r").unwrap()), g.shape(r));
+    }
+
+    #[test]
+    fn unknown_op_maps_to_custom() {
+        let j = Json::parse(
+            r#"{"name":"t","inputs":[{"name":"x","shape":[4],"dtype":"f32"}],
+               "nodes":[],"outputs":["x"]}"#,
+        )
+        .unwrap();
+        let g = from_json(&j).unwrap();
+        assert_eq!(g.num_nodes(), 0);
+        assert!(op_from_json("fused_magic", &Json::Null).unwrap().tag() == crate::ir::OpTag::Custom);
+    }
+
+    #[test]
+    fn rejects_dangling_references() {
+        let j = Json::parse(
+            r#"{"name":"t","inputs":[],"nodes":[{"op":"neg","name":"y","inputs":["nope"]}],
+               "outputs":[]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&j).is_err());
+    }
+}

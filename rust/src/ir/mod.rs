@@ -1,0 +1,15 @@
+//! Computation-graph IR.
+//!
+//! Both the sequential specification `G_s` and the distributed implementation
+//! `G_d` are DAGs whose vertices are operators and whose edges are tensors
+//! (paper §3.2). Graphs arrive here from three frontends: the Python jaxpr
+//! capture (`ir::json_io`), the HLO-text parser (`crate::hlo`), and the
+//! in-repo model builders (`crate::models`).
+
+pub mod autodiff;
+pub mod graph;
+pub mod json_io;
+pub mod ops;
+
+pub use graph::{DType, Graph, Node, NodeId, Tensor, TensorId};
+pub use ops::{FBits, Op, OpTag};

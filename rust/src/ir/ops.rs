@@ -1,0 +1,596 @@
+//! The operator vocabulary.
+//!
+//! Modeled on the subset of PyTorch's ATen IR that the paper's models
+//! exercise, plus the collectives that distribution strategies insert and
+//! the custom ops that optimized kernels (our Pallas L1 kernels) appear as.
+//! Every operator produces exactly one output tensor.
+//!
+//! The same type is the e-graph language: `Op` must be `Eq + Hash`, so float
+//! attributes are stored as bit patterns ([`FBits`]) and integer attributes
+//! as (possibly symbolic) [`Scalar`]s.
+
+use crate::symbolic::{Scalar, Solver};
+use anyhow::{bail, ensure, Result};
+use std::fmt;
+
+/// An `f64` wrapper that is `Eq + Hash` via its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FBits(pub u64);
+
+impl FBits {
+    pub fn new(v: f64) -> Self {
+        FBits(v.to_bits())
+    }
+    pub fn get(self) -> f64 {
+        f64::from_bits(self.0)
+    }
+}
+
+impl fmt::Display for FBits {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.get())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Op {
+    // ---- structural / rearrangement (clean, §3.2) ----
+    Identity,
+    /// `x[.., start:end, ..]` along `dim`.
+    Slice { dim: usize, start: Scalar, end: Scalar },
+    /// n-ary concatenation along `dim`.
+    Concat { dim: usize },
+    Transpose { perm: Vec<usize> },
+    Reshape { shape: Vec<Scalar> },
+    /// Pad `dim` with `value` (`before`/`after` elements).
+    Pad { dim: usize, before: Scalar, after: Scalar, value: FBits },
+    /// n-ary elementwise sum: how partial results from ranks are combined.
+    /// Clean as a *reduction* op (§3.2(ii)).
+    SumN,
+
+    // ---- elementwise arithmetic ----
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Maximum,
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Square,
+    Tanh,
+    Gelu,
+    Silu,
+    Sigmoid,
+    Relu,
+    /// Multiply by a compile-time scalar constant.
+    Scale { c: FBits },
+    /// Add a compile-time scalar constant.
+    AddScalar { c: FBits },
+
+    // ---- linear algebra ----
+    /// Batched matmul `[..., m, k] x [..., k, n] -> [..., m, n]`.
+    MatMul,
+
+    // ---- reductions ----
+    ReduceSum { dim: usize, keepdim: bool },
+    ReduceMean { dim: usize, keepdim: bool },
+    ReduceMax { dim: usize, keepdim: bool },
+
+    // ---- NN compound ops (ATen-style fused ops with their own lemmas) ----
+    Softmax { dim: usize },
+    /// `(x, weight)` — RMS-normalize the last dim. Also the op our Pallas
+    /// kernel captures to.
+    RmsNorm { eps: FBits },
+    /// `(x, weight, bias)` — layer norm over the last dim.
+    LayerNorm { eps: FBits },
+    /// `(x, cos, sin)` — rotary position embedding. `x: [..., s, d]`,
+    /// `cos/sin: [s, d]`; rotate-half convention.
+    Rope,
+    /// `(table, ids)` — row gather.
+    Embedding,
+    /// `(pred, target)` — mean squared error, scalar output.
+    MseLoss,
+
+    // ---- collectives (appear in G_d; single-program capture form where a
+    //      k-rank collective is a node with k rank inputs) ----
+    /// k inputs -> elementwise sum (one replicated output).
+    AllReduce { ranks: usize },
+    /// k inputs -> concat along `dim` (one replicated output).
+    AllGather { dim: usize, ranks: usize },
+    /// k inputs -> `index`-th chunk of the elementwise sum along `dim`.
+    ReduceScatter { dim: usize, ranks: usize, index: usize },
+
+    /// Opaque custom operator (e.g. a fused kernel GraphGuard has no
+    /// built-in lemma for; users supply lemmas per §6.5). Shape/semantics
+    /// come from the custom-op registry.
+    Custom { name: String },
+}
+
+/// Discriminant used by pattern matching in the e-graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpTag {
+    Identity,
+    Slice,
+    Concat,
+    Transpose,
+    Reshape,
+    Pad,
+    SumN,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Maximum,
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Square,
+    Tanh,
+    Gelu,
+    Silu,
+    Sigmoid,
+    Relu,
+    Scale,
+    AddScalar,
+    MatMul,
+    ReduceSum,
+    ReduceMean,
+    ReduceMax,
+    Softmax,
+    RmsNorm,
+    LayerNorm,
+    Rope,
+    Embedding,
+    MseLoss,
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Custom,
+}
+
+impl Op {
+    pub fn tag(&self) -> OpTag {
+        match self {
+            Op::Identity => OpTag::Identity,
+            Op::Slice { .. } => OpTag::Slice,
+            Op::Concat { .. } => OpTag::Concat,
+            Op::Transpose { .. } => OpTag::Transpose,
+            Op::Reshape { .. } => OpTag::Reshape,
+            Op::Pad { .. } => OpTag::Pad,
+            Op::SumN => OpTag::SumN,
+            Op::Add => OpTag::Add,
+            Op::Sub => OpTag::Sub,
+            Op::Mul => OpTag::Mul,
+            Op::Div => OpTag::Div,
+            Op::Maximum => OpTag::Maximum,
+            Op::Neg => OpTag::Neg,
+            Op::Exp => OpTag::Exp,
+            Op::Log => OpTag::Log,
+            Op::Sqrt => OpTag::Sqrt,
+            Op::Rsqrt => OpTag::Rsqrt,
+            Op::Square => OpTag::Square,
+            Op::Tanh => OpTag::Tanh,
+            Op::Gelu => OpTag::Gelu,
+            Op::Silu => OpTag::Silu,
+            Op::Sigmoid => OpTag::Sigmoid,
+            Op::Relu => OpTag::Relu,
+            Op::Scale { .. } => OpTag::Scale,
+            Op::AddScalar { .. } => OpTag::AddScalar,
+            Op::MatMul => OpTag::MatMul,
+            Op::ReduceSum { .. } => OpTag::ReduceSum,
+            Op::ReduceMean { .. } => OpTag::ReduceMean,
+            Op::ReduceMax { .. } => OpTag::ReduceMax,
+            Op::Softmax { .. } => OpTag::Softmax,
+            Op::RmsNorm { .. } => OpTag::RmsNorm,
+            Op::LayerNorm { .. } => OpTag::LayerNorm,
+            Op::Rope => OpTag::Rope,
+            Op::Embedding => OpTag::Embedding,
+            Op::MseLoss => OpTag::MseLoss,
+            Op::AllReduce { .. } => OpTag::AllReduce,
+            Op::AllGather { .. } => OpTag::AllGather,
+            Op::ReduceScatter { .. } => OpTag::ReduceScatter,
+            Op::Custom { .. } => OpTag::Custom,
+        }
+    }
+
+    /// Display name matching the capture-side op names (json interchange).
+    pub fn name(&self) -> &'static str {
+        match self.tag() {
+            OpTag::Identity => "identity",
+            OpTag::Slice => "slice",
+            OpTag::Concat => "concat",
+            OpTag::Transpose => "transpose",
+            OpTag::Reshape => "reshape",
+            OpTag::Pad => "pad",
+            OpTag::SumN => "sum",
+            OpTag::Add => "add",
+            OpTag::Sub => "sub",
+            OpTag::Mul => "mul",
+            OpTag::Div => "div",
+            OpTag::Maximum => "maximum",
+            OpTag::Neg => "neg",
+            OpTag::Exp => "exp",
+            OpTag::Log => "log",
+            OpTag::Sqrt => "sqrt",
+            OpTag::Rsqrt => "rsqrt",
+            OpTag::Square => "square",
+            OpTag::Tanh => "tanh",
+            OpTag::Gelu => "gelu",
+            OpTag::Silu => "silu",
+            OpTag::Sigmoid => "sigmoid",
+            OpTag::Relu => "relu",
+            OpTag::Scale => "scale",
+            OpTag::AddScalar => "add_scalar",
+            OpTag::MatMul => "matmul",
+            OpTag::ReduceSum => "reduce_sum",
+            OpTag::ReduceMean => "reduce_mean",
+            OpTag::ReduceMax => "reduce_max",
+            OpTag::Softmax => "softmax",
+            OpTag::RmsNorm => "rms_norm",
+            OpTag::LayerNorm => "layer_norm",
+            OpTag::Rope => "rope",
+            OpTag::Embedding => "embedding",
+            OpTag::MseLoss => "mse_loss",
+            OpTag::AllReduce => "all_reduce",
+            OpTag::AllGather => "all_gather",
+            OpTag::ReduceScatter => "reduce_scatter",
+            OpTag::Custom => "custom",
+        }
+    }
+
+    /// May this operator appear in a *clean* expression (§3.2)? Rearrangement
+    /// ops plus shard-combining reductions. `Add` counts: combining two
+    /// partial sums is exactly the reduction case; `Scale`/`Div` do NOT —
+    /// needing them to reconstruct `G_s` outputs is the signature of the
+    /// aux-loss and gradient-accumulation bugs (§6.2 bugs 2 and 6).
+    pub fn is_clean(&self) -> bool {
+        matches!(
+            self.tag(),
+            OpTag::Identity
+                | OpTag::Slice
+                | OpTag::Concat
+                | OpTag::Transpose
+                | OpTag::Reshape
+                | OpTag::Pad
+                | OpTag::SumN
+                | OpTag::Add
+                | OpTag::AllReduce
+                | OpTag::AllGather
+                | OpTag::ReduceScatter
+        )
+    }
+
+    /// Is this an elementwise (pointwise, shape-preserving modulo broadcast)
+    /// operator? Drives the generic "elementwise distributes over concat"
+    /// lemma family.
+    pub fn is_unary_elementwise(&self) -> bool {
+        matches!(
+            self.tag(),
+            OpTag::Neg
+                | OpTag::Exp
+                | OpTag::Log
+                | OpTag::Sqrt
+                | OpTag::Rsqrt
+                | OpTag::Square
+                | OpTag::Tanh
+                | OpTag::Gelu
+                | OpTag::Silu
+                | OpTag::Sigmoid
+                | OpTag::Relu
+                | OpTag::Scale
+                | OpTag::AddScalar
+                | OpTag::Identity
+        )
+    }
+
+    pub fn is_binary_elementwise(&self) -> bool {
+        matches!(self.tag(), OpTag::Add | OpTag::Sub | OpTag::Mul | OpTag::Div | OpTag::Maximum)
+    }
+
+    /// Output shape from input shapes. `solver` resolves symbolic attrs; pass
+    /// `None` on graph-construction paths where attrs are concrete.
+    pub fn infer_shape(&self, ins: &[&[i64]], solver: Option<&Solver>) -> Result<Vec<i64>> {
+        let conc = |s: &Scalar| -> Result<i64> {
+            if let Some(k) = s.as_const() {
+                return Ok(k);
+            }
+            if let Some(sv) = solver {
+                if let Some(k) = sv.concretize(&s.0) {
+                    return Ok(k);
+                }
+            }
+            bail!("cannot concretize symbolic scalar {:?}", s)
+        };
+        match self {
+            Op::Identity => {
+                ensure!(ins.len() == 1, "identity arity");
+                Ok(ins[0].to_vec())
+            }
+            Op::Slice { dim, start, end } => {
+                ensure!(ins.len() == 1, "slice arity");
+                let (s, e) = (conc(start)?, conc(end)?);
+                ensure!(*dim < ins[0].len(), "slice dim {dim} of {:?}", ins[0]);
+                ensure!(
+                    0 <= s && s <= e && e <= ins[0][*dim],
+                    "slice [{s}:{e}] of size {}",
+                    ins[0][*dim]
+                );
+                let mut out = ins[0].to_vec();
+                out[*dim] = e - s;
+                Ok(out)
+            }
+            Op::Concat { dim } => {
+                ensure!(!ins.is_empty(), "concat arity");
+                ensure!(*dim < ins[0].len(), "concat dim");
+                let mut out = ins[0].to_vec();
+                out[*dim] = 0;
+                for shape in ins {
+                    ensure!(shape.len() == out.len(), "concat rank mismatch");
+                    for d in 0..out.len() {
+                        if d == *dim {
+                            out[d] += shape[d];
+                        } else {
+                            ensure!(shape[d] == ins[0][d], "concat dim {d} mismatch");
+                        }
+                    }
+                }
+                Ok(out)
+            }
+            Op::Transpose { perm } => {
+                ensure!(ins.len() == 1, "transpose arity");
+                ensure!(perm.len() == ins[0].len(), "perm rank");
+                let mut seen = vec![false; perm.len()];
+                for &p in perm {
+                    ensure!(p < perm.len() && !seen[p], "bad perm {:?}", perm);
+                    seen[p] = true;
+                }
+                Ok(perm.iter().map(|&p| ins[0][p]).collect())
+            }
+            Op::Reshape { shape } => {
+                ensure!(ins.len() == 1, "reshape arity");
+                let out: Vec<i64> = shape.iter().map(&conc).collect::<Result<_>>()?;
+                let want: i64 = out.iter().product();
+                let have: i64 = ins[0].iter().product();
+                ensure!(want == have, "reshape {:?} -> {:?}", ins[0], out);
+                Ok(out)
+            }
+            Op::Pad { dim, before, after, .. } => {
+                ensure!(ins.len() == 1, "pad arity");
+                ensure!(*dim < ins[0].len(), "pad dim");
+                let (b, a) = (conc(before)?, conc(after)?);
+                ensure!(b >= 0 && a >= 0, "negative pad");
+                let mut out = ins[0].to_vec();
+                out[*dim] += b + a;
+                Ok(out)
+            }
+            Op::SumN => {
+                ensure!(!ins.is_empty(), "sum arity");
+                for shape in ins {
+                    ensure!(*shape == ins[0], "sum shape mismatch {:?} vs {:?}", shape, ins[0]);
+                }
+                Ok(ins[0].to_vec())
+            }
+            op if op.is_binary_elementwise() => {
+                ensure!(ins.len() == 2, "{} arity", op.name());
+                crate::util::ndarray::broadcast_shapes(ins[0], ins[1])
+            }
+            op if op.is_unary_elementwise() => {
+                ensure!(ins.len() == 1, "{} arity", op.name());
+                Ok(ins[0].to_vec())
+            }
+            Op::MatMul => {
+                ensure!(ins.len() == 2, "matmul arity");
+                let (a, b) = (ins[0], ins[1]);
+                ensure!(a.len() >= 2 && b.len() >= 2, "matmul rank");
+                ensure!(
+                    a[a.len() - 1] == b[b.len() - 2],
+                    "matmul inner dims {:?} x {:?}",
+                    a,
+                    b
+                );
+                let batch_a: i64 = a[..a.len() - 2].iter().product();
+                let batch_b: i64 = b[..b.len() - 2].iter().product();
+                ensure!(
+                    batch_a == batch_b || batch_a == 1 || batch_b == 1,
+                    "matmul batch {:?} x {:?}",
+                    a,
+                    b
+                );
+                let mut out =
+                    if batch_a >= batch_b { a[..a.len() - 2].to_vec() } else { b[..b.len() - 2].to_vec() };
+                out.push(a[a.len() - 2]);
+                out.push(b[b.len() - 1]);
+                Ok(out)
+            }
+            Op::ReduceSum { dim, keepdim }
+            | Op::ReduceMean { dim, keepdim }
+            | Op::ReduceMax { dim, keepdim } => {
+                ensure!(ins.len() == 1, "reduce arity");
+                ensure!(*dim < ins[0].len(), "reduce dim {dim} of {:?}", ins[0]);
+                let mut out = ins[0].to_vec();
+                if *keepdim {
+                    out[*dim] = 1;
+                } else {
+                    out.remove(*dim);
+                }
+                Ok(out)
+            }
+            Op::Softmax { dim } => {
+                ensure!(ins.len() == 1, "softmax arity");
+                ensure!(*dim < ins[0].len(), "softmax dim");
+                Ok(ins[0].to_vec())
+            }
+            Op::RmsNorm { .. } => {
+                ensure!(ins.len() == 2, "rms_norm wants (x, weight)");
+                let d = *ins[0].last().ok_or_else(|| anyhow::anyhow!("rms_norm rank"))?;
+                ensure!(ins[1] == [d], "rms_norm weight {:?} vs hidden {}", ins[1], d);
+                Ok(ins[0].to_vec())
+            }
+            Op::LayerNorm { .. } => {
+                ensure!(ins.len() == 3, "layer_norm wants (x, weight, bias)");
+                let d = *ins[0].last().ok_or_else(|| anyhow::anyhow!("layer_norm rank"))?;
+                ensure!(ins[1] == [d] && ins[2] == [d], "layer_norm params");
+                Ok(ins[0].to_vec())
+            }
+            Op::Rope => {
+                ensure!(ins.len() == 3, "rope wants (x, cos, sin)");
+                let x = ins[0];
+                ensure!(x.len() >= 2, "rope rank");
+                let (s, d) = (x[x.len() - 2], x[x.len() - 1]);
+                ensure!(ins[1] == [s, d] && ins[2] == [s, d], "rope cos/sin {:?} vs [{s},{d}]", ins[1]);
+                ensure!(d % 2 == 0, "rope needs even head dim");
+                Ok(x.to_vec())
+            }
+            Op::Embedding => {
+                ensure!(ins.len() == 2, "embedding wants (table, ids)");
+                ensure!(ins[0].len() == 2, "embedding table rank");
+                let mut out = ins[1].to_vec();
+                out.push(ins[0][1]);
+                Ok(out)
+            }
+            Op::MseLoss => {
+                ensure!(ins.len() == 2 && ins[0] == ins[1], "mse_loss shapes {:?} {:?}", ins[0], ins[1]);
+                Ok(vec![])
+            }
+            Op::AllReduce { ranks } => {
+                ensure!(ins.len() == *ranks, "all_reduce wants {ranks} inputs");
+                for shape in ins {
+                    ensure!(*shape == ins[0], "all_reduce shape mismatch");
+                }
+                Ok(ins[0].to_vec())
+            }
+            Op::AllGather { dim, ranks } => {
+                Op::Concat { dim: *dim }.infer_shape(ins, solver).and_then(|out| {
+                    ensure!(ins.len() == *ranks, "all_gather wants {ranks} inputs");
+                    Ok(out)
+                })
+            }
+            Op::ReduceScatter { dim, ranks, index } => {
+                ensure!(ins.len() == *ranks, "reduce_scatter wants {ranks} inputs");
+                for shape in ins {
+                    ensure!(*shape == ins[0], "reduce_scatter shape mismatch");
+                }
+                ensure!(*dim < ins[0].len(), "reduce_scatter dim");
+                ensure!(
+                    ins[0][*dim] % *ranks as i64 == 0,
+                    "reduce_scatter dim {} not divisible by {}",
+                    ins[0][*dim],
+                    ranks
+                );
+                ensure!(index < ranks, "reduce_scatter index");
+                let mut out = ins[0].to_vec();
+                out[*dim] /= *ranks as i64;
+                Ok(out)
+            }
+            Op::Custom { name } => {
+                crate::lemmas::custom::registry_infer_shape(name, ins)
+            }
+            _ => unreachable!("infer_shape: unhandled {:?}", self),
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::Slice { dim, start, end } => {
+                write!(f, "slice[dim={dim}")?;
+                if let (Some(s), Some(e)) = (start.as_const(), end.as_const()) {
+                    write!(f, ",{s}:{e}]")
+                } else {
+                    write!(f, ",sym]")
+                }
+            }
+            Op::Concat { dim } => write!(f, "concat[dim={dim}]"),
+            Op::Transpose { perm } => write!(f, "transpose{perm:?}"),
+            Op::Scale { c } => write!(f, "scale[{c}]"),
+            Op::AddScalar { c } => write!(f, "add_scalar[{c}]"),
+            Op::ReduceScatter { dim, ranks, index } => {
+                write!(f, "reduce_scatter[dim={dim},{index}/{ranks}]")
+            }
+            Op::AllGather { dim, ranks } => write!(f, "all_gather[dim={dim},{ranks}]"),
+            Op::AllReduce { ranks } => write!(f, "all_reduce[{ranks}]"),
+            Op::Custom { name } => write!(f, "custom[{name}]"),
+            other => write!(f, "{}", other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sh(op: &Op, ins: &[&[i64]]) -> Vec<i64> {
+        op.infer_shape(ins, None).unwrap()
+    }
+
+    #[test]
+    fn structural_shapes() {
+        assert_eq!(sh(&Op::Slice { dim: 1, start: 2.into(), end: 5.into() }, &[&[3, 8]]), vec![3, 3]);
+        assert_eq!(sh(&Op::Concat { dim: 0 }, &[&[2, 4], &[3, 4]]), vec![5, 4]);
+        assert_eq!(sh(&Op::Transpose { perm: vec![1, 0] }, &[&[2, 5]]), vec![5, 2]);
+        assert_eq!(
+            sh(&Op::Pad { dim: 0, before: 1.into(), after: 2.into(), value: FBits::new(0.0) }, &[&[4]]),
+            vec![7]
+        );
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        assert_eq!(sh(&Op::MatMul, &[&[4, 6], &[6, 3]]), vec![4, 3]);
+        assert_eq!(sh(&Op::MatMul, &[&[2, 4, 6], &[2, 6, 3]]), vec![2, 4, 3]);
+        assert!(Op::MatMul.infer_shape(&[&[4, 6], &[5, 3]], None).is_err());
+    }
+
+    #[test]
+    fn collective_shapes() {
+        assert_eq!(sh(&Op::AllGather { dim: 0, ranks: 2 }, &[&[2, 4], &[2, 4]]), vec![4, 4]);
+        assert_eq!(sh(&Op::AllReduce { ranks: 2 }, &[&[2, 4], &[2, 4]]), vec![2, 4]);
+        assert_eq!(
+            sh(&Op::ReduceScatter { dim: 0, ranks: 2, index: 1 }, &[&[4, 4], &[4, 4]]),
+            vec![2, 4]
+        );
+        assert!(Op::ReduceScatter { dim: 0, ranks: 2, index: 1 }
+            .infer_shape(&[&[5, 4], &[5, 4]], None)
+            .is_err());
+    }
+
+    #[test]
+    fn nn_shapes() {
+        assert_eq!(sh(&Op::RmsNorm { eps: FBits::new(1e-5) }, &[&[2, 3, 8], &[8]]), vec![2, 3, 8]);
+        assert_eq!(sh(&Op::Rope, &[&[2, 4, 8], &[4, 8], &[4, 8]]), vec![2, 4, 8]);
+        assert_eq!(sh(&Op::Embedding, &[&[100, 16], &[7]]), vec![7, 16]);
+        assert_eq!(sh(&Op::MseLoss, &[&[4, 2], &[4, 2]]), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn clean_classification() {
+        assert!(Op::Slice { dim: 0, start: 0.into(), end: 1.into() }.is_clean());
+        assert!(Op::Concat { dim: 0 }.is_clean());
+        assert!(Op::SumN.is_clean());
+        assert!(Op::Add.is_clean());
+        assert!(Op::AllGather { dim: 0, ranks: 2 }.is_clean());
+        // scaling / division are computation — NOT clean (bugs 2 & 6 hinge on this)
+        assert!(!Op::Scale { c: FBits::new(0.5) }.is_clean());
+        assert!(!Op::Div.is_clean());
+        assert!(!Op::MatMul.is_clean());
+        assert!(!Op::Softmax { dim: 1 }.is_clean());
+    }
+
+    #[test]
+    fn symbolic_slice_with_solver() {
+        use crate::symbolic::{LinExpr, SymTable};
+        let mut t = SymTable::new();
+        let n = t.intern("n");
+        let mut solver = Solver::new();
+        solver.assert_eq(&LinExpr::sym(n), &LinExpr::constant(5));
+        let op = Op::Slice { dim: 0, start: 0.into(), end: Scalar::sym(n) };
+        assert!(op.infer_shape(&[&[8]], None).is_err());
+        assert_eq!(op.infer_shape(&[&[8]], Some(&solver)).unwrap(), vec![5]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Collective-op lemmas: desugar single-program collectives into their
+//! structural semantics (all-gather = concat, all-reduce = shard-sum,
+//! reduce-scatter = slice-of-sum). These give `G_d`'s communication nodes
+//! definitional equalities the rest of the library can chew on.
+
+use super::structural::try_add;
+use super::Lemma;
+use crate::egraph::{Pat, Rewrite};
+use crate::ir::{Op, OpTag};
+use crate::symbolic::Scalar;
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // all_gather(xs; dim) = concat(xs; dim)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "allgather_is_concat",
+            Pat::bind_variadic(OpTag::AllGather, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Op::AllGather { dim, .. } => *dim,
+                    _ => return vec![],
+                };
+                try_add(eg, Op::Concat { dim }, s.list(0).to_vec())
+            },
+        ),
+        "c",
+        2,
+        8,
+    ));
+
+    // all_reduce(xs) = sum(xs)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "allreduce_is_sum",
+            Pat::bind_variadic(OpTag::AllReduce, 0, 0),
+            |eg, s, _| try_add(eg, Op::SumN, s.list(0).to_vec()),
+        ),
+        "c",
+        2,
+        6,
+    ));
+
+    // reduce_scatter(xs; dim, k, i) = slice(sum(xs); dim, i·c, (i+1)·c)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "reducescatter_is_slice_of_sum",
+            Pat::bind_variadic(OpTag::ReduceScatter, 0, 0),
+            |eg, s, _| {
+                let (dim, ranks, index) = match s.op(0) {
+                    Op::ReduceScatter { dim, ranks, index } => (*dim, *ranks, *index),
+                    _ => return vec![],
+                };
+                let parts = s.list(0).to_vec();
+                let Some(shape) = eg.shape(parts[0]).map(|v| v.to_vec()) else { return vec![] };
+                if shape[dim] % ranks as i64 != 0 {
+                    return vec![];
+                }
+                let chunk = shape[dim] / ranks as i64;
+                let Ok(sum) = eg.add_op(Op::SumN, parts) else { return vec![] };
+                try_add(
+                    eg,
+                    Op::Slice {
+                        dim,
+                        start: Scalar::constant(index as i64 * chunk),
+                        end: Scalar::constant((index as i64 + 1) * chunk),
+                    },
+                    vec![sum],
+                )
+            },
+        ),
+        "c",
+        3,
+        22,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, EGraph, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+
+    fn run(eg: &mut EGraph) {
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(eg, &rules, &RewriteCtx::default(), SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn allgather_desugars() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let ag = eg.add_op(Op::AllGather { dim: 0, ranks: 2 }, vec![a, b]).unwrap();
+        run(&mut eg);
+        let cat = eg.lookup(&Op::Concat { dim: 0 }, &[a, b]).unwrap();
+        assert!(eg.same(ag, cat));
+    }
+
+    #[test]
+    fn allreduce_desugars() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let ar = eg.add_op(Op::AllReduce { ranks: 2 }, vec![a, b]).unwrap();
+        run(&mut eg);
+        let sum = eg.lookup(&Op::SumN, &[a, b]).unwrap();
+        assert!(eg.same(ar, sum));
+    }
+
+    #[test]
+    fn reduce_scatter_desugars_and_reassembles() {
+        // concat(rs_0, rs_1) over both indices must equal sum(xs) — the full
+        // reduce-scatter → all-gather roundtrip of the running example.
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4, 4]);
+        let b = eg.add_leaf(t(1), vec![4, 4]);
+        let d0 = eg.add_op(Op::ReduceScatter { dim: 0, ranks: 2, index: 0 }, vec![a, b]).unwrap();
+        let d1 = eg.add_op(Op::ReduceScatter { dim: 0, ranks: 2, index: 1 }, vec![a, b]).unwrap();
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![d0, d1]).unwrap();
+        run(&mut eg);
+        let sum = eg.lookup(&Op::SumN, &[a, b]).unwrap();
+        assert!(eg.same(cat, sum), "concat of reduce-scatter chunks = shard sum");
+    }
+}

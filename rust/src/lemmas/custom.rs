@@ -1,0 +1,172 @@
+//! Custom-operator registry (paper §6.5).
+//!
+//! Models that use optimized kernels — our L1 Pallas RMSNorm and fused
+//! attention kernels, vLLM-style fused ops, HLO-only ops — appear in
+//! captured graphs as `Op::Custom { name }`. GraphGuard has no built-in
+//! lemmas for them, so users register, per op: a shape function, a numeric
+//! reference (used by lemma validation and cross-validation), and one or
+//! more rewrite lemmas. Registration effort is what Figure 6 quantifies.
+
+use crate::util::ndarray::NdArray;
+use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
+use rustc_hash::FxHashMap;
+use std::sync::RwLock;
+
+type ShapeFn = fn(&[&[i64]]) -> Result<Vec<i64>>;
+type EvalFn = fn(&[&NdArray]) -> Result<NdArray>;
+
+pub struct CustomOp {
+    pub name: &'static str,
+    /// Which model/framework required it (Fig 6 groups by this).
+    pub origin: &'static str,
+    pub shape: ShapeFn,
+    pub eval: EvalFn,
+    /// Lines of code the user wrote for this op's lemmas (Fig 6b CDF).
+    pub lemma_loc: usize,
+}
+
+static REGISTRY: Lazy<RwLock<FxHashMap<&'static str, CustomOp>>> = Lazy::new(|| {
+    let mut m = FxHashMap::default();
+    for op in builtin_customs() {
+        m.insert(op.name, op);
+    }
+    RwLock::new(m)
+});
+
+pub fn register(op: CustomOp) {
+    REGISTRY.write().unwrap().insert(op.name, op);
+}
+
+pub fn registry_infer_shape(name: &str, ins: &[&[i64]]) -> Result<Vec<i64>> {
+    let reg = REGISTRY.read().unwrap();
+    match reg.get(name) {
+        Some(op) => (op.shape)(ins),
+        None => bail!("unknown custom op '{name}' — register it (see §6.5)"),
+    }
+}
+
+pub fn registry_eval(name: &str, args: &[&NdArray]) -> Result<NdArray> {
+    let reg = REGISTRY.read().unwrap();
+    match reg.get(name) {
+        Some(op) => (op.eval)(args),
+        None => bail!("unknown custom op '{name}'"),
+    }
+}
+
+pub fn registered_ops() -> Vec<(&'static str, &'static str, usize)> {
+    REGISTRY.read().unwrap().values().map(|o| (o.name, o.origin, o.lemma_loc)).collect()
+}
+
+/// The custom ops our evaluated models need — mirrors Table 2's model set.
+fn builtin_customs() -> Vec<CustomOp> {
+    vec![
+        // L1 Pallas fused RMSNorm (llama & bytedance models). Semantics
+        // identical to Op::RmsNorm; the separate registration reproduces the
+        // paper's "optimized kernel needs user lemmas" workflow.
+        CustomOp {
+            name: "pallas_rms_norm",
+            origin: "llama3",
+            shape: |ins| {
+                anyhow::ensure!(ins.len() == 2, "pallas_rms_norm wants (x, w)");
+                Ok(ins[0].to_vec())
+            },
+            eval: |args| {
+                crate::expr::eval::eval_op(
+                    &crate::ir::Op::RmsNorm { eps: crate::ir::FBits::new(1e-6) },
+                    args,
+                )
+            },
+            lemma_loc: 22,
+        },
+        // L1 Pallas row-blocked attention core: softmax(QKᵀ·scale)·V.
+        CustomOp {
+            name: "pallas_attention",
+            origin: "bytedance",
+            shape: |ins| {
+                anyhow::ensure!(ins.len() == 3, "pallas_attention wants (q, k, v)");
+                let (q, v) = (ins[0], ins[2]);
+                let mut out = q.to_vec();
+                *out.last_mut().unwrap() = *v.last().unwrap();
+                Ok(out)
+            },
+            eval: |args| {
+                use crate::ir::Op;
+                let (q, k, v) = (args[0], args[1], args[2]);
+                let d = *q.shape().last().unwrap() as f64;
+                let kt_perm: Vec<usize> = {
+                    let n = k.ndim();
+                    let mut p: Vec<usize> = (0..n).collect();
+                    p.swap(n - 1, n - 2);
+                    p
+                };
+                let kt = k.transpose(&kt_perm)?;
+                let scores = q.matmul(&kt)?;
+                let scaled = crate::expr::eval::eval_op(
+                    &Op::Scale { c: crate::ir::FBits::new(1.0 / d.sqrt()) },
+                    &[&scores],
+                )?;
+                let ndim = scaled.ndim();
+                let probs =
+                    crate::expr::eval::eval_op(&Op::Softmax { dim: ndim - 1 }, &[&scaled])?;
+                probs.matmul(v)
+            },
+            lemma_loc: 41,
+        },
+        // vLLM-style fused SwiGLU MLP gate: silu(a) * b.
+        CustomOp {
+            name: "fused_silu_mul",
+            origin: "qwen2",
+            shape: |ins| {
+                anyhow::ensure!(ins.len() == 2 && ins[0] == ins[1], "fused_silu_mul shapes");
+                Ok(ins[0].to_vec())
+            },
+            eval: |args| {
+                let s = crate::expr::eval::eval_op(&crate::ir::Op::Silu, &[args[0]])?;
+                s.zip(args[1], |a, b| a * b)
+            },
+            lemma_loc: 12,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_shapes() {
+        assert_eq!(registry_infer_shape("pallas_rms_norm", &[&[2, 8], &[8]]).unwrap(), vec![2, 8]);
+        assert_eq!(
+            registry_infer_shape("pallas_attention", &[&[4, 8], &[4, 8], &[4, 8]]).unwrap(),
+            vec![4, 8]
+        );
+        assert!(registry_infer_shape("no_such_op", &[&[1]]).is_err());
+    }
+
+    #[test]
+    fn pallas_rms_matches_builtin_rmsnorm() {
+        use crate::util::ndarray::NdArray;
+        let x = NdArray::new(vec![2, 4], (0..8).map(|i| i as f32 * 0.3 - 1.0).collect()).unwrap();
+        let w = NdArray::full(vec![4], 1.1);
+        let custom = registry_eval("pallas_rms_norm", &[&x, &w]).unwrap();
+        let builtin = crate::expr::eval::eval_op(
+            &crate::ir::Op::RmsNorm { eps: crate::ir::FBits::new(1e-6) },
+            &[&x, &w],
+        )
+        .unwrap();
+        assert!(custom.allclose(&builtin, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn fused_silu_mul_semantics() {
+        use crate::util::ndarray::NdArray;
+        let a = NdArray::new(vec![3], vec![-1., 0., 2.]).unwrap();
+        let b = NdArray::new(vec![3], vec![2., 2., 2.]).unwrap();
+        let out = registry_eval("fused_silu_mul", &[&a, &b]).unwrap();
+        let silu = |x: f32| x / (1.0 + (-x).exp());
+        for (i, &v) in out.data().iter().enumerate() {
+            assert!((v - silu(a.data()[i]) * 2.0).abs() < 1e-6);
+        }
+    }
+}

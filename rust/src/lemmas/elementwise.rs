@@ -1,0 +1,778 @@
+//! Elementwise-op lemmas: pointwise ops commute with the rearrangement ops
+//! (concat / slice / transpose). These let per-rank pointwise computation in
+//! `G_d` collapse into the sequential op applied to the gathered tensor.
+
+use super::structural::try_add;
+use super::Lemma;
+use crate::egraph::{Id, POp, Pat, Rewrite};
+use crate::ir::{Op, OpTag};
+
+/// The named pure unary ops, each of which gets its own `<op>_over_concat`,
+/// `<op>_over_slice` and `<op>_over_transpose` lemma — the paper counts
+/// per-operator lemmas, and Fig 7's heatmap distinguishes them.
+const UNARY_OPS: &[(&str, Op, [&str; 3])] = &[
+    ("neg", Op::Neg, ["neg_over_concat", "neg_over_slice", "neg_over_transpose"]),
+    ("exp", Op::Exp, ["exp_over_concat", "exp_over_slice", "exp_over_transpose"]),
+    ("log", Op::Log, ["log_over_concat", "log_over_slice", "log_over_transpose"]),
+    ("sqrt", Op::Sqrt, ["sqrt_over_concat", "sqrt_over_slice", "sqrt_over_transpose"]),
+    ("rsqrt", Op::Rsqrt, ["rsqrt_over_concat", "rsqrt_over_slice", "rsqrt_over_transpose"]),
+    ("square", Op::Square, ["square_over_concat", "square_over_slice", "square_over_transpose"]),
+    ("tanh", Op::Tanh, ["tanh_over_concat", "tanh_over_slice", "tanh_over_transpose"]),
+    ("gelu", Op::Gelu, ["gelu_over_concat", "gelu_over_slice", "gelu_over_transpose"]),
+    ("silu", Op::Silu, ["silu_over_concat", "silu_over_slice", "silu_over_transpose"]),
+    ("sigmoid", Op::Sigmoid, ["sigmoid_over_concat", "sigmoid_over_slice", "sigmoid_over_transpose"]),
+    ("relu", Op::Relu, ["relu_over_concat", "relu_over_slice", "relu_over_transpose"]),
+];
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // <op>(concat(xs, d)) = concat(<op>(x), d) — one lemma per unary op.
+    for (_, op, names) in UNARY_OPS {
+        let f = op.clone();
+        v.push(Lemma::new(
+            Rewrite::new(
+                names[0],
+                Pat::node(POp::Exact(op.clone()), vec![Pat::bind_variadic(OpTag::Concat, 1, 0)]),
+                move |eg, s, _| {
+                    let dim = match s.op(1) {
+                        Op::Concat { dim } => *dim,
+                        _ => return vec![],
+                    };
+                    let parts: Option<Vec<Id>> = s
+                        .list(0)
+                        .iter()
+                        .map(|&p| eg.add_op(f.clone(), vec![p]).ok())
+                        .collect();
+                    let Some(parts) = parts else { return vec![] };
+                    try_add(eg, Op::Concat { dim }, parts)
+                },
+            ),
+            "core",
+            3,
+            15,
+        ));
+        // <op>(slice(x)) = slice(<op>(x))
+        let f = op.clone();
+        v.push(Lemma::new(
+            Rewrite::new(
+                names[1],
+                Pat::node(
+                    POp::Exact(op.clone()),
+                    vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
+                ),
+                move |eg, s, _| {
+                    let sl = s.op(1).clone();
+                    let Ok(fx) = eg.add_op(f.clone(), vec![s.var(0)]) else { return vec![] };
+                    try_add(eg, sl, vec![fx])
+                },
+            ),
+            "core",
+            3,
+            12,
+        ));
+        // <op>(transpose(x, p)) = transpose(<op>(x), p)
+        let f = op.clone();
+        v.push(Lemma::new(
+            Rewrite::new(
+                names[2],
+                Pat::node(
+                    POp::Exact(op.clone()),
+                    vec![Pat::bind(OpTag::Transpose, 1, vec![Pat::var(0)])],
+                ),
+                move |eg, s, _| {
+                    let tp = s.op(1).clone();
+                    let Ok(fx) = eg.add_op(f.clone(), vec![s.var(0)]) else { return vec![] };
+                    try_add(eg, tp, vec![fx])
+                },
+            ),
+            "core",
+            3,
+            12,
+        ));
+    }
+
+    // scale/add_scalar (attr-carrying unary ops) use tag-binding patterns.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_over_concat",
+            Pat::node(
+                POp::Bind { tag: OpTag::Scale, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let f = s.op(0).clone();
+                let dim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(f.clone(), vec![p]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::Concat { dim }, parts)
+            },
+        ),
+        "core",
+        3,
+        15,
+    ));
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_over_slice",
+            Pat::node(
+                POp::Bind { tag: OpTag::Scale, slot: 0 },
+                vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
+            ),
+            |eg, s, _| {
+                let f = s.op(0).clone();
+                let sl = s.op(1).clone();
+                let Ok(fx) = eg.add_op(f, vec![s.var(0)]) else { return vec![] };
+                try_add(eg, sl, vec![fx])
+            },
+        ),
+        "core",
+        3,
+        12,
+    ));
+    v.push(Lemma::new(
+        Rewrite::new(
+            "add_scalar_over_concat",
+            Pat::node(
+                POp::Bind { tag: OpTag::AddScalar, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let f = s.op(0).clone();
+                let dim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(f.clone(), vec![p]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::Concat { dim }, parts)
+            },
+        ),
+        "core",
+        3,
+        15,
+    ));
+
+    // concat(f(x1), f(x2), ...) = f(concat(xs)) — the trigger in the other
+    // direction: a concat whose parts all apply the same unary op.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "concat_of_unary",
+            Pat::bind_variadic(OpTag::Concat, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts = s.list(0).to_vec();
+                if parts.len() < 2 {
+                    return vec![];
+                }
+                // all parts must expose the same unary elementwise op
+                let mut common: Option<(Op, Vec<Id>)> = None;
+                'outer: for cand in eg.class(parts[0]).nodes.clone() {
+                    let crate::egraph::ELang::Op(op) = &cand.lang else { continue };
+                    if !op.is_unary_elementwise() || matches!(op, Op::Identity) {
+                        continue;
+                    }
+                    let mut inners = vec![cand.children[0]];
+                    for &p in &parts[1..] {
+                        let mut found = None;
+                        for n in &eg.class(p).nodes {
+                            if let crate::egraph::ELang::Op(o2) = &n.lang {
+                                if o2 == op {
+                                    found = Some(n.children[0]);
+                                    break;
+                                }
+                            }
+                        }
+                        match found {
+                            Some(inner) => inners.push(inner),
+                            None => continue 'outer,
+                        }
+                    }
+                    common = Some((op.clone(), inners));
+                    break;
+                }
+                let Some((op, inners)) = common else { return vec![] };
+                let Ok(cat) = eg.add_op(Op::Concat { dim }, inners) else { return vec![] };
+                try_add(eg, op, vec![cat])
+            },
+        ),
+        "core",
+        3,
+        34,
+    ));
+
+    // f(slice(x)) = slice(f(x)) for unary elementwise f
+    v.push(Lemma::new(
+        Rewrite::new(
+            "unary_over_slice",
+            Pat::node(
+                POp::AnyUnaryEltwise { slot: 0 },
+                vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
+            ),
+            |eg, s, _| {
+                let f = s.op(0).clone();
+                let sl = s.op(1).clone();
+                let x = s.var(0);
+                let Ok(fx) = eg.add_op(f, vec![x]) else { return vec![] };
+                try_add(eg, sl, vec![fx])
+            },
+        ),
+        "core",
+        3,
+        12,
+    ));
+
+    // slice(f(x)) = f(slice(x)) — reverse trigger
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_over_unary",
+            Pat::node(
+                POp::Bind { tag: OpTag::Slice, slot: 0 },
+                vec![Pat::node(POp::AnyUnaryEltwise { slot: 1 }, vec![Pat::var(0)])],
+            ),
+            |eg, s, _| {
+                let sl = s.op(0).clone();
+                let f = s.op(1).clone();
+                let x = s.var(0);
+                let Ok(sx) = eg.add_op(sl, vec![x]) else { return vec![] };
+                try_add(eg, f, vec![sx])
+            },
+        ),
+        "core",
+        3,
+        12,
+    ));
+
+    // f(transpose(x, p)) = transpose(f(x), p)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "unary_over_transpose",
+            Pat::node(
+                POp::AnyUnaryEltwise { slot: 0 },
+                vec![Pat::bind(OpTag::Transpose, 1, vec![Pat::var(0)])],
+            ),
+            |eg, s, _| {
+                let f = s.op(0).clone();
+                let tp = s.op(1).clone();
+                let x = s.var(0);
+                let Ok(fx) = eg.add_op(f, vec![x]) else { return vec![] };
+                try_add(eg, tp, vec![fx])
+            },
+        ),
+        "core",
+        3,
+        12,
+    ));
+
+    // g(concat(xs,d), concat(ys,d)) = concat(g(xi,yi), d) for binary
+    // elementwise g, when the parts align shape-wise.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "binary_over_concat",
+            Pat::node(
+                POp::AnyBinaryEltwise { slot: 0 },
+                vec![
+                    Pat::bind_variadic(OpTag::Concat, 1, 0),
+                    Pat::bind_variadic(OpTag::Concat, 2, 1),
+                ],
+            ),
+            |eg, s, _| {
+                let g = s.op(0).clone();
+                let (d1, d2) = match (s.op(1), s.op(2)) {
+                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    _ => return vec![],
+                };
+                if d1 != d2 || s.list(0).len() != s.list(1).len() {
+                    return vec![];
+                }
+                let pieces: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .zip(s.list(1))
+                    .map(|(&a, &b)| {
+                        // pieces may broadcast against each other (e.g.
+                        // [s,h] ⊙ [s,1] rms scaling), but must align on the
+                        // concat dim and have equal rank so the zip is the
+                        // same decomposition as the whole-tensor op
+                        let (sa, sb) = (eg.shape(a)?, eg.shape(b)?);
+                        if sa.len() != sb.len() || sa.get(d1) != sb.get(d1) {
+                            return None;
+                        }
+                        eg.add_op(g.clone(), vec![a, b]).ok()
+                    })
+                    .collect();
+                let Some(pieces) = pieces else { return vec![] };
+                try_add(eg, Op::Concat { dim: d1 }, pieces)
+            },
+        ),
+        "core",
+        4,
+        26,
+    ));
+
+    // g(concat(xs,d), w) = concat(g(xi,w), d) when w broadcasts and the
+    // concat dim is not covered by w (e.g. norm weights [h] with seq concat).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "binary_bcast_over_concat",
+            Pat::node(
+                POp::AnyBinaryEltwise { slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0), Pat::var(0)],
+            ),
+            |eg, s, _| {
+                let g = s.op(0).clone();
+                let dim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let w = s.var(0);
+                let parts = s.list(0).to_vec();
+                let (Some(wshape), Some(xshape)) =
+                    (eg.shape(w).map(|v| v.to_vec()), eg.shape(parts[0]).map(|v| v.to_vec()))
+                else {
+                    return vec![];
+                };
+                // w must not span the concat dim: either lower rank that
+                // doesn't reach it, or size-1 there.
+                let offset = xshape.len().saturating_sub(wshape.len());
+                let covered = dim >= offset && wshape.get(dim - offset).copied().unwrap_or(1) != 1;
+                if covered {
+                    return vec![];
+                }
+                let pieces: Option<Vec<Id>> = parts
+                    .iter()
+                    .map(|&p| eg.add_op(g.clone(), vec![p, w]).ok())
+                    .collect();
+                let Some(pieces) = pieces else { return vec![] };
+                try_add(eg, Op::Concat { dim }, pieces)
+            },
+        ),
+        "core",
+        3,
+        30,
+    ));
+
+    // same, broadcast operand on the left: g(w, concat(xs,d))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "binary_bcast_over_concat_left",
+            Pat::node(
+                POp::AnyBinaryEltwise { slot: 0 },
+                vec![Pat::var(0), Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let g = s.op(0).clone();
+                let dim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let w = s.var(0);
+                let parts = s.list(0).to_vec();
+                let (Some(wshape), Some(xshape)) =
+                    (eg.shape(w).map(|v| v.to_vec()), eg.shape(parts[0]).map(|v| v.to_vec()))
+                else {
+                    return vec![];
+                };
+                let offset = xshape.len().saturating_sub(wshape.len());
+                let covered = dim >= offset && wshape.get(dim - offset).copied().unwrap_or(1) != 1;
+                if covered {
+                    return vec![];
+                }
+                let pieces: Option<Vec<Id>> = parts
+                    .iter()
+                    .map(|&p| eg.add_op(g.clone(), vec![w, p]).ok())
+                    .collect();
+                let Some(pieces) = pieces else { return vec![] };
+                try_add(eg, Op::Concat { dim }, pieces)
+            },
+        ),
+        "core",
+        3,
+        30,
+    ));
+
+    // g(slice(x,r), slice(y,r)) = slice(g(x,y), r) — same range both sides
+    v.push(Lemma::new(
+        Rewrite::new(
+            "binary_over_slice",
+            Pat::node(
+                POp::AnyBinaryEltwise { slot: 0 },
+                vec![
+                    Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)]),
+                    Pat::bind(OpTag::Slice, 2, vec![Pat::var(1)]),
+                ],
+            ),
+            |eg, s, _| {
+                let g = s.op(0).clone();
+                if s.op(1) != s.op(2) {
+                    return vec![];
+                }
+                let sl = s.op(1).clone();
+                let (x, y) = (s.var(0), s.var(1));
+                if eg.shape(x) != eg.shape(y) {
+                    return vec![];
+                }
+                let Ok(gxy) = eg.add_op(g, vec![x, y]) else { return vec![] };
+                try_add(eg, sl, vec![gxy])
+            },
+        ),
+        "core",
+        4,
+        16,
+    ));
+
+    // mul/add commutativity
+    v.push(Lemma::new(
+        Rewrite::new(
+            "mul_commut",
+            Pat::exact(Op::Mul, vec![Pat::var(0), Pat::var(1)]),
+            |eg, s, _| try_add(eg, Op::Mul, vec![s.var(1), s.var(0)]),
+        ),
+        "core",
+        2,
+        6,
+    ));
+    v.push(Lemma::new(
+        Rewrite::new(
+            "maximum_commut",
+            Pat::exact(Op::Maximum, vec![Pat::var(0), Pat::var(1)]),
+            |eg, s, _| try_add(eg, Op::Maximum, vec![s.var(1), s.var(0)]),
+        ),
+        "core",
+        2,
+        6,
+    ));
+
+    // scale(scale(x, a), b) = scale(x, a·b)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_fuse",
+            Pat::node(
+                POp::Bind { tag: OpTag::Scale, slot: 0 },
+                vec![Pat::node(POp::Bind { tag: OpTag::Scale, slot: 1 }, vec![Pat::var(0)])],
+            ),
+            |eg, s, _| {
+                let (a, b) = match (s.op(0), s.op(1)) {
+                    (Op::Scale { c: a }, Op::Scale { c: b }) => (a.get(), b.get()),
+                    _ => return vec![],
+                };
+                try_add(eg, Op::Scale { c: crate::ir::FBits::new(a * b) }, vec![s.var(0)])
+            },
+        ),
+        "core",
+        2,
+        11,
+    ));
+
+    // scale(x, 1.0) = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_one_identity",
+            Pat::bind(OpTag::Scale, 0, vec![Pat::var(0)]),
+            |_eg, s, _| match s.op(0) {
+                Op::Scale { c } if c.get() == 1.0 => vec![s.var(0)],
+                _ => vec![],
+            },
+        ),
+        "core",
+        1,
+        7,
+    ));
+
+    // neg(neg(x)) = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "neg_involution",
+            Pat::exact(Op::Neg, vec![Pat::exact(Op::Neg, vec![Pat::var(0)])]),
+            |_eg, s, _| vec![s.var(0)],
+        ),
+        "core",
+        2,
+        5,
+    ));
+
+    // sub(x, y) = sum(x, neg(y)) — lets subtraction participate in the
+    // shard-combine algebra (matsub in the running example).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sub_to_sum_neg",
+            Pat::exact(Op::Sub, vec![Pat::var(0), Pat::var(1)]),
+            |eg, s, _| {
+                let Ok(ny) = eg.add_op(Op::Neg, vec![s.var(1)]) else { return vec![] };
+                try_add(eg, Op::SumN, vec![s.var(0), ny])
+            },
+        ),
+        "core",
+        3,
+        8,
+    ));
+
+    // scale distributes over sum: scale(sum(xs), c) = sum(scale(xi, c))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_over_sum",
+            Pat::node(
+                POp::Bind { tag: OpTag::Scale, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::SumN, 1, 0)],
+            ),
+            |eg, s, _| {
+                let sc = s.op(0).clone();
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(sc.clone(), vec![p]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::SumN, parts)
+            },
+        ),
+        "core",
+        3,
+        13,
+    ));
+
+    // scale(x, 0) = scale(y, 0) for same-shaped x, y — all zeros. Unions
+    // the G_s and G_d gradient-seed zero nodes (autodiff builds the seed as
+    // add_scalar(scale(loss, 0), 1)).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_zero_eq",
+            Pat::bind(OpTag::Scale, 0, vec![Pat::var(0)]),
+            |eg, s, _| {
+                match s.op(0) {
+                    Op::Scale { c } if c.get() == 0.0 => {}
+                    _ => return vec![],
+                }
+                let x = s.var(0);
+                let shape = eg.shape(x).map(|v| v.to_vec());
+                // union with every other scale-zero node of the same shape
+                let mut out = Vec::new();
+                for id in eg.class_ids() {
+                    for node in &eg.class(id).nodes.clone() {
+                        if let crate::egraph::ELang::Op(Op::Scale { c }) = &node.lang {
+                            if c.get() == 0.0
+                                && eg.shape(node.children[0]).map(|v| v.to_vec()) == shape
+                            {
+                                out.push(id);
+                            }
+                        }
+                    }
+                }
+                out
+            },
+        ),
+        "core",
+        1,
+        22,
+    ));
+
+    // ---- gradient-seed lemmas (backward graphs) ----
+    // The autodiff seed is the literal ONE built as add_scalar(scale(t,0),1)
+    // — its value is independent of t. Multiplying by it is the identity,
+    // and multiplying by scale(ONE, c) is Scale{c}. These two lemmas are
+    // what let backward graphs (HF gradient accumulation, ByteDance bwd)
+    // relate across the loss-rescaling boundary.
+    {
+        fn is_seed_one(eg: &crate::egraph::EGraph, id: crate::egraph::Id) -> bool {
+            for node in &eg.class(id).nodes {
+                if let crate::egraph::ELang::Op(Op::AddScalar { c }) = &node.lang {
+                    if c.get() == 1.0 {
+                        let inner = node.children[0];
+                        for n2 in &eg.class(inner).nodes {
+                            if let crate::egraph::ELang::Op(Op::Scale { c }) = &n2.lang {
+                                if c.get() == 0.0 {
+                                    return true;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            false
+        }
+        v.push(Lemma::new(
+            Rewrite::new(
+                "mul_by_seed_one",
+                Pat::exact(Op::Mul, vec![Pat::var(0), Pat::var(1)]),
+                |eg, s, _| {
+                    let (x, y) = (s.var(0), s.var(1));
+                    // seed is scalar-shaped; broadcast multiply by ONE = x
+                    if is_seed_one(eg, y) && eg.shape(y).is_some_and(|sh| sh.is_empty()) {
+                        vec![x]
+                    } else if is_seed_one(eg, x) && eg.shape(x).is_some_and(|sh| sh.is_empty()) {
+                        vec![y]
+                    } else {
+                        vec![]
+                    }
+                },
+            ),
+            "core",
+            2,
+            18,
+        ));
+        v.push(Lemma::new(
+            Rewrite::new(
+                "mul_by_scaled_seed",
+                Pat::node(
+                    POp::Exact(Op::Mul),
+                    vec![
+                        Pat::var(0),
+                        Pat::node(POp::Bind { tag: OpTag::Scale, slot: 0 }, vec![Pat::var(1)]),
+                    ],
+                ),
+                |eg, s, _| {
+                    let sc = s.op(0).clone();
+                    let inner = s.var(1);
+                    if is_seed_one(eg, inner) && eg.shape(inner).is_some_and(|sh| sh.is_empty()) {
+                        try_add(eg, sc, vec![s.var(0)])
+                    } else {
+                        vec![]
+                    }
+                },
+            ),
+            "core",
+            3,
+            20,
+        ));
+    }
+
+    // mul distributes over sum (left): mul(sum(xs), y) = sum(mul(xi, y))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "mul_over_sum",
+            Pat::node(
+                POp::Exact(Op::Mul),
+                vec![Pat::bind_variadic(OpTag::SumN, 0, 0), Pat::var(0)],
+            ),
+            |eg, s, _| {
+                let y = s.var(0);
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(Op::Mul, vec![p, y]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::SumN, parts)
+            },
+        ),
+        "core",
+        3,
+        13,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, EGraph, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+
+    fn run(eg: &mut EGraph) {
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(eg, &rules, &RewriteCtx::default(), SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn gelu_over_concat() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let g = eg.add_op(Op::Gelu, vec![cat]).unwrap();
+        run(&mut eg);
+        let ga = eg.lookup(&Op::Gelu, &[a]).unwrap();
+        let gb = eg.lookup(&Op::Gelu, &[b]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[ga, gb]).unwrap();
+        assert!(eg.same(g, expect));
+    }
+
+    #[test]
+    fn concat_of_unary_reverse_direction() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let ga = eg.add_op(Op::Silu, vec![a]).unwrap();
+        let gb = eg.add_op(Op::Silu, vec![b]).unwrap();
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![ga, gb]).unwrap();
+        run(&mut eg);
+        let inner = eg.lookup(&Op::Concat { dim: 0 }, &[a, b]).expect("inner concat built");
+        let expect = eg.lookup(&Op::Silu, &[inner]).unwrap();
+        assert!(eg.same(cat, expect));
+    }
+
+    #[test]
+    fn weight_broadcast_over_seq_concat() {
+        // mul(concat(x1,x2; dim=0), w[h]) = concat(mul(x1,w), mul(x2,w))
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 4]);
+        let x2 = eg.add_leaf(t(1), vec![2, 4]);
+        let w = eg.add_leaf(t(2), vec![4]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![x1, x2]).unwrap();
+        let m = eg.add_op(Op::Mul, vec![cat, w]).unwrap();
+        run(&mut eg);
+        let m1 = eg.lookup(&Op::Mul, &[x1, w]).unwrap();
+        let m2 = eg.lookup(&Op::Mul, &[x2, w]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[m1, m2]).unwrap();
+        assert!(eg.same(m, expect));
+    }
+
+    #[test]
+    fn weight_concat_dim_blocks_distribution() {
+        // concat along the LAST dim with weight [h_total]: w spans the dim,
+        // so the broadcast lemma must NOT fire.
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 2]);
+        let x2 = eg.add_leaf(t(1), vec![2, 2]);
+        let w = eg.add_leaf(t(2), vec![4]);
+        let cat = eg.add_op(Op::Concat { dim: 1 }, vec![x1, x2]).unwrap();
+        let m = eg.add_op(Op::Mul, vec![cat, w]).unwrap();
+        run(&mut eg);
+        // mul(x1, w) would be ill-shaped anyway; make sure m kept its class
+        // without bogus equivalents of concat form
+        assert!(eg.lookup(&Op::Mul, &[x1, w]).is_none());
+        let _ = m;
+    }
+
+    #[test]
+    fn sub_participates_in_sum_algebra() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let sub = eg.add_op(Op::Sub, vec![a, b]).unwrap();
+        run(&mut eg);
+        let nb = eg.lookup(&Op::Neg, &[b]).unwrap();
+        let sum = eg.lookup(&Op::SumN, &[a, nb]).unwrap();
+        assert!(eg.same(sub, sum));
+    }
+
+    #[test]
+    fn scale_fusion() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![4]);
+        let s1 = eg.add_op(Op::Scale { c: crate::ir::FBits::new(2.0) }, vec![x]).unwrap();
+        let s2 = eg.add_op(Op::Scale { c: crate::ir::FBits::new(0.5) }, vec![s1]).unwrap();
+        run(&mut eg);
+        assert!(eg.same(s2, x), "scale(scale(x,2),0.5) = scale(x,1) = x");
+    }
+}

@@ -1,0 +1,567 @@
+//! Matmul lemmas — the block-matrix algebra at the heart of tensor
+//! parallelism (and of the paper's running example, Fig 2):
+//!
+//! * inner-dim split:  `A·B = Σᵢ Aᵢ·Bᵢ`   (column-parallel × row-parallel)
+//! * row split:        `[A₁;A₂]·B = [A₁·B; A₂·B]`   (sequence parallelism)
+//! * column split:     `A·[B₁|B₂] = [A·B₁ | A·B₂]`  (column parallelism)
+//! plus linearity (`·` distributes over shard sums) and scale/transpose
+//! commutation. All are rank-generic: the split dims are computed from the
+//! operand ranks so batched matmuls (attention) are covered.
+
+use super::structural::try_add;
+use super::Lemma;
+use crate::egraph::{EGraph, Id, POp, Pat, Rewrite};
+use crate::ir::{Op, OpTag};
+
+fn rank(eg: &EGraph, id: Id) -> Option<usize> {
+    eg.shape(id).map(|s| s.len())
+}
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // matmul(concat(As, k-dim), concat(Bs, k-row-dim)) = sum(matmul(Ai, Bi))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_block_inner",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![
+                    Pat::bind_variadic(OpTag::Concat, 0, 0),
+                    Pat::bind_variadic(OpTag::Concat, 1, 1),
+                ],
+            ),
+            |eg, s, _| {
+                let (da, db) = match (s.op(0), s.op(1)) {
+                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    _ => return vec![],
+                };
+                let (a_parts, b_parts) = (s.list(0).to_vec(), s.list(1).to_vec());
+                if a_parts.len() != b_parts.len() {
+                    return vec![];
+                }
+                let (Some(ra), Some(rb)) = (rank(eg, a_parts[0]), rank(eg, b_parts[0])) else {
+                    return vec![];
+                };
+                // inner dim of A = last; row dim of B = second-to-last
+                if da != ra - 1 || db != rb - 2 {
+                    return vec![];
+                }
+                // split sizes must match pairwise
+                for (&a, &b) in a_parts.iter().zip(&b_parts) {
+                    let (Some(sa), Some(sb)) = (eg.shape(a), eg.shape(b)) else { return vec![] };
+                    if sa[ra - 1] != sb[rb - 2] {
+                        return vec![];
+                    }
+                }
+                let prods: Option<Vec<Id>> = a_parts
+                    .iter()
+                    .zip(&b_parts)
+                    .map(|(&a, &b)| eg.add_op(Op::MatMul, vec![a, b]).ok())
+                    .collect();
+                let Some(prods) = prods else { return vec![] };
+                try_add(eg, Op::SumN, prods)
+            },
+        ),
+        "core",
+        4,
+        32,
+    ));
+
+    // matmul(concat(As, row-dim), B) = concat(matmul(Ai, B), row-dim)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_block_rows",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![Pat::bind_variadic(OpTag::Concat, 0, 0), Pat::var(0)],
+            ),
+            |eg, s, _| {
+                let da = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let a_parts = s.list(0).to_vec();
+                let b = s.var(0);
+                let Some(ra) = rank(eg, a_parts[0]) else { return vec![] };
+                if da != ra - 2 {
+                    return vec![];
+                }
+                let prods: Option<Vec<Id>> = a_parts
+                    .iter()
+                    .map(|&a| eg.add_op(Op::MatMul, vec![a, b]).ok())
+                    .collect();
+                let Some(prods) = prods else { return vec![] };
+                // output row dim = out_rank - 2
+                let Some(ro) = rank(eg, prods[0]) else { return vec![] };
+                try_add(eg, Op::Concat { dim: ro - 2 }, prods)
+            },
+        ),
+        "core",
+        3,
+        24,
+    ));
+
+    // matmul(A, concat(Bs, col-dim)) = concat(matmul(A, Bi), col-dim)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_block_cols",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![Pat::var(0), Pat::bind_variadic(OpTag::Concat, 0, 0)],
+            ),
+            |eg, s, _| {
+                let db = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let b_parts = s.list(0).to_vec();
+                let a = s.var(0);
+                let Some(rb) = rank(eg, b_parts[0]) else { return vec![] };
+                if db != rb - 1 {
+                    return vec![];
+                }
+                let prods: Option<Vec<Id>> = b_parts
+                    .iter()
+                    .map(|&b| eg.add_op(Op::MatMul, vec![a, b]).ok())
+                    .collect();
+                let Some(prods) = prods else { return vec![] };
+                let Some(ro) = rank(eg, prods[0]) else { return vec![] };
+                try_add(eg, Op::Concat { dim: ro - 1 }, prods)
+            },
+        ),
+        "core",
+        3,
+        24,
+    ));
+
+    // concat(matmul(A1,B), matmul(A2,B), ...; row-dim) = matmul(concat(As), B)
+    // — reverse trigger of matmul_block_rows: per-rank products already in
+    // G_d get recombined into the sequential matmul.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "concat_of_matmuls_rows",
+            Pat::bind_variadic(OpTag::Concat, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts = s.list(0).to_vec();
+                if parts.len() < 2 {
+                    return vec![];
+                }
+                let Some(ro) = rank(eg, parts[0]) else { return vec![] };
+                if dim != ro.saturating_sub(2) {
+                    return vec![];
+                }
+                // all parts matmul with the same B?
+                let mut a_list = Vec::new();
+                let mut b_common: Option<Id> = None;
+                for &p in &parts {
+                    let mut found = None;
+                    for n in &eg.class(p).nodes {
+                        if let crate::egraph::ELang::Op(Op::MatMul) = &n.lang {
+                            let (a, b) = (n.children[0], n.children[1]);
+                            match b_common {
+                                None => {
+                                    b_common = Some(eg.find(b));
+                                    found = Some(a);
+                                    break;
+                                }
+                                Some(bc) if eg.find(b) == bc => {
+                                    found = Some(a);
+                                    break;
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                    match found {
+                        Some(a) => a_list.push(a),
+                        None => return vec![],
+                    }
+                }
+                let Some(b) = b_common else { return vec![] };
+                let Some(ra) = rank(eg, a_list[0]) else { return vec![] };
+                let Ok(cat) = eg.add_op(Op::Concat { dim: ra - 2 }, a_list) else {
+                    return vec![];
+                };
+                try_add(eg, Op::MatMul, vec![cat, b])
+            },
+        ),
+        "core",
+        4,
+        40,
+    ));
+
+    // matmul(sum(As), B) = sum(matmul(Ai, B))  (left linearity)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_sum_left",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![Pat::bind_variadic(OpTag::SumN, 0, 0), Pat::var(0)],
+            ),
+            |eg, s, _| {
+                let b = s.var(0);
+                let prods: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&a| eg.add_op(Op::MatMul, vec![a, b]).ok())
+                    .collect();
+                let Some(prods) = prods else { return vec![] };
+                try_add(eg, Op::SumN, prods)
+            },
+        ),
+        "core",
+        3,
+        14,
+    ));
+
+    // matmul(A, sum(Bs)) = sum(matmul(A, Bi))  (right linearity)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_sum_right",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![Pat::var(0), Pat::bind_variadic(OpTag::SumN, 0, 0)],
+            ),
+            |eg, s, _| {
+                let a = s.var(0);
+                let prods: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&b| eg.add_op(Op::MatMul, vec![a, b]).ok())
+                    .collect();
+                let Some(prods) = prods else { return vec![] };
+                try_add(eg, Op::SumN, prods)
+            },
+        ),
+        "core",
+        3,
+        14,
+    ));
+
+    // sum(matmul(A1,B1), matmul(A2,B2), ...) = matmul(concat(As,k),
+    // concat(Bs,k-row)) — reverse trigger of matmul_block_inner.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_of_matmuls_inner",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |eg, s, _| {
+                let parts = s.list(0).to_vec();
+                if parts.len() < 2 {
+                    return vec![];
+                }
+                let mut a_list = Vec::new();
+                let mut b_list = Vec::new();
+                for &p in &parts {
+                    let mut found = None;
+                    for n in &eg.class(p).nodes {
+                        if let crate::egraph::ELang::Op(Op::MatMul) = &n.lang {
+                            found = Some((n.children[0], n.children[1]));
+                            break;
+                        }
+                    }
+                    match found {
+                        Some((a, b)) => {
+                            a_list.push(a);
+                            b_list.push(b);
+                        }
+                        None => return vec![],
+                    }
+                }
+                let (Some(ra), Some(rb)) = (rank(eg, a_list[0]), rank(eg, b_list[0])) else {
+                    return vec![];
+                };
+                let Ok(ca) = eg.add_op(Op::Concat { dim: ra - 1 }, a_list) else { return vec![] };
+                let Ok(cb) = eg.add_op(Op::Concat { dim: rb - 2 }, b_list) else { return vec![] };
+                try_add(eg, Op::MatMul, vec![ca, cb])
+            },
+        ),
+        "core",
+        4,
+        33,
+    ));
+
+    // slice(matmul(A,B); row-dim, a, b) = matmul(slice(A; row-dim, a, b), B)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_of_matmul_rows",
+            Pat::node(
+                POp::Bind { tag: OpTag::Slice, slot: 0 },
+                vec![Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)])],
+            ),
+            |eg, s, _| {
+                let (dim, a, b) = match s.op(0) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                let (x, y) = (s.var(0), s.var(1));
+                let Some(rx) = rank(eg, x) else { return vec![] };
+                let Some(ro) = rank(eg, y).map(|ry| rx.max(ry)) else { return vec![] };
+                if dim != ro - 2 {
+                    return vec![];
+                }
+                let Ok(sx) = eg.add_op(Op::Slice { dim: rx - 2, start: a, end: b }, vec![x]) else {
+                    return vec![];
+                };
+                try_add(eg, Op::MatMul, vec![sx, y])
+            },
+        ),
+        "core",
+        3,
+        20,
+    ));
+
+    // slice(matmul(A,B); col-dim, a, b) = matmul(A, slice(B; col-dim, a, b))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_of_matmul_cols",
+            Pat::node(
+                POp::Bind { tag: OpTag::Slice, slot: 0 },
+                vec![Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)])],
+            ),
+            |eg, s, _| {
+                let (dim, a, b) = match s.op(0) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                let (x, y) = (s.var(0), s.var(1));
+                let Some(ry) = rank(eg, y) else { return vec![] };
+                let Some(ro) = rank(eg, x).map(|rx| rx.max(ry)) else { return vec![] };
+                if dim != ro - 1 {
+                    return vec![];
+                }
+                let Ok(sy) = eg.add_op(Op::Slice { dim: ry - 1, start: a, end: b }, vec![y]) else {
+                    return vec![];
+                };
+                try_add(eg, Op::MatMul, vec![x, sy])
+            },
+        ),
+        "core",
+        3,
+        20,
+    ));
+
+    // matmul(scale(A,c), B) = scale(matmul(A,B), c) (and right operand)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_scale_left",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![
+                    Pat::node(POp::Bind { tag: OpTag::Scale, slot: 0 }, vec![Pat::var(0)]),
+                    Pat::var(1),
+                ],
+            ),
+            |eg, s, _| {
+                let sc = s.op(0).clone();
+                let Ok(mm) = eg.add_op(Op::MatMul, vec![s.var(0), s.var(1)]) else {
+                    return vec![];
+                };
+                try_add(eg, sc, vec![mm])
+            },
+        ),
+        "core",
+        3,
+        13,
+    ));
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_scale_right",
+            Pat::node(
+                POp::Exact(Op::MatMul),
+                vec![
+                    Pat::var(0),
+                    Pat::node(POp::Bind { tag: OpTag::Scale, slot: 0 }, vec![Pat::var(1)]),
+                ],
+            ),
+            |eg, s, _| {
+                let sc = s.op(0).clone();
+                let Ok(mm) = eg.add_op(Op::MatMul, vec![s.var(0), s.var(1)]) else {
+                    return vec![];
+                };
+                try_add(eg, sc, vec![mm])
+            },
+        ),
+        "core",
+        3,
+        13,
+    ));
+    // scale(matmul(A,B), c) = matmul(scale(A,c), B) — reverse trigger
+    v.push(Lemma::new(
+        Rewrite::new(
+            "scale_of_matmul",
+            Pat::node(
+                POp::Bind { tag: OpTag::Scale, slot: 0 },
+                vec![Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)])],
+            ),
+            |eg, s, _| {
+                let sc = s.op(0).clone();
+                let Ok(sa) = eg.add_op(sc, vec![s.var(0)]) else { return vec![] };
+                try_add(eg, Op::MatMul, vec![sa, s.var(1)])
+            },
+        ),
+        "core",
+        3,
+        13,
+    ));
+
+    // transpose(matmul(A,B)) = matmul(transpose(B), transpose(A)) (last-2)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "matmul_transpose",
+            Pat::node(
+                POp::Bind { tag: OpTag::Transpose, slot: 0 },
+                vec![Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)])],
+            ),
+            |eg, s, _| {
+                let perm = match s.op(0) {
+                    Op::Transpose { perm } => perm.clone(),
+                    _ => return vec![],
+                };
+                // only the swap-last-two permutation
+                let n = perm.len();
+                if n < 2 {
+                    return vec![];
+                }
+                let mut want: Vec<usize> = (0..n).collect();
+                want.swap(n - 1, n - 2);
+                if perm != want {
+                    return vec![];
+                }
+                let (a, b) = (s.var(0), s.var(1));
+                let (Some(ra), Some(rb)) = (rank(eg, a), rank(eg, b)) else { return vec![] };
+                let mut pa: Vec<usize> = (0..ra).collect();
+                pa.swap(ra - 1, ra - 2);
+                let mut pb: Vec<usize> = (0..rb).collect();
+                pb.swap(rb - 1, rb - 2);
+                let Ok(tb) = eg.add_op(Op::Transpose { perm: pb }, vec![b]) else {
+                    return vec![];
+                };
+                let Ok(ta) = eg.add_op(Op::Transpose { perm: pa }, vec![a]) else {
+                    return vec![];
+                };
+                try_add(eg, Op::MatMul, vec![tb, ta])
+            },
+        ),
+        "core",
+        4,
+        27,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+
+    fn run(eg: &mut EGraph) {
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(eg, &rules, &RewriteCtx::default(), SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn running_example_block_inner() {
+        // matmul(concat(A1,A2; dim=1), concat(B1,B2; dim=0)) = sum(M1, M2)
+        let mut eg = EGraph::new();
+        let a1 = eg.add_leaf(t(0), vec![4, 3]);
+        let a2 = eg.add_leaf(t(1), vec![4, 3]);
+        let b1 = eg.add_leaf(t(2), vec![3, 5]);
+        let b2 = eg.add_leaf(t(3), vec![3, 5]);
+        let ca = eg.add_op(Op::Concat { dim: 1 }, vec![a1, a2]).unwrap();
+        let cb = eg.add_op(Op::Concat { dim: 0 }, vec![b1, b2]).unwrap();
+        let mm = eg.add_op(Op::MatMul, vec![ca, cb]).unwrap();
+        run(&mut eg);
+        let m1 = eg.lookup(&Op::MatMul, &[a1, b1]).unwrap();
+        let m2 = eg.lookup(&Op::MatMul, &[a2, b2]).unwrap();
+        let sum = eg.lookup(&Op::SumN, &[m1, m2]).unwrap();
+        assert!(eg.same(mm, sum), "block matmul lemma (Fig 2)");
+    }
+
+    #[test]
+    fn row_split_concat() {
+        let mut eg = EGraph::new();
+        let a1 = eg.add_leaf(t(0), vec![2, 3]);
+        let a2 = eg.add_leaf(t(1), vec![2, 3]);
+        let b = eg.add_leaf(t(2), vec![3, 5]);
+        let ca = eg.add_op(Op::Concat { dim: 0 }, vec![a1, a2]).unwrap();
+        let mm = eg.add_op(Op::MatMul, vec![ca, b]).unwrap();
+        run(&mut eg);
+        let m1 = eg.lookup(&Op::MatMul, &[a1, b]).unwrap();
+        let m2 = eg.lookup(&Op::MatMul, &[a2, b]).unwrap();
+        let cat = eg.lookup(&Op::Concat { dim: 0 }, &[m1, m2]).unwrap();
+        assert!(eg.same(mm, cat));
+    }
+
+    #[test]
+    fn col_split_concat() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 3]);
+        let b1 = eg.add_leaf(t(1), vec![3, 2]);
+        let b2 = eg.add_leaf(t(2), vec![3, 2]);
+        let cb = eg.add_op(Op::Concat { dim: 1 }, vec![b1, b2]).unwrap();
+        let mm = eg.add_op(Op::MatMul, vec![a, cb]).unwrap();
+        run(&mut eg);
+        let m1 = eg.lookup(&Op::MatMul, &[a, b1]).unwrap();
+        let m2 = eg.lookup(&Op::MatMul, &[a, b2]).unwrap();
+        let cat = eg.lookup(&Op::Concat { dim: 1 }, &[m1, m2]).unwrap();
+        assert!(eg.same(mm, cat));
+    }
+
+    #[test]
+    fn batched_row_split() {
+        // rank-3: concat along dim 1 (= row dim of rank-3 matmul)
+        let mut eg = EGraph::new();
+        let a1 = eg.add_leaf(t(0), vec![2, 3, 4]);
+        let a2 = eg.add_leaf(t(1), vec![2, 3, 4]);
+        let b = eg.add_leaf(t(2), vec![2, 4, 5]);
+        let ca = eg.add_op(Op::Concat { dim: 1 }, vec![a1, a2]).unwrap();
+        let mm = eg.add_op(Op::MatMul, vec![ca, b]).unwrap();
+        run(&mut eg);
+        let m1 = eg.lookup(&Op::MatMul, &[a1, b]).unwrap();
+        let m2 = eg.lookup(&Op::MatMul, &[a2, b]).unwrap();
+        let cat = eg.lookup(&Op::Concat { dim: 1 }, &[m1, m2]).unwrap();
+        assert!(eg.same(mm, cat));
+    }
+
+    #[test]
+    fn mismatched_inner_split_does_not_fire() {
+        // A split [4,3]+[4,3] but B split [2,5]+[4,5]: pairwise inner dims
+        // disagree (3 vs 2) — the bug-4 situation. No sum form may appear.
+        let mut eg = EGraph::new();
+        let a1 = eg.add_leaf(t(0), vec![4, 3]);
+        let a2 = eg.add_leaf(t(1), vec![4, 3]);
+        let b1 = eg.add_leaf(t(2), vec![2, 5]);
+        let b2 = eg.add_leaf(t(3), vec![4, 5]);
+        let ca = eg.add_op(Op::Concat { dim: 1 }, vec![a1, a2]).unwrap();
+        let cb = eg.add_op(Op::Concat { dim: 0 }, vec![b1, b2]).unwrap();
+        let mm = eg.add_op(Op::MatMul, vec![ca, cb]).unwrap();
+        run(&mut eg);
+        assert!(eg.lookup(&Op::MatMul, &[a1, b1]).is_none());
+        let _ = mm;
+    }
+
+    #[test]
+    fn scale_commutes_through_matmul() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 3]);
+        let b = eg.add_leaf(t(1), vec![3, 2]);
+        let sa = eg.add_op(Op::Scale { c: crate::ir::FBits::new(0.5) }, vec![a]).unwrap();
+        let mm = eg.add_op(Op::MatMul, vec![sa, b]).unwrap();
+        run(&mut eg);
+        let plain = eg.lookup(&Op::MatMul, &[a, b]).unwrap();
+        let scaled = eg.lookup(&Op::Scale { c: crate::ir::FBits::new(0.5) }, &[plain]).unwrap();
+        assert!(eg.same(mm, scaled));
+    }
+}

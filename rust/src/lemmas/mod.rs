@@ -1,0 +1,117 @@
+//! The rewrite-lemma library (paper §4.2.1, §5).
+//!
+//! A lemma `ρ_m(T_m) --C--> ρ_n(T_n)` states that two expressions are
+//! equivalent under condition `C`. Here each lemma is a [`Rewrite`]: an LHS
+//! pattern plus an applier closure that checks the condition (consulting the
+//! symbolic solver for non-concrete scalars, §5.2) and constructs the
+//! equivalent term(s). Because applications *union* e-classes, every lemma
+//! is effectively bidirectional once its trigger side matches — matching the
+//! paper's note that each lemma's converse is derivable.
+//!
+//! The library covers the ATen-style ops our evaluated models use, the
+//! collectives distribution strategies insert, and per-model custom ops
+//! (§6.5) — our L1 Pallas kernels among them. Every lemma carries metadata
+//! ([`LemmaMeta`]) feeding the Figure 6 (effort) and Figure 7 (usage
+//! heatmap) reproductions, and every lemma is numerically validated in
+//! `validate.rs`.
+
+pub mod collective;
+pub mod custom;
+pub mod custom_lemmas;
+pub mod elementwise;
+pub mod matmul;
+pub mod nn;
+pub mod reduction;
+pub mod structural;
+pub mod validate;
+
+use crate::egraph::Rewrite;
+
+/// Metadata per lemma for the effort/usage analyses (Fig 6, Fig 7).
+#[derive(Debug, Clone)]
+pub struct LemmaMeta {
+    pub name: &'static str,
+    /// Grouping used on the Fig 7 x-axis: "c" = clean-expression ops,
+    /// "core" = ATen-style compute ops, "v" = vLLM-style custom, "h" =
+    /// HLO-frontend, "pallas" = our L1 kernels.
+    pub group: &'static str,
+    /// #operators appearing in the lemma (paper's complexity measure, §6.5).
+    pub complexity: u32,
+    /// Lines of code of the lemma definition (Fig 6b CDF).
+    pub loc: u32,
+}
+
+pub struct Lemma {
+    pub rewrite: Rewrite,
+    pub meta: LemmaMeta,
+}
+
+impl Lemma {
+    pub fn new(rewrite: Rewrite, group: &'static str, complexity: u32, loc: u32) -> Self {
+        let name = rewrite.name;
+        Lemma { rewrite, meta: LemmaMeta { name, group, complexity, loc } }
+    }
+}
+
+/// The full standard library: every built-in lemma.
+pub fn standard_library() -> Vec<Lemma> {
+    let mut all = Vec::new();
+    all.extend(structural::lemmas());
+    all.extend(elementwise::lemmas());
+    all.extend(matmul::lemmas());
+    all.extend(reduction::lemmas());
+    all.extend(nn::lemmas());
+    all.extend(collective::lemmas());
+    all.extend(custom_lemmas::lemmas());
+    all
+}
+
+/// Engine-facing view: just the rewrites.
+pub fn standard_rewrites() -> Vec<Rewrite> {
+    standard_library().into_iter().map(|l| l.rewrite).collect()
+}
+
+/// Metadata-facing view (benches, reports).
+pub fn metadata() -> Vec<LemmaMeta> {
+    standard_library().into_iter().map(|l| l.meta).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use rustc_hash::FxHashSet;
+
+    #[test]
+    fn library_size_matches_paper_scale() {
+        let n = standard_library().len();
+        assert!(n >= 80, "paper ships 92 lemmas; we have {n}");
+    }
+
+    #[test]
+    fn lemma_names_unique() {
+        let mut seen = FxHashSet::default();
+        for l in standard_library() {
+            assert!(seen.insert(l.meta.name), "duplicate lemma '{}'", l.meta.name);
+        }
+    }
+
+    #[test]
+    fn groups_are_known() {
+        for l in standard_library() {
+            assert!(
+                matches!(l.meta.group, "c" | "core" | "v" | "h" | "pallas"),
+                "unknown group {} for {}",
+                l.meta.group,
+                l.meta.name
+            );
+        }
+    }
+
+    #[test]
+    fn complexity_positive() {
+        for l in standard_library() {
+            assert!(l.meta.complexity >= 1, "{}", l.meta.name);
+            assert!(l.meta.loc >= 1, "{}", l.meta.name);
+        }
+    }
+}

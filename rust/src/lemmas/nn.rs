@@ -1,0 +1,381 @@
+//! NN compound-op lemmas: RMSNorm / LayerNorm / RoPE / Embedding sharding.
+//! These include the paper's worked §6.5 example (RMSNorm over a sequence
+//! concat) and the constrained RoPE lemma whose failure localizes Bug 1.
+
+use super::structural::{s_eq, try_add};
+use super::Lemma;
+use crate::egraph::{ELang, Id, POp, Pat, Rewrite};
+use crate::ir::{Op, OpTag};
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // RMSNorm(concat(xs, d), W) = concat(RMSNorm(xi, W), d) when d is not
+    // the normalized (last) dim — the paper's §6.5 example lemma.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "rmsnorm_row_split",
+            Pat::node(
+                POp::Bind { tag: OpTag::RmsNorm, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0), Pat::var(0)],
+            ),
+            |eg, s, _| {
+                let norm = s.op(0).clone();
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let w = s.var(0);
+                let parts = s.list(0).to_vec();
+                let Some(rank) = eg.shape(parts[0]).map(|s| s.len()) else { return vec![] };
+                if cdim == rank - 1 {
+                    return vec![]; // splitting the normalized dim is NOT valid
+                }
+                let normed: Option<Vec<Id>> = parts
+                    .iter()
+                    .map(|&p| eg.add_op(norm.clone(), vec![p, w]).ok())
+                    .collect();
+                let Some(normed) = normed else { return vec![] };
+                try_add(eg, Op::Concat { dim: cdim }, normed)
+            },
+        ),
+        "core",
+        3,
+        22,
+    ));
+
+    // LayerNorm(concat(xs, d), W, B) likewise.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "layernorm_row_split",
+            Pat::node(
+                POp::Bind { tag: OpTag::LayerNorm, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0), Pat::var(0), Pat::var(1)],
+            ),
+            |eg, s, _| {
+                let norm = s.op(0).clone();
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let (w, b) = (s.var(0), s.var(1));
+                let parts = s.list(0).to_vec();
+                let Some(rank) = eg.shape(parts[0]).map(|s| s.len()) else { return vec![] };
+                if cdim == rank - 1 {
+                    return vec![];
+                }
+                let normed: Option<Vec<Id>> = parts
+                    .iter()
+                    .map(|&p| eg.add_op(norm.clone(), vec![p, w, b]).ok())
+                    .collect();
+                let Some(normed) = normed else { return vec![] };
+                try_add(eg, Op::Concat { dim: cdim }, normed)
+            },
+        ),
+        "core",
+        3,
+        22,
+    ));
+
+    // CONSTRAINED RoPE sequence-split (Bug 1's lemma):
+    //   rope(concat(xs, seq_dim), cos, sin)
+    //     = concat(rope(xi, slice(cos, offᵢ..offᵢ₊₁), slice(sin, ...)), seq)
+    // The cos/sin slices must already exist as e-nodes (they are what the
+    // distributed implementation computes); we search the cos/sin classes'
+    // parents for slices at exactly the partition offsets. A wrong offset in
+    // the implementation means the needed slice doesn't exist ⇒ lemma can't
+    // fire ⇒ no clean mapping for the RoPE output.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "rope_seq_split",
+            Pat::node(
+                POp::Exact(Op::Rope),
+                vec![Pat::bind_variadic(OpTag::Concat, 0, 0), Pat::var(0), Pat::var(1)],
+            ),
+            |eg, s, ctx| {
+                let cdim = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts = s.list(0).to_vec();
+                let (cos, sin) = (s.var(0), s.var(1));
+                let Some(rank) = eg.shape(parts[0]).map(|v| v.len()) else { return vec![] };
+                // rope rotates over (seq, head) = last two dims; the split
+                // must be along seq = rank-2
+                if cdim != rank - 2 {
+                    return vec![];
+                }
+                // partition offsets along seq
+                let mut offs = vec![0i64];
+                for &p in &parts {
+                    let Some(sh) = eg.shape(p) else { return vec![] };
+                    offs.push(offs.last().unwrap() + sh[cdim]);
+                }
+                // find slice(cos, 0, off_i..off_{i+1}) among cos's parents
+                let find_slice = |eg: &crate::egraph::EGraph, tbl: Id, lo: i64, hi: i64| {
+                    for (node, pid) in &eg.class(tbl).parents {
+                        if let ELang::Op(Op::Slice { dim: 0, start, end }) = &node.lang {
+                            if node.children.first().map(|&c| eg.find(c)) == Some(eg.find(tbl))
+                                && s_eq(ctx, start, &lo.into())
+                                && s_eq(ctx, end, &hi.into())
+                            {
+                                return Some(eg.find(*pid));
+                            }
+                        }
+                    }
+                    None
+                };
+                let mut roped = Vec::with_capacity(parts.len());
+                for (i, &p) in parts.iter().enumerate() {
+                    let (lo, hi) = (offs[i], offs[i + 1]);
+                    let (Some(cs), Some(ss)) =
+                        (find_slice(eg, cos, lo, hi), find_slice(eg, sin, lo, hi))
+                    else {
+                        return vec![]; // required table slice missing
+                    };
+                    match eg.add_op(Op::Rope, vec![p, cs, ss]) {
+                        Ok(r) => roped.push(r),
+                        Err(_) => return vec![],
+                    }
+                }
+                try_add(eg, Op::Concat { dim: cdim }, roped)
+            },
+        ),
+        "core",
+        4,
+        48,
+    ));
+
+    // embedding(table, concat(ids, 0)) = concat(embedding(table, ids_i), 0)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "embedding_seq_split",
+            Pat::node(
+                POp::Exact(Op::Embedding),
+                vec![Pat::var(0), Pat::bind_variadic(OpTag::Concat, 0, 0)],
+            ),
+            |eg, s, _| {
+                let cdim = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                if cdim != 0 {
+                    return vec![];
+                }
+                let table = s.var(0);
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&ids| eg.add_op(Op::Embedding, vec![table, ids]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::Concat { dim: 0 }, parts)
+            },
+        ),
+        "core",
+        3,
+        18,
+    ));
+
+    // rope(slice(x; seq, a, b), slice(cos; 0, a, b), slice(sin; 0, a, b))
+    //   = slice(rope(x, cos, sin); seq, a, b) — the per-rank direction.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "rope_of_slices",
+            Pat::node(
+                POp::Exact(Op::Rope),
+                vec![
+                    Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]),
+                    Pat::bind(OpTag::Slice, 1, vec![Pat::var(1)]),
+                    Pat::bind(OpTag::Slice, 2, vec![Pat::var(2)]),
+                ],
+            ),
+            |eg, s, ctx| {
+                let (xd, xa, xb) = match s.op(0) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                let (cd, ca, cb) = match s.op(1) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                let (sd, sa, sb) = match s.op(2) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                let (x, cos, sin) = (s.var(0), s.var(1), s.var(2));
+                let Some(rank) = eg.shape(x).map(|v| v.len()) else { return vec![] };
+                // x sliced along seq (rank-2); cos/sin along their dim 0
+                if xd != rank - 2 || cd != 0 || sd != 0 {
+                    return vec![];
+                }
+                if !(s_eq(ctx, &xa, &ca)
+                    && s_eq(ctx, &xb, &cb)
+                    && s_eq(ctx, &xa, &sa)
+                    && s_eq(ctx, &xb, &sb))
+                {
+                    return vec![];
+                }
+                let Ok(full) = eg.add_op(Op::Rope, vec![x, cos, sin]) else { return vec![] };
+                try_add(eg, Op::Slice { dim: xd, start: xa, end: xb }, vec![full])
+            },
+        ),
+        "core",
+        5,
+        38,
+    ));
+
+    // softmax(pad(x; last, 0, k, -inf); last) restricted back = softmax(x):
+    // -inf padding contributes zero probability mass.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "softmax_neg_inf_pad",
+            Pat::node(
+                POp::Bind { tag: OpTag::Slice, slot: 0 },
+                vec![Pat::node(
+                    POp::Bind { tag: OpTag::Softmax, slot: 1 },
+                    vec![Pat::bind(OpTag::Pad, 2, vec![Pat::var(0)])],
+                )],
+            ),
+            |eg, s, ctx| {
+                let (sdim, a, b) = match s.op(0) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                let smdim = match s.op(1) {
+                    Op::Softmax { dim } => *dim,
+                    _ => return vec![],
+                };
+                let (pdim, before, value) = match s.op(2) {
+                    Op::Pad { dim, before, value, .. } => (*dim, before.clone(), *value),
+                    _ => return vec![],
+                };
+                let x = s.var(0);
+                let Some(shape) = eg.shape(x).map(|v| v.to_vec()) else { return vec![] };
+                if sdim != smdim || pdim != smdim || value.get() != f64::NEG_INFINITY {
+                    return vec![];
+                }
+                // slice must exactly undo the pad
+                if !(s_eq(ctx, &a, &before)
+                    && s_eq(ctx, &b, &before.add(&shape[pdim].into())))
+                {
+                    return vec![];
+                }
+                try_add(eg, Op::Softmax { dim: smdim }, vec![x])
+            },
+        ),
+        "core",
+        4,
+        33,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, EGraph, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+    use crate::ir::FBits;
+
+    fn run(eg: &mut EGraph) {
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(eg, &rules, &RewriteCtx::default(), SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn rmsnorm_splits_over_sequence() {
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 8]);
+        let x2 = eg.add_leaf(t(1), vec![2, 8]);
+        let w = eg.add_leaf(t(2), vec![8]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![x1, x2]).unwrap();
+        let eps = FBits::new(1e-6);
+        let norm = eg.add_op(Op::RmsNorm { eps }, vec![cat, w]).unwrap();
+        run(&mut eg);
+        let n1 = eg.lookup(&Op::RmsNorm { eps }, &[x1, w]).unwrap();
+        let n2 = eg.lookup(&Op::RmsNorm { eps }, &[x2, w]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[n1, n2]).unwrap();
+        assert!(eg.same(norm, expect));
+    }
+
+    #[test]
+    fn rmsnorm_must_not_split_hidden_dim() {
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 4]);
+        let x2 = eg.add_leaf(t(1), vec![2, 4]);
+        let w = eg.add_leaf(t(2), vec![8]);
+        let cat = eg.add_op(Op::Concat { dim: 1 }, vec![x1, x2]).unwrap();
+        let eps = FBits::new(1e-6);
+        let _norm = eg.add_op(Op::RmsNorm { eps }, vec![cat, w]).unwrap();
+        run(&mut eg);
+        // splitting the normalized dim changes semantics; must not fire
+        assert!(eg.lookup(&Op::RmsNorm { eps }, &[x1, w]).is_none());
+    }
+
+    #[test]
+    fn rope_seq_split_with_correct_offsets() {
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 4]); // [seq=2, d=4]
+        let x2 = eg.add_leaf(t(1), vec![2, 4]);
+        let cos = eg.add_leaf(t(2), vec![4, 4]);
+        let sin = eg.add_leaf(t(3), vec![4, 4]);
+        // the distributed implementation computes the CORRECT table slices
+        let c1 = eg.add_op(Op::Slice { dim: 0, start: 0.into(), end: 2.into() }, vec![cos]).unwrap();
+        let c2 = eg.add_op(Op::Slice { dim: 0, start: 2.into(), end: 4.into() }, vec![cos]).unwrap();
+        let s1 = eg.add_op(Op::Slice { dim: 0, start: 0.into(), end: 2.into() }, vec![sin]).unwrap();
+        let s2 = eg.add_op(Op::Slice { dim: 0, start: 2.into(), end: 4.into() }, vec![sin]).unwrap();
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![x1, x2]).unwrap();
+        let full = eg.add_op(Op::Rope, vec![cat, cos, sin]).unwrap();
+        run(&mut eg);
+        let r1 = eg.lookup(&Op::Rope, &[x1, c1, s1]).expect("per-rank rope exists");
+        let r2 = eg.lookup(&Op::Rope, &[x2, c2, s2]).expect("per-rank rope exists");
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[r1, r2]).unwrap();
+        assert!(eg.same(full, expect));
+    }
+
+    #[test]
+    fn rope_seq_split_blocked_by_wrong_offset() {
+        // Bug 1: backward slices start at 0 for BOTH ranks. The rank-1 slice
+        // [2,4) doesn't exist, so the lemma cannot fire.
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 4]);
+        let x2 = eg.add_leaf(t(1), vec![2, 4]);
+        let cos = eg.add_leaf(t(2), vec![4, 4]);
+        let sin = eg.add_leaf(t(3), vec![4, 4]);
+        // BUGGY: both ranks slice [0,2)
+        let _c1 = eg.add_op(Op::Slice { dim: 0, start: 0.into(), end: 2.into() }, vec![cos]).unwrap();
+        let _s1 = eg.add_op(Op::Slice { dim: 0, start: 0.into(), end: 2.into() }, vec![sin]).unwrap();
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![x1, x2]).unwrap();
+        let full = eg.add_op(Op::Rope, vec![cat, cos, sin]).unwrap();
+        run(&mut eg);
+        // no per-rank decomposition of `full` may exist
+        for node in &eg.class(full).nodes {
+            assert!(
+                !matches!(node.lang, ELang::Op(Op::Concat { .. })),
+                "buggy offsets must not produce a concat form"
+            );
+        }
+    }
+
+    #[test]
+    fn embedding_splits_ids() {
+        let mut eg = EGraph::new();
+        let table = eg.add_leaf(t(0), vec![16, 4]);
+        let i1 = eg.add_leaf(t(1), vec![3]);
+        let i2 = eg.add_leaf(t(2), vec![3]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![i1, i2]).unwrap();
+        let emb = eg.add_op(Op::Embedding, vec![table, cat]).unwrap();
+        run(&mut eg);
+        let e1 = eg.lookup(&Op::Embedding, &[table, i1]).unwrap();
+        let e2 = eg.lookup(&Op::Embedding, &[table, i2]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[e1, e2]).unwrap();
+        assert!(eg.same(emb, expect));
+    }
+}

@@ -1,0 +1,415 @@
+//! Reduction lemmas: reduce_sum / reduce_mean / reduce_max / softmax over
+//! concatenated shards, plus the mean/scale identities that gradient
+//! accumulation (§6.2 bug 6) hinges on.
+
+use super::structural::try_add;
+use super::Lemma;
+use crate::egraph::{Id, POp, Pat, Rewrite};
+use crate::ir::{FBits, Op, OpTag};
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // reduce_sum(concat(xs, d); d) = sum(reduce_sum(xi; d))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "reducesum_concat_same_dim",
+            Pat::node(
+                POp::Bind { tag: OpTag::ReduceSum, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let (rdim, keepdim) = match s.op(0) {
+                    Op::ReduceSum { dim, keepdim } => (*dim, *keepdim),
+                    _ => return vec![],
+                };
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                if rdim != cdim {
+                    return vec![];
+                }
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(Op::ReduceSum { dim: rdim, keepdim }, vec![p]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::SumN, parts)
+            },
+        ),
+        "core",
+        3,
+        18,
+    ));
+
+    // reduce_{sum,mean,max}(concat(xs, d); d') with d' != d distributes as
+    // a concat over the (possibly shifted) dim.
+    for (name, tag) in [
+        ("reducesum_concat_other_dim", OpTag::ReduceSum),
+        ("reducemean_concat_other_dim", OpTag::ReduceMean),
+        ("reducemax_concat_other_dim", OpTag::ReduceMax),
+    ] {
+        v.push(Lemma::new(
+            Rewrite::new(
+                name,
+                Pat::node(
+                    POp::Bind { tag, slot: 0 },
+                    vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+                ),
+                |eg, s, _| {
+                    let red = s.op(0).clone();
+                    let (rdim, keepdim) = match &red {
+                        Op::ReduceSum { dim, keepdim }
+                        | Op::ReduceMean { dim, keepdim }
+                        | Op::ReduceMax { dim, keepdim } => (*dim, *keepdim),
+                        _ => return vec![],
+                    };
+                    let cdim = match s.op(1) {
+                        Op::Concat { dim } => *dim,
+                        _ => return vec![],
+                    };
+                    if rdim == cdim {
+                        return vec![];
+                    }
+                    let parts: Option<Vec<Id>> = s
+                        .list(0)
+                        .iter()
+                        .map(|&p| eg.add_op(red.clone(), vec![p]).ok())
+                        .collect();
+                    let Some(parts) = parts else { return vec![] };
+                    let new_dim =
+                        if !keepdim && rdim < cdim { cdim - 1 } else { cdim };
+                    try_add(eg, Op::Concat { dim: new_dim }, parts)
+                },
+            ),
+            "core",
+            3,
+            26,
+        ));
+    }
+
+    // reduce_max(concat(xs, d); d) = pairwise maximum of the shard maxima
+    v.push(Lemma::new(
+        Rewrite::new(
+            "reducemax_concat_same_dim",
+            Pat::node(
+                POp::Bind { tag: OpTag::ReduceMax, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let (rdim, keepdim) = match s.op(0) {
+                    Op::ReduceMax { dim, keepdim } => (*dim, *keepdim),
+                    _ => return vec![],
+                };
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                if rdim != cdim {
+                    return vec![];
+                }
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(Op::ReduceMax { dim: rdim, keepdim }, vec![p]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                let mut acc = parts[0];
+                for &p in &parts[1..] {
+                    match eg.add_op(Op::Maximum, vec![acc, p]) {
+                        Ok(m) => acc = m,
+                        Err(_) => return vec![],
+                    }
+                }
+                vec![acc]
+            },
+        ),
+        "core",
+        4,
+        27,
+    ));
+
+    // reduce_mean(concat(xs, d); d) = scale(sum(reduce_mean(xi; d)), 1/k)
+    // for equal-size parts. The RHS contains a Scale — NOT clean — which is
+    // precisely why an unscaled gradient-accumulation loss (bug 6) fails to
+    // map cleanly while a correctly rescaled one succeeds.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "reducemean_concat_same_dim",
+            Pat::node(
+                POp::Bind { tag: OpTag::ReduceMean, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let (rdim, keepdim) = match s.op(0) {
+                    Op::ReduceMean { dim, keepdim } => (*dim, *keepdim),
+                    _ => return vec![],
+                };
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                if rdim != cdim {
+                    return vec![];
+                }
+                let parts = s.list(0).to_vec();
+                let k = parts.len();
+                let first = eg.shape(parts[0]).map(|v| v.to_vec());
+                if parts.iter().any(|&p| eg.shape(p).map(|v| v.to_vec()) != first) {
+                    return vec![];
+                }
+                let means: Option<Vec<Id>> = parts
+                    .iter()
+                    .map(|&p| eg.add_op(Op::ReduceMean { dim: rdim, keepdim }, vec![p]).ok())
+                    .collect();
+                let Some(means) = means else { return vec![] };
+                let Ok(total) = eg.add_op(Op::SumN, means) else { return vec![] };
+                try_add(eg, Op::Scale { c: FBits::new(1.0 / k as f64) }, vec![total])
+            },
+        ),
+        "core",
+        4,
+        30,
+    ));
+
+    // mse_loss(concat(ps,0), concat(ts,0)) = scale(sum(mse(pi,ti)), 1/k)
+    // equal microbatches — the gradient-accumulation loss lemma.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "mse_microbatch",
+            Pat::node(
+                POp::Exact(Op::MseLoss),
+                vec![
+                    Pat::bind_variadic(OpTag::Concat, 0, 0),
+                    Pat::bind_variadic(OpTag::Concat, 1, 1),
+                ],
+            ),
+            |eg, s, _| {
+                let (d1, d2) = match (s.op(0), s.op(1)) {
+                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    _ => return vec![],
+                };
+                if d1 != 0 || d2 != 0 || s.list(0).len() != s.list(1).len() {
+                    return vec![];
+                }
+                let k = s.list(0).len();
+                let first = eg.shape(s.list(0)[0]).map(|v| v.to_vec());
+                for &p in s.list(0).iter().chain(s.list(1)) {
+                    if eg.shape(p).map(|v| v.to_vec()) != first {
+                        return vec![];
+                    }
+                }
+                let losses: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .zip(s.list(1))
+                    .map(|(&p, &t)| eg.add_op(Op::MseLoss, vec![p, t]).ok())
+                    .collect();
+                let Some(losses) = losses else { return vec![] };
+                let Ok(total) = eg.add_op(Op::SumN, losses) else { return vec![] };
+                try_add(eg, Op::Scale { c: FBits::new(1.0 / k as f64) }, vec![total])
+            },
+        ),
+        "core",
+        5,
+        32,
+    ));
+
+    // softmax(concat(xs, d); d') = concat(softmax(xi; d'), d) for d != d' —
+    // the sequence-parallel softmax (each row normalized independently).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "softmax_concat_other_dim",
+            Pat::node(
+                POp::Bind { tag: OpTag::Softmax, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let sdim = match s.op(0) {
+                    Op::Softmax { dim } => *dim,
+                    _ => return vec![],
+                };
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                if sdim == cdim {
+                    return vec![];
+                }
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| eg.add_op(Op::Softmax { dim: sdim }, vec![p]).ok())
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::Concat { dim: cdim }, parts)
+            },
+        ),
+        "core",
+        3,
+        20,
+    ));
+
+    // linearity: reduce_{sum,mean}(sum(xs); d) = sum(reduce(xi; d))
+    for (name, is_mean) in
+        [("reducesum_over_sum", false), ("reducemean_over_sum", true)]
+    {
+        let tag = if is_mean { OpTag::ReduceMean } else { OpTag::ReduceSum };
+        v.push(Lemma::new(
+            Rewrite::new(
+                name,
+                Pat::node(
+                    POp::Bind { tag, slot: 0 },
+                    vec![Pat::bind_variadic(OpTag::SumN, 1, 0)],
+                ),
+                |eg, s, _| {
+                    let red = s.op(0).clone();
+                    let parts: Option<Vec<Id>> = s
+                        .list(0)
+                        .iter()
+                        .map(|&p| eg.add_op(red.clone(), vec![p]).ok())
+                        .collect();
+                    let Some(parts) = parts else { return vec![] };
+                    try_add(eg, Op::SumN, parts)
+                },
+            ),
+            "core",
+            3,
+            14,
+        ));
+    }
+
+    // reduce over slice: reduce_sum(slice(x; d', a, b); d) commutes when
+    // d != d' — lets reductions pass through sequence shards.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "reducesum_over_slice",
+            Pat::node(
+                POp::Bind { tag: OpTag::ReduceSum, slot: 0 },
+                vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
+            ),
+            |eg, s, _| {
+                let (rdim, keepdim) = match s.op(0) {
+                    Op::ReduceSum { dim, keepdim } => (*dim, *keepdim),
+                    _ => return vec![],
+                };
+                let (sdim, a, b) = match s.op(1) {
+                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    _ => return vec![],
+                };
+                if rdim == sdim {
+                    return vec![];
+                }
+                let x = s.var(0);
+                let Ok(red) = eg.add_op(Op::ReduceSum { dim: rdim, keepdim }, vec![x]) else {
+                    return vec![];
+                };
+                let new_sdim = if !keepdim && rdim < sdim { sdim - 1 } else { sdim };
+                try_add(eg, Op::Slice { dim: new_sdim, start: a, end: b }, vec![red])
+            },
+        ),
+        "core",
+        3,
+        24,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, EGraph, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+
+    fn run(eg: &mut EGraph) {
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(eg, &rules, &RewriteCtx::default(), SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn reducesum_same_dim_becomes_shard_sum() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let red = eg.add_op(Op::ReduceSum { dim: 0, keepdim: false }, vec![cat]).unwrap();
+        run(&mut eg);
+        let ra = eg.lookup(&Op::ReduceSum { dim: 0, keepdim: false }, &[a]).unwrap();
+        let rb = eg.lookup(&Op::ReduceSum { dim: 0, keepdim: false }, &[b]).unwrap();
+        let sum = eg.lookup(&Op::SumN, &[ra, rb]).unwrap();
+        assert!(eg.same(red, sum));
+    }
+
+    #[test]
+    fn reducesum_other_dim_shifts_concat_dim() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let cat = eg.add_op(Op::Concat { dim: 1 }, vec![a, b]).unwrap();
+        // reduce dim 0 (without keepdim) -> concat dim shifts 1 -> 0
+        let red = eg.add_op(Op::ReduceSum { dim: 0, keepdim: false }, vec![cat]).unwrap();
+        run(&mut eg);
+        let ra = eg.lookup(&Op::ReduceSum { dim: 0, keepdim: false }, &[a]).unwrap();
+        let rb = eg.lookup(&Op::ReduceSum { dim: 0, keepdim: false }, &[b]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[ra, rb]).unwrap();
+        assert!(eg.same(red, expect));
+    }
+
+    #[test]
+    fn mean_same_dim_needs_scale() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let mean = eg.add_op(Op::ReduceMean { dim: 0, keepdim: false }, vec![cat]).unwrap();
+        run(&mut eg);
+        let ma = eg.lookup(&Op::ReduceMean { dim: 0, keepdim: false }, &[a]).unwrap();
+        let mb = eg.lookup(&Op::ReduceMean { dim: 0, keepdim: false }, &[b]).unwrap();
+        let sum = eg.lookup(&Op::SumN, &[ma, mb]).unwrap();
+        let scaled = eg.lookup(&Op::Scale { c: FBits::new(0.5) }, &[sum]).unwrap();
+        assert!(eg.same(mean, scaled));
+        // and crucially the UNSCALED sum is NOT equivalent
+        assert!(!eg.same(mean, sum), "unscaled accumulation differs (bug 6)");
+    }
+
+    #[test]
+    fn mse_microbatch_lemma() {
+        let mut eg = EGraph::new();
+        let p1 = eg.add_leaf(t(0), vec![2, 3]);
+        let p2 = eg.add_leaf(t(1), vec![2, 3]);
+        let t1 = eg.add_leaf(t(2), vec![2, 3]);
+        let t2 = eg.add_leaf(t(3), vec![2, 3]);
+        let cp = eg.add_op(Op::Concat { dim: 0 }, vec![p1, p2]).unwrap();
+        let ct = eg.add_op(Op::Concat { dim: 0 }, vec![t1, t2]).unwrap();
+        let loss = eg.add_op(Op::MseLoss, vec![cp, ct]).unwrap();
+        run(&mut eg);
+        let l1 = eg.lookup(&Op::MseLoss, &[p1, t1]).unwrap();
+        let l2 = eg.lookup(&Op::MseLoss, &[p2, t2]).unwrap();
+        let sum = eg.lookup(&Op::SumN, &[l1, l2]).unwrap();
+        let scaled = eg.lookup(&Op::Scale { c: FBits::new(0.5) }, &[sum]).unwrap();
+        assert!(eg.same(loss, scaled));
+        assert!(!eg.same(loss, sum));
+    }
+
+    #[test]
+    fn softmax_distributes_over_row_shards() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let sm = eg.add_op(Op::Softmax { dim: 1 }, vec![cat]).unwrap();
+        run(&mut eg);
+        let sa = eg.lookup(&Op::Softmax { dim: 1 }, &[a]).unwrap();
+        let sb = eg.lookup(&Op::Softmax { dim: 1 }, &[b]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[sa, sb]).unwrap();
+        assert!(eg.same(sm, expect));
+    }
+}

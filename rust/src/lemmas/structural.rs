@@ -1,0 +1,932 @@
+//! Lemmas over the clean/structural ops: slice, concat, transpose, reshape,
+//! pad, sum. These are the "c"-group lemmas that Figure 7 shows dominating
+//! every verification run.
+
+use super::Lemma;
+use crate::egraph::{EGraph, Id, Pat, Rewrite, RewriteCtx, Subst};
+use crate::ir::{Op, OpTag};
+use crate::symbolic::{Scalar, Truth};
+
+/// `add_op` that swallows shape errors (a rewrite that would build an
+/// ill-shaped term simply does not fire).
+pub(crate) fn try_add(eg: &mut EGraph, op: Op, children: Vec<Id>) -> Vec<Id> {
+    eg.add_op(op, children).into_iter().collect()
+}
+
+/// Solver-aware scalar equality (concrete fast path).
+pub(crate) fn s_eq(ctx: &RewriteCtx, a: &Scalar, b: &Scalar) -> bool {
+    if let (Some(x), Some(y)) = (a.as_const(), b.as_const()) {
+        return x == y;
+    }
+    ctx.solver.check_eq(&a.0, &b.0) == Truth::True
+}
+
+fn slice_attrs(op: &Op) -> (usize, Scalar, Scalar) {
+    match op {
+        Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+        _ => unreachable!("slice op expected"),
+    }
+}
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // ---- slice algebra ----
+
+    // slice(x, 0, len(x)) = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_full_identity",
+            Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]),
+            |eg: &mut EGraph, s: &Subst, ctx: &RewriteCtx| {
+                let (dim, start, end) = slice_attrs(s.op(0));
+                let x = s.var(0);
+                let Some(shape) = eg.shape(x) else { return vec![] };
+                if dim < shape.len()
+                    && s_eq(ctx, &start, &0.into())
+                    && s_eq(ctx, &end, &shape[dim].into())
+                {
+                    vec![x]
+                } else {
+                    vec![]
+                }
+            },
+        ),
+        "c",
+        1,
+        14,
+    ));
+
+    // slice(slice(x, a, b), c, d) = slice(x, a+c, a+d)   [same dim]
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_of_slice",
+            Pat::bind(OpTag::Slice, 0, vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])]),
+            |eg, s, _ctx| {
+                let (d_out, c, d) = slice_attrs(s.op(0));
+                let (d_in, a, _b) = slice_attrs(s.op(1));
+                if d_out != d_in {
+                    return vec![];
+                }
+                let x = s.var(0);
+                try_add(
+                    eg,
+                    Op::Slice { dim: d_in, start: a.add(&c), end: a.add(&d) },
+                    vec![x],
+                )
+            },
+        ),
+        "c",
+        2,
+        13,
+    ));
+
+    // CONSTRAINED (§4.3.2): adjacent slices of the same class merge —
+    //   concat(slice(x,a,b), slice(x,b,c)) = slice(x,a,c),
+    // and when [a,c) covers x entirely, = x. Triggered from a slice enode;
+    // the sibling slice must ALREADY exist (we scan x's parents), which is
+    // exactly the paper's ENode-existence constraint.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "adjacent_slices_concat",
+            Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]),
+            |eg, s, ctx| {
+                let (dim, a, b) = slice_attrs(s.op(0));
+                let x = s.var(0);
+                let Some(xshape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
+                let this = match eg.lookup(s.op(0), &[x]) {
+                    Some(id) => id,
+                    None => return vec![],
+                };
+                // find sibling slices slice(x, b, c) among x's parents
+                let mut siblings: Vec<(Id, Scalar)> = Vec::new();
+                for (node, pid) in &eg.class(x).parents {
+                    if let crate::egraph::ELang::Op(Op::Slice { dim: d2, start: s2, end: e2 }) =
+                        &node.lang
+                    {
+                        if *d2 == dim
+                            && node.children.first().map(|&c| eg.find(c)) == Some(eg.find(x))
+                            && s_eq(ctx, s2, &b)
+                        {
+                            siblings.push((eg.find(*pid), e2.clone()));
+                        }
+                    }
+                }
+                let mut out = Vec::new();
+                for (sib, c_end) in siblings {
+                    let Ok(cat) = eg.add_op(Op::Concat { dim }, vec![this, sib]) else {
+                        continue;
+                    };
+                    // concat = slice(x, a, c)
+                    if let Ok(merged) = eg.add_op(
+                        Op::Slice { dim, start: a.clone(), end: c_end.clone() },
+                        vec![x],
+                    ) {
+                        let _ = eg.union(cat, merged);
+                    }
+                    if s_eq(ctx, &a, &0.into()) && s_eq(ctx, &c_end, &xshape[dim].into()) {
+                        let _ = eg.union(cat, x);
+                    }
+                    out.push(cat);
+                }
+                // `out` ids are equivalents of... nothing relative to root
+                // (root is the small slice); unions already recorded above.
+                let _ = out;
+                vec![]
+            },
+        ),
+        "c",
+        3,
+        40,
+    ));
+
+    // slice(concat(xs, d), a, b) over the SAME dim: if [a,b) falls inside
+    // exactly one part, or exactly covers a contiguous run of parts, rewrite
+    // to that part-slice / concat of parts.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_of_concat",
+            Pat::node(
+                crate::egraph::POp::Bind { tag: OpTag::Slice, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, ctx| {
+                let (sdim, a, b) = slice_attrs(s.op(0));
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts: Vec<Id> = s.list(0).to_vec();
+                if sdim != cdim {
+                    // different dim: slice each part
+                    let sliced: Option<Vec<Id>> = parts
+                        .iter()
+                        .map(|&p| {
+                            eg.add_op(
+                                Op::Slice { dim: sdim, start: a.clone(), end: b.clone() },
+                                vec![p],
+                            )
+                            .ok()
+                        })
+                        .collect();
+                    let Some(sliced) = sliced else { return vec![] };
+                    return try_add(eg, Op::Concat { dim: cdim }, sliced);
+                }
+                // same dim: compute part offsets (concrete shapes only)
+                let (Some(a), Some(b)) = (a.as_const(), b.as_const()) else { return vec![] };
+                let mut offsets = vec![0i64];
+                for &p in &parts {
+                    let Some(shape) = eg.shape(p) else { return vec![] };
+                    if cdim >= shape.len() {
+                        return vec![];
+                    }
+                    offsets.push(offsets.last().unwrap() + shape[cdim]);
+                }
+                // inside a single part?
+                for (i, &p) in parts.iter().enumerate() {
+                    if offsets[i] <= a && b <= offsets[i + 1] {
+                        return try_add(
+                            eg,
+                            Op::Slice {
+                                dim: cdim,
+                                start: (a - offsets[i]).into(),
+                                end: (b - offsets[i]).into(),
+                            },
+                            vec![p],
+                        );
+                    }
+                }
+                // aligned run of whole parts?
+                if let (Some(lo), Some(hi)) = (
+                    offsets.iter().position(|&o| o == a),
+                    offsets.iter().position(|&o| o == b),
+                ) {
+                    if hi > lo {
+                        let run: Vec<Id> = parts[lo..hi].to_vec();
+                        if run.len() == 1 {
+                            return vec![run[0]];
+                        }
+                        return try_add(eg, Op::Concat { dim: cdim }, run);
+                    }
+                }
+                let _ = ctx;
+                vec![]
+            },
+        ),
+        "c",
+        3,
+        55,
+    ));
+
+    // concat(x) = x  (singleton)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "concat_singleton",
+            Pat::bind_variadic(OpTag::Concat, 0, 0),
+            |_eg, s, _| {
+                let parts = s.list(0);
+                if parts.len() == 1 {
+                    vec![parts[0]]
+                } else {
+                    vec![]
+                }
+            },
+        ),
+        "c",
+        1,
+        8,
+    ));
+
+    // concat(.., concat(ys, d), .., d) flattens
+    v.push(Lemma::new(
+        Rewrite::new(
+            "concat_flatten",
+            Pat::bind_variadic(OpTag::Concat, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts = s.list(0).to_vec();
+                // find a part that is itself a concat along the same dim
+                let mut flat: Vec<Id> = Vec::new();
+                let mut changed = false;
+                for &p in &parts {
+                    let mut inlined = false;
+                    if !changed {
+                        for node in &eg.class(p).nodes {
+                            if let crate::egraph::ELang::Op(Op::Concat { dim: d2 }) = &node.lang {
+                                if *d2 == dim {
+                                    flat.extend(node.children.iter().copied());
+                                    inlined = true;
+                                    changed = true;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    if !inlined {
+                        flat.push(p);
+                    }
+                }
+                if !changed {
+                    return vec![];
+                }
+                try_add(eg, Op::Concat { dim }, flat)
+            },
+        ),
+        "c",
+        2,
+        28,
+    ));
+
+    // CONSTRAINED: group a flat concat around an existing sub-concat —
+    //   concat(a, b, c, d; dim) = concat(concat(a,b), concat(c,d); dim)
+    // fires only when a contiguous run already exists as a concat e-node
+    // (e.g. G_d's per-rank `attn_r = concat(heads of rank r)`), so flat
+    // per-head concats in G_s regroup into per-rank shards.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "concat_group",
+            Pat::bind_variadic(OpTag::Concat, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                let parts = s.list(0).to_vec();
+                let n = parts.len();
+                if n < 3 {
+                    return vec![];
+                }
+                // Greedy longest-match partition: walk left to right,
+                // replacing the longest run that already exists as a concat
+                // e-node. One grouping per match keeps this linear — the
+                // exhaustive O(n²) sub-run enumeration explodes on wide
+                // per-head concats (see EXPERIMENTS.md §Perf iteration 2).
+                let mut grouped: Vec<Id> = Vec::with_capacity(n);
+                let mut i = 0usize;
+                let mut changed = false;
+                while i < n {
+                    let mut matched = None;
+                    let mut j = n.min(i + 16);
+                    while j >= i + 2 {
+                        if j - i < n {
+                            if let Some(group) = eg.lookup(&Op::Concat { dim }, &parts[i..j]) {
+                                matched = Some((group, j));
+                                break;
+                            }
+                        }
+                        j -= 1;
+                    }
+                    match matched {
+                        Some((group, j)) => {
+                            grouped.push(group);
+                            changed = true;
+                            i = j;
+                        }
+                        None => {
+                            grouped.push(parts[i]);
+                            i += 1;
+                        }
+                    }
+                }
+                if !changed || grouped.len() < 2 {
+                    return vec![];
+                }
+                try_add(eg, Op::Concat { dim }, grouped)
+            },
+        ),
+        "c",
+        2,
+        30,
+    ));
+
+    // CONSTRAINED: group a flat sum around an existing sub-sum (EP expert
+    // partials: all_reduce of per-rank sums of expert terms).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_group",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |eg, s, _| {
+                let parts = s.list(0).to_vec();
+                let n = parts.len();
+                if n < 3 {
+                    return vec![];
+                }
+                // greedy longest-match partition, as in concat_group
+                let mut grouped: Vec<Id> = Vec::with_capacity(n);
+                let mut i = 0usize;
+                let mut changed = false;
+                while i < n {
+                    let mut matched = None;
+                    let mut j = n.min(i + 16);
+                    while j >= i + 2 {
+                        if j - i < n {
+                            if let Some(group) = eg.lookup(&Op::SumN, &parts[i..j]) {
+                                matched = Some((group, j));
+                                break;
+                            }
+                        }
+                        j -= 1;
+                    }
+                    match matched {
+                        Some((group, j)) => {
+                            grouped.push(group);
+                            changed = true;
+                            i = j;
+                        }
+                        None => {
+                            grouped.push(parts[i]);
+                            i += 1;
+                        }
+                    }
+                }
+                if !changed || grouped.len() < 2 {
+                    return vec![];
+                }
+                try_add(eg, Op::SumN, grouped)
+            },
+        ),
+        "c",
+        2,
+        28,
+    ));
+
+    // transpose(transpose(x, p1), p2) = x when p2∘p1 = id, else fused perm
+    v.push(Lemma::new(
+        Rewrite::new(
+            "transpose_fuse",
+            Pat::bind(OpTag::Transpose, 0, vec![Pat::bind(OpTag::Transpose, 1, vec![Pat::var(0)])]),
+            |eg, s, _| {
+                let (p2, p1) = match (s.op(0), s.op(1)) {
+                    (Op::Transpose { perm: p2 }, Op::Transpose { perm: p1 }) => {
+                        (p2.clone(), p1.clone())
+                    }
+                    _ => return vec![],
+                };
+                if p1.len() != p2.len() {
+                    return vec![];
+                }
+                let fused: Vec<usize> = p2.iter().map(|&j| p1[j]).collect();
+                let x = s.var(0);
+                if fused.iter().enumerate().all(|(i, &p)| i == p) {
+                    vec![x]
+                } else {
+                    try_add(eg, Op::Transpose { perm: fused }, vec![x])
+                }
+            },
+        ),
+        "c",
+        2,
+        18,
+    ));
+
+    // transpose(concat(xs, d), p) = concat(transpose(x, p)s, p⁻¹(d))
+    v.push(Lemma::new(
+        Rewrite::new(
+            "transpose_of_concat",
+            Pat::node(
+                crate::egraph::POp::Bind { tag: OpTag::Transpose, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let perm = match s.op(0) {
+                    Op::Transpose { perm } => perm.clone(),
+                    _ => return vec![],
+                };
+                let dim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                // output dim index j such that perm[j] == dim
+                let Some(new_dim) = perm.iter().position(|&p| p == dim) else { return vec![] };
+                let parts: Vec<Id> = s.list(0).to_vec();
+                let tps: Option<Vec<Id>> = parts
+                    .iter()
+                    .map(|&p| eg.add_op(Op::Transpose { perm: perm.clone() }, vec![p]).ok())
+                    .collect();
+                let Some(tps) = tps else { return vec![] };
+                try_add(eg, Op::Concat { dim: new_dim }, tps)
+            },
+        ),
+        "c",
+        3,
+        24,
+    ));
+
+    // transpose(slice(x; d,a,b), p) = slice(transpose(x,p); p⁻¹(d),a,b)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "transpose_of_slice",
+            Pat::bind(OpTag::Transpose, 0, vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])]),
+            |eg, s, _| {
+                let perm = match s.op(0) {
+                    Op::Transpose { perm } => perm.clone(),
+                    _ => return vec![],
+                };
+                let (dim, a, b) = slice_attrs(s.op(1));
+                let Some(new_dim) = perm.iter().position(|&p| p == dim) else { return vec![] };
+                let x = s.var(0);
+                let Ok(tp) = eg.add_op(Op::Transpose { perm: perm.clone() }, vec![x]) else {
+                    return vec![];
+                };
+                try_add(eg, Op::Slice { dim: new_dim, start: a, end: b }, vec![tp])
+            },
+        ),
+        "c",
+        3,
+        17,
+    ));
+
+    // pad(x; d, 0, 0) = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "pad_zero_identity",
+            Pat::bind(OpTag::Pad, 0, vec![Pat::var(0)]),
+            |_eg, s, ctx| {
+                if let Op::Pad { before, after, .. } = s.op(0) {
+                    if s_eq(ctx, before, &0.into()) && s_eq(ctx, after, &0.into()) {
+                        return vec![s.var(0)];
+                    }
+                }
+                vec![]
+            },
+        ),
+        "c",
+        1,
+        9,
+    ));
+
+    // slice(pad(x; d, b, a); d, b, b+len(x,d)) = x  — the pad/slice pair of
+    // §6.2 Bug 3; a *mismatched* pair fails this lemma's condition and the
+    // implementation stops mapping cleanly.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "slice_of_pad",
+            Pat::bind(OpTag::Slice, 0, vec![Pat::bind(OpTag::Pad, 1, vec![Pat::var(0)])]),
+            |eg, s, ctx| {
+                let (sdim, st, en) = slice_attrs(s.op(0));
+                let (pdim, before) = match s.op(1) {
+                    Op::Pad { dim, before, .. } => (*dim, before.clone()),
+                    _ => return vec![],
+                };
+                let x = s.var(0);
+                let Some(shape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
+                if sdim == pdim
+                    && s_eq(ctx, &st, &before)
+                    && s_eq(ctx, &en, &before.add(&shape[sdim].into()))
+                {
+                    vec![x]
+                } else {
+                    vec![]
+                }
+            },
+        ),
+        "c",
+        2,
+        20,
+    ));
+
+    // pad(concat(xs,d), d2≠d, b, a) = concat(pad(x,d2,b,a)s, d)
+    v.push(Lemma::new(
+        Rewrite::new(
+            "pad_over_concat",
+            Pat::node(
+                crate::egraph::POp::Bind { tag: OpTag::Pad, slot: 0 },
+                vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
+            ),
+            |eg, s, _| {
+                let (pdim, before, after, value) = match s.op(0) {
+                    Op::Pad { dim, before, after, value } => {
+                        (*dim, before.clone(), after.clone(), *value)
+                    }
+                    _ => return vec![],
+                };
+                let cdim = match s.op(1) {
+                    Op::Concat { dim } => *dim,
+                    _ => return vec![],
+                };
+                if pdim == cdim {
+                    return vec![];
+                }
+                let parts: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .map(|&p| {
+                        eg.add_op(
+                            Op::Pad {
+                                dim: pdim,
+                                before: before.clone(),
+                                after: after.clone(),
+                                value,
+                            },
+                            vec![p],
+                        )
+                        .ok()
+                    })
+                    .collect();
+                let Some(parts) = parts else { return vec![] };
+                try_add(eg, Op::Concat { dim: cdim }, parts)
+            },
+        ),
+        "c",
+        3,
+        26,
+    ));
+
+    // ---- sum (shard-combine) algebra ----
+
+    // add(x, y) = sum(x, y): normalization into the n-ary combine form
+    v.push(Lemma::new(
+        Rewrite::new(
+            "add_to_sum",
+            Pat::exact(Op::Add, vec![Pat::var(0), Pat::var(1)]),
+            |eg, s, _| try_add(eg, Op::SumN, vec![s.var(0), s.var(1)]),
+        ),
+        "c",
+        2,
+        6,
+    ));
+
+    // sum is commutative: canonical sorted order
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_commut",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |eg, s, _| {
+                let mut parts: Vec<Id> = s.list(0).iter().map(|&c| eg.find(c)).collect();
+                let orig = parts.clone();
+                parts.sort_unstable();
+                if parts == orig {
+                    return vec![];
+                }
+                try_add(eg, Op::SumN, parts)
+            },
+        ),
+        "c",
+        1,
+        10,
+    ));
+
+    // sum(x, x, ..., x) = scale(x, n) — replicated contributions summed by
+    // an all-reduce (the aux-loss/optimizer-aggregation pattern).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_identical_scale",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |eg, s, _| {
+                let parts: Vec<Id> = s.list(0).iter().map(|&c| eg.find(c)).collect();
+                if parts.len() < 2 || !parts.iter().all(|&p| p == parts[0]) {
+                    return vec![];
+                }
+                try_add(
+                    eg,
+                    Op::Scale { c: crate::ir::FBits::new(parts.len() as f64) },
+                    vec![parts[0]],
+                )
+            },
+        ),
+        "c",
+        2,
+        12,
+    ));
+
+    // sum(x) = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_singleton",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |_eg, s, _| {
+                let parts = s.list(0);
+                if parts.len() == 1 {
+                    vec![parts[0]]
+                } else {
+                    vec![]
+                }
+            },
+        ),
+        "c",
+        1,
+        8,
+    ));
+
+    // sum(.., sum(ys), ..) flattens
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_flatten",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |eg, s, _| {
+                let parts = s.list(0).to_vec();
+                let mut flat: Vec<Id> = Vec::new();
+                let mut changed = false;
+                for &p in &parts {
+                    let mut inlined = false;
+                    if !changed {
+                        for node in &eg.class(p).nodes {
+                            if matches!(&node.lang, crate::egraph::ELang::Op(Op::SumN)) {
+                                flat.extend(node.children.iter().copied());
+                                inlined = true;
+                                changed = true;
+                                break;
+                            }
+                        }
+                    }
+                    if !inlined {
+                        flat.push(p);
+                    }
+                }
+                if !changed {
+                    return vec![];
+                }
+                try_add(eg, Op::SumN, flat)
+            },
+        ),
+        "c",
+        2,
+        24,
+    ));
+
+    // sum(concat(xs,d), concat(ys,d)) = concat(sum(xi,yi), d) when aligned
+    v.push(Lemma::new(
+        Rewrite::new(
+            "sum_of_concats",
+            Pat::node(
+                crate::egraph::POp::Exact(Op::SumN),
+                vec![
+                    Pat::bind_variadic(OpTag::Concat, 0, 0),
+                    Pat::bind_variadic(OpTag::Concat, 1, 1),
+                ],
+            ),
+            |eg, s, _| {
+                let (d1, d2) = match (s.op(0), s.op(1)) {
+                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    _ => return vec![],
+                };
+                if d1 != d2 || s.list(0).len() != s.list(1).len() {
+                    return vec![];
+                }
+                let pieces: Option<Vec<Id>> = s
+                    .list(0)
+                    .iter()
+                    .zip(s.list(1))
+                    .map(|(&a, &b)| {
+                        if eg.shape(a) != eg.shape(b) {
+                            return None;
+                        }
+                        eg.add_op(Op::SumN, vec![a, b]).ok()
+                    })
+                    .collect();
+                let Some(pieces) = pieces else { return vec![] };
+                try_add(eg, Op::Concat { dim: d1 }, pieces)
+            },
+        ),
+        "c",
+        4,
+        27,
+    ));
+
+    // identity(x) = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "identity_elim",
+            Pat::exact(Op::Identity, vec![Pat::var(0)]),
+            |_eg, s, _| vec![s.var(0)],
+        ),
+        "c",
+        1,
+        5,
+    ));
+
+    // reshape(reshape(x, s1), s2) = reshape(x, s2); reshape to own shape = x
+    v.push(Lemma::new(
+        Rewrite::new(
+            "reshape_fuse",
+            Pat::bind(OpTag::Reshape, 0, vec![Pat::var(0)]),
+            |eg, s, _| {
+                let shape = match s.op(0) {
+                    Op::Reshape { shape } => shape.clone(),
+                    _ => return vec![],
+                };
+                let x = s.var(0);
+                let Some(xshape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
+                let target: Option<Vec<i64>> = shape.iter().map(|d| d.as_const()).collect();
+                let mut out = Vec::new();
+                if target.as_deref() == Some(&xshape[..]) {
+                    out.push(x);
+                }
+                // fuse through an inner reshape
+                for node in &eg.class(x).nodes.clone() {
+                    if let crate::egraph::ELang::Op(Op::Reshape { .. }) = &node.lang {
+                        let inner = node.children[0];
+                        out.extend(try_add(eg, Op::Reshape { shape: shape.clone() }, vec![inner]));
+                    }
+                }
+                out
+            },
+        ),
+        "c",
+        2,
+        22,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, EGraph, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+
+    fn rules() -> Vec<crate::egraph::Rewrite> {
+        lemmas().into_iter().map(|l| l.rewrite).collect()
+    }
+
+    fn run(eg: &mut EGraph) {
+        let ctx = RewriteCtx::default();
+        saturate(eg, &rules(), &ctx, SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn adjacent_slices_merge_to_whole() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![8, 4]);
+        let l = eg.add_op(Op::Slice { dim: 0, start: 0.into(), end: 4.into() }, vec![x]).unwrap();
+        let r = eg.add_op(Op::Slice { dim: 0, start: 4.into(), end: 8.into() }, vec![x]).unwrap();
+        run(&mut eg);
+        let cat = eg.lookup(&Op::Concat { dim: 0 }, &[l, r]).expect("concat created");
+        assert!(eg.same(cat, x), "concat of adjacent full slices = x");
+    }
+
+    #[test]
+    fn slice_of_concat_single_part() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4, 4]);
+        let b = eg.add_leaf(t(1), vec![4, 4]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let sl = eg
+            .add_op(Op::Slice { dim: 0, start: 4.into(), end: 8.into() }, vec![cat])
+            .unwrap();
+        run(&mut eg);
+        assert!(eg.same(sl, b), "slice selecting the second part collapses to it");
+    }
+
+    #[test]
+    fn slice_of_concat_other_dim() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4, 6]);
+        let b = eg.add_leaf(t(1), vec![4, 6]);
+        let cat = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let sl = eg
+            .add_op(Op::Slice { dim: 1, start: 0.into(), end: 3.into() }, vec![cat])
+            .unwrap();
+        run(&mut eg);
+        // = concat(slice(a), slice(b))
+        let sa = eg.lookup(&Op::Slice { dim: 1, start: 0.into(), end: 3.into() }, &[a]).unwrap();
+        let sb = eg.lookup(&Op::Slice { dim: 1, start: 0.into(), end: 3.into() }, &[b]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[sa, sb]).unwrap();
+        assert!(eg.same(sl, expect));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![2, 3]);
+        let t1 = eg.add_op(Op::Transpose { perm: vec![1, 0] }, vec![x]).unwrap();
+        let t2 = eg.add_op(Op::Transpose { perm: vec![1, 0] }, vec![t1]).unwrap();
+        run(&mut eg);
+        assert!(eg.same(t2, x));
+    }
+
+    #[test]
+    fn add_sum_normalization_and_flatten() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let c = eg.add_leaf(t(2), vec![4]);
+        let ab = eg.add_op(Op::Add, vec![a, b]).unwrap();
+        let abc = eg.add_op(Op::Add, vec![ab, c]).unwrap();
+        run(&mut eg);
+        let flat = eg.lookup(&Op::SumN, &[a, b, c]).expect("flattened n-ary sum exists");
+        assert!(eg.same(abc, flat));
+    }
+
+    #[test]
+    fn sum_commutativity() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let ab = eg.add_op(Op::SumN, vec![a, b]).unwrap();
+        let ba = eg.add_op(Op::SumN, vec![b, a]).unwrap();
+        run(&mut eg);
+        assert!(eg.same(ab, ba));
+    }
+
+    #[test]
+    fn pad_slice_roundtrip() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![5]);
+        let padded = eg
+            .add_op(
+                Op::Pad { dim: 0, before: 2.into(), after: 1.into(), value: crate::ir::FBits::new(0.0) },
+                vec![x],
+            )
+            .unwrap();
+        let back = eg
+            .add_op(Op::Slice { dim: 0, start: 2.into(), end: 7.into() }, vec![padded])
+            .unwrap();
+        run(&mut eg);
+        assert!(eg.same(back, x));
+    }
+
+    #[test]
+    fn mismatched_pad_slice_does_not_merge() {
+        // Bug-3 shape: pad 2 before but slice from 1 — must NOT be x.
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![5]);
+        let padded = eg
+            .add_op(
+                Op::Pad { dim: 0, before: 2.into(), after: 1.into(), value: crate::ir::FBits::new(0.0) },
+                vec![x],
+            )
+            .unwrap();
+        let off = eg
+            .add_op(Op::Slice { dim: 0, start: 1.into(), end: 6.into() }, vec![padded])
+            .unwrap();
+        run(&mut eg);
+        assert!(!eg.same(off, x), "mismatched pad/slice must not collapse");
+    }
+
+    #[test]
+    fn sum_of_concats_zips() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 4]);
+        let b = eg.add_leaf(t(1), vec![2, 4]);
+        let c = eg.add_leaf(t(2), vec![2, 4]);
+        let d = eg.add_leaf(t(3), vec![2, 4]);
+        let ab = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]).unwrap();
+        let cd = eg.add_op(Op::Concat { dim: 0 }, vec![c, d]).unwrap();
+        let s = eg.add_op(Op::SumN, vec![ab, cd]).unwrap();
+        run(&mut eg);
+        let ac = eg.lookup(&Op::SumN, &[a, c]).unwrap();
+        let bd = eg.lookup(&Op::SumN, &[b, d]).unwrap();
+        let expect = eg.lookup(&Op::Concat { dim: 0 }, &[ac, bd]).unwrap();
+        assert!(eg.same(s, expect));
+    }
+
+    #[test]
+    fn reshape_identity() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![2, 3]);
+        let r = eg
+            .add_op(Op::Reshape { shape: vec![2.into(), 3.into()] }, vec![x])
+            .unwrap();
+        run(&mut eg);
+        assert!(eg.same(r, x));
+    }
+}

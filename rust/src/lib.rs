@@ -1,0 +1,47 @@
+//! # GraphGuard
+//!
+//! Library reproduction of *"Verify Distributed Deep Learning Model
+//! Implementation Refinement with Iterative Relation Inference"* (ByteDance
+//! Seed / NYU, 2025).
+//!
+//! GraphGuard statically checks **model refinement**: given a sequential
+//! model `G_s`, a distributed implementation `G_d`, and a clean input
+//! relation `R_i : I(G_s) → I(G_d)`, it infers — by iterative, per-operator
+//! equality-saturation rewriting — a complete *clean* output relation
+//! `R_o : O(G_s) → O(G_d)`. Failure to find one indicates a distribution
+//! bug, and the operator where inference stopped localizes it.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`ir`] — computation-graph IR (+ reverse-mode autodiff used to build
+//!   backward graphs for the fwd+bwd workloads).
+//! - [`expr`] — the relation expression language ρ, clean classifier,
+//!   numeric evaluator.
+//! - [`symbolic`] — linear-integer symbolic scalars (the SMT-LIB role).
+//! - [`egraph`] — equality-saturation engine (the egg role).
+//! - [`lemmas`] — the rewrite-lemma library (+ per-model custom-op lemmas).
+//! - [`relation`] / [`infer`] — the paper's core algorithm (Listings 1–3).
+//! - [`baseline`] — monolithic whole-graph checker for scalability
+//!   comparisons.
+//! - [`strategies`] / [`models`] / [`bugs`] — workload generation: TP/SP/EP/
+//!   VP/grad-accum graph builders and the six §6.2 bug injectors.
+//! - [`hlo`] — HLO-text frontend (XLA/JAX capture path).
+//! - [`coordinator`] — multi-threaded verification service + reports.
+//! - [`runtime`] — PJRT execution of AOT artifacts for cross-validation.
+//! - [`bench`] — mini benchmark harness used by `cargo bench`.
+
+pub mod baseline;
+pub mod bench;
+pub mod bugs;
+pub mod coordinator;
+pub mod egraph;
+pub mod expr;
+pub mod hlo;
+pub mod infer;
+pub mod ir;
+pub mod lemmas;
+pub mod models;
+pub mod relation;
+pub mod runtime;
+pub mod strategies;
+pub mod symbolic;
+pub mod util;

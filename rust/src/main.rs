@@ -1,0 +1,144 @@
+//! GraphGuard CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   verify  --gs <graph.json> --gd <graph.json> --ri <relation.json>
+//!   suite   [--ranks N] [--threads N]      run the Table-2 workload suite
+//!   bugs                                    run the §6.2 case studies
+//!   lemmas                                  list the lemma library
+//!   hlo     --file <module.hlo.txt>         parse an HLO-text module
+//!
+//! (Hand-rolled argument parsing — no clap in the offline crate set.)
+
+use anyhow::{anyhow, bail, Context, Result};
+use graphguard::{bugs, coordinator, hlo, infer, ir, lemmas, models, relation};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("suite") => cmd_suite(&args[1..]),
+        Some("bugs") => cmd_bugs(),
+        Some("lemmas") => cmd_lemmas(),
+        Some("hlo") => cmd_hlo(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: graphguard <verify|suite|bugs|lemmas|hlo> [options]\n\
+                 \n  verify --gs g_s.json --gd g_d.json --ri relation.json\
+                 \n  suite  [--ranks N] [--threads N]\
+                 \n  bugs\
+                 \n  lemmas\
+                 \n  hlo --file module.hlo.txt"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_graph(path: &str) -> Result<ir::Graph> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = graphguard::util::json::Json::parse(&text)
+        .map_err(|e| anyhow!("{path}: {e}"))?;
+    ir::json_io::from_json(&json).with_context(|| format!("building graph from {path}"))
+}
+
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let gs = load_graph(&arg_value(args, "--gs").ok_or_else(|| anyhow!("--gs required"))?)?;
+    let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
+    let ri_path = arg_value(args, "--ri").ok_or_else(|| anyhow!("--ri required"))?;
+    let ri_text = std::fs::read_to_string(&ri_path)?;
+    let ri_json = graphguard::util::json::Json::parse(&ri_text)
+        .map_err(|e| anyhow!("{ri_path}: {e}"))?;
+    let ri = relation::Relation::from_json(&ri_json, &gs, &gd)?;
+    ri.validate_shapes(&gs, &gd)?;
+    match infer::check_refinement(&gs, &gd, &ri, &infer::InferConfig::default()) {
+        Ok(out) => {
+            println!("refinement HOLDS — R_o:");
+            println!("{}", out.relation.to_json(&gs, &gd).to_string_pretty());
+            if arg_value(args, "--check-numeric").is_some()
+                || args.iter().any(|a| a == "--check-numeric")
+            {
+                infer::verify_numeric(&gs, &gd, &ri, &out.relation, 7)?;
+                println!("numeric certificate: OK");
+            }
+            Ok(())
+        }
+        Err(e) => {
+            println!("{e}");
+            bail!("model refinement does not hold")
+        }
+    }
+}
+
+fn cmd_suite(args: &[String]) -> Result<()> {
+    let ranks: usize = arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let threads: usize =
+        arg_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let coord = if threads > 0 {
+        coordinator::Coordinator::new(threads, infer::InferConfig::default())
+    } else {
+        coordinator::Coordinator::default()
+    };
+    let results = coord.run_batch(models::table2_workloads(ranks));
+    print!("{}", coordinator::report_table(&results));
+    if results.iter().any(|r| !r.ok) {
+        bail!("some workloads failed refinement");
+    }
+    Ok(())
+}
+
+fn cmd_bugs() -> Result<()> {
+    println!("§6.2 case studies (buggy variants):\n");
+    for case in bugs::all_cases(true) {
+        let (detected, report) = case.run();
+        println!("[bug {}] {} — {}", case.id, case.name, case.description);
+        println!(
+            "  expected: {}",
+            match case.expected_locus {
+                Some(l) => format!("detected near '{l}'"),
+                None => "passes; inspect R_o / implementation trace".to_string(),
+            }
+        );
+        println!("  outcome: {}", if detected { "DETECTED" } else { "refines" });
+        for line in report.lines() {
+            println!("    {line}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_lemmas() -> Result<()> {
+    let lib = lemmas::metadata();
+    println!("{} lemmas:", lib.len());
+    println!("{:<36} {:>6} {:>11} {:>5}", "name", "group", "complexity", "loc");
+    for m in &lib {
+        println!("{:<36} {:>6} {:>11} {:>5}", m.name, m.group, m.complexity, m.loc);
+    }
+    Ok(())
+}
+
+fn cmd_hlo(args: &[String]) -> Result<()> {
+    let path = arg_value(args, "--file").ok_or_else(|| anyhow!("--file required"))?;
+    let text = std::fs::read_to_string(&path)?;
+    let g = hlo::parse_hlo_text(&text, &path)?;
+    println!(
+        "parsed '{}': {} inputs, {} nodes, {} outputs",
+        path,
+        g.inputs.len(),
+        g.num_nodes(),
+        g.outputs.len()
+    );
+    println!("{}", ir::json_io::to_json(&g).to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,355 @@
+//! Stand-in for the ByteDance proprietary internal model (Table 2): an MoE
+//! transformer block with RoPE attention, explicit RMS-norm composition
+//! (autodiff-able), dense-gated experts and an auxiliary load-balancing
+//! loss — the op mix the five internal §6.2 bugs live in. Distributed with
+//! TP (attention heads + expert matmuls), SP (sequence-sharded activations,
+//! sliced RoPE tables — Bug 1's structure) and EP (experts across ranks).
+//!
+//! The forward graph is verified as `bytedance_fwd`; a norm+MoE sub-block
+//! with its autodiff backward is `bytedance_bwd` (the paper instruments
+//! fwd, bwd and optimizer graphs of its internal model).
+
+use crate::ir::autodiff::append_backward;
+use crate::ir::{FBits, Graph, Op, TensorId};
+use crate::relation::Relation;
+use crate::strategies::{chunks, col_shard_weight, replicate_input, row_shard_weight, shard_input, RiBuilder};
+use anyhow::Result;
+
+pub const SEQ: i64 = 8;
+pub const HEADS: i64 = 4;
+pub const HEAD_DIM: i64 = 4;
+pub const EXPERTS: i64 = 4;
+pub const EXPERT_FFN: i64 = 16;
+
+pub fn hidden() -> i64 {
+    HEADS * HEAD_DIM
+}
+
+/// Explicit RMS-norm composition: x · rsqrt(mean(x², last)+eps) · w.
+/// Written out op-by-op so `ir::autodiff` can differentiate it (the fused
+/// `rms_norm`/Pallas form is used on the inference-only models).
+fn rms_explicit(g: &mut Graph, p: &str, x: TensorId, w: TensorId) -> TensorId {
+    let last = g.shape(x).len() - 1;
+    let sq = g.op(&format!("{p}_sq"), Op::Square, vec![x]);
+    let ms = g.op(&format!("{p}_ms"), Op::ReduceMean { dim: last, keepdim: true }, vec![sq]);
+    let eps = g.op(&format!("{p}_eps"), Op::AddScalar { c: FBits::new(1e-6) }, vec![ms]);
+    let inv = g.op(&format!("{p}_inv"), Op::Rsqrt, vec![eps]);
+    let n = g.mul2(&format!("{p}_n"), x, inv);
+    g.mul2(&format!("{p}_out"), n, w)
+}
+
+/// Dense-gated MoE: out = Σ_e gate_e ⊙ (silu(x·W1ₑ)·W2ₑ), gates from a
+/// softmax router; plus the auxiliary load-balancing loss
+/// aux = mean(gate²)·E (a Switch-style proxy that the strategies must
+/// scale correctly — §6.2 Bug 2's home).
+fn moe(
+    g: &mut Graph,
+    p: &str,
+    x: TensorId,
+    wg: TensorId,
+    w1: &[TensorId],
+    w2: &[TensorId],
+) -> (TensorId, TensorId) {
+    moe_impl(g, p, x, wg, w1, w2, true)
+}
+
+fn moe_no_aux(
+    g: &mut Graph,
+    p: &str,
+    x: TensorId,
+    wg: TensorId,
+    w1: &[TensorId],
+    w2: &[TensorId],
+) -> TensorId {
+    moe_impl(g, p, x, wg, w1, w2, false).0
+}
+
+fn moe_impl(
+    g: &mut Graph,
+    p: &str,
+    x: TensorId,
+    wg: TensorId,
+    w1: &[TensorId],
+    w2: &[TensorId],
+    with_aux: bool,
+) -> (TensorId, TensorId) {
+    let scores = g.matmul(&format!("{p}_router"), x, wg);
+    let gates = g.softmax(&format!("{p}_gates"), scores, 1); // [s, E]
+    let mut terms = Vec::with_capacity(w1.len());
+    for e in 0..w1.len() {
+        let ge = g.slice(&format!("{p}_g{e}"), gates, 1, e as i64, e as i64 + 1); // [s,1]
+        let h1 = g.matmul(&format!("{p}_e{e}_h1"), x, w1[e]);
+        let act = g.op(&format!("{p}_e{e}_act"), Op::Silu, vec![h1]);
+        let h2 = g.matmul(&format!("{p}_e{e}_h2"), act, w2[e]);
+        terms.push(g.mul2(&format!("{p}_e{e}_w"), ge, h2));
+    }
+    let out = g.op(&format!("{p}_moe"), Op::SumN, terms);
+    if !with_aux {
+        return (out, out);
+    }
+    // aux loss: E · mean(gates²)
+    let g2 = g.op(&format!("{p}_aux_sq"), Op::Square, vec![gates]);
+    let m1 = g.op(&format!("{p}_aux_m1"), Op::ReduceMean { dim: 1, keepdim: false }, vec![g2]);
+    let m0 = g.op(&format!("{p}_aux_m0"), Op::ReduceMean { dim: 0, keepdim: false }, vec![m1]);
+    let aux = g.scale(&format!("{p}_aux"), m0, EXPERTS as f64);
+    (out, aux)
+}
+
+/// Sequential forward block: RoPE attention + MoE with aux loss.
+pub fn seq_fwd() -> Graph {
+    let h = hidden();
+    let mut g = Graph::new("bytedance_seq");
+    let x = g.input("x", vec![SEQ, h]);
+    let cos = g.input("cos", vec![SEQ, HEAD_DIM]);
+    let sin = g.input("sin", vec![SEQ, HEAD_DIM]);
+    let w_rms1 = g.input("rms1_w", vec![h]);
+    let wq = g.input("wq", vec![h, h]);
+    let wk = g.input("wk", vec![h, h]);
+    let wv = g.input("wv", vec![h, h]);
+    let wo = g.input("wo", vec![h, h]);
+    let w_rms2 = g.input("rms2_w", vec![h]);
+    let wg = g.input("router_w", vec![h, EXPERTS]);
+    let w1: Vec<TensorId> =
+        (0..EXPERTS).map(|e| g.input(&format!("e{e}_w1"), vec![h, EXPERT_FFN])).collect();
+    let w2: Vec<TensorId> =
+        (0..EXPERTS).map(|e| g.input(&format!("e{e}_w2"), vec![EXPERT_FFN, h])).collect();
+
+    let n1 = rms_explicit(&mut g, "rms1", x, w_rms1);
+    let q = g.matmul("q", n1, wq);
+    let k = g.matmul("k", n1, wk);
+    let v = g.matmul("v", n1, wv);
+    let mut outs = Vec::new();
+    for i in 0..HEADS {
+        let (lo, hi) = (i * HEAD_DIM, (i + 1) * HEAD_DIM);
+        let qi = g.slice(&format!("q{i}"), q, 1, lo, hi);
+        let ki = g.slice(&format!("k{i}"), k, 1, lo, hi);
+        let vi = g.slice(&format!("v{i}"), v, 1, lo, hi);
+        let qr = g.op(&format!("qr{i}"), Op::Rope, vec![qi, cos, sin]);
+        let kr = g.op(&format!("kr{i}"), Op::Rope, vec![ki, cos, sin]);
+        outs.push(g.op(
+            &format!("o{i}"),
+            Op::Custom { name: "pallas_attention".into() },
+            vec![qr, kr, vi],
+        ));
+    }
+    let attn = g.concat("attn", outs, 1);
+    let proj = g.matmul("proj", attn, wo);
+    let x1 = g.add2("res1", x, proj);
+    let n2 = rms_explicit(&mut g, "rms2", x1, w_rms2);
+    let (moe_out, aux) = moe(&mut g, "moe", n2, wg, &w1, &w2);
+    let y = g.add2("y", x1, moe_out);
+    g.mark_output(y);
+    g.mark_output(aux);
+    g
+}
+
+/// TP+SP+EP distributed forward. SP shards activations on the sequence dim
+/// (RoPE tables sliced per rank — the Bug-1 structure); TP shards attention
+/// heads; EP places experts on ranks (router replicated).
+pub fn tp_sp_ep_pair(ranks: usize, _layers: usize) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq_fwd();
+    let h = hidden();
+    let r = ranks as i64;
+    anyhow::ensure!(HEADS % r == 0 && SEQ % r == 0 && EXPERTS % r == 0, "not divisible by {ranks}");
+    let heads_per = HEADS / r;
+    let experts_per = (EXPERTS / r) as usize;
+    let mut g = Graph::new("bytedance_tp_sp_ep");
+    let mut ri = RiBuilder::new();
+
+    // SP: activations sequence-sharded
+    let xs = shard_input(&mut g, &mut ri, "x", &[SEQ, h], 0, ranks)?;
+    let cos = replicate_input(&mut g, &mut ri, "cos", &[SEQ, HEAD_DIM]);
+    let sin = replicate_input(&mut g, &mut ri, "sin", &[SEQ, HEAD_DIM]);
+    let w_rms1 = replicate_input(&mut g, &mut ri, "rms1_w", &[h]);
+    let w_rms2 = replicate_input(&mut g, &mut ri, "rms2_w", &[h]);
+    let wq = col_shard_weight(&mut g, &mut ri, "wq", &[h, h], ranks)?;
+    let wk = col_shard_weight(&mut g, &mut ri, "wk", &[h, h], ranks)?;
+    let wv = col_shard_weight(&mut g, &mut ri, "wv", &[h, h], ranks)?;
+    let wo = row_shard_weight(&mut g, &mut ri, "wo", &[h, h], ranks)?;
+    let wg = replicate_input(&mut g, &mut ri, "router_w", &[h, EXPERTS]);
+    // EP: each expert's weights live on one rank, replicated there (not
+    // sharded — sharding them under SP is exactly §6.2 Bug 4)
+    let w1: Vec<TensorId> = (0..EXPERTS)
+        .map(|e| replicate_input(&mut g, &mut ri, &format!("e{e}_w1"), &[h, EXPERT_FFN]))
+        .collect();
+    let w2: Vec<TensorId> = (0..EXPERTS)
+        .map(|e| replicate_input(&mut g, &mut ri, &format!("e{e}_w2"), &[EXPERT_FFN, h]))
+        .collect();
+
+    // per-rank RMS norm on sequence shards, then all-gather into TP region
+    let n1s: Vec<TensorId> = xs
+        .iter()
+        .enumerate()
+        .map(|(rk, &xr)| rms_explicit(&mut g, &format!("rms1_r{rk}"), xr, w_rms1))
+        .collect();
+    let n1 = g.all_gather("rms1_ag", n1s, 0);
+
+    // TP attention over gathered activations; RoPE uses FULL tables here
+    // because q/k cover the full sequence after the gather.
+    let mut parts = Vec::with_capacity(ranks);
+    for rk in 0..ranks {
+        let q = g.matmul(&format!("q_r{rk}"), n1, wq[rk]);
+        let k = g.matmul(&format!("k_r{rk}"), n1, wk[rk]);
+        let v = g.matmul(&format!("v_r{rk}"), n1, wv[rk]);
+        let mut outs = Vec::new();
+        for i in 0..heads_per {
+            let (lo, hi) = (i * HEAD_DIM, (i + 1) * HEAD_DIM);
+            let qi = g.slice(&format!("q_r{rk}_{i}"), q, 1, lo, hi);
+            let ki = g.slice(&format!("k_r{rk}_{i}"), k, 1, lo, hi);
+            let vi = g.slice(&format!("v_r{rk}_{i}"), v, 1, lo, hi);
+            let qr = g.op(&format!("qr_r{rk}_{i}"), Op::Rope, vec![qi, cos, sin]);
+            let kr = g.op(&format!("kr_r{rk}_{i}"), Op::Rope, vec![ki, cos, sin]);
+            outs.push(g.op(
+                &format!("o_r{rk}_{i}"),
+                Op::Custom { name: "pallas_attention".into() },
+                vec![qr, kr, vi],
+            ));
+        }
+        let attn = g.concat(&format!("attn_r{rk}"), outs, 1);
+        parts.push(g.matmul(&format!("part_r{rk}"), attn, wo[rk]));
+    }
+    // reduce-scatter back to sequence shards + residual
+    let res1: Vec<TensorId> = (0..ranks)
+        .map(|rk| {
+            let rs = g.reduce_scatter(&format!("rs1_r{rk}"), parts.clone(), 0, rk);
+            g.add2(&format!("res1_r{rk}"), xs[rk], rs)
+        })
+        .collect();
+
+    // MoE region: per-rank norm on sequence shards; EP experts applied to
+    // the all-gathered activations, partial expert sums all-reduced.
+    let n2s: Vec<TensorId> = res1
+        .iter()
+        .enumerate()
+        .map(|(rk, &xr)| rms_explicit(&mut g, &format!("rms2_r{rk}"), xr, w_rms2))
+        .collect();
+    let n2 = g.all_gather("rms2_ag", n2s, 0);
+    let scores = g.matmul("router", n2, wg);
+    let gates = g.softmax("gates", scores, 1);
+    let mut rank_terms: Vec<TensorId> = Vec::with_capacity(ranks);
+    for rk in 0..ranks {
+        let mut local = Vec::with_capacity(experts_per);
+        for j in 0..experts_per {
+            let e = rk * experts_per + j;
+            let ge = g.slice(&format!("g_r{rk}_{j}"), gates, 1, e as i64, e as i64 + 1);
+            let h1 = g.matmul(&format!("e{e}_h1_d"), n2, w1[e]);
+            let act = g.op(&format!("e{e}_act_d"), Op::Silu, vec![h1]);
+            let h2 = g.matmul(&format!("e{e}_h2_d"), act, w2[e]);
+            local.push(g.mul2(&format!("e{e}_w_d"), ge, h2));
+        }
+        rank_terms.push(g.op(&format!("moe_local_r{rk}"), Op::SumN, local));
+    }
+    let moe_out = g.all_reduce("moe_ar", rank_terms);
+    // aux loss computed from the replicated gates (correctly unscaled here;
+    // the TP aux-loss bug variant lives in crate::bugs)
+    let g2 = g.op("aux_sq_d", Op::Square, vec![gates]);
+    let m1 = g.op("aux_m1_d", Op::ReduceMean { dim: 1, keepdim: false }, vec![g2]);
+    let m0 = g.op("aux_m0_d", Op::ReduceMean { dim: 0, keepdim: false }, vec![m1]);
+    let aux = g.scale("aux_d", m0, EXPERTS as f64);
+
+    // final residual on sequence shards, gathered for output
+    let ys: Vec<TensorId> = (0..ranks)
+        .map(|rk| {
+            let (lo, hi) = chunks(SEQ, ranks)[rk];
+            let piece = g.slice(&format!("moe_piece_r{rk}"), moe_out, 0, lo, hi);
+            g.add2(&format!("y_r{rk}"), res1[rk], piece)
+        })
+        .collect();
+    let y = g.all_gather("y_ag", ys, 0);
+    g.mark_output(y);
+    g.mark_output(aux);
+
+    let ri = ri.finish(&gs, &g)?;
+    Ok((gs, g, ri))
+}
+
+/// Backward workload: norm + MoE sub-block with autodiff gradients, in a
+/// sequential and a TP-expert variant (the paper's "Bwd" graphs).
+pub fn bwd_pair(ranks: usize) -> Result<(Graph, Graph, Relation)> {
+    let h = hidden();
+    // sequential: loss = mse(moe(rms(x)), target) + aux
+    let mut gs = Graph::new("bytedance_bwd_seq");
+    let x = gs.input("x", vec![SEQ, h]);
+    let w_rms = gs.input("rms_w", vec![h]);
+    let wg = gs.input("router_w", vec![h, EXPERTS]);
+    let w1: Vec<TensorId> =
+        (0..EXPERTS).map(|e| gs.input(&format!("e{e}_w1"), vec![h, EXPERT_FFN])).collect();
+    let w2: Vec<TensorId> =
+        (0..EXPERTS).map(|e| gs.input(&format!("e{e}_w2"), vec![EXPERT_FFN, h])).collect();
+    let target = gs.input("target", vec![SEQ, h]);
+    let n = rms_explicit(&mut gs, "rms", x, w_rms);
+    let out = moe_no_aux(&mut gs, "moe", n, wg, &w1, &w2);
+    let loss = gs.op("loss", Op::MseLoss, vec![out, target]);
+    gs.mark_output(loss);
+    append_backward(&mut gs, loss, &[x])?;
+    let gs = gs.eliminate_dead_code();
+
+    // distributed: EP over experts (same sequence, replicated activations)
+    anyhow::ensure!(EXPERTS % ranks as i64 == 0, "experts % ranks");
+    let experts_per = (EXPERTS / ranks as i64) as usize;
+    let mut gd = Graph::new("bytedance_bwd_ep");
+    let mut ri = RiBuilder::new();
+    let xd = replicate_input(&mut gd, &mut ri, "x", &[SEQ, h]);
+    let w_rms_d = replicate_input(&mut gd, &mut ri, "rms_w", &[h]);
+    let wg_d = replicate_input(&mut gd, &mut ri, "router_w", &[h, EXPERTS]);
+    let w1d: Vec<TensorId> = (0..EXPERTS)
+        .map(|e| replicate_input(&mut gd, &mut ri, &format!("e{e}_w1"), &[h, EXPERT_FFN]))
+        .collect();
+    let w2d: Vec<TensorId> = (0..EXPERTS)
+        .map(|e| replicate_input(&mut gd, &mut ri, &format!("e{e}_w2"), &[EXPERT_FFN, h]))
+        .collect();
+    let target_d = replicate_input(&mut gd, &mut ri, "target", &[SEQ, h]);
+    let nd = rms_explicit(&mut gd, "rms", xd, w_rms_d);
+    let scores = gd.matmul("router", nd, wg_d);
+    let gates = gd.softmax("gates", scores, 1);
+    let mut rank_terms = Vec::with_capacity(ranks);
+    for rk in 0..ranks {
+        let mut local = Vec::with_capacity(experts_per);
+        for j in 0..experts_per {
+            let e = rk * experts_per + j;
+            let ge = gd.slice(&format!("g_r{rk}_{j}"), gates, 1, e as i64, e as i64 + 1);
+            let h1 = gd.matmul(&format!("e{e}_h1"), nd, w1d[e]);
+            let act = gd.op(&format!("e{e}_act"), Op::Silu, vec![h1]);
+            let h2 = gd.matmul(&format!("e{e}_h2"), act, w2d[e]);
+            local.push(gd.mul2(&format!("e{e}_w"), ge, h2));
+        }
+        rank_terms.push(gd.op(&format!("moe_local_r{rk}"), Op::SumN, local));
+    }
+    let out_d = gd.all_reduce("moe_ar", rank_terms);
+    let loss_d = gd.op("loss", Op::MseLoss, vec![out_d, target_d]);
+    gd.mark_output(loss_d);
+    append_backward(&mut gd, loss_d, &[xd])?;
+    let gd = gd.eliminate_dead_code();
+
+    let ri = ri.finish(&gs, &gd)?;
+    Ok((gs, gd, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+
+    #[test]
+    fn seq_fwd_builds() {
+        let g = seq_fwd();
+        g.validate().unwrap();
+        assert_eq!(g.outputs.len(), 2);
+    }
+
+    #[test]
+    fn bytedance_fwd_tp_sp_ep2_refines() {
+        let (gs, gd, ri) = tp_sp_ep_pair(2, 1).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 41).unwrap();
+    }
+
+    #[test]
+    fn bytedance_bwd_ep2_refines() {
+        let (gs, gd, ri) = bwd_pair(2).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 43).unwrap();
+    }
+}

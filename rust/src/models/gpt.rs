@@ -1,0 +1,364 @@
+//! GPT (Megatron-LM style) — the paper's main scalability workload.
+//!
+//! The sequential model is a standard pre-LN transformer LM; attention is
+//! expressed per-head via slices (heads are independent — exactly how
+//! Megatron shards them), which keeps `G_s` and `G_d` within the paper's
+//! same-op-structure assumption (§3.3).
+//!
+//! Distributed variants:
+//! * `tp_pair`     — Megatron tensor parallelism (column/row-parallel
+//!   linears + all-reduce), activations replicated.
+//! * `tp_sp_pair`  — TP + sequence parallelism (LN on sequence shards,
+//!   all-gather into the TP region, reduce-scatter out).
+//! * `tp_sp_vp_pair` — additionally shards the LM head over the vocab
+//!   (vocabulary parallelism), as used for the Fig-5 sweeps.
+
+use crate::ir::{FBits, Graph, Op, TensorId};
+use crate::relation::Relation;
+use crate::strategies::{chunks, replicate_input, RiBuilder};
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone)]
+pub struct GptConfig {
+    pub seq: i64,
+    pub heads: i64,
+    pub head_dim: i64,
+    pub ffn: i64,
+    pub vocab: i64,
+}
+
+impl GptConfig {
+    pub fn hidden(&self) -> i64 {
+        self.heads * self.head_dim
+    }
+
+    /// Small default used in tests: hidden 16, divisible by ranks {2,4,8}.
+    pub fn default() -> Self {
+        GptConfig { seq: 8, heads: 4, head_dim: 4, ffn: 32, vocab: 16 }
+    }
+
+    /// Fig-5 parallelism-sweep config (degrees {2,4}; degree 6 does not
+    /// divide the head count — the same uneven-partition hole the paper
+    /// shows for Llama-3. Wider-head configs that would admit 6/8 blow up
+    /// per-layer op counts beyond this testbed's sweep budget; see
+    /// EXPERIMENTS.md §Fig 5).
+    pub fn sweep() -> Self {
+        GptConfig { seq: 12, heads: 4, head_dim: 4, ffn: 24, vocab: 24 }
+    }
+
+    fn check(&self, ranks: usize) -> Result<()> {
+        let r = ranks as i64;
+        ensure!(self.heads % r == 0, "heads {} % ranks {}", self.heads, r);
+        ensure!(self.seq % r == 0, "seq {} % ranks {}", self.seq, r);
+        ensure!(self.ffn % r == 0, "ffn {} % ranks {}", self.ffn, r);
+        ensure!(self.vocab % r == 0, "vocab {} % ranks {}", self.vocab, r);
+        Ok(())
+    }
+}
+
+const EPS: f64 = 1e-5;
+
+fn ln(g: &mut Graph, name: &str, x: TensorId, w: TensorId, b: TensorId) -> TensorId {
+    g.op(name, Op::LayerNorm { eps: FBits::new(EPS) }, vec![x, w, b])
+}
+
+/// Per-head attention over already-projected q/k/v `[s, h]`: slices heads,
+/// runs scaled-dot-product per head, concatenates.
+fn attention_heads(
+    g: &mut Graph,
+    prefix: &str,
+    q: TensorId,
+    k: TensorId,
+    v: TensorId,
+    heads: i64,
+    head_dim: i64,
+) -> TensorId {
+    let scale = 1.0 / (head_dim as f64).sqrt();
+    let mut outs = Vec::with_capacity(heads as usize);
+    for i in 0..heads {
+        let (lo, hi) = (i * head_dim, (i + 1) * head_dim);
+        let qi = g.slice(&format!("{prefix}_q{i}"), q, 1, lo, hi);
+        let ki = g.slice(&format!("{prefix}_k{i}"), k, 1, lo, hi);
+        let vi = g.slice(&format!("{prefix}_v{i}"), v, 1, lo, hi);
+        let kt = g.transpose(&format!("{prefix}_kt{i}"), ki, vec![1, 0]);
+        let sc = g.matmul(&format!("{prefix}_sc{i}"), qi, kt);
+        let scs = g.scale(&format!("{prefix}_scs{i}"), sc, scale);
+        let pr = g.softmax(&format!("{prefix}_pr{i}"), scs, 1);
+        outs.push(g.matmul(&format!("{prefix}_o{i}"), pr, vi));
+    }
+    g.concat(&format!("{prefix}_attn"), outs, 1)
+}
+
+/// Sequential GPT: embedding + `layers` transformer blocks + LM head.
+pub fn seq(layers: usize, cfg: &GptConfig) -> Graph {
+    let h = cfg.hidden();
+    let mut g = Graph::new("gpt_seq");
+    let table = g.input("wte", vec![cfg.vocab, h]);
+    let ids = g.input_typed("ids", vec![cfg.seq], crate::ir::DType::I64);
+    let mut x = g.op("emb", Op::Embedding, vec![table, ids]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let g1 = g.input(&format!("{p}_ln1_w"), vec![h]);
+        let b1 = g.input(&format!("{p}_ln1_b"), vec![h]);
+        let wq = g.input(&format!("{p}_wq"), vec![h, h]);
+        let wk = g.input(&format!("{p}_wk"), vec![h, h]);
+        let wv = g.input(&format!("{p}_wv"), vec![h, h]);
+        let wo = g.input(&format!("{p}_wo"), vec![h, h]);
+        let g2 = g.input(&format!("{p}_ln2_w"), vec![h]);
+        let b2 = g.input(&format!("{p}_ln2_b"), vec![h]);
+        let w1 = g.input(&format!("{p}_w1"), vec![h, cfg.ffn]);
+        let w2 = g.input(&format!("{p}_w2"), vec![cfg.ffn, h]);
+
+        let ln1 = ln(&mut g, &format!("{p}_ln1"), x, g1, b1);
+        let q = g.matmul(&format!("{p}_q"), ln1, wq);
+        let k = g.matmul(&format!("{p}_k"), ln1, wk);
+        let v = g.matmul(&format!("{p}_v"), ln1, wv);
+        let attn = attention_heads(&mut g, &p, q, k, v, cfg.heads, cfg.head_dim);
+        let proj = g.matmul(&format!("{p}_proj"), attn, wo);
+        let x1 = g.add2(&format!("{p}_res1"), x, proj);
+        let ln2 = ln(&mut g, &format!("{p}_ln2"), x1, g2, b2);
+        let h1 = g.matmul(&format!("{p}_h1"), ln2, w1);
+        let act = g.op(&format!("{p}_gelu"), Op::Gelu, vec![h1]);
+        let h2 = g.matmul(&format!("{p}_h2"), act, w2);
+        x = g.add2(&format!("{p}_res2"), x1, h2);
+    }
+    let gf = g.input("lnf_w", vec![h]);
+    let bf = g.input("lnf_b", vec![h]);
+    let lnf = ln(&mut g, "lnf", x, gf, bf);
+    let wlm = g.input("lm_head", vec![h, cfg.vocab]);
+    let logits = g.matmul("logits", lnf, wlm);
+    g.mark_output(logits);
+    g
+}
+
+/// Options shared by the distributed builders.
+struct DistOpts {
+    sp: bool,
+    vp: bool,
+}
+
+/// Megatron TP (optionally +SP, +VP) distributed GPT.
+fn dist(ranks: usize, layers: usize, cfg: &GptConfig, opts: DistOpts) -> Result<(Graph, Relation)> {
+    cfg.check(ranks)?;
+    let gs = seq(layers, cfg); // used for R_i name resolution at the end
+    let h = cfg.hidden();
+    let r = ranks as i64;
+    let heads_per = cfg.heads / r;
+    let mut g = Graph::new(if opts.sp { "gpt_tp_sp" } else { "gpt_tp" });
+    let mut ri = RiBuilder::new();
+
+    // embedding: table replicated; ids sharded under SP else replicated
+    let table = replicate_input(&mut g, &mut ri, "wte", &[cfg.vocab, h]);
+    let mut x_shards: Vec<TensorId>; // SP: per-rank [s/R, h]; TP: single full
+    if opts.sp {
+        let id_shards = crate::strategies::shard_input_ids(
+            &mut g,
+            &mut ri,
+            "ids",
+            &[cfg.seq],
+            0,
+            ranks,
+        )?;
+        x_shards = id_shards
+            .iter()
+            .enumerate()
+            .map(|(rk, &ids)| g.op(&format!("emb_r{rk}"), Op::Embedding, vec![table, ids]))
+            .collect();
+    } else {
+        let ids = crate::strategies::replicate_input_typed(
+            &mut g,
+            &mut ri,
+            "ids",
+            &[cfg.seq],
+            crate::ir::DType::I64,
+        );
+        x_shards = vec![g.op("emb", Op::Embedding, vec![table, ids])];
+    }
+
+    for l in 0..layers {
+        let p = format!("l{l}");
+        // replicated norm params
+        let g1 = replicate_input(&mut g, &mut ri, &format!("{p}_ln1_w"), &[h]);
+        let b1 = replicate_input(&mut g, &mut ri, &format!("{p}_ln1_b"), &[h]);
+        let g2 = replicate_input(&mut g, &mut ri, &format!("{p}_ln2_w"), &[h]);
+        let b2 = replicate_input(&mut g, &mut ri, &format!("{p}_ln2_b"), &[h]);
+        // column-sharded qkv, row-sharded proj
+        let wq = crate::strategies::col_shard_weight(&mut g, &mut ri, &format!("{p}_wq"), &[h, h], ranks)?;
+        let wk = crate::strategies::col_shard_weight(&mut g, &mut ri, &format!("{p}_wk"), &[h, h], ranks)?;
+        let wv = crate::strategies::col_shard_weight(&mut g, &mut ri, &format!("{p}_wv"), &[h, h], ranks)?;
+        let wo = crate::strategies::row_shard_weight(&mut g, &mut ri, &format!("{p}_wo"), &[h, h], ranks)?;
+        let w1 = crate::strategies::col_shard_weight(&mut g, &mut ri, &format!("{p}_w1"), &[h, cfg.ffn], ranks)?;
+        let w2 = crate::strategies::row_shard_weight(&mut g, &mut ri, &format!("{p}_w2"), &[cfg.ffn, h], ranks)?;
+
+        // --- attention sub-block ---
+        // SP: per-rank LN then all-gather; TP: LN on the full tensor.
+        let ln1_full = if opts.sp {
+            let shards: Vec<TensorId> = x_shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &xr)| ln(&mut g, &format!("{p}_ln1_r{rk}"), xr, g1, b1))
+                .collect();
+            g.all_gather(&format!("{p}_ln1_ag"), shards, 0)
+        } else {
+            ln(&mut g, &format!("{p}_ln1"), x_shards[0], g1, b1)
+        };
+        let mut parts = Vec::with_capacity(ranks);
+        for rk in 0..ranks {
+            let q = g.matmul(&format!("{p}_q_r{rk}"), ln1_full, wq[rk]);
+            let k = g.matmul(&format!("{p}_k_r{rk}"), ln1_full, wk[rk]);
+            let v = g.matmul(&format!("{p}_v_r{rk}"), ln1_full, wv[rk]);
+            let attn = attention_heads(
+                &mut g,
+                &format!("{p}_r{rk}"),
+                q,
+                k,
+                v,
+                heads_per,
+                cfg.head_dim,
+            );
+            parts.push(g.matmul(&format!("{p}_part_r{rk}"), attn, wo[rk]));
+        }
+        // combine partials: SP -> reduce-scatter along seq; TP -> all-reduce
+        let res1: Vec<TensorId> = if opts.sp {
+            (0..ranks)
+                .map(|rk| {
+                    let rs = g.reduce_scatter(&format!("{p}_rs1_r{rk}"), parts.clone(), 0, rk);
+                    g.add2(&format!("{p}_res1_r{rk}"), x_shards[rk], rs)
+                })
+                .collect()
+        } else {
+            let proj = g.all_reduce(&format!("{p}_proj_ar"), parts);
+            vec![g.add2(&format!("{p}_res1"), x_shards[0], proj)]
+        };
+
+        // --- MLP sub-block ---
+        let ln2_full = if opts.sp {
+            let shards: Vec<TensorId> = res1
+                .iter()
+                .enumerate()
+                .map(|(rk, &xr)| ln(&mut g, &format!("{p}_ln2_r{rk}"), xr, g2, b2))
+                .collect();
+            g.all_gather(&format!("{p}_ln2_ag"), shards, 0)
+        } else {
+            ln(&mut g, &format!("{p}_ln2"), res1[0], g2, b2)
+        };
+        let mut mlp_parts = Vec::with_capacity(ranks);
+        for rk in 0..ranks {
+            let h1 = g.matmul(&format!("{p}_h1_r{rk}"), ln2_full, w1[rk]);
+            let act = g.op(&format!("{p}_gelu_r{rk}"), Op::Gelu, vec![h1]);
+            mlp_parts.push(g.matmul(&format!("{p}_h2_r{rk}"), act, w2[rk]));
+        }
+        x_shards = if opts.sp {
+            (0..ranks)
+                .map(|rk| {
+                    let rs = g.reduce_scatter(&format!("{p}_rs2_r{rk}"), mlp_parts.clone(), 0, rk);
+                    g.add2(&format!("{p}_res2_r{rk}"), res1[rk], rs)
+                })
+                .collect()
+        } else {
+            let mlp = g.all_reduce(&format!("{p}_mlp_ar"), mlp_parts);
+            vec![g.add2(&format!("{p}_res2"), res1[0], mlp)]
+        };
+    }
+
+    // final LN + LM head
+    let gf = replicate_input(&mut g, &mut ri, "lnf_w", &[h]);
+    let bf = replicate_input(&mut g, &mut ri, "lnf_b", &[h]);
+    let lnf_full = if opts.sp {
+        let shards: Vec<TensorId> = x_shards
+            .iter()
+            .enumerate()
+            .map(|(rk, &xr)| ln(&mut g, &format!("lnf_r{rk}"), xr, gf, bf))
+            .collect();
+        g.all_gather("lnf_ag", shards, 0)
+    } else {
+        ln(&mut g, "lnf", x_shards[0], gf, bf)
+    };
+    let logits = if opts.vp {
+        let wlm = crate::strategies::col_shard_weight(&mut g, &mut ri, "lm_head", &[h, cfg.vocab], ranks)?;
+        let parts: Vec<TensorId> = (0..ranks)
+            .map(|rk| g.matmul(&format!("logits_r{rk}"), lnf_full, wlm[rk]))
+            .collect();
+        g.all_gather("logits_ag", parts, 1)
+    } else {
+        let wlm = replicate_input(&mut g, &mut ri, "lm_head", &[h, cfg.vocab]);
+        g.matmul("logits_rep", lnf_full, wlm)
+    };
+    g.mark_output(logits);
+
+    let rel = ri.finish(&gs, &g)?;
+    Ok((g, rel))
+}
+
+pub fn tp_pair(ranks: usize, layers: usize) -> (Graph, Graph, Relation) {
+    let cfg = GptConfig::default();
+    let gs = seq(layers, &cfg);
+    let (gd, ri) = dist(ranks, layers, &cfg, DistOpts { sp: false, vp: false }).unwrap();
+    (gs, gd, ri)
+}
+
+pub fn tp_sp_pair(ranks: usize, layers: usize, cfg: &GptConfig) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq(layers, cfg);
+    let (gd, ri) = dist(ranks, layers, cfg, DistOpts { sp: true, vp: false })?;
+    Ok((gs, gd, ri))
+}
+
+/// TP + SP + VP at the same degree — the Fig-5 GPT configuration.
+pub fn tp_sp_vp_pair(
+    ranks: usize,
+    layers: usize,
+    cfg: &GptConfig,
+) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq(layers, cfg);
+    let (gd, ri) = dist(ranks, layers, cfg, DistOpts { sp: true, vp: true })?;
+    Ok((gs, gd, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+
+    #[test]
+    fn seq_graph_shape() {
+        let g = seq(2, &GptConfig::default());
+        g.validate().unwrap();
+        let logits = g.outputs[0];
+        assert_eq!(g.shape(logits), &[8, 16]);
+    }
+
+    #[test]
+    fn gpt_tp2_refines() {
+        let (gs, gd, ri) = tp_pair(2, 1);
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 11).unwrap();
+    }
+
+    #[test]
+    fn gpt_tp_sp2_refines() {
+        let (gs, gd, ri) = tp_sp_pair(2, 1, &GptConfig::default()).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 13).unwrap();
+    }
+
+    #[test]
+    fn gpt_tp_sp_vp2_refines() {
+        let (gs, gd, ri) = tp_sp_vp_pair(2, 1, &GptConfig::default()).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 17).unwrap();
+    }
+
+    #[test]
+    fn sweep_config_degrees() {
+        let cfg = GptConfig::sweep();
+        let (gs, gd, ri) = tp_sp_vp_pair(4, 1, &cfg).unwrap();
+        gs.validate().unwrap();
+        gd.validate().unwrap();
+        ri.validate_shapes(&gs, &gd).unwrap();
+        // degree 6 does not divide the head count (Fig-5 hole)
+        assert!(tp_sp_vp_pair(6, 1, &cfg).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Llama-3 style block (Transformers-NeuronX analog, Table 2): RMSNorm via
+//! the **L1 Pallas kernel** (`pallas_rms_norm` custom op), per-head RoPE
+//! attention via the **`pallas_attention`** kernel, SwiGLU MLP; distributed
+//! with tensor parallelism. The default hidden size (16) is intentionally
+//! not divisible by 6 — reproducing the missing parallelism-6 point in
+//! Fig 5.
+
+use crate::ir::{Graph, Op, TensorId};
+use crate::relation::Relation;
+use crate::strategies::{col_shard_weight, replicate_input, row_shard_weight, RiBuilder};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct LlamaConfig {
+    pub seq: i64,
+    pub heads: i64,
+    pub head_dim: i64,
+    pub ffn: i64,
+}
+
+impl LlamaConfig {
+    pub fn hidden(&self) -> i64 {
+        self.heads * self.head_dim
+    }
+    pub fn default() -> Self {
+        LlamaConfig { seq: 8, heads: 4, head_dim: 4, ffn: 32 }
+    }
+}
+
+fn rms(g: &mut Graph, name: &str, x: TensorId, w: TensorId) -> TensorId {
+    g.op(name, Op::Custom { name: "pallas_rms_norm".into() }, vec![x, w])
+}
+
+/// Per-head RoPE attention using the Pallas attention kernel.
+fn attention(
+    g: &mut Graph,
+    prefix: &str,
+    q: TensorId,
+    k: TensorId,
+    v: TensorId,
+    cos: TensorId,
+    sin: TensorId,
+    heads: i64,
+    head_dim: i64,
+) -> TensorId {
+    let mut outs = Vec::with_capacity(heads as usize);
+    for i in 0..heads {
+        let (lo, hi) = (i * head_dim, (i + 1) * head_dim);
+        let qi = g.slice(&format!("{prefix}_q{i}"), q, 1, lo, hi);
+        let ki = g.slice(&format!("{prefix}_k{i}"), k, 1, lo, hi);
+        let vi = g.slice(&format!("{prefix}_v{i}"), v, 1, lo, hi);
+        let qr = g.op(&format!("{prefix}_qr{i}"), Op::Rope, vec![qi, cos, sin]);
+        let kr = g.op(&format!("{prefix}_kr{i}"), Op::Rope, vec![ki, cos, sin]);
+        outs.push(g.op(
+            &format!("{prefix}_o{i}"),
+            Op::Custom { name: "pallas_attention".into() },
+            vec![qr, kr, vi],
+        ));
+    }
+    g.concat(&format!("{prefix}_attn"), outs, 1)
+}
+
+pub fn seq(layers: usize, cfg: &LlamaConfig) -> Graph {
+    let h = cfg.hidden();
+    let mut g = Graph::new("llama_seq");
+    let mut x = g.input("x", vec![cfg.seq, h]);
+    let cos = g.input("cos", vec![cfg.seq, cfg.head_dim]);
+    let sin = g.input("sin", vec![cfg.seq, cfg.head_dim]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let w_rms1 = g.input(&format!("{p}_rms1_w"), vec![h]);
+        let wq = g.input(&format!("{p}_wq"), vec![h, h]);
+        let wk = g.input(&format!("{p}_wk"), vec![h, h]);
+        let wv = g.input(&format!("{p}_wv"), vec![h, h]);
+        let wo = g.input(&format!("{p}_wo"), vec![h, h]);
+        let w_rms2 = g.input(&format!("{p}_rms2_w"), vec![h]);
+        let wg = g.input(&format!("{p}_wg"), vec![h, cfg.ffn]);
+        let wu = g.input(&format!("{p}_wu"), vec![h, cfg.ffn]);
+        let wd = g.input(&format!("{p}_wd"), vec![cfg.ffn, h]);
+
+        let n1 = rms(&mut g, &format!("{p}_rms1"), x, w_rms1);
+        let q = g.matmul(&format!("{p}_q"), n1, wq);
+        let k = g.matmul(&format!("{p}_k"), n1, wk);
+        let v = g.matmul(&format!("{p}_v"), n1, wv);
+        let attn = attention(&mut g, &p, q, k, v, cos, sin, cfg.heads, cfg.head_dim);
+        let proj = g.matmul(&format!("{p}_proj"), attn, wo);
+        let x1 = g.add2(&format!("{p}_res1"), x, proj);
+        let n2 = rms(&mut g, &format!("{p}_rms2"), x1, w_rms2);
+        let gate = g.matmul(&format!("{p}_gate"), n2, wg);
+        let up = g.matmul(&format!("{p}_up"), n2, wu);
+        let sg = g.op(&format!("{p}_silu"), Op::Silu, vec![gate]);
+        let act = g.mul2(&format!("{p}_act"), sg, up);
+        let down = g.matmul(&format!("{p}_down"), act, wd);
+        x = g.add2(&format!("{p}_res2"), x1, down);
+    }
+    g.mark_output(x);
+    g
+}
+
+/// Tensor-parallel Llama (heads and FFN sharded, projections row-parallel).
+pub fn tp_pair(ranks: usize, layers: usize, cfg: &LlamaConfig) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq(layers, cfg);
+    let h = cfg.hidden();
+    let heads_per = cfg.heads / ranks as i64;
+    anyhow::ensure!(
+        cfg.heads % ranks as i64 == 0 && cfg.ffn % ranks as i64 == 0,
+        "llama config not divisible by {ranks} ranks"
+    );
+    let mut g = Graph::new("llama_tp");
+    let mut ri = RiBuilder::new();
+    let mut x = replicate_input(&mut g, &mut ri, "x", &[cfg.seq, h]);
+    let cos = replicate_input(&mut g, &mut ri, "cos", &[cfg.seq, cfg.head_dim]);
+    let sin = replicate_input(&mut g, &mut ri, "sin", &[cfg.seq, cfg.head_dim]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let w_rms1 = replicate_input(&mut g, &mut ri, &format!("{p}_rms1_w"), &[h]);
+        let w_rms2 = replicate_input(&mut g, &mut ri, &format!("{p}_rms2_w"), &[h]);
+        let wq = col_shard_weight(&mut g, &mut ri, &format!("{p}_wq"), &[h, h], ranks)?;
+        let wk = col_shard_weight(&mut g, &mut ri, &format!("{p}_wk"), &[h, h], ranks)?;
+        let wv = col_shard_weight(&mut g, &mut ri, &format!("{p}_wv"), &[h, h], ranks)?;
+        let wo = row_shard_weight(&mut g, &mut ri, &format!("{p}_wo"), &[h, h], ranks)?;
+        let wg = col_shard_weight(&mut g, &mut ri, &format!("{p}_wg"), &[h, cfg.ffn], ranks)?;
+        let wu = col_shard_weight(&mut g, &mut ri, &format!("{p}_wu"), &[h, cfg.ffn], ranks)?;
+        let wd = row_shard_weight(&mut g, &mut ri, &format!("{p}_wd"), &[cfg.ffn, h], ranks)?;
+
+        let n1 = rms(&mut g, &format!("{p}_rms1"), x, w_rms1);
+        let mut parts = Vec::with_capacity(ranks);
+        for rk in 0..ranks {
+            let q = g.matmul(&format!("{p}_q_r{rk}"), n1, wq[rk]);
+            let k = g.matmul(&format!("{p}_k_r{rk}"), n1, wk[rk]);
+            let v = g.matmul(&format!("{p}_v_r{rk}"), n1, wv[rk]);
+            let attn = attention(
+                &mut g,
+                &format!("{p}_r{rk}"),
+                q,
+                k,
+                v,
+                cos,
+                sin,
+                heads_per,
+                cfg.head_dim,
+            );
+            parts.push(g.matmul(&format!("{p}_part_r{rk}"), attn, wo[rk]));
+        }
+        let proj = g.all_reduce(&format!("{p}_proj_ar"), parts);
+        let x1 = g.add2(&format!("{p}_res1"), x, proj);
+        let n2 = rms(&mut g, &format!("{p}_rms2"), x1, w_rms2);
+        let mut mlp_parts = Vec::with_capacity(ranks);
+        for rk in 0..ranks {
+            let gate = g.matmul(&format!("{p}_gate_r{rk}"), n2, wg[rk]);
+            let up = g.matmul(&format!("{p}_up_r{rk}"), n2, wu[rk]);
+            let sg = g.op(&format!("{p}_silu_r{rk}"), Op::Silu, vec![gate]);
+            let act = g.mul2(&format!("{p}_act_r{rk}"), sg, up);
+            mlp_parts.push(g.matmul(&format!("{p}_down_r{rk}"), act, wd[rk]));
+        }
+        let mlp = g.all_reduce(&format!("{p}_mlp_ar"), mlp_parts);
+        x = g.add2(&format!("{p}_res2"), x1, mlp);
+    }
+    g.mark_output(x);
+    let ri = ri.finish(&gs, &g)?;
+    Ok((gs, g, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+
+    #[test]
+    fn llama_tp2_refines() {
+        let (gs, gd, ri) = tp_pair(2, 1, &LlamaConfig::default()).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 23).unwrap();
+    }
+
+    #[test]
+    fn llama_rejects_degree_6() {
+        // Fig 5: "no data for parallelism size 6 — cannot be evenly
+        // partitioned".
+        assert!(tp_pair(6, 1, &LlamaConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Qwen2 block under a vLLM-style runtime (Table 2): like Llama but with
+//! the framework's fused `fused_silu_mul` custom kernel on the MLP path —
+//! the "v"-group custom ops of Figures 6/7. Distributed with TP.
+
+use crate::ir::{Graph, Op, TensorId};
+use crate::relation::Relation;
+use crate::strategies::{col_shard_weight, replicate_input, row_shard_weight, RiBuilder};
+use anyhow::Result;
+
+const SEQ: i64 = 8;
+const HEADS: i64 = 4;
+const HEAD_DIM: i64 = 4;
+const FFN: i64 = 32;
+
+fn hidden() -> i64 {
+    HEADS * HEAD_DIM
+}
+
+fn rms(g: &mut Graph, name: &str, x: TensorId, w: TensorId) -> TensorId {
+    g.op(name, Op::RmsNorm { eps: crate::ir::FBits::new(1e-6) }, vec![x, w])
+}
+
+fn attention(
+    g: &mut Graph,
+    prefix: &str,
+    q: TensorId,
+    k: TensorId,
+    v: TensorId,
+    heads: i64,
+) -> TensorId {
+    let mut outs = Vec::with_capacity(heads as usize);
+    for i in 0..heads {
+        let (lo, hi) = (i * HEAD_DIM, (i + 1) * HEAD_DIM);
+        let qi = g.slice(&format!("{prefix}_q{i}"), q, 1, lo, hi);
+        let ki = g.slice(&format!("{prefix}_k{i}"), k, 1, lo, hi);
+        let vi = g.slice(&format!("{prefix}_v{i}"), v, 1, lo, hi);
+        outs.push(g.op(
+            &format!("{prefix}_o{i}"),
+            Op::Custom { name: "pallas_attention".into() },
+            vec![qi, ki, vi],
+        ));
+    }
+    g.concat(&format!("{prefix}_attn"), outs, 1)
+}
+
+pub fn seq(layers: usize) -> Graph {
+    let h = hidden();
+    let mut g = Graph::new("qwen2_seq");
+    let mut x = g.input("x", vec![SEQ, h]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let w_rms1 = g.input(&format!("{p}_rms1_w"), vec![h]);
+        let wq = g.input(&format!("{p}_wq"), vec![h, h]);
+        let wk = g.input(&format!("{p}_wk"), vec![h, h]);
+        let wv = g.input(&format!("{p}_wv"), vec![h, h]);
+        let wo = g.input(&format!("{p}_wo"), vec![h, h]);
+        let w_rms2 = g.input(&format!("{p}_rms2_w"), vec![h]);
+        let wg = g.input(&format!("{p}_wg"), vec![h, FFN]);
+        let wu = g.input(&format!("{p}_wu"), vec![h, FFN]);
+        let wd = g.input(&format!("{p}_wd"), vec![FFN, h]);
+
+        let n1 = rms(&mut g, &format!("{p}_rms1"), x, w_rms1);
+        let q = g.matmul(&format!("{p}_q"), n1, wq);
+        let k = g.matmul(&format!("{p}_k"), n1, wk);
+        let v = g.matmul(&format!("{p}_v"), n1, wv);
+        let attn = attention(&mut g, &p, q, k, v, HEADS);
+        let proj = g.matmul(&format!("{p}_proj"), attn, wo);
+        let x1 = g.add2(&format!("{p}_res1"), x, proj);
+        let n2 = rms(&mut g, &format!("{p}_rms2"), x1, w_rms2);
+        let gate = g.matmul(&format!("{p}_gate"), n2, wg);
+        let up = g.matmul(&format!("{p}_up"), n2, wu);
+        // vLLM's fused SwiGLU kernel
+        let act = g.op(
+            &format!("{p}_act"),
+            Op::Custom { name: "fused_silu_mul".into() },
+            vec![gate, up],
+        );
+        let down = g.matmul(&format!("{p}_down"), act, wd);
+        x = g.add2(&format!("{p}_res2"), x1, down);
+    }
+    g.mark_output(x);
+    g
+}
+
+pub fn tp_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq(layers);
+    let h = hidden();
+    anyhow::ensure!(
+        HEADS % ranks as i64 == 0 && FFN % ranks as i64 == 0,
+        "qwen2 config not divisible by {ranks}"
+    );
+    let heads_per = HEADS / ranks as i64;
+    let mut g = Graph::new("qwen2_tp");
+    let mut ri = RiBuilder::new();
+    let mut x = replicate_input(&mut g, &mut ri, "x", &[SEQ, h]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let w_rms1 = replicate_input(&mut g, &mut ri, &format!("{p}_rms1_w"), &[h]);
+        let w_rms2 = replicate_input(&mut g, &mut ri, &format!("{p}_rms2_w"), &[h]);
+        let wq = col_shard_weight(&mut g, &mut ri, &format!("{p}_wq"), &[h, h], ranks)?;
+        let wk = col_shard_weight(&mut g, &mut ri, &format!("{p}_wk"), &[h, h], ranks)?;
+        let wv = col_shard_weight(&mut g, &mut ri, &format!("{p}_wv"), &[h, h], ranks)?;
+        let wo = row_shard_weight(&mut g, &mut ri, &format!("{p}_wo"), &[h, h], ranks)?;
+        let wg = col_shard_weight(&mut g, &mut ri, &format!("{p}_wg"), &[h, FFN], ranks)?;
+        let wu = col_shard_weight(&mut g, &mut ri, &format!("{p}_wu"), &[h, FFN], ranks)?;
+        let wd = row_shard_weight(&mut g, &mut ri, &format!("{p}_wd"), &[FFN, h], ranks)?;
+
+        let n1 = rms(&mut g, &format!("{p}_rms1"), x, w_rms1);
+        let mut parts = Vec::with_capacity(ranks);
+        for rk in 0..ranks {
+            let q = g.matmul(&format!("{p}_q_r{rk}"), n1, wq[rk]);
+            let k = g.matmul(&format!("{p}_k_r{rk}"), n1, wk[rk]);
+            let v = g.matmul(&format!("{p}_v_r{rk}"), n1, wv[rk]);
+            let attn = attention(&mut g, &format!("{p}_r{rk}"), q, k, v, heads_per);
+            parts.push(g.matmul(&format!("{p}_part_r{rk}"), attn, wo[rk]));
+        }
+        let proj = g.all_reduce(&format!("{p}_proj_ar"), parts);
+        let x1 = g.add2(&format!("{p}_res1"), x, proj);
+        let n2 = rms(&mut g, &format!("{p}_rms2"), x1, w_rms2);
+        let mut mlp_parts = Vec::with_capacity(ranks);
+        for rk in 0..ranks {
+            let gate = g.matmul(&format!("{p}_gate_r{rk}"), n2, wg[rk]);
+            let up = g.matmul(&format!("{p}_up_r{rk}"), n2, wu[rk]);
+            let act = g.op(
+                &format!("{p}_act_r{rk}"),
+                Op::Custom { name: "fused_silu_mul".into() },
+                vec![gate, up],
+            );
+            mlp_parts.push(g.matmul(&format!("{p}_down_r{rk}"), act, wd[rk]));
+        }
+        let mlp = g.all_reduce(&format!("{p}_mlp_ar"), mlp_parts);
+        x = g.add2(&format!("{p}_res2"), x1, mlp);
+    }
+    g.mark_output(x);
+    let ri = ri.finish(&gs, &g)?;
+    Ok((gs, g, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+
+    #[test]
+    fn qwen2_tp2_refines() {
+        let (gs, gd, ri) = tp_pair(2, 1).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 29).unwrap();
+    }
+}

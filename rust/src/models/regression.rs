@@ -1,0 +1,121 @@
+//! HuggingFace-transformers-style regression with MSE loss (Table 2) —
+//! the gradient-accumulation workload of §6.2 Bug 6.
+//!
+//! `G_s` is a linear model trained on the full batch; `G_d` splits the
+//! batch into `k` microbatches. The **correct** implementation rescales
+//! each microbatch loss by `1/k` before accumulating; the buggy one (see
+//! `crate::bugs`) omits the rescale, so the accumulated loss relates to the
+//! sequential loss only through a division — not a clean expression — and
+//! refinement fails at the MSE operator.
+//!
+//! Both graphs carry their backward pass (built by `ir::autodiff`, the
+//! analog of the HF trainer's autograd), so the verified relation covers
+//! loss AND gradients. Shapes are powers of two so the `2/N · 1/k = 2/(N·k)`
+//! scale folding is exact in f64.
+
+use crate::ir::autodiff::append_backward;
+use crate::ir::{Graph, Op};
+use crate::relation::Relation;
+use crate::strategies::{replicate_input, shard_input, RiBuilder};
+use anyhow::Result;
+
+pub const BATCH: i64 = 8;
+pub const IN_DIM: i64 = 4;
+pub const OUT_DIM: i64 = 2;
+
+/// Sequential: pred = x·w + b, loss = mse(pred, y); outputs loss, ∂w, ∂b.
+pub fn seq() -> Graph {
+    let mut g = Graph::new("regression_seq");
+    let x = g.input("x", vec![BATCH, IN_DIM]);
+    let y = g.input("y", vec![BATCH, OUT_DIM]);
+    let w = g.input("w", vec![IN_DIM, OUT_DIM]);
+    let b = g.input("b", vec![OUT_DIM]);
+    let mm = g.matmul("mm", x, w);
+    let pred = g.add2("pred", mm, b);
+    let loss = g.op("loss", Op::MseLoss, vec![pred, y]);
+    g.mark_output(loss);
+    append_backward(&mut g, loss, &[w, b]).expect("regression backward");
+    g.eliminate_dead_code()
+}
+
+/// Gradient accumulation over `k` microbatches. `scaled` selects the
+/// correct (`true`) or buggy (`false`, §6.2 bug 6) loss scaling.
+pub fn grad_accum(k: usize, scaled: bool) -> Result<(Graph, RiBuilder)> {
+    anyhow::ensure!(BATCH % k as i64 == 0, "batch {} % microbatches {}", BATCH, k);
+    let mut g = Graph::new(if scaled { "regression_ga" } else { "regression_ga_buggy" });
+    let mut ri = RiBuilder::new();
+    let xs = shard_input(&mut g, &mut ri, "x", &[BATCH, IN_DIM], 0, k)?;
+    let ys = shard_input(&mut g, &mut ri, "y", &[BATCH, OUT_DIM], 0, k)?;
+    let w = replicate_input(&mut g, &mut ri, "w", &[IN_DIM, OUT_DIM]);
+    let b = replicate_input(&mut g, &mut ri, "b", &[OUT_DIM]);
+    let mut parts = Vec::with_capacity(k);
+    for i in 0..k {
+        let mm = g.matmul(&format!("mm_{i}"), xs[i], w);
+        let pred = g.add2(&format!("pred_{i}"), mm, b);
+        let li = g.op(&format!("loss_{i}"), Op::MseLoss, vec![pred, ys[i]]);
+        parts.push(if scaled {
+            g.scale(&format!("scaled_{i}"), li, 1.0 / k as f64)
+        } else {
+            li // BUG: accumulate unscaled microbatch losses
+        });
+    }
+    let total = g.op("loss_acc", Op::SumN, parts);
+    g.mark_output(total);
+    append_backward(&mut g, total, &[w, b]).expect("grad-accum backward");
+    Ok((g.eliminate_dead_code(), ri))
+}
+
+pub fn grad_accum_pair(k: usize) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq();
+    let (gd, ri) = grad_accum(k, true)?;
+    let ri = ri.finish(&gs, &gd)?;
+    Ok((gs, gd, ri))
+}
+
+pub fn grad_accum_buggy_pair(k: usize) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq();
+    let (gd, ri) = grad_accum(k, false)?;
+    let ri = ri.finish(&gs, &gd)?;
+    Ok((gs, gd, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+
+    #[test]
+    fn correct_grad_accum_refines_including_gradients() {
+        let (gs, gd, ri) = grad_accum_pair(2).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        // loss AND both gradients must be mapped
+        for name in ["loss", "grad_w", "grad_b"] {
+            let t = gs.tensor_by_name(name).unwrap();
+            assert!(out.relation.contains(t), "{name} unmapped");
+        }
+        verify_numeric(&gs, &gd, &ri, &out.relation, 31).unwrap();
+    }
+
+    #[test]
+    fn buggy_grad_accum_fails_at_loss() {
+        let (gs, gd, ri) = grad_accum_buggy_pair(2).unwrap();
+        let err = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap_err();
+        // §6.2 bug 6: "the accumulated loss cannot cleanly represent the
+        // loss in G_s" — inference stops at the MSE (or a gradient op fed by
+        // it); the operator name localizes the problem.
+        assert!(
+            err.node_name.contains("loss") || err.node_name.contains("grad"),
+            "unexpected localization: {}",
+            err.node_name
+        );
+    }
+
+    #[test]
+    fn four_microbatches_also_refine() {
+        let (gs, gd, ri) = grad_accum_pair(4).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 37).unwrap();
+    }
+}

@@ -1,0 +1,272 @@
+//! Relations (paper §3.2): sets of tensor-expression pairs mapping tensors
+//! of `G_s` to clean expressions over tensors of `G_d`.
+//!
+//! A relation may hold several mappings per tensor (replication, and the
+//! sum-vs-concat alternatives of the running example). Insertion applies
+//! the paper's self-provable pruning (§4.3.2): at most one expression per
+//! distinct leaf signature — the smallest — and a bounded number of
+//! signatures per tensor.
+
+use crate::egraph::CleanCand;
+use crate::expr::print::Namer;
+use crate::expr::{parse, Expr, Side, TensorRef};
+use crate::ir::{Graph, TensorId};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+/// Max mappings kept per tensor (distinct leaf signatures).
+pub const K_PER_TENSOR: usize = 4;
+
+#[derive(Debug, Clone, Default)]
+pub struct Relation {
+    map: FxHashMap<TensorId, Vec<CleanCand>>,
+}
+
+impl Relation {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, t: TensorId) -> &[CleanCand] {
+        self.map.get(&t).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn contains(&self, t: TensorId) -> bool {
+        self.map.get(&t).is_some_and(|v| !v.is_empty())
+    }
+
+    pub fn tensors(&self) -> impl Iterator<Item = TensorId> + '_ {
+        self.map.keys().copied()
+    }
+
+    /// Insert with self-provable pruning: keep min-cost per leaf signature,
+    /// at most [`K_PER_TENSOR`] signatures (cheapest first).
+    pub fn insert(&mut self, t: TensorId, cand: CleanCand) {
+        debug_assert!(cand.expr.is_clean(), "relation entries must be clean");
+        let entry = self.map.entry(t).or_default();
+        if let Some(existing) = entry.iter_mut().find(|c| c.leaves == cand.leaves) {
+            if cand.cost < existing.cost {
+                *existing = cand;
+            }
+            return;
+        }
+        entry.push(cand);
+        entry.sort_by_key(|c| c.cost);
+        entry.truncate(K_PER_TENSOR);
+    }
+
+    pub fn insert_all(&mut self, t: TensorId, cands: impl IntoIterator<Item = CleanCand>) {
+        for c in cands {
+            self.insert(t, c);
+        }
+    }
+
+    /// Completeness (§3.2): does the relation map every tensor in `required`?
+    pub fn is_complete_for(&self, required: &[TensorId]) -> bool {
+        required.iter().all(|&t| self.contains(t))
+    }
+
+    /// Restrict to `tensors`, keeping only expressions whose leaves satisfy
+    /// `leaf_ok` (Listing 1 line 9: final `R_o` must use only `O(G_d)`).
+    pub fn restrict(
+        &self,
+        tensors: &[TensorId],
+        leaf_ok: impl Fn(TensorRef) -> bool,
+    ) -> Relation {
+        let mut out = Relation::new();
+        for &t in tensors {
+            for cand in self.get(t) {
+                if cand.leaves.iter().all(|&l| leaf_ok(l)) {
+                    out.insert(t, cand.clone());
+                }
+            }
+        }
+        out
+    }
+
+    // ---- textual / JSON interchange ----
+
+    /// Parse a relation from JSON: `{"A": ["concat(A_1, A_2; dim=1)"]}`.
+    /// Keys are `G_s` tensor names, values are expression strings whose
+    /// leaves are `G_d` tensor names.
+    pub fn from_json(j: &Json, gs: &Graph, gd: &Graph) -> Result<Relation> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("relation must be a JSON object"))?;
+        let mut rel = Relation::new();
+        for (name, exprs) in obj {
+            let t = gs
+                .tensor_by_name(name)
+                .ok_or_else(|| anyhow!("relation names unknown G_s tensor '{name}'"))?;
+            let arr = exprs.as_arr().ok_or_else(|| anyhow!("'{name}' must map to a list"))?;
+            for e in arr {
+                let text = e.as_str().ok_or_else(|| anyhow!("expression must be a string"))?;
+                let resolve = |n: &str| gd.tensor_by_name(n).map(TensorRef::d);
+                let expr = parse::parse(text, &resolve)
+                    .with_context(|| format!("parsing relation for '{name}'"))?;
+                if !expr.is_clean() {
+                    bail!("relation expression for '{name}' is not clean: {text}");
+                }
+                let leaves = expr.leaves();
+                let cost = expr.size() as u32;
+                rel.insert(t, CleanCand { expr, cost, leaves });
+            }
+        }
+        Ok(rel)
+    }
+
+    pub fn to_json(&self, gs: &Graph, gd: &Graph) -> Json {
+        let namer = Namer { gs, gd };
+        let mut obj = std::collections::BTreeMap::new();
+        for (&t, cands) in &self.map {
+            let exprs: Vec<Json> = cands
+                .iter()
+                .map(|c| Json::str(crate::expr::print::render(&c.expr, &namer)))
+                .collect();
+            obj.insert(gs.tensor(t).name.clone(), Json::Arr(exprs));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Shape-check every mapping: the expression's result shape must equal
+    /// the `G_s` tensor's shape.
+    pub fn validate_shapes(&self, gs: &Graph, gd: &Graph) -> Result<()> {
+        for (&t, cands) in &self.map {
+            for c in cands {
+                let shape = expr_shape(&c.expr, gd)
+                    .with_context(|| format!("mapping for '{}'", gs.tensor(t).name))?;
+                if shape != gs.shape(t) {
+                    bail!(
+                        "mapping for '{}' has shape {:?}, expected {:?}",
+                        gs.tensor(t).name,
+                        shape,
+                        gs.shape(t)
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Infer the shape an expression over `G_d` tensors evaluates to.
+pub fn expr_shape(e: &Expr, gd: &Graph) -> Result<Vec<i64>> {
+    match e {
+        Expr::Leaf(t) => {
+            if t.side != Side::D {
+                bail!("relation leaf on the wrong side: {:?}", t);
+            }
+            Ok(gd.shape(t.id).to_vec())
+        }
+        Expr::Op(op, args) => {
+            let shapes: Vec<Vec<i64>> =
+                args.iter().map(|a| expr_shape(a, gd)).collect::<Result<_>>()?;
+            let refs: Vec<&[i64]> = shapes.iter().map(|s| s.as_slice()).collect();
+            op.infer_shape(&refs, None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn cand(expr: Expr) -> CleanCand {
+        let leaves = expr.leaves();
+        let cost = expr.size() as u32;
+        CleanCand { expr, cost, leaves }
+    }
+
+    fn graphs() -> (Graph, Graph) {
+        let mut gs = Graph::new("gs");
+        gs.input("A", vec![4, 4]);
+        gs.input("B", vec![4, 4]);
+        let mut gd = Graph::new("gd");
+        gd.input("A_1", vec![4, 2]);
+        gd.input("A_2", vec![4, 2]);
+        gd.input("B_r", vec![4, 4]);
+        (gs, gd)
+    }
+
+    #[test]
+    fn self_provable_pruning_on_insert() {
+        let mut r = Relation::new();
+        let big = cand(Expr::op(
+            Op::Concat { dim: 1 },
+            vec![
+                Expr::op(
+                    Op::Slice { dim: 1, start: 0.into(), end: 1.into() },
+                    vec![Expr::leaf(TensorRef::d(0))],
+                ),
+                Expr::op(
+                    Op::Slice { dim: 1, start: 1.into(), end: 2.into() },
+                    vec![Expr::leaf(TensorRef::d(0))],
+                ),
+            ],
+        ));
+        let small = cand(Expr::leaf(TensorRef::d(0)));
+        r.insert(0, big);
+        r.insert(0, small);
+        // same leaf signature {d0} -> only the smallest survives
+        assert_eq!(r.get(0).len(), 1);
+        assert_eq!(r.get(0)[0].cost, 0);
+    }
+
+    #[test]
+    fn distinct_signatures_coexist() {
+        let mut r = Relation::new();
+        r.insert(0, cand(Expr::leaf(TensorRef::d(0))));
+        r.insert(
+            0,
+            cand(Expr::op(
+                Op::SumN,
+                vec![Expr::leaf(TensorRef::d(1)), Expr::leaf(TensorRef::d(2))],
+            )),
+        );
+        assert_eq!(r.get(0).len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_and_clean_enforcement() {
+        let (gs, gd) = graphs();
+        let j = Json::parse(r#"{"A": ["concat(A_1, A_2; dim=1)"], "B": ["B_r"]}"#).unwrap();
+        let r = Relation::from_json(&j, &gs, &gd).unwrap();
+        assert!(r.contains(gs.tensor_by_name("A").unwrap()));
+        r.validate_shapes(&gs, &gd).unwrap();
+        let back = r.to_json(&gs, &gd);
+        let r2 = Relation::from_json(&back, &gs, &gd).unwrap();
+        assert_eq!(r2.len(), r.len());
+
+        // unclean expressions rejected
+        let bad = Json::parse(r#"{"A": ["matmul(A_1, A_2)"]}"#).unwrap();
+        assert!(Relation::from_json(&bad, &gs, &gd).is_err());
+    }
+
+    #[test]
+    fn shape_validation_catches_mismatch() {
+        let (gs, gd) = graphs();
+        let j = Json::parse(r#"{"A": ["A_1"]}"#).unwrap(); // [4,2] != [4,4]
+        let r = Relation::from_json(&j, &gs, &gd).unwrap();
+        assert!(r.validate_shapes(&gs, &gd).is_err());
+    }
+
+    #[test]
+    fn completeness_and_restrict() {
+        let (gs, _gd) = graphs();
+        let a = gs.tensor_by_name("A").unwrap();
+        let b = gs.tensor_by_name("B").unwrap();
+        let mut r = Relation::new();
+        r.insert(a, cand(Expr::leaf(TensorRef::d(2))));
+        assert!(r.is_complete_for(&[a]));
+        assert!(!r.is_complete_for(&[a, b]));
+        let restricted = r.restrict(&[a], |t| t.id != 2);
+        assert!(!restricted.contains(a), "leaf filter applies");
+    }
+}

@@ -1,0 +1,224 @@
+//! Distribution-strategy primitives (paper §2.1).
+//!
+//! Model builders (`crate::models`) compose these helpers to produce the
+//! distributed implementation `G_d` and its clean input relation `R_i` from
+//! the same configuration that builds `G_s` — mirroring how Megatron/vLLM
+//! implementers apply TP/SP/VP/EP/gradient-accumulation by hand. The
+//! helpers keep `R_i` construction honest: every sharded or replicated
+//! input records exactly the mapping a user of GraphGuard would write.
+
+use crate::ir::{Graph, TensorId};
+use crate::relation::Relation;
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// Which strategies a distributed variant applies (Table 2's third column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Tensor parallelism: shard weight matrices, all-reduce partials.
+    TP,
+    /// Sequence parallelism: shard activations along the sequence dim.
+    SP,
+    /// Vocabulary parallelism: shard the LM head over the vocab dim.
+    VP,
+    /// Expert parallelism: shard MoE experts across ranks.
+    EP,
+    /// Gradient accumulation: split the batch into microbatches.
+    GradAccum,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::TP => "tp",
+            Strategy::SP => "sp",
+            Strategy::VP => "vp",
+            Strategy::EP => "ep",
+            Strategy::GradAccum => "grad_accum",
+        }
+    }
+}
+
+/// Collects the clean input relation while the distributed graph is built.
+#[derive(Debug, Default)]
+pub struct RiBuilder {
+    entries: BTreeMap<String, Vec<String>>,
+}
+
+impl RiBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn map(&mut self, gs_name: &str, expr: String) {
+        self.entries.entry(gs_name.to_string()).or_default().push(expr);
+    }
+
+    pub fn finish(self, gs: &Graph, gd: &Graph) -> Result<Relation> {
+        let obj = Json::Obj(
+            self.entries
+                .into_iter()
+                .map(|(k, v)| (k, Json::Arr(v.into_iter().map(Json::Str).collect())))
+                .collect(),
+        );
+        let rel = Relation::from_json(&obj, gs, gd)?;
+        rel.validate_shapes(gs, gd)?;
+        Ok(rel)
+    }
+}
+
+/// Declare a `G_s` input sharded along `dim` across `ranks`; returns the
+/// per-rank `G_d` input ids and records `name = concat(name_r0.., dim)`.
+pub fn shard_input(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+    dim: usize,
+    ranks: usize,
+) -> Result<Vec<TensorId>> {
+    shard_input_typed(gd, ri, name, shape, dim, ranks, crate::ir::DType::F32)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn shard_input_typed(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+    dim: usize,
+    ranks: usize,
+    dtype: crate::ir::DType,
+) -> Result<Vec<TensorId>> {
+    ensure!(dim < shape.len(), "shard dim {dim} of {shape:?}");
+    ensure!(
+        shape[dim] % ranks as i64 == 0,
+        "dim {} of '{}' ({}) not divisible by {} ranks",
+        dim,
+        name,
+        shape[dim],
+        ranks
+    );
+    let mut part = shape.to_vec();
+    part[dim] /= ranks as i64;
+    let mut ids = Vec::with_capacity(ranks);
+    let mut names = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let rname = format!("{name}_r{r}");
+        ids.push(gd.input_typed(&rname, part.clone(), dtype));
+        names.push(rname);
+    }
+    ri.map(name, format!("concat({}; dim={dim})", names.join(", ")));
+    Ok(ids)
+}
+
+/// Declare a `G_s` input replicated on every rank. In single-program
+/// capture replicas are one tensor; we declare one `G_d` input and record
+/// the identity mapping.
+pub fn replicate_input(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+) -> TensorId {
+    replicate_input_typed(gd, ri, name, shape, crate::ir::DType::F32)
+}
+
+pub fn replicate_input_typed(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+    dtype: crate::ir::DType,
+) -> TensorId {
+    let rname = format!("{name}_rep");
+    let id = gd.input_typed(&rname, shape.to_vec(), dtype);
+    ri.map(name, rname);
+    id
+}
+
+/// Integer-typed shard (token ids under sequence parallelism).
+pub fn shard_input_ids(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+    dim: usize,
+    ranks: usize,
+) -> Result<Vec<TensorId>> {
+    shard_input_typed(gd, ri, name, shape, dim, ranks, crate::ir::DType::I64)
+}
+
+/// Column-shard a weight `W: [in, out]` across ranks (Megatron
+/// column-parallel linear). Records `W = concat(W_r; dim=1)`.
+pub fn col_shard_weight(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+    ranks: usize,
+) -> Result<Vec<TensorId>> {
+    shard_input(gd, ri, name, shape, shape.len() - 1, ranks)
+}
+
+/// Row-shard a weight `W: [in, out]` (row-parallel linear feeding an
+/// all-reduce). Records `W = concat(W_r; dim=0)`.
+pub fn row_shard_weight(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    shape: &[i64],
+    ranks: usize,
+) -> Result<Vec<TensorId>> {
+    shard_input(gd, ri, name, shape, shape.len() - 2, ranks)
+}
+
+/// Partition `[0, total)` into `ranks` equal chunks; (start, end) per rank.
+pub fn chunks(total: i64, ranks: usize) -> Vec<(i64, i64)> {
+    let c = total / ranks as i64;
+    (0..ranks as i64).map(|r| (r * c, (r + 1) * c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_records_concat_mapping() {
+        let mut gs = Graph::new("gs");
+        gs.input("X", vec![8, 4]);
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        let ids = shard_input(&mut gd, &mut ri, "X", &[8, 4], 0, 2).unwrap();
+        assert_eq!(ids.len(), 2);
+        assert_eq!(gd.shape(ids[0]), &[4, 4]);
+        let rel = ri.finish(&gs, &gd).unwrap();
+        assert!(rel.contains(gs.tensor_by_name("X").unwrap()));
+    }
+
+    #[test]
+    fn uneven_shard_rejected() {
+        // the Fig-5 "no size-6 for Llama-3" case
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        assert!(shard_input(&mut gd, &mut ri, "X", &[8, 4], 0, 6).is_err());
+    }
+
+    #[test]
+    fn replicate_records_identity() {
+        let mut gs = Graph::new("gs");
+        gs.input("W", vec![4, 4]);
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        replicate_input(&mut gd, &mut ri, "W", &[4, 4]);
+        let rel = ri.finish(&gs, &gd).unwrap();
+        assert_eq!(rel.get(gs.tensor_by_name("W").unwrap()).len(), 1);
+    }
+
+    #[test]
+    fn chunk_partition() {
+        assert_eq!(chunks(8, 2), vec![(0, 4), (4, 8)]);
+        assert_eq!(chunks(12, 3), vec![(0, 4), (4, 8), (8, 12)]);
+    }
+}

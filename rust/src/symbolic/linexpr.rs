@@ -1,0 +1,248 @@
+//! Linear integer expressions over interned symbols.
+//!
+//! `Scalar` is the attribute type used throughout the IR and the e-graph
+//! language: a normalized linear combination `k + Σ cᵢ·sᵢ`. Concrete values
+//! are the common case (`terms` empty); symbolic values appear when capture
+//! records data-dependent scalars. Normalization (sorted terms, no zero
+//! coefficients) makes `Eq`/`Hash` structural equality decide syntactic
+//! identity, and the [`solver`](super::solver) decides semantic comparisons
+//! under constraints.
+
+use std::fmt;
+
+/// Interned symbol identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SymId(pub u32);
+
+/// Symbol interner. One per verification session; symbol names come from the
+/// capture layer (e.g. `seq_len`, `pad`).
+#[derive(Debug, Default, Clone)]
+pub struct SymTable {
+    names: Vec<String>,
+}
+
+impl SymTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn intern(&mut self, name: &str) -> SymId {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return SymId(i as u32);
+        }
+        self.names.push(name.to_string());
+        SymId(self.names.len() as u32 - 1)
+    }
+
+    pub fn name(&self, id: SymId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// Normalized linear integer expression: `k + Σ cᵢ·sᵢ`, terms sorted by
+/// symbol, all coefficients non-zero.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinExpr {
+    pub k: i64,
+    pub terms: Vec<(SymId, i64)>,
+}
+
+impl LinExpr {
+    pub fn constant(k: i64) -> Self {
+        LinExpr { k, terms: vec![] }
+    }
+
+    pub fn sym(s: SymId) -> Self {
+        LinExpr { k: 0, terms: vec![(s, 1)] }
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn as_const(&self) -> Option<i64> {
+        if self.is_const() {
+            Some(self.k)
+        } else {
+            None
+        }
+    }
+
+    fn normalize(mut self) -> Self {
+        self.terms.sort_by_key(|&(s, _)| s);
+        let mut out: Vec<(SymId, i64)> = Vec::with_capacity(self.terms.len());
+        for (s, c) in self.terms {
+            match out.last_mut() {
+                Some((ls, lc)) if *ls == s => *lc += c,
+                _ => out.push((s, c)),
+            }
+        }
+        out.retain(|&(_, c)| c != 0);
+        LinExpr { k: self.k, terms: out }
+    }
+
+    pub fn add(&self, other: &LinExpr) -> LinExpr {
+        let mut terms = self.terms.clone();
+        terms.extend_from_slice(&other.terms);
+        LinExpr { k: self.k + other.k, terms }.normalize()
+    }
+
+    pub fn sub(&self, other: &LinExpr) -> LinExpr {
+        self.add(&other.scale(-1))
+    }
+
+    pub fn scale(&self, c: i64) -> LinExpr {
+        LinExpr { k: self.k * c, terms: self.terms.iter().map(|&(s, co)| (s, co * c)).collect() }
+            .normalize()
+    }
+
+    /// Multiply two linear expressions if at least one is constant.
+    pub fn mul(&self, other: &LinExpr) -> Option<LinExpr> {
+        if let Some(c) = self.as_const() {
+            Some(other.scale(c))
+        } else {
+            other.as_const().map(|c| self.scale(c))
+        }
+    }
+
+    pub fn display<'a>(&'a self, syms: &'a SymTable) -> LinExprDisplay<'a> {
+        LinExprDisplay { e: self, syms }
+    }
+}
+
+pub struct LinExprDisplay<'a> {
+    e: &'a LinExpr,
+    syms: &'a SymTable,
+}
+
+impl fmt::Display for LinExprDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.e.is_const() {
+            return write!(f, "{}", self.e.k);
+        }
+        let mut first = true;
+        if self.e.k != 0 {
+            write!(f, "{}", self.e.k)?;
+            first = false;
+        }
+        for &(s, c) in &self.e.terms {
+            if !first {
+                write!(f, "{}", if c >= 0 { "+" } else { "-" })?;
+            } else if c < 0 {
+                write!(f, "-")?;
+            }
+            if c.abs() != 1 {
+                write!(f, "{}*", c.abs())?;
+            }
+            write!(f, "{}", self.syms.name(s))?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+/// A scalar attribute: concrete or symbolic. Thin wrapper so IR code reads
+/// `Scalar::from(4)` at call sites and symbolic paths stay explicit.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Scalar(pub LinExpr);
+
+impl Scalar {
+    pub fn constant(k: i64) -> Self {
+        Scalar(LinExpr::constant(k))
+    }
+    pub fn sym(s: SymId) -> Self {
+        Scalar(LinExpr::sym(s))
+    }
+    pub fn as_const(&self) -> Option<i64> {
+        self.0.as_const()
+    }
+    /// Concrete value or panic — callers on graph-construction paths where
+    /// attrs are always concrete.
+    pub fn expect_const(&self) -> i64 {
+        self.as_const().expect("symbolic scalar where a concrete value is required")
+    }
+    pub fn add(&self, o: &Scalar) -> Scalar {
+        Scalar(self.0.add(&o.0))
+    }
+    pub fn sub(&self, o: &Scalar) -> Scalar {
+        Scalar(self.0.sub(&o.0))
+    }
+    pub fn scale(&self, c: i64) -> Scalar {
+        Scalar(self.0.scale(c))
+    }
+}
+
+impl From<i64> for Scalar {
+    fn from(k: i64) -> Self {
+        Scalar::constant(k)
+    }
+}
+impl From<i32> for Scalar {
+    fn from(k: i32) -> Self {
+        Scalar::constant(k as i64)
+    }
+}
+impl From<usize> for Scalar {
+    fn from(k: usize) -> Self {
+        Scalar::constant(k as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_merges_and_drops_zeros() {
+        let mut t = SymTable::new();
+        let a = t.intern("a");
+        let x = LinExpr::sym(a).add(&LinExpr::sym(a)); // 2a
+        assert_eq!(x.terms, vec![(a, 2)]);
+        let z = x.sub(&LinExpr::sym(a).scale(2)); // 0
+        assert!(z.is_const());
+        assert_eq!(z.k, 0);
+    }
+
+    #[test]
+    fn interning_is_stable() {
+        let mut t = SymTable::new();
+        let a = t.intern("seq");
+        let b = t.intern("pad");
+        assert_eq!(t.intern("seq"), a);
+        assert_ne!(a, b);
+        assert_eq!(t.name(b), "pad");
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut t = SymTable::new();
+        let a = t.intern("a");
+        let b = t.intern("b");
+        // (2a + 3) + (b - a) = a + b + 3
+        let e = LinExpr::sym(a).scale(2).add(&LinExpr::constant(3));
+        let f = LinExpr::sym(b).sub(&LinExpr::sym(a));
+        let g = e.add(&f);
+        assert_eq!(g.k, 3);
+        assert_eq!(g.terms, vec![(a, 1), (b, 1)]);
+        // const * symbolic
+        assert_eq!(g.mul(&LinExpr::constant(2)).unwrap().terms, vec![(a, 2), (b, 2)]);
+        // symbolic * symbolic unsupported
+        assert!(LinExpr::sym(a).mul(&LinExpr::sym(b)).is_none());
+    }
+
+    #[test]
+    fn display_formats() {
+        let mut t = SymTable::new();
+        let a = t.intern("a");
+        let e = LinExpr::sym(a).scale(-2).add(&LinExpr::constant(5));
+        assert_eq!(format!("{}", e.display(&t)), "5-2*a");
+        assert_eq!(format!("{}", LinExpr::constant(7).display(&t)), "7");
+    }
+}

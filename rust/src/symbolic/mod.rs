@@ -1,0 +1,15 @@
+//! Symbolic scalars (paper §5.2).
+//!
+//! Computation graphs carry only metadata, but operators like `select` can
+//! extract scalars that later appear in shape arithmetic (slice bounds,
+//! offsets, pad amounts). Lemma conditions must then compare quantities that
+//! are not concrete. The paper encodes these in SMT-LIB; all conditions that
+//! actually arise are shape arithmetic — linear integer expressions — so we
+//! implement a normalizing linear-integer-arithmetic solver with a user
+//! constraint store instead of shelling out to an SMT solver.
+
+pub mod linexpr;
+pub mod solver;
+
+pub use linexpr::{LinExpr, Scalar, SymId, SymTable};
+pub use solver::{Solver, Truth};

@@ -1,0 +1,325 @@
+//! Decision procedure for comparisons over linear integer expressions under
+//! user constraints (the SMT-LIB role in the paper, §5.2).
+//!
+//! Constraints are equalities `e = 0` and inequalities `e ≥ 0` over
+//! [`LinExpr`]s. Queries ask whether `a ⋈ b` (for ⋈ ∈ {=, ≠, ≤, <, ≥, >}) is
+//! implied, refuted, or unknown. The procedure:
+//!
+//! 1. substitutes equality constraints (solved for a pivot symbol with unit
+//!    coefficient — the common "sym = value" shape capture produces),
+//! 2. then bounds the residual `a - b` using interval arithmetic derived from
+//!    the inequality constraints.
+//!
+//! This is sound (never answers True/False unless implied) and complete for
+//! the shape arithmetic our lemmas generate; anything beyond returns
+//! [`Truth::Unknown`], which conditions treat as "lemma does not fire" —
+//! preserving GraphGuard's soundness at the cost of completeness, exactly the
+//! paper's trade-off.
+
+use super::linexpr::{LinExpr, SymId};
+use rustc_hash::FxHashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Truth {
+    True,
+    False,
+    Unknown,
+}
+
+impl Truth {
+    pub fn is_true(self) -> bool {
+        self == Truth::True
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Solver {
+    /// Substitutions sym -> expression (from equality constraints).
+    subst: FxHashMap<SymId, LinExpr>,
+    /// Inequality constraints `e ≥ 0` (post-substitution).
+    ge_zero: Vec<LinExpr>,
+    /// Per-symbol concrete bounds derived from single-symbol inequalities.
+    bounds: FxHashMap<SymId, (Option<i64>, Option<i64>)>,
+}
+
+impl Solver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assert `a = b`.
+    pub fn assert_eq(&mut self, a: &LinExpr, b: &LinExpr) {
+        let e = self.substitute(&a.sub(b));
+        // Find a pivot symbol with coefficient ±1 to solve for.
+        if let Some(&(s, c)) = e.terms.iter().find(|&&(_, c)| c == 1 || c == -1) {
+            // e = 0  =>  c*s = -(e - c*s)  =>  s = -(e - c*s)/c
+            let rest = e.sub(&LinExpr { k: 0, terms: vec![(s, c)] });
+            let solved = rest.scale(-c); // c is ±1 so this divides exactly
+            self.add_subst(s, solved);
+        } else if !e.is_const() {
+            // Keep as a pair of inequalities e >= 0 and -e >= 0.
+            self.ge_zero.push(e.clone());
+            self.ge_zero.push(e.scale(-1));
+        }
+    }
+
+    /// Assert `a ≥ b`.
+    pub fn assert_ge(&mut self, a: &LinExpr, b: &LinExpr) {
+        let e = self.substitute(&a.sub(b));
+        if let Some((s, c, rest)) = single_symbol(&e) {
+            // c*s + rest >= 0 with rest constant
+            let (lo, hi) = self.bounds.entry(s).or_insert((None, None));
+            if c > 0 {
+                // s >= ceil(-rest / c)
+                let bound = div_ceil(-rest, c);
+                *lo = Some(lo.map_or(bound, |old: i64| old.max(bound)));
+            } else {
+                // s <= floor(rest / -c)
+                let bound = div_floor(rest, -c);
+                *hi = Some(hi.map_or(bound, |old: i64| old.min(bound)));
+            }
+        }
+        self.ge_zero.push(e);
+    }
+
+    fn add_subst(&mut self, s: SymId, e: LinExpr) {
+        // Apply to existing substitutions to keep them triangular.
+        let keys: Vec<SymId> = self.subst.keys().copied().collect();
+        for k in keys {
+            let v = self.subst[&k].clone();
+            self.subst.insert(k, subst_one(&v, s, &e));
+        }
+        self.subst.insert(s, e);
+        for g in &mut self.ge_zero {
+            *g = subst_one(g, s, &self.subst[&s]);
+        }
+    }
+
+    /// Fully substitute known equalities into `e`.
+    pub fn substitute(&self, e: &LinExpr) -> LinExpr {
+        let mut cur = e.clone();
+        // Triangular substitution terminates in ≤ |subst| passes.
+        for _ in 0..=self.subst.len() {
+            let mut next = LinExpr::constant(cur.k);
+            let mut changed = false;
+            for &(s, c) in &cur.terms {
+                if let Some(rep) = self.subst.get(&s) {
+                    next = next.add(&rep.scale(c));
+                    changed = true;
+                } else {
+                    next = next.add(&LinExpr { k: 0, terms: vec![(s, c)] });
+                }
+            }
+            cur = next;
+            if !changed {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// Bound `e` over the constraint store: (min, max), None = unbounded.
+    fn interval(&self, e: &LinExpr) -> (Option<i64>, Option<i64>) {
+        let mut lo = Some(e.k);
+        let mut hi = Some(e.k);
+        for &(s, c) in &e.terms {
+            let (slo, shi) = self.bounds.get(&s).copied().unwrap_or((None, None));
+            let (tlo, thi) = if c >= 0 {
+                (slo.map(|v| v * c), shi.map(|v| v * c))
+            } else {
+                (shi.map(|v| v * c), slo.map(|v| v * c))
+            };
+            lo = match (lo, tlo) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
+            hi = match (hi, thi) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
+        }
+        (lo, hi)
+    }
+
+    /// Is `a = b` implied / refuted / unknown?
+    pub fn check_eq(&self, a: &LinExpr, b: &LinExpr) -> Truth {
+        let d = self.substitute(&a.sub(b));
+        if let Some(k) = d.as_const() {
+            return if k == 0 { Truth::True } else { Truth::False };
+        }
+        let (lo, hi) = self.interval(&d);
+        if lo == Some(0) && hi == Some(0) {
+            return Truth::True;
+        }
+        if lo.is_some_and(|l| l > 0) || hi.is_some_and(|h| h < 0) {
+            return Truth::False;
+        }
+        Truth::Unknown
+    }
+
+    /// Is `a ≥ b` implied / refuted / unknown?
+    pub fn check_ge(&self, a: &LinExpr, b: &LinExpr) -> Truth {
+        let d = self.substitute(&a.sub(b));
+        if let Some(k) = d.as_const() {
+            return if k >= 0 { Truth::True } else { Truth::False };
+        }
+        // Direct constraint hit: d ≥ 0 asserted verbatim?
+        if self.ge_zero.iter().any(|g| g == &d) {
+            return Truth::True;
+        }
+        let (lo, hi) = self.interval(&d);
+        if lo.is_some_and(|l| l >= 0) {
+            return Truth::True;
+        }
+        if hi.is_some_and(|h| h < 0) {
+            return Truth::False;
+        }
+        Truth::Unknown
+    }
+
+    pub fn check_le(&self, a: &LinExpr, b: &LinExpr) -> Truth {
+        self.check_ge(b, a)
+    }
+
+    pub fn check_lt(&self, a: &LinExpr, b: &LinExpr) -> Truth {
+        self.check_ge(b, &a.add(&LinExpr::constant(1)))
+    }
+
+    /// Resolve `e` to a concrete value if the constraints pin it down.
+    pub fn concretize(&self, e: &LinExpr) -> Option<i64> {
+        let d = self.substitute(e);
+        if let Some(k) = d.as_const() {
+            return Some(k);
+        }
+        let (lo, hi) = self.interval(&d);
+        match (lo, hi) {
+            (Some(a), Some(b)) if a == b => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// If `e` has exactly one symbolic term, return (sym, coeff, constant).
+fn single_symbol(e: &LinExpr) -> Option<(SymId, i64, i64)> {
+    if e.terms.len() == 1 {
+        let (s, c) = e.terms[0];
+        Some((s, c, e.k))
+    } else {
+        None
+    }
+}
+
+fn subst_one(e: &LinExpr, s: SymId, rep: &LinExpr) -> LinExpr {
+    let mut out = LinExpr::constant(e.k);
+    for &(t, c) in &e.terms {
+        if t == s {
+            out = out.add(&rep.scale(c));
+        } else {
+            out = out.add(&LinExpr { k: 0, terms: vec![(t, c)] });
+        }
+    }
+    out
+}
+
+fn div_ceil(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    (a + b - 1).div_euclid(b)
+}
+
+fn div_floor(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    a.div_euclid(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::linexpr::SymTable;
+
+    fn setup() -> (SymTable, Solver) {
+        (SymTable::new(), Solver::new())
+    }
+
+    #[test]
+    fn concrete_comparisons() {
+        let (_, s) = setup();
+        assert_eq!(s.check_eq(&LinExpr::constant(3), &LinExpr::constant(3)), Truth::True);
+        assert_eq!(s.check_eq(&LinExpr::constant(3), &LinExpr::constant(4)), Truth::False);
+        assert_eq!(s.check_ge(&LinExpr::constant(3), &LinExpr::constant(3)), Truth::True);
+        assert_eq!(s.check_lt(&LinExpr::constant(3), &LinExpr::constant(4)), Truth::True);
+    }
+
+    #[test]
+    fn equality_substitution() {
+        let (mut t, mut s) = setup();
+        let a = t.intern("a");
+        let b = t.intern("b");
+        // a = b + 2
+        s.assert_eq(&LinExpr::sym(a), &LinExpr::sym(b).add(&LinExpr::constant(2)));
+        assert_eq!(
+            s.check_eq(&LinExpr::sym(a).sub(&LinExpr::sym(b)), &LinExpr::constant(2)),
+            Truth::True
+        );
+        assert_eq!(s.check_ge(&LinExpr::sym(a), &LinExpr::sym(b)), Truth::True);
+        assert_eq!(s.check_eq(&LinExpr::sym(a), &LinExpr::sym(b)), Truth::False);
+    }
+
+    #[test]
+    fn chained_equalities() {
+        let (mut t, mut s) = setup();
+        let a = t.intern("a");
+        let b = t.intern("b");
+        let c = t.intern("c");
+        s.assert_eq(&LinExpr::sym(a), &LinExpr::sym(b));
+        s.assert_eq(&LinExpr::sym(b), &LinExpr::sym(c).add(&LinExpr::constant(1)));
+        assert_eq!(
+            s.check_eq(&LinExpr::sym(a), &LinExpr::sym(c).add(&LinExpr::constant(1))),
+            Truth::True
+        );
+    }
+
+    #[test]
+    fn inequality_bounds() {
+        let (mut t, mut s) = setup();
+        let n = t.intern("n");
+        // n >= 4
+        s.assert_ge(&LinExpr::sym(n), &LinExpr::constant(4));
+        assert_eq!(s.check_ge(&LinExpr::sym(n), &LinExpr::constant(2)), Truth::True);
+        assert_eq!(s.check_lt(&LinExpr::sym(n), &LinExpr::constant(3)), Truth::False);
+        assert_eq!(s.check_ge(&LinExpr::sym(n), &LinExpr::constant(5)), Truth::Unknown);
+        // 2n >= 8 is implied
+        assert_eq!(s.check_ge(&LinExpr::sym(n).scale(2), &LinExpr::constant(8)), Truth::True);
+    }
+
+    #[test]
+    fn pinned_by_two_sided_bounds() {
+        let (mut t, mut s) = setup();
+        let n = t.intern("n");
+        s.assert_ge(&LinExpr::sym(n), &LinExpr::constant(7));
+        s.assert_ge(&LinExpr::constant(7), &LinExpr::sym(n));
+        assert_eq!(s.concretize(&LinExpr::sym(n)), Some(7));
+        assert_eq!(s.check_eq(&LinExpr::sym(n), &LinExpr::constant(7)), Truth::True);
+    }
+
+    #[test]
+    fn unknown_stays_unknown() {
+        let (mut t, s) = setup();
+        let a = t.intern("a");
+        let b = t.intern("b");
+        assert_eq!(s.check_eq(&LinExpr::sym(a), &LinExpr::sym(b)), Truth::Unknown);
+        assert_eq!(s.check_ge(&LinExpr::sym(a), &LinExpr::sym(b)), Truth::Unknown);
+    }
+
+    #[test]
+    fn direct_constraint_hit_multisymbol() {
+        let (mut t, mut s) = setup();
+        let a = t.intern("a");
+        let b = t.intern("b");
+        let c = t.intern("c");
+        // a + b - c >= 0 (three symbols: interval arithmetic can't bound it,
+        // the verbatim-store lookup must).
+        let e = LinExpr::sym(a).add(&LinExpr::sym(b)).sub(&LinExpr::sym(c));
+        s.assert_ge(&e, &LinExpr::constant(0));
+        assert_eq!(s.check_ge(&e, &LinExpr::constant(0)), Truth::True);
+    }
+}

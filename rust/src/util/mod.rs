@@ -1,0 +1,8 @@
+//! Foundational substrates built in-repo because the offline crate set has no
+//! serde / rand / proptest: a JSON codec, a dense tensor, a PRNG, and a small
+//! property-testing harness.
+
+pub mod json;
+pub mod ndarray;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,470 @@
+//! Dense row-major f32 tensor.
+//!
+//! Backs the expression/graph evaluator (`expr::eval`) which is used to (a)
+//! numerically validate every lemma in the library on random inputs, (b)
+//! check that inferred output relations actually reconstruct `G_s`'s outputs
+//! (the soundness certificate), and (c) cross-validate against PJRT-executed
+//! HLO artifacts. Integer tensors (embedding ids) are stored as f32 with
+//! integral values — every op that consumes ids rounds before use.
+
+use anyhow::{bail, ensure, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdArray {
+    shape: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl NdArray {
+    pub fn new(shape: Vec<i64>, data: Vec<f32>) -> Result<Self> {
+        let n: i64 = shape.iter().product();
+        ensure!(
+            n as usize == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(NdArray { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<i64>) -> Self {
+        let n: i64 = shape.iter().product();
+        NdArray { shape, data: vec![0.0; n as usize] }
+    }
+
+    pub fn full(shape: Vec<i64>, v: f32) -> Self {
+        let n: i64 = shape.iter().product();
+        NdArray { shape, data: vec![v; n as usize] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        NdArray { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides in elements.
+    pub fn strides(&self) -> Vec<i64> {
+        let mut s = vec![1i64; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn reshape(&self, shape: Vec<i64>) -> Result<NdArray> {
+        let n: i64 = shape.iter().product();
+        ensure!(n as usize == self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        Ok(NdArray { shape, data: self.data.clone() })
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> NdArray {
+        NdArray { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise zip with broadcasting (numpy rules).
+    pub fn zip(&self, other: &NdArray, f: impl Fn(f32, f32) -> f32) -> Result<NdArray> {
+        let shape = broadcast_shapes(&self.shape, &other.shape)?;
+        let mut out = NdArray::zeros(shape.clone());
+        let sa = bcast_strides(&self.shape, &shape);
+        let sb = bcast_strides(&other.shape, &shape);
+        let strides = out.strides();
+        for (flat, slot) in out.data.iter_mut().enumerate() {
+            let mut ia = 0i64;
+            let mut ib = 0i64;
+            let mut rem = flat as i64;
+            for d in 0..shape.len() {
+                let idx = rem / strides[d];
+                rem %= strides[d];
+                ia += idx * sa[d];
+                ib += idx * sb[d];
+            }
+            *slot = f(self.data[ia as usize], other.data[ib as usize]);
+        }
+        Ok(out)
+    }
+
+    /// Batched matmul: [..., m, k] x [..., k, n] -> [..., m, n].
+    /// Leading batch dims must match exactly or be absent on one side.
+    pub fn matmul(&self, other: &NdArray) -> Result<NdArray> {
+        ensure!(self.ndim() >= 2 && other.ndim() >= 2, "matmul needs >=2 dims");
+        let (m, k1) = (self.shape[self.ndim() - 2], self.shape[self.ndim() - 1]);
+        let (k2, n) = (other.shape[other.ndim() - 2], other.shape[other.ndim() - 1]);
+        ensure!(k1 == k2, "matmul inner dims {} vs {}", k1, k2);
+        let batch_a: i64 = self.shape[..self.ndim() - 2].iter().product();
+        let batch_b: i64 = other.shape[..other.ndim() - 2].iter().product();
+        ensure!(
+            batch_a == batch_b || batch_a == 1 || batch_b == 1,
+            "matmul batch mismatch {:?} x {:?}",
+            self.shape,
+            other.shape
+        );
+        let batch = batch_a.max(batch_b);
+        let lead = if batch_a >= batch_b {
+            self.shape[..self.ndim() - 2].to_vec()
+        } else {
+            other.shape[..other.ndim() - 2].to_vec()
+        };
+        let mut shape = lead;
+        shape.push(m);
+        shape.push(n);
+        let mut out = NdArray::zeros(shape);
+        let (m, k, n) = (m as usize, k1 as usize, n as usize);
+        for b in 0..batch as usize {
+            let a_off = if batch_a == 1 { 0 } else { b * m * k };
+            let b_off = if batch_b == 1 { 0 } else { b * k * n };
+            let o_off = b * m * n;
+            for i in 0..m {
+                for p in 0..k {
+                    let a = self.data[a_off + i * k + p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[b_off + p * n..b_off + (p + 1) * n];
+                    let orow = &mut out.data[o_off + i * n..o_off + (i + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn transpose(&self, perm: &[usize]) -> Result<NdArray> {
+        ensure!(perm.len() == self.ndim(), "perm len {} vs ndim {}", perm.len(), self.ndim());
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            ensure!(p < perm.len() && !seen[p], "bad perm {:?}", perm);
+            seen[p] = true;
+        }
+        let new_shape: Vec<i64> = perm.iter().map(|&p| self.shape[p]).collect();
+        let mut out = NdArray::zeros(new_shape);
+        let src_strides = self.strides();
+        let dst_strides = out.strides();
+        for (flat, slot) in out.data.iter_mut().enumerate() {
+            let mut rem = flat as i64;
+            let mut src = 0i64;
+            for d in 0..perm.len() {
+                let idx = rem / dst_strides[d];
+                rem %= dst_strides[d];
+                src += idx * src_strides[perm[d]];
+            }
+            *slot = self.data[src as usize];
+        }
+        Ok(out)
+    }
+
+    pub fn slice(&self, dim: usize, start: i64, end: i64) -> Result<NdArray> {
+        ensure!(dim < self.ndim(), "slice dim {} ndim {}", dim, self.ndim());
+        ensure!(
+            0 <= start && start <= end && end <= self.shape[dim],
+            "slice [{start}:{end}] of dim size {}",
+            self.shape[dim]
+        );
+        let mut shape = self.shape.clone();
+        shape[dim] = end - start;
+        let mut out = NdArray::zeros(shape);
+        let outer: i64 = self.shape[..dim].iter().product();
+        let inner: i64 = self.shape[dim + 1..].iter().product();
+        let d = self.shape[dim];
+        for o in 0..outer {
+            for j in 0..(end - start) {
+                let src = ((o * d + start + j) * inner) as usize;
+                let dst = ((o * (end - start) + j) * inner) as usize;
+                out.data[dst..dst + inner as usize]
+                    .copy_from_slice(&self.data[src..src + inner as usize]);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn concat(parts: &[&NdArray], dim: usize) -> Result<NdArray> {
+        ensure!(!parts.is_empty(), "concat of nothing");
+        let nd = parts[0].ndim();
+        ensure!(dim < nd, "concat dim {} ndim {}", dim, nd);
+        for p in parts {
+            ensure!(p.ndim() == nd, "concat rank mismatch");
+            for d in 0..nd {
+                if d != dim {
+                    ensure!(p.shape[d] == parts[0].shape[d], "concat shape mismatch on dim {d}");
+                }
+            }
+        }
+        let mut shape = parts[0].shape.clone();
+        shape[dim] = parts.iter().map(|p| p.shape[dim]).sum();
+        let mut out = NdArray::zeros(shape.clone());
+        let outer: i64 = shape[..dim].iter().product();
+        let inner: i64 = shape[dim + 1..].iter().product();
+        let total = shape[dim];
+        let mut offset = 0i64;
+        for p in parts {
+            let d = p.shape[dim];
+            for o in 0..outer {
+                let src = (o * d * inner) as usize;
+                let dst = ((o * total + offset) * inner) as usize;
+                out.data[dst..dst + (d * inner) as usize]
+                    .copy_from_slice(&p.data[src..src + (d * inner) as usize]);
+            }
+            offset += d;
+        }
+        Ok(out)
+    }
+
+    /// Pad `dim` with `value` before/after.
+    pub fn pad(&self, dim: usize, before: i64, after: i64, value: f32) -> Result<NdArray> {
+        ensure!(dim < self.ndim(), "pad dim");
+        ensure!(before >= 0 && after >= 0, "negative pad");
+        let mut shape = self.shape.clone();
+        shape[dim] += before + after;
+        let mut out = NdArray::full(shape.clone(), value);
+        let outer: i64 = self.shape[..dim].iter().product();
+        let inner: i64 = self.shape[dim + 1..].iter().product();
+        let d = self.shape[dim];
+        let dt = shape[dim];
+        for o in 0..outer {
+            for j in 0..d {
+                let src = ((o * d + j) * inner) as usize;
+                let dst = ((o * dt + before + j) * inner) as usize;
+                out.data[dst..dst + inner as usize]
+                    .copy_from_slice(&self.data[src..src + inner as usize]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reduce one dim with `f` and initial accumulator `init`.
+    pub fn reduce(
+        &self,
+        dim: usize,
+        keepdim: bool,
+        init: f32,
+        f: impl Fn(f32, f32) -> f32,
+    ) -> Result<NdArray> {
+        ensure!(dim < self.ndim(), "reduce dim {} of {:?}", dim, self.shape);
+        let outer: i64 = self.shape[..dim].iter().product();
+        let inner: i64 = self.shape[dim + 1..].iter().product();
+        let d = self.shape[dim];
+        let mut shape = self.shape.clone();
+        if keepdim {
+            shape[dim] = 1;
+        } else {
+            shape.remove(dim);
+        }
+        let mut out = NdArray::full(shape, init);
+        for o in 0..outer {
+            for j in 0..d {
+                for i in 0..inner {
+                    let src = ((o * d + j) * inner + i) as usize;
+                    let dst = (o * inner + i) as usize;
+                    out.data[dst] = f(out.data[dst], self.data[src]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn sum_dim(&self, dim: usize, keepdim: bool) -> Result<NdArray> {
+        self.reduce(dim, keepdim, 0.0, |a, b| a + b)
+    }
+    pub fn max_dim(&self, dim: usize, keepdim: bool) -> Result<NdArray> {
+        self.reduce(dim, keepdim, f32::NEG_INFINITY, f32::max)
+    }
+    pub fn mean_dim(&self, dim: usize, keepdim: bool) -> Result<NdArray> {
+        let n = self.shape[dim] as f32;
+        Ok(self.sum_dim(dim, keepdim)?.map(|x| x / n))
+    }
+
+    /// Gather rows: self is [v, d] table, ids is any-shape of integral f32;
+    /// output shape = ids.shape ++ [d].
+    pub fn gather_rows(&self, ids: &NdArray) -> Result<NdArray> {
+        ensure!(self.ndim() == 2, "gather table must be 2-d");
+        let (v, d) = (self.shape[0], self.shape[1]);
+        let mut shape = ids.shape.clone();
+        shape.push(d);
+        let mut out = NdArray::zeros(shape);
+        for (i, &id) in ids.data.iter().enumerate() {
+            let row = id.round() as i64;
+            if row < 0 || row >= v {
+                bail!("gather id {} out of range [0,{})", row, v);
+            }
+            let src = (row * d) as usize;
+            out.data[i * d as usize..(i + 1) * d as usize]
+                .copy_from_slice(&self.data[src..src + d as usize]);
+        }
+        Ok(out)
+    }
+
+    pub fn allclose(&self, other: &NdArray, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(&a, &b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &NdArray) -> f32 {
+        self.data.iter().zip(&other.data).map(|(&a, &b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+}
+
+/// NumPy broadcasting of two shapes.
+pub fn broadcast_shapes(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
+    let n = a.len().max(b.len());
+    let mut out = vec![0i64; n];
+    for i in 0..n {
+        let da = if i < n - a.len() { 1 } else { a[i - (n - a.len())] };
+        let db = if i < n - b.len() { 1 } else { b[i - (n - b.len())] };
+        if da == db || da == 1 || db == 1 {
+            out[i] = da.max(db);
+        } else {
+            bail!("cannot broadcast {:?} with {:?}", a, b);
+        }
+    }
+    Ok(out)
+}
+
+/// Strides of `shape` viewed as broadcast to `target` (0 on broadcast dims).
+fn bcast_strides(shape: &[i64], target: &[i64]) -> Vec<i64> {
+    let mut strides = vec![0i64; target.len()];
+    let offset = target.len() - shape.len();
+    let mut acc = 1i64;
+    for i in (0..shape.len()).rev() {
+        if shape[i] != 1 {
+            strides[offset + i] = acc;
+        }
+        acc *= shape[i];
+    }
+    strides
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arange(shape: Vec<i64>) -> NdArray {
+        let n: i64 = shape.iter().product();
+        NdArray::new(shape, (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn matmul_2x2() {
+        let a = NdArray::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = NdArray::new(vec![2, 2], vec![1., 1., 1., 1.]).unwrap();
+        assert_eq!(a.matmul(&b).unwrap().data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_block_decomposition() {
+        // The block-matmul lemma numerically: A=[A1|A2], B=[B1;B2] =>
+        // AB = A1B1 + A2B2. This is the core rewrite of the running example.
+        let a = arange(vec![4, 6]);
+        let b = arange(vec![6, 5]);
+        let full = a.matmul(&b).unwrap();
+        let a1 = a.slice(1, 0, 3).unwrap();
+        let a2 = a.slice(1, 3, 6).unwrap();
+        let b1 = b.slice(0, 0, 3).unwrap();
+        let b2 = b.slice(0, 3, 6).unwrap();
+        let sum = a1.matmul(&b1).unwrap().zip(&a2.matmul(&b2).unwrap(), |x, y| x + y).unwrap();
+        assert!(full.allclose(&sum, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let x = arange(vec![3, 8]);
+        let l = x.slice(1, 0, 5).unwrap();
+        let r = x.slice(1, 5, 8).unwrap();
+        let back = NdArray::concat(&[&l, &r], 1).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let x = arange(vec![2, 3, 4]);
+        let t = x.transpose(&[2, 0, 1]).unwrap();
+        assert_eq!(t.shape(), &[4, 2, 3]);
+        let back = t.transpose(&[1, 2, 0]).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn broadcasting_zip() {
+        let x = arange(vec![2, 3]);
+        let row = arange(vec![3]);
+        let out = x.zip(&row, |a, b| a + b).unwrap();
+        assert_eq!(out.data(), &[0., 2., 4., 3., 5., 7.]);
+        let col = arange(vec![2, 1]);
+        let out = x.zip(&col, |a, b| a * b).unwrap();
+        assert_eq!(out.data(), &[0., 0., 0., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn reduce_dims() {
+        let x = arange(vec![2, 3]);
+        assert_eq!(x.sum_dim(1, false).unwrap().data(), &[3., 12.]);
+        assert_eq!(x.sum_dim(0, true).unwrap().shape(), &[1, 3]);
+        assert_eq!(x.max_dim(1, false).unwrap().data(), &[2., 5.]);
+        assert_eq!(x.mean_dim(1, false).unwrap().data(), &[1., 4.]);
+    }
+
+    #[test]
+    fn pad_then_slice_identity() {
+        let x = arange(vec![2, 3]);
+        let padded = x.pad(1, 0, 2, 0.0).unwrap();
+        assert_eq!(padded.shape(), &[2, 5]);
+        assert_eq!(padded.slice(1, 0, 3).unwrap(), x);
+    }
+
+    #[test]
+    fn gather_rows_basic() {
+        let table = arange(vec![4, 2]);
+        let ids = NdArray::new(vec![3], vec![2., 0., 3.]).unwrap();
+        let out = table.gather_rows(&ids).unwrap();
+        assert_eq!(out.shape(), &[3, 2]);
+        assert_eq!(out.data(), &[4., 5., 0., 1., 6., 7.]);
+    }
+
+    #[test]
+    fn batched_matmul() {
+        let a = arange(vec![2, 2, 3]);
+        let b = arange(vec![2, 3, 2]);
+        let out = a.matmul(&b).unwrap();
+        assert_eq!(out.shape(), &[2, 2, 2]);
+        // spot check batch 1
+        let a1 = a.slice(0, 1, 2).unwrap().reshape(vec![2, 3]).unwrap();
+        let b1 = b.slice(0, 1, 2).unwrap().reshape(vec![3, 2]).unwrap();
+        let expect = a1.matmul(&b1).unwrap();
+        let got = out.slice(0, 1, 2).unwrap().reshape(vec![2, 2]).unwrap();
+        assert!(expect.allclose(&got, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = arange(vec![2, 3]);
+        assert!(x.slice(1, 2, 9).is_err());
+        assert!(x.transpose(&[0, 0]).is_err());
+        assert!(x.matmul(&arange(vec![4, 2])).is_err());
+        assert!(NdArray::new(vec![2, 2], vec![0.0]).is_err());
+    }
+}

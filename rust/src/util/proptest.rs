@@ -1,0 +1,82 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; `check` runs it across many
+//! seeds and reports the first failing seed so failures are reproducible with
+//! `Prop::replay`. Used for coordinator/e-graph/relation invariants.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub name: &'static str,
+    pub cases: u64,
+    pub base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Prop { name, cases: 64, base_seed: 0xC0FFEE }
+    }
+
+    pub fn cases(mut self, n: u64) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run `f` across `cases` seeds; panic with the failing seed on error.
+    pub fn check(&self, f: impl Fn(&mut Rng) -> Result<(), String>) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{}' failed on case {} (replay seed {:#x}): {}",
+                    self.name, case, seed, msg
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing seed (debugging aid).
+    pub fn replay(&self, seed: u64, f: impl Fn(&mut Rng) -> Result<(), String>) {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{}' replay {:#x} failed: {}", self.name, seed, msg);
+        }
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new("add commutes").cases(32).check(|rng| {
+            let a = rng.next_f32();
+            let b = rng.next_f32();
+            prop_assert!(a + b == b + a, "{} {}", a, b);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_seed() {
+        Prop::new("always fails").cases(4).check(|_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-module integration tests: graph JSON interchange, strategy sweep,
+//! HLO frontend on real JAX artifacts (when built), and soundness
+//! properties over randomized workloads.
+
+use graphguard::infer::{check_refinement, verify_numeric, InferConfig};
+use graphguard::ir::{json_io, Graph, Op};
+use graphguard::models;
+use graphguard::relation::Relation;
+use graphguard::util::json::Json;
+use graphguard::util::proptest::Prop;
+
+/// Every Table-2 workload must refine at degrees 2 and 4, and the inferred
+/// relation must numerically reconstruct the sequential outputs (soundness
+/// certificate replay).
+#[test]
+fn suite_refines_across_degrees_with_certificates() {
+    for ranks in [2usize, 4] {
+        for w in models::table2_workloads(ranks) {
+            let out = check_refinement(&w.gs, &w.gd, &w.ri, &InferConfig::default())
+                .unwrap_or_else(|e| panic!("{} @ {ranks}: {e}", w.name));
+            verify_numeric(&w.gs, &w.gd, &w.ri, &out.relation, ranks as u64 * 131)
+                .unwrap_or_else(|e| panic!("{} @ {ranks} numeric: {e:#}", w.name));
+        }
+    }
+}
+
+/// Graphs survive the JSON round trip and verify identically.
+#[test]
+fn json_roundtrip_preserves_verification() {
+    let (gs, gd, ri) = models::llama::tp_pair(2, 1, &models::llama::LlamaConfig::default()).unwrap();
+    let gs2 = json_io::from_json(&json_io::to_json(&gs)).unwrap();
+    let gd2 = json_io::from_json(&json_io::to_json(&gd)).unwrap();
+    let ri2 = Relation::from_json(&ri.to_json(&gs, &gd), &gs2, &gd2).unwrap();
+    let out = check_refinement(&gs2, &gd2, &ri2, &InferConfig::default())
+        .unwrap_or_else(|e| panic!("{e}"));
+    assert!(out.relation.is_complete_for(&gs2.outputs));
+}
+
+/// Property: sequence-sharding any randomly-built elementwise pipeline is
+/// a refinement, and randomly corrupting one slice offset breaks it.
+#[test]
+fn property_random_elementwise_pipelines() {
+    Prop::new("sp elementwise pipelines refine").cases(24).check(|rng| {
+        let depth = 1 + rng.below(4) as usize;
+        let rows = 4 * (1 + rng.below(3)) as i64; // divisible by 2
+        let cols = 2 + rng.below(6) as i64;
+        let unaries = [Op::Gelu, Op::Tanh, Op::Silu, Op::Relu, Op::Sigmoid, Op::Neg];
+
+        let mut gs = Graph::new("gs");
+        let x = gs.input("x", vec![rows * 2, cols]);
+        let mut cur = x;
+        let ops: Vec<Op> =
+            (0..depth).map(|_| unaries[rng.below(unaries.len() as u64) as usize].clone()).collect();
+        for (i, op) in ops.iter().enumerate() {
+            cur = gs.op(&format!("u{i}"), op.clone(), vec![cur]);
+        }
+        gs.mark_output(cur);
+
+        let mut gd = Graph::new("gd");
+        let x0 = gd.input("x_r0", vec![rows, cols]);
+        let x1 = gd.input("x_r1", vec![rows, cols]);
+        let mut shards = vec![x0, x1];
+        for (i, op) in ops.iter().enumerate() {
+            shards = shards
+                .iter()
+                .enumerate()
+                .map(|(r, &s)| gd.op(&format!("u{i}_r{r}"), op.clone(), vec![s]))
+                .collect();
+        }
+        let y = gd.all_gather("y", shards, 0);
+        gd.mark_output(y);
+
+        let ri = Relation::from_json(
+            &Json::parse(r#"{"x": ["concat(x_r0, x_r1; dim=0)"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .map_err(|e| format!("{e}"))?;
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .map_err(|e| format!("depth {depth}: {e}"))?;
+        verify_numeric(&gs, &gd, &ri, &out.relation, rng.next_u64()).map_err(|e| format!("{e:#}"))?;
+        Ok(())
+    });
+}
+
+/// Property: a corrupted distributed matmul (wrong shard pairing) is always
+/// detected — soundness means no false "refines" verdicts.
+#[test]
+fn property_corrupted_matmul_detected() {
+    Prop::new("wrong shard pairing detected").cases(16).check(|rng| {
+        let m = 2 + rng.below(4) as i64;
+        let k = 2 * (1 + rng.below(3)) as i64;
+        let n = 2 + rng.below(4) as i64;
+        let mut gs = Graph::new("gs");
+        let a = gs.input("A", vec![m, 2 * k]);
+        let b = gs.input("B", vec![2 * k, n]);
+        let c = gs.matmul("C", a, b);
+        gs.mark_output(c);
+
+        let mut gd = Graph::new("gd");
+        let a1 = gd.input("A_1", vec![m, k]);
+        let a2 = gd.input("A_2", vec![m, k]);
+        let b1 = gd.input("B_1", vec![k, n]);
+        let _b2 = gd.input("B_2", vec![k, n]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        // BUG: both partial products use B_1
+        let c2 = gd.matmul("C_2", a2, b1);
+        let s = gd.all_reduce("C_sum", vec![c1, c2]);
+        gd.mark_output(s);
+
+        let ri = Relation::from_json(
+            &Json::parse(
+                r#"{"A": ["concat(A_1, A_2; dim=1)"], "B": ["concat(B_1, B_2; dim=0)"]}"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .map_err(|e| format!("{e}"))?;
+        match check_refinement(&gs, &gd, &ri, &InferConfig::default()) {
+            Err(_) => Ok(()),
+            Ok(_) => Err("corrupted pairing verified as refinement!".into()),
+        }
+    });
+}
+
+/// HLO frontend on the real JAX artifact (skipped when artifacts are not
+/// built). The regression_seq module parses and its graph matches the
+/// capture-side input count.
+#[test]
+fn hlo_frontend_parses_jax_artifact() {
+    let path = "artifacts/regression_seq.hlo.txt";
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!("skipping: run `make artifacts` to enable this test");
+        return;
+    };
+    let g = graphguard::hlo::parse_hlo_text(&text, "regression_seq").unwrap();
+    assert_eq!(g.inputs.len(), 4, "x, y, w, b");
+    assert_eq!(g.outputs.len(), 1);
+    assert_eq!(g.shape(g.outputs[0]), &[] as &[i64], "scalar loss");
+}
+
+/// Captured JAX graphs verify (skipped without artifacts) — the same check
+/// `examples/cross_validate.rs` performs, minus the PJRT execution.
+#[test]
+fn captured_jax_graphs_refine() {
+    let load = |p: &str| -> Option<Json> {
+        std::fs::read_to_string(p).ok().and_then(|t| Json::parse(&t).ok())
+    };
+    let (Some(gs_j), Some(gd_j), Some(ri_j)) = (
+        load("artifacts/graphs/llama_seq.json"),
+        load("artifacts/graphs/llama_tp2.json"),
+        load("artifacts/graphs/llama_ri.json"),
+    ) else {
+        eprintln!("skipping: run `make artifacts` to enable this test");
+        return;
+    };
+    let gs = json_io::from_json(&gs_j).unwrap();
+    let gd = json_io::from_json(&gd_j).unwrap();
+    let ri = Relation::from_json(&ri_j, &gs, &gd).unwrap();
+    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        .unwrap_or_else(|e| panic!("{e}"));
+    assert!(out.relation.is_complete_for(&gs.outputs));
+}
+
+/// Coordinator invariants under random batch sizes/thread counts.
+#[test]
+fn property_coordinator_order_and_determinism() {
+    Prop::new("coordinator preserves order").cases(6).check(|rng| {
+        let threads = 1 + rng.below(8) as usize;
+        let coord = graphguard::coordinator::Coordinator::new(threads, InferConfig::default());
+        let jobs = models::table2_workloads(2);
+        let names: Vec<String> = jobs.iter().map(|w| w.name.clone()).collect();
+        let results = coord.run_batch(jobs);
+        for (r, n) in results.iter().zip(&names) {
+            if &r.name != n {
+                return Err(format!("order broken: {} vs {}", r.name, n));
+            }
+            if !r.ok {
+                return Err(format!("{} failed: {:?}", r.name, r.error));
+            }
+        }
+        Ok(())
+    });
+}
