@@ -4,19 +4,23 @@
 //! (and the baseline's e-graph size) grows with model size.
 
 use graphguard::baseline::check_refinement_monolithic;
-use graphguard::bench::fmt_dur;
+use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
 use graphguard::egraph::SaturationLimits;
 use graphguard::infer::{check_refinement, InferConfig};
 use graphguard::models::llama::{self, LlamaConfig};
 use std::time::Instant;
 
 fn main() {
+    // warm the shared lemma library so the first row doesn't absorb the
+    // one-time construction cost
+    let _ = graphguard::lemmas::standard_rewrites();
     println!("iterative (GraphGuard) vs monolithic whole-graph baseline — llama TP=2\n");
     println!(
         "{:<7} {:>7} {:>12} {:>12} {:>10} {:>9}",
         "layers", "ops", "iterative", "monolithic", "speedup", "mono-nodes"
     );
     let cfg = LlamaConfig::default();
+    let mut records: Vec<BenchRecord> = Vec::new();
     for layers in [1usize, 2, 3] {
         let (gs, gd, ri) = llama::tp_pair(2, layers, &cfg).unwrap();
         let ops = gs.num_nodes() + gd.num_nodes();
@@ -24,7 +28,16 @@ fn main() {
         let t0 = Instant::now();
         let it = check_refinement(&gs, &gd, &ri, &InferConfig::default());
         let iterative = t0.elapsed();
-        assert!(it.is_ok(), "iterative failed: {}", it.err().unwrap());
+        let it = match it {
+            Ok(out) => out,
+            Err(e) => panic!("iterative failed: {e}"),
+        };
+        records.push(BenchRecord::new(
+            format!("llama_l{layers}_iterative"),
+            ops,
+            iterative,
+            it.stats.total_applications(),
+        ));
 
         let t1 = Instant::now();
         let mono = check_refinement_monolithic(
@@ -38,6 +51,12 @@ fn main() {
             Ok(out) => (fmt_dur(monolithic), out.egraph_nodes),
             Err(_) => (format!("{} (gave up)", fmt_dur(monolithic)), 0),
         };
+        records.push(BenchRecord::new(
+            format!("llama_l{layers}_monolithic"),
+            ops,
+            monolithic,
+            mono.as_ref().map(|o| o.stats.total_applications()).unwrap_or(0),
+        ));
         println!(
             "{:<7} {:>7} {:>12} {:>12} {:>9.1}x {:>9}",
             layers,
@@ -49,4 +68,6 @@ fn main() {
         );
     }
     println!("\n(paper §7: per-operator e-graphs stay small; whole-model saturation does not scale)");
+    let path = write_bench_json("baseline_compare", &records).expect("write bench json");
+    println!("wrote {}", path.display());
 }

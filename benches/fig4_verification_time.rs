@@ -3,10 +3,14 @@
 //! positively correlated with operator count; all models well under the
 //! 3-minute envelope; ByteDance bwd > fwd.
 
+use graphguard::bench::{write_bench_json, BenchRecord};
 use graphguard::coordinator::{report_table, Coordinator};
 use graphguard::models;
 
 fn main() {
+    // warm the shared lemma library so the first (smallest) workload's row
+    // doesn't absorb the one-time construction cost
+    let _ = graphguard::lemmas::standard_rewrites();
     println!("Figure 4 — end-to-end verification time (parallelism 2, 1 layer)\n");
     let mut jobs = models::table2_workloads(2);
     let (gs, gd, ri) = models::bytedance::bwd_pair(2).unwrap();
@@ -30,4 +34,18 @@ fn main() {
     pairs.sort_by_key(|p| p.0);
     println!("ops→time series: {:?}", pairs);
     assert!(results.iter().all(|r| r.ok), "all Table-2 workloads must refine");
+
+    let records: Vec<BenchRecord> = results
+        .iter()
+        .map(|r| {
+            BenchRecord::new(
+                r.name.clone(),
+                r.gs_ops + r.gd_ops,
+                r.duration,
+                r.lemma_applications,
+            )
+        })
+        .collect();
+    let path = write_bench_json("fig4", &records).expect("write BENCH_fig4.json");
+    println!("wrote {}", path.display());
 }

@@ -2,10 +2,14 @@
 //! #lemmas, avg operators-per-lemma for each model's custom ops; (b) the
 //! CDF of lines-of-code per lemma (paper: all < 55 LoC, most simple).
 
+use graphguard::bench::{write_bench_json, BenchRecord};
 use graphguard::lemmas;
+use std::time::Instant;
 
 fn main() {
+    let t0 = Instant::now();
     let lib = lemmas::metadata();
+    let build_time = t0.elapsed();
 
     println!("Figure 6a — custom-operator lemma effort per model/frontend");
     println!("{:<12} {:>8} {:>8} {:>16}", "origin", "#lemmas", "#ops", "avg ops/lemma");
@@ -40,4 +44,21 @@ fn main() {
         let n = lib.iter().filter(|m| m.complexity == c).count();
         println!("  {c} ops: {}", "#".repeat(n));
     }
+
+    // machine-readable record: per-group lemma counts (ops = #lemmas,
+    // lemma_applications = summed complexity) plus library build time
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for group in ["c", "core", "v", "h", "pallas"] {
+        let lems: Vec<_> = lib.iter().filter(|m| m.group == group).collect();
+        let ops: u32 = lems.iter().map(|m| m.complexity).sum();
+        records.push(BenchRecord::new(
+            format!("group_{group}"),
+            lems.len(),
+            std::time::Duration::ZERO,
+            ops as u64,
+        ));
+    }
+    records.push(BenchRecord::new("library_build", lib.len(), build_time, 0));
+    let path = write_bench_json("fig6", &records).expect("write BENCH_fig6.json");
+    println!("\nwrote {}", path.display());
 }

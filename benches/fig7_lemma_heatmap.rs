@@ -3,17 +3,28 @@
 //! clean-op ("c" group) lemmas dominate, counts grow with parallelism,
 //! HLO/vLLM/Pallas custom-op lemmas appear only for their models.
 
+use graphguard::bench::{write_bench_json, BenchRecord};
 use graphguard::coordinator::Coordinator;
 use graphguard::models;
 use rustc_hash::FxHashMap;
 
 fn main() {
+    // warm the shared lemma library so the first row doesn't absorb the
+    // one-time construction cost
+    let _ = graphguard::lemmas::standard_rewrites();
     let coord = Coordinator::default();
     let mut rows: Vec<(String, FxHashMap<&'static str, u64>)> = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
     for ranks in [2usize, 4] {
         for w in models::table2_workloads(ranks) {
             let r = coord.run_one(&w);
             assert!(r.ok, "{}: {:?}", r.name, r.error);
+            records.push(BenchRecord::new(
+                w.name.clone(),
+                r.gs_ops + r.gd_ops,
+                r.duration,
+                r.lemma_applications,
+            ));
             rows.push((w.name.clone(), r.lemma_counts.into_iter().collect()));
         }
     }
@@ -70,4 +81,7 @@ fn main() {
         "\nclean-op lemma share: {:.0}% (paper: clean-expression lemmas dominate)",
         100.0 * total_c as f64 / total_all as f64
     );
+
+    let path = write_bench_json("fig7", &records).expect("write BENCH_fig7.json");
+    println!("wrote {}", path.display());
 }

@@ -4,7 +4,58 @@
 //! iterations, mean/p50/p95, and aligned table output matching the rows and
 //! series the paper's tables/figures report.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
+
+/// One machine-readable benchmark row, serialized into `BENCH_<name>.json`
+/// so the perf trajectory is tracked across PRs (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub workload: String,
+    /// total operator count of the measured workload (0 if not applicable)
+    pub ops: usize,
+    pub wall_ns: u128,
+    pub lemma_applications: u64,
+}
+
+impl BenchRecord {
+    pub fn new(
+        workload: impl Into<String>,
+        ops: usize,
+        wall: Duration,
+        lemma_applications: u64,
+    ) -> Self {
+        BenchRecord {
+            workload: workload.into(),
+            ops,
+            wall_ns: wall.as_nanos(),
+            lemma_applications,
+        }
+    }
+}
+
+/// Write `BENCH_<name>.json` in the working directory, alongside the
+/// printed table. Returns the path written.
+pub fn write_bench_json(
+    name: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("workload", Json::str(r.workload.clone())),
+                ("ops", Json::num(r.ops as f64)),
+                ("wall_ns", Json::num(r.wall_ns as f64)),
+                ("lemma_applications", Json::num(r.lemma_applications as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![("bench", Json::str(name)), ("results", Json::arr(rows))]);
+    let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(path)
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -106,5 +157,21 @@ mod tests {
         let (v, r) = measure("calc", || 42);
         assert_eq!(v, 42);
         assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let rec = BenchRecord::new("toy", 7, Duration::from_micros(1500), 42);
+        let path = write_bench_json("unittest_scratch", &[rec]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").as_str(), Some("unittest_scratch"));
+        let rows = doc.get("results").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("workload").as_str(), Some("toy"));
+        assert_eq!(rows[0].get("ops").as_usize(), Some(7));
+        assert_eq!(rows[0].get("wall_ns").as_f64(), Some(1_500_000.0));
+        assert_eq!(rows[0].get("lemma_applications").as_usize(), Some(42));
     }
 }

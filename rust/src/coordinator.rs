@@ -86,6 +86,9 @@ impl Coordinator {
     /// Verify a batch of workloads across the thread pool; results come
     /// back in submission order.
     pub fn run_batch(&self, jobs: Vec<Workload>) -> Vec<JobResult> {
+        // Warm the shared lemma library before spawning workers so no job's
+        // wall-clock absorbs the one-time construction cost.
+        let _ = crate::lemmas::standard_rewrites();
         let n = jobs.len();
         let queue: Arc<Mutex<VecDeque<(usize, Workload)>>> =
             Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));

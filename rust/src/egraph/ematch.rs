@@ -73,14 +73,20 @@ impl Subst {
         }
     }
 
-    pub fn var(&self, slot: u32) -> Id {
-        self.vars[slot as usize].expect("unbound var")
+    /// Bound tensor-expression var, or `None` if the slot is unbound.
+    /// Appliers treat `None` as "rule does not fire" instead of panicking —
+    /// a mis-slotted pattern then costs a skipped rewrite, not the whole
+    /// verification.
+    pub fn var(&self, slot: u32) -> Option<Id> {
+        self.vars.get(slot as usize).copied().flatten()
     }
-    pub fn op(&self, slot: u32) -> &Op {
-        self.ops[slot as usize].as_ref().expect("unbound op")
+    /// Bound operator, or `None` if the slot is unbound.
+    pub fn op(&self, slot: u32) -> Option<&Op> {
+        self.ops.get(slot as usize).and_then(|o| o.as_ref())
     }
-    pub fn list(&self, slot: u32) -> &[Id] {
-        self.lists[slot as usize].as_deref().expect("unbound list")
+    /// Bound variadic child list, or `None` if the slot is unbound.
+    pub fn list(&self, slot: u32) -> Option<&[Id]> {
+        self.lists.get(slot as usize).and_then(|l| l.as_deref())
     }
 }
 
@@ -90,10 +96,18 @@ const MAX_MATCHES_PER_CLASS: usize = 64;
 /// Match `pat` against class `root`; return all substitutions.
 pub fn ematch(eg: &EGraph, pat: &Pat, root: Id) -> Vec<Subst> {
     let mut out = Vec::new();
-    let init = Subst::default();
-    match_pat(eg, pat, eg.find(root), &init, &mut out);
-    out.truncate(MAX_MATCHES_PER_CLASS);
+    ematch_into(eg, pat, root, &mut out);
     out
+}
+
+/// Like [`ematch`], but clears and fills a caller-provided buffer so the
+/// saturation hot loop reuses one allocation across every (rule, class)
+/// pair instead of building a fresh `Vec` per call.
+pub fn ematch_into(eg: &EGraph, pat: &Pat, root: Id, out: &mut Vec<Subst>) {
+    out.clear();
+    let init = Subst::default();
+    match_pat(eg, pat, eg.find(root), &init, out);
+    out.truncate(MAX_MATCHES_PER_CLASS);
 }
 
 /// Match `pat` against every class in the graph; returns (root, subst).
@@ -231,8 +245,9 @@ mod tests {
         let pat = Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)]);
         let subs = ematch(&eg, &pat, m);
         assert_eq!(subs.len(), 1);
-        assert_eq!(subs[0].var(0), a);
-        assert_eq!(subs[0].var(1), b);
+        assert_eq!(subs[0].var(0), Some(a));
+        assert_eq!(subs[0].var(1), Some(b));
+        assert_eq!(subs[0].var(2), None, "unbound slot is a graceful None");
         // no match against a leaf class
         assert!(ematch(&eg, &pat, a).is_empty());
     }
@@ -247,7 +262,7 @@ mod tests {
         let pat = Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]);
         let subs = ematch(&eg, &pat, s);
         assert_eq!(subs.len(), 1);
-        match subs[0].op(0) {
+        match subs[0].op(0).unwrap() {
             Op::Slice { start, end, .. } => {
                 assert_eq!(start.as_const(), Some(2));
                 assert_eq!(end.as_const(), Some(6));
@@ -264,7 +279,7 @@ mod tests {
         let pat = Pat::bind_variadic(OpTag::Concat, 0, 0);
         let subs = ematch(&eg, &pat, c);
         assert_eq!(subs.len(), 1);
-        assert_eq!(subs[0].list(0), &parts[..]);
+        assert_eq!(subs[0].list(0), Some(&parts[..]));
     }
 
     #[test]
@@ -293,7 +308,7 @@ mod tests {
         );
         let subs = ematch(&eg, &pat, n);
         assert_eq!(subs.len(), 1);
-        assert_eq!(subs[0].var(0), a);
+        assert_eq!(subs[0].var(0), Some(a));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use super::unionfind::UnionFind;
 use crate::expr::{Expr, TensorRef};
-use crate::ir::Op;
+use crate::ir::{Op, OpTag};
 use anyhow::{bail, Result};
 use rustc_hash::{FxHashMap, FxHashSet};
 
@@ -57,6 +57,14 @@ pub struct EGraph {
     dirty: Vec<Id>,
     /// shape analysis per canonical id.
     shapes: FxHashMap<Id, Vec<i64>>,
+    /// Persistent op-tag index: tag -> canonical ids of classes holding at
+    /// least one node with that tag. Maintained by `add_op`/`union` so the
+    /// rewrite engine never rebuilds it per saturation iteration.
+    tag_index: FxHashMap<OpTag, FxHashSet<Id>>,
+    /// Classes created, grown by a union, or given a new parent node since
+    /// the last [`EGraph::take_dirty_closure`] — the seed of the
+    /// incremental-matching worklist.
+    touched: FxHashSet<Id>,
     /// total enodes ever added (limit enforcement).
     pub n_nodes: usize,
 }
@@ -119,12 +127,20 @@ impl EGraph {
             if let Some(class) = self.classes.get_mut(&c) {
                 class.parents.push((node.clone(), id));
             }
+            // A new parent node can enable context-dependent rewrites rooted
+            // at the child's *other* parents (e.g. sibling-slice merging), so
+            // the child seeds the incremental worklist too.
+            self.touched.insert(c);
         }
         Ok(id)
     }
 
     fn new_class(&mut self, node: ENode, shape: Vec<i64>) -> Id {
         let id = self.uf.make_set();
+        if let ELang::Op(op) = &node.lang {
+            self.tag_index.entry(op.tag()).or_default().insert(id);
+        }
+        self.touched.insert(id);
         self.memo.insert(node.clone(), id);
         self.classes.insert(id, EClass { nodes: vec![node], parents: vec![] });
         self.shapes.insert(id, shape);
@@ -187,11 +203,73 @@ impl EGraph {
         let (keep, drop) = self.uf.union(ra, rb).expect("distinct roots");
         let dropped = self.classes.remove(&drop).unwrap_or_default();
         self.shapes.remove(&drop);
+        for node in &dropped.nodes {
+            if let ELang::Op(op) = &node.lang {
+                if let Some(set) = self.tag_index.get_mut(&op.tag()) {
+                    set.remove(&drop);
+                    set.insert(keep);
+                }
+            }
+        }
         let kept = self.classes.get_mut(&keep).expect("kept class");
         kept.nodes.extend(dropped.nodes);
         kept.parents.extend(dropped.parents);
         self.dirty.push(keep);
+        self.touched.insert(keep);
         Ok(true)
+    }
+
+    /// Drain the set of classes touched since the last call and return it
+    /// closed under transitive parents — exactly the classes where a rewrite
+    /// pattern could newly match after the intervening mutations. Ids are
+    /// canonical.
+    pub fn take_dirty_closure(&mut self) -> FxHashSet<Id> {
+        let seed: Vec<Id> = self.touched.drain().collect();
+        let mut out = FxHashSet::default();
+        let mut stack: Vec<Id> = seed.into_iter().map(|i| self.uf.find(i)).collect();
+        while let Some(id) = stack.pop() {
+            if !out.insert(id) {
+                continue;
+            }
+            if let Some(class) = self.classes.get(&id) {
+                for &(_, pid) in &class.parents {
+                    let pid = self.uf.find(pid);
+                    if !out.contains(&pid) {
+                        stack.push(pid);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Canonical ids of classes containing at least one node with `tag`
+    /// (served from the persistent index — O(matches), not O(classes)).
+    pub fn classes_with_tag(&self, tag: OpTag) -> impl Iterator<Item = Id> + '_ {
+        self.tag_classes(tag).into_iter().flatten().copied()
+    }
+
+    /// The persistent tag-index entry for `tag`, if any class carries it.
+    /// Exposed as a set so the matcher can intersect it with a worklist by
+    /// iterating whichever side is smaller.
+    pub fn tag_classes(&self, tag: OpTag) -> Option<&FxHashSet<Id>> {
+        self.tag_index.get(&tag).filter(|s| !s.is_empty())
+    }
+
+    /// Clear all contents while keeping allocated capacity, so one `EGraph`
+    /// arena (memo table, class map, union-find vector, tag sets) is reused
+    /// across the per-operator inference walk instead of reallocated.
+    pub fn reset(&mut self) {
+        self.uf.clear();
+        self.classes.clear();
+        self.memo.clear();
+        self.dirty.clear();
+        self.shapes.clear();
+        for set in self.tag_index.values_mut() {
+            set.clear();
+        }
+        self.touched.clear();
+        self.n_nodes = 0;
     }
 
     /// Restore congruence: parents of merged classes may now be equal.
@@ -253,6 +331,92 @@ impl EGraph {
     /// Are the two ids in the same class?
     pub fn same(&self, a: Id, b: Id) -> bool {
         self.uf.find(a) == self.uf.find(b)
+    }
+
+    /// Check the structural invariants the incremental engine relies on.
+    /// Valid after a `rebuild`; used by the property tests. Checks:
+    /// congruence closure (no canonical node appears in two classes), memo
+    /// canonicalization, parent-index completeness, and tag-index
+    /// consistency in both directions.
+    pub fn debug_check_invariants(&self) -> Result<(), String> {
+        let mut canon_owner: FxHashMap<ENode, Id> = FxHashMap::default();
+        for (&id, class) in &self.classes {
+            if self.uf.find(id) != id {
+                return Err(format!("class key {id} is not canonical"));
+            }
+            if !self.shapes.contains_key(&id) {
+                return Err(format!("class {id} has no shape"));
+            }
+            for node in &class.nodes {
+                let canon = node.canonicalize(&self.uf);
+                // congruence closure: a canonical node lives in one class
+                if let Some(&other) = canon_owner.get(&canon) {
+                    if other != id {
+                        return Err(format!(
+                            "congruence violated: {canon:?} in classes {other} and {id}"
+                        ));
+                    }
+                } else {
+                    canon_owner.insert(canon.clone(), id);
+                }
+                // memo canonicalization: the canonical key resolves here
+                match self.memo.get(&canon) {
+                    Some(&m) if self.uf.find(m) == id => {}
+                    Some(&m) => {
+                        return Err(format!(
+                            "memo for {canon:?} resolves to {} not {id}",
+                            self.uf.find(m)
+                        ))
+                    }
+                    None => return Err(format!("memo misses canonical node {canon:?}")),
+                }
+                // tag index: class must be listed under the node's tag
+                if let ELang::Op(op) = &canon.lang {
+                    let listed = self
+                        .tag_index
+                        .get(&op.tag())
+                        .is_some_and(|set| set.contains(&id));
+                    if !listed {
+                        return Err(format!(
+                            "tag index misses class {id} for tag {:?}",
+                            op.tag()
+                        ));
+                    }
+                }
+                // parent index: every child knows about this parent node
+                for &ch in &canon.children {
+                    let ch = self.uf.find(ch);
+                    let covered = self.classes.get(&ch).is_some_and(|c| {
+                        c.parents.iter().any(|(pn, pid)| {
+                            self.uf.find(*pid) == id && pn.canonicalize(&self.uf) == canon
+                        })
+                    });
+                    if !covered {
+                        return Err(format!(
+                            "parent index of class {ch} misses parent {canon:?} (class {id})"
+                        ));
+                    }
+                }
+            }
+        }
+        // tag index, reverse direction: every listed class is canonical and
+        // really contains a node with the tag
+        for (&tag, set) in &self.tag_index {
+            for &id in set {
+                if self.uf.find(id) != id {
+                    return Err(format!("tag index holds stale id {id} for {tag:?}"));
+                }
+                let has = self.classes.get(&id).is_some_and(|c| {
+                    c.nodes
+                        .iter()
+                        .any(|n| matches!(&n.lang, ELang::Op(op) if op.tag() == tag))
+                });
+                if !has {
+                    return Err(format!("tag index lists class {id} without a {tag:?} node"));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -317,6 +481,61 @@ mod tests {
         let shapes = |_tr: TensorRef| Some(vec![2, 3]);
         let id = eg.add_expr(&e, &shapes).unwrap();
         assert_eq!(eg.shape(id), Some(&[4, 3][..]));
+    }
+
+    #[test]
+    fn tag_index_tracks_adds_and_unions() {
+        use crate::ir::OpTag;
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let na = eg.add_op(Op::Neg, vec![a]).unwrap();
+        let nb = eg.add_op(Op::Neg, vec![b]).unwrap();
+        let negs: Vec<Id> = eg.classes_with_tag(OpTag::Neg).collect();
+        assert_eq!(negs.len(), 2);
+        eg.union(na, nb).unwrap();
+        eg.rebuild();
+        let negs: Vec<Id> = eg.classes_with_tag(OpTag::Neg).collect();
+        assert_eq!(negs, vec![eg.find(na)], "merged class listed once");
+        eg.debug_check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dirty_closure_covers_transitive_parents() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        let n1 = eg.add_op(Op::Neg, vec![a]).unwrap();
+        let n2 = eg.add_op(Op::Neg, vec![n1]).unwrap();
+        // drain construction-time marks
+        let _ = eg.take_dirty_closure();
+        assert!(eg.take_dirty_closure().is_empty(), "no marks after drain");
+        eg.union(a, b).unwrap();
+        eg.rebuild();
+        let w = eg.take_dirty_closure();
+        let keep = eg.find(a);
+        assert!(w.contains(&keep), "merged class in worklist");
+        assert!(w.contains(&eg.find(n1)), "direct parent in worklist");
+        assert!(w.contains(&eg.find(n2)), "transitive parent in worklist");
+    }
+
+    #[test]
+    fn reset_reuses_arena() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![2, 2]);
+        let b = eg.add_leaf(t(1), vec![2, 2]);
+        eg.add_op(Op::MatMul, vec![a, b]).unwrap();
+        assert_eq!(eg.n_nodes, 3);
+        eg.reset();
+        assert_eq!(eg.n_nodes, 0);
+        assert_eq!(eg.num_classes(), 0);
+        // ids restart from zero and behave like a fresh graph
+        let a2 = eg.add_leaf(t(0), vec![2, 2]);
+        assert_eq!(a2, 0);
+        let b2 = eg.add_leaf(t(1), vec![2, 2]);
+        let m = eg.add_op(Op::MatMul, vec![a2, b2]).unwrap();
+        assert_eq!(eg.lookup(&Op::MatMul, &[a2, b2]), Some(m));
+        eg.debug_check_invariants().unwrap();
     }
 
     #[test]

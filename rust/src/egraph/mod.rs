@@ -19,7 +19,7 @@ pub mod unionfind;
 
 pub use enode::{EClass, EGraph, ELang, ENode, Id};
 pub use extract::CleanCand;
-pub use ematch::{ematch, ematch_all, Children, POp, Pat, Subst};
+pub use ematch::{ematch, ematch_all, ematch_into, Children, POp, Pat, Subst};
 pub use extract::extract_clean;
-pub use rewrite::saturate;
+pub use rewrite::{saturate, saturate_full_rescan, saturate_with, MatchStrategy};
 pub use rewrite::{Rewrite, RewriteCtx, SatStats, SaturationLimits};

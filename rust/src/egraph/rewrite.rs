@@ -11,17 +11,66 @@
 
 use super::ematch::{Pat, Subst};
 use super::enode::{EGraph, Id};
-use crate::symbolic::Solver;
+use crate::symbolic::{LinExpr, Solver, Truth};
 use rustc_hash::FxHashMap;
+use std::sync::Mutex;
+
+/// Kind of a cached solver query (both reduce to a question about `a - b`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum CondKind {
+    Eq,
+    Ge,
+}
 
 /// Context available to appliers.
+///
+/// Besides the symbolic solver it carries a condition-result cache: lemma
+/// side-conditions are keyed by the normalized difference `a - b`, and the
+/// same symbolic comparisons recur for every operator of a model (slice
+/// bounds, partition offsets), so each distinct condition is proved once per
+/// `check_refinement` call instead of once per operator. The cache assumes
+/// the solver's constraint store is fixed after construction — which holds
+/// for the inference walk, where constraints come from capture, not lemmas.
 pub struct RewriteCtx {
     pub solver: Solver,
+    cond_cache: Mutex<FxHashMap<(CondKind, LinExpr), Truth>>,
 }
 
 impl Default for RewriteCtx {
     fn default() -> Self {
-        RewriteCtx { solver: Solver::new() }
+        RewriteCtx::with_solver(Solver::new())
+    }
+}
+
+impl RewriteCtx {
+    pub fn with_solver(solver: Solver) -> Self {
+        RewriteCtx { solver, cond_cache: Mutex::new(FxHashMap::default()) }
+    }
+
+    /// Memoized `solver.check_eq`.
+    pub fn check_eq(&self, a: &LinExpr, b: &LinExpr) -> Truth {
+        self.cached(CondKind::Eq, a, b, |s, a, b| s.check_eq(a, b))
+    }
+
+    /// Memoized `solver.check_ge`.
+    pub fn check_ge(&self, a: &LinExpr, b: &LinExpr) -> Truth {
+        self.cached(CondKind::Ge, a, b, |s, a, b| s.check_ge(a, b))
+    }
+
+    fn cached(
+        &self,
+        kind: CondKind,
+        a: &LinExpr,
+        b: &LinExpr,
+        f: impl Fn(&Solver, &LinExpr, &LinExpr) -> Truth,
+    ) -> Truth {
+        let key = (kind, a.sub(b));
+        if let Some(&t) = self.cond_cache.lock().unwrap().get(&key) {
+            return t;
+        }
+        let t = f(&self.solver, a, b);
+        self.cond_cache.lock().unwrap().insert(key, t);
+        t
     }
 }
 
@@ -90,52 +139,120 @@ fn root_tag(pat: &super::ematch::Pat) -> Option<crate::ir::OpTag> {
     }
 }
 
-/// Run equality saturation until fixpoint or limits.
+/// How `saturate_with` selects the classes to re-match each iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatchStrategy {
+    /// Iteration 0 matches every class; later iterations re-match only the
+    /// dirty-class worklist — classes unioned, congruence-merged, created,
+    /// or given a new parent since the previous pass, plus their transitive
+    /// parents ([`EGraph::take_dirty_closure`]). A pattern can only newly
+    /// match where something in its (applier-visible) scope changed, so
+    /// this reaches the same fixpoint as a full rescan; the differential
+    /// tests hold it to that.
+    Incremental,
+    /// Re-match every class every iteration — the pre-incremental engine,
+    /// kept as the oracle for differential testing.
+    FullRescan,
+}
+
+/// Run equality saturation until fixpoint or limits (incremental matching).
 pub fn saturate(
     eg: &mut EGraph,
     rules: &[Rewrite],
     ctx: &RewriteCtx,
     limits: SaturationLimits,
 ) -> SatStats {
-    use rustc_hash::FxHashSet;
+    saturate_with(eg, rules, ctx, limits, MatchStrategy::Incremental)
+}
+
+/// Full-rescan oracle (see [`MatchStrategy::FullRescan`]).
+pub fn saturate_full_rescan(
+    eg: &mut EGraph,
+    rules: &[Rewrite],
+    ctx: &RewriteCtx,
+    limits: SaturationLimits,
+) -> SatStats {
+    saturate_with(eg, rules, ctx, limits, MatchStrategy::FullRescan)
+}
+
+/// Run equality saturation until fixpoint or limits.
+pub fn saturate_with(
+    eg: &mut EGraph,
+    rules: &[Rewrite],
+    ctx: &RewriteCtx,
+    limits: SaturationLimits,
+    strategy: MatchStrategy,
+) -> SatStats {
     let mut stats = SatStats { saturated: true, ..Default::default() };
     let rule_tags: Vec<Option<crate::ir::OpTag>> =
         rules.iter().map(|r| root_tag(&r.lhs)).collect();
+    // Reused buffers: one jobs vector, one candidate list, and one
+    // per-(rule, class) match buffer for the whole call, instead of fresh
+    // allocations per iteration (see EXPERIMENTS.md §Perf).
+    let mut jobs: Vec<(usize, Id, Subst)> = Vec::new();
+    let mut candidates: Vec<Id> = Vec::new();
+    let mut matches: Vec<Subst> = Vec::new();
     for iter in 0..limits.max_iters {
         stats.iterations = iter + 1;
-        // Tag index: classes that contain at least one node of each op tag.
-        // Rules whose root matches a specific tag only scan those classes —
-        // the single biggest cost lever on the per-operator hot path (see
-        // EXPERIMENTS.md §Perf).
-        let all_classes = eg.class_ids();
-        let mut by_tag: FxHashMap<crate::ir::OpTag, Vec<Id>> = FxHashMap::default();
-        for &id in &all_classes {
-            let mut seen: FxHashSet<crate::ir::OpTag> = FxHashSet::default();
-            for node in &eg.class(id).nodes {
-                if let super::enode::ELang::Op(op) = &node.lang {
-                    if seen.insert(op.tag()) {
-                        by_tag.entry(op.tag()).or_default().push(id);
+        // Worklist of classes to re-match; `None` = match everything.
+        // Draining even when ignored keeps the touched set bounded.
+        let worklist = {
+            let touched = eg.take_dirty_closure();
+            if iter == 0 || strategy == MatchStrategy::FullRescan {
+                None
+            } else {
+                Some(touched)
+            }
+        };
+        // Phase 1: match against a snapshot of the graph. Rules with a
+        // specific root tag scan the e-graph's persistent tag index — the
+        // single biggest cost lever on the per-operator hot path (see
+        // EXPERIMENTS.md §Perf) — intersected with the worklist when one
+        // is active, iterating whichever side is smaller. Candidate lists
+        // are sorted so job order is canonical (by class id, rule-major):
+        // identical for both strategies and across runs, which is what the
+        // differential tests rely on.
+        let mut all_classes: Vec<Id> = match &worklist {
+            None => eg.class_ids(),
+            Some(w) => w.iter().copied().collect(),
+        };
+        all_classes.sort_unstable();
+        jobs.clear();
+        for (ri, rule) in rules.iter().enumerate() {
+            match rule_tags[ri] {
+                Some(tag) => {
+                    let Some(tagged) = eg.tag_classes(tag) else { continue };
+                    candidates.clear();
+                    match &worklist {
+                        None => candidates.extend(tagged.iter().copied()),
+                        Some(w) if w.len() <= tagged.len() => {
+                            candidates.extend(w.iter().copied().filter(|id| tagged.contains(id)))
+                        }
+                        Some(w) => {
+                            candidates.extend(tagged.iter().copied().filter(|id| w.contains(id)))
+                        }
+                    }
+                    candidates.sort_unstable();
+                    for &root in &candidates {
+                        super::ematch::ematch_into(eg, &rule.lhs, root, &mut matches);
+                        for subst in matches.drain(..) {
+                            jobs.push((ri, root, subst));
+                        }
                     }
                 }
-            }
-        }
-        // Phase 1: match against a snapshot of the graph.
-        static EMPTY: Vec<Id> = Vec::new();
-        let mut jobs: Vec<(usize, Id, Subst)> = Vec::new();
-        for (ri, rule) in rules.iter().enumerate() {
-            let candidates: &Vec<Id> = match rule_tags[ri] {
-                Some(tag) => by_tag.get(&tag).unwrap_or(&EMPTY),
-                None => &all_classes,
-            };
-            for &root in candidates {
-                for subst in super::ematch::ematch(eg, &rule.lhs, root) {
-                    jobs.push((ri, root, subst));
+                None => {
+                    for &root in &all_classes {
+                        super::ematch::ematch_into(eg, &rule.lhs, root, &mut matches);
+                        for subst in matches.drain(..) {
+                            jobs.push((ri, root, subst));
+                        }
+                    }
                 }
             }
         }
         // Phase 2: apply.
         let mut changed = false;
-        for (ri, root, subst) in jobs {
+        for (ri, root, subst) in jobs.drain(..) {
             if eg.n_nodes > limits.max_nodes {
                 stats.saturated = false;
                 return stats;
@@ -157,6 +274,8 @@ pub fn saturate(
             }
         }
         eg.rebuild();
+        // Identical stopping rule in both strategies (no counted unions),
+        // so incremental and full-rescan runs stay comparable job-for-job.
         if !changed {
             return stats;
         }
@@ -182,7 +301,8 @@ mod tests {
             "add_to_sum",
             Pat::exact(Op::Add, vec![Pat::var(0), Pat::var(1)]),
             |eg, s, _| {
-                eg.add_op(Op::SumN, vec![s.var(0), s.var(1)]).into_iter().collect()
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
+                eg.add_op(Op::SumN, vec![x, y]).into_iter().collect()
             },
         )
     }
@@ -192,7 +312,7 @@ mod tests {
         Rewrite::new(
             "neg_involution",
             Pat::exact(Op::Neg, vec![Pat::exact(Op::Neg, vec![Pat::var(0)])]),
-            |_eg, s, _| vec![s.var(0)],
+            |_eg, s, _| s.var(0).into_iter().collect(),
         )
     }
 
@@ -246,6 +366,38 @@ mod tests {
         );
         assert!(!stats.saturated);
         assert_eq!(stats.iterations, 3);
+    }
+
+    #[test]
+    fn incremental_matches_full_rescan_on_toy_graph() {
+        let build = || {
+            let mut eg = EGraph::new();
+            let a = eg.add_leaf(t(0), vec![4]);
+            let b = eg.add_leaf(t(1), vec![4]);
+            let c = eg.add_leaf(t(2), vec![4]);
+            let ab = eg.add_op(Op::Add, vec![a, b]).unwrap();
+            let abc = eg.add_op(Op::Add, vec![ab, c]).unwrap();
+            let n = eg.add_op(Op::Neg, vec![abc]).unwrap();
+            let nn = eg.add_op(Op::Neg, vec![n]).unwrap();
+            (eg, vec![a, b, c, ab, abc, n, nn])
+        };
+        let ctx = RewriteCtx::default();
+        let (mut inc, ids) = build();
+        let (mut full, ids2) = build();
+        assert_eq!(ids, ids2, "deterministic construction");
+        let si = saturate(&mut inc, &[add_to_sum(), neg_involution()], &ctx, Default::default());
+        let sf = saturate_full_rescan(
+            &mut full,
+            &[add_to_sum(), neg_involution()],
+            &ctx,
+            Default::default(),
+        );
+        assert_eq!(si.applied, sf.applied, "per-rule counts agree");
+        for (i, &x) in ids.iter().enumerate() {
+            for &y in &ids[i + 1..] {
+                assert_eq!(inc.same(x, y), full.same(x, y), "partition agrees on ({x},{y})");
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,11 @@ impl UnionFind {
     pub fn len(&self) -> usize {
         self.parent.len()
     }
+
+    /// Forget all sets but keep the allocation (arena reuse).
+    pub fn clear(&mut self) {
+        self.parent.clear();
+    }
     pub fn is_empty(&self) -> bool {
         self.parent.is_empty()
     }

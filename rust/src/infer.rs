@@ -113,12 +113,17 @@ pub fn check_refinement(
     let mut r = ri.clone();
     let mut stats = SatStats { saturated: true, ..Default::default() };
     let mut per_node = Vec::with_capacity(gs.num_nodes());
+    // One e-graph arena reused (via `reset`) across the whole topological
+    // walk: per-operator e-graphs are small but numerous, so keeping the
+    // memo-table / class-map / union-find allocations warm is a measurable
+    // win on many-operator models (see EXPERIMENTS.md §Perf).
+    let mut scratch = EGraph::new();
 
     for nid in gs.topo_order() {
         let t0 = Instant::now();
         let node = gs.node(nid);
         let out =
-            compute_node_out_rel(nid, gs, gd, &r, &rules, &ctx, cfg, &mut stats);
+            compute_node_out_rel(nid, gs, gd, &r, &rules, &ctx, cfg, &mut scratch, &mut stats);
         match out {
             Ok((cands, timing)) => {
                 per_node.push(NodeTiming {
@@ -183,6 +188,7 @@ fn compute_node_out_rel(
     rules: &[crate::egraph::Rewrite],
     ctx: &RewriteCtx,
     cfg: &InferConfig,
+    eg: &mut EGraph,
     stats: &mut SatStats,
 ) -> Result<(Vec<CleanCand>, NodeTiming), RefinementError> {
     let node = gs.node(nid);
@@ -211,8 +217,9 @@ fn compute_node_out_rel(
     // -- Step 1 (Listing 2): seed the e-graph with v(I(v)) and the input
     //    relation. Leaf classes for G_s inputs are unioned with each of
     //    their G_d mapping expressions; the e-graph's congruence does the
-    //    all-combinations substitution of rewrite_t_to_expr for us.
-    let mut eg = EGraph::new();
+    //    all-combinations substitution of rewrite_t_to_expr for us. The
+    //    arena is pooled across operators — reset, not reallocated.
+    eg.reset();
     let gd_leaf_shape = |t: TensorRef| -> Option<Vec<i64>> {
         (t.side == Side::D).then(|| gd.shape(t.id).to_vec())
     };
@@ -240,7 +247,7 @@ fn compute_node_out_rel(
     eg.rebuild();
 
     // -- Step 2: saturate with lemmas.
-    let s = saturate(&mut eg, rules, ctx, cfg.limits);
+    let s = saturate(eg, rules, ctx, cfg.limits);
     stats.merge(&s);
 
     // -- Step 3 (Listing 3): frontier exploration of G_d. Add definitional
@@ -277,12 +284,12 @@ fn compute_node_out_rel(
         }
         if added {
             eg.rebuild();
-            let s = saturate(&mut eg, rules, ctx, cfg.limits);
+            let s = saturate(eg, rules, ctx, cfg.limits);
             stats.merge(&s);
         }
 
         // extract clean candidates for the target class over D-side leaves
-        let cands = extract_clean(&eg, &|t| t.side == Side::D);
+        let cands = extract_clean(eg, &|t| t.side == Side::D);
         let mut grew = false;
         if let Some(target_cands) = cands.get(&eg.find(target)) {
             best = target_cands.clone();
@@ -509,9 +516,11 @@ mod tests {
         let rules = lemmas::standard_rewrites();
         let ctx = RewriteCtx::default();
         let cfg = InferConfig::default();
+        let mut scratch = EGraph::new();
         // node 0 in gs is the matmul
         let (cands, timing) =
-            compute_node_out_rel(0, &gs, &gd, &ri, &rules, &ctx, &cfg, &mut stats).unwrap();
+            compute_node_out_rel(0, &gs, &gd, &ri, &rules, &ctx, &cfg, &mut scratch, &mut stats)
+                .unwrap();
         assert!(!cands.is_empty());
         // explored G_d nodes: C_1, C_2, D_1, D_2 — but not F_1/F_2 (need E)
         assert!(

@@ -19,10 +19,11 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind_variadic(OpTag::AllGather, 0, 0),
             |eg, s, _| {
                 let dim = match s.op(0) {
-                    Op::AllGather { dim, .. } => *dim,
+                    Some(Op::AllGather { dim, .. }) => *dim,
                     _ => return vec![],
                 };
-                try_add(eg, Op::Concat { dim }, s.list(0).to_vec())
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                try_add(eg, Op::Concat { dim }, parts)
             },
         ),
         "c",
@@ -35,7 +36,10 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "allreduce_is_sum",
             Pat::bind_variadic(OpTag::AllReduce, 0, 0),
-            |eg, s, _| try_add(eg, Op::SumN, s.list(0).to_vec()),
+            |eg, s, _| {
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                try_add(eg, Op::SumN, parts)
+            },
         ),
         "c",
         2,
@@ -49,10 +53,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind_variadic(OpTag::ReduceScatter, 0, 0),
             |eg, s, _| {
                 let (dim, ranks, index) = match s.op(0) {
-                    Op::ReduceScatter { dim, ranks, index } => (*dim, *ranks, *index),
+                    Some(Op::ReduceScatter { dim, ranks, index }) => (*dim, *ranks, *index),
                     _ => return vec![],
                 };
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let Some(shape) = eg.shape(parts[0]).map(|v| v.to_vec()) else { return vec![] };
                 if shape[dim] % ranks as i64 != 0 {
                     return vec![];

@@ -26,7 +26,8 @@ pub fn lemmas() -> Vec<Lemma> {
             "pallas_rmsnorm_semantics",
             Pat::exact(custom("pallas_rms_norm"), vec![Pat::var(0), Pat::var(1)]),
             |eg, s, _| {
-                try_add(eg, Op::RmsNorm { eps: FBits::new(1e-6) }, vec![s.var(0), s.var(1)])
+                let (Some(x), Some(w)) = (s.var(0), s.var(1)) else { return vec![] };
+                try_add(eg, Op::RmsNorm { eps: FBits::new(1e-6) }, vec![x, w])
             },
         ),
         "pallas",
@@ -39,9 +40,9 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "rmsnorm_to_pallas",
             Pat::bind(OpTag::RmsNorm, 0, vec![Pat::var(0), Pat::var(1)]),
-            |eg, s, _| match s.op(0) {
-                Op::RmsNorm { eps } if eps.get() == 1e-6 => {
-                    try_add(eg, custom("pallas_rms_norm"), vec![s.var(0), s.var(1)])
+            |eg, s, _| match (s.op(0), s.var(0), s.var(1)) {
+                (Some(Op::RmsNorm { eps }), Some(x), Some(w)) if eps.get() == 1e-6 => {
+                    try_add(eg, custom("pallas_rms_norm"), vec![x, w])
                 }
                 _ => vec![],
             },
@@ -60,7 +61,9 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::var(0), Pat::var(1), Pat::var(2)],
             ),
             |eg, s, _| {
-                let (q, k, vv) = (s.var(0), s.var(1), s.var(2));
+                let (Some(q), Some(k), Some(vv)) = (s.var(0), s.var(1), s.var(2)) else {
+                    return vec![];
+                };
                 let Some(shape) = eg.shape(q).map(|v| v.to_vec()) else { return vec![] };
                 let rank = shape.len();
                 let d = shape[rank - 1] as f64;
@@ -94,8 +97,9 @@ pub fn lemmas() -> Vec<Lemma> {
             "fused_silu_mul_semantics",
             Pat::exact(custom("fused_silu_mul"), vec![Pat::var(0), Pat::var(1)]),
             |eg, s, _| {
-                let Ok(si) = eg.add_op(Op::Silu, vec![s.var(0)]) else { return vec![] };
-                try_add(eg, Op::Mul, vec![si, s.var(1)])
+                let (Some(a), Some(b)) = (s.var(0), s.var(1)) else { return vec![] };
+                let Ok(si) = eg.add_op(Op::Silu, vec![a]) else { return vec![] };
+                try_add(eg, Op::Mul, vec![si, b])
             },
         ),
         "v",
@@ -110,7 +114,10 @@ pub fn lemmas() -> Vec<Lemma> {
                 Op::Mul,
                 vec![Pat::exact(Op::Silu, vec![Pat::var(0)]), Pat::var(1)],
             ),
-            |eg, s, _| try_add(eg, custom("fused_silu_mul"), vec![s.var(0), s.var(1)]),
+            |eg, s, _| {
+                let (Some(a), Some(b)) = (s.var(0), s.var(1)) else { return vec![] };
+                try_add(eg, custom("fused_silu_mul"), vec![a, b])
+            },
         ),
         "v",
         3,
@@ -131,16 +138,17 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (d1, d2) = match (s.op(0), s.op(1)) {
-                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    (Some(Op::Concat { dim: a }), Some(Op::Concat { dim: b })) => (*a, *b),
                     _ => return vec![],
                 };
-                if d1 != d2 || s.list(0).len() != s.list(1).len() {
+                let (Some(xs), Some(ys)) = (s.list(0), s.list(1)) else { return vec![] };
+                if d1 != d2 || xs.len() != ys.len() {
                     return vec![];
                 }
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let (xs, ys) = (xs.to_vec(), ys.to_vec());
+                let parts: Option<Vec<Id>> = xs
                     .iter()
-                    .zip(s.list(1))
+                    .zip(&ys)
                     .map(|(&a, &b)| {
                         if eg.shape(a) != eg.shape(b) {
                             return None;
@@ -165,7 +173,10 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "hlo_dot_is_matmul",
             Pat::exact(custom("hlo_dot"), vec![Pat::var(0), Pat::var(1)]),
-            |eg, s, _| try_add(eg, Op::MatMul, vec![s.var(0), s.var(1)]),
+            |eg, s, _| {
+                let (Some(a), Some(b)) = (s.var(0), s.var(1)) else { return vec![] };
+                try_add(eg, Op::MatMul, vec![a, b])
+            },
         ),
         "h",
         2,

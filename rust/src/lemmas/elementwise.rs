@@ -36,11 +36,11 @@ pub fn lemmas() -> Vec<Lemma> {
                 Pat::node(POp::Exact(op.clone()), vec![Pat::bind_variadic(OpTag::Concat, 1, 0)]),
                 move |eg, s, _| {
                     let dim = match s.op(1) {
-                        Op::Concat { dim } => *dim,
+                        Some(Op::Concat { dim }) => *dim,
                         _ => return vec![],
                     };
-                    let parts: Option<Vec<Id>> = s
-                        .list(0)
+                    let Some(list0) = s.list(0) else { return vec![] };
+                    let parts: Option<Vec<Id>> = list0
                         .iter()
                         .map(|&p| eg.add_op(f.clone(), vec![p]).ok())
                         .collect();
@@ -62,8 +62,8 @@ pub fn lemmas() -> Vec<Lemma> {
                     vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
                 ),
                 move |eg, s, _| {
-                    let sl = s.op(1).clone();
-                    let Ok(fx) = eg.add_op(f.clone(), vec![s.var(0)]) else { return vec![] };
+                    let (Some(sl), Some(x)) = (s.op(1).cloned(), s.var(0)) else { return vec![] };
+                    let Ok(fx) = eg.add_op(f.clone(), vec![x]) else { return vec![] };
                     try_add(eg, sl, vec![fx])
                 },
             ),
@@ -81,8 +81,8 @@ pub fn lemmas() -> Vec<Lemma> {
                     vec![Pat::bind(OpTag::Transpose, 1, vec![Pat::var(0)])],
                 ),
                 move |eg, s, _| {
-                    let tp = s.op(1).clone();
-                    let Ok(fx) = eg.add_op(f.clone(), vec![s.var(0)]) else { return vec![] };
+                    let (Some(tp), Some(x)) = (s.op(1).cloned(), s.var(0)) else { return vec![] };
+                    let Ok(fx) = eg.add_op(f.clone(), vec![x]) else { return vec![] };
                     try_add(eg, tp, vec![fx])
                 },
             ),
@@ -101,13 +101,13 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
             ),
             |eg, s, _| {
-                let f = s.op(0).clone();
+                let Some(f) = s.op(0).cloned() else { return vec![] };
                 let dim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(f.clone(), vec![p]).ok())
                     .collect();
@@ -127,9 +127,11 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
             ),
             |eg, s, _| {
-                let f = s.op(0).clone();
-                let sl = s.op(1).clone();
-                let Ok(fx) = eg.add_op(f, vec![s.var(0)]) else { return vec![] };
+                let (Some(f), Some(sl), Some(x)) = (s.op(0).cloned(), s.op(1).cloned(), s.var(0))
+                else {
+                    return vec![];
+                };
+                let Ok(fx) = eg.add_op(f, vec![x]) else { return vec![] };
                 try_add(eg, sl, vec![fx])
             },
         ),
@@ -145,13 +147,13 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
             ),
             |eg, s, _| {
-                let f = s.op(0).clone();
+                let Some(f) = s.op(0).cloned() else { return vec![] };
                 let dim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(f.clone(), vec![p]).ok())
                     .collect();
@@ -172,10 +174,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind_variadic(OpTag::Concat, 0, 0),
             |eg, s, _| {
                 let dim = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 if parts.len() < 2 {
                     return vec![];
                 }
@@ -224,9 +226,10 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])],
             ),
             |eg, s, _| {
-                let f = s.op(0).clone();
-                let sl = s.op(1).clone();
-                let x = s.var(0);
+                let (Some(f), Some(sl), Some(x)) = (s.op(0).cloned(), s.op(1).cloned(), s.var(0))
+                else {
+                    return vec![];
+                };
                 let Ok(fx) = eg.add_op(f, vec![x]) else { return vec![] };
                 try_add(eg, sl, vec![fx])
             },
@@ -245,9 +248,10 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::node(POp::AnyUnaryEltwise { slot: 1 }, vec![Pat::var(0)])],
             ),
             |eg, s, _| {
-                let sl = s.op(0).clone();
-                let f = s.op(1).clone();
-                let x = s.var(0);
+                let (Some(sl), Some(f), Some(x)) = (s.op(0).cloned(), s.op(1).cloned(), s.var(0))
+                else {
+                    return vec![];
+                };
                 let Ok(sx) = eg.add_op(sl, vec![x]) else { return vec![] };
                 try_add(eg, f, vec![sx])
             },
@@ -266,9 +270,10 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind(OpTag::Transpose, 1, vec![Pat::var(0)])],
             ),
             |eg, s, _| {
-                let f = s.op(0).clone();
-                let tp = s.op(1).clone();
-                let x = s.var(0);
+                let (Some(f), Some(tp), Some(x)) = (s.op(0).cloned(), s.op(1).cloned(), s.var(0))
+                else {
+                    return vec![];
+                };
                 let Ok(fx) = eg.add_op(f, vec![x]) else { return vec![] };
                 try_add(eg, tp, vec![fx])
             },
@@ -291,18 +296,19 @@ pub fn lemmas() -> Vec<Lemma> {
                 ],
             ),
             |eg, s, _| {
-                let g = s.op(0).clone();
+                let Some(g) = s.op(0).cloned() else { return vec![] };
                 let (d1, d2) = match (s.op(1), s.op(2)) {
-                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    (Some(Op::Concat { dim: a }), Some(Op::Concat { dim: b })) => (*a, *b),
                     _ => return vec![],
                 };
-                if d1 != d2 || s.list(0).len() != s.list(1).len() {
+                let (Some(xs), Some(ys)) = (s.list(0), s.list(1)) else { return vec![] };
+                if d1 != d2 || xs.len() != ys.len() {
                     return vec![];
                 }
-                let pieces: Option<Vec<Id>> = s
-                    .list(0)
+                let (xs, ys) = (xs.to_vec(), ys.to_vec());
+                let pieces: Option<Vec<Id>> = xs
                     .iter()
-                    .zip(s.list(1))
+                    .zip(&ys)
                     .map(|(&a, &b)| {
                         // pieces may broadcast against each other (e.g.
                         // [s,h] ⊙ [s,1] rms scaling), but must align on the
@@ -334,13 +340,14 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::Concat, 1, 0), Pat::var(0)],
             ),
             |eg, s, _| {
-                let g = s.op(0).clone();
+                let Some(g) = s.op(0).cloned() else { return vec![] };
                 let dim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let w = s.var(0);
-                let parts = s.list(0).to_vec();
+                let (Some(w), Some(parts)) = (s.var(0), s.list(0).map(|l| l.to_vec())) else {
+                    return vec![];
+                };
                 let (Some(wshape), Some(xshape)) =
                     (eg.shape(w).map(|v| v.to_vec()), eg.shape(parts[0]).map(|v| v.to_vec()))
                 else {
@@ -375,13 +382,14 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::var(0), Pat::bind_variadic(OpTag::Concat, 1, 0)],
             ),
             |eg, s, _| {
-                let g = s.op(0).clone();
+                let Some(g) = s.op(0).cloned() else { return vec![] };
                 let dim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let w = s.var(0);
-                let parts = s.list(0).to_vec();
+                let (Some(w), Some(parts)) = (s.var(0), s.list(0).map(|l| l.to_vec())) else {
+                    return vec![];
+                };
                 let (Some(wshape), Some(xshape)) =
                     (eg.shape(w).map(|v| v.to_vec()), eg.shape(parts[0]).map(|v| v.to_vec()))
                 else {
@@ -417,12 +425,12 @@ pub fn lemmas() -> Vec<Lemma> {
                 ],
             ),
             |eg, s, _| {
-                let g = s.op(0).clone();
-                if s.op(1) != s.op(2) {
+                let Some(g) = s.op(0).cloned() else { return vec![] };
+                if s.op(1).is_none() || s.op(1) != s.op(2) {
                     return vec![];
                 }
-                let sl = s.op(1).clone();
-                let (x, y) = (s.var(0), s.var(1));
+                let Some(sl) = s.op(1).cloned() else { return vec![] };
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
                 if eg.shape(x) != eg.shape(y) {
                     return vec![];
                 }
@@ -440,7 +448,10 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "mul_commut",
             Pat::exact(Op::Mul, vec![Pat::var(0), Pat::var(1)]),
-            |eg, s, _| try_add(eg, Op::Mul, vec![s.var(1), s.var(0)]),
+            |eg, s, _| {
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
+                try_add(eg, Op::Mul, vec![y, x])
+            },
         ),
         "core",
         2,
@@ -450,7 +461,10 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "maximum_commut",
             Pat::exact(Op::Maximum, vec![Pat::var(0), Pat::var(1)]),
-            |eg, s, _| try_add(eg, Op::Maximum, vec![s.var(1), s.var(0)]),
+            |eg, s, _| {
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
+                try_add(eg, Op::Maximum, vec![y, x])
+            },
         ),
         "core",
         2,
@@ -467,10 +481,11 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (a, b) = match (s.op(0), s.op(1)) {
-                    (Op::Scale { c: a }, Op::Scale { c: b }) => (a.get(), b.get()),
+                    (Some(Op::Scale { c: a }), Some(Op::Scale { c: b })) => (a.get(), b.get()),
                     _ => return vec![],
                 };
-                try_add(eg, Op::Scale { c: crate::ir::FBits::new(a * b) }, vec![s.var(0)])
+                let Some(x) = s.var(0) else { return vec![] };
+                try_add(eg, Op::Scale { c: crate::ir::FBits::new(a * b) }, vec![x])
             },
         ),
         "core",
@@ -484,7 +499,7 @@ pub fn lemmas() -> Vec<Lemma> {
             "scale_one_identity",
             Pat::bind(OpTag::Scale, 0, vec![Pat::var(0)]),
             |_eg, s, _| match s.op(0) {
-                Op::Scale { c } if c.get() == 1.0 => vec![s.var(0)],
+                Some(Op::Scale { c }) if c.get() == 1.0 => s.var(0).into_iter().collect(),
                 _ => vec![],
             },
         ),
@@ -498,7 +513,7 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "neg_involution",
             Pat::exact(Op::Neg, vec![Pat::exact(Op::Neg, vec![Pat::var(0)])]),
-            |_eg, s, _| vec![s.var(0)],
+            |_eg, s, _| s.var(0).into_iter().collect(),
         ),
         "core",
         2,
@@ -512,8 +527,9 @@ pub fn lemmas() -> Vec<Lemma> {
             "sub_to_sum_neg",
             Pat::exact(Op::Sub, vec![Pat::var(0), Pat::var(1)]),
             |eg, s, _| {
-                let Ok(ny) = eg.add_op(Op::Neg, vec![s.var(1)]) else { return vec![] };
-                try_add(eg, Op::SumN, vec![s.var(0), ny])
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
+                let Ok(ny) = eg.add_op(Op::Neg, vec![y]) else { return vec![] };
+                try_add(eg, Op::SumN, vec![x, ny])
             },
         ),
         "core",
@@ -530,9 +546,10 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::SumN, 1, 0)],
             ),
             |eg, s, _| {
-                let sc = s.op(0).clone();
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let (Some(sc), Some(list0)) = (s.op(0).cloned(), s.list(0)) else {
+                    return vec![];
+                };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(sc.clone(), vec![p]).ok())
                     .collect();
@@ -554,10 +571,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind(OpTag::Scale, 0, vec![Pat::var(0)]),
             |eg, s, _| {
                 match s.op(0) {
-                    Op::Scale { c } if c.get() == 0.0 => {}
+                    Some(Op::Scale { c }) if c.get() == 0.0 => {}
                     _ => return vec![],
                 }
-                let x = s.var(0);
+                let Some(x) = s.var(0) else { return vec![] };
                 let shape = eg.shape(x).map(|v| v.to_vec());
                 // union with every other scale-zero node of the same shape
                 let mut out = Vec::new();
@@ -609,7 +626,7 @@ pub fn lemmas() -> Vec<Lemma> {
                 "mul_by_seed_one",
                 Pat::exact(Op::Mul, vec![Pat::var(0), Pat::var(1)]),
                 |eg, s, _| {
-                    let (x, y) = (s.var(0), s.var(1));
+                    let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
                     // seed is scalar-shaped; broadcast multiply by ONE = x
                     if is_seed_one(eg, y) && eg.shape(y).is_some_and(|sh| sh.is_empty()) {
                         vec![x]
@@ -635,10 +652,13 @@ pub fn lemmas() -> Vec<Lemma> {
                     ],
                 ),
                 |eg, s, _| {
-                    let sc = s.op(0).clone();
-                    let inner = s.var(1);
+                    let (Some(sc), Some(x), Some(inner)) =
+                        (s.op(0).cloned(), s.var(0), s.var(1))
+                    else {
+                        return vec![];
+                    };
                     if is_seed_one(eg, inner) && eg.shape(inner).is_some_and(|sh| sh.is_empty()) {
-                        try_add(eg, sc, vec![s.var(0)])
+                        try_add(eg, sc, vec![x])
                     } else {
                         vec![]
                     }
@@ -659,9 +679,8 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::SumN, 0, 0), Pat::var(0)],
             ),
             |eg, s, _| {
-                let y = s.var(0);
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let (Some(y), Some(list0)) = (s.var(0), s.list(0)) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(Op::Mul, vec![p, y]).ok())
                     .collect();

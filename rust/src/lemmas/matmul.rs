@@ -33,10 +33,15 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (da, db) = match (s.op(0), s.op(1)) {
-                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    (Some(Op::Concat { dim: a }), Some(Op::Concat { dim: b })) => (*a, *b),
                     _ => return vec![],
                 };
-                let (a_parts, b_parts) = (s.list(0).to_vec(), s.list(1).to_vec());
+                let (Some(a_parts), Some(b_parts)) = (
+                    s.list(0).map(|l| l.to_vec()),
+                    s.list(1).map(|l| l.to_vec()),
+                ) else {
+                    return vec![];
+                };
                 if a_parts.len() != b_parts.len() {
                     return vec![];
                 }
@@ -78,11 +83,12 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let da = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let a_parts = s.list(0).to_vec();
-                let b = s.var(0);
+                let (Some(a_parts), Some(b)) = (s.list(0).map(|l| l.to_vec()), s.var(0)) else {
+                    return vec![];
+                };
                 let Some(ra) = rank(eg, a_parts[0]) else { return vec![] };
                 if da != ra - 2 {
                     return vec![];
@@ -112,11 +118,12 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let db = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let b_parts = s.list(0).to_vec();
-                let a = s.var(0);
+                let (Some(b_parts), Some(a)) = (s.list(0).map(|l| l.to_vec()), s.var(0)) else {
+                    return vec![];
+                };
                 let Some(rb) = rank(eg, b_parts[0]) else { return vec![] };
                 if db != rb - 1 {
                     return vec![];
@@ -144,10 +151,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind_variadic(OpTag::Concat, 0, 0),
             |eg, s, _| {
                 let dim = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 if parts.len() < 2 {
                     return vec![];
                 }
@@ -204,9 +211,8 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::SumN, 0, 0), Pat::var(0)],
             ),
             |eg, s, _| {
-                let b = s.var(0);
-                let prods: Option<Vec<Id>> = s
-                    .list(0)
+                let (Some(b), Some(list0)) = (s.var(0), s.list(0)) else { return vec![] };
+                let prods: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&a| eg.add_op(Op::MatMul, vec![a, b]).ok())
                     .collect();
@@ -228,9 +234,8 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::var(0), Pat::bind_variadic(OpTag::SumN, 0, 0)],
             ),
             |eg, s, _| {
-                let a = s.var(0);
-                let prods: Option<Vec<Id>> = s
-                    .list(0)
+                let (Some(a), Some(list0)) = (s.var(0), s.list(0)) else { return vec![] };
+                let prods: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&b| eg.add_op(Op::MatMul, vec![a, b]).ok())
                     .collect();
@@ -250,7 +255,7 @@ pub fn lemmas() -> Vec<Lemma> {
             "sum_of_matmuls_inner",
             Pat::bind_variadic(OpTag::SumN, 0, 0),
             |eg, s, _| {
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 if parts.len() < 2 {
                     return vec![];
                 }
@@ -295,10 +300,10 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (dim, a, b) = match s.op(0) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
-                let (x, y) = (s.var(0), s.var(1));
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
                 let Some(rx) = rank(eg, x) else { return vec![] };
                 let Some(ro) = rank(eg, y).map(|ry| rx.max(ry)) else { return vec![] };
                 if dim != ro - 2 {
@@ -325,10 +330,10 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (dim, a, b) = match s.op(0) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
-                let (x, y) = (s.var(0), s.var(1));
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
                 let Some(ry) = rank(eg, y) else { return vec![] };
                 let Some(ro) = rank(eg, x).map(|rx| rx.max(ry)) else { return vec![] };
                 if dim != ro - 1 {
@@ -357,8 +362,11 @@ pub fn lemmas() -> Vec<Lemma> {
                 ],
             ),
             |eg, s, _| {
-                let sc = s.op(0).clone();
-                let Ok(mm) = eg.add_op(Op::MatMul, vec![s.var(0), s.var(1)]) else {
+                let (Some(sc), Some(x), Some(y)) = (s.op(0).cloned(), s.var(0), s.var(1))
+                else {
+                    return vec![];
+                };
+                let Ok(mm) = eg.add_op(Op::MatMul, vec![x, y]) else {
                     return vec![];
                 };
                 try_add(eg, sc, vec![mm])
@@ -379,8 +387,11 @@ pub fn lemmas() -> Vec<Lemma> {
                 ],
             ),
             |eg, s, _| {
-                let sc = s.op(0).clone();
-                let Ok(mm) = eg.add_op(Op::MatMul, vec![s.var(0), s.var(1)]) else {
+                let (Some(sc), Some(x), Some(y)) = (s.op(0).cloned(), s.var(0), s.var(1))
+                else {
+                    return vec![];
+                };
+                let Ok(mm) = eg.add_op(Op::MatMul, vec![x, y]) else {
                     return vec![];
                 };
                 try_add(eg, sc, vec![mm])
@@ -399,9 +410,12 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::exact(Op::MatMul, vec![Pat::var(0), Pat::var(1)])],
             ),
             |eg, s, _| {
-                let sc = s.op(0).clone();
-                let Ok(sa) = eg.add_op(sc, vec![s.var(0)]) else { return vec![] };
-                try_add(eg, Op::MatMul, vec![sa, s.var(1)])
+                let (Some(sc), Some(x), Some(y)) = (s.op(0).cloned(), s.var(0), s.var(1))
+                else {
+                    return vec![];
+                };
+                let Ok(sa) = eg.add_op(sc, vec![x]) else { return vec![] };
+                try_add(eg, Op::MatMul, vec![sa, y])
             },
         ),
         "core",
@@ -419,7 +433,7 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let perm = match s.op(0) {
-                    Op::Transpose { perm } => perm.clone(),
+                    Some(Op::Transpose { perm }) => perm.clone(),
                     _ => return vec![],
                 };
                 // only the swap-last-two permutation
@@ -432,7 +446,7 @@ pub fn lemmas() -> Vec<Lemma> {
                 if perm != want {
                     return vec![];
                 }
-                let (a, b) = (s.var(0), s.var(1));
+                let (Some(a), Some(b)) = (s.var(0), s.var(1)) else { return vec![] };
                 let (Some(ra), Some(rb)) = (rank(eg, a), rank(eg, b)) else { return vec![] };
                 let mut pa: Vec<usize> = (0..ra).collect();
                 pa.swap(ra - 1, ra - 2);

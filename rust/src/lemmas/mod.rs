@@ -26,6 +26,8 @@ pub mod structural;
 pub mod validate;
 
 use crate::egraph::Rewrite;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 /// Metadata per lemma for the effort/usage analyses (Fig 6, Fig 7).
 #[derive(Debug, Clone)]
@@ -66,9 +68,24 @@ pub fn standard_library() -> Vec<Lemma> {
     all
 }
 
-/// Engine-facing view: just the rewrites.
-pub fn standard_rewrites() -> Vec<Rewrite> {
-    standard_library().into_iter().map(|l| l.rewrite).collect()
+static REWRITES: OnceLock<Arc<[Rewrite]>> = OnceLock::new();
+static REWRITE_BUILDS: AtomicUsize = AtomicUsize::new(0);
+
+/// Engine-facing view: the shared, built-once rewrite library. Every
+/// operator, workload, and coordinator worker thread clones the same `Arc`,
+/// so the ~100 boxed applier closures are constructed once per process
+/// instead of once per `check_refinement` call.
+pub fn standard_rewrites() -> Arc<[Rewrite]> {
+    Arc::clone(REWRITES.get_or_init(|| {
+        REWRITE_BUILDS.fetch_add(1, Ordering::Relaxed);
+        standard_library().into_iter().map(|l| l.rewrite).collect()
+    }))
+}
+
+/// How many times the shared rewrite library has been constructed in this
+/// process — must never exceed 1 (asserted by tests).
+pub fn rewrite_library_builds() -> usize {
+    REWRITE_BUILDS.load(Ordering::Relaxed)
 }
 
 /// Metadata-facing view (benches, reports).
@@ -105,6 +122,15 @@ mod tests {
                 l.meta.name
             );
         }
+    }
+
+    #[test]
+    fn rewrite_library_is_built_at_most_once() {
+        let a = standard_rewrites();
+        let b = standard_rewrites();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same shared allocation");
+        assert_eq!(a.len(), standard_library().len());
+        assert_eq!(rewrite_library_builds(), 1, "constructed exactly once");
     }
 
     #[test]

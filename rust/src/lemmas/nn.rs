@@ -20,13 +20,14 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::Concat, 1, 0), Pat::var(0)],
             ),
             |eg, s, _| {
-                let norm = s.op(0).clone();
+                let Some(norm) = s.op(0).cloned() else { return vec![] };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let w = s.var(0);
-                let parts = s.list(0).to_vec();
+                let (Some(w), Some(parts)) = (s.var(0), s.list(0).map(|l| l.to_vec())) else {
+                    return vec![];
+                };
                 let Some(rank) = eg.shape(parts[0]).map(|s| s.len()) else { return vec![] };
                 if cdim == rank - 1 {
                     return vec![]; // splitting the normalized dim is NOT valid
@@ -53,13 +54,13 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::Concat, 1, 0), Pat::var(0), Pat::var(1)],
             ),
             |eg, s, _| {
-                let norm = s.op(0).clone();
+                let Some(norm) = s.op(0).cloned() else { return vec![] };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let (w, b) = (s.var(0), s.var(1));
-                let parts = s.list(0).to_vec();
+                let (Some(w), Some(b)) = (s.var(0), s.var(1)) else { return vec![] };
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let Some(rank) = eg.shape(parts[0]).map(|s| s.len()) else { return vec![] };
                 if cdim == rank - 1 {
                     return vec![];
@@ -94,11 +95,11 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, ctx| {
                 let cdim = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts = s.list(0).to_vec();
-                let (cos, sin) = (s.var(0), s.var(1));
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                let (Some(cos), Some(sin)) = (s.var(0), s.var(1)) else { return vec![] };
                 let Some(rank) = eg.shape(parts[0]).map(|v| v.len()) else { return vec![] };
                 // rope rotates over (seq, head) = last two dims; the split
                 // must be along seq = rank-2
@@ -156,15 +157,14 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let cdim = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 if cdim != 0 {
                     return vec![];
                 }
-                let table = s.var(0);
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let (Some(table), Some(list0)) = (s.var(0), s.list(0)) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&ids| eg.add_op(Op::Embedding, vec![table, ids]).ok())
                     .collect();
@@ -192,18 +192,20 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, ctx| {
                 let (xd, xa, xb) = match s.op(0) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
                 let (cd, ca, cb) = match s.op(1) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
                 let (sd, sa, sb) = match s.op(2) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
-                let (x, cos, sin) = (s.var(0), s.var(1), s.var(2));
+                let (Some(x), Some(cos), Some(sin)) = (s.var(0), s.var(1), s.var(2)) else {
+                    return vec![];
+                };
                 let Some(rank) = eg.shape(x).map(|v| v.len()) else { return vec![] };
                 // x sliced along seq (rank-2); cos/sin along their dim 0
                 if xd != rank - 2 || cd != 0 || sd != 0 {
@@ -239,18 +241,18 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, ctx| {
                 let (sdim, a, b) = match s.op(0) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
                 let smdim = match s.op(1) {
-                    Op::Softmax { dim } => *dim,
+                    Some(Op::Softmax { dim }) => *dim,
                     _ => return vec![],
                 };
                 let (pdim, before, value) = match s.op(2) {
-                    Op::Pad { dim, before, value, .. } => (*dim, before.clone(), *value),
+                    Some(Op::Pad { dim, before, value, .. }) => (*dim, before.clone(), *value),
                     _ => return vec![],
                 };
-                let x = s.var(0);
+                let Some(x) = s.var(0) else { return vec![] };
                 let Some(shape) = eg.shape(x).map(|v| v.to_vec()) else { return vec![] };
                 if sdim != smdim || pdim != smdim || value.get() != f64::NEG_INFINITY {
                     return vec![];

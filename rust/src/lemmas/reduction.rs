@@ -20,18 +20,18 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (rdim, keepdim) = match s.op(0) {
-                    Op::ReduceSum { dim, keepdim } => (*dim, *keepdim),
+                    Some(Op::ReduceSum { dim, keepdim }) => (*dim, *keepdim),
                     _ => return vec![],
                 };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 if rdim != cdim {
                     return vec![];
                 }
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(Op::ReduceSum { dim: rdim, keepdim }, vec![p]).ok())
                     .collect();
@@ -59,7 +59,7 @@ pub fn lemmas() -> Vec<Lemma> {
                     vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
                 ),
                 |eg, s, _| {
-                    let red = s.op(0).clone();
+                    let Some(red) = s.op(0).cloned() else { return vec![] };
                     let (rdim, keepdim) = match &red {
                         Op::ReduceSum { dim, keepdim }
                         | Op::ReduceMean { dim, keepdim }
@@ -67,14 +67,14 @@ pub fn lemmas() -> Vec<Lemma> {
                         _ => return vec![],
                     };
                     let cdim = match s.op(1) {
-                        Op::Concat { dim } => *dim,
+                        Some(Op::Concat { dim }) => *dim,
                         _ => return vec![],
                     };
                     if rdim == cdim {
                         return vec![];
                     }
-                    let parts: Option<Vec<Id>> = s
-                        .list(0)
+                    let Some(list0) = s.list(0) else { return vec![] };
+                    let parts: Option<Vec<Id>> = list0
                         .iter()
                         .map(|&p| eg.add_op(red.clone(), vec![p]).ok())
                         .collect();
@@ -100,18 +100,18 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (rdim, keepdim) = match s.op(0) {
-                    Op::ReduceMax { dim, keepdim } => (*dim, *keepdim),
+                    Some(Op::ReduceMax { dim, keepdim }) => (*dim, *keepdim),
                     _ => return vec![],
                 };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 if rdim != cdim {
                     return vec![];
                 }
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(Op::ReduceMax { dim: rdim, keepdim }, vec![p]).ok())
                     .collect();
@@ -144,17 +144,17 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (rdim, keepdim) = match s.op(0) {
-                    Op::ReduceMean { dim, keepdim } => (*dim, *keepdim),
+                    Some(Op::ReduceMean { dim, keepdim }) => (*dim, *keepdim),
                     _ => return vec![],
                 };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 if rdim != cdim {
                     return vec![];
                 }
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let k = parts.len();
                 let first = eg.shape(parts[0]).map(|v| v.to_vec());
                 if parts.iter().any(|&p| eg.shape(p).map(|v| v.to_vec()) != first) {
@@ -188,23 +188,24 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (d1, d2) = match (s.op(0), s.op(1)) {
-                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    (Some(Op::Concat { dim: a }), Some(Op::Concat { dim: b })) => (*a, *b),
                     _ => return vec![],
                 };
-                if d1 != 0 || d2 != 0 || s.list(0).len() != s.list(1).len() {
+                let (Some(preds), Some(tgts)) = (s.list(0), s.list(1)) else { return vec![] };
+                if d1 != 0 || d2 != 0 || preds.len() != tgts.len() {
                     return vec![];
                 }
-                let k = s.list(0).len();
-                let first = eg.shape(s.list(0)[0]).map(|v| v.to_vec());
-                for &p in s.list(0).iter().chain(s.list(1)) {
+                let (preds, tgts) = (preds.to_vec(), tgts.to_vec());
+                let k = preds.len();
+                let first = eg.shape(preds[0]).map(|v| v.to_vec());
+                for &p in preds.iter().chain(&tgts) {
                     if eg.shape(p).map(|v| v.to_vec()) != first {
                         return vec![];
                     }
                 }
-                let losses: Option<Vec<Id>> = s
-                    .list(0)
+                let losses: Option<Vec<Id>> = preds
                     .iter()
-                    .zip(s.list(1))
+                    .zip(&tgts)
                     .map(|(&p, &t)| eg.add_op(Op::MseLoss, vec![p, t]).ok())
                     .collect();
                 let Some(losses) = losses else { return vec![] };
@@ -228,18 +229,18 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let sdim = match s.op(0) {
-                    Op::Softmax { dim } => *dim,
+                    Some(Op::Softmax { dim }) => *dim,
                     _ => return vec![],
                 };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 if sdim == cdim {
                     return vec![];
                 }
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| eg.add_op(Op::Softmax { dim: sdim }, vec![p]).ok())
                     .collect();
@@ -265,9 +266,10 @@ pub fn lemmas() -> Vec<Lemma> {
                     vec![Pat::bind_variadic(OpTag::SumN, 1, 0)],
                 ),
                 |eg, s, _| {
-                    let red = s.op(0).clone();
-                    let parts: Option<Vec<Id>> = s
-                        .list(0)
+                    let (Some(red), Some(list0)) = (s.op(0).cloned(), s.list(0)) else {
+                        return vec![];
+                    };
+                    let parts: Option<Vec<Id>> = list0
                         .iter()
                         .map(|&p| eg.add_op(red.clone(), vec![p]).ok())
                         .collect();
@@ -292,17 +294,17 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (rdim, keepdim) = match s.op(0) {
-                    Op::ReduceSum { dim, keepdim } => (*dim, *keepdim),
+                    Some(Op::ReduceSum { dim, keepdim }) => (*dim, *keepdim),
                     _ => return vec![],
                 };
                 let (sdim, a, b) = match s.op(1) {
-                    Op::Slice { dim, start, end } => (*dim, start.clone(), end.clone()),
+                    Some(Op::Slice { dim, start, end }) => (*dim, start.clone(), end.clone()),
                     _ => return vec![],
                 };
                 if rdim == sdim {
                     return vec![];
                 }
-                let x = s.var(0);
+                let Some(x) = s.var(0) else { return vec![] };
                 let Ok(red) = eg.add_op(Op::ReduceSum { dim: rdim, keepdim }, vec![x]) else {
                     return vec![];
                 };

@@ -13,12 +13,13 @@ pub(crate) fn try_add(eg: &mut EGraph, op: Op, children: Vec<Id>) -> Vec<Id> {
     eg.add_op(op, children).into_iter().collect()
 }
 
-/// Solver-aware scalar equality (concrete fast path).
+/// Solver-aware scalar equality (concrete fast path; symbolic queries go
+/// through the context's memoizing condition cache).
 pub(crate) fn s_eq(ctx: &RewriteCtx, a: &Scalar, b: &Scalar) -> bool {
     if let (Some(x), Some(y)) = (a.as_const(), b.as_const()) {
         return x == y;
     }
-    ctx.solver.check_eq(&a.0, &b.0) == Truth::True
+    ctx.check_eq(&a.0, &b.0) == Truth::True
 }
 
 fn slice_attrs(op: &Op) -> (usize, Scalar, Scalar) {
@@ -39,8 +40,8 @@ pub fn lemmas() -> Vec<Lemma> {
             "slice_full_identity",
             Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]),
             |eg: &mut EGraph, s: &Subst, ctx: &RewriteCtx| {
-                let (dim, start, end) = slice_attrs(s.op(0));
-                let x = s.var(0);
+                let (Some(op0), Some(x)) = (s.op(0), s.var(0)) else { return vec![] };
+                let (dim, start, end) = slice_attrs(op0);
                 let Some(shape) = eg.shape(x) else { return vec![] };
                 if dim < shape.len()
                     && s_eq(ctx, &start, &0.into())
@@ -63,12 +64,14 @@ pub fn lemmas() -> Vec<Lemma> {
             "slice_of_slice",
             Pat::bind(OpTag::Slice, 0, vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])]),
             |eg, s, _ctx| {
-                let (d_out, c, d) = slice_attrs(s.op(0));
-                let (d_in, a, _b) = slice_attrs(s.op(1));
+                let (Some(op0), Some(op1), Some(x)) = (s.op(0), s.op(1), s.var(0)) else {
+                    return vec![];
+                };
+                let (d_out, c, d) = slice_attrs(op0);
+                let (d_in, a, _b) = slice_attrs(op1);
                 if d_out != d_in {
                     return vec![];
                 }
-                let x = s.var(0);
                 try_add(
                     eg,
                     Op::Slice { dim: d_in, start: a.add(&c), end: a.add(&d) },
@@ -91,10 +94,10 @@ pub fn lemmas() -> Vec<Lemma> {
             "adjacent_slices_concat",
             Pat::bind(OpTag::Slice, 0, vec![Pat::var(0)]),
             |eg, s, ctx| {
-                let (dim, a, b) = slice_attrs(s.op(0));
-                let x = s.var(0);
+                let (Some(op0), Some(x)) = (s.op(0), s.var(0)) else { return vec![] };
+                let (dim, a, b) = slice_attrs(op0);
                 let Some(xshape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
-                let this = match eg.lookup(s.op(0), &[x]) {
+                let this = match eg.lookup(op0, &[x]) {
                     Some(id) => id,
                     None => return vec![],
                 };
@@ -151,12 +154,13 @@ pub fn lemmas() -> Vec<Lemma> {
                 vec![Pat::bind_variadic(OpTag::Concat, 1, 0)],
             ),
             |eg, s, ctx| {
-                let (sdim, a, b) = slice_attrs(s.op(0));
+                let (Some(op0), Some(list0)) = (s.op(0), s.list(0)) else { return vec![] };
+                let (sdim, a, b) = slice_attrs(op0);
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts: Vec<Id> = s.list(0).to_vec();
+                let parts: Vec<Id> = list0.to_vec();
                 if sdim != cdim {
                     // different dim: slice each part
                     let sliced: Option<Vec<Id>> = parts
@@ -224,11 +228,9 @@ pub fn lemmas() -> Vec<Lemma> {
             "concat_singleton",
             Pat::bind_variadic(OpTag::Concat, 0, 0),
             |_eg, s, _| {
-                let parts = s.list(0);
-                if parts.len() == 1 {
-                    vec![parts[0]]
-                } else {
-                    vec![]
+                match s.list(0) {
+                    Some(parts) if parts.len() == 1 => vec![parts[0]],
+                    _ => vec![],
                 }
             },
         ),
@@ -244,10 +246,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind_variadic(OpTag::Concat, 0, 0),
             |eg, s, _| {
                 let dim = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 // find a part that is itself a concat along the same dim
                 let mut flat: Vec<Id> = Vec::new();
                 let mut changed = false;
@@ -291,10 +293,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind_variadic(OpTag::Concat, 0, 0),
             |eg, s, _| {
                 let dim = match s.op(0) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let n = parts.len();
                 if n < 3 {
                     return vec![];
@@ -349,7 +351,7 @@ pub fn lemmas() -> Vec<Lemma> {
             "sum_group",
             Pat::bind_variadic(OpTag::SumN, 0, 0),
             |eg, s, _| {
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let n = parts.len();
                 if n < 3 {
                     return vec![];
@@ -400,7 +402,7 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind(OpTag::Transpose, 0, vec![Pat::bind(OpTag::Transpose, 1, vec![Pat::var(0)])]),
             |eg, s, _| {
                 let (p2, p1) = match (s.op(0), s.op(1)) {
-                    (Op::Transpose { perm: p2 }, Op::Transpose { perm: p1 }) => {
+                    (Some(Op::Transpose { perm: p2 }), Some(Op::Transpose { perm: p1 })) => {
                         (p2.clone(), p1.clone())
                     }
                     _ => return vec![],
@@ -409,7 +411,7 @@ pub fn lemmas() -> Vec<Lemma> {
                     return vec![];
                 }
                 let fused: Vec<usize> = p2.iter().map(|&j| p1[j]).collect();
-                let x = s.var(0);
+                let Some(x) = s.var(0) else { return vec![] };
                 if fused.iter().enumerate().all(|(i, &p)| i == p) {
                     vec![x]
                 } else {
@@ -432,16 +434,16 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let perm = match s.op(0) {
-                    Op::Transpose { perm } => perm.clone(),
+                    Some(Op::Transpose { perm }) => perm.clone(),
                     _ => return vec![],
                 };
                 let dim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 // output dim index j such that perm[j] == dim
                 let Some(new_dim) = perm.iter().position(|&p| p == dim) else { return vec![] };
-                let parts: Vec<Id> = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let tps: Option<Vec<Id>> = parts
                     .iter()
                     .map(|&p| eg.add_op(Op::Transpose { perm: perm.clone() }, vec![p]).ok())
@@ -462,12 +464,12 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind(OpTag::Transpose, 0, vec![Pat::bind(OpTag::Slice, 1, vec![Pat::var(0)])]),
             |eg, s, _| {
                 let perm = match s.op(0) {
-                    Op::Transpose { perm } => perm.clone(),
+                    Some(Op::Transpose { perm }) => perm.clone(),
                     _ => return vec![],
                 };
-                let (dim, a, b) = slice_attrs(s.op(1));
+                let (Some(op1), Some(x)) = (s.op(1), s.var(0)) else { return vec![] };
+                let (dim, a, b) = slice_attrs(op1);
                 let Some(new_dim) = perm.iter().position(|&p| p == dim) else { return vec![] };
-                let x = s.var(0);
                 let Ok(tp) = eg.add_op(Op::Transpose { perm: perm.clone() }, vec![x]) else {
                     return vec![];
                 };
@@ -485,9 +487,9 @@ pub fn lemmas() -> Vec<Lemma> {
             "pad_zero_identity",
             Pat::bind(OpTag::Pad, 0, vec![Pat::var(0)]),
             |_eg, s, ctx| {
-                if let Op::Pad { before, after, .. } = s.op(0) {
+                if let Some(Op::Pad { before, after, .. }) = s.op(0) {
                     if s_eq(ctx, before, &0.into()) && s_eq(ctx, after, &0.into()) {
-                        return vec![s.var(0)];
+                        return s.var(0).into_iter().collect();
                     }
                 }
                 vec![]
@@ -506,12 +508,12 @@ pub fn lemmas() -> Vec<Lemma> {
             "slice_of_pad",
             Pat::bind(OpTag::Slice, 0, vec![Pat::bind(OpTag::Pad, 1, vec![Pat::var(0)])]),
             |eg, s, ctx| {
-                let (sdim, st, en) = slice_attrs(s.op(0));
+                let (Some(op0), Some(x)) = (s.op(0), s.var(0)) else { return vec![] };
+                let (sdim, st, en) = slice_attrs(op0);
                 let (pdim, before) = match s.op(1) {
-                    Op::Pad { dim, before, .. } => (*dim, before.clone()),
+                    Some(Op::Pad { dim, before, .. }) => (*dim, before.clone()),
                     _ => return vec![],
                 };
-                let x = s.var(0);
                 let Some(shape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
                 if sdim == pdim
                     && s_eq(ctx, &st, &before)
@@ -538,20 +540,20 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (pdim, before, after, value) = match s.op(0) {
-                    Op::Pad { dim, before, after, value } => {
+                    Some(Op::Pad { dim, before, after, value }) => {
                         (*dim, before.clone(), after.clone(), *value)
                     }
                     _ => return vec![],
                 };
                 let cdim = match s.op(1) {
-                    Op::Concat { dim } => *dim,
+                    Some(Op::Concat { dim }) => *dim,
                     _ => return vec![],
                 };
                 if pdim == cdim {
                     return vec![];
                 }
-                let parts: Option<Vec<Id>> = s
-                    .list(0)
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Option<Vec<Id>> = list0
                     .iter()
                     .map(|&p| {
                         eg.add_op(
@@ -582,7 +584,10 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "add_to_sum",
             Pat::exact(Op::Add, vec![Pat::var(0), Pat::var(1)]),
-            |eg, s, _| try_add(eg, Op::SumN, vec![s.var(0), s.var(1)]),
+            |eg, s, _| {
+                let (Some(x), Some(y)) = (s.var(0), s.var(1)) else { return vec![] };
+                try_add(eg, Op::SumN, vec![x, y])
+            },
         ),
         "c",
         2,
@@ -595,7 +600,8 @@ pub fn lemmas() -> Vec<Lemma> {
             "sum_commut",
             Pat::bind_variadic(OpTag::SumN, 0, 0),
             |eg, s, _| {
-                let mut parts: Vec<Id> = s.list(0).iter().map(|&c| eg.find(c)).collect();
+                let Some(list0) = s.list(0) else { return vec![] };
+                let mut parts: Vec<Id> = list0.iter().map(|&c| eg.find(c)).collect();
                 let orig = parts.clone();
                 parts.sort_unstable();
                 if parts == orig {
@@ -616,7 +622,8 @@ pub fn lemmas() -> Vec<Lemma> {
             "sum_identical_scale",
             Pat::bind_variadic(OpTag::SumN, 0, 0),
             |eg, s, _| {
-                let parts: Vec<Id> = s.list(0).iter().map(|&c| eg.find(c)).collect();
+                let Some(list0) = s.list(0) else { return vec![] };
+                let parts: Vec<Id> = list0.iter().map(|&c| eg.find(c)).collect();
                 if parts.len() < 2 || !parts.iter().all(|&p| p == parts[0]) {
                     return vec![];
                 }
@@ -638,11 +645,9 @@ pub fn lemmas() -> Vec<Lemma> {
             "sum_singleton",
             Pat::bind_variadic(OpTag::SumN, 0, 0),
             |_eg, s, _| {
-                let parts = s.list(0);
-                if parts.len() == 1 {
-                    vec![parts[0]]
-                } else {
-                    vec![]
+                match s.list(0) {
+                    Some(parts) if parts.len() == 1 => vec![parts[0]],
+                    _ => vec![],
                 }
             },
         ),
@@ -657,7 +662,7 @@ pub fn lemmas() -> Vec<Lemma> {
             "sum_flatten",
             Pat::bind_variadic(OpTag::SumN, 0, 0),
             |eg, s, _| {
-                let parts = s.list(0).to_vec();
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
                 let mut flat: Vec<Id> = Vec::new();
                 let mut changed = false;
                 for &p in &parts {
@@ -700,16 +705,17 @@ pub fn lemmas() -> Vec<Lemma> {
             ),
             |eg, s, _| {
                 let (d1, d2) = match (s.op(0), s.op(1)) {
-                    (Op::Concat { dim: a }, Op::Concat { dim: b }) => (*a, *b),
+                    (Some(Op::Concat { dim: a }), Some(Op::Concat { dim: b })) => (*a, *b),
                     _ => return vec![],
                 };
-                if d1 != d2 || s.list(0).len() != s.list(1).len() {
+                let (Some(xs), Some(ys)) = (s.list(0), s.list(1)) else { return vec![] };
+                if d1 != d2 || xs.len() != ys.len() {
                     return vec![];
                 }
-                let pieces: Option<Vec<Id>> = s
-                    .list(0)
+                let (xs, ys) = (xs.to_vec(), ys.to_vec());
+                let pieces: Option<Vec<Id>> = xs
                     .iter()
-                    .zip(s.list(1))
+                    .zip(&ys)
                     .map(|(&a, &b)| {
                         if eg.shape(a) != eg.shape(b) {
                             return None;
@@ -731,7 +737,7 @@ pub fn lemmas() -> Vec<Lemma> {
         Rewrite::new(
             "identity_elim",
             Pat::exact(Op::Identity, vec![Pat::var(0)]),
-            |_eg, s, _| vec![s.var(0)],
+            |_eg, s, _| s.var(0).into_iter().collect(),
         ),
         "c",
         1,
@@ -745,10 +751,10 @@ pub fn lemmas() -> Vec<Lemma> {
             Pat::bind(OpTag::Reshape, 0, vec![Pat::var(0)]),
             |eg, s, _| {
                 let shape = match s.op(0) {
-                    Op::Reshape { shape } => shape.clone(),
+                    Some(Op::Reshape { shape }) => shape.clone(),
                     _ => return vec![],
                 };
-                let x = s.var(0);
+                let Some(x) = s.var(0) else { return vec![] };
                 let Some(xshape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
                 let target: Option<Vec<i64>> = shape.iter().map(|d| d.as_const()).collect();
                 let mut out = Vec::new();

@@ -1,0 +1,160 @@
+//! Differential tests for the incremental saturation engine: dirty-class
+//! matching must be observationally identical to the full-rescan oracle —
+//! the same final e-class partition over all seeded ids and the same
+//! per-rule application counts — on real workloads (GPT TP+SP+VP, Llama-3
+//! TP, Qwen2 TP, and the paper's Fig-1 running example).
+
+use graphguard::egraph::{
+    saturate, saturate_full_rescan, EGraph, Id, RewriteCtx, SaturationLimits,
+};
+use graphguard::expr::{Side, TensorRef};
+use graphguard::ir::Graph;
+use graphguard::lemmas;
+use graphguard::models::{gpt, llama, qwen2};
+use graphguard::relation::Relation;
+use graphguard::util::json::Json;
+
+/// Build the monolithic e-graph for (gs, gd, ri) — both graphs' definitional
+/// equalities plus the input relation — and return it with the seeded ids.
+/// Construction is deterministic, so two calls yield identical id layouts.
+fn seed_egraph(gs: &Graph, gd: &Graph, ri: &Relation) -> (EGraph, Vec<Id>) {
+    let mut eg = EGraph::new();
+    let mut seeded: Vec<Id> = Vec::new();
+    let mut s_class = vec![0u32; gs.num_tensors()];
+    for &i in &gs.inputs {
+        s_class[i as usize] = eg.add_leaf(TensorRef::s(i), gs.shape(i).to_vec());
+        seeded.push(s_class[i as usize]);
+    }
+    for nid in gs.topo_order() {
+        let node = gs.node(nid);
+        let children = node.inputs.iter().map(|&t| s_class[t as usize]).collect();
+        s_class[node.output as usize] =
+            eg.add_op(node.op.clone(), children).expect("well-shaped G_s");
+        seeded.push(s_class[node.output as usize]);
+    }
+    for nid in gd.topo_order() {
+        let node = gd.node(nid);
+        let children: Vec<Id> = node
+            .inputs
+            .iter()
+            .map(|&t| eg.add_leaf(TensorRef::d(t), gd.shape(t).to_vec()))
+            .collect();
+        seeded.extend(&children);
+        let out = eg.add_leaf(TensorRef::d(node.output), gd.shape(node.output).to_vec());
+        seeded.push(out);
+        if let Ok(def) = eg.add_op(node.op.clone(), children) {
+            let _ = eg.union(out, def);
+        }
+    }
+    let gd_leaf_shape = |t: TensorRef| (t.side == Side::D).then(|| gd.shape(t.id).to_vec());
+    for t in ri.tensors() {
+        for cand in ri.get(t) {
+            if let Ok(root) = eg.add_expr(&cand.expr, &gd_leaf_shape) {
+                let _ = eg.union(s_class[t as usize], root);
+            }
+        }
+    }
+    eg.rebuild();
+    seeded.sort_unstable();
+    seeded.dedup();
+    (eg, seeded)
+}
+
+fn assert_differential(name: &str, gs: &Graph, gd: &Graph, ri: &Relation) {
+    let limits = SaturationLimits { max_iters: 12, max_nodes: 200_000 };
+    let ctx = RewriteCtx::default();
+    let rules = lemmas::standard_rewrites();
+
+    let (mut inc, seeded) = seed_egraph(gs, gd, ri);
+    let (mut full, seeded2) = seed_egraph(gs, gd, ri);
+    assert_eq!(seeded, seeded2, "{name}: seeding must be deterministic");
+
+    let si = saturate(&mut inc, &rules, &ctx, limits);
+    let sf = saturate_full_rescan(&mut full, &rules, &ctx, limits);
+    assert!(si.total_applications() > 0, "{name}: workload exercises lemmas");
+
+    // identical per-rule application counts
+    let mut ai: Vec<(&str, u64)> = si.applied.iter().map(|(&k, &v)| (k, v)).collect();
+    let mut af: Vec<(&str, u64)> = sf.applied.iter().map(|(&k, &v)| (k, v)).collect();
+    ai.sort_unstable();
+    af.sort_unstable();
+    assert_eq!(ai, af, "{name}: per-rule application counts diverge");
+
+    // identical final partition over every seeded id pair
+    for (i, &a) in seeded.iter().enumerate() {
+        for &b in &seeded[i + 1..] {
+            assert_eq!(
+                inc.same(a, b),
+                full.same(a, b),
+                "{name}: partition diverges on seeded pair ({a}, {b})"
+            );
+        }
+    }
+}
+
+/// Fig-1/2 running example: matsub(matmul(A,B), E) vs TP with
+/// reduce-scatter + all-gather.
+fn running_example() -> (Graph, Graph, Relation) {
+    let mut gs = Graph::new("fig1_gs");
+    let a = gs.input("A", vec![4, 6]);
+    let b = gs.input("B", vec![6, 4]);
+    let e = gs.input("E", vec![4, 4]);
+    let c = gs.matmul("C", a, b);
+    let f = gs.sub2("F", c, e);
+    gs.mark_output(f);
+
+    let mut gd = Graph::new("fig1_gd");
+    let a1 = gd.input("A_1", vec![4, 3]);
+    let a2 = gd.input("A_2", vec![4, 3]);
+    let b1 = gd.input("B_1", vec![3, 4]);
+    let b2 = gd.input("B_2", vec![3, 4]);
+    let e1 = gd.input("E_1", vec![2, 4]);
+    let e2 = gd.input("E_2", vec![2, 4]);
+    let c1 = gd.matmul("C_1", a1, b1);
+    let c2 = gd.matmul("C_2", a2, b2);
+    let d1 = gd.reduce_scatter("D_1", vec![c1, c2], 0, 0);
+    let d2 = gd.reduce_scatter("D_2", vec![c1, c2], 0, 1);
+    let f1 = gd.sub2("F_1", d1, e1);
+    let f2 = gd.sub2("F_2", d2, e2);
+    let f = gd.all_gather("F_full", vec![f1, f2], 0);
+    gd.mark_output(f);
+
+    let ri = Relation::from_json(
+        &Json::parse(
+            r#"{"A": ["concat(A_1, A_2; dim=1)"],
+                "B": ["concat(B_1, B_2; dim=0)"],
+                "E": ["concat(E_1, E_2; dim=0)"]}"#,
+        )
+        .unwrap(),
+        &gs,
+        &gd,
+    )
+    .unwrap();
+    (gs, gd, ri)
+}
+
+#[test]
+fn differential_running_example() {
+    let (gs, gd, ri) = running_example();
+    assert_differential("fig1_running_example", &gs, &gd, &ri);
+}
+
+#[test]
+fn differential_gpt_tp_sp_vp() {
+    let (gs, gd, ri) =
+        gpt::tp_sp_vp_pair(2, 1, &gpt::GptConfig::default()).expect("gpt tp+sp+vp builds");
+    assert_differential("gpt_tp_sp_vp_2", &gs, &gd, &ri);
+}
+
+#[test]
+fn differential_llama3_tp() {
+    let (gs, gd, ri) =
+        llama::tp_pair(2, 1, &llama::LlamaConfig::default()).expect("llama tp builds");
+    assert_differential("llama3_tp_2", &gs, &gd, &ri);
+}
+
+#[test]
+fn differential_qwen2_tp() {
+    let (gs, gd, ri) = qwen2::tp_pair(2, 1).expect("qwen2 tp builds");
+    assert_differential("qwen2_tp_2", &gs, &gd, &ri);
+}

@@ -1,0 +1,145 @@
+//! Property tests for the e-graph invariants the incremental saturation
+//! engine relies on: congruence closure after `rebuild`, memo
+//! canonicalization, parent-index completeness, and tag-index consistency —
+//! all under randomized `add_op`/`union` sequences (ISSUE 1 satellite).
+
+use graphguard::egraph::{EGraph, ELang, Id};
+use graphguard::expr::TensorRef;
+use graphguard::ir::Op;
+use graphguard::prop_assert;
+use graphguard::util::proptest::Prop;
+use graphguard::util::rng::Rng;
+
+/// Apply a random interleaving of `add_op`s, `union`s, worklist drains, and
+/// `rebuild`s to a fresh e-graph; return it rebuilt.
+fn random_egraph(rng: &mut Rng) -> EGraph {
+    let shapes: [Vec<i64>; 2] = [vec![4, 4], vec![8]];
+    let mut eg = EGraph::new();
+    let mut pool: Vec<Id> = Vec::new();
+    for i in 0..(3 + rng.below(4)) {
+        let sh = shapes[rng.below(2) as usize].clone();
+        pool.push(eg.add_leaf(TensorRef::d(i as u32), sh));
+    }
+    let same_shape = |eg: &EGraph, pool: &[Id], rng: &mut Rng| -> Option<(Id, Id)> {
+        for _ in 0..8 {
+            let a = pool[rng.below(pool.len() as u64) as usize];
+            let b = pool[rng.below(pool.len() as u64) as usize];
+            if eg.shape(a).is_some()
+                && eg.shape(a).map(|s| s.to_vec()) == eg.shape(b).map(|s| s.to_vec())
+            {
+                return Some((a, b));
+            }
+        }
+        None
+    };
+    for _ in 0..(24 + rng.below(40)) {
+        match rng.below(10) {
+            0..=2 => {
+                let x = pool[rng.below(pool.len() as u64) as usize];
+                if let Ok(id) = eg.add_op(Op::Neg, vec![x]) {
+                    pool.push(id);
+                }
+            }
+            3..=4 => {
+                if let Some((a, b)) = same_shape(&eg, &pool, rng) {
+                    if let Ok(id) = eg.add_op(Op::Add, vec![a, b]) {
+                        pool.push(id);
+                    }
+                }
+            }
+            5 => {
+                if let Some((a, b)) = same_shape(&eg, &pool, rng) {
+                    if let Ok(id) = eg.add_op(Op::SumN, vec![a, b]) {
+                        pool.push(id);
+                    }
+                }
+            }
+            6 => {
+                if let Some((a, b)) = same_shape(&eg, &pool, rng) {
+                    if let Ok(id) = eg.add_op(Op::Concat { dim: 0 }, vec![a, b]) {
+                        pool.push(id);
+                    }
+                }
+            }
+            7..=8 => {
+                if let Some((a, b)) = same_shape(&eg, &pool, rng) {
+                    let _ = eg.union(a, b);
+                    if rng.below(2) == 0 {
+                        eg.rebuild();
+                    }
+                }
+            }
+            _ => {
+                // the worklist drain must never disturb graph state
+                let _ = eg.take_dirty_closure();
+            }
+        }
+    }
+    eg.rebuild();
+    eg
+}
+
+#[test]
+fn invariants_survive_random_mutation() {
+    Prop::new("e-graph invariants under random add_op/union").cases(64).check(|rng| {
+        let eg = random_egraph(rng);
+        eg.debug_check_invariants()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn hashcons_is_stable_after_mutation() {
+    Prop::new("re-adding any existing node returns its class").cases(48).check(|rng| {
+        let mut eg = random_egraph(rng);
+        // snapshot (class, op, children) triples, then re-add each op node
+        let mut nodes: Vec<(Id, Op, Vec<Id>)> = Vec::new();
+        for id in eg.class_ids() {
+            for node in &eg.class(id).nodes {
+                if let ELang::Op(op) = &node.lang {
+                    nodes.push((id, op.clone(), node.children.clone()));
+                }
+            }
+        }
+        let before = eg.n_nodes;
+        for (class, op, children) in nodes {
+            let got = eg
+                .add_op(op.clone(), children.clone())
+                .map_err(|e| format!("re-adding {op:?} failed: {e}"))?;
+            prop_assert!(
+                eg.same(got, class),
+                "re-adding {op:?} of class {class} produced distinct class {got}"
+            );
+        }
+        prop_assert!(
+            eg.n_nodes == before,
+            "memo canonicalization broken: re-adds allocated {} nodes",
+            eg.n_nodes - before
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn congruence_closes_random_towers() {
+    Prop::new("congruence closure after rebuild").cases(48).check(|rng| {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(TensorRef::d(0), vec![4]);
+        let b = eg.add_leaf(TensorRef::d(1), vec![4]);
+        let depth = 1 + rng.below(5) as usize;
+        let ops = [Op::Neg, Op::Gelu, Op::Tanh];
+        let tower: Vec<Op> =
+            (0..depth).map(|_| ops[rng.below(ops.len() as u64) as usize].clone()).collect();
+        let (mut x, mut y) = (a, b);
+        for op in &tower {
+            x = eg.add_op(op.clone(), vec![x]).unwrap();
+            y = eg.add_op(op.clone(), vec![y]).unwrap();
+        }
+        prop_assert!(!eg.same(x, y), "towers distinct before union");
+        eg.union(a, b).map_err(|e| format!("{e}"))?;
+        eg.rebuild();
+        prop_assert!(eg.same(x, y), "congruence must merge parallel towers (depth {depth})");
+        eg.debug_check_invariants()?;
+        Ok(())
+    });
+}
