@@ -1,0 +1,33 @@
+//! Fuzz-harness throughput: wall-clock per fuzz case (generate + verify
+//! clean pair + mutate + differential oracle). Tracks the cost of the
+//! adversarial test bed so CI fuzz budgets can be sized; writes
+//! `BENCH_fuzz.json` like every other bench target.
+
+use graphguard::bench::{measure, table, BenchRecord};
+use graphguard::fuzz::{run_fuzz, FuzzConfig};
+
+fn main() {
+    let mut results = Vec::new();
+    let mut records = Vec::new();
+    for (label, seeds) in [("fuzz_8", 8u64), ("fuzz_16", 16u64)] {
+        let cfg = FuzzConfig {
+            seeds,
+            base_seed: 0,
+            ranks: 0,
+            mutants_per_model: 3,
+            write_files: false,
+            ..FuzzConfig::default()
+        };
+        let (report, r) = measure(label, || run_fuzz(&cfg).expect("fuzz run"));
+        assert!(report.sound(), "bench fuzz run found counterexamples:\n{}", report.table());
+        // ops = mutants judged; lemma_applications is not a fuzz metric
+        // (kill counts live in FUZZ_REPORT.json) so record 0, not a proxy
+        records.push(BenchRecord::new(label, report.mutants_attempted() as usize, r.mean, 0));
+        results.push(r);
+    }
+    print!("{}", table("fuzz throughput (clean verify + mutants per case)", &results));
+    match graphguard::bench::write_bench_json("fuzz", &records) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_fuzz.json: {e}"),
+    }
+}

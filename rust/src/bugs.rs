@@ -338,6 +338,21 @@ pub fn bug6_grad_accum(buggy: bool) -> Result<BugCase> {
     })
 }
 
+/// Bridge between the hand-written §6.2 cases and the fuzz mutation
+/// operators generalizing them (`crate::fuzz::mutate::MutKind` names).
+/// Bug 5 has no operator: it is invisible to refinement by design and is
+/// caught by relation inspection, which the fuzzer does not model.
+pub fn fuzz_operator_for(bug_id: usize) -> Option<&'static str> {
+    match bug_id {
+        1 => Some("slice_shift"),          // wrong RoPE table offset
+        2 => Some("scale_drop"),           // missing 1/T before the sum
+        3 => Some("slice_shift"),          // pad/slice off-by-one
+        4 => Some("dup_shard_input"),      // wrong shard pairing
+        6 => Some("scale_perturb"),        // wrong grad-accum rescale
+        _ => None,
+    }
+}
+
 /// All six cases, buggy or fixed.
 pub fn all_cases(buggy: bool) -> Vec<BugCase> {
     vec![

@@ -1,0 +1,707 @@
+//! Seeded random model generation for the bug-injection fuzzer.
+//!
+//! A [`ModelSpec`] is a small, JSON-serializable description of a sequential
+//! model (a chain of matmul / elementwise / reduction / attention blocks)
+//! plus one distribution flavor. [`build_pair`] deterministically turns a
+//! spec into `(G_s, G_d, R_i)` where `G_d` is a *correct* distributed
+//! implementation built with the `crate::strategies` helpers:
+//!
+//! - [`Flavor::Dp`]  — single-program replicated capture: every input is
+//!   replicated and every operator mirrored one-to-one.
+//! - [`Flavor::Sp`]  — the activation is sharded along the sequence dim;
+//!   weights are replicated; attention all-gathers K/V; RoPE slices its
+//!   tables per rank; a final all-gather reassembles the output.
+//! - [`Flavor::Tp`]  — activations stay full; Linear blocks column-shard
+//!   the weight (gather on the hidden dim), MLP blocks use the Megatron
+//!   column+row pair with an all-reduce, and `LinearRs` uses the Fig-1
+//!   inner-split with reduce-scatter + all-gather.
+//!
+//! Every construction is covered by lemmas in `crate::lemmas`
+//! (matmul block splits, unary/softmax/rmsnorm over concat, collective
+//! desugaring, rope_seq_split), so clean pairs must verify — a clean pair
+//! that fails refinement is a checker bug, which is exactly what the
+//! oracle is hunting for.
+//!
+//! Naming contract (used for mutation localization): every `G_s` node in
+//! block `i` is named `b{i}_<role>`, every `G_d` node `b{i}_<role>` (DP/TP
+//! replicated nodes) or `b{i}_<role>_r{rank}`; the SP epilogue gather is
+//! `b{n}_out` where `n == blocks.len()`.
+
+use crate::ir::{DType, Graph, Op, TensorId};
+use crate::relation::Relation;
+use crate::strategies::{
+    chunks, col_shard_weight, replicate_input_typed, row_shard_weight, shard_input_typed,
+    RiBuilder,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    /// Replicated (data-parallel single-program capture).
+    Dp,
+    /// Sequence parallelism: activations sharded along dim 0.
+    Sp,
+    /// Tensor parallelism: weights sharded, activations full.
+    Tp,
+}
+
+impl Flavor {
+    pub fn name(self) -> &'static str {
+        match self {
+            Flavor::Dp => "dp",
+            Flavor::Sp => "sp",
+            Flavor::Tp => "tp",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Flavor> {
+        match s {
+            "dp" => Some(Flavor::Dp),
+            "sp" => Some(Flavor::Sp),
+            "tp" => Some(Flavor::Tp),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryKind {
+    Gelu,
+    Tanh,
+    Silu,
+    Relu,
+    Sigmoid,
+}
+
+pub const UNARY_KINDS: [UnaryKind; 5] =
+    [UnaryKind::Gelu, UnaryKind::Tanh, UnaryKind::Silu, UnaryKind::Relu, UnaryKind::Sigmoid];
+
+impl UnaryKind {
+    pub fn op(self) -> Op {
+        match self {
+            UnaryKind::Gelu => Op::Gelu,
+            UnaryKind::Tanh => Op::Tanh,
+            UnaryKind::Silu => Op::Silu,
+            UnaryKind::Relu => Op::Relu,
+            UnaryKind::Sigmoid => Op::Sigmoid,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            UnaryKind::Gelu => "gelu",
+            UnaryKind::Tanh => "tanh",
+            UnaryKind::Silu => "silu",
+            UnaryKind::Relu => "relu",
+            UnaryKind::Sigmoid => "sigmoid",
+        }
+    }
+    pub fn parse(s: &str) -> Option<UnaryKind> {
+        UNARY_KINDS.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    /// Row-wise softmax along dim 1.
+    Softmax,
+    /// RMSNorm over the hidden dim with a learned weight.
+    RmsNorm,
+}
+
+impl NormKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            NormKind::Softmax => "softmax",
+            NormKind::RmsNorm => "rmsnorm",
+        }
+    }
+    pub fn parse(s: &str) -> Option<NormKind> {
+        match s {
+            "softmax" => Some(NormKind::Softmax),
+            "rmsnorm" => Some(NormKind::RmsNorm),
+            _ => None,
+        }
+    }
+}
+
+/// One shape-preserving `[S, H] -> [S, H]` block of the generated chain.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Block {
+    Unary(UnaryKind),
+    Scale(f64),
+    /// `x @ W` with `W: [H, H]`.
+    Linear,
+    /// `x @ W` distributed as inner-split + reduce-scatter + all-gather
+    /// under TP (plain Linear under other flavors).
+    LinearRs,
+    /// `act(x @ W1) @ W2` — the Megatron column/row pair under TP.
+    Mlp(UnaryKind),
+    Norm(NormKind),
+    /// Rotary embedding with `cos/sin: [S, H]` table inputs.
+    Rope,
+    /// Single-head self-attention (q/k/v projections, scaled scores,
+    /// softmax, value mix).
+    Attention,
+}
+
+impl Block {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Block::Unary(_) => "unary",
+            Block::Scale(_) => "scale",
+            Block::Linear => "linear",
+            Block::LinearRs => "linear_rs",
+            Block::Mlp(_) => "mlp",
+            Block::Norm(_) => "norm",
+            Block::Rope => "rope",
+            Block::Attention => "attention",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::str(self.kind_name()))];
+        match self {
+            Block::Unary(k) | Block::Mlp(k) => pairs.push(("op", Json::str(k.name()))),
+            Block::Scale(c) => pairs.push(("c", Json::num(*c))),
+            Block::Norm(n) => pairs.push(("norm", Json::str(n.name()))),
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Block> {
+        let kind = j.get("kind").as_str().ok_or_else(|| anyhow!("block missing 'kind'"))?;
+        let unary = || -> Result<UnaryKind> {
+            let s = j.get("op").as_str().ok_or_else(|| anyhow!("block missing 'op'"))?;
+            UnaryKind::parse(s).ok_or_else(|| anyhow!("unknown unary '{s}'"))
+        };
+        Ok(match kind {
+            "unary" => Block::Unary(unary()?),
+            "scale" => Block::Scale(
+                j.get("c").as_f64().ok_or_else(|| anyhow!("scale block missing 'c'"))?,
+            ),
+            "linear" => Block::Linear,
+            "linear_rs" => Block::LinearRs,
+            "mlp" => Block::Mlp(unary()?),
+            "norm" => {
+                let s = j.get("norm").as_str().ok_or_else(|| anyhow!("norm missing 'norm'"))?;
+                Block::Norm(NormKind::parse(s).ok_or_else(|| anyhow!("unknown norm '{s}'"))?)
+            }
+            "rope" => Block::Rope,
+            "attention" => Block::Attention,
+            other => bail!("unknown block kind '{other}'"),
+        })
+    }
+}
+
+/// Deterministic description of one fuzz model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Seed the spec was sampled from (provenance only — `build_pair` uses
+    /// no randomness).
+    pub seed: u64,
+    pub ranks: usize,
+    pub seq: i64,
+    pub hidden: i64,
+    pub flavor: Flavor,
+    pub blocks: Vec<Block>,
+}
+
+impl ModelSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::str(format!("{:#018x}", self.seed))),
+            ("ranks", Json::num(self.ranks as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("flavor", Json::str(self.flavor.name())),
+            ("blocks", Json::Arr(self.blocks.iter().map(Block::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelSpec> {
+        let seed_str = j.get("seed").as_str().ok_or_else(|| anyhow!("spec missing 'seed'"))?;
+        let seed = u64::from_str_radix(seed_str.trim_start_matches("0x"), 16)
+            .map_err(|_| anyhow!("bad spec seed '{seed_str}'"))?;
+        let flavor_str =
+            j.get("flavor").as_str().ok_or_else(|| anyhow!("spec missing 'flavor'"))?;
+        let blocks = j
+            .get("blocks")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec missing 'blocks'"))?
+            .iter()
+            .map(Block::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelSpec {
+            seed,
+            ranks: j.get("ranks").as_usize().ok_or_else(|| anyhow!("spec missing 'ranks'"))?,
+            seq: j.get("seq").as_i64().ok_or_else(|| anyhow!("spec missing 'seq'"))?,
+            hidden: j.get("hidden").as_i64().ok_or_else(|| anyhow!("spec missing 'hidden'"))?,
+            flavor: Flavor::parse(flavor_str)
+                .ok_or_else(|| anyhow!("unknown flavor '{flavor_str}'"))?,
+            blocks,
+        })
+    }
+
+    /// Basic well-formedness used before building (also by replay).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.ranks >= 1, "ranks must be >= 1");
+        anyhow::ensure!(!self.blocks.is_empty(), "spec needs at least one block");
+        anyhow::ensure!(
+            self.seq >= 1 && self.seq % self.ranks as i64 == 0,
+            "seq {} must be a positive multiple of ranks {}",
+            self.seq,
+            self.ranks
+        );
+        anyhow::ensure!(
+            self.hidden >= 2 && self.hidden % 2 == 0 && self.hidden % self.ranks as i64 == 0,
+            "hidden {} must be even and divisible by ranks {}",
+            self.hidden,
+            self.ranks
+        );
+        Ok(())
+    }
+}
+
+/// Attention score scale — shared by the G_s and G_d builders so the
+/// `Scale` attribute matches bit-for-bit.
+fn attn_scale(hidden: i64) -> f64 {
+    1.0 / (hidden as f64).sqrt()
+}
+
+const SCALE_CHOICES: [f64; 4] = [0.5, 2.0, 0.25, 1.5];
+
+/// Sample a random spec. All shape parameters are kept divisible so every
+/// strategy helper applies; block kinds are filtered per flavor so the
+/// clean distributed variant is provable by the standard lemma library.
+pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
+    let seq = ranks as i64 * (1 + rng.below(3) as i64); // R, 2R or 3R rows
+    let hidden = ranks as i64 * 2 * (1 + rng.below(2) as i64); // even, % ranks == 0
+    let flavor = match rng.below(5) {
+        0 => Flavor::Dp,
+        1 | 2 => Flavor::Sp,
+        _ => Flavor::Tp,
+    };
+    let n_blocks = 2 + rng.below(4) as usize; // 2..=5
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let pick = rng.below(8);
+        let block = match pick {
+            0 => Block::Unary(UNARY_KINDS[rng.below(UNARY_KINDS.len() as u64) as usize]),
+            1 => Block::Scale(SCALE_CHOICES[rng.below(SCALE_CHOICES.len() as u64) as usize]),
+            2 => Block::Linear,
+            3 => {
+                // the reduce-scatter construction only exists under TP;
+                // elsewhere it degenerates to a plain Linear anyway
+                if flavor == Flavor::Tp {
+                    Block::LinearRs
+                } else {
+                    Block::Linear
+                }
+            }
+            4 => Block::Mlp(UNARY_KINDS[rng.below(UNARY_KINDS.len() as u64) as usize]),
+            5 => Block::Norm(if rng.below(2) == 0 { NormKind::Softmax } else { NormKind::RmsNorm }),
+            6 => Block::Rope,
+            _ => Block::Attention,
+        };
+        blocks.push(block);
+    }
+    ModelSpec { seed, ranks, seq, hidden, flavor, blocks }
+}
+
+/// Build the sequential graph `G_s` for a spec.
+fn build_gs(spec: &ModelSpec) -> Graph {
+    let (s, h) = (spec.seq, spec.hidden);
+    let mut gs = Graph::new(format!("fuzz_gs_{:016x}", spec.seed));
+    let mut cur = gs.input("x", vec![s, h]);
+    for (i, block) in spec.blocks.iter().enumerate() {
+        match block {
+            Block::Unary(k) => {
+                cur = gs.op(&format!("b{i}_act"), k.op(), vec![cur]);
+            }
+            Block::Scale(c) => {
+                cur = gs.scale(&format!("b{i}_scale"), cur, *c);
+            }
+            Block::Linear | Block::LinearRs => {
+                let w = gs.input(&format!("w{i}"), vec![h, h]);
+                cur = gs.matmul(&format!("b{i}_mm"), cur, w);
+            }
+            Block::Mlp(k) => {
+                let w1 = gs.input(&format!("w{i}a"), vec![h, h]);
+                let w2 = gs.input(&format!("w{i}b"), vec![h, h]);
+                let hid = gs.matmul(&format!("b{i}_mm1"), cur, w1);
+                let a = gs.op(&format!("b{i}_mlpact"), k.op(), vec![hid]);
+                cur = gs.matmul(&format!("b{i}_mm2"), a, w2);
+            }
+            Block::Norm(NormKind::Softmax) => {
+                cur = gs.softmax(&format!("b{i}_sm"), cur, 1);
+            }
+            Block::Norm(NormKind::RmsNorm) => {
+                let g = gs.input(&format!("g{i}"), vec![h]);
+                cur = gs.op(&format!("b{i}_rn"), Op::RmsNorm { eps: c_eps() }, vec![cur, g]);
+            }
+            Block::Rope => {
+                let cos = gs.input(&format!("cos{i}"), vec![s, h]);
+                let sin = gs.input(&format!("sin{i}"), vec![s, h]);
+                cur = gs.op(&format!("b{i}_rope"), Op::Rope, vec![cur, cos, sin]);
+            }
+            Block::Attention => {
+                let wq = gs.input(&format!("wq{i}"), vec![h, h]);
+                let wk = gs.input(&format!("wk{i}"), vec![h, h]);
+                let wv = gs.input(&format!("wv{i}"), vec![h, h]);
+                let q = gs.matmul(&format!("b{i}_q"), cur, wq);
+                let k = gs.matmul(&format!("b{i}_k"), cur, wk);
+                let v = gs.matmul(&format!("b{i}_v"), cur, wv);
+                let kt = gs.transpose(&format!("b{i}_kt"), k, vec![1, 0]);
+                let sc = gs.matmul(&format!("b{i}_sc"), q, kt);
+                let ss = gs.scale(&format!("b{i}_ss"), sc, attn_scale(h));
+                let p = gs.softmax(&format!("b{i}_p"), ss, 1);
+                cur = gs.matmul(&format!("b{i}_o"), p, v);
+            }
+        }
+    }
+    gs.mark_output(cur);
+    gs
+}
+
+/// Shared RMSNorm epsilon so G_s and G_d attributes match bit-for-bit.
+fn c_eps() -> crate::ir::FBits {
+    crate::ir::FBits::new(1e-5)
+}
+
+/// Build `(G_s, G_d, R_i)` for a spec. Deterministic: no randomness, no
+/// iteration over hash maps.
+pub fn build_pair(spec: &ModelSpec) -> Result<(Graph, Graph, Relation)> {
+    spec.validate()?;
+    let gs = build_gs(spec);
+    let (s, h, r) = (spec.seq, spec.hidden, spec.ranks);
+    let mut gd = Graph::new(format!("fuzz_gd_{}_{:016x}", spec.flavor.name(), spec.seed));
+    let mut ri = RiBuilder::new();
+
+    match spec.flavor {
+        Flavor::Dp => {
+            let mut cur = replicate_input_typed(&mut gd, &mut ri, "x", &[s, h], DType::F32);
+            for (i, block) in spec.blocks.iter().enumerate() {
+                cur = build_block_replicated(&mut gd, &mut ri, block, i, cur, s, h)?;
+            }
+            gd.mark_output(cur);
+        }
+        Flavor::Sp => {
+            let mut shards =
+                shard_input_typed(&mut gd, &mut ri, "x", &[s, h], 0, r, DType::F32)?;
+            for (i, block) in spec.blocks.iter().enumerate() {
+                shards = build_block_sp(&mut gd, &mut ri, block, i, shards, s, h)?;
+            }
+            let out = gd.all_gather(&format!("b{}_out", spec.blocks.len()), shards, 0);
+            gd.mark_output(out);
+        }
+        Flavor::Tp => {
+            let mut cur = replicate_input_typed(&mut gd, &mut ri, "x", &[s, h], DType::F32);
+            for (i, block) in spec.blocks.iter().enumerate() {
+                cur = build_block_tp(&mut gd, &mut ri, block, i, cur, s, h, r)?;
+            }
+            gd.mark_output(cur);
+        }
+    }
+
+    let ri = ri.finish(&gs, &gd)?;
+    gd.validate()?;
+    gs.validate()?;
+    Ok((gs, gd, ri))
+}
+
+/// DP (and the replicated parts of TP): mirror the sequential block 1:1.
+fn build_block_replicated(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    block: &Block,
+    i: usize,
+    cur: TensorId,
+    s: i64,
+    h: i64,
+) -> Result<TensorId> {
+    Ok(match block {
+        Block::Unary(k) => gd.op(&format!("b{i}_act"), k.op(), vec![cur]),
+        Block::Scale(c) => gd.scale(&format!("b{i}_scale"), cur, *c),
+        Block::Linear | Block::LinearRs => {
+            let w = replicate_input_typed(gd, ri, &format!("w{i}"), &[h, h], DType::F32);
+            gd.matmul(&format!("b{i}_mm"), cur, w)
+        }
+        Block::Mlp(k) => {
+            let w1 = replicate_input_typed(gd, ri, &format!("w{i}a"), &[h, h], DType::F32);
+            let w2 = replicate_input_typed(gd, ri, &format!("w{i}b"), &[h, h], DType::F32);
+            let hid = gd.matmul(&format!("b{i}_mm1"), cur, w1);
+            let a = gd.op(&format!("b{i}_mlpact"), k.op(), vec![hid]);
+            gd.matmul(&format!("b{i}_mm2"), a, w2)
+        }
+        Block::Norm(NormKind::Softmax) => gd.softmax(&format!("b{i}_sm"), cur, 1),
+        Block::Norm(NormKind::RmsNorm) => {
+            let g = replicate_input_typed(gd, ri, &format!("g{i}"), &[h], DType::F32);
+            gd.op(&format!("b{i}_rn"), Op::RmsNorm { eps: c_eps() }, vec![cur, g])
+        }
+        Block::Rope => {
+            let cos = replicate_input_typed(gd, ri, &format!("cos{i}"), &[s, h], DType::F32);
+            let sin = replicate_input_typed(gd, ri, &format!("sin{i}"), &[s, h], DType::F32);
+            gd.op(&format!("b{i}_rope"), Op::Rope, vec![cur, cos, sin])
+        }
+        Block::Attention => {
+            let wq = replicate_input_typed(gd, ri, &format!("wq{i}"), &[h, h], DType::F32);
+            let wk = replicate_input_typed(gd, ri, &format!("wk{i}"), &[h, h], DType::F32);
+            let wv = replicate_input_typed(gd, ri, &format!("wv{i}"), &[h, h], DType::F32);
+            let q = gd.matmul(&format!("b{i}_q"), cur, wq);
+            let k = gd.matmul(&format!("b{i}_k"), cur, wk);
+            let v = gd.matmul(&format!("b{i}_v"), cur, wv);
+            let kt = gd.transpose(&format!("b{i}_kt"), k, vec![1, 0]);
+            let sc = gd.matmul(&format!("b{i}_sc"), q, kt);
+            let ss = gd.scale(&format!("b{i}_ss"), sc, attn_scale(h));
+            let p = gd.softmax(&format!("b{i}_p"), ss, 1);
+            gd.matmul(&format!("b{i}_o"), p, v)
+        }
+    })
+}
+
+/// SP: every shard is `[S/R, H]`; weights replicated; attention gathers K/V.
+fn build_block_sp(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    block: &Block,
+    i: usize,
+    shards: Vec<TensorId>,
+    s: i64,
+    h: i64,
+) -> Result<Vec<TensorId>> {
+    let r = shards.len();
+    Ok(match block {
+        Block::Unary(k) => shards
+            .iter()
+            .enumerate()
+            .map(|(rk, &x)| gd.op(&format!("b{i}_act_r{rk}"), k.op(), vec![x]))
+            .collect(),
+        Block::Scale(c) => shards
+            .iter()
+            .enumerate()
+            .map(|(rk, &x)| gd.scale(&format!("b{i}_scale_r{rk}"), x, *c))
+            .collect(),
+        Block::Linear | Block::LinearRs => {
+            let w = replicate_input_typed(gd, ri, &format!("w{i}"), &[h, h], DType::F32);
+            shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| gd.matmul(&format!("b{i}_mm_r{rk}"), x, w))
+                .collect()
+        }
+        Block::Mlp(k) => {
+            let w1 = replicate_input_typed(gd, ri, &format!("w{i}a"), &[h, h], DType::F32);
+            let w2 = replicate_input_typed(gd, ri, &format!("w{i}b"), &[h, h], DType::F32);
+            shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| {
+                    let hid = gd.matmul(&format!("b{i}_mm1_r{rk}"), x, w1);
+                    let a = gd.op(&format!("b{i}_mlpact_r{rk}"), k.op(), vec![hid]);
+                    gd.matmul(&format!("b{i}_mm2_r{rk}"), a, w2)
+                })
+                .collect()
+        }
+        Block::Norm(NormKind::Softmax) => shards
+            .iter()
+            .enumerate()
+            .map(|(rk, &x)| gd.softmax(&format!("b{i}_sm_r{rk}"), x, 1))
+            .collect(),
+        Block::Norm(NormKind::RmsNorm) => {
+            let g = replicate_input_typed(gd, ri, &format!("g{i}"), &[h], DType::F32);
+            shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| {
+                    gd.op(&format!("b{i}_rn_r{rk}"), Op::RmsNorm { eps: c_eps() }, vec![x, g])
+                })
+                .collect()
+        }
+        Block::Rope => {
+            let cos = replicate_input_typed(gd, ri, &format!("cos{i}"), &[s, h], DType::F32);
+            let sin = replicate_input_typed(gd, ri, &format!("sin{i}"), &[s, h], DType::F32);
+            let offs = chunks(s, r);
+            shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| {
+                    let (lo, hi) = offs[rk];
+                    let cs = gd.slice(&format!("b{i}_cos_r{rk}"), cos, 0, lo, hi);
+                    let sn = gd.slice(&format!("b{i}_sin_r{rk}"), sin, 0, lo, hi);
+                    gd.op(&format!("b{i}_rope_r{rk}"), Op::Rope, vec![x, cs, sn])
+                })
+                .collect()
+        }
+        Block::Attention => {
+            let wq = replicate_input_typed(gd, ri, &format!("wq{i}"), &[h, h], DType::F32);
+            let wk = replicate_input_typed(gd, ri, &format!("wk{i}"), &[h, h], DType::F32);
+            let wv = replicate_input_typed(gd, ri, &format!("wv{i}"), &[h, h], DType::F32);
+            let qs: Vec<TensorId> = shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| gd.matmul(&format!("b{i}_q_r{rk}"), x, wq))
+                .collect();
+            let ks: Vec<TensorId> = shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| gd.matmul(&format!("b{i}_k_r{rk}"), x, wk))
+                .collect();
+            let vs: Vec<TensorId> = shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| gd.matmul(&format!("b{i}_v_r{rk}"), x, wv))
+                .collect();
+            let k_full = gd.all_gather(&format!("b{i}_kag"), ks, 0);
+            let v_full = gd.all_gather(&format!("b{i}_vag"), vs, 0);
+            let kt = gd.transpose(&format!("b{i}_kt"), k_full, vec![1, 0]);
+            qs.iter()
+                .enumerate()
+                .map(|(rk, &q)| {
+                    let sc = gd.matmul(&format!("b{i}_sc_r{rk}"), q, kt);
+                    let ss = gd.scale(&format!("b{i}_ss_r{rk}"), sc, attn_scale(h));
+                    let p = gd.softmax(&format!("b{i}_p_r{rk}"), ss, 1);
+                    gd.matmul(&format!("b{i}_o_r{rk}"), p, v_full)
+                })
+                .collect()
+        }
+    })
+}
+
+/// TP: the activation stays full between blocks; Linear/Mlp/LinearRs are
+/// weight-sharded, everything else is replicated compute.
+#[allow(clippy::too_many_arguments)]
+fn build_block_tp(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    block: &Block,
+    i: usize,
+    cur: TensorId,
+    s: i64,
+    h: i64,
+    r: usize,
+) -> Result<TensorId> {
+    Ok(match block {
+        Block::Linear => {
+            // Megatron column-parallel linear: W = concat(W_r; dim 1)
+            let ws = col_shard_weight(gd, ri, &format!("w{i}"), &[h, h], r)?;
+            let parts: Vec<TensorId> = ws
+                .iter()
+                .enumerate()
+                .map(|(rk, &w)| gd.matmul(&format!("b{i}_mm_r{rk}"), cur, w))
+                .collect();
+            gd.all_gather(&format!("b{i}_ag"), parts, 1)
+        }
+        Block::LinearRs => {
+            // Fig-1 inner split: slice x on the hidden dim, row-shard W,
+            // reduce-scatter the partial sums, gather the row chunks.
+            let ws = row_shard_weight(gd, ri, &format!("w{i}"), &[h, h], r)?;
+            let offs = chunks(h, r);
+            let parts: Vec<TensorId> = ws
+                .iter()
+                .enumerate()
+                .map(|(rk, &w)| {
+                    let (lo, hi) = offs[rk];
+                    let xs = gd.slice(&format!("b{i}_xs_r{rk}"), cur, 1, lo, hi);
+                    gd.matmul(&format!("b{i}_mm_r{rk}"), xs, w)
+                })
+                .collect();
+            let scats: Vec<TensorId> = (0..r)
+                .map(|rk| {
+                    gd.reduce_scatter(&format!("b{i}_rs_r{rk}"), parts.clone(), 0, rk)
+                })
+                .collect();
+            gd.all_gather(&format!("b{i}_ag"), scats, 0)
+        }
+        Block::Mlp(k) => {
+            // column-parallel W1, row-parallel W2, all-reduce the partials
+            let w1s = col_shard_weight(gd, ri, &format!("w{i}a"), &[h, h], r)?;
+            let w2s = row_shard_weight(gd, ri, &format!("w{i}b"), &[h, h], r)?;
+            let parts: Vec<TensorId> = w1s
+                .iter()
+                .zip(&w2s)
+                .enumerate()
+                .map(|(rk, (&w1, &w2))| {
+                    let hid = gd.matmul(&format!("b{i}_mm1_r{rk}"), cur, w1);
+                    let a = gd.op(&format!("b{i}_mlpact_r{rk}"), k.op(), vec![hid]);
+                    gd.matmul(&format!("b{i}_mm2_r{rk}"), a, w2)
+                })
+                .collect();
+            gd.all_reduce(&format!("b{i}_ar"), parts)
+        }
+        other => build_block_replicated(gd, ri, other, i, cur, s, h)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let mut rng = Rng::new(7);
+        for case in 0..16u64 {
+            let spec = sample_spec(&mut rng, if case % 4 == 0 { 4 } else { 2 }, case);
+            let j = spec.to_json();
+            let back = ModelSpec::from_json(&j).unwrap();
+            assert_eq!(spec, back, "roundtrip {j:?}");
+        }
+    }
+
+    #[test]
+    fn sampled_specs_build_and_validate() {
+        let mut rng = Rng::new(42);
+        for case in 0..12u64 {
+            let spec = sample_spec(&mut rng, 2, case);
+            let (gs, gd, ri) = build_pair(&spec).unwrap_or_else(|e| {
+                panic!("spec {:?} failed to build: {e:#}", spec.to_json().to_string())
+            });
+            gs.validate().unwrap();
+            gd.validate().unwrap();
+            ri.validate_shapes(&gs, &gd).unwrap();
+            assert_eq!(gs.outputs.len(), 1);
+            assert_eq!(gd.outputs.len(), 1);
+            assert_eq!(gs.shape(gs.outputs[0]), &[spec.seq, spec.hidden]);
+        }
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let mut rng = Rng::new(5);
+        let spec = sample_spec(&mut rng, 2, 5);
+        let (gs1, gd1, _) = build_pair(&spec).unwrap();
+        let (gs2, gd2, _) = build_pair(&spec).unwrap();
+        assert_eq!(
+            crate::ir::json_io::to_json(&gs1).to_string(),
+            crate::ir::json_io::to_json(&gs2).to_string()
+        );
+        assert_eq!(
+            crate::ir::json_io::to_json(&gd1).to_string(),
+            crate::ir::json_io::to_json(&gd2).to_string()
+        );
+    }
+
+    #[test]
+    fn sp_clean_pair_matches_numerically() {
+        // numeric ground truth for the generator itself: evaluate G_s from
+        // R_i-derived inputs and compare against the gathered G_d output
+        let spec = ModelSpec {
+            seed: 1,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Sp,
+            blocks: vec![
+                Block::Linear,
+                Block::Unary(UnaryKind::Gelu),
+                Block::Norm(NormKind::Softmax),
+            ],
+        };
+        let (gs, gd, ri) = build_pair(&spec).unwrap();
+        let cfg = crate::infer::InferConfig::default();
+        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+            .unwrap_or_else(|e| panic!("clean SP pair must refine: {e}"));
+        crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 99).unwrap();
+    }
+}

@@ -1,0 +1,34 @@
+//! Bug-injection mutation fuzzer (differential soundness harness).
+//!
+//! The §6.2 case studies exercise six hand-written bugs; this subsystem
+//! generates an unbounded adversarial test bed in the same spirit as the
+//! systematically-injected faults runtime checkers are validated against:
+//!
+//! 1. [`genmodel`] — seeded random sequential models (matmul / elementwise
+//!    / reduction / attention blocks) plus *correct* distributed variants
+//!    composed from `crate::strategies` (DP replication, SP sequence
+//!    sharding, TP weight sharding incl. the Fig-1 reduce-scatter form).
+//! 2. [`mutate`] — ~12 single-node bug operators drawn from the §6.2
+//!    taxonomy (wrong collective, dropped aggregation, shifted slice
+//!    offsets, wrong chunk index, mis-scaled reductions, shard re-wiring,
+//!    wrong-axis softmax...).
+//! 3. [`oracle`] — runs `check_refinement` on each (clean, mutant) pair
+//!    and cross-checks against concrete execution: clean pairs must verify
+//!    with a replaying numeric certificate, numerics-changing mutants must
+//!    be rejected with an in-region localization, and any accepted graph's
+//!    certificate must replay. Disagreements are minimized and dumped as
+//!    replayable JSON counterexamples, byte-identical per seed.
+//!
+//! CLI: `graphguard fuzz --seeds N --seed S [--ranks R] [--mutants M]
+//! [--out DIR]`, plus `--replay FILE` for counterexample files.
+
+pub mod genmodel;
+pub mod mutate;
+pub mod oracle;
+
+pub use genmodel::{build_pair, sample_spec, Block, Flavor, ModelSpec, NormKind, UnaryKind};
+pub use mutate::{
+    applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, MutKind, Mutation,
+    Site, MUT_KINDS,
+};
+pub use oracle::{replay_counterexample, run_fuzz, FuzzConfig, FuzzReport, MutOutcome, OpStat};

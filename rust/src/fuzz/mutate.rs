@@ -1,0 +1,465 @@
+//! Bug-injection mutation operators.
+//!
+//! Each operator rewrites exactly one node of a distributed graph `G_d`
+//! into a plausible distribution bug drawn from the §6.2 taxonomy (see
+//! `crate::bugs::fuzz_operator_for` for the case ↔ operator bridge and the
+//! wider defect classes catalogued by the distributed-DL bug studies):
+//! wrong collective, dropped aggregation, mis-sliced shards, wrong chunk
+//! index, mis-scaled reductions, reordered/duplicated shard wiring, and
+//! wrong-axis reductions.
+//!
+//! Mutations are applied by *rebuilding* the graph through [`Graph::add`],
+//! so output shapes are re-inferred and a mutant that no longer
+//! type-checks is reported as stillborn (`apply_mutation` returns `Err`)
+//! rather than silently kept.
+
+use crate::ir::{FBits, Graph, Node, NodeId, Op, OpTag, TensorId};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MutKind {
+    /// Rotate the shard operands of an all-gather/concat (wrong rank order).
+    GatherReorder,
+    /// Replace an all-reduce with rank 0's unreduced contribution.
+    DropAggregation,
+    /// Swap an all-gather for a reduce-scatter (wrong collective).
+    GatherToReduceScatter,
+    /// Reduce-scatter keeps the wrong chunk (`index + 1 mod ranks`).
+    ScatterIndexPerturb,
+    /// Shift a slice window by one element (off-by-one shard offset).
+    SliceShift,
+    /// Slice along the wrong dimension with the same bounds.
+    SliceDimSwap,
+    /// Double a scalar rescale (wrong reduction divisor).
+    ScalePerturb,
+    /// Drop a scalar rescale entirely (missing `1/k`).
+    ScaleDrop,
+    /// Swap matmul operands.
+    MatMulSwap,
+    /// Replace a unary activation with a different one.
+    WrongUnary,
+    /// Wire the same shard into a collective twice (wrong shard pairing).
+    DupShardInput,
+    /// Softmax along the wrong axis.
+    SoftmaxDimSwap,
+}
+
+pub const MUT_KINDS: [MutKind; 12] = [
+    MutKind::GatherReorder,
+    MutKind::DropAggregation,
+    MutKind::GatherToReduceScatter,
+    MutKind::ScatterIndexPerturb,
+    MutKind::SliceShift,
+    MutKind::SliceDimSwap,
+    MutKind::ScalePerturb,
+    MutKind::ScaleDrop,
+    MutKind::MatMulSwap,
+    MutKind::WrongUnary,
+    MutKind::DupShardInput,
+    MutKind::SoftmaxDimSwap,
+];
+
+impl MutKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MutKind::GatherReorder => "gather_reorder",
+            MutKind::DropAggregation => "drop_aggregation",
+            MutKind::GatherToReduceScatter => "gather_to_reduce_scatter",
+            MutKind::ScatterIndexPerturb => "scatter_index_perturb",
+            MutKind::SliceShift => "slice_shift",
+            MutKind::SliceDimSwap => "slice_dim_swap",
+            MutKind::ScalePerturb => "scale_perturb",
+            MutKind::ScaleDrop => "scale_drop",
+            MutKind::MatMulSwap => "matmul_swap",
+            MutKind::WrongUnary => "wrong_unary",
+            MutKind::DupShardInput => "dup_shard_input",
+            MutKind::SoftmaxDimSwap => "softmax_dim_swap",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MutKind> {
+        MUT_KINDS.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// An applicable mutation site: one node × one operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Site {
+    pub node: NodeId,
+    pub kind: MutKind,
+}
+
+/// Serializable record of an applied mutation (counterexample replay).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mutation {
+    pub kind: MutKind,
+    /// Name of the mutated `G_d` node.
+    pub node_name: String,
+    /// Block index parsed from the `b{i}_...` naming contract.
+    pub block: Option<usize>,
+}
+
+impl Mutation {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("node", Json::str(self.node_name.clone())),
+            (
+                "block",
+                self.block.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Mutation> {
+        let kind_s = j.get("kind").as_str().ok_or_else(|| anyhow!("mutation missing 'kind'"))?;
+        let kind = MutKind::parse(kind_s).ok_or_else(|| anyhow!("unknown mutation '{kind_s}'"))?;
+        let node_name = j
+            .get("node")
+            .as_str()
+            .ok_or_else(|| anyhow!("mutation missing 'node'"))?
+            .to_string();
+        let block = parse_block(&node_name);
+        Ok(Mutation { kind, node_name, block })
+    }
+}
+
+/// Parse the block index from a `b{i}_...` node name.
+pub fn parse_block(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix('b')?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() || !rest[digits.len()..].starts_with('_') {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// The replacement `(op, inputs)` for `node` under `kind`, or `None` when
+/// the operator does not apply to this node. `ins` are the (remapped)
+/// input ids to build the replacement from; shapes are read from `g`,
+/// whose upstream prefix is identical to the rebuilt graph's.
+fn mutate_node(
+    g: &Graph,
+    node: &Node,
+    kind: MutKind,
+    ins: &[TensorId],
+) -> Option<(Op, Vec<TensorId>)> {
+    match kind {
+        MutKind::GatherReorder => match node.op.tag() {
+            OpTag::AllGather | OpTag::Concat if ins.len() >= 2 => {
+                let mut rot = ins.to_vec();
+                rot.rotate_left(1);
+                if rot == ins {
+                    return None;
+                }
+                Some((node.op.clone(), rot))
+            }
+            _ => None,
+        },
+        MutKind::DropAggregation => match node.op {
+            Op::AllReduce { ranks } if ranks >= 2 => Some((Op::Identity, vec![ins[0]])),
+            _ => None,
+        },
+        MutKind::GatherToReduceScatter => match node.op {
+            Op::AllGather { dim, ranks } if ranks >= 2 => {
+                Some((Op::ReduceScatter { dim, ranks, index: 0 }, ins.to_vec()))
+            }
+            _ => None,
+        },
+        MutKind::ScatterIndexPerturb => match node.op {
+            Op::ReduceScatter { dim, ranks, index } if ranks >= 2 => {
+                Some((Op::ReduceScatter { dim, ranks, index: (index + 1) % ranks }, ins.to_vec()))
+            }
+            _ => None,
+        },
+        MutKind::SliceShift => match &node.op {
+            Op::Slice { dim, start, end } => {
+                let (s, e) = (start.as_const()?, end.as_const()?);
+                let size = g.shape(node.inputs[0])[*dim];
+                let delta = if e < size {
+                    1
+                } else if s > 0 {
+                    -1
+                } else {
+                    return None; // full-extent slice: nowhere to shift
+                };
+                Some((
+                    Op::Slice { dim: *dim, start: (s + delta).into(), end: (e + delta).into() },
+                    ins.to_vec(),
+                ))
+            }
+            _ => None,
+        },
+        MutKind::SliceDimSwap => match &node.op {
+            Op::Slice { dim, start, end } => {
+                let (s, e) = (start.as_const()?, end.as_const()?);
+                let shape = g.shape(node.inputs[0]);
+                let d2 = (0..shape.len()).find(|&d| d != *dim && shape[d] >= e && e > s)?;
+                Some((
+                    Op::Slice { dim: d2, start: start.clone(), end: end.clone() },
+                    ins.to_vec(),
+                ))
+            }
+            _ => None,
+        },
+        MutKind::ScalePerturb => match node.op {
+            Op::Scale { c } if c.get() != 0.0 => {
+                Some((Op::Scale { c: FBits::new(c.get() * 2.0) }, ins.to_vec()))
+            }
+            _ => None,
+        },
+        MutKind::ScaleDrop => match node.op {
+            Op::Scale { c } if c.get() != 1.0 => Some((Op::Identity, ins.to_vec())),
+            _ => None,
+        },
+        MutKind::MatMulSwap => match node.op {
+            Op::MatMul if ins[0] != ins[1] => Some((Op::MatMul, vec![ins[1], ins[0]])),
+            _ => None,
+        },
+        MutKind::WrongUnary => {
+            let repl = match node.op.tag() {
+                OpTag::Gelu => Op::Relu,
+                OpTag::Relu => Op::Tanh,
+                OpTag::Tanh => Op::Silu,
+                OpTag::Silu => Op::Sigmoid,
+                OpTag::Sigmoid => Op::Gelu,
+                _ => return None,
+            };
+            Some((repl, ins.to_vec()))
+        }
+        MutKind::DupShardInput => match node.op.tag() {
+            OpTag::AllGather | OpTag::AllReduce | OpTag::Concat | OpTag::SumN
+                if ins.len() >= 2 && ins[0] != ins[1] =>
+            {
+                let first = g.shape(node.inputs[0]);
+                if node.inputs.iter().any(|&t| g.shape(t) != first) {
+                    return None; // keep the output shape unchanged
+                }
+                let mut dup = ins.to_vec();
+                dup[1] = dup[0];
+                Some((node.op.clone(), dup))
+            }
+            _ => None,
+        },
+        MutKind::SoftmaxDimSwap => match node.op {
+            Op::Softmax { dim } => {
+                let rank = g.shape(node.inputs[0]).len();
+                if rank < 2 {
+                    return None;
+                }
+                Some((Op::Softmax { dim: (dim + 1) % rank }, ins.to_vec()))
+            }
+            _ => None,
+        },
+    }
+}
+
+/// Enumerate every applicable (node, operator) site, in deterministic
+/// topological × operator order.
+pub fn applicable_sites(g: &Graph) -> Vec<Site> {
+    let mut out = Vec::new();
+    for nid in g.topo_order() {
+        let node = g.node(nid);
+        for &kind in &MUT_KINDS {
+            if mutate_node(g, node, kind, &node.inputs).is_some() {
+                out.push(Site { node: nid, kind });
+            }
+        }
+    }
+    out
+}
+
+/// Rebuild `g` with `edit` applied to every node. Shapes are re-inferred;
+/// an edit that breaks shape inference fails the whole rebuild.
+///
+/// Tensors are recreated in original id order — inputs *interleaved* with
+/// node outputs, exactly as the model builders declare them (weights are
+/// registered lazily per block). This keeps every `TensorId` stable, which
+/// the oracle depends on: it reuses the clean graph's input environments
+/// and its `TensorId`-keyed relation `R_i` against the mutant.
+pub fn rebuild_with(
+    g: &Graph,
+    edit: impl Fn(NodeId, &Node, &[TensorId]) -> (Op, Vec<TensorId>),
+) -> Result<Graph> {
+    let mut out = Graph::new(g.name.clone());
+    let mut remap: Vec<TensorId> = vec![0; g.num_tensors()];
+    for tid in 0..g.num_tensors() as TensorId {
+        let t = g.tensor(tid);
+        match t.producer {
+            None => {
+                remap[tid as usize] = out.input_typed(&t.name, t.shape.clone(), t.dtype);
+            }
+            Some(nid) => {
+                let node = g.node(nid);
+                debug_assert_eq!(node.output, tid, "one output tensor per node");
+                let mapped: Vec<TensorId> =
+                    node.inputs.iter().map(|&x| remap[x as usize]).collect();
+                let (op, ins) = edit(nid, node, &mapped);
+                remap[tid as usize] = out.add(&node.name, op, ins)?;
+            }
+        }
+    }
+    for &o in &g.outputs {
+        out.mark_output(remap[o as usize]);
+    }
+    out.validate()?;
+    Ok(out)
+}
+
+/// Apply one mutation site; `Err` means the mutant is stillborn (the
+/// rewritten graph no longer type-checks) or the site is inapplicable.
+pub fn apply_mutation(g: &Graph, site: Site) -> Result<(Graph, Mutation)> {
+    let target = g.node(site.node);
+    mutate_node(g, target, site.kind, &target.inputs).ok_or_else(|| {
+        anyhow!("mutation {} not applicable to '{}'", site.kind.name(), target.name)
+    })?;
+    let mutated = rebuild_with(g, |nid, node, mapped| {
+        if nid == site.node {
+            if let Some(repl) = mutate_node(g, node, site.kind, mapped) {
+                return repl;
+            }
+        }
+        (node.op.clone(), mapped.to_vec())
+    })?;
+    let mutation = Mutation {
+        kind: site.kind,
+        node_name: target.name.clone(),
+        block: parse_block(&target.name),
+    };
+    Ok((mutated, mutation))
+}
+
+/// Locate a mutation site by node name (counterexample replay / shrinking).
+pub fn apply_mutation_by_name(
+    g: &Graph,
+    kind: MutKind,
+    node_name: &str,
+) -> Result<(Graph, Mutation)> {
+    let nid = g
+        .topo_order()
+        .find(|&n| g.node(n).name == node_name)
+        .ok_or_else(|| anyhow!("mutation site '{node_name}' not found"))?;
+    apply_mutation(g, Site { node: nid, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::genmodel::{build_pair, Block, Flavor, ModelSpec, NormKind, UnaryKind};
+
+    fn sp_spec() -> ModelSpec {
+        ModelSpec {
+            seed: 3,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Sp,
+            blocks: vec![
+                Block::Linear,
+                Block::Unary(UnaryKind::Gelu),
+                Block::Norm(NormKind::Softmax),
+            ],
+        }
+    }
+
+    #[test]
+    fn parse_block_follows_naming_contract() {
+        assert_eq!(parse_block("b0_mm_r1"), Some(0));
+        assert_eq!(parse_block("b12_act"), Some(12));
+        assert_eq!(parse_block("x_r0"), None);
+        assert_eq!(parse_block("b_act"), None);
+        assert_eq!(parse_block("b3act"), None);
+    }
+
+    #[test]
+    fn sites_are_found_and_deterministic() {
+        let (_gs, gd, _ri) = build_pair(&sp_spec()).unwrap();
+        let a = applicable_sites(&gd);
+        let b = applicable_sites(&gd);
+        assert_eq!(a, b);
+        assert!(
+            a.iter().any(|s| s.kind == MutKind::WrongUnary),
+            "gelu site expected in {a:?}"
+        );
+        assert!(a.iter().any(|s| s.kind == MutKind::GatherReorder), "epilogue gather site");
+    }
+
+    #[test]
+    fn wrong_unary_mutant_differs_and_rebuilds() {
+        let (_gs, gd, _ri) = build_pair(&sp_spec()).unwrap();
+        let site = applicable_sites(&gd)
+            .into_iter()
+            .find(|s| s.kind == MutKind::WrongUnary)
+            .unwrap();
+        let (gdm, m) = apply_mutation(&gd, site).unwrap();
+        assert_eq!(m.kind, MutKind::WrongUnary);
+        assert!(m.node_name.contains("_act"), "{}", m.node_name);
+        assert_eq!(m.block, Some(1));
+        gdm.validate().unwrap();
+        assert_eq!(gdm.num_nodes(), gd.num_nodes());
+        // same inputs, different outputs
+        let inputs = crate::expr::eval::random_inputs(&gd, 11);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&gdm, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(!a[o].allclose(&b[o], 1e-4, 1e-5), "mutant must change numerics");
+    }
+
+    #[test]
+    fn gather_to_reduce_scatter_changes_output_shape_or_dies() {
+        let (_gs, gd, _ri) = build_pair(&sp_spec()).unwrap();
+        let site = applicable_sites(&gd)
+            .into_iter()
+            .find(|s| s.kind == MutKind::GatherToReduceScatter)
+            .unwrap();
+        match apply_mutation(&gd, site) {
+            Ok((gdm, _)) => {
+                assert_ne!(gdm.shape(gdm.outputs[0]), gd.shape(gd.outputs[0]));
+            }
+            Err(_) => {} // stillborn is acceptable
+        }
+    }
+
+    #[test]
+    fn rebuild_preserves_interleaved_tensor_ids() {
+        // two Linear blocks: the second weight input is declared AFTER the
+        // first block's matmul outputs, so input/node tensor ids interleave.
+        // An identity rebuild must keep every id, name and shape stable —
+        // the oracle reuses gd-keyed inputs and R_i on rebuilt mutants.
+        let spec = ModelSpec {
+            seed: 8,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Sp,
+            blocks: vec![Block::Linear, Block::Linear],
+        };
+        let (_gs, gd, _ri) = build_pair(&spec).unwrap();
+        let rebuilt = rebuild_with(&gd, |_n, node, ins| (node.op.clone(), ins.to_vec())).unwrap();
+        assert_eq!(rebuilt.inputs, gd.inputs, "input ids must not renumber");
+        assert_eq!(rebuilt.outputs, gd.outputs);
+        assert_eq!(rebuilt.num_tensors(), gd.num_tensors());
+        for t in 0..gd.num_tensors() as u32 {
+            assert_eq!(rebuilt.tensor(t).name, gd.tensor(t).name, "tensor {t}");
+            assert_eq!(rebuilt.tensor(t).shape, gd.tensor(t).shape, "tensor {t}");
+        }
+        // and the clean-input environment of gd evaluates the rebuild
+        let inputs = crate::expr::eval::random_inputs(&gd, 23);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&rebuilt, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(a[o].allclose(&b[o], 0.0, 0.0), "identity rebuild must be exact");
+    }
+
+    #[test]
+    fn mutation_json_roundtrip() {
+        let m = Mutation {
+            kind: MutKind::SliceShift,
+            node_name: "b2_cos_r1".into(),
+            block: Some(2),
+        };
+        let back = Mutation::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+}

@@ -1,0 +1,898 @@
+//! Differential soundness oracle.
+//!
+//! For every fuzz case the oracle builds a clean `(G_s, G_d, R_i)` pair and
+//! checks, against both the static checker and concrete execution:
+//!
+//! 1. **No false alarms.** The clean pair must pass `check_refinement`,
+//!    and the inferred `R_o` must replay numerically (`verify_numeric`).
+//! 2. **No false proofs.** Any accepted graph's inferred relation must
+//!    replay numerically on several random input draws — a proof whose own
+//!    certificate fails is unsound.
+//! 3. **Kills are localized.** A mutant whose concrete outputs differ from
+//!    the clean implementation must be rejected, and the failing operator
+//!    named by the `RefinementError` must lie in the mutated block or
+//!    downstream of it (bug effects only flow forward).
+//!
+//! Any violation is shrunk to a minimal spec (suffix/prefix block removal
+//! while the disagreement persists) and dumped as a replayable JSON
+//! counterexample. Runs are fully deterministic per `--seed`: the same
+//! seed reproduces byte-identical counterexample files.
+
+use super::genmodel::{build_pair, sample_spec, ModelSpec};
+use super::mutate::{
+    applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, Mutation, Site,
+};
+use crate::infer::{check_refinement, verify_numeric, InferConfig};
+use crate::ir::Graph;
+use crate::relation::Relation;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Number of fuzz cases (models) to generate.
+    pub seeds: u64,
+    /// Base seed; case `i` derives its own seed from `(base, i)`.
+    pub base_seed: u64,
+    /// Parallel degree; 0 picks per-case from {2, 2, 2, 4}.
+    pub ranks: usize,
+    /// Max mutants attempted per model.
+    pub mutants_per_model: usize,
+    /// Directory for counterexample JSON files.
+    pub out_dir: PathBuf,
+    /// Write counterexample files (tests disable this).
+    pub write_files: bool,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        FuzzConfig {
+            seeds: 50,
+            base_seed: 0,
+            ranks: 0,
+            mutants_per_model: 4,
+            out_dir: PathBuf::from("fuzz_counterexamples"),
+            write_files: true,
+        }
+    }
+}
+
+/// splitmix-style per-case seed derivation (decorrelates nearby cases).
+fn case_seed(base: u64, i: u64) -> u64 {
+    crate::util::rng::mix64(base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// What happened to one clean pair.
+enum CleanOutcome {
+    Verified,
+    /// `check_refinement` rejected a correct-by-construction pair.
+    FalseAlarm(String),
+    /// Accepted, but the inferred relation fails numeric replay.
+    CertFailure(String),
+}
+
+/// What happened to one mutant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MutOutcome {
+    /// Rejected; failing operator inside the mutated region.
+    KilledInRegion,
+    /// Rejected, but the reported locus precedes the mutated block.
+    LocusMiss(String),
+    /// Numerics changed but a certificate-valid relation still exists
+    /// (semantically benign rearrangement — e.g. provably re-sliceable
+    /// shard reorderings).
+    BenignAccepted,
+    /// No observable numeric change; accepted.
+    SilentAccepted,
+    /// No observable numeric change on sampled inputs; still rejected
+    /// (possible checker incompleteness, not a soundness violation).
+    SilentRejected,
+    /// Numerics changed, checker accepted, and the certificate fails:
+    /// a genuine soundness hole.
+    FalseProof(String),
+}
+
+impl MutOutcome {
+    fn tag(&self) -> &'static str {
+        match self {
+            MutOutcome::KilledInRegion => "killed_in_region",
+            MutOutcome::LocusMiss(_) => "locus_miss",
+            MutOutcome::BenignAccepted => "benign_accepted",
+            MutOutcome::SilentAccepted => "silent_accepted",
+            MutOutcome::SilentRejected => "silent_rejected",
+            MutOutcome::FalseProof(_) => "false_proof",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct OpStat {
+    pub attempted: u64,
+    pub stillborn: u64,
+    pub eval_failure: u64,
+    pub killed_in_region: u64,
+    pub locus_miss: u64,
+    pub benign_accepted: u64,
+    pub silent_accepted: u64,
+    pub silent_rejected: u64,
+    pub false_proof: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CexSummary {
+    pub file: String,
+    pub kind: String,
+    pub case_seed: u64,
+    pub detail: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FuzzReport {
+    pub models: u64,
+    pub clean_verified: u64,
+    pub false_alarms: u64,
+    pub clean_cert_failures: u64,
+    /// Per-mutation-operator outcome counts — the single source of truth
+    /// for every mutant-level aggregate (see the derived methods below).
+    pub per_op: BTreeMap<String, OpStat>,
+    pub counterexamples: Vec<CexSummary>,
+}
+
+impl FuzzReport {
+    fn sum(&self, f: impl Fn(&OpStat) -> u64) -> u64 {
+        self.per_op.values().map(f).sum()
+    }
+    pub fn mutants_attempted(&self) -> u64 {
+        self.sum(|s| s.attempted)
+    }
+    pub fn stillborn(&self) -> u64 {
+        self.sum(|s| s.stillborn)
+    }
+    /// A *validated* mutant failed concrete evaluation — a harness bug,
+    /// never an expected outcome (unlike type-check stillborns).
+    pub fn eval_failures(&self) -> u64 {
+        self.sum(|s| s.eval_failure)
+    }
+    pub fn killed_in_region(&self) -> u64 {
+        self.sum(|s| s.killed_in_region)
+    }
+    pub fn locus_misses(&self) -> u64 {
+        self.sum(|s| s.locus_miss)
+    }
+    pub fn benign_accepted(&self) -> u64 {
+        self.sum(|s| s.benign_accepted)
+    }
+    pub fn silent_accepted(&self) -> u64 {
+        self.sum(|s| s.silent_accepted)
+    }
+    pub fn silent_rejected(&self) -> u64 {
+        self.sum(|s| s.silent_rejected)
+    }
+    pub fn false_proofs(&self) -> u64 {
+        self.sum(|s| s.false_proof)
+    }
+
+    /// Zero false proofs, zero false alarms, zero mislocalizations, and no
+    /// oracle-evaluation failures (a rebuilt, validated mutant that cannot
+    /// be executed means the harness itself is broken).
+    pub fn sound(&self) -> bool {
+        self.false_alarms == 0
+            && self.clean_cert_failures == 0
+            && self.false_proofs() == 0
+            && self.locus_misses() == 0
+            && self.eval_failures() == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let per_op: BTreeMap<String, Json> = self
+            .per_op
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("attempted", Json::num(s.attempted as f64)),
+                        ("stillborn", Json::num(s.stillborn as f64)),
+                        ("eval_failure", Json::num(s.eval_failure as f64)),
+                        ("killed_in_region", Json::num(s.killed_in_region as f64)),
+                        ("locus_miss", Json::num(s.locus_miss as f64)),
+                        ("benign_accepted", Json::num(s.benign_accepted as f64)),
+                        ("silent_accepted", Json::num(s.silent_accepted as f64)),
+                        ("silent_rejected", Json::num(s.silent_rejected as f64)),
+                        ("false_proof", Json::num(s.false_proof as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("models", Json::num(self.models as f64)),
+            ("clean_verified", Json::num(self.clean_verified as f64)),
+            ("false_alarms", Json::num(self.false_alarms as f64)),
+            ("clean_cert_failures", Json::num(self.clean_cert_failures as f64)),
+            ("mutants_attempted", Json::num(self.mutants_attempted() as f64)),
+            ("stillborn", Json::num(self.stillborn() as f64)),
+            ("eval_failures", Json::num(self.eval_failures() as f64)),
+            ("killed_in_region", Json::num(self.killed_in_region() as f64)),
+            ("locus_misses", Json::num(self.locus_misses() as f64)),
+            ("benign_accepted", Json::num(self.benign_accepted() as f64)),
+            ("silent_accepted", Json::num(self.silent_accepted() as f64)),
+            ("silent_rejected", Json::num(self.silent_rejected() as f64)),
+            ("false_proofs", Json::num(self.false_proofs() as f64)),
+            ("sound", Json::Bool(self.sound())),
+            ("per_operator", Json::Obj(per_op)),
+            (
+                "counterexamples",
+                Json::Arr(
+                    self.counterexamples
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("file", Json::str(c.file.clone())),
+                                ("kind", Json::str(c.kind.clone())),
+                                ("case_seed", Json::str(format!("{:#018x}", c.case_seed))),
+                                ("detail", Json::str(c.detail.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable summary + per-operator detection table.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "fuzz: {} models | clean verified {} | false alarms {} | cert failures {}\n",
+            self.models, self.clean_verified, self.false_alarms, self.clean_cert_failures
+        ));
+        s.push_str(&format!(
+            "mutants: {} attempted | {} stillborn | {} eval-failures | {} killed-in-region | \
+             {} locus-miss | {} benign | {} silent-accepted | {} silent-rejected | \
+             {} FALSE PROOFS\n",
+            self.mutants_attempted(),
+            self.stillborn(),
+            self.eval_failures(),
+            self.killed_in_region(),
+            self.locus_misses(),
+            self.benign_accepted(),
+            self.silent_accepted(),
+            self.silent_rejected(),
+            self.false_proofs()
+        ));
+        s.push_str(&format!(
+            "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6}\n",
+            "operator", "tried", "still", "evalx", "killed", "miss", "benign", "sil-ok",
+            "sil-rej", "false"
+        ));
+        for (name, st) in &self.per_op {
+            s.push_str(&format!(
+                "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6}\n",
+                name,
+                st.attempted,
+                st.stillborn,
+                st.eval_failure,
+                st.killed_in_region,
+                st.locus_miss,
+                st.benign_accepted,
+                st.silent_accepted,
+                st.silent_rejected,
+                st.false_proof
+            ));
+        }
+        if !self.counterexamples.is_empty() {
+            s.push_str("counterexamples:\n");
+            for c in &self.counterexamples {
+                s.push_str(&format!("  [{}] {} — {}\n", c.kind, c.file, c.detail));
+            }
+        }
+        s
+    }
+}
+
+/// Do the two graphs (same interface) produce different outputs on any of
+/// `n_draws` random input draws? Shape mismatches count as different.
+/// `Err` only on evaluation failure (treated as stillborn upstream).
+fn outputs_differ(a: &Graph, b: &Graph, seed: u64, n_draws: u64) -> Result<bool> {
+    use crate::expr::eval::{eval_graph, random_inputs};
+    for d in 0..n_draws {
+        let inputs = random_inputs(a, seed.wrapping_add(d));
+        let va = eval_graph(a, &inputs)?;
+        let vb = eval_graph(b, &inputs)?;
+        for (&oa, &ob) in a.outputs.iter().zip(&b.outputs) {
+            let (ta, tb) = (&va[oa as usize], &vb[ob as usize]);
+            if ta.shape() != tb.shape() || !ta.allclose(tb, 1e-4, 1e-5) {
+                return Ok(true);
+            }
+        }
+    }
+    Ok(false)
+}
+
+/// Replay an inferred relation's numeric certificate on several draws.
+fn certificate_ok(gs: &Graph, gd: &Graph, ri: &Relation, ro: &Relation, seed: u64) -> bool {
+    (0..3u64).all(|d| verify_numeric(gs, gd, ri, ro, seed.wrapping_add(d)).is_ok())
+}
+
+fn clean_outcome(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    seed: u64,
+    icfg: &InferConfig,
+) -> CleanOutcome {
+    match check_refinement(gs, gd, ri, icfg) {
+        Err(e) => CleanOutcome::FalseAlarm(format!("{e}")),
+        Ok(out) => {
+            if certificate_ok(gs, gd, ri, &out.relation, seed) {
+                CleanOutcome::Verified
+            } else {
+                CleanOutcome::CertFailure(
+                    "inferred relation fails numeric replay on a clean pair".into(),
+                )
+            }
+        }
+    }
+}
+
+/// Is the failure locus inside the mutated region? The region is the
+/// mutated block plus everything downstream; the SP epilogue gather
+/// (block index == blocks.len()) is attributed to the last real block,
+/// since its breakage surfaces at the output filter of the final operator.
+fn locus_in_region(err_node_name: &str, mutated_block: Option<usize>, n_blocks: usize) -> bool {
+    let Some(mb) = mutated_block else { return false };
+    let region_start = mb.min(n_blocks.saturating_sub(1));
+    match parse_block(err_node_name) {
+        Some(b) => b >= region_start,
+        None => false,
+    }
+}
+
+/// Classify one already-built mutant.
+#[allow(clippy::too_many_arguments)]
+fn classify_mutant(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    gd_mut: &Graph,
+    mutation: &Mutation,
+    n_blocks: usize,
+    seed: u64,
+    icfg: &InferConfig,
+) -> Result<MutOutcome> {
+    let differs = outputs_differ(gd, gd_mut, seed ^ 0xD1FF, 3)
+        .context("evaluating mutant numerically")?;
+    match check_refinement(gs, gd_mut, ri, icfg) {
+        Ok(out) => {
+            if certificate_ok(gs, gd_mut, ri, &out.relation, seed ^ 0xCE57) {
+                Ok(if differs { MutOutcome::BenignAccepted } else { MutOutcome::SilentAccepted })
+            } else {
+                Ok(MutOutcome::FalseProof(format!(
+                    "mutant '{}' ({}) accepted but its certificate fails numeric replay",
+                    mutation.node_name,
+                    mutation.kind.name()
+                )))
+            }
+        }
+        Err(e) => {
+            if !differs {
+                return Ok(MutOutcome::SilentRejected);
+            }
+            if locus_in_region(&e.node_name, mutation.block, n_blocks) {
+                Ok(MutOutcome::KilledInRegion)
+            } else {
+                Ok(MutOutcome::LocusMiss(format!(
+                    "mutated '{}' (block {:?}) but failure localized at '{}' ({})",
+                    mutation.node_name, mutation.block, e.node_name, e.op
+                )))
+            }
+        }
+    }
+}
+
+/// The badness classes the minimizer preserves while shrinking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BadKind {
+    FalseAlarm,
+    CertFailure,
+    FalseProof,
+    LocusMiss,
+    /// A rebuilt, validated mutant failed concrete evaluation.
+    EvalFailure,
+}
+
+impl BadKind {
+    fn name(self) -> &'static str {
+        match self {
+            BadKind::FalseAlarm => "false_alarm",
+            BadKind::CertFailure => "clean_cert_failure",
+            BadKind::FalseProof => "false_proof",
+            BadKind::LocusMiss => "locus_miss",
+            BadKind::EvalFailure => "eval_failure",
+        }
+    }
+}
+
+/// Re-evaluate a (spec, mutation?) candidate and report which badness it
+/// exhibits, if any. Mutations are re-located by node name.
+fn evaluate_candidate(
+    spec: &ModelSpec,
+    mutation: Option<&Mutation>,
+    seed: u64,
+    icfg: &InferConfig,
+) -> Option<BadKind> {
+    let (gs, gd, ri) = build_pair(spec).ok()?;
+    match mutation {
+        None => match clean_outcome(&gs, &gd, &ri, seed, icfg) {
+            CleanOutcome::FalseAlarm(_) => Some(BadKind::FalseAlarm),
+            CleanOutcome::CertFailure(_) => Some(BadKind::CertFailure),
+            CleanOutcome::Verified => None,
+        },
+        Some(m) => {
+            // the clean pair must still verify for the mutant verdict to
+            // mean anything
+            if !matches!(clean_outcome(&gs, &gd, &ri, seed, icfg), CleanOutcome::Verified) {
+                return None;
+            }
+            let (gd_mut, m2) = apply_mutation_by_name(&gd, m.kind, &m.node_name).ok()?;
+            match classify_mutant(&gs, &gd, &ri, &gd_mut, &m2, spec.blocks.len(), seed, icfg) {
+                Err(_) => Some(BadKind::EvalFailure),
+                Ok(MutOutcome::FalseProof(_)) => Some(BadKind::FalseProof),
+                Ok(MutOutcome::LocusMiss(_)) => Some(BadKind::LocusMiss),
+                Ok(_) => None,
+            }
+        }
+    }
+}
+
+/// Fresh badness description for a (possibly shrunk) candidate, so the
+/// dumped counterexample's `detail` names nodes that exist in its own
+/// minimized spec/graphs. `None` when the class cannot be re-derived.
+fn describe_candidate(
+    spec: &ModelSpec,
+    mutation: Option<&Mutation>,
+    kind: BadKind,
+    seed: u64,
+    icfg: &InferConfig,
+) -> Option<String> {
+    let (gs, gd, ri) = build_pair(spec).ok()?;
+    match mutation {
+        None => match clean_outcome(&gs, &gd, &ri, seed, icfg) {
+            CleanOutcome::FalseAlarm(d) if kind == BadKind::FalseAlarm => Some(d),
+            CleanOutcome::CertFailure(d) if kind == BadKind::CertFailure => Some(d),
+            _ => None,
+        },
+        Some(m) => {
+            let (gd_mut, m2) = apply_mutation_by_name(&gd, m.kind, &m.node_name).ok()?;
+            match classify_mutant(&gs, &gd, &ri, &gd_mut, &m2, spec.blocks.len(), seed, icfg) {
+                Err(e) if kind == BadKind::EvalFailure => Some(format!("{e:#}")),
+                Ok(MutOutcome::FalseProof(d)) if kind == BadKind::FalseProof => Some(d),
+                Ok(MutOutcome::LocusMiss(d)) if kind == BadKind::LocusMiss => Some(d),
+                _ => None,
+            }
+        }
+    }
+}
+
+/// Greedy structural shrink: drop suffix blocks, then prefix blocks, while
+/// the same badness class persists and the mutation site (if any) survives.
+fn minimize(
+    spec: &ModelSpec,
+    mutation: Option<&Mutation>,
+    bad: BadKind,
+    seed: u64,
+    icfg: &InferConfig,
+) -> (ModelSpec, Option<Mutation>) {
+    let mut best = spec.clone();
+    let mut best_mut = mutation.cloned();
+    // 1. truncate blocks after the mutated block (or any suffix for clean
+    //    badness)
+    loop {
+        if best.blocks.len() <= 1 {
+            break;
+        }
+        let last = best.blocks.len() - 1;
+        if let Some(m) = &best_mut {
+            match m.block {
+                // epilogue mutations (block == blocks.len()) are remapped
+                // after truncation; a mutation in the block being removed
+                // (or with no parseable block) stops the shrink
+                Some(b) if b == last => break,
+                None => break,
+                _ => {}
+            }
+        }
+        let mut cand = best.clone();
+        cand.blocks.truncate(last);
+        let cand_mut = best_mut.as_ref().map(|m| remap_epilogue(m, &best, &cand));
+        if evaluate_candidate(&cand, cand_mut.as_ref(), seed, icfg) == Some(bad) {
+            best = cand;
+            best_mut = cand_mut;
+        } else {
+            break;
+        }
+    }
+    // 2. drop leading blocks, renumbering the mutation site
+    loop {
+        if best.blocks.len() <= 1 {
+            break;
+        }
+        if let Some(m) = &best_mut {
+            if m.block == Some(0) {
+                break;
+            }
+        }
+        let mut cand = best.clone();
+        cand.blocks.remove(0);
+        let cand_mut = best_mut.as_ref().map(|m| shift_block(m, &best, &cand));
+        if evaluate_candidate(&cand, cand_mut.as_ref(), seed, icfg) == Some(bad) {
+            best = cand;
+            best_mut = cand_mut;
+        } else {
+            break;
+        }
+    }
+    (best, best_mut)
+}
+
+/// Keep an epilogue-gather mutation pointing at the (moved) epilogue when
+/// blocks are truncated; other mutations are unchanged.
+fn remap_epilogue(m: &Mutation, old: &ModelSpec, new: &ModelSpec) -> Mutation {
+    if m.block == Some(old.blocks.len()) {
+        let name = format!("b{}_out", new.blocks.len());
+        Mutation { kind: m.kind, node_name: name, block: Some(new.blocks.len()) }
+    } else {
+        m.clone()
+    }
+}
+
+/// Renumber a mutation after removing the leading block.
+fn shift_block(m: &Mutation, old: &ModelSpec, new: &ModelSpec) -> Mutation {
+    let Some(b) = m.block else { return m.clone() };
+    if b == old.blocks.len() {
+        // epilogue gather
+        let name = format!("b{}_out", new.blocks.len());
+        return Mutation { kind: m.kind, node_name: name, block: Some(new.blocks.len()) };
+    }
+    let nb = b - 1;
+    let rest = m.node_name.split_once('_').map(|(_, r)| r).unwrap_or("");
+    let name = format!("b{nb}_{rest}");
+    Mutation { kind: m.kind, node_name: name, block: Some(nb) }
+}
+
+/// A fully-described counterexample, ready to serialize.
+struct Counterexample {
+    kind: BadKind,
+    case_seed: u64,
+    mut_index: usize,
+    detail: String,
+    spec: ModelSpec,
+    mutation: Option<Mutation>,
+}
+
+impl Counterexample {
+    fn file_name(&self) -> String {
+        format!(
+            "ce_{:016x}_{:02}_{}.json",
+            self.case_seed,
+            self.mut_index,
+            self.kind.name()
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let graphs = build_pair(&self.spec).ok().map(|(gs, gd, ri)| {
+            let gd_mut = self.mutation.as_ref().and_then(|m| {
+                apply_mutation_by_name(&gd, m.kind, &m.node_name)
+                    .ok()
+                    .map(|(g, _)| crate::ir::json_io::to_json(&g))
+            });
+            (
+                crate::ir::json_io::to_json(&gs),
+                crate::ir::json_io::to_json(&gd),
+                ri.to_json(&gs, &gd),
+                gd_mut.unwrap_or(Json::Null),
+            )
+        });
+        let nulls = (Json::Null, Json::Null, Json::Null, Json::Null);
+        let (gs_j, gd_j, ri_j, gd_mut_j) = graphs.unwrap_or(nulls);
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("case_seed", Json::str(format!("{:#018x}", self.case_seed))),
+            ("detail", Json::str(self.detail.clone())),
+            ("minimized", Json::Bool(true)),
+            ("spec", self.spec.to_json()),
+            (
+                "mutation",
+                self.mutation.as_ref().map(Mutation::to_json).unwrap_or(Json::Null),
+            ),
+            ("gs", gs_j),
+            ("gd", gd_j),
+            ("ri", ri_j),
+            ("gd_mut", gd_mut_j),
+        ])
+    }
+}
+
+/// Run the fuzzer. Deterministic per config; returns the aggregate report.
+pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport> {
+    let icfg = InferConfig::default();
+    let mut report = FuzzReport::default();
+    if cfg.write_files {
+        std::fs::create_dir_all(&cfg.out_dir)
+            .with_context(|| format!("creating {}", cfg.out_dir.display()))?;
+    }
+
+    for i in 0..cfg.seeds {
+        let cs = case_seed(cfg.base_seed, i);
+        let mut rng = Rng::new(cs);
+        let ranks =
+            if cfg.ranks == 0 { [2usize, 2, 2, 4][rng.below(4) as usize] } else { cfg.ranks };
+        let spec = sample_spec(&mut rng, ranks, cs);
+        let (gs, gd, ri) =
+            build_pair(&spec).with_context(|| format!("building case {i} (seed {cs:#x})"))?;
+        report.models += 1;
+
+        match clean_outcome(&gs, &gd, &ri, cs, &icfg) {
+            CleanOutcome::Verified => report.clean_verified += 1,
+            CleanOutcome::FalseAlarm(detail) => {
+                report.false_alarms += 1;
+                record_cex(
+                    &mut report,
+                    cfg,
+                    Counterexample {
+                        kind: BadKind::FalseAlarm,
+                        case_seed: cs,
+                        mut_index: 0,
+                        detail,
+                        spec: spec.clone(),
+                        mutation: None,
+                    },
+                    cs,
+                    &icfg,
+                )?;
+                continue; // mutant verdicts are meaningless on a bad clean pair
+            }
+            CleanOutcome::CertFailure(detail) => {
+                report.clean_cert_failures += 1;
+                record_cex(
+                    &mut report,
+                    cfg,
+                    Counterexample {
+                        kind: BadKind::CertFailure,
+                        case_seed: cs,
+                        mut_index: 0,
+                        detail,
+                        spec: spec.clone(),
+                        mutation: None,
+                    },
+                    cs,
+                    &icfg,
+                )?;
+                continue;
+            }
+        }
+
+        // pick up to `mutants_per_model` distinct sites (partial
+        // Fisher-Yates on indices, deterministic in `rng`)
+        let sites = applicable_sites(&gd);
+        let take = cfg.mutants_per_model.min(sites.len());
+        let mut idx: Vec<usize> = (0..sites.len()).collect();
+        for k in 0..take {
+            let j = k + rng.below((idx.len() - k) as u64) as usize;
+            idx.swap(k, j);
+        }
+
+        for (mi, &si) in idx[..take].iter().enumerate() {
+            let site: Site = sites[si];
+            bump(&mut report.per_op, site.kind, |s| s.attempted += 1);
+            let (gd_mut, mutation) = match apply_mutation(&gd, site) {
+                Ok(x) => x,
+                Err(_) => {
+                    bump(&mut report.per_op, site.kind, |s| s.stillborn += 1);
+                    continue;
+                }
+            };
+            let outcome = match classify_mutant(
+                &gs,
+                &gd,
+                &ri,
+                &gd_mut,
+                &mutation,
+                spec.blocks.len(),
+                cs,
+                &icfg,
+            ) {
+                Ok(o) => o,
+                Err(err) => {
+                    // a validated mutant that cannot be evaluated is a
+                    // harness bug: tracked separately from type-check
+                    // stillborns, counted against soundness, and dumped as
+                    // a debuggable counterexample like any other violation
+                    bump(&mut report.per_op, site.kind, |s| s.eval_failure += 1);
+                    record_cex(
+                        &mut report,
+                        cfg,
+                        Counterexample {
+                            kind: BadKind::EvalFailure,
+                            case_seed: cs,
+                            mut_index: mi + 1,
+                            detail: format!("{err:#}"),
+                            spec: spec.clone(),
+                            mutation: Some(mutation.clone()),
+                        },
+                        cs,
+                        &icfg,
+                    )?;
+                    continue;
+                }
+            };
+            match &outcome {
+                MutOutcome::KilledInRegion => {
+                    bump(&mut report.per_op, site.kind, |s| s.killed_in_region += 1);
+                }
+                MutOutcome::BenignAccepted => {
+                    bump(&mut report.per_op, site.kind, |s| s.benign_accepted += 1);
+                }
+                MutOutcome::SilentAccepted => {
+                    bump(&mut report.per_op, site.kind, |s| s.silent_accepted += 1);
+                }
+                MutOutcome::SilentRejected => {
+                    bump(&mut report.per_op, site.kind, |s| s.silent_rejected += 1);
+                }
+                MutOutcome::LocusMiss(detail) => {
+                    bump(&mut report.per_op, site.kind, |s| s.locus_miss += 1);
+                    record_cex(
+                        &mut report,
+                        cfg,
+                        Counterexample {
+                            kind: BadKind::LocusMiss,
+                            case_seed: cs,
+                            mut_index: mi + 1,
+                            detail: detail.clone(),
+                            spec: spec.clone(),
+                            mutation: Some(mutation.clone()),
+                        },
+                        cs,
+                        &icfg,
+                    )?;
+                }
+                MutOutcome::FalseProof(detail) => {
+                    bump(&mut report.per_op, site.kind, |s| s.false_proof += 1);
+                    record_cex(
+                        &mut report,
+                        cfg,
+                        Counterexample {
+                            kind: BadKind::FalseProof,
+                            case_seed: cs,
+                            mut_index: mi + 1,
+                            detail: detail.clone(),
+                            spec: spec.clone(),
+                            mutation: Some(mutation.clone()),
+                        },
+                        cs,
+                        &icfg,
+                    )?;
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Per-operator stat update helper (keeps `run_fuzz` borrow-friendly).
+fn bump(
+    map: &mut BTreeMap<String, OpStat>,
+    kind: super::mutate::MutKind,
+    f: impl FnOnce(&mut OpStat),
+) {
+    f(map.entry(kind.name().to_string()).or_default())
+}
+
+/// Minimize, serialize and register one counterexample.
+fn record_cex(
+    report: &mut FuzzReport,
+    cfg: &FuzzConfig,
+    cex: Counterexample,
+    seed: u64,
+    icfg: &InferConfig,
+) -> Result<()> {
+    let (spec, mutation) = minimize(&cex.spec, cex.mutation.as_ref(), cex.kind, seed, icfg);
+    // re-derive the description against the minimized spec so it names
+    // nodes that exist in the shipped graphs
+    let detail = describe_candidate(&spec, mutation.as_ref(), cex.kind, seed, icfg)
+        .unwrap_or_else(|| cex.detail.clone());
+    let min = Counterexample { spec, mutation, detail, ..cex };
+    let file = min.file_name();
+    if cfg.write_files {
+        let path = cfg.out_dir.join(&file);
+        std::fs::write(&path, min.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    report.counterexamples.push(CexSummary {
+        file,
+        kind: min.kind.name().to_string(),
+        case_seed: min.case_seed,
+        detail: min.detail.clone(),
+    });
+    Ok(())
+}
+
+/// Replay a counterexample JSON (as written by `record_cex`): rebuild the
+/// pair from its spec, re-apply the mutation, and report the verdict.
+pub fn replay_counterexample(j: &Json) -> Result<String> {
+    let spec = ModelSpec::from_json(j.get("spec"))?;
+    let mutation = match j.get("mutation") {
+        Json::Null => None,
+        m => Some(Mutation::from_json(m)?),
+    };
+    let icfg = InferConfig::default();
+    let seed_str = j
+        .get("case_seed")
+        .as_str()
+        .ok_or_else(|| anyhow!("counterexample missing 'case_seed'"))?;
+    let seed = u64::from_str_radix(seed_str.trim_start_matches("0x"), 16)
+        .map_err(|_| anyhow!("bad case_seed '{seed_str}'"))?;
+    let (gs, gd, ri) = build_pair(&spec)?;
+    match &mutation {
+        None => match clean_outcome(&gs, &gd, &ri, seed, &icfg) {
+            CleanOutcome::Verified => {
+                Ok("clean pair verifies (disagreement not reproduced)".into())
+            }
+            CleanOutcome::FalseAlarm(d) => Ok(format!("reproduced false alarm: {d}")),
+            CleanOutcome::CertFailure(d) => Ok(format!("reproduced certificate failure: {d}")),
+        },
+        Some(m) => {
+            let (gd_mut, m2) = apply_mutation_by_name(&gd, m.kind, &m.node_name)?;
+            let out =
+                classify_mutant(&gs, &gd, &ri, &gd_mut, &m2, spec.blocks.len(), seed, &icfg)?;
+            Ok(format!("mutant outcome: {}", out.tag()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::genmodel::{Block, Flavor, NormKind, UnaryKind};
+    use crate::fuzz::mutate::MutKind;
+
+    #[test]
+    fn case_seed_is_stable_and_spread() {
+        assert_eq!(case_seed(0, 1), case_seed(0, 1));
+        assert_ne!(case_seed(0, 1), case_seed(0, 2));
+        assert_ne!(case_seed(0, 1), case_seed(1, 1));
+    }
+
+    #[test]
+    fn locus_region_rules() {
+        assert!(locus_in_region("b2_mm", Some(1), 4));
+        assert!(locus_in_region("b1_mm", Some(1), 4));
+        assert!(!locus_in_region("b0_mm", Some(1), 4));
+        // epilogue mutation (block == n_blocks) accepts the last real block
+        assert!(locus_in_region("b3_act", Some(4), 4));
+        assert!(!locus_in_region("x_r0", Some(1), 4));
+    }
+
+    #[test]
+    fn known_mutant_is_killed_in_region() {
+        let spec = crate::fuzz::genmodel::ModelSpec {
+            seed: 2,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Sp,
+            blocks: vec![Block::Unary(UnaryKind::Tanh), Block::Norm(NormKind::Softmax)],
+        };
+        let (gs, gd, ri) = build_pair(&spec).unwrap();
+        let icfg = InferConfig::default();
+        assert!(matches!(clean_outcome(&gs, &gd, &ri, 2, &icfg), CleanOutcome::Verified));
+        let (gd_mut, m) =
+            apply_mutation_by_name(&gd, MutKind::SoftmaxDimSwap, "b1_sm_r0").unwrap();
+        let out = classify_mutant(&gs, &gd, &ri, &gd_mut, &m, 2, 2, &icfg).unwrap();
+        assert_eq!(out, MutOutcome::KilledInRegion, "{out:?}");
+    }
+}

@@ -24,6 +24,8 @@
 //!   comparisons.
 //! - [`strategies`] / [`models`] / [`bugs`] — workload generation: TP/SP/EP/
 //!   VP/grad-accum graph builders and the six §6.2 bug injectors.
+//! - [`fuzz`] — bug-injection mutation fuzzer: random model + strategy
+//!   composition, ~12 mutation operators, differential soundness oracle.
 //! - [`hlo`] — HLO-text frontend (XLA/JAX capture path).
 //! - [`coordinator`] — multi-threaded verification service + reports.
 //! - [`runtime`] — PJRT execution of AOT artifacts for cross-validation.
@@ -35,6 +37,7 @@ pub mod bugs;
 pub mod coordinator;
 pub mod egraph;
 pub mod expr;
+pub mod fuzz;
 pub mod hlo;
 pub mod infer;
 pub mod ir;

@@ -4,13 +4,14 @@
 //!   verify  --gs <graph.json> --gd <graph.json> --ri <relation.json>
 //!   suite   [--ranks N] [--threads N]      run the Table-2 workload suite
 //!   bugs                                    run the §6.2 case studies
+//!   fuzz    [--seeds N] [--seed S] ...      bug-injection mutation fuzzer
 //!   lemmas                                  list the lemma library
 //!   hlo     --file <module.hlo.txt>         parse an HLO-text module
 //!
 //! (Hand-rolled argument parsing — no clap in the offline crate set.)
 
 use anyhow::{anyhow, bail, Context, Result};
-use graphguard::{bugs, coordinator, hlo, infer, ir, lemmas, models, relation};
+use graphguard::{bugs, coordinator, fuzz, hlo, infer, ir, lemmas, models, relation};
 
 fn main() {
     if let Err(e) = run() {
@@ -29,14 +30,17 @@ fn run() -> Result<()> {
         Some("verify") => cmd_verify(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
         Some("bugs") => cmd_bugs(),
+        Some("fuzz") => cmd_fuzz(&args[1..]),
         Some("lemmas") => cmd_lemmas(),
         Some("hlo") => cmd_hlo(&args[1..]),
         _ => {
             eprintln!(
-                "usage: graphguard <verify|suite|bugs|lemmas|hlo> [options]\n\
+                "usage: graphguard <verify|suite|bugs|fuzz|lemmas|hlo> [options]\n\
                  \n  verify --gs g_s.json --gd g_d.json --ri relation.json\
                  \n  suite  [--ranks N] [--threads N]\
                  \n  bugs\
+                 \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
+                 \n         [--replay ce.json]\
                  \n  lemmas\
                  \n  hlo --file module.hlo.txt"
             );
@@ -114,6 +118,50 @@ fn cmd_bugs() -> Result<()> {
             println!("    {line}");
         }
         println!();
+    }
+    Ok(())
+}
+
+fn cmd_fuzz(args: &[String]) -> Result<()> {
+    if let Some(path) = arg_value(args, "--replay") {
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let j = graphguard::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        println!("{}", fuzz::replay_counterexample(&j)?);
+        return Ok(());
+    }
+    let d = fuzz::FuzzConfig::default();
+    let cfg = fuzz::FuzzConfig {
+        seeds: arg_value(args, "--seeds").map(|v| v.parse()).transpose()?.unwrap_or(d.seeds),
+        base_seed: arg_value(args, "--seed")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(d.base_seed),
+        ranks: arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(d.ranks),
+        mutants_per_model: arg_value(args, "--mutants")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(d.mutants_per_model),
+        out_dir: arg_value(args, "--out").map(Into::into).unwrap_or(d.out_dir),
+        write_files: true,
+    };
+    let report = fuzz::run_fuzz(&cfg)?;
+    print!("{}", report.table());
+    let json_path = "FUZZ_REPORT.json";
+    std::fs::write(json_path, report.to_json().to_string_pretty())
+        .with_context(|| format!("writing {json_path}"))?;
+    println!("report written to {json_path}");
+    if !report.sound() {
+        bail!(
+            "fuzz found {} counterexample(s): {} false alarms, {} cert failures, \
+             {} false proofs, {} localization misses, {} oracle eval failures (see {})",
+            report.counterexamples.len(),
+            report.false_alarms,
+            report.clean_cert_failures,
+            report.false_proofs(),
+            report.locus_misses(),
+            report.eval_failures(),
+            cfg.out_dir.display()
+        );
     }
     Ok(())
 }

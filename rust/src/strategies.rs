@@ -174,10 +174,22 @@ pub fn row_shard_weight(
     shard_input(gd, ri, name, shape, shape.len() - 2, ranks)
 }
 
-/// Partition `[0, total)` into `ranks` equal chunks; (start, end) per rank.
+/// Partition `[0, total)` into `ranks` balanced chunks; (start, end) per
+/// rank. For uneven divisors the first `total % ranks` chunks are one
+/// element longer, so the partition always covers `[0, total)` exactly,
+/// without gaps or overlap (degenerate cases: `ranks > total` yields empty
+/// trailing chunks; `total == 0` yields all-empty chunks).
 pub fn chunks(total: i64, ranks: usize) -> Vec<(i64, i64)> {
-    let c = total / ranks as i64;
-    (0..ranks as i64).map(|r| (r * c, (r + 1) * c)).collect()
+    let r = ranks.max(1) as i64;
+    let base = total / r;
+    let rem = total % r;
+    (0..r)
+        .map(|i| {
+            let lo = i * base + i.min(rem);
+            let hi = lo + base + i64::from(i < rem);
+            (lo, hi)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -220,5 +232,21 @@ mod tests {
     fn chunk_partition() {
         assert_eq!(chunks(8, 2), vec![(0, 4), (4, 8)]);
         assert_eq!(chunks(12, 3), vec![(0, 4), (4, 8), (8, 12)]);
+    }
+
+    #[test]
+    fn chunk_partition_uneven_and_degenerate() {
+        // uneven divisor: remainder spread over the leading chunks,
+        // still covering [0, total)
+        assert_eq!(chunks(7, 2), vec![(0, 4), (4, 7)]);
+        assert_eq!(chunks(5, 3), vec![(0, 2), (2, 4), (4, 5)]);
+        // single rank
+        assert_eq!(chunks(9, 1), vec![(0, 9)]);
+        // more ranks than elements: trailing chunks empty, no overlap
+        assert_eq!(chunks(2, 4), vec![(0, 1), (1, 2), (2, 2), (2, 2)]);
+        // empty range
+        assert_eq!(chunks(0, 3), vec![(0, 0), (0, 0), (0, 0)]);
+        // ranks == 0 is clamped to one chunk instead of dividing by zero
+        assert_eq!(chunks(4, 0), vec![(0, 4)]);
     }
 }

@@ -7,6 +7,15 @@ pub struct Rng {
     state: u64,
 }
 
+/// The splitmix64 finalizer behind [`Rng`], shared so other
+/// seed-derivation code (e.g. the fuzzer's per-case seeds) stays in sync
+/// with the generator's mixing function.
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
@@ -14,10 +23,7 @@ impl Rng {
 
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+        mix64(self.state)
     }
 
     /// Uniform in [0, 1).

@@ -1,0 +1,101 @@
+//! Golden regression tests for the six §6.2 case studies.
+//!
+//! Unlike the unit tests inside `bugs.rs` (which iterate `all_cases`),
+//! these pin an explicit golden table: every buggy variant must be
+//! rejected with its documented localization substring, every fixed
+//! variant must verify (and, except bug 5, carry a replaying numeric
+//! certificate). A drift in either direction — a case silently passing,
+//! or the localization moving — fails loudly with the case name.
+
+use graphguard::bugs::{self, BugCase};
+use graphguard::infer::{check_refinement, verify_numeric, InferConfig};
+
+/// (bug id, case name, expected localization substring for the buggy
+/// variant; None = refinement passes and the bug is found by relation
+/// inspection).
+const GOLDEN: [(usize, &str, Option<&str>); 6] = [
+    (1, "rope_sp_offset", Some("roped")),
+    (2, "aux_loss_tp_scaling", Some("aux")),
+    (3, "pad_slice_mismatch", Some("act")),
+    (4, "sp_sharded_expert_weights", Some("h1")),
+    (5, "missing_layernorm_aggregation", None),
+    (6, "grad_accum_scaling", Some("loss")),
+];
+
+fn case_by_name(cases: Vec<BugCase>, name: &str) -> BugCase {
+    cases
+        .into_iter()
+        .find(|c| c.name == name)
+        .unwrap_or_else(|| panic!("case '{name}' missing from bugs::all_cases"))
+}
+
+#[test]
+fn golden_table_matches_all_cases_metadata() {
+    let cases = bugs::all_cases(true);
+    assert_eq!(cases.len(), GOLDEN.len(), "case count drifted");
+    for (id, name, locus) in GOLDEN {
+        let case = cases.iter().find(|c| c.id == id).unwrap_or_else(|| panic!("bug {id} missing"));
+        assert_eq!(case.name, name, "bug {id} renamed");
+        assert_eq!(case.expected_locus, locus, "bug {id} localization drifted");
+    }
+}
+
+#[test]
+fn each_buggy_variant_rejected_with_golden_locus() {
+    for (id, name, locus) in GOLDEN {
+        let case = case_by_name(bugs::all_cases(true), name);
+        let (detected, report) = case.run();
+        match locus {
+            Some(substr) => {
+                assert!(detected, "bug {id} ({name}) not detected; report:\n{report}");
+                assert!(
+                    report.contains(substr),
+                    "bug {id} ({name}): expected locus '{substr}' not in report:\n{report}"
+                );
+            }
+            None => {
+                // bug 5: refinement holds; the implementation trace must
+                // expose the unaggregated rank-0 gradient
+                assert!(!detected, "bug {id} ({name}) unexpectedly rejected:\n{report}");
+                assert!(
+                    report.contains("g_ln_r0") && !report.contains("g_ln_ar"),
+                    "bug {id} ({name}) trace must show the unaggregated gradient:\n{report}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn each_fixed_variant_verifies_with_certificate() {
+    for (id, name, _locus) in GOLDEN {
+        let case = case_by_name(bugs::all_cases(false), name);
+        let out = check_refinement(&case.gs, &case.gd, &case.ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("fixed bug {id} ({name}) failed refinement: {e}"));
+        if id != 5 {
+            // bug 5's user-assumed replication of partial gradients is not
+            // numerically faithful; every other fixed case must replay
+            verify_numeric(&case.gs, &case.gd, &case.ri, &out.relation, id as u64 * 977)
+                .unwrap_or_else(|e| panic!("fixed bug {id} ({name}) certificate: {e:#}"));
+        }
+    }
+}
+
+#[test]
+fn taxonomy_bridge_names_real_fuzz_operators() {
+    use graphguard::fuzz::MutKind;
+    for (id, _name, locus) in GOLDEN {
+        match bugs::fuzz_operator_for(id) {
+            Some(op) => {
+                assert!(
+                    MutKind::parse(op).is_some(),
+                    "bug {id} maps to unknown mutation operator '{op}'"
+                );
+            }
+            None => assert!(
+                locus.is_none(),
+                "only the refinement-invisible case (bug 5) may lack an operator"
+            ),
+        }
+    }
+}

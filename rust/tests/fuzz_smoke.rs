@@ -1,0 +1,179 @@
+//! Deterministic-seed smoke tests for the bug-injection fuzzer.
+//!
+//! The CI job runs the full `graphguard fuzz --seeds 50 --seed 0`; these
+//! tests keep a smaller deterministic slice in `cargo test` so a checker
+//! or generator regression is caught before the fuzz job.
+
+use graphguard::fuzz::{
+    self, applicable_sites, apply_mutation_by_name, build_pair, run_fuzz, sample_spec, Block,
+    Flavor, FuzzConfig, ModelSpec, MutKind, NormKind, UnaryKind,
+};
+use graphguard::infer::{check_refinement, InferConfig};
+use graphguard::util::rng::Rng;
+
+fn smoke_cfg(seeds: u64, base_seed: u64) -> FuzzConfig {
+    FuzzConfig {
+        seeds,
+        base_seed,
+        ranks: 0,
+        mutants_per_model: 3,
+        write_files: false,
+        ..FuzzConfig::default()
+    }
+}
+
+/// The core acceptance property on a deterministic slice: zero false
+/// alarms, zero false proofs, zero localization misses.
+#[test]
+fn fuzz_slice_is_sound() {
+    let report = run_fuzz(&smoke_cfg(12, 0)).unwrap();
+    assert_eq!(report.models, 12);
+    assert!(
+        report.sound(),
+        "fuzz found counterexamples:\n{}",
+        report.table()
+    );
+    assert_eq!(report.clean_verified, report.models, "all clean pairs verify");
+    assert!(report.mutants_attempted() > 0, "sites must exist");
+    assert!(
+        report.killed_in_region() > 0,
+        "at least some behavioral mutants must be killed:\n{}",
+        report.table()
+    );
+}
+
+/// Same seed → byte-identical report JSON (the reproducibility contract).
+#[test]
+fn fuzz_is_deterministic_per_seed() {
+    let a = run_fuzz(&smoke_cfg(6, 42)).unwrap();
+    let b = run_fuzz(&smoke_cfg(6, 42)).unwrap();
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "same seed must reproduce the identical report"
+    );
+    let c = run_fuzz(&smoke_cfg(6, 43)).unwrap();
+    assert_ne!(
+        a.to_json().to_string_pretty(),
+        c.to_json().to_string_pretty(),
+        "different seeds should explore different cases"
+    );
+}
+
+/// Spec sampling is a pure function of the rng stream.
+#[test]
+fn sampled_specs_are_deterministic() {
+    for seed in [0u64, 7, 99] {
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        let a = sample_spec(&mut r1, 2, seed);
+        let b = sample_spec(&mut r2, 2, seed);
+        assert_eq!(a, b);
+    }
+}
+
+/// A hand-picked behavioral mutant on every flavor is rejected with an
+/// in-region localization (gs node of the same block, or downstream).
+#[test]
+fn known_mutants_killed_across_flavors() {
+    let cases = [
+        (
+            Flavor::Sp,
+            vec![Block::Linear, Block::Unary(UnaryKind::Gelu)],
+            MutKind::WrongUnary,
+            "b1_act_r0",
+            1usize,
+        ),
+        (
+            Flavor::Tp,
+            vec![Block::Mlp(UnaryKind::Silu), Block::Norm(NormKind::Softmax)],
+            MutKind::DropAggregation,
+            "b0_ar",
+            0usize,
+        ),
+        (
+            Flavor::Dp,
+            vec![Block::Attention, Block::Unary(UnaryKind::Tanh)],
+            MutKind::ScaleDrop,
+            "b0_ss",
+            0usize,
+        ),
+    ];
+    for (flavor, blocks, kind, node, min_block) in cases {
+        let spec = ModelSpec { seed: 5, ranks: 2, seq: 4, hidden: 4, flavor, blocks };
+        let (gs, gd, ri) = build_pair(&spec).unwrap();
+        check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("clean {flavor:?} pair must refine: {e}"));
+        let (gd_mut, _m) = apply_mutation_by_name(&gd, kind, node)
+            .unwrap_or_else(|e| panic!("{flavor:?}: {e:#}"));
+        let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+            .err()
+            .unwrap_or_else(|| panic!("{flavor:?} mutant {kind:?}@{node} must be rejected"));
+        let block = fuzz::parse_block(&err.node_name)
+            .unwrap_or_else(|| panic!("{flavor:?}: locus '{}' not block-named", err.node_name));
+        assert!(
+            block >= min_block,
+            "{flavor:?}: failure at '{}' (block {block}) precedes mutated block {min_block}",
+            err.node_name
+        );
+    }
+}
+
+/// The SP rope construction reproduces bug 1 under the slice_shift
+/// operator: the mutant's wrong table offset is rejected at the rope.
+#[test]
+fn rope_slice_shift_reproduces_bug1() {
+    let spec = ModelSpec {
+        seed: 9,
+        ranks: 2,
+        seq: 4,
+        hidden: 4,
+        flavor: Flavor::Sp,
+        blocks: vec![Block::Rope, Block::Unary(UnaryKind::Relu)],
+    };
+    let (gs, gd, ri) = build_pair(&spec).unwrap();
+    check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        .unwrap_or_else(|e| panic!("clean rope pair must refine: {e}"));
+    let (gd_mut, _) = apply_mutation_by_name(&gd, MutKind::SliceShift, "b0_cos_r1").unwrap();
+    let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+        .err()
+        .expect("shifted rope table offset must be rejected");
+    assert!(
+        err.node_name.contains("b0_rope") || format!("{err}").contains("b0_rope"),
+        "expected rope localization, got '{}'",
+        err.node_name
+    );
+}
+
+/// Counterexample JSON replays: fabricate one via the public replay entry
+/// point from a spec + mutation pair.
+#[test]
+fn replay_roundtrip_reports_outcome() {
+    let spec = ModelSpec {
+        seed: 4,
+        ranks: 2,
+        seq: 4,
+        hidden: 4,
+        flavor: Flavor::Sp,
+        blocks: vec![Block::Linear, Block::Norm(NormKind::Softmax)],
+    };
+    let (_gs, gd, _ri) = build_pair(&spec).unwrap();
+    let sites = applicable_sites(&gd);
+    assert!(!sites.is_empty());
+    let j = graphguard::util::json::Json::obj(vec![
+        ("case_seed", graphguard::util::json::Json::str("0x0000000000000004")),
+        ("spec", spec.to_json()),
+        (
+            "mutation",
+            graphguard::util::json::Json::obj(vec![
+                ("kind", graphguard::util::json::Json::str("softmax_dim_swap")),
+                ("node", graphguard::util::json::Json::str("b1_sm_r0")),
+            ]),
+        ),
+    ]);
+    let verdict = fuzz::replay_counterexample(&j).unwrap();
+    assert!(
+        verdict.contains("killed_in_region"),
+        "expected the replayed mutant to be killed in-region, got: {verdict}"
+    );
+}

@@ -124,36 +124,87 @@ fn property_corrupted_matmul_detected() {
     });
 }
 
-/// HLO frontend on the real JAX artifact (skipped when artifacts are not
-/// built). The regression_seq module parses and its graph matches the
-/// capture-side input count.
+/// HLO frontend end-to-end. When the JAX artifact exists (after
+/// `make artifacts`) the real regression module is parsed; otherwise an
+/// embedded module exercises the same parse → IR → eval path so this test
+/// always asserts something instead of silently skipping (ISSUE-2 triage:
+/// the artifact-less skip used to pass vacuously on fresh checkouts).
 #[test]
-fn hlo_frontend_parses_jax_artifact() {
+fn hlo_frontend_parses_jax_artifact_or_fallback() {
     let path = "artifacts/regression_seq.hlo.txt";
-    let Ok(text) = std::fs::read_to_string(path) else {
-        eprintln!("skipping: run `make artifacts` to enable this test");
+    if let Ok(text) = std::fs::read_to_string(path) {
+        let g = graphguard::hlo::parse_hlo_text(&text, "regression_seq").unwrap();
+        assert_eq!(g.inputs.len(), 4, "x, y, w, b");
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(g.shape(g.outputs[0]), &[] as &[i64], "scalar loss");
         return;
-    };
-    let g = graphguard::hlo::parse_hlo_text(&text, "regression_seq").unwrap();
-    assert_eq!(g.inputs.len(), 4, "x, y, w, b");
+    }
+    // fallback: embedded module covering dot/transpose/slice/concat/add
+    let text = r#"HloModule fallback
+
+ENTRY main {
+  x = f32[4,6]{1,0} parameter(0)
+  w = f32[6,4]{1,0} parameter(1)
+  mm = f32[4,4]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  t = f32[4,4]{1,0} transpose(mm), dimensions={1,0}
+  s = f32[2,4]{1,0} slice(t), slice={[0:2], [0:4]}
+  c = f32[4,4]{1,0} concatenate(s, s), dimensions={0}
+  a = f32[4,4]{1,0} add(c, mm)
+  ROOT out = (f32[4,4]{1,0}) tuple(a)
+}
+"#;
+    let g = graphguard::hlo::parse_hlo_text(text, "fallback").unwrap();
+    assert_eq!(g.inputs.len(), 2);
     assert_eq!(g.outputs.len(), 1);
-    assert_eq!(g.shape(g.outputs[0]), &[] as &[i64], "scalar loss");
+    assert_eq!(g.shape(g.outputs[0]), &[4, 4]);
+    // the parsed graph must evaluate (shapes and ops are all concrete)
+    let inputs = graphguard::expr::eval::random_inputs(&g, 3);
+    let vals = graphguard::expr::eval::eval_graph(&g, &inputs).unwrap();
+    assert_eq!(vals[g.outputs[0] as usize].shape(), &[4, 4]);
 }
 
-/// Captured JAX graphs verify (skipped without artifacts) — the same check
-/// `examples/cross_validate.rs` performs, minus the PJRT execution.
+/// Captured graphs (JSON interchange) verify — the same check
+/// `examples/cross_validate.rs` performs, minus the PJRT execution. With
+/// artifacts present the real Llama capture is used; otherwise a
+/// fuzz-generated SP pair is round-tripped through the same JSON text
+/// format, so the "captured JSON verifies" contract is always asserted
+/// (ISSUE-2 triage: previously a silent skip without artifacts).
 #[test]
-fn captured_jax_graphs_refine() {
+fn captured_graphs_refine_from_json() {
     let load = |p: &str| -> Option<Json> {
         std::fs::read_to_string(p).ok().and_then(|t| Json::parse(&t).ok())
     };
-    let (Some(gs_j), Some(gd_j), Some(ri_j)) = (
+    let (gs_j, gd_j, ri_j, check_numeric) = match (
         load("artifacts/graphs/llama_seq.json"),
         load("artifacts/graphs/llama_tp2.json"),
         load("artifacts/graphs/llama_ri.json"),
-    ) else {
-        eprintln!("skipping: run `make artifacts` to enable this test");
-        return;
+    ) {
+        // real captures carry token-id inputs whose replication relation is
+        // asserted elsewhere; numeric replay is only run on the fallback
+        (Some(gs_j), Some(gd_j), Some(ri_j)) => (gs_j, gd_j, ri_j, false),
+        _ => {
+            // artifact-less fallback: capture a generated pair to JSON text
+            use graphguard::fuzz::{build_pair, Block, Flavor, ModelSpec, NormKind, UnaryKind};
+            let spec = ModelSpec {
+                seed: 21,
+                ranks: 2,
+                seq: 4,
+                hidden: 4,
+                flavor: Flavor::Sp,
+                blocks: vec![
+                    Block::Linear,
+                    Block::Unary(UnaryKind::Gelu),
+                    Block::Norm(NormKind::RmsNorm),
+                ],
+            };
+            let (gs, gd, ri) = build_pair(&spec).unwrap();
+            (
+                Json::parse(&json_io::to_json(&gs).to_string()).unwrap(),
+                Json::parse(&json_io::to_json(&gd).to_string()).unwrap(),
+                Json::parse(&ri.to_json(&gs, &gd).to_string()).unwrap(),
+                true,
+            )
+        }
     };
     let gs = json_io::from_json(&gs_j).unwrap();
     let gd = json_io::from_json(&gd_j).unwrap();
@@ -161,6 +212,9 @@ fn captured_jax_graphs_refine() {
     let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
         .unwrap_or_else(|e| panic!("{e}"));
     assert!(out.relation.is_complete_for(&gs.outputs));
+    if check_numeric {
+        verify_numeric(&gs, &gd, &ri, &out.relation, 55).unwrap();
+    }
 }
 
 /// Coordinator invariants under random batch sizes/thread counts.

@@ -1,0 +1,169 @@
+//! Property tests for the distribution-strategy primitives.
+//!
+//! `strategies::chunks` must partition `[0, total)` exactly (no gap, no
+//! overlap) for uneven divisors, `ranks == 1`, and degenerate sizes; the
+//! shard/replicate helpers must record input relations that numerically
+//! round-trip: evaluating the recorded `R_i` expression on the shards
+//! reconstructs the original tensor.
+
+use graphguard::expr::eval::{eval_expr, Env};
+use graphguard::expr::TensorRef;
+use graphguard::ir::Graph;
+use graphguard::strategies::{chunks, replicate_input, shard_input, RiBuilder};
+use graphguard::util::ndarray::NdArray;
+use graphguard::util::proptest::Prop;
+use graphguard::util::rng::Rng;
+
+#[test]
+fn chunks_partition_covers_range_without_overlap() {
+    Prop::new("chunks partitions [0,total)").cases(128).check(|rng| {
+        let total = rng.below(97) as i64; // includes 0 and non-divisible sizes
+        let ranks = 1 + rng.below(8) as usize; // includes ranks == 1, ranks > total
+        let parts = chunks(total, ranks);
+        if parts.len() != ranks {
+            return Err(format!("expected {ranks} chunks, got {}", parts.len()));
+        }
+        let mut cursor = 0i64;
+        for (i, &(lo, hi)) in parts.iter().enumerate() {
+            if lo != cursor {
+                return Err(format!(
+                    "chunk {i} starts at {lo}, expected {cursor} (total={total}, ranks={ranks})"
+                ));
+            }
+            if hi < lo {
+                return Err(format!("chunk {i} is negative: ({lo}, {hi})"));
+            }
+            cursor = hi;
+        }
+        if cursor != total {
+            return Err(format!(
+                "partition covers [0,{cursor}) instead of [0,{total}) at ranks={ranks}"
+            ));
+        }
+        // balanced: chunk lengths differ by at most one
+        let lens: Vec<i64> = parts.iter().map(|&(lo, hi)| hi - lo).collect();
+        let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        if max - min > 1 {
+            return Err(format!("unbalanced chunks {lens:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Build a random full tensor, shard it along `dim`, and check that the
+/// recorded `R_i` expression (a concat over the per-rank inputs) rebuilds
+/// the full tensor exactly.
+#[test]
+fn shard_input_roundtrips_numerically() {
+    Prop::new("shard_input concat round-trip").cases(48).check(|rng| {
+        let ranks = [1usize, 2, 2, 4][rng.below(4) as usize];
+        let rows = ranks as i64 * (1 + rng.below(3) as i64);
+        let cols = 1 + rng.below(5) as i64;
+        let dim = rng.below(2) as usize;
+        let mut shape = vec![rows, cols];
+        // shard dim must be divisible; force it
+        if dim == 1 {
+            shape[1] = ranks as i64 * (1 + rng.below(3) as i64);
+        }
+
+        let mut gs = Graph::new("gs");
+        gs.input("X", shape.clone());
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        let ids = shard_input(&mut gd, &mut ri, "X", &shape, dim, ranks)
+            .map_err(|e| format!("{e:#}"))?;
+        if ids.len() != ranks {
+            return Err(format!("expected {ranks} shards, got {}", ids.len()));
+        }
+        let rel = ri.finish(&gs, &gd).map_err(|e| format!("{e:#}"))?;
+        let x = gs.tensor_by_name("X").unwrap();
+        let cands = rel.get(x);
+        if cands.len() != 1 {
+            return Err(format!("expected one mapping, got {}", cands.len()));
+        }
+
+        // numeric round-trip: full tensor -> shards -> R_i expr -> full
+        let mut r2 = Rng::new(rng.next_u64());
+        let n: i64 = shape.iter().product();
+        let full = NdArray::new(shape.clone(), r2.buf(n as usize, 1.0)).unwrap();
+        let mut env: Env = Env::default();
+        for (rk, &(lo, hi)) in chunks(shape[dim], ranks).iter().enumerate() {
+            let shard = full.slice(dim, lo, hi).map_err(|e| format!("{e:#}"))?;
+            env.insert(TensorRef::d(ids[rk]), shard);
+        }
+        let rebuilt = eval_expr(&cands[0].expr, &env).map_err(|e| format!("{e:#}"))?;
+        if rebuilt.shape() != full.shape() || !rebuilt.allclose(&full, 0.0, 0.0) {
+            return Err("R_i expression does not reconstruct the full tensor".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replicate_input_roundtrips_identically() {
+    Prop::new("replicate_input identity round-trip").cases(32).check(|rng| {
+        let rows = 1 + rng.below(6) as i64;
+        let cols = 1 + rng.below(6) as i64;
+        let shape = vec![rows, cols];
+        let mut gs = Graph::new("gs");
+        gs.input("W", shape.clone());
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        let id = replicate_input(&mut gd, &mut ri, "W", &shape);
+        let rel = ri.finish(&gs, &gd).map_err(|e| format!("{e:#}"))?;
+        let w = gs.tensor_by_name("W").unwrap();
+        let cands = rel.get(w);
+        if cands.len() != 1 || cands[0].cost != 0 {
+            return Err(format!("replication must record one leaf mapping, got {cands:?}"));
+        }
+        let mut r2 = Rng::new(rng.next_u64());
+        let full =
+            NdArray::new(shape.clone(), r2.buf((rows * cols) as usize, 1.0)).unwrap();
+        let mut env: Env = Env::default();
+        env.insert(TensorRef::d(id), full.clone());
+        let rebuilt = eval_expr(&cands[0].expr, &env).map_err(|e| format!("{e:#}"))?;
+        if !rebuilt.allclose(&full, 0.0, 0.0) {
+            return Err("identity mapping must be exact".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uneven_shard_degrees_are_rejected() {
+    Prop::new("indivisible shard rejected").cases(32).check(|rng| {
+        let ranks = 2 + rng.below(4) as usize; // 2..=5
+        let offset = 1 + rng.below(ranks as u64 - 1) as i64;
+        let extent = ranks as i64 * (1 + rng.below(3) as i64) + offset;
+        if extent % ranks as i64 == 0 {
+            return Err(format!("test setup bug: {extent} divisible by {ranks}"));
+        }
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        if shard_input(&mut gd, &mut ri, "X", &[extent, 4], 0, ranks).is_ok() {
+            return Err(format!("sharding {extent} rows over {ranks} ranks must fail"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_rank_shard_is_an_identity_concat() {
+    // ranks == 1 degenerates to a one-part concat that still validates and
+    // round-trips
+    let mut gs = Graph::new("gs");
+    gs.input("X", vec![3, 5]);
+    let mut gd = Graph::new("gd");
+    let mut ri = RiBuilder::new();
+    let ids = shard_input(&mut gd, &mut ri, "X", &[3, 5], 0, 1).unwrap();
+    assert_eq!(ids.len(), 1);
+    assert_eq!(gd.shape(ids[0]), &[3, 5]);
+    let rel = ri.finish(&gs, &gd).unwrap();
+    let x = gs.tensor_by_name("X").unwrap();
+    let mut rng = Rng::new(17);
+    let full = NdArray::new(vec![3, 5], rng.buf(15, 1.0)).unwrap();
+    let mut env: Env = Env::default();
+    env.insert(TensorRef::d(ids[0]), full.clone());
+    let rebuilt = eval_expr(&rel.get(x)[0].expr, &env).unwrap();
+    assert!(rebuilt.allclose(&full, 0.0, 0.0));
+}
