@@ -100,8 +100,7 @@ impl EGraph {
         if let Some(&id) = self.memo.get(&node) {
             return self.uf.find(id);
         }
-        let id = self.new_class(node, shape);
-        id
+        self.new_class(node, shape)
     }
 
     /// Add an op node over existing classes; computes the shape analysis.

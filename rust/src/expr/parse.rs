@@ -275,6 +275,8 @@ fn build(name: &str, args: Vec<Expr>, attrs: &BTreeMap<String, Value>) -> Result
             ranks: need("ranks")?.usize_()?,
             index: need("index")?.usize_()?,
         },
+        "send" => Op::Send { chan: need("chan")?.usize_()? },
+        "recv" => Op::Recv { chan: need("chan")?.usize_()? },
         custom => Op::Custom { name: custom.to_string() },
     };
     Ok(Expr::Op(op, args))

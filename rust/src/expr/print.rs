@@ -103,6 +103,7 @@ pub fn attr_string(op: &Op) -> String {
             kv("ranks", ranks.to_string());
             kv("index", index.to_string());
         }
+        Op::Send { chan } | Op::Recv { chan } => kv("chan", chan.to_string()),
         _ => {}
     }
     s

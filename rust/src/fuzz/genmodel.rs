@@ -15,6 +15,15 @@
 //!   the weight (gather on the hidden dim), MLP blocks use the Megatron
 //!   column+row pair with an all-reduce, and `LinearRs` uses the Fig-1
 //!   inner-split with reduce-scatter + all-gather.
+//! - [`Flavor::Pp`]  — two pipeline stages with `ranks` micro-batches:
+//!   the chain is cut in half, each micro-batch crosses the boundary
+//!   through its own send/recv channel
+//!   (`strategies::pipeline_stage_split`), and the outputs are
+//!   re-concatenated. Attention blocks are excluded (they mix rows across
+//!   micro-batches).
+//! - [`Flavor::Fsdp`] — compute replicated 1:1, but every parameter is
+//!   stored 1/R-sharded along its leading dim and all-gathered before use
+//!   (`strategies::fsdp_shard_params`).
 //!
 //! Every construction is covered by lemmas in `crate::lemmas`
 //! (matmul block splits, unary/softmax/rmsnorm over concat, collective
@@ -30,8 +39,8 @@
 use crate::ir::{DType, Graph, Op, TensorId};
 use crate::relation::Relation;
 use crate::strategies::{
-    chunks, col_shard_weight, replicate_input_typed, row_shard_weight, shard_input_typed,
-    RiBuilder,
+    chunks, col_shard_weight, fsdp_from_seq, pipeline_stage_split, replicate_input_typed,
+    row_shard_weight, shard_input_typed, stage_ends, RiBuilder,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -45,6 +54,11 @@ pub enum Flavor {
     Sp,
     /// Tensor parallelism: weights sharded, activations full.
     Tp,
+    /// Pipeline parallelism: 2 stages, `ranks` micro-batches, send/recv
+    /// boundary channels.
+    Pp,
+    /// ZeRO-3/FSDP: parameters 1/R-sharded, all-gathered before use.
+    Fsdp,
 }
 
 impl Flavor {
@@ -53,6 +67,8 @@ impl Flavor {
             Flavor::Dp => "dp",
             Flavor::Sp => "sp",
             Flavor::Tp => "tp",
+            Flavor::Pp => "pp",
+            Flavor::Fsdp => "fsdp",
         }
     }
     pub fn parse(s: &str) -> Option<Flavor> {
@@ -60,6 +76,8 @@ impl Flavor {
             "dp" => Some(Flavor::Dp),
             "sp" => Some(Flavor::Sp),
             "tp" => Some(Flavor::Tp),
+            "pp" => Some(Flavor::Pp),
+            "fsdp" => Some(Flavor::Fsdp),
             _ => None,
         }
     }
@@ -260,6 +278,16 @@ impl ModelSpec {
             self.hidden,
             self.ranks
         );
+        if self.flavor == Flavor::Pp {
+            anyhow::ensure!(
+                self.blocks.len() >= 2,
+                "pp flavor needs at least 2 blocks (one per stage)"
+            );
+            anyhow::ensure!(
+                !self.blocks.contains(&Block::Attention),
+                "pp flavor cannot micro-batch attention (rows mix across micro-batches)"
+            );
+        }
         Ok(())
     }
 }
@@ -278,10 +306,12 @@ const SCALE_CHOICES: [f64; 4] = [0.5, 2.0, 0.25, 1.5];
 pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
     let seq = ranks as i64 * (1 + rng.below(3) as i64); // R, 2R or 3R rows
     let hidden = ranks as i64 * 2 * (1 + rng.below(2) as i64); // even, % ranks == 0
-    let flavor = match rng.below(5) {
+    let flavor = match rng.below(7) {
         0 => Flavor::Dp,
         1 | 2 => Flavor::Sp,
-        _ => Flavor::Tp,
+        3 | 4 => Flavor::Tp,
+        5 => Flavor::Pp,
+        _ => Flavor::Fsdp,
     };
     let n_blocks = 2 + rng.below(4) as usize; // 2..=5
     let mut blocks = Vec::with_capacity(n_blocks);
@@ -303,18 +333,28 @@ pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
             4 => Block::Mlp(UNARY_KINDS[rng.below(UNARY_KINDS.len() as u64) as usize]),
             5 => Block::Norm(if rng.below(2) == 0 { NormKind::Softmax } else { NormKind::RmsNorm }),
             6 => Block::Rope,
-            _ => Block::Attention,
+            _ => {
+                // micro-batching cannot split attention rows — PP swaps it
+                // for the (still weight-bearing) Linear block
+                if flavor == Flavor::Pp {
+                    Block::Linear
+                } else {
+                    Block::Attention
+                }
+            }
         };
         blocks.push(block);
     }
     ModelSpec { seed, ranks, seq, hidden, flavor, blocks }
 }
 
-/// Build the sequential graph `G_s` for a spec.
-fn build_gs(spec: &ModelSpec) -> Graph {
+/// Build the sequential graph `G_s` for a spec; also returns the activation
+/// tensor at the end of every block (the PP flavor cuts at one of these).
+fn build_gs(spec: &ModelSpec) -> (Graph, Vec<TensorId>) {
     let (s, h) = (spec.seq, spec.hidden);
     let mut gs = Graph::new(format!("fuzz_gs_{:016x}", spec.seed));
     let mut cur = gs.input("x", vec![s, h]);
+    let mut block_ends = Vec::with_capacity(spec.blocks.len());
     for (i, block) in spec.blocks.iter().enumerate() {
         match block {
             Block::Unary(k) => {
@@ -360,9 +400,10 @@ fn build_gs(spec: &ModelSpec) -> Graph {
                 cur = gs.matmul(&format!("b{i}_o"), p, v);
             }
         }
+        block_ends.push(cur);
     }
     gs.mark_output(cur);
-    gs
+    (gs, block_ends)
 }
 
 /// Shared RMSNorm epsilon so G_s and G_d attributes match bit-for-bit.
@@ -374,12 +415,50 @@ fn c_eps() -> crate::ir::FBits {
 /// iteration over hash maps.
 pub fn build_pair(spec: &ModelSpec) -> Result<(Graph, Graph, Relation)> {
     spec.validate()?;
-    let gs = build_gs(spec);
+    let (gs, block_ends) = build_gs(spec);
     let (s, h, r) = (spec.seq, spec.hidden, spec.ranks);
+
+    if spec.flavor == Flavor::Pp {
+        // 2 stages, boundary placed by the same helper the model-zoo PP
+        // builders use, `ranks` micro-batches
+        let cut_blk = stage_ends(spec.blocks.len(), 2)[0] - 1;
+        let cut_node = gs
+            .tensor(block_ends[cut_blk])
+            .producer
+            .ok_or_else(|| anyhow!("stage cut fell on a graph input"))?;
+        let (gd, ri) = pipeline_stage_split(
+            &gs,
+            &[cut_node],
+            r,
+            &format!("b{}_out", spec.blocks.len()),
+        )?;
+        gs.validate()?;
+        return Ok((gs, gd, ri));
+    }
+
+    if spec.flavor == Flavor::Fsdp {
+        // params are the w*/g* inputs; x and the rope cos/sin tables are
+        // activations/buffers. Gather nodes are named b{i}_{name}_ag (block
+        // index from the digits in the param name) so the oracle's locus
+        // rules see the owning block.
+        let (gd, ri) = fsdp_from_seq(
+            &gs,
+            r,
+            &|name| name.starts_with('w') || name.starts_with('g'),
+            &|name| {
+                let block: String = name.chars().filter(|c| c.is_ascii_digit()).collect();
+                format!("b{block}_{name}_ag")
+            },
+        )?;
+        gs.validate()?;
+        return Ok((gs, gd, ri));
+    }
+
     let mut gd = Graph::new(format!("fuzz_gd_{}_{:016x}", spec.flavor.name(), spec.seed));
     let mut ri = RiBuilder::new();
 
     match spec.flavor {
+        Flavor::Pp | Flavor::Fsdp => unreachable!("handled above"),
         Flavor::Dp => {
             let mut cur = replicate_input_typed(&mut gd, &mut ri, "x", &[s, h], DType::F32);
             for (i, block) in spec.blocks.iter().enumerate() {
@@ -680,6 +759,84 @@ mod tests {
             crate::ir::json_io::to_json(&gd1).to_string(),
             crate::ir::json_io::to_json(&gd2).to_string()
         );
+    }
+
+    #[test]
+    fn sampled_specs_cover_all_flavors() {
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::BTreeSet::new();
+        for case in 0..64u64 {
+            let spec = sample_spec(&mut rng, 2, case);
+            seen.insert(spec.flavor.name());
+            let (gs, gd, ri) = build_pair(&spec).unwrap_or_else(|e| {
+                panic!("spec {} failed to build: {e:#}", spec.to_json().to_string())
+            });
+            gs.validate().unwrap();
+            gd.validate().unwrap();
+            ri.validate_shapes(&gs, &gd).unwrap();
+        }
+        for f in ["dp", "sp", "tp", "pp", "fsdp"] {
+            assert!(seen.contains(f), "sampler never produced flavor {f}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn pp_clean_pair_refines_and_replays() {
+        let spec = ModelSpec {
+            seed: 11,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Pp,
+            blocks: vec![
+                Block::Linear,
+                Block::Unary(UnaryKind::Gelu),
+                Block::Norm(NormKind::Softmax),
+            ],
+        };
+        let (gs, gd, ri) = build_pair(&spec).unwrap();
+        assert!(
+            gd.nodes().iter().any(|n| matches!(n.op, Op::Send { .. })),
+            "pp graph must contain stage boundaries"
+        );
+        let cfg = crate::infer::InferConfig::default();
+        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+            .unwrap_or_else(|e| panic!("clean PP pair must refine: {e}"));
+        crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 55).unwrap();
+    }
+
+    #[test]
+    fn fsdp_clean_pair_refines_and_replays() {
+        let spec = ModelSpec {
+            seed: 12,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Fsdp,
+            blocks: vec![Block::Linear, Block::Mlp(UnaryKind::Silu)],
+        };
+        let (gs, gd, ri) = build_pair(&spec).unwrap();
+        assert!(
+            gd.nodes().iter().any(|n| matches!(n.op, Op::AllGather { .. })),
+            "fsdp graph must re-gather its params"
+        );
+        let cfg = crate::infer::InferConfig::default();
+        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+            .unwrap_or_else(|e| panic!("clean FSDP pair must refine: {e}"));
+        crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 56).unwrap();
+    }
+
+    #[test]
+    fn pp_spec_with_attention_is_rejected() {
+        let spec = ModelSpec {
+            seed: 13,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Pp,
+            blocks: vec![Block::Attention, Block::Linear],
+        };
+        assert!(build_pair(&spec).is_err());
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! `crate::bugs::fuzz_operator_for` for the case ↔ operator bridge and the
 //! wider defect classes catalogued by the distributed-DL bug studies):
 //! wrong collective, dropped aggregation, mis-sliced shards, wrong chunk
-//! index, mis-scaled reductions, reordered/duplicated shard wiring, and
-//! wrong-axis reductions.
+//! index, mis-scaled reductions, reordered/duplicated shard wiring,
+//! wrong-axis reductions, and the pipeline/ZeRO wiring family (crossed or
+//! dropped send/recv boundaries, stale parameter shards in a re-gather,
+//! off-by-one micro-batch rescales).
 //!
 //! Mutations are applied by *rebuilding* the graph through [`Graph::add`],
 //! so output shapes are re-inferred and a mutant that no longer
@@ -43,9 +45,25 @@ pub enum MutKind {
     DupShardInput,
     /// Softmax along the wrong axis.
     SoftmaxDimSwap,
+    /// Rewire a `recv` to a different stage/micro-batch's `send` (crossed
+    /// pipeline boundary).
+    CrossedSendRecv,
+    /// Rewire a `recv` to a raw graph input of the same shape — the
+    /// boundary buffer was never written, the consumer reads stage input.
+    DroppedBoundary,
+    /// Swap one shard of a parameter all-gather for a same-shape input
+    /// outside the gather (stale ZeRO/FSDP shard).
+    StaleShardGather,
+    /// Turn a `1/k` rescale (k ≥ 2 integer) into `1/(k+1)` — the
+    /// off-by-one micro-batch/grad-accum divisor bug shape. In the sampled
+    /// chains this fires on `Block::Scale(1/2, 1/4)` nodes and on integer
+    /// `1/sqrt(h)` attention scales; the generated graphs contain no
+    /// literal micro-batch combine node, so per-operator stats measure the
+    /// divisor *family*, not a specific combine site.
+    MicrobatchScaleOffby,
 }
 
-pub const MUT_KINDS: [MutKind; 12] = [
+pub const MUT_KINDS: [MutKind; 16] = [
     MutKind::GatherReorder,
     MutKind::DropAggregation,
     MutKind::GatherToReduceScatter,
@@ -58,6 +76,10 @@ pub const MUT_KINDS: [MutKind; 12] = [
     MutKind::WrongUnary,
     MutKind::DupShardInput,
     MutKind::SoftmaxDimSwap,
+    MutKind::CrossedSendRecv,
+    MutKind::DroppedBoundary,
+    MutKind::StaleShardGather,
+    MutKind::MicrobatchScaleOffby,
 ];
 
 impl MutKind {
@@ -75,6 +97,10 @@ impl MutKind {
             MutKind::WrongUnary => "wrong_unary",
             MutKind::DupShardInput => "dup_shard_input",
             MutKind::SoftmaxDimSwap => "softmax_dim_swap",
+            MutKind::CrossedSendRecv => "crossed_send_recv",
+            MutKind::DroppedBoundary => "dropped_boundary",
+            MutKind::StaleShardGather => "stale_shard_gather",
+            MutKind::MicrobatchScaleOffby => "microbatch_scale_offby",
         }
     }
 
@@ -249,6 +275,76 @@ fn mutate_node(
                     return None;
                 }
                 Some((Op::Softmax { dim: (dim + 1) % rank }, ins.to_vec()))
+            }
+            _ => None,
+        },
+        // The stage-wiring operators below rewire a node to a tensor created
+        // *earlier* in the graph (`id < node.output`). `rebuild_with`
+        // recreates tensors in original id order, so those ids are stable
+        // between the clean graph and the rebuilt mutant (asserted by
+        // `rebuild_preserves_interleaved_tensor_ids`).
+        MutKind::CrossedSendRecv => match node.op {
+            Op::Recv { .. } => {
+                let cur = node.inputs[0];
+                let shape = g.shape(cur);
+                let cand = (0..node.output).find(|&t| {
+                    t != cur
+                        && g.shape(t) == shape
+                        && matches!(
+                            g.producer(t).map(|n| n.op.tag()),
+                            Some(OpTag::Send)
+                        )
+                })?;
+                Some((node.op.clone(), vec![cand]))
+            }
+            _ => None,
+        },
+        MutKind::DroppedBoundary => match node.op {
+            Op::Recv { .. } => {
+                let cur = node.inputs[0];
+                let shape = g.shape(cur);
+                let dtype = g.tensor(cur).dtype;
+                let cand = (0..node.output).find(|&t| {
+                    g.is_input(t) && g.shape(t) == shape && g.tensor(t).dtype == dtype
+                })?;
+                Some((node.op.clone(), vec![cand]))
+            }
+            _ => None,
+        },
+        MutKind::StaleShardGather => match node.op.tag() {
+            // a parameter re-gather: every operand is a stored shard (raw
+            // graph input); swap shard 1 for a same-shape input outside the
+            // gather — a stale chunk of some other parameter
+            OpTag::AllGather
+                if ins.len() >= 2 && node.inputs.iter().all(|&t| g.is_input(t)) =>
+            {
+                let shape = g.shape(node.inputs[1]);
+                let dtype = g.tensor(node.inputs[1]).dtype;
+                let cand = (0..node.output).find(|&t| {
+                    g.is_input(t)
+                        && g.shape(t) == shape
+                        && g.tensor(t).dtype == dtype
+                        && !node.inputs.contains(&t)
+                })?;
+                let mut swapped = ins.to_vec();
+                swapped[1] = cand;
+                Some((node.op.clone(), swapped))
+            }
+            _ => None,
+        },
+        MutKind::MicrobatchScaleOffby => match node.op {
+            Op::Scale { c } => {
+                let v = c.get();
+                // only 1/k combine factors (k >= 2) — the micro-batch /
+                // grad-accum divisor family
+                if v <= 0.0 || v > 0.5 {
+                    return None;
+                }
+                let k = (1.0 / v).round();
+                if (1.0 / v - k).abs() > 1e-9 {
+                    return None;
+                }
+                Some((Op::Scale { c: FBits::new(1.0 / (k + 1.0)) }, ins.to_vec()))
             }
             _ => None,
         },
@@ -450,6 +546,100 @@ mod tests {
         let b = crate::expr::eval::eval_graph(&rebuilt, &inputs).unwrap();
         let o = gd.outputs[0] as usize;
         assert!(a[o].allclose(&b[o], 0.0, 0.0), "identity rebuild must be exact");
+    }
+
+    fn pp_spec() -> ModelSpec {
+        ModelSpec {
+            seed: 21,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Pp,
+            blocks: vec![Block::Linear, Block::Unary(UnaryKind::Tanh)],
+        }
+    }
+
+    fn fsdp_spec() -> ModelSpec {
+        ModelSpec {
+            seed: 22,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Fsdp,
+            blocks: vec![Block::Linear, Block::Mlp(UnaryKind::Gelu)],
+        }
+    }
+
+    #[test]
+    fn crossed_send_recv_rewires_and_changes_numerics() {
+        let (_gs, gd, _ri) = build_pair(&pp_spec()).unwrap();
+        let site = applicable_sites(&gd)
+            .into_iter()
+            .find(|s| s.kind == MutKind::CrossedSendRecv)
+            .expect("pp graph must expose a crossed-boundary site");
+        let (gdm, m) = apply_mutation(&gd, site).unwrap();
+        assert!(m.node_name.contains("_recv"), "{}", m.node_name);
+        assert!(m.block.is_some(), "boundary nodes carry block names: {}", m.node_name);
+        gdm.validate().unwrap();
+        let inputs = crate::expr::eval::random_inputs(&gd, 31);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&gdm, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(!a[o].allclose(&b[o], 1e-4, 1e-5), "crossed boundary must change numerics");
+    }
+
+    #[test]
+    fn dropped_boundary_rewires_to_stage_input() {
+        let (_gs, gd, _ri) = build_pair(&pp_spec()).unwrap();
+        let site = applicable_sites(&gd)
+            .into_iter()
+            .find(|s| s.kind == MutKind::DroppedBoundary)
+            .expect("pp graph must expose a dropped-boundary site");
+        let (gdm, _m) = apply_mutation(&gd, site).unwrap();
+        gdm.validate().unwrap();
+        let target = gdm.node(site.node);
+        assert!(gdm.is_input(target.inputs[0]), "recv must now read a raw input");
+    }
+
+    #[test]
+    fn stale_shard_gather_swaps_one_shard() {
+        let (_gs, gd, _ri) = build_pair(&fsdp_spec()).unwrap();
+        let site = applicable_sites(&gd)
+            .into_iter()
+            .find(|s| s.kind == MutKind::StaleShardGather)
+            .expect("fsdp graph must expose a stale-shard site");
+        let (gdm, m) = apply_mutation(&gd, site).unwrap();
+        gdm.validate().unwrap();
+        assert_eq!(gdm.num_nodes(), gd.num_nodes());
+        assert!(m.node_name.contains("ag"), "{}", m.node_name);
+        let clean = gd.node(site.node);
+        let muta = gdm.node(site.node);
+        assert_ne!(clean.inputs, muta.inputs, "one shard operand must change");
+        let inputs = crate::expr::eval::random_inputs(&gd, 33);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&gdm, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(!a[o].allclose(&b[o], 1e-4, 1e-5), "stale shard must change numerics");
+    }
+
+    #[test]
+    fn microbatch_scale_offby_only_hits_inverse_integer_factors() {
+        let mut g = crate::ir::Graph::new("t");
+        let x = g.input("x", vec![4]);
+        let half = g.scale("half", x, 0.5);
+        let double = g.scale("double", half, 2.0);
+        g.mark_output(double);
+        let sites = applicable_sites(&g);
+        let hits: Vec<_> = sites
+            .iter()
+            .filter(|s| s.kind == MutKind::MicrobatchScaleOffby)
+            .collect();
+        assert_eq!(hits.len(), 1, "only the 1/2 factor qualifies: {hits:?}");
+        let (gm, _) = apply_mutation(&g, *hits[0]).unwrap();
+        match &gm.node(hits[0].node).op {
+            Op::Scale { c } => assert!((c.get() - 1.0 / 3.0).abs() < 1e-12, "{}", c.get()),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -74,7 +74,9 @@ fn vjp(g: &mut Graph, node: &super::graph::Node, dz: TensorId) -> Result<Vec<Opt
     let y = node.output;
     let n = &node.name;
     Ok(match &node.op {
-        Op::Identity => vec![Some(dz)],
+        // stage-boundary transfers are identities; the backward pass sends
+        // the gradient across the same boundary unchanged
+        Op::Identity | Op::Send { .. } | Op::Recv { .. } => vec![Some(dz)],
         Op::Neg => vec![Some(g.op(&format!("d{n}"), Op::Neg, vec![dz]))],
         Op::Exp => vec![Some(g.mul2(&format!("d{n}"), dz, y))],
         Op::Log => vec![Some(g.op(&format!("d{n}"), Op::Div, vec![dz, x(0)]))],

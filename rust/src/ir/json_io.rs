@@ -101,6 +101,7 @@ fn op_attrs_json(op: &Op) -> Json {
             pairs.push(("ranks", Json::num(*ranks as f64)));
             pairs.push(("index", Json::num(*index as f64)));
         }
+        Op::Send { chan } | Op::Recv { chan } => pairs.push(("chan", Json::num(*chan as f64))),
         Op::Custom { name } => pairs.push(("custom_name", Json::str(name.clone()))),
         _ => {}
     }
@@ -222,6 +223,8 @@ fn op_from_json(name: &str, attrs: &Json) -> Result<Op> {
             ranks: int("ranks")? as usize,
             index: int("index")? as usize,
         },
+        "send" => Op::Send { chan: int("chan")? as usize },
+        "recv" => Op::Recv { chan: int("chan")? as usize },
         "custom" => Op::Custom {
             name: attrs
                 .get("custom_name")

@@ -103,6 +103,17 @@ pub enum Op {
     /// k inputs -> `index`-th chunk of the elementwise sum along `dim`.
     ReduceScatter { dim: usize, ranks: usize, index: usize },
 
+    // ---- pipeline-parallel stage boundaries (single-program capture of a
+    //      point-to-point transfer; `chan` identifies the matching pair, one
+    //      channel per (stage boundary, micro-batch)) ----
+    /// Value leaving a pipeline stage on channel `chan`. Identity semantics.
+    Send { chan: usize },
+    /// Value entering the next pipeline stage from channel `chan`. Identity
+    /// semantics *only* when wired to the matching `Send` — the
+    /// `recv_of_send_identity` lemma requires equal channels, so crossed or
+    /// stale boundary wiring never simplifies and fails refinement.
+    Recv { chan: usize },
+
     /// Opaque custom operator (e.g. a fused kernel GraphGuard has no
     /// built-in lemma for; users supply lemmas per §6.5). Shape/semantics
     /// come from the custom-op registry.
@@ -150,6 +161,8 @@ pub enum OpTag {
     AllReduce,
     AllGather,
     ReduceScatter,
+    Send,
+    Recv,
     Custom,
 }
 
@@ -194,6 +207,8 @@ impl Op {
             Op::AllReduce { .. } => OpTag::AllReduce,
             Op::AllGather { .. } => OpTag::AllGather,
             Op::ReduceScatter { .. } => OpTag::ReduceScatter,
+            Op::Send { .. } => OpTag::Send,
+            Op::Recv { .. } => OpTag::Recv,
             Op::Custom { .. } => OpTag::Custom,
         }
     }
@@ -239,6 +254,8 @@ impl Op {
             OpTag::AllReduce => "all_reduce",
             OpTag::AllGather => "all_gather",
             OpTag::ReduceScatter => "reduce_scatter",
+            OpTag::Send => "send",
+            OpTag::Recv => "recv",
             OpTag::Custom => "custom",
         }
     }
@@ -262,6 +279,8 @@ impl Op {
                 | OpTag::AllReduce
                 | OpTag::AllGather
                 | OpTag::ReduceScatter
+                | OpTag::Send
+                | OpTag::Recv
         )
     }
 
@@ -487,6 +506,10 @@ impl Op {
                 out[*dim] /= *ranks as i64;
                 Ok(out)
             }
+            Op::Send { .. } | Op::Recv { .. } => {
+                ensure!(ins.len() == 1, "{} arity", self.name());
+                Ok(ins[0].to_vec())
+            }
             Op::Custom { name } => {
                 crate::lemmas::custom::registry_infer_shape(name, ins)
             }
@@ -515,6 +538,8 @@ impl fmt::Display for Op {
             }
             Op::AllGather { dim, ranks } => write!(f, "all_gather[dim={dim},{ranks}]"),
             Op::AllReduce { ranks } => write!(f, "all_reduce[{ranks}]"),
+            Op::Send { chan } => write!(f, "send[ch={chan}]"),
+            Op::Recv { chan } => write!(f, "recv[ch={chan}]"),
             Op::Custom { name } => write!(f, "custom[{name}]"),
             other => write!(f, "{}", other.name()),
         }
@@ -566,6 +591,20 @@ mod tests {
         assert_eq!(sh(&Op::Rope, &[&[2, 4, 8], &[4, 8], &[4, 8]]), vec![2, 4, 8]);
         assert_eq!(sh(&Op::Embedding, &[&[100, 16], &[7]]), vec![7, 16]);
         assert_eq!(sh(&Op::MseLoss, &[&[4, 2], &[4, 2]]), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn send_recv_shapes_and_cleanliness() {
+        assert_eq!(sh(&Op::Send { chan: 0 }, &[&[2, 4]]), vec![2, 4]);
+        assert_eq!(sh(&Op::Recv { chan: 0 }, &[&[2, 4]]), vec![2, 4]);
+        assert!(Op::Send { chan: 1 }.infer_shape(&[&[2], &[2]], None).is_err());
+        assert!(Op::Send { chan: 3 }.is_clean());
+        assert!(Op::Recv { chan: 3 }.is_clean());
+        // boundary ops are NOT generic unary elementwise — distributing them
+        // over concat would duplicate channel tags
+        assert!(!Op::Send { chan: 0 }.is_unary_elementwise());
+        assert_eq!(Op::Recv { chan: 2 }.tag(), OpTag::Recv);
+        assert_eq!(Op::Send { chan: 2 }.name(), "send");
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Collective-op lemmas: desugar single-program collectives into their
 //! structural semantics (all-gather = concat, all-reduce = shard-sum,
-//! reduce-scatter = slice-of-sum). These give `G_d`'s communication nodes
-//! definitional equalities the rest of the library can chew on.
+//! reduce-scatter = slice-of-sum), plus the point-to-point stage-boundary
+//! pair (recv∘send = identity when the channels match) and the ZeRO/FSDP
+//! re-gather fact (all-gather of contiguous chunks of x = x). These give
+//! `G_d`'s communication nodes definitional equalities the rest of the
+//! library can chew on.
 
-use super::structural::try_add;
+use super::structural::{chunked_slices_source, try_add};
 use super::Lemma;
 use crate::egraph::{Pat, Rewrite};
 use crate::ir::{Op, OpTag};
@@ -79,6 +82,55 @@ pub fn lemmas() -> Vec<Lemma> {
         22,
     ));
 
+    // recv(send(x; chan=c); chan=c) = x — a matched pipeline stage boundary
+    // is transparent. The channel-equality condition is the whole point: a
+    // crossed or stale boundary (recv wired to a different send) keeps its
+    // Recv opaque, so nothing downstream of the wrong wiring maps cleanly
+    // and refinement fails at the first consumer.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "recv_of_send_identity",
+            Pat::bind(OpTag::Recv, 0, vec![Pat::bind(OpTag::Send, 1, vec![Pat::var(0)])]),
+            |_eg, s, _| {
+                let (Some(Op::Recv { chan: rc }), Some(Op::Send { chan: sc }), Some(x)) =
+                    (s.op(0), s.op(1), s.var(0))
+                else {
+                    return vec![];
+                };
+                if rc == sc {
+                    vec![x]
+                } else {
+                    vec![]
+                }
+            },
+        ),
+        "c",
+        2,
+        12,
+    ));
+
+    // all_gather(slice(x,0,c1), slice(x,c1,c2), ..; dim) = x — re-gathering
+    // a chunk-sharded parameter (ZeRO/FSDP) reconstructs it exactly. Also a
+    // one-step shortcut for the Fig-1 reduce-scatter → all-gather roundtrip
+    // (each reduce_scatter output is a slice of the shard sum).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "allgather_of_chunks_identity",
+            Pat::bind_variadic(OpTag::AllGather, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Some(Op::AllGather { dim, .. }) => *dim,
+                    _ => return vec![],
+                };
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                chunked_slices_source(eg, &parts, dim).into_iter().collect()
+            },
+        ),
+        "c",
+        3,
+        16,
+    ));
+
     v
 }
 
@@ -118,6 +170,55 @@ mod tests {
         run(&mut eg);
         let sum = eg.lookup(&Op::SumN, &[a, b]).unwrap();
         assert!(eg.same(ar, sum));
+    }
+
+    #[test]
+    fn matched_send_recv_is_transparent() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![2, 4]);
+        let sent = eg.add_op(Op::Send { chan: 7 }, vec![x]).unwrap();
+        let recvd = eg.add_op(Op::Recv { chan: 7 }, vec![sent]).unwrap();
+        run(&mut eg);
+        assert!(eg.same(recvd, x), "matched boundary pair collapses");
+    }
+
+    #[test]
+    fn crossed_send_recv_stays_opaque() {
+        // recv on channel 1 wired to channel 0's send — the §6-style crossed
+        // stage wiring must NOT simplify to either sent value.
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![2, 4]);
+        let sent0 = eg.add_op(Op::Send { chan: 0 }, vec![x]).unwrap();
+        let crossed = eg.add_op(Op::Recv { chan: 1 }, vec![sent0]).unwrap();
+        run(&mut eg);
+        assert!(!eg.same(crossed, x), "crossed boundary must stay opaque");
+    }
+
+    #[test]
+    fn allgather_of_chunk_slices_is_identity() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![6, 4]);
+        let parts: Vec<_> = [(0i64, 2i64), (2, 4), (4, 6)]
+            .iter()
+            .map(|&(a, b)| {
+                eg.add_op(Op::Slice { dim: 0, start: a.into(), end: b.into() }, vec![x]).unwrap()
+            })
+            .collect();
+        let ag = eg.add_op(Op::AllGather { dim: 0, ranks: 3 }, parts).unwrap();
+        run(&mut eg);
+        assert!(eg.same(ag, x), "re-gathered chunked param = param");
+    }
+
+    #[test]
+    fn allgather_of_partial_chunks_is_not_identity() {
+        // missing the tail chunk: must NOT collapse to x
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![6, 4]);
+        let a = eg.add_op(Op::Slice { dim: 0, start: 0.into(), end: 2.into() }, vec![x]).unwrap();
+        let b = eg.add_op(Op::Slice { dim: 0, start: 2.into(), end: 4.into() }, vec![x]).unwrap();
+        let ag = eg.add_op(Op::AllGather { dim: 0, ranks: 2 }, vec![a, b]).unwrap();
+        run(&mut eg);
+        assert!(!eg.same(ag, x), "partial coverage must stay a strict sub-tensor");
     }
 
     #[test]

@@ -29,6 +29,59 @@ fn slice_attrs(op: &Op) -> (usize, Scalar, Scalar) {
     }
 }
 
+/// If every class in `parts` contains a concrete `slice(x; dim, ·, ·)` of a
+/// common source `x`, contiguous from 0 and covering `x`'s full extent along
+/// `dim`, return `x`. Shared by `concat_chunks_collapse` and the collective
+/// `allgather_of_chunks_identity` lemma — the ZeRO/FSDP "re-gather of a
+/// chunked parameter is the parameter" fact.
+pub(crate) fn chunked_slices_source(eg: &EGraph, parts: &[Id], dim: usize) -> Option<Id> {
+    if parts.len() < 2 {
+        return None;
+    }
+    'cand: for node in &eg.class(parts[0]).nodes {
+        let crate::egraph::ELang::Op(Op::Slice { dim: d0, start, end }) = &node.lang else {
+            continue;
+        };
+        if *d0 != dim || start.as_const() != Some(0) {
+            continue;
+        }
+        let Some(&child) = node.children.first() else { continue };
+        let x = eg.find(child);
+        let Some(xshape) = eg.shape(x) else { continue };
+        if dim >= xshape.len() {
+            continue;
+        }
+        let total = xshape[dim];
+        let Some(mut cursor) = end.as_const() else { continue };
+        for &p in &parts[1..] {
+            let mut advanced = None;
+            for n2 in &eg.class(p).nodes {
+                if let crate::egraph::ELang::Op(Op::Slice { dim: d2, start: s2, end: e2 }) =
+                    &n2.lang
+                {
+                    if *d2 == dim
+                        && n2.children.first().map(|&c| eg.find(c)) == Some(x)
+                        && s2.as_const() == Some(cursor)
+                    {
+                        if let Some(e) = e2.as_const() {
+                            advanced = Some(e);
+                            break;
+                        }
+                    }
+                }
+            }
+            match advanced {
+                Some(e) => cursor = e,
+                None => continue 'cand,
+            }
+        }
+        if cursor == total {
+            return Some(x);
+        }
+    }
+    None
+}
+
 pub fn lemmas() -> Vec<Lemma> {
     let mut v: Vec<Lemma> = Vec::new();
 
@@ -220,6 +273,27 @@ pub fn lemmas() -> Vec<Lemma> {
         "c",
         3,
         55,
+    ));
+
+    // concat(slice(x,0,c1), slice(x,c1,c2), .., slice(x,ck,len)) = x — the
+    // n-ary chunk reassembly in one step (adjacent_slices_concat covers the
+    // pairwise case; this closes R-way FSDP/ZeRO chunk gathers directly).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "concat_chunks_collapse",
+            Pat::bind_variadic(OpTag::Concat, 0, 0),
+            |eg, s, _| {
+                let dim = match s.op(0) {
+                    Some(Op::Concat { dim }) => *dim,
+                    _ => return vec![],
+                };
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                chunked_slices_source(eg, &parts, dim).into_iter().collect()
+            },
+        ),
+        "c",
+        2,
+        16,
     ));
 
     // concat(x) = x  (singleton)
@@ -807,6 +881,23 @@ mod tests {
         run(&mut eg);
         let cat = eg.lookup(&Op::Concat { dim: 0 }, &[l, r]).expect("concat created");
         assert!(eg.same(cat, x), "concat of adjacent full slices = x");
+    }
+
+    #[test]
+    fn nary_chunk_concat_collapses() {
+        // three uneven contiguous chunks — beyond what pairwise
+        // adjacent_slices_concat alone would need to chain
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![2, 8]);
+        let parts: Vec<_> = [(0i64, 3i64), (3, 4), (4, 8)]
+            .iter()
+            .map(|&(a, b)| {
+                eg.add_op(Op::Slice { dim: 1, start: a.into(), end: b.into() }, vec![x]).unwrap()
+            })
+            .collect();
+        let cat = eg.add_op(Op::Concat { dim: 1 }, parts).unwrap();
+        run(&mut eg);
+        assert!(eg.same(cat, x), "n-ary chunk concat = x");
     }
 
     #[test]

@@ -354,6 +354,27 @@ pub fn identities() -> Vec<Identity> {
             positive: true, // ids must be valid rows (handled by |v|+0.1 < 4)
         },
         Identity {
+            lemma: "recv_of_send_identity",
+            lhs: "recv(send(x; chan=3); chan=3)",
+            rhs: "x",
+            leaves: &[("x", S24)],
+            positive: false,
+        },
+        Identity {
+            lemma: "allgather_of_chunks_identity",
+            lhs: "all_gather(slice(x; dim=0, start=0, end=2), slice(x; dim=0, start=2, end=4); dim=0, ranks=2)",
+            rhs: "x",
+            leaves: &[("x", S44)],
+            positive: false,
+        },
+        Identity {
+            lemma: "concat_chunks_collapse",
+            lhs: "concat(slice(x; dim=1, start=0, end=1), slice(x; dim=1, start=1, end=3), slice(x; dim=1, start=3, end=4); dim=1)",
+            rhs: "x",
+            leaves: &[("x", S44)],
+            positive: false,
+        },
+        Identity {
             lemma: "allgather_is_concat",
             lhs: "all_gather(a, b; dim=0, ranks=2)",
             rhs: "concat(a, b; dim=0)",
@@ -434,6 +455,8 @@ mod tests {
             "mse_microbatch",
             "reducescatter_is_slice_of_sum",
             "pallas_attention_semantics",
+            "recv_of_send_identity",
+            "allgather_of_chunks_identity",
         ] {
             assert!(names.contains(&must), "identity table missing {must}");
         }

@@ -12,10 +12,14 @@
 //!   all-gather into the TP region, reduce-scatter out).
 //! * `tp_sp_vp_pair` — additionally shards the LM head over the vocab
 //!   (vocabulary parallelism), as used for the Fig-5 sweeps.
+//! * `pp_tp_pair`  — pipeline stages over contiguous layer groups
+//!   (send/recv boundaries between stages) with TP inside each stage.
+//! * `fsdp_pair`   — ZeRO-3/FSDP: every parameter stored 1/R-sharded and
+//!   all-gathered before use, compute replicated.
 
 use crate::ir::{FBits, Graph, Op, TensorId};
 use crate::relation::Relation;
-use crate::strategies::{chunks, replicate_input, RiBuilder};
+use crate::strategies::{replicate_input, stage_boundary, RiBuilder};
 use anyhow::{ensure, Result};
 
 #[derive(Debug, Clone)]
@@ -27,14 +31,16 @@ pub struct GptConfig {
     pub vocab: i64,
 }
 
+/// Small default used in tests: hidden 16, divisible by ranks {2,4,8}.
+impl Default for GptConfig {
+    fn default() -> Self {
+        GptConfig { seq: 8, heads: 4, head_dim: 4, ffn: 32, vocab: 16 }
+    }
+}
+
 impl GptConfig {
     pub fn hidden(&self) -> i64 {
         self.heads * self.head_dim
-    }
-
-    /// Small default used in tests: hidden 16, divisible by ranks {2,4,8}.
-    pub fn default() -> Self {
-        GptConfig { seq: 8, heads: 4, head_dim: 4, ffn: 32, vocab: 16 }
     }
 
     /// Fig-5 parallelism-sweep config (degrees {2,4}; degree 6 does not
@@ -135,16 +141,38 @@ pub fn seq(layers: usize, cfg: &GptConfig) -> Graph {
 struct DistOpts {
     sp: bool,
     vp: bool,
+    /// Pipeline stages (1 = no pipeline). Layers are grouped into
+    /// contiguous stages via `strategies::chunks`; every activation shard
+    /// crosses a send/recv boundary between stages.
+    pp_stages: usize,
 }
 
-/// Megatron TP (optionally +SP, +VP) distributed GPT.
+impl DistOpts {
+    fn tp_only() -> Self {
+        DistOpts { sp: false, vp: false, pp_stages: 1 }
+    }
+}
+
+/// Megatron TP (optionally +SP, +VP, +PP stages) distributed GPT.
 fn dist(ranks: usize, layers: usize, cfg: &GptConfig, opts: DistOpts) -> Result<(Graph, Relation)> {
     cfg.check(ranks)?;
+    ensure!(opts.pp_stages >= 1, "at least one pipeline stage");
+    ensure!(
+        opts.pp_stages <= layers.max(1),
+        "{} pipeline stages need at least as many layers (got {layers})",
+        opts.pp_stages
+    );
+    let stage_ends = crate::strategies::stage_ends(layers, opts.pp_stages);
     let gs = seq(layers, cfg); // used for R_i name resolution at the end
     let h = cfg.hidden();
     let r = ranks as i64;
     let heads_per = cfg.heads / r;
-    let mut g = Graph::new(if opts.sp { "gpt_tp_sp" } else { "gpt_tp" });
+    let name = match (opts.pp_stages > 1, opts.sp) {
+        (true, _) => "gpt_pp_tp",
+        (false, true) => "gpt_tp_sp",
+        (false, false) => "gpt_tp",
+    };
+    let mut g = Graph::new(name);
     let mut ri = RiBuilder::new();
 
     // embedding: table replicated; ids sharded under SP else replicated
@@ -259,6 +287,18 @@ fn dist(ranks: usize, layers: usize, cfg: &GptConfig, opts: DistOpts) -> Result<
             let mlp = g.all_reduce(&format!("{p}_mlp_ar"), mlp_parts);
             vec![g.add2(&format!("{p}_res2"), res1[0], mlp)]
         };
+
+        // pipeline stage boundary after this layer: each activation shard
+        // crosses on its own channel (boundary-major numbering)
+        if let Some(b) = stage_ends.iter().position(|&e| e == l + 1) {
+            x_shards = x_shards
+                .iter()
+                .enumerate()
+                .map(|(rk, &x)| {
+                    stage_boundary(&mut g, &format!("pp{b}_r{rk}"), x, b * ranks + rk)
+                })
+                .collect();
+        }
     }
 
     // final LN + LM head
@@ -293,13 +333,13 @@ fn dist(ranks: usize, layers: usize, cfg: &GptConfig, opts: DistOpts) -> Result<
 pub fn tp_pair(ranks: usize, layers: usize) -> (Graph, Graph, Relation) {
     let cfg = GptConfig::default();
     let gs = seq(layers, &cfg);
-    let (gd, ri) = dist(ranks, layers, &cfg, DistOpts { sp: false, vp: false }).unwrap();
+    let (gd, ri) = dist(ranks, layers, &cfg, DistOpts::tp_only()).unwrap();
     (gs, gd, ri)
 }
 
 pub fn tp_sp_pair(ranks: usize, layers: usize, cfg: &GptConfig) -> Result<(Graph, Graph, Relation)> {
     let gs = seq(layers, cfg);
-    let (gd, ri) = dist(ranks, layers, cfg, DistOpts { sp: true, vp: false })?;
+    let (gd, ri) = dist(ranks, layers, cfg, DistOpts { sp: true, vp: false, pp_stages: 1 })?;
     Ok((gs, gd, ri))
 }
 
@@ -310,7 +350,36 @@ pub fn tp_sp_vp_pair(
     cfg: &GptConfig,
 ) -> Result<(Graph, Graph, Relation)> {
     let gs = seq(layers, cfg);
-    let (gd, ri) = dist(ranks, layers, cfg, DistOpts { sp: true, vp: true })?;
+    let (gd, ri) = dist(ranks, layers, cfg, DistOpts { sp: true, vp: true, pp_stages: 1 })?;
+    Ok((gs, gd, ri))
+}
+
+/// Pipeline parallelism over contiguous layer groups composed with tensor
+/// parallelism inside each stage — the PP×TP composition real Megatron
+/// deployments run. `stages` must not exceed `layers`.
+pub fn pp_tp_pair(stages: usize, ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)> {
+    let cfg = GptConfig::default();
+    let gs = seq(layers, &cfg);
+    let (gd, ri) =
+        dist(ranks, layers, &cfg, DistOpts { sp: false, vp: false, pp_stages: stages })?;
+    Ok((gs, gd, ri))
+}
+
+/// ZeRO-3/FSDP: every parameter (embeddings, norms, attention and MLP
+/// weights, LM head) is stored 1/R-sharded along its leading dim and
+/// all-gathered immediately before use; compute is mirrored node-for-node
+/// from the sequential graph by `strategies::fsdp_from_seq`, so this
+/// variant cannot drift from `seq`.
+pub fn fsdp_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)> {
+    let cfg = GptConfig::default();
+    let gs = seq(layers, &cfg);
+    let (mut gd, ri) = crate::strategies::fsdp_from_seq(
+        &gs,
+        ranks,
+        &|name| name != "ids", // every input except the token ids is a param
+        &|name| format!("{name}_ag"),
+    )?;
+    gd.name = "gpt_fsdp".into();
     Ok((gs, gd, ri))
 }
 
@@ -349,6 +418,37 @@ mod tests {
         let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 17).unwrap();
+    }
+
+    #[test]
+    fn gpt_pp2_tp2_refines() {
+        let (gs, gd, ri) = pp_tp_pair(2, 2, 2).unwrap();
+        assert!(
+            gd.nodes().iter().any(|n| matches!(n.op, crate::ir::Op::Send { .. })),
+            "stage boundary must appear in G_d"
+        );
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 29).unwrap();
+    }
+
+    #[test]
+    fn gpt_pp_rejects_more_stages_than_layers() {
+        assert!(pp_tp_pair(3, 2, 2).is_err());
+    }
+
+    #[test]
+    fn gpt_fsdp2_refines() {
+        let (gs, gd, ri) = fsdp_pair(2, 1).unwrap();
+        let gathers = gd
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, crate::ir::Op::AllGather { .. }))
+            .count();
+        assert!(gathers >= 12, "every param must be re-gathered, saw {gathers}");
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 31).unwrap();
     }
 
     #[test]

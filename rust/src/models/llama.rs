@@ -7,7 +7,9 @@
 
 use crate::ir::{Graph, Op, TensorId};
 use crate::relation::Relation;
-use crate::strategies::{col_shard_weight, replicate_input, row_shard_weight, RiBuilder};
+use crate::strategies::{
+    col_shard_weight, replicate_input, row_shard_weight, stage_boundary, RiBuilder,
+};
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
@@ -18,12 +20,15 @@ pub struct LlamaConfig {
     pub ffn: i64,
 }
 
+impl Default for LlamaConfig {
+    fn default() -> Self {
+        LlamaConfig { seq: 8, heads: 4, head_dim: 4, ffn: 32 }
+    }
+}
+
 impl LlamaConfig {
     pub fn hidden(&self) -> i64 {
         self.heads * self.head_dim
-    }
-    pub fn default() -> Self {
-        LlamaConfig { seq: 8, heads: 4, head_dim: 4, ffn: 32 }
     }
 }
 
@@ -99,6 +104,29 @@ pub fn seq(layers: usize, cfg: &LlamaConfig) -> Graph {
 
 /// Tensor-parallel Llama (heads and FFN sharded, projections row-parallel).
 pub fn tp_pair(ranks: usize, layers: usize, cfg: &LlamaConfig) -> Result<(Graph, Graph, Relation)> {
+    tp_pp_dist(ranks, layers, cfg, 1)
+}
+
+/// Pipeline stages over contiguous layer groups with TP inside each stage.
+pub fn pp_tp_pair(
+    stages: usize,
+    ranks: usize,
+    layers: usize,
+    cfg: &LlamaConfig,
+) -> Result<(Graph, Graph, Relation)> {
+    anyhow::ensure!(
+        (1..=layers.max(1)).contains(&stages),
+        "{stages} pipeline stages need 1..={layers} layers"
+    );
+    tp_pp_dist(ranks, layers, cfg, stages)
+}
+
+fn tp_pp_dist(
+    ranks: usize,
+    layers: usize,
+    cfg: &LlamaConfig,
+    pp_stages: usize,
+) -> Result<(Graph, Graph, Relation)> {
     let gs = seq(layers, cfg);
     let h = cfg.hidden();
     let heads_per = cfg.heads / ranks as i64;
@@ -106,7 +134,8 @@ pub fn tp_pair(ranks: usize, layers: usize, cfg: &LlamaConfig) -> Result<(Graph,
         cfg.heads % ranks as i64 == 0 && cfg.ffn % ranks as i64 == 0,
         "llama config not divisible by {ranks} ranks"
     );
-    let mut g = Graph::new("llama_tp");
+    let stage_ends = crate::strategies::stage_ends(layers, pp_stages);
+    let mut g = Graph::new(if pp_stages > 1 { "llama_pp_tp" } else { "llama_tp" });
     let mut ri = RiBuilder::new();
     let mut x = replicate_input(&mut g, &mut ri, "x", &[cfg.seq, h]);
     let cos = replicate_input(&mut g, &mut ri, "cos", &[cfg.seq, cfg.head_dim]);
@@ -155,10 +184,33 @@ pub fn tp_pair(ranks: usize, layers: usize, cfg: &LlamaConfig) -> Result<(Graph,
         }
         let mlp = g.all_reduce(&format!("{p}_mlp_ar"), mlp_parts);
         x = g.add2(&format!("{p}_res2"), x1, mlp);
+
+        // pipeline stage boundary: the full activation crosses once per
+        // boundary (TP keeps activations replicated between layers)
+        if let Some(b) = stage_ends.iter().position(|&e| e == l + 1) {
+            x = stage_boundary(&mut g, &format!("pp{b}"), x, b);
+        }
     }
     g.mark_output(x);
     let ri = ri.finish(&gs, &g)?;
     Ok((gs, g, ri))
+}
+
+/// ZeRO-3/FSDP Llama: every weight (RMSNorm gains included) stored
+/// 1/R-sharded along its leading dim and all-gathered before use; compute
+/// is mirrored node-for-node from the sequential graph by
+/// `strategies::fsdp_from_seq`. RoPE tables are buffers, not parameters —
+/// they stay replicated, like the activation input.
+pub fn fsdp_pair(ranks: usize, layers: usize, cfg: &LlamaConfig) -> Result<(Graph, Graph, Relation)> {
+    let gs = seq(layers, cfg);
+    let (mut gd, ri) = crate::strategies::fsdp_from_seq(
+        &gs,
+        ranks,
+        &|name| !matches!(name, "x" | "cos" | "sin"),
+        &|name| format!("{name}_ag"),
+    )?;
+    gd.name = "llama_fsdp".into();
+    Ok((gs, gd, ri))
 }
 
 #[cfg(test)]
@@ -172,6 +224,28 @@ mod tests {
         let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 23).unwrap();
+    }
+
+    #[test]
+    fn llama_pp2_tp2_refines() {
+        let (gs, gd, ri) = pp_tp_pair(2, 2, 2, &LlamaConfig::default()).unwrap();
+        assert!(gd.nodes().iter().any(|n| matches!(n.op, Op::Recv { .. })));
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 37).unwrap();
+    }
+
+    #[test]
+    fn llama_fsdp2_refines() {
+        let (gs, gd, ri) = fsdp_pair(2, 1, &LlamaConfig::default()).unwrap();
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 41).unwrap();
+    }
+
+    #[test]
+    fn llama_fsdp_rejects_degree_6() {
+        assert!(fsdp_pair(6, 1, &LlamaConfig::default()).is_err());
     }
 
     #[test]

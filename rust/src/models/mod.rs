@@ -2,10 +2,10 @@
 //!
 //! | Framework analog      | Module         | Strategies          |
 //! |-----------------------|----------------|---------------------|
-//! | Megatron-LM GPT       | [`gpt`]        | TP, SP, VP          |
+//! | Megatron-LM GPT       | [`gpt`]        | TP, SP, VP, PP, FSDP |
 //! | vLLM Qwen2            | [`qwen2`]      | TP (fused kernels)  |
 //! | HF regression + MSE   | [`regression`] | gradient accumulation (fwd+bwd) |
-//! | Neuron Llama-3        | [`llama`]      | TP (via HLO frontend too) |
+//! | Neuron Llama-3        | [`llama`]      | TP, PP, FSDP (via HLO frontend too) |
 //! | ByteDance internal    | [`bytedance`]  | TP, SP, EP (fwd+bwd) |
 //!
 //! Each module exposes `seq(cfg)` building `G_s` and `*_pair(...)` builders
@@ -65,6 +65,31 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
             gd,
             ri,
             strategies: vec!["tp", "sp", "ep"],
+        });
+    }
+    {
+        // 2 pipeline stages over 2 layers, TP inside each stage
+        let (gs, gd, ri) = gpt::pp_tp_pair(2, ranks, 2).unwrap();
+        v.push(Workload {
+            name: format!("gpt_pp2_tp_{ranks}"),
+            gs,
+            gd,
+            ri,
+            strategies: vec!["pp", "tp"],
+        });
+    }
+    {
+        let (gs, gd, ri) = gpt::fsdp_pair(ranks, 1).unwrap();
+        v.push(Workload { name: format!("gpt_fsdp_{ranks}"), gs, gd, ri, strategies: vec!["fsdp"] });
+    }
+    {
+        let (gs, gd, ri) = llama::fsdp_pair(ranks, 1, &llama::LlamaConfig::default()).unwrap();
+        v.push(Workload {
+            name: format!("llama3_fsdp_{ranks}"),
+            gs,
+            gd,
+            ri,
+            strategies: vec!["fsdp"],
         });
     }
     v

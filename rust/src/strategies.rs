@@ -7,10 +7,10 @@
 //! helpers keep `R_i` construction honest: every sharded or replicated
 //! input records exactly the mapping a user of GraphGuard would write.
 
-use crate::ir::{Graph, TensorId};
+use crate::ir::{Graph, NodeId, Op, TensorId};
 use crate::relation::Relation;
 use crate::util::json::Json;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
 
 /// Which strategies a distributed variant applies (Table 2's third column).
@@ -26,6 +26,11 @@ pub enum Strategy {
     EP,
     /// Gradient accumulation: split the batch into microbatches.
     GradAccum,
+    /// Pipeline parallelism: stage-split the layer chain with send/recv
+    /// boundaries and micro-batch loop unrolling.
+    PP,
+    /// ZeRO-3/FSDP: parameters stored 1/R-sharded, all-gathered before use.
+    FSDP,
 }
 
 impl Strategy {
@@ -36,6 +41,8 @@ impl Strategy {
             Strategy::VP => "vp",
             Strategy::EP => "ep",
             Strategy::GradAccum => "grad_accum",
+            Strategy::PP => "pp",
+            Strategy::FSDP => "fsdp",
         }
     }
 }
@@ -174,6 +181,310 @@ pub fn row_shard_weight(
     shard_input(gd, ri, name, shape, shape.len() - 2, ranks)
 }
 
+/// Layer indices after which a pipeline stage boundary falls: the
+/// exclusive ends of every stage's contiguous layer group except the last
+/// (a `chunks` partition of the layer range). Shared by the GPT and Llama
+/// PP builders so boundary placement cannot drift between models.
+pub fn stage_ends(layers: usize, stages: usize) -> Vec<usize> {
+    chunks(layers as i64, stages)
+        .iter()
+        .take(stages.saturating_sub(1))
+        .map(|&(_, hi)| hi as usize)
+        .collect()
+}
+
+/// Insert a pipeline stage boundary: `send` then `recv` on channel `chan`.
+/// Node names are `{base}_send` / `{base}_recv`. Returns the received
+/// tensor — semantically the value unchanged, but only provably so when the
+/// two channel tags match (`recv_of_send_identity`).
+pub fn stage_boundary(g: &mut Graph, base: &str, x: TensorId, chan: usize) -> TensorId {
+    let sent = g.op(&format!("{base}_send"), Op::Send { chan }, vec![x]);
+    g.op(&format!("{base}_recv"), Op::Recv { chan }, vec![sent])
+}
+
+/// ZeRO-3/FSDP parameter: stored 1/R-sharded along dim 0 (per-rank inputs
+/// `{name}_r{r}`, `R_i` records `name = concat(...; dim=0)`), all-gathered
+/// into the full weight before use. Returns the gathered tensor; the
+/// `{gather_name}` node is the site stale-shard bugs corrupt.
+pub fn fsdp_shard_params(
+    gd: &mut Graph,
+    ri: &mut RiBuilder,
+    name: &str,
+    gather_name: &str,
+    shape: &[i64],
+    ranks: usize,
+) -> Result<TensorId> {
+    ensure!(!shape.is_empty(), "cannot FSDP-shard scalar param '{name}'");
+    let shards = shard_input(gd, ri, name, shape, 0, ranks)?;
+    Ok(gd.all_gather(gather_name, shards, 0))
+}
+
+/// Derive a ZeRO-3/FSDP implementation from a sequential graph: every
+/// input `is_param` classifies as a parameter is stored 1/R-sharded along
+/// dim 0 and re-gathered before use (the gather node is named by
+/// `gather_name`), every other input is replicated, and all compute is
+/// mirrored node-for-node — so the FSDP variant can never drift from the
+/// sequential builder it derives from.
+pub fn fsdp_from_seq(
+    gs: &Graph,
+    ranks: usize,
+    is_param: &dyn Fn(&str) -> bool,
+    gather_name: &dyn Fn(&str) -> String,
+) -> Result<(Graph, Relation)> {
+    let mut gd = Graph::new(format!("{}_fsdp", gs.name));
+    let mut ri = RiBuilder::new();
+    let mut val: Vec<Option<TensorId>> = vec![None; gs.num_tensors()];
+    // Two passes: declare every stored shard first, then add the gather
+    // nodes. With gathers interleaved into the declaration loop, the
+    // *first* parameter's gather would precede every other shard and the
+    // stale-shard bug family could never target it.
+    let mut pending_gathers: Vec<(TensorId, String, Vec<TensorId>)> = Vec::new();
+    for &i in &gs.inputs {
+        let t = gs.tensor(i);
+        if is_param(&t.name) {
+            ensure!(
+                !t.shape.is_empty(),
+                "cannot FSDP-shard scalar param '{}'",
+                t.name
+            );
+            let shards = shard_input(&mut gd, &mut ri, &t.name, &t.shape, 0, ranks)?;
+            pending_gathers.push((i, gather_name(&t.name), shards));
+        } else {
+            val[i as usize] =
+                Some(replicate_input_typed(&mut gd, &mut ri, &t.name, &t.shape, t.dtype));
+        }
+    }
+    for (i, name, shards) in pending_gathers {
+        val[i as usize] = Some(gd.all_gather(&name, shards, 0));
+    }
+    for nid in gs.topo_order() {
+        let node = gs.node(nid);
+        let ins: Vec<TensorId> =
+            node.inputs.iter().map(|&t| val[t as usize].expect("topo order")).collect();
+        let out = gd.add(&node.name, node.op.clone(), ins)?;
+        val[node.output as usize] = Some(out);
+    }
+    for &o in &gs.outputs {
+        gd.mark_output(val[o as usize].expect("outputs computed"));
+    }
+    let rel = ri.finish(gs, &gd)?;
+    gd.validate()?;
+    Ok((gd, rel))
+}
+
+/// Cut a sequential chain into pipeline stages with micro-batch loop
+/// unrolling: the primary input (`gs.inputs[0]`) is split into `micro`
+/// micro-batches along dim 0, every other input is replicated as a
+/// parameter, each `G_s` operator is unrolled once per micro-batch, and the
+/// output of every node in `cuts` crosses a stage boundary through a
+/// send/recv pair on its own channel (one channel per boundary ×
+/// micro-batch — exactly the wiring a 1F1B schedule's buffers realize).
+///
+/// Per-micro-batch node names are `{orig}_mb{m}`; the final gather is
+/// `out_name`. Only row-decomposable operators are supported (elementwise,
+/// matmul against replicated weights, row-wise softmax, RMS/LayerNorm,
+/// RoPE with tables sliced per micro-batch); anything that mixes rows
+/// across micro-batches (attention, transposes, reductions over dim 0) is
+/// rejected rather than silently mis-split.
+pub fn pipeline_stage_split(
+    gs: &Graph,
+    cuts: &[NodeId],
+    micro: usize,
+    out_name: &str,
+) -> Result<(Graph, Relation)> {
+    ensure!(micro >= 1, "micro-batch count must be >= 1");
+    ensure!(gs.outputs.len() == 1, "pipeline split expects a single-output chain");
+    let primary = *gs
+        .inputs
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("pipeline split needs a primary input"))?;
+    let full = gs.shape(primary).to_vec();
+    ensure!(!full.is_empty(), "primary input '{}' is scalar", gs.tensor(primary).name);
+    ensure!(
+        full[0] % micro as i64 == 0,
+        "batch dim {} of '{}' not divisible by {} micro-batches",
+        full[0],
+        gs.tensor(primary).name,
+        micro
+    );
+    for &c in cuts {
+        ensure!((c as usize) < gs.num_nodes(), "stage cut at nonexistent node {c}");
+    }
+    let offs = chunks(full[0], micro);
+
+    let mut gd = Graph::new(format!("{}_pp", gs.name));
+    let mut ri = RiBuilder::new();
+    // primary input micro-batched; every other input replicated up front
+    let prim_name = gs.tensor(primary).name.clone();
+    let mb_inputs = shard_input_typed(
+        &mut gd,
+        &mut ri,
+        &prim_name,
+        &full,
+        0,
+        micro,
+        gs.tensor(primary).dtype,
+    )?;
+    let mut rep_val: Vec<Option<TensorId>> = vec![None; gs.num_tensors()];
+    for &i in &gs.inputs {
+        if i == primary {
+            continue;
+        }
+        let t = gs.tensor(i);
+        rep_val[i as usize] =
+            Some(replicate_input_typed(&mut gd, &mut ri, &t.name, &t.shape, t.dtype));
+    }
+
+    let mut outs = Vec::with_capacity(micro);
+    for m in 0..micro {
+        // per-micro-batch values of microbatched gs tensors
+        let mut mb_val: Vec<Option<TensorId>> = vec![None; gs.num_tensors()];
+        mb_val[primary as usize] = Some(mb_inputs[m]);
+        for nid in gs.topo_order() {
+            let node = gs.node(nid);
+            let name = format!("{}_mb{m}", node.name);
+            let any_mb = node.inputs.iter().any(|&t| mb_val[t as usize].is_some());
+            let out = if !any_mb {
+                // a cut here would silently emit no boundary — reject it
+                ensure!(
+                    !cuts.contains(&nid),
+                    "stage cut at '{}', which is not micro-batched (pure parameter compute)",
+                    node.name
+                );
+                // pure parameter compute: shared across micro-batches
+                if m == 0 {
+                    let ins: Vec<TensorId> = node
+                        .inputs
+                        .iter()
+                        .map(|&t| rep_val[t as usize].expect("topo order"))
+                        .collect();
+                    let o = gd.add(&node.name, node.op.clone(), ins)?;
+                    rep_val[node.output as usize] = Some(o);
+                }
+                continue;
+            } else {
+                build_pp_node(&mut gd, gs, node, &name, m, &mb_val, &rep_val, &offs, &full)?
+            };
+            // stage boundary after this node?
+            let out = if let Some(boundary) = cuts.iter().position(|&c| c == nid) {
+                stage_boundary(&mut gd, &name, out, boundary * micro + m)
+            } else {
+                out
+            };
+            mb_val[node.output as usize] = Some(out);
+        }
+        let o = gs.outputs[0];
+        let Some(mb_out) = mb_val[o as usize] else {
+            bail!(
+                "pipeline split: output '{}' is not micro-batched (pure parameter chain)",
+                gs.tensor(o).name
+            );
+        };
+        outs.push(mb_out);
+    }
+    let gathered = gd.concat(out_name, outs, 0);
+    gd.mark_output(gathered);
+    let rel = ri.finish(gs, &gd)?;
+    gd.validate()?;
+    Ok((gd, rel))
+}
+
+/// Build one micro-batched copy of a `G_s` node. `mb_val` holds this
+/// micro-batch's values, `rep_val` the replicated (shared) tensors.
+#[allow(clippy::too_many_arguments)]
+fn build_pp_node(
+    gd: &mut Graph,
+    gs: &Graph,
+    node: &crate::ir::Node,
+    name: &str,
+    m: usize,
+    mb_val: &[Option<TensorId>],
+    rep_val: &[Option<TensorId>],
+    offs: &[(i64, i64)],
+    full: &[i64],
+) -> Result<TensorId> {
+    let mb = |t: TensorId| mb_val[t as usize];
+    let rep = |t: TensorId| -> Result<TensorId> {
+        rep_val[t as usize]
+            .ok_or_else(|| anyhow::anyhow!("tensor '{}' unavailable", gs.tensor(t).name))
+    };
+    let (lo, hi) = offs[m];
+    let op = &node.op;
+    if op.is_unary_elementwise() {
+        let x = mb(node.inputs[0])
+            .ok_or_else(|| anyhow::anyhow!("unary '{}' on non-micro-batched input", node.name))?;
+        return gd.add(name, op.clone(), vec![x]);
+    }
+    if op.is_binary_elementwise() {
+        let out_shape = gs.shape(node.output);
+        let mut ins = Vec::with_capacity(2);
+        for (j, &t) in node.inputs.iter().enumerate() {
+            let v = match mb(t) {
+                Some(v) => v,
+                None => {
+                    let r = rep(t)?;
+                    if gs.shape(t) == out_shape {
+                        // row-aligned operand: slice this micro-batch's rows
+                        gd.slice(&format!("{name}_in{j}"), r, 0, lo, hi)
+                    } else if gs.shape(t).first() == Some(&full[0]) {
+                        bail!(
+                            "pipeline split: operand '{}' of '{}' is row-aligned but not \
+                             shape-aligned — unsupported broadcast",
+                            gs.tensor(t).name,
+                            node.name
+                        );
+                    } else {
+                        r // trailing-dim broadcast is row-independent
+                    }
+                }
+            };
+            ins.push(v);
+        }
+        return gd.add(name, op.clone(), ins);
+    }
+    match op {
+        Op::MatMul => {
+            let x = mb(node.inputs[0]).ok_or_else(|| {
+                anyhow::anyhow!("matmul '{}' LHS must be micro-batched", node.name)
+            })?;
+            ensure!(
+                mb(node.inputs[1]).is_none(),
+                "pipeline split: matmul '{}' with micro-batched RHS mixes rows",
+                node.name
+            );
+            let w = rep(node.inputs[1])?;
+            gd.add(name, Op::MatMul, vec![x, w])
+        }
+        Op::Softmax { dim } if *dim != 0 => {
+            let x = mb(node.inputs[0])
+                .ok_or_else(|| anyhow::anyhow!("softmax '{}' input not micro-batched", node.name))?;
+            gd.add(name, op.clone(), vec![x])
+        }
+        Op::RmsNorm { .. } | Op::LayerNorm { .. } => {
+            let x = mb(node.inputs[0])
+                .ok_or_else(|| anyhow::anyhow!("norm '{}' input not micro-batched", node.name))?;
+            let mut ins = vec![x];
+            for &t in &node.inputs[1..] {
+                ins.push(rep(t)?);
+            }
+            gd.add(name, op.clone(), ins)
+        }
+        Op::Rope => {
+            let x = mb(node.inputs[0])
+                .ok_or_else(|| anyhow::anyhow!("rope '{}' input not micro-batched", node.name))?;
+            let cos = rep(node.inputs[1])?;
+            let sin = rep(node.inputs[2])?;
+            let cs = gd.slice(&format!("{name}_cos"), cos, 0, lo, hi);
+            let sn = gd.slice(&format!("{name}_sin"), sin, 0, lo, hi);
+            gd.add(name, Op::Rope, vec![x, cs, sn])
+        }
+        other => bail!(
+            "pipeline split: operator '{}' ({other}) mixes rows across micro-batches",
+            node.name
+        ),
+    }
+}
+
 /// Partition `[0, total)` into `ranks` balanced chunks; (start, end) per
 /// rank. For uneven divisors the first `total % ranks` chunks are one
 /// element longer, so the partition always covers `[0, total)` exactly,
@@ -226,6 +537,92 @@ mod tests {
         replicate_input(&mut gd, &mut ri, "W", &[4, 4]);
         let rel = ri.finish(&gs, &gd).unwrap();
         assert_eq!(rel.get(gs.tensor_by_name("W").unwrap()).len(), 1);
+    }
+
+    fn pp_chain() -> Graph {
+        let mut gs = Graph::new("chain");
+        let x = gs.input("x", vec![4, 4]);
+        let w = gs.input("w", vec![4, 4]);
+        let mm = gs.matmul("b0_mm", x, w);
+        let act = gs.op("b1_act", Op::Gelu, vec![mm]);
+        gs.mark_output(act);
+        gs
+    }
+
+    #[test]
+    fn pipeline_split_builds_boundaries_and_matches_numerically() {
+        let gs = pp_chain();
+        // cut after the matmul (node 0), 2 micro-batches
+        let (gd, ri) = pipeline_stage_split(&gs, &[0], 2, "b2_out").unwrap();
+        gd.validate().unwrap();
+        ri.validate_shapes(&gs, &gd).unwrap();
+        let sends: Vec<_> = gd
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Send { .. }))
+            .map(|n| n.name.clone())
+            .collect();
+        assert_eq!(sends, vec!["b0_mm_mb0_send", "b0_mm_mb1_send"]);
+        // distinct channel per (boundary, micro-batch)
+        let chans: Vec<usize> = gd
+            .nodes()
+            .iter()
+            .filter_map(|n| match n.op {
+                Op::Send { chan } => Some(chan),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(chans, vec![0, 1]);
+
+        // numeric: gathered G_d output == G_s output on R_i-consistent inputs
+        use crate::expr::eval::eval_graph;
+        use crate::util::ndarray::NdArray;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let full = NdArray::new(vec![4, 4], rng.buf(16, 1.0)).unwrap();
+        let w = NdArray::new(vec![4, 4], rng.buf(16, 1.0)).unwrap();
+        let mut gs_in = rustc_hash::FxHashMap::default();
+        gs_in.insert(gs.tensor_by_name("x").unwrap(), full.clone());
+        gs_in.insert(gs.tensor_by_name("w").unwrap(), w.clone());
+        let mut gd_in = rustc_hash::FxHashMap::default();
+        gd_in.insert(gd.tensor_by_name("x_r0").unwrap(), full.slice(0, 0, 2).unwrap());
+        gd_in.insert(gd.tensor_by_name("x_r1").unwrap(), full.slice(0, 2, 4).unwrap());
+        gd_in.insert(gd.tensor_by_name("w_rep").unwrap(), w);
+        let a = eval_graph(&gs, &gs_in).unwrap();
+        let b = eval_graph(&gd, &gd_in).unwrap();
+        assert!(a[gs.outputs[0] as usize].allclose(&b[gd.outputs[0] as usize], 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn pipeline_split_rejects_row_mixing_ops() {
+        // transpose mixes rows across micro-batches — must be rejected
+        let mut gs = Graph::new("bad");
+        let x = gs.input("x", vec![4, 4]);
+        let t = gs.transpose("t", x, vec![1, 0]);
+        gs.mark_output(t);
+        assert!(pipeline_stage_split(&gs, &[], 2, "out").is_err());
+    }
+
+    #[test]
+    fn pipeline_split_rejects_indivisible_microbatching() {
+        let gs = pp_chain();
+        assert!(pipeline_stage_split(&gs, &[0], 3, "out").is_err());
+    }
+
+    #[test]
+    fn fsdp_param_gathers_to_full_shape() {
+        let mut gs = Graph::new("gs");
+        gs.input("W", vec![8, 4]);
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        let w = fsdp_shard_params(&mut gd, &mut ri, "W", "W_ag", &[8, 4], 4).unwrap();
+        assert_eq!(gd.shape(w), &[8, 4]);
+        assert_eq!(gd.inputs.len(), 4);
+        let rel = ri.finish(&gs, &gd).unwrap();
+        assert!(rel.contains(gs.tensor_by_name("W").unwrap()));
+        // indivisible storage dim rejected (the Fig-5 hole, FSDP flavor)
+        let mut gd2 = Graph::new("gd2");
+        let mut ri2 = RiBuilder::new();
+        assert!(fsdp_shard_params(&mut gd2, &mut ri2, "W", "W_ag", &[9, 4], 4).is_err());
     }
 
     #[test]

@@ -158,3 +158,16 @@ fn differential_qwen2_tp() {
     let (gs, gd, ri) = qwen2::tp_pair(2, 1).expect("qwen2 tp builds");
     assert_differential("qwen2_tp_2", &gs, &gd, &ri);
 }
+
+#[test]
+fn differential_gpt_pp_tp() {
+    let (gs, gd, ri) = gpt::pp_tp_pair(2, 2, 2).expect("gpt pp×tp builds");
+    assert_differential("gpt_pp2_tp_2", &gs, &gd, &ri);
+}
+
+#[test]
+fn differential_llama3_fsdp() {
+    let (gs, gd, ri) =
+        llama::fsdp_pair(2, 1, &llama::LlamaConfig::default()).expect("llama fsdp builds");
+    assert_differential("llama3_fsdp_2", &gs, &gd, &ri);
+}

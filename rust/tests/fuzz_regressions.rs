@@ -1,0 +1,44 @@
+//! Replayable regression fixtures for the PP/FSDP strategy families.
+//!
+//! Each fixture under `fixtures/` uses the exact JSON schema the fuzzer's
+//! `record_cex` writes for minimized counterexamples, so `graphguard fuzz
+//! --replay <file>` accepts them verbatim. They pin down the intended
+//! verdicts for the new strategy families: clean pipeline pairs verify, and
+//! the stage-wiring / stale-shard bug operators are rejected with an
+//! in-region localization. If a future checker or lemma change flips one of
+//! these verdicts, the corresponding soundness property has regressed.
+
+use graphguard::fuzz;
+use graphguard::util::json::Json;
+
+fn replay(text: &str) -> String {
+    let j = Json::parse(text).unwrap_or_else(|e| panic!("fixture must parse: {e}"));
+    fuzz::replay_counterexample(&j).unwrap_or_else(|e| panic!("fixture must replay: {e:#}"))
+}
+
+#[test]
+fn pp_clean_pair_fixture_verifies() {
+    let verdict = replay(include_str!("fixtures/pp_clean_verifies.json"));
+    assert!(
+        verdict.contains("clean pair verifies"),
+        "clean PP pair regressed into a false alarm: {verdict}"
+    );
+}
+
+#[test]
+fn pp_crossed_boundary_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/pp_crossed_send_recv_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "crossed send/recv must stay detected with an in-stage locus"
+    );
+}
+
+#[test]
+fn fsdp_stale_shard_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/fsdp_stale_shard_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "stale FSDP shard must stay detected with an in-block locus"
+    );
+}

@@ -98,6 +98,40 @@ fn known_mutants_killed_across_flavors() {
             "b0_ss",
             0usize,
         ),
+        // crossed pipeline boundary: recv of micro-batch 1 reads micro-batch
+        // 0's send — stage 2 runs on duplicated data
+        (
+            Flavor::Pp,
+            vec![Block::Linear, Block::Unary(UnaryKind::Gelu)],
+            MutKind::CrossedSendRecv,
+            "b0_mm_mb1_recv",
+            0usize,
+        ),
+        // dropped boundary: the recv buffer was never written, stage 2 reads
+        // the raw stage input
+        (
+            Flavor::Pp,
+            vec![Block::Linear, Block::Unary(UnaryKind::Gelu)],
+            MutKind::DroppedBoundary,
+            "b0_mm_mb0_recv",
+            0usize,
+        ),
+        // stale ZeRO/FSDP shard: the W1 re-gather picks up a chunk of W0
+        (
+            Flavor::Fsdp,
+            vec![Block::Linear, Block::Mlp(UnaryKind::Silu)],
+            MutKind::StaleShardGather,
+            "b1_w1a_ag",
+            1usize,
+        ),
+        // off-by-one micro-batch combine factor (1/2 -> 1/3)
+        (
+            Flavor::Dp,
+            vec![Block::Scale(0.5), Block::Norm(NormKind::Softmax)],
+            MutKind::MicrobatchScaleOffby,
+            "b0_scale",
+            0usize,
+        ),
     ];
     for (flavor, blocks, kind, node, min_block) in cases {
         let spec = ModelSpec { seed: 5, ranks: 2, seq: 4, hidden: 4, flavor, blocks };

@@ -4,15 +4,22 @@
 //! overlap) for uneven divisors, `ranks == 1`, and degenerate sizes; the
 //! shard/replicate helpers must record input relations that numerically
 //! round-trip: evaluating the recorded `R_i` expression on the shards
-//! reconstructs the original tensor.
+//! reconstructs the original tensor. The same coverage discipline extends
+//! to pipeline stage splits (every block lands in exactly one non-empty
+//! stage) and to FSDP parameter gathers (shards re-concatenate to the
+//! stored parameter bit-for-bit).
 
-use graphguard::expr::eval::{eval_expr, Env};
+use graphguard::expr::eval::{eval_expr, eval_graph, Env};
 use graphguard::expr::TensorRef;
-use graphguard::ir::Graph;
-use graphguard::strategies::{chunks, replicate_input, shard_input, RiBuilder};
+use graphguard::ir::{Graph, Op};
+use graphguard::strategies::{
+    chunks, fsdp_shard_params, pipeline_stage_split, replicate_input, shard_input, stage_ends,
+    RiBuilder,
+};
 use graphguard::util::ndarray::NdArray;
 use graphguard::util::proptest::Prop;
 use graphguard::util::rng::Rng;
+use rustc_hash::FxHashMap;
 
 #[test]
 fn chunks_partition_covers_range_without_overlap() {
@@ -142,6 +149,123 @@ fn uneven_shard_degrees_are_rejected() {
         let mut ri = RiBuilder::new();
         if shard_input(&mut gd, &mut ri, "X", &[extent, 4], 0, ranks).is_ok() {
             return Err(format!("sharding {extent} rows over {ranks} ranks must fail"));
+        }
+        Ok(())
+    });
+}
+
+/// `stage_ends` places exactly `stages - 1` boundaries, strictly
+/// increasing, strictly inside `(0, layers)` (so no stage is empty), and
+/// consistent with the `chunks` partition of the layer range.
+#[test]
+fn stage_split_covers_blocks_without_empty_stages() {
+    Prop::new("stage boundary placement").cases(96).check(|rng| {
+        let layers = 1 + rng.below(12) as usize; // 1..=12
+        let stages = 1 + rng.below(layers as u64) as usize; // 1..=layers
+        let ends = stage_ends(layers, stages);
+        if ends.len() != stages - 1 {
+            return Err(format!(
+                "{stages} stages over {layers} layers need {} boundaries, got {:?}",
+                stages - 1,
+                ends
+            ));
+        }
+        let mut prev = 0usize;
+        for &e in &ends {
+            if e <= prev || e >= layers {
+                return Err(format!(
+                    "boundary {e} out of range (prev {prev}, layers {layers}): {ends:?}"
+                ));
+            }
+            prev = e;
+        }
+        // consistent with the chunks partition: boundary k ends stage k
+        let parts = chunks(layers as i64, stages);
+        for (k, &e) in ends.iter().enumerate() {
+            if parts[k].1 != e as i64 {
+                return Err(format!("boundary {k} at {e} disagrees with chunks {parts:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `pipeline_stage_split` numeric round-trip: for random micro-batch
+/// degrees and chain shapes, the gathered micro-batched output equals the
+/// sequential output on `R_i`-consistent inputs.
+#[test]
+fn pipeline_split_roundtrips_numerically() {
+    Prop::new("pipeline split preserves chain semantics").cases(24).check(|rng| {
+        let micro = [1usize, 2, 2, 4][rng.below(4) as usize];
+        let rows = micro as i64 * (1 + rng.below(3) as i64);
+        let cols = 2 * (1 + rng.below(3) as i64);
+        let mut gs = Graph::new("chain");
+        let x = gs.input("x", vec![rows, cols]);
+        let w = gs.input("w", vec![cols, cols]);
+        let mm = gs.matmul("b0_mm", x, w);
+        let act = gs.op("b1_act", Op::Gelu, vec![mm]);
+        let sc = gs.scale("b2_scale", act, 0.5);
+        gs.mark_output(sc);
+        let (gd, ri) = pipeline_stage_split(&gs, &[0], micro, "b3_out")
+            .map_err(|e| format!("{e:#}"))?;
+        gd.validate().map_err(|e| format!("{e:#}"))?;
+        ri.validate_shapes(&gs, &gd).map_err(|e| format!("{e:#}"))?;
+
+        let mut r2 = Rng::new(rng.next_u64());
+        let full = NdArray::new(vec![rows, cols], r2.buf((rows * cols) as usize, 1.0)).unwrap();
+        let wv = NdArray::new(vec![cols, cols], r2.buf((cols * cols) as usize, 1.0)).unwrap();
+        let mut gs_in: FxHashMap<u32, NdArray> = FxHashMap::default();
+        gs_in.insert(x, full.clone());
+        gs_in.insert(w, wv.clone());
+        let mut gd_in: FxHashMap<u32, NdArray> = FxHashMap::default();
+        for (m, &(lo, hi)) in chunks(rows, micro).iter().enumerate() {
+            let name = format!("x_r{m}");
+            let id = gd.tensor_by_name(&name).ok_or_else(|| format!("missing input {name}"))?;
+            gd_in.insert(id, full.slice(0, lo, hi).map_err(|e| format!("{e:#}"))?);
+        }
+        let wid = gd.tensor_by_name("w_rep").ok_or_else(|| "missing w_rep".to_string())?;
+        gd_in.insert(wid, wv);
+        let a = eval_graph(&gs, &gs_in).map_err(|e| format!("{e:#}"))?;
+        let b = eval_graph(&gd, &gd_in).map_err(|e| format!("{e:#}"))?;
+        let (ga, gb) = (&a[gs.outputs[0] as usize], &b[gd.outputs[0] as usize]);
+        if ga.shape() != gb.shape() || !ga.allclose(gb, 1e-5, 1e-6) {
+            return Err(format!(
+                "pipeline output diverges at micro={micro} rows={rows} cols={cols}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// FSDP parameter gathers re-concatenate the stored shards exactly.
+#[test]
+fn fsdp_gather_roundtrips_numerically() {
+    Prop::new("fsdp shard/gather round-trip").cases(32).check(|rng| {
+        let ranks = [1usize, 2, 2, 4][rng.below(4) as usize];
+        let rows = ranks as i64 * (1 + rng.below(3) as i64);
+        let cols = 1 + rng.below(4) as i64;
+        let mut gs = Graph::new("gs");
+        gs.input("W", vec![rows, cols]);
+        let mut gd = Graph::new("gd");
+        let mut ri = RiBuilder::new();
+        let gathered = fsdp_shard_params(&mut gd, &mut ri, "W", "W_ag", &[rows, cols], ranks)
+            .map_err(|e| format!("{e:#}"))?;
+        gd.mark_output(gathered);
+        ri.finish(&gs, &gd).map_err(|e| format!("{e:#}"))?;
+
+        let mut r2 = Rng::new(rng.next_u64());
+        let full = NdArray::new(vec![rows, cols], r2.buf((rows * cols) as usize, 1.0)).unwrap();
+        let mut gd_in: FxHashMap<u32, NdArray> = FxHashMap::default();
+        for (rk, &(lo, hi)) in chunks(rows, ranks).iter().enumerate() {
+            let id = gd
+                .tensor_by_name(&format!("W_r{rk}"))
+                .ok_or_else(|| format!("missing shard W_r{rk}"))?;
+            gd_in.insert(id, full.slice(0, lo, hi).map_err(|e| format!("{e:#}"))?);
+        }
+        let vals = eval_graph(&gd, &gd_in).map_err(|e| format!("{e:#}"))?;
+        let got = &vals[gathered as usize];
+        if !got.allclose(&full, 0.0, 0.0) {
+            return Err("gathered param must equal the stored param exactly".into());
         }
         Ok(())
     });
