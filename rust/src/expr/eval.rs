@@ -138,6 +138,84 @@ pub fn eval_op(op: &Op, args: &[&NdArray]) -> Result<NdArray> {
             let chunk = sum.shape()[*dim] / *ranks as i64;
             sum.slice(*dim, *index as i64 * chunk, (*index as i64 + 1) * chunk)
         }
+        Op::TopK { k } => {
+            ensure!(args.len() == 1, "topk arity");
+            let x = args[0];
+            ensure!(x.ndim() == 2, "topk rank");
+            let (rows, e) = (x.shape()[0] as usize, x.shape()[1] as usize);
+            let mut out = NdArray::zeros(x.shape().to_vec());
+            for t in 0..rows {
+                let row = &x.data()[t * e..(t + 1) * e];
+                let mut idx: Vec<usize> = (0..e).collect();
+                // largest first; ties broken toward the lower expert index
+                idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+                for &j in idx.iter().take(*k) {
+                    out.data_mut()[t * e + j] = 1.0;
+                }
+            }
+            Ok(out)
+        }
+        Op::Dispatch { expert, capacity } => {
+            ensure!(args.len() == 2, "dispatch arity");
+            let (x, r) = (args[0], args[1]);
+            ensure!(r.ndim() == 2, "dispatch router rank");
+            let (rows, e) = (r.shape()[0] as usize, r.shape()[1] as usize);
+            ensure!(
+                rows > 0 && x.ndim() >= 1 && x.shape()[0] as usize == rows,
+                "dispatch rows {:?} vs router {:?}",
+                x.shape(),
+                r.shape()
+            );
+            let inner = x.len() / rows;
+            let mut out = NdArray::zeros(x.shape().to_vec());
+            // assigned tokens beyond `capacity` (in row order) are silently
+            // dropped — the capacity-overflow behavior the mutation operator
+            // `capacity_truncate_silent` exploits
+            let mut used = 0usize;
+            for t in 0..rows {
+                let w = r.data()[t * e + *expert];
+                if w != 0.0 {
+                    if used < *capacity {
+                        for j in 0..inner {
+                            out.data_mut()[t * inner + j] = w * x.data()[t * inner + j];
+                        }
+                    }
+                    used += 1;
+                }
+            }
+            Ok(out)
+        }
+        Op::Combine { experts } => {
+            ensure!(args.len() == *experts + 1, "combine arity");
+            let w = args[0];
+            ensure!(
+                w.ndim() == 2 && w.shape()[1] == *experts as i64,
+                "combine weights shape {:?}",
+                w.shape()
+            );
+            let rows = w.shape()[0] as usize;
+            let y0 = args[1];
+            ensure!(
+                rows > 0 && y0.ndim() >= 1 && y0.shape()[0] as usize == rows,
+                "combine rows {:?} vs weights {:?}",
+                y0.shape(),
+                w.shape()
+            );
+            let inner = y0.len() / rows;
+            let mut out = NdArray::zeros(y0.shape().to_vec());
+            for (e, y) in args[1..].iter().enumerate() {
+                ensure!(y.shape() == y0.shape(), "combine expert shape mismatch");
+                for t in 0..rows {
+                    let g = w.data()[t * *experts + e];
+                    if g != 0.0 {
+                        for j in 0..inner {
+                            out.data_mut()[t * inner + j] += g * y.data()[t * inner + j];
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        }
         Op::Custom { name } => crate::lemmas::custom::registry_eval(name, args),
     }
 }
@@ -284,6 +362,52 @@ mod tests {
         let out = eval_op(&Op::MseLoss, &[&a, &b]).unwrap();
         assert_eq!(out.shape(), &[] as &[i64]);
         assert!((out.data()[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_masks_largest_with_lower_index_ties() {
+        let s = nd(vec![2, 3], vec![0.1, 0.9, 0.5, 2.0, 2.0, -1.0]);
+        let m1 = eval_op(&Op::TopK { k: 1 }, &[&s]).unwrap();
+        assert_eq!(m1.data(), &[0., 1., 0., 1., 0., 0.], "row 1 tie → lower index");
+        let m2 = eval_op(&Op::TopK { k: 2 }, &[&s]).unwrap();
+        assert_eq!(m2.data(), &[0., 1., 1., 1., 1., 0.]);
+    }
+
+    #[test]
+    fn dispatch_masks_rows_and_respects_capacity() {
+        let x = nd(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let r = nd(vec![3, 2], vec![1., 0., 0., 1., 1., 0.]);
+        // expert 0 takes rows 0 and 2
+        let d = eval_op(&Op::Dispatch { expert: 0, capacity: 3 }, &[&x, &r]).unwrap();
+        assert_eq!(d.data(), &[1., 2., 0., 0., 5., 6.]);
+        // capacity 1: the second assigned row (row 2) is silently dropped
+        let d1 = eval_op(&Op::Dispatch { expert: 0, capacity: 1 }, &[&x, &r]).unwrap();
+        assert_eq!(d1.data(), &[1., 2., 0., 0., 0., 0.]);
+        // non-0/1 router weights scale the dispatched rows
+        let rw = nd(vec![3, 2], vec![0.5, 0., 0., 1., 2., 0.]);
+        let dw = eval_op(&Op::Dispatch { expert: 0, capacity: 3 }, &[&x, &rw]).unwrap();
+        assert_eq!(dw.data(), &[0.5, 1., 0., 0., 10., 12.]);
+    }
+
+    #[test]
+    fn combine_is_router_weighted_sum() {
+        let w = nd(vec![2, 2], vec![1., 0., 0.25, 0.75]);
+        let y0 = nd(vec![2, 2], vec![1., 1., 4., 4.]);
+        let y1 = nd(vec![2, 2], vec![2., 2., 8., 8.]);
+        let out = eval_op(&Op::Combine { experts: 2 }, &[&w, &y0, &y1]).unwrap();
+        assert_eq!(out.data(), &[1., 1., 7., 7.]);
+    }
+
+    #[test]
+    fn dispatch_combine_topk_roundtrip() {
+        // combine(m, dispatch(x,m;0), dispatch(x,m;1)) == x for a top-1 mask
+        let s = nd(vec![3, 2], vec![0.3, 0.1, -0.5, 0.2, 1.0, 0.9]);
+        let x = nd(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let m = eval_op(&Op::TopK { k: 1 }, &[&s]).unwrap();
+        let d0 = eval_op(&Op::Dispatch { expert: 0, capacity: 3 }, &[&x, &m]).unwrap();
+        let d1 = eval_op(&Op::Dispatch { expert: 1, capacity: 3 }, &[&x, &m]).unwrap();
+        let back = eval_op(&Op::Combine { experts: 2 }, &[&m, &d0, &d1]).unwrap();
+        assert!(back.allclose(&x, 0.0, 0.0), "top-1 dispatch/combine is exact");
     }
 
     #[test]

@@ -87,6 +87,54 @@ impl Expr {
         }
     }
 
+    /// Is this a *conditional* (router-guarded) relation expression — does
+    /// it contain a `Dispatch`/`Combine` whose meaning depends on a router
+    /// operand? Such expressions are clean only relative to the guard
+    /// tensors reported by [`Expr::guard_leaves`].
+    pub fn is_router_conditioned(&self) -> bool {
+        match self {
+            Expr::Leaf(_) => false,
+            Expr::Op(op, args) => {
+                matches!(op.tag(), crate::ir::OpTag::Dispatch | crate::ir::OpTag::Combine)
+                    || args.iter().any(Expr::is_router_conditioned)
+            }
+        }
+    }
+
+    /// The guard tensors of a conditional relation: every leaf reachable
+    /// through a *router operand* position — input 1 of `Dispatch`, input 0
+    /// of `Combine`. The expression reconstructs its `G_s` tensor only
+    /// because these tensors are the routing decision both graphs share;
+    /// they are the "router predicate" of the paper-style conditional
+    /// relation. Sorted and deduplicated like [`Expr::leaves`].
+    pub fn guard_leaves(&self) -> Vec<TensorRef> {
+        let mut out = Vec::new();
+        self.collect_guard_leaves(false, &mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_guard_leaves(&self, in_guard: bool, out: &mut Vec<TensorRef>) {
+        match self {
+            Expr::Leaf(t) => {
+                if in_guard {
+                    out.push(*t);
+                }
+            }
+            Expr::Op(op, args) => {
+                for (i, a) in args.iter().enumerate() {
+                    let guard_pos = match op.tag() {
+                        crate::ir::OpTag::Dispatch => i == 1,
+                        crate::ir::OpTag::Combine => i == 0,
+                        _ => false,
+                    };
+                    a.collect_guard_leaves(in_guard || guard_pos, out);
+                }
+            }
+        }
+    }
+
     /// Do all leaves satisfy `pred`?
     pub fn leaves_all(&self, pred: &impl Fn(TensorRef) -> bool) -> bool {
         match self {
@@ -141,6 +189,27 @@ mod tests {
     fn leaves_sorted_dedup() {
         let e = Expr::op(Op::Add, vec![Expr::leaf(TensorRef::d(2)), Expr::leaf(TensorRef::d(2))]);
         assert_eq!(e.leaves(), vec![TensorRef::d(2)]);
+    }
+
+    #[test]
+    fn router_conditioned_expressions_and_guards() {
+        // combine(m, dispatch(x, m; 0), dispatch(x, m; 1)) — clean, but
+        // conditional on the router leaf m
+        let m = Expr::leaf(TensorRef::d(7));
+        let x = Expr::leaf(TensorRef::d(3));
+        let d0 = Expr::op(Op::Dispatch { expert: 0, capacity: 4 }, vec![x.clone(), m.clone()]);
+        let d1 = Expr::op(Op::Dispatch { expert: 1, capacity: 4 }, vec![x.clone(), m.clone()]);
+        let e = Expr::op(Op::Combine { experts: 2 }, vec![m.clone(), d0, d1]);
+        assert!(e.is_clean(), "dispatch/combine are (conditionally) clean");
+        assert!(e.is_router_conditioned());
+        assert_eq!(e.guard_leaves(), vec![TensorRef::d(7)], "the router is the guard");
+        // an unconditional clean expression has no guards
+        let plain = Expr::op(Op::Concat { dim: 0 }, vec![x.clone(), m]);
+        assert!(!plain.is_router_conditioned());
+        assert!(plain.guard_leaves().is_empty());
+        // topk itself is compute, not a clean rearrangement
+        let tk = Expr::op(Op::TopK { k: 1 }, vec![x]);
+        assert!(!tk.is_clean());
     }
 
     #[test]

@@ -277,6 +277,12 @@ fn build(name: &str, args: Vec<Expr>, attrs: &BTreeMap<String, Value>) -> Result
         },
         "send" => Op::Send { chan: need("chan")?.usize_()? },
         "recv" => Op::Recv { chan: need("chan")?.usize_()? },
+        "topk" => Op::TopK { k: need("k")?.usize_()? },
+        "dispatch" => Op::Dispatch {
+            expert: need("expert")?.usize_()?,
+            capacity: need("capacity")?.usize_()?,
+        },
+        "combine" => Op::Combine { experts: need("experts")?.usize_()? },
         custom => Op::Custom { name: custom.to_string() },
     };
     Ok(Expr::Op(op, args))
@@ -320,6 +326,9 @@ mod tests {
             "scale(A_1; c=0.5)",
             "reduce_sum(A_1; dim=0, keepdim=true)",
             "all_gather(A_1, A_2; dim=1, ranks=2)",
+            "topk(A_1; k=1)",
+            "dispatch(A_1, A_2; expert=1, capacity=4)",
+            "combine(A_1, A_2; experts=1)",
         ] {
             let e = parse(src, &resolve).unwrap();
             assert_eq!(render(&e, &namer), src, "roundtrip {src}");

@@ -104,6 +104,12 @@ pub fn attr_string(op: &Op) -> String {
             kv("index", index.to_string());
         }
         Op::Send { chan } | Op::Recv { chan } => kv("chan", chan.to_string()),
+        Op::TopK { k } => kv("k", k.to_string()),
+        Op::Dispatch { expert, capacity } => {
+            kv("expert", expert.to_string());
+            kv("capacity", capacity.to_string());
+        }
+        Op::Combine { experts } => kv("experts", experts.to_string()),
         _ => {}
     }
     s

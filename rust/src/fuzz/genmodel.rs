@@ -24,6 +24,13 @@
 //! - [`Flavor::Fsdp`] — compute replicated 1:1, but every parameter is
 //!   stored 1/R-sharded along its leading dim and all-gathered before use
 //!   (`strategies::fsdp_shard_params`).
+//! - [`Flavor::Moe`] — expert parallelism over [`Block::Moe`] blocks
+//!   (`strategies::moe_from_seq`): compute mirrored 1:1, every `combine`
+//!   split into per-rank partial combines over disjoint expert column
+//!   slices of the router weights, merged by an all-reduce. Routing is
+//!   data-dependent (top-1 gating over `2·ranks` experts); verification
+//!   relies on the router-conditioned relation language and the `routing`
+//!   lemma family.
 //!
 //! Every construction is covered by lemmas in `crate::lemmas`
 //! (matmul block splits, unary/softmax/rmsnorm over concat, collective
@@ -39,8 +46,8 @@
 use crate::ir::{DType, Graph, Op, TensorId};
 use crate::relation::Relation;
 use crate::strategies::{
-    chunks, col_shard_weight, fsdp_from_seq, pipeline_stage_split, replicate_input_typed,
-    row_shard_weight, shard_input_typed, stage_ends, RiBuilder,
+    chunks, col_shard_weight, fsdp_from_seq, moe_from_seq, pipeline_stage_split,
+    replicate_input_typed, row_shard_weight, shard_input_typed, stage_ends, RiBuilder,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -59,6 +66,9 @@ pub enum Flavor {
     Pp,
     /// ZeRO-3/FSDP: parameters 1/R-sharded, all-gathered before use.
     Fsdp,
+    /// Expert parallelism: per-rank partial combines over disjoint expert
+    /// slices, all-reduced (router-conditioned MoE).
+    Moe,
 }
 
 impl Flavor {
@@ -69,6 +79,7 @@ impl Flavor {
             Flavor::Tp => "tp",
             Flavor::Pp => "pp",
             Flavor::Fsdp => "fsdp",
+            Flavor::Moe => "moe",
         }
     }
     pub fn parse(s: &str) -> Option<Flavor> {
@@ -78,6 +89,7 @@ impl Flavor {
             "tp" => Some(Flavor::Tp),
             "pp" => Some(Flavor::Pp),
             "fsdp" => Some(Flavor::Fsdp),
+            "moe" => Some(Flavor::Moe),
             _ => None,
         }
     }
@@ -161,6 +173,10 @@ pub enum Block {
     /// Single-head self-attention (q/k/v projections, scaled scores,
     /// softmax, value mix).
     Attention,
+    /// Switch-style top-1 MoE over `2·ranks` experts: router softmax,
+    /// `topk` mask, normalized gate weights, per-expert dispatch + FFN,
+    /// router-weighted combine. Only valid under [`Flavor::Moe`].
+    Moe(UnaryKind),
 }
 
 impl Block {
@@ -174,13 +190,16 @@ impl Block {
             Block::Norm(_) => "norm",
             Block::Rope => "rope",
             Block::Attention => "attention",
+            Block::Moe(_) => "moe",
         }
     }
 
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![("kind", Json::str(self.kind_name()))];
         match self {
-            Block::Unary(k) | Block::Mlp(k) => pairs.push(("op", Json::str(k.name()))),
+            Block::Unary(k) | Block::Mlp(k) | Block::Moe(k) => {
+                pairs.push(("op", Json::str(k.name())))
+            }
             Block::Scale(c) => pairs.push(("c", Json::num(*c))),
             Block::Norm(n) => pairs.push(("norm", Json::str(n.name()))),
             _ => {}
@@ -208,6 +227,7 @@ impl Block {
             }
             "rope" => Block::Rope,
             "attention" => Block::Attention,
+            "moe" => Block::Moe(unary()?),
             other => bail!("unknown block kind '{other}'"),
         })
     }
@@ -288,7 +308,24 @@ impl ModelSpec {
                 "pp flavor cannot micro-batch attention (rows mix across micro-batches)"
             );
         }
+        let has_moe = self.blocks.iter().any(|b| matches!(b, Block::Moe(_)));
+        if has_moe {
+            anyhow::ensure!(
+                self.flavor == Flavor::Moe,
+                "moe blocks are only distributable under the moe flavor"
+            );
+        }
+        if self.flavor == Flavor::Moe {
+            anyhow::ensure!(has_moe, "moe flavor needs at least one moe block");
+            anyhow::ensure!(self.ranks >= 2, "expert parallelism needs at least 2 ranks");
+        }
         Ok(())
+    }
+
+    /// Experts of every [`Block::Moe`] in this spec: two per rank, so the
+    /// expert count always divides the parallel degree.
+    pub fn moe_experts(&self) -> i64 {
+        2 * self.ranks as i64
     }
 }
 
@@ -306,11 +343,15 @@ const SCALE_CHOICES: [f64; 4] = [0.5, 2.0, 0.25, 1.5];
 pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
     let seq = ranks as i64 * (1 + rng.below(3) as i64); // R, 2R or 3R rows
     let hidden = ranks as i64 * 2 * (1 + rng.below(2) as i64); // even, % ranks == 0
-    let flavor = match rng.below(7) {
+    let flavor = match rng.below(8) {
         0 => Flavor::Dp,
         1 | 2 => Flavor::Sp,
         3 | 4 => Flavor::Tp,
         5 => Flavor::Pp,
+        6 => Flavor::Fsdp,
+        // EP needs >= 2 ranks to place experts on; degenerate degrees fall
+        // back to FSDP so every sampled spec stays buildable
+        _ if ranks >= 2 => Flavor::Moe,
         _ => Flavor::Fsdp,
     };
     let n_blocks = 2 + rng.below(4) as usize; // 2..=5
@@ -330,7 +371,15 @@ pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
                     Block::Linear
                 }
             }
-            4 => Block::Mlp(UNARY_KINDS[rng.below(UNARY_KINDS.len() as u64) as usize]),
+            4 => {
+                let k = UNARY_KINDS[rng.below(UNARY_KINDS.len() as u64) as usize];
+                // under EP the FFN block is the expert-parallel MoE block
+                if flavor == Flavor::Moe {
+                    Block::Moe(k)
+                } else {
+                    Block::Mlp(k)
+                }
+            }
             5 => Block::Norm(if rng.below(2) == 0 { NormKind::Softmax } else { NormKind::RmsNorm }),
             6 => Block::Rope,
             _ => {
@@ -344,6 +393,11 @@ pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
             }
         };
         blocks.push(block);
+    }
+    if flavor == Flavor::Moe && !blocks.iter().any(|b| matches!(b, Block::Moe(_))) {
+        // the EP flavor must expert-shard something: force one MoE block
+        let last = blocks.len() - 1;
+        blocks[last] = Block::Moe(UnaryKind::Silu);
     }
     ModelSpec { seed, ranks, seq, hidden, flavor, blocks }
 }
@@ -399,6 +453,30 @@ fn build_gs(spec: &ModelSpec) -> (Graph, Vec<TensorId>) {
                 let p = gs.softmax(&format!("b{i}_p"), ss, 1);
                 cur = gs.matmul(&format!("b{i}_o"), p, v);
             }
+            Block::Moe(k) => {
+                // switch-style top-1 MoE: softmax router, top-k mask,
+                // normalized gate weights, per-expert dispatch + FFN,
+                // router-weighted combine (capacity = full sequence)
+                let e = spec.moe_experts();
+                let wg = gs.input(&format!("wg{i}"), vec![h, e]);
+                let scores = gs.matmul(&format!("b{i}_router"), cur, wg);
+                let probs = gs.softmax(&format!("b{i}_probs"), scores, 1);
+                let mask = gs.topk(&format!("b{i}_mask"), probs, 1);
+                let wts = gs.mul2(&format!("b{i}_wts"), mask, probs);
+                let denom =
+                    gs.op(&format!("b{i}_denom"), Op::ReduceSum { dim: 1, keepdim: true }, vec![wts]);
+                let gates = gs.op(&format!("b{i}_gates"), Op::Div, vec![wts, denom]);
+                let mut ys = Vec::with_capacity(e as usize);
+                for ex in 0..e as usize {
+                    let w1 = gs.input(&format!("w{i}e{ex}a"), vec![h, h]);
+                    let w2 = gs.input(&format!("w{i}e{ex}b"), vec![h, h]);
+                    let d = gs.dispatch(&format!("b{i}_disp{ex}"), cur, mask, ex, s as usize);
+                    let h1 = gs.matmul(&format!("b{i}_e{ex}_h1"), d, w1);
+                    let a = gs.op(&format!("b{i}_e{ex}_act"), k.op(), vec![h1]);
+                    ys.push(gs.matmul(&format!("b{i}_e{ex}_h2"), a, w2));
+                }
+                cur = gs.combine(&format!("b{i}_moe"), gates, ys);
+            }
         }
         block_ends.push(cur);
     }
@@ -436,6 +514,14 @@ pub fn build_pair(spec: &ModelSpec) -> Result<(Graph, Graph, Relation)> {
         return Ok((gs, gd, ri));
     }
 
+    if spec.flavor == Flavor::Moe {
+        // expert parallelism: compute mirrored 1:1, combines split into
+        // per-rank partial combines over disjoint expert slices + all-reduce
+        let (gd, ri) = moe_from_seq(&gs, r)?;
+        gs.validate()?;
+        return Ok((gs, gd, ri));
+    }
+
     if spec.flavor == Flavor::Fsdp {
         // params are the w*/g* inputs; x and the rope cos/sin tables are
         // activations/buffers. Gather nodes are named b{i}_{name}_ag (block
@@ -458,7 +544,7 @@ pub fn build_pair(spec: &ModelSpec) -> Result<(Graph, Graph, Relation)> {
     let mut ri = RiBuilder::new();
 
     match spec.flavor {
-        Flavor::Pp | Flavor::Fsdp => unreachable!("handled above"),
+        Flavor::Pp | Flavor::Fsdp | Flavor::Moe => unreachable!("handled above"),
         Flavor::Dp => {
             let mut cur = replicate_input_typed(&mut gd, &mut ri, "x", &[s, h], DType::F32);
             for (i, block) in spec.blocks.iter().enumerate() {
@@ -537,6 +623,9 @@ fn build_block_replicated(
             let p = gd.softmax(&format!("b{i}_p"), ss, 1);
             gd.matmul(&format!("b{i}_o"), p, v)
         }
+        // validate() restricts Moe blocks to the Moe flavor, which never
+        // reaches the per-block builders (moe_from_seq mirrors whole graphs)
+        Block::Moe(_) => bail!("moe blocks only distribute under the moe flavor"),
     })
 }
 
@@ -645,6 +734,8 @@ fn build_block_sp(
                 })
                 .collect()
         }
+        // see build_block_replicated: unreachable by validate()
+        Block::Moe(_) => bail!("moe blocks only distribute under the moe flavor"),
     })
 }
 
@@ -775,9 +866,73 @@ mod tests {
             gd.validate().unwrap();
             ri.validate_shapes(&gs, &gd).unwrap();
         }
-        for f in ["dp", "sp", "tp", "pp", "fsdp"] {
+        for f in ["dp", "sp", "tp", "pp", "fsdp", "moe"] {
             assert!(seen.contains(f), "sampler never produced flavor {f}: {seen:?}");
         }
+    }
+
+    #[test]
+    fn degenerate_single_rank_sampling_never_draws_moe() {
+        // EP needs >= 2 ranks; at ranks=1 the sampler must fall back so
+        // every sampled spec stays buildable (a single unbuildable spec
+        // would abort a whole `fuzz --ranks 1` campaign)
+        let mut rng = Rng::new(9);
+        for case in 0..32u64 {
+            let spec = sample_spec(&mut rng, 1, case);
+            assert_ne!(spec.flavor, Flavor::Moe, "case {case}: EP sampled at ranks=1");
+            spec.validate().unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn moe_clean_pair_refines_with_conditional_relations() {
+        let spec = ModelSpec {
+            seed: 14,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Moe,
+            blocks: vec![Block::Moe(UnaryKind::Silu), Block::Unary(UnaryKind::Gelu)],
+        };
+        let (gs, gd, ri) = build_pair(&spec).unwrap();
+        assert!(
+            gd.nodes().iter().any(|n| matches!(n.op, Op::Combine { experts: 2 })),
+            "EP graph must carry per-rank partial combines"
+        );
+        assert!(
+            gd.nodes().iter().any(|n| matches!(n.op, Op::AllReduce { .. })),
+            "EP graph must all-reduce the partials"
+        );
+        let cfg = crate::infer::InferConfig::default();
+        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+            .unwrap_or_else(|e| panic!("clean MoE pair must refine: {e}"));
+        crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 57).unwrap();
+        assert!(
+            !out.relation_full.conditional_tensors().is_empty(),
+            "the MoE walk must produce router-conditioned relations"
+        );
+    }
+
+    #[test]
+    fn moe_blocks_require_moe_flavor() {
+        let spec = ModelSpec {
+            seed: 15,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Dp,
+            blocks: vec![Block::Moe(UnaryKind::Silu)],
+        };
+        assert!(build_pair(&spec).is_err(), "moe blocks only distribute under EP");
+        let no_moe = ModelSpec {
+            seed: 16,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Moe,
+            blocks: vec![Block::Linear],
+        };
+        assert!(build_pair(&no_moe).is_err(), "EP without a moe block is meaningless");
     }
 
     #[test]

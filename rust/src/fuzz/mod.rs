@@ -5,17 +5,19 @@
 //! systematically-injected faults runtime checkers are validated against:
 //!
 //! 1. [`genmodel`] — seeded random sequential models (matmul / elementwise
-//!    / reduction / attention blocks) plus *correct* distributed variants
-//!    composed from `crate::strategies` (DP replication, SP sequence
-//!    sharding, TP weight sharding incl. the Fig-1 reduce-scatter form,
-//!    PP stage splits with micro-batched send/recv boundaries, and
-//!    FSDP/ZeRO parameter sharding with pre-use all-gathers).
-//! 2. [`mutate`] — 16 single-node bug operators drawn from the §6.2
-//!    taxonomy and the PP/ZeRO wiring-bug families (wrong collective,
+//!    / reduction / attention / MoE blocks) plus *correct* distributed
+//!    variants composed from `crate::strategies` (DP replication, SP
+//!    sequence sharding, TP weight sharding incl. the Fig-1 reduce-scatter
+//!    form, PP stage splits with micro-batched send/recv boundaries,
+//!    FSDP/ZeRO parameter sharding with pre-use all-gathers, and
+//!    expert-parallel MoE with per-rank partial combines).
+//! 2. [`mutate`] — 20 single-node bug operators drawn from the §6.2
+//!    taxonomy and the PP/ZeRO/MoE wiring-bug families (wrong collective,
 //!    dropped aggregation, shifted slice offsets, wrong chunk index,
 //!    mis-scaled reductions, shard re-wiring, wrong-axis softmax, crossed
 //!    or dropped stage boundaries, stale parameter shards, off-by-one
-//!    micro-batch rescales).
+//!    micro-batch rescales, wrong-expert dispatch, dropped token combines,
+//!    unnormalized gate weights, silent capacity truncation).
 //! 3. [`oracle`] — runs `check_refinement` on each (clean, mutant) pair
 //!    and cross-checks against concrete execution: clean pairs must verify
 //!    with a replaying numeric certificate, numerics-changing mutants must

@@ -6,9 +6,11 @@
 //! wider defect classes catalogued by the distributed-DL bug studies):
 //! wrong collective, dropped aggregation, mis-sliced shards, wrong chunk
 //! index, mis-scaled reductions, reordered/duplicated shard wiring,
-//! wrong-axis reductions, and the pipeline/ZeRO wiring family (crossed or
+//! wrong-axis reductions, the pipeline/ZeRO wiring family (crossed or
 //! dropped send/recv boundaries, stale parameter shards in a re-gather,
-//! off-by-one micro-batch rescales).
+//! off-by-one micro-batch rescales), and the MoE routing family (wrong
+//! expert index, dropped token contributions at the combine, unnormalized
+//! gate weights, silent capacity truncation).
 //!
 //! Mutations are applied by *rebuilding* the graph through [`Graph::add`],
 //! so output shapes are re-inferred and a mutant that no longer
@@ -61,9 +63,25 @@ pub enum MutKind {
     /// literal micro-batch combine node, so per-operator stats measure the
     /// divisor *family*, not a specific combine site.
     MicrobatchScaleOffby,
+    /// Rotate a dispatch's expert index (`expert + 1 mod E`): tokens are
+    /// scattered to the wrong expert while the combine still gathers under
+    /// the original assignment.
+    WrongExpertDispatch,
+    /// Replace one expert's contribution to a combine with another
+    /// expert's output — the tokens routed to that expert have their true
+    /// results dropped from the gather.
+    DroppedTokenCombine,
+    /// Drop the router-gate normalization: the `div` by the top-k
+    /// probability sum becomes an identity, so the combine runs on raw
+    /// (unnormalized) gate weights.
+    GateWeightUnnormalized,
+    /// Shrink a dispatch's token capacity to 1: every expert silently
+    /// drops all but its first assigned token (the classic
+    /// capacity-overflow token-drop bug).
+    CapacityTruncateSilent,
 }
 
-pub const MUT_KINDS: [MutKind; 16] = [
+pub const MUT_KINDS: [MutKind; 20] = [
     MutKind::GatherReorder,
     MutKind::DropAggregation,
     MutKind::GatherToReduceScatter,
@@ -80,6 +98,10 @@ pub const MUT_KINDS: [MutKind; 16] = [
     MutKind::DroppedBoundary,
     MutKind::StaleShardGather,
     MutKind::MicrobatchScaleOffby,
+    MutKind::WrongExpertDispatch,
+    MutKind::DroppedTokenCombine,
+    MutKind::GateWeightUnnormalized,
+    MutKind::CapacityTruncateSilent,
 ];
 
 impl MutKind {
@@ -101,6 +123,10 @@ impl MutKind {
             MutKind::DroppedBoundary => "dropped_boundary",
             MutKind::StaleShardGather => "stale_shard_gather",
             MutKind::MicrobatchScaleOffby => "microbatch_scale_offby",
+            MutKind::WrongExpertDispatch => "wrong_expert_dispatch",
+            MutKind::DroppedTokenCombine => "dropped_token_combine",
+            MutKind::GateWeightUnnormalized => "gate_weight_unnormalized",
+            MutKind::CapacityTruncateSilent => "capacity_truncate_silent",
         }
     }
 
@@ -345,6 +371,56 @@ fn mutate_node(
                     return None;
                 }
                 Some((Op::Scale { c: FBits::new(1.0 / (k + 1.0)) }, ins.to_vec()))
+            }
+            _ => None,
+        },
+        MutKind::WrongExpertDispatch => match node.op {
+            Op::Dispatch { expert, capacity } => {
+                let experts = g.shape(node.inputs[1])[1];
+                if experts < 2 {
+                    return None;
+                }
+                Some((
+                    Op::Dispatch {
+                        expert: (expert + 1) % experts as usize,
+                        capacity,
+                    },
+                    ins.to_vec(),
+                ))
+            }
+            _ => None,
+        },
+        MutKind::DroppedTokenCombine => match node.op {
+            // drop the last expert's true contribution by wiring the first
+            // expert's output into its slot (the gate weights still select
+            // tokens for it — those tokens now receive the wrong results)
+            Op::Combine { experts } if experts >= 2 && ins[1] != ins[experts] => {
+                let mut swapped = ins.to_vec();
+                swapped[experts] = swapped[1];
+                Some((node.op.clone(), swapped))
+            }
+            _ => None,
+        },
+        MutKind::GateWeightUnnormalized => match node.op {
+            // a gate-normalizing div: the denominator is a keepdim row
+            // reduction of the numerator — dropping it leaves the combine
+            // running on raw (unnormalized) top-k gate weights
+            Op::Div => {
+                let denom = g.producer(node.inputs[1])?;
+                match denom.op {
+                    Op::ReduceSum { keepdim: true, .. }
+                        if denom.inputs.first() == Some(&node.inputs[0]) =>
+                    {
+                        Some((Op::Identity, vec![ins[0]]))
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        },
+        MutKind::CapacityTruncateSilent => match node.op {
+            Op::Dispatch { expert, capacity } if capacity > 1 => {
+                Some((Op::Dispatch { expert, capacity: 1 }, ins.to_vec()))
             }
             _ => None,
         },
@@ -640,6 +716,92 @@ mod tests {
             Op::Scale { c } => assert!((c.get() - 1.0 / 3.0).abs() < 1e-12, "{}", c.get()),
             other => panic!("{other:?}"),
         }
+    }
+
+    fn moe_spec() -> ModelSpec {
+        ModelSpec {
+            seed: 23,
+            ranks: 2,
+            seq: 4,
+            hidden: 4,
+            flavor: Flavor::Moe,
+            blocks: vec![Block::Moe(UnaryKind::Silu), Block::Unary(UnaryKind::Gelu)],
+        }
+    }
+
+    #[test]
+    fn routing_sites_exist_in_moe_graphs() {
+        let (_gs, gd, _ri) = build_pair(&moe_spec()).unwrap();
+        let sites = applicable_sites(&gd);
+        for kind in [
+            MutKind::WrongExpertDispatch,
+            MutKind::DroppedTokenCombine,
+            MutKind::GateWeightUnnormalized,
+            MutKind::CapacityTruncateSilent,
+        ] {
+            assert!(
+                sites.iter().any(|s| s.kind == kind),
+                "moe graph must expose a {kind:?} site"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_expert_dispatch_rotates_the_expert_index() {
+        let (_gs, gd, _ri) = build_pair(&moe_spec()).unwrap();
+        let (gdm, m) =
+            apply_mutation_by_name(&gd, MutKind::WrongExpertDispatch, "b0_disp0").unwrap();
+        assert_eq!(m.block, Some(0));
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b0_disp0").unwrap();
+        match (&gd.node(site).op, &gdm.node(site).op) {
+            (Op::Dispatch { expert: 0, .. }, Op::Dispatch { expert: 1, .. }) => {}
+            other => panic!("expert must rotate: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_truncate_shrinks_to_one() {
+        let (_gs, gd, _ri) = build_pair(&moe_spec()).unwrap();
+        let (gdm, _m) =
+            apply_mutation_by_name(&gd, MutKind::CapacityTruncateSilent, "b0_disp1").unwrap();
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b0_disp1").unwrap();
+        match gdm.node(site).op {
+            Op::Dispatch { capacity: 1, .. } => {}
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_weight_unnormalized_drops_the_div() {
+        let (_gs, gd, _ri) = build_pair(&moe_spec()).unwrap();
+        let (gdm, m) =
+            apply_mutation_by_name(&gd, MutKind::GateWeightUnnormalized, "b0_gates").unwrap();
+        assert_eq!(m.block, Some(0));
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b0_gates").unwrap();
+        assert!(matches!(gdm.node(site).op, Op::Identity), "normalization dropped");
+        // the combine now runs on raw masked probabilities — numerics change
+        let inputs = crate::expr::eval::random_inputs(&gd, 41);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&gdm, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(!a[o].allclose(&b[o], 1e-4, 1e-5), "unnormalized gates must change numerics");
+    }
+
+    #[test]
+    fn dropped_token_combine_duplicates_an_expert_operand() {
+        let (_gs, gd, _ri) = build_pair(&moe_spec()).unwrap();
+        let (gdm, _m) =
+            apply_mutation_by_name(&gd, MutKind::DroppedTokenCombine, "b0_moe_r0").unwrap();
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b0_moe_r0").unwrap();
+        let clean = gd.node(site);
+        let muta = gdm.node(site);
+        assert_eq!(muta.inputs[0], clean.inputs[0], "weights operand untouched");
+        assert_eq!(muta.inputs[2], muta.inputs[1], "last expert slot now duplicates the first");
+        assert_ne!(clean.inputs[2], clean.inputs[1]);
     }
 
     #[test]

@@ -221,6 +221,42 @@ fn vjp(g: &mut Graph, node: &super::graph::Node, dz: TensorId) -> Result<Vec<Opt
             vec![Some(dx), None, None]
         }
         Op::AllReduce { .. } => vec![Some(dz); node.inputs.len()],
+        // The routing mask is piecewise-constant: no gradient flows into the
+        // scores (matching the straight-through-free treatment of hard
+        // routing), so TopK contributes nothing.
+        Op::TopK { .. } => vec![None],
+        Op::Dispatch { expert, capacity } => {
+            // masking by the router column is self-adjoint: dx is the same
+            // dispatch applied to dz; the router gets no gradient (0/1 mask)
+            let dx = g.op(
+                &format!("d{n}"),
+                Op::Dispatch { expert: *expert, capacity: *capacity },
+                vec![dz, x(1)],
+            );
+            vec![Some(dx), None]
+        }
+        Op::Combine { experts } => {
+            // out[t] = Σ_e w[t,e]·y_e[t] is linear in both operand groups:
+            // d y_e = w[:, e] ⊙ dz, and d w[:, e] = Σ_j dz[t,j]·y_e[t,j] —
+            // the gate weights carry a real (smooth) gradient, and they are
+            // the only path through which the router parameters learn.
+            let mut cols = Vec::with_capacity(*experts);
+            for e in 0..*experts {
+                let prod = g.mul2(&format!("d{n}_p{e}"), dz, x(1 + e));
+                cols.push(g.op(
+                    &format!("d{n}_c{e}"),
+                    Op::ReduceSum { dim: 1, keepdim: true },
+                    vec![prod],
+                ));
+            }
+            let dw = g.concat(&format!("d{n}_w"), cols, 1);
+            let mut out: Vec<Option<TensorId>> = vec![Some(dw)];
+            for e in 0..*experts {
+                let col = g.slice(&format!("d{n}_w{e}"), x(0), 1, e as i64, e as i64 + 1);
+                out.push(Some(g.mul2(&format!("d{n}_y{e}"), col, dz)));
+            }
+            out
+        }
         Op::AllGather { dim, .. } => {
             // same as concat
             let mut offset = 0i64;
@@ -360,6 +396,41 @@ mod tests {
         g.mark_output(loss);
         let grads = append_backward(&mut g, loss, &[x]).unwrap();
         check_grads(&g, loss, x, grads[0], 17);
+    }
+
+    #[test]
+    fn combine_weight_and_expert_gradients() {
+        // combine is bilinear: both the gate-weights slot and the expert
+        // slots must carry exact gradients (the weights slot is the only
+        // path through which router parameters learn)
+        let mut g = Graph::new("cmb");
+        let w = g.input("w", vec![3, 2]);
+        let y0 = g.input("y0", vec![3, 4]);
+        let y1 = g.input("y1", vec![3, 4]);
+        let t = g.input("t", vec![3, 4]);
+        let out = g.combine("out", w, vec![y0, y1]);
+        let loss = g.op("loss", Op::MseLoss, vec![out, t]);
+        g.mark_output(loss);
+        let grads = append_backward(&mut g, loss, &[w, y0]).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.shape(grads[0]), &[3, 2], "dw matches the weights shape");
+        check_grads(&g, loss, w, grads[0], 19);
+        check_grads(&g, loss, y0, grads[1], 20);
+    }
+
+    #[test]
+    fn dispatch_gradients_flow_through_tokens() {
+        // dispatch with non-binding capacity is row masking: self-adjoint
+        let mut g = Graph::new("disp");
+        let x = g.input("x", vec![3, 4]);
+        let r = g.input("r", vec![3, 2]);
+        let t = g.input("t", vec![3, 4]);
+        let d = g.dispatch("d", x, r, 1, 3);
+        let loss = g.op("loss", Op::MseLoss, vec![d, t]);
+        g.mark_output(loss);
+        let grads = append_backward(&mut g, loss, &[x]).unwrap();
+        g.validate().unwrap();
+        check_grads(&g, loss, x, grads[0], 21);
     }
 
     #[test]

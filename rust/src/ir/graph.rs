@@ -229,6 +229,27 @@ impl Graph {
         let ranks = shards.len();
         self.op(name, Op::ReduceScatter { dim, ranks, index }, shards)
     }
+    pub fn topk(&mut self, name: &str, scores: TensorId, k: usize) -> TensorId {
+        self.op(name, Op::TopK { k }, vec![scores])
+    }
+    pub fn dispatch(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        router: TensorId,
+        expert: usize,
+        capacity: usize,
+    ) -> TensorId {
+        self.op(name, Op::Dispatch { expert, capacity }, vec![x, router])
+    }
+    /// `combine(weights, experts)`: token gather keyed by the router tensor.
+    pub fn combine(&mut self, name: &str, weights: TensorId, experts: Vec<TensorId>) -> TensorId {
+        let n = experts.len();
+        let mut ins = Vec::with_capacity(n + 1);
+        ins.push(weights);
+        ins.extend(experts);
+        self.op(name, Op::Combine { experts: n }, ins)
+    }
 
     // ---- validation ----
 

@@ -102,6 +102,12 @@ fn op_attrs_json(op: &Op) -> Json {
             pairs.push(("index", Json::num(*index as f64)));
         }
         Op::Send { chan } | Op::Recv { chan } => pairs.push(("chan", Json::num(*chan as f64))),
+        Op::TopK { k } => pairs.push(("k", Json::num(*k as f64))),
+        Op::Dispatch { expert, capacity } => {
+            pairs.push(("expert", Json::num(*expert as f64)));
+            pairs.push(("capacity", Json::num(*capacity as f64)));
+        }
+        Op::Combine { experts } => pairs.push(("experts", Json::num(*experts as f64))),
         Op::Custom { name } => pairs.push(("custom_name", Json::str(name.clone()))),
         _ => {}
     }
@@ -225,6 +231,12 @@ fn op_from_json(name: &str, attrs: &Json) -> Result<Op> {
         },
         "send" => Op::Send { chan: int("chan")? as usize },
         "recv" => Op::Recv { chan: int("chan")? as usize },
+        "topk" => Op::TopK { k: int("k")? as usize },
+        "dispatch" => Op::Dispatch {
+            expert: int("expert")? as usize,
+            capacity: int("capacity")? as usize,
+        },
+        "combine" => Op::Combine { experts: int("experts")? as usize },
         "custom" => Op::Custom {
             name: attrs
                 .get("custom_name")

@@ -114,6 +114,26 @@ pub enum Op {
     /// stale boundary wiring never simplifies and fails refinement.
     Recv { chan: usize },
 
+    // ---- MoE routing (data-dependent token-to-expert assignment) ----
+    /// `(scores[rows, E]) -> mask[rows, E]`: 0/1 mask of the `k` largest
+    /// entries per row (ties broken toward the lower expert index). The
+    /// router decision itself — *not* clean: it computes.
+    TopK { k: usize },
+    /// `(x[rows, ..], router[rows, E]) -> [rows, ..]`: token scatter to one
+    /// expert, keyed by the router tensor. Row `t` is `router[t, expert] ·
+    /// x[t, ..]` for the first `capacity` assigned rows (router entry
+    /// nonzero, counted in row order); later assigned rows are *silently
+    /// zeroed* — the classic capacity-overflow token drop. Clean graphs set
+    /// `capacity >= rows` so truncation can never bind, which is also the
+    /// side-condition of every dispatch lemma.
+    Dispatch { expert: usize, capacity: usize },
+    /// `(weights[rows, experts], y_0, .., y_{experts-1}) -> [rows, cols]`:
+    /// token gather from experts, keyed by the router tensor:
+    /// `out[t, j] = Σ_e weights[t, e] · y_e[t, j]`. Expert outputs are
+    /// matrix-shaped (`[rows, cols]`) — the rank the routing lemmas and the
+    /// column-broadcast VJP are row-aligned for.
+    Combine { experts: usize },
+
     /// Opaque custom operator (e.g. a fused kernel GraphGuard has no
     /// built-in lemma for; users supply lemmas per §6.5). Shape/semantics
     /// come from the custom-op registry.
@@ -163,6 +183,9 @@ pub enum OpTag {
     ReduceScatter,
     Send,
     Recv,
+    TopK,
+    Dispatch,
+    Combine,
     Custom,
 }
 
@@ -209,6 +232,9 @@ impl Op {
             Op::ReduceScatter { .. } => OpTag::ReduceScatter,
             Op::Send { .. } => OpTag::Send,
             Op::Recv { .. } => OpTag::Recv,
+            Op::TopK { .. } => OpTag::TopK,
+            Op::Dispatch { .. } => OpTag::Dispatch,
+            Op::Combine { .. } => OpTag::Combine,
             Op::Custom { .. } => OpTag::Custom,
         }
     }
@@ -256,6 +282,9 @@ impl Op {
             OpTag::ReduceScatter => "reduce_scatter",
             OpTag::Send => "send",
             OpTag::Recv => "recv",
+            OpTag::TopK => "topk",
+            OpTag::Dispatch => "dispatch",
+            OpTag::Combine => "combine",
             OpTag::Custom => "custom",
         }
     }
@@ -265,6 +294,14 @@ impl Op {
     /// partial sums is exactly the reduction case; `Scale`/`Div` do NOT —
     /// needing them to reconstruct `G_s` outputs is the signature of the
     /// aux-loss and gradient-accumulation bugs (§6.2 bugs 2 and 6).
+    ///
+    /// `Dispatch`/`Combine` are *conditionally* clean: they rearrange and
+    /// combine tokens keyed by their router operand, so an expression using
+    /// them is a relation *guarded by a router predicate* — it only
+    /// reconstructs `G_s` tensors because the router tensor it references is
+    /// provably the router both graphs computed (single-program capture
+    /// shares it; crossed router tags never become equal in the e-graph).
+    /// `TopK` itself computes the routing decision and stays unclean.
     pub fn is_clean(&self) -> bool {
         matches!(
             self.tag(),
@@ -281,6 +318,8 @@ impl Op {
                 | OpTag::ReduceScatter
                 | OpTag::Send
                 | OpTag::Recv
+                | OpTag::Dispatch
+                | OpTag::Combine
         )
     }
 
@@ -510,6 +549,49 @@ impl Op {
                 ensure!(ins.len() == 1, "{} arity", self.name());
                 Ok(ins[0].to_vec())
             }
+            Op::TopK { k } => {
+                ensure!(ins.len() == 1, "topk arity");
+                ensure!(ins[0].len() == 2, "topk wants [rows, experts], got {:?}", ins[0]);
+                ensure!(
+                    *k >= 1 && *k as i64 <= ins[0][1],
+                    "topk k={k} over {} experts",
+                    ins[0][1]
+                );
+                Ok(ins[0].to_vec())
+            }
+            Op::Dispatch { expert, capacity } => {
+                ensure!(ins.len() == 2, "dispatch wants (x, router)");
+                let (x, r) = (ins[0], ins[1]);
+                ensure!(r.len() == 2, "dispatch router must be [rows, experts], got {r:?}");
+                ensure!(!x.is_empty() && x[0] == r[0], "dispatch rows {:?} vs router {:?}", x, r);
+                ensure!((*expert as i64) < r[1], "dispatch expert {expert} of {} experts", r[1]);
+                ensure!(*capacity >= 1, "dispatch capacity must be >= 1");
+                Ok(x.to_vec())
+            }
+            Op::Combine { experts } => {
+                ensure!(*experts >= 1, "combine needs at least one expert");
+                ensure!(
+                    ins.len() == *experts + 1,
+                    "combine wants (weights, {} expert outputs), got {} inputs",
+                    experts,
+                    ins.len()
+                );
+                let w = ins[0];
+                ensure!(w.len() == 2, "combine weights must be [rows, experts], got {w:?}");
+                ensure!(w[1] == *experts as i64, "combine weights {:?} vs {} experts", w, experts);
+                let y = ins[1];
+                ensure!(
+                    y.len() == 2 && y[0] == w[0],
+                    "combine expert outputs must be [rows, cols] matching the weights rows, \
+                     got {:?} vs {:?}",
+                    y,
+                    w
+                );
+                for shape in &ins[1..] {
+                    ensure!(*shape == y, "combine expert shape {:?} vs {:?}", shape, y);
+                }
+                Ok(y.to_vec())
+            }
             Op::Custom { name } => {
                 crate::lemmas::custom::registry_infer_shape(name, ins)
             }
@@ -540,6 +622,11 @@ impl fmt::Display for Op {
             Op::AllReduce { ranks } => write!(f, "all_reduce[{ranks}]"),
             Op::Send { chan } => write!(f, "send[ch={chan}]"),
             Op::Recv { chan } => write!(f, "recv[ch={chan}]"),
+            Op::TopK { k } => write!(f, "topk[k={k}]"),
+            Op::Dispatch { expert, capacity } => {
+                write!(f, "dispatch[e={expert},cap={capacity}]")
+            }
+            Op::Combine { experts } => write!(f, "combine[E={experts}]"),
             Op::Custom { name } => write!(f, "custom[{name}]"),
             other => write!(f, "{}", other.name()),
         }
@@ -605,6 +692,42 @@ mod tests {
         assert!(!Op::Send { chan: 0 }.is_unary_elementwise());
         assert_eq!(Op::Recv { chan: 2 }.tag(), OpTag::Recv);
         assert_eq!(Op::Send { chan: 2 }.name(), "send");
+    }
+
+    #[test]
+    fn routing_shapes_and_cleanliness() {
+        assert_eq!(sh(&Op::TopK { k: 2 }, &[&[4, 4]]), vec![4, 4]);
+        assert!(Op::TopK { k: 5 }.infer_shape(&[&[4, 4]], None).is_err());
+        assert!(Op::TopK { k: 1 }.infer_shape(&[&[4]], None).is_err());
+        assert_eq!(sh(&Op::Dispatch { expert: 1, capacity: 4 }, &[&[4, 8], &[4, 2]]), vec![4, 8]);
+        assert!(Op::Dispatch { expert: 2, capacity: 4 }
+            .infer_shape(&[&[4, 8], &[4, 2]], None)
+            .is_err());
+        assert!(Op::Dispatch { expert: 0, capacity: 4 }
+            .infer_shape(&[&[3, 8], &[4, 2]], None)
+            .is_err());
+        assert_eq!(
+            sh(&Op::Combine { experts: 2 }, &[&[4, 2], &[4, 8], &[4, 8]]),
+            vec![4, 8]
+        );
+        assert!(Op::Combine { experts: 2 }.infer_shape(&[&[4, 2], &[4, 8]], None).is_err());
+        assert!(Op::Combine { experts: 3 }
+            .infer_shape(&[&[4, 2], &[4, 8], &[4, 8], &[4, 8]], None)
+            .is_err());
+        // expert outputs are matrix-shaped only (the VJP's column broadcast
+        // is row-aligned exactly for rank 2)
+        assert!(Op::Combine { experts: 1 }
+            .infer_shape(&[&[4, 1], &[4, 2, 3]], None)
+            .is_err());
+        // Dispatch/Combine are router-conditioned *clean* ops; TopK computes
+        assert!(Op::Dispatch { expert: 0, capacity: 4 }.is_clean());
+        assert!(Op::Combine { experts: 2 }.is_clean());
+        assert!(!Op::TopK { k: 1 }.is_clean());
+        // none of them are generic elementwise ops
+        assert!(!Op::Dispatch { expert: 0, capacity: 4 }.is_unary_elementwise());
+        assert!(!Op::Combine { experts: 2 }.is_binary_elementwise());
+        assert_eq!(Op::TopK { k: 1 }.name(), "topk");
+        assert_eq!(Op::Dispatch { expert: 0, capacity: 4 }.tag(), OpTag::Dispatch);
     }
 
     #[test]

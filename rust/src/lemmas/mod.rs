@@ -22,6 +22,7 @@ pub mod elementwise;
 pub mod matmul;
 pub mod nn;
 pub mod reduction;
+pub mod routing;
 pub mod structural;
 pub mod validate;
 
@@ -64,6 +65,7 @@ pub fn standard_library() -> Vec<Lemma> {
     all.extend(reduction::lemmas());
     all.extend(nn::lemmas());
     all.extend(collective::lemmas());
+    all.extend(routing::lemmas());
     all.extend(custom_lemmas::lemmas());
     all
 }

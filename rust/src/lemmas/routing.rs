@@ -1,0 +1,475 @@
+//! Routing lemmas: the MoE expert-parallel family.
+//!
+//! These give the router-keyed ops (`topk` / `dispatch` / `combine`) their
+//! conditional semantics. Every lemma is *guarded by router identity*: it
+//! only fires when the router operands involved are provably the same
+//! e-class — the "matching router tags" condition. A mutant that dispatches
+//! with the wrong expert index, truncates capacity, or combines under a
+//! different weight tensor never satisfies the guard, stays opaque, and
+//! fails refinement at the first consumer.
+//!
+//! The capacity attribute threads through every lemma as a side-condition:
+//! rewrites only apply when `capacity >= rows`, i.e. when the silent
+//! token-drop behavior of a capacity-bound dispatch can never trigger.
+
+use super::structural::try_add;
+use super::Lemma;
+use crate::egraph::{EGraph, Id, Pat, Rewrite};
+use crate::ir::{FBits, Op, OpTag};
+use crate::symbolic::Scalar;
+
+/// First dim of a class's shape, if known.
+fn rows_of(eg: &EGraph, id: Id) -> Option<i64> {
+    eg.shape(id).and_then(|s| s.first().copied())
+}
+
+pub fn lemmas() -> Vec<Lemma> {
+    let mut v: Vec<Lemma> = Vec::new();
+
+    // dispatch(x, r; e, cap) = mul(slice(r; dim=1, e, e+1), x) when the
+    // capacity can never bind (cap >= rows) — the definitional desugar that
+    // connects dispatch-based MoE graphs with dense-mask formulations. A
+    // capacity-truncated dispatch does NOT desugar and stays opaque.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "dispatch_is_masked_mul",
+            Pat::bind(OpTag::Dispatch, 0, vec![Pat::var(0), Pat::var(1)]),
+            |eg, s, _| {
+                let (Some(Op::Dispatch { expert, capacity }), Some(x), Some(r)) =
+                    (s.op(0), s.var(0), s.var(1))
+                else {
+                    return vec![];
+                };
+                let (expert, capacity) = (*expert, *capacity);
+                let Some(xshape) = eg.shape(x).map(|s| s.to_vec()) else { return vec![] };
+                // exactly rank 2: the [rows,1] column broadcast is only
+                // row-aligned there (higher ranks would broadcast the
+                // column down the wrong axis)
+                if xshape.len() != 2 || (capacity as i64) < xshape[0] {
+                    return vec![];
+                }
+                let Ok(col) = eg.add_op(
+                    Op::Slice {
+                        dim: 1,
+                        start: Scalar::constant(expert as i64),
+                        end: Scalar::constant(expert as i64 + 1),
+                    },
+                    vec![r],
+                ) else {
+                    return vec![];
+                };
+                try_add(eg, Op::Mul, vec![col, x])
+            },
+        ),
+        "c",
+        3,
+        24,
+    ));
+
+    // combine(w, y_0, .., y_{E-1}) = sum_e mul(slice(w; 1, e, e+1), y_e):
+    // the definitional desugar into the dense-gated form (the ByteDance MoE
+    // workload's formulation), through which combine inherits the whole
+    // concat/sum lemma family.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "combine_is_weighted_sum",
+            Pat::bind_variadic(OpTag::Combine, 0, 0),
+            |eg, s, _| {
+                let Some(Op::Combine { experts }) = s.op(0) else { return vec![] };
+                let experts = *experts;
+                let Some(list) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                if experts < 1 || list.len() != experts + 1 {
+                    return vec![];
+                }
+                // exactly rank 2 (see dispatch_is_masked_mul): the column
+                // broadcast is only row-aligned for matrix-shaped experts
+                if eg.shape(list[1]).map_or(true, |sh| sh.len() != 2) {
+                    return vec![];
+                }
+                let w = list[0];
+                let mut terms = Vec::with_capacity(experts);
+                for (e, &y) in list[1..].iter().enumerate() {
+                    let Ok(col) = eg.add_op(
+                        Op::Slice {
+                            dim: 1,
+                            start: Scalar::constant(e as i64),
+                            end: Scalar::constant(e as i64 + 1),
+                        },
+                        vec![w],
+                    ) else {
+                        return vec![];
+                    };
+                    let Ok(t) = eg.add_op(Op::Mul, vec![col, y]) else { return vec![] };
+                    terms.push(t);
+                }
+                if terms.len() == 1 {
+                    return terms;
+                }
+                try_add(eg, Op::SumN, terms)
+            },
+        ),
+        "c",
+        4,
+        32,
+    ));
+
+    // combine(m, dispatch(x, m; 0), .., dispatch(x, m; E-1)) = scale(x, k)
+    // (= x for top-1) when m is a top-k mask and *all* router tags match:
+    // every dispatch must be keyed by the combine's own weight class, every
+    // capacity must be non-binding, and the dispatched inputs must agree. A
+    // crossed router tag — a dispatch keyed by a different mask — never
+    // satisfies the guard.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "dispatch_combine_identity",
+            Pat::bind_variadic(OpTag::Combine, 0, 0),
+            |eg, s, _| {
+                let Some(Op::Combine { experts }) = s.op(0) else { return vec![] };
+                let experts = *experts;
+                let Some(list) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                if list.len() != experts + 1 {
+                    return vec![];
+                }
+                let w = eg.find(list[0]);
+                // the weights must be a 0/1 top-k routing mask
+                let Some(k) = eg.class(w).nodes.iter().find_map(|n| match &n.lang {
+                    crate::egraph::ELang::Op(Op::TopK { k }) => Some(*k),
+                    _ => None,
+                }) else {
+                    return vec![];
+                };
+                let mut x_common: Option<Id> = None;
+                for (e, &y) in list[1..].iter().enumerate() {
+                    let mut found = false;
+                    for n in &eg.class(y).nodes {
+                        let crate::egraph::ELang::Op(Op::Dispatch { expert, capacity }) = &n.lang
+                        else {
+                            continue;
+                        };
+                        if *expert != e || n.children.len() != 2 {
+                            continue;
+                        }
+                        if eg.find(n.children[1]) != w {
+                            continue; // crossed router tag — guard fails
+                        }
+                        let xc = eg.find(n.children[0]);
+                        let Some(rows) = rows_of(eg, xc) else { continue };
+                        if (*capacity as i64) < rows {
+                            continue; // truncation may bind
+                        }
+                        if let Some(prev) = x_common {
+                            if prev != xc {
+                                continue;
+                            }
+                        }
+                        x_common = Some(xc);
+                        found = true;
+                        break;
+                    }
+                    if !found {
+                        return vec![];
+                    }
+                }
+                let Some(x) = x_common else { return vec![] };
+                if k == 1 {
+                    vec![x]
+                } else {
+                    try_add(eg, Op::Scale { c: FBits::new(k as f64) }, vec![x])
+                }
+            },
+        ),
+        "c",
+        4,
+        40,
+    ));
+
+    // sum(combine(slice(w; 1, 0, c), y_0..), combine(slice(w; 1, c, E), ..))
+    // = combine(w, y_0, .., y_{E-1}) — partial combines over *disjoint,
+    // covering* expert column-slices of one router tensor collapse into the
+    // full combine. This is the expert-parallel re-combine fact: each rank's
+    // local combine covers its expert slice, the all-reduce sums them, and
+    // the sum equals the sequential combine (mirrors
+    // `allgather_of_chunks_identity` for the routing family).
+    v.push(Lemma::new(
+        Rewrite::new(
+            "combine_of_disjoint_expert_slices",
+            Pat::bind_variadic(OpTag::SumN, 0, 0),
+            |eg, s, _| {
+                let Some(parts) = s.list(0).map(|l| l.to_vec()) else { return vec![] };
+                if parts.len() < 2 {
+                    return vec![];
+                }
+                let mut src: Option<Id> = None;
+                let mut cursor: i64 = 0;
+                let mut ys: Vec<Id> = Vec::new();
+                for &p in &parts {
+                    let mut advanced: Option<(i64, Vec<Id>)> = None;
+                    'nodes: for n in &eg.class(p).nodes {
+                        let crate::egraph::ELang::Op(Op::Combine { experts }) = &n.lang else {
+                            continue;
+                        };
+                        if n.children.len() != *experts + 1 {
+                            continue;
+                        }
+                        let wc = eg.find(n.children[0]);
+                        for wn in &eg.class(wc).nodes {
+                            let crate::egraph::ELang::Op(Op::Slice { dim, start, end }) = &wn.lang
+                            else {
+                                continue;
+                            };
+                            if *dim != 1 || start.as_const() != Some(cursor) {
+                                continue;
+                            }
+                            let Some(e_end) = end.as_const() else { continue };
+                            if e_end - cursor != *experts as i64 {
+                                continue;
+                            }
+                            let Some(&sc) = wn.children.first() else { continue };
+                            let sc = eg.find(sc);
+                            if let Some(prev) = src {
+                                if prev != sc {
+                                    continue;
+                                }
+                            }
+                            src = Some(sc);
+                            advanced = Some((e_end, n.children[1..].to_vec()));
+                            break 'nodes;
+                        }
+                    }
+                    let Some((e_end, mut local)) = advanced else { return vec![] };
+                    cursor = e_end;
+                    ys.append(&mut local);
+                }
+                let Some(src) = src else { return vec![] };
+                let Some(total) = eg.shape(src).and_then(|sh| sh.get(1).copied()) else {
+                    return vec![];
+                };
+                if cursor != total {
+                    return vec![]; // partial expert coverage must stay opaque
+                }
+                let mut args = Vec::with_capacity(ys.len() + 1);
+                args.push(src);
+                args.extend(ys);
+                try_add(eg, Op::Combine { experts: total as usize }, args)
+            },
+        ),
+        "c",
+        5,
+        48,
+    ));
+
+    // dispatch(concat(x_i; 0), concat(r_i; 0); e, cap) =
+    //   concat(dispatch(x_i, r_i; e, cap_i); 0) — dispatch is row-local, so
+    // it distributes over aligned row-concats (SP×EP composition). This is
+    // the capacity-respecting decomposition: it is only valid because
+    // `cap >= rows` means the global assigned-token counter can never
+    // saturate, so re-partitioning the rows cannot change which tokens
+    // survive; per-piece capacities are set to the piece's own row count.
+    v.push(Lemma::new(
+        Rewrite::new(
+            "dispatch_over_row_concat",
+            Pat::bind(OpTag::Dispatch, 0, vec![Pat::var(0), Pat::var(1)]),
+            |eg, s, _| {
+                let (Some(Op::Dispatch { expert, capacity }), Some(x), Some(r)) =
+                    (s.op(0), s.var(0), s.var(1))
+                else {
+                    return vec![];
+                };
+                let (expert, capacity) = (*expert, *capacity);
+                let Some(total) = rows_of(eg, x) else { return vec![] };
+                if (capacity as i64) < total {
+                    return vec![];
+                }
+                let (x, r) = (eg.find(x), eg.find(r));
+                let row_concats = |eg: &EGraph, id: Id| -> Vec<Vec<Id>> {
+                    eg.class(id)
+                        .nodes
+                        .iter()
+                        .filter_map(|n| match &n.lang {
+                            crate::egraph::ELang::Op(Op::Concat { dim: 0 }) => {
+                                Some(n.children.clone())
+                            }
+                            _ => None,
+                        })
+                        .collect()
+                };
+                let xparts = row_concats(eg, x);
+                let rparts = row_concats(eg, r);
+                for xs in &xparts {
+                    for rs in &rparts {
+                        if xs.len() != rs.len() || xs.len() < 2 {
+                            continue;
+                        }
+                        let aligned = xs.iter().zip(rs).all(|(&a, &b)| {
+                            matches!(
+                                (rows_of(eg, a), rows_of(eg, b)),
+                                (Some(ra), Some(rb)) if ra == rb
+                            )
+                        });
+                        if !aligned {
+                            continue;
+                        }
+                        let pieces: Option<Vec<Id>> = xs
+                            .iter()
+                            .zip(rs)
+                            .map(|(&a, &b)| {
+                                let cap = rows_of(eg, a)?.max(1) as usize;
+                                eg.add_op(Op::Dispatch { expert, capacity: cap }, vec![a, b]).ok()
+                            })
+                            .collect();
+                        if let Some(pieces) = pieces {
+                            if let Ok(cat) = eg.add_op(Op::Concat { dim: 0 }, pieces) {
+                                return vec![cat];
+                            }
+                        }
+                    }
+                }
+                vec![]
+            },
+        ),
+        "c",
+        4,
+        44,
+    ));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{saturate, RewriteCtx, SaturationLimits};
+    use crate::expr::TensorRef;
+
+    fn run(eg: &mut EGraph) {
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(eg, &rules, &RewriteCtx::default(), SaturationLimits::default());
+    }
+
+    fn t(i: u32) -> TensorRef {
+        TensorRef::d(i)
+    }
+
+    #[test]
+    fn dispatch_combine_identity_under_matching_tags() {
+        let mut eg = EGraph::new();
+        let scores = eg.add_leaf(t(0), vec![4, 2]);
+        let x = eg.add_leaf(t(1), vec![4, 8]);
+        let m = eg.add_op(Op::TopK { k: 1 }, vec![scores]).unwrap();
+        let d0 = eg.add_op(Op::Dispatch { expert: 0, capacity: 4 }, vec![x, m]).unwrap();
+        let d1 = eg.add_op(Op::Dispatch { expert: 1, capacity: 4 }, vec![x, m]).unwrap();
+        let c = eg.add_op(Op::Combine { experts: 2 }, vec![m, d0, d1]).unwrap();
+        run(&mut eg);
+        assert!(eg.same(c, x), "top-1 dispatch/combine roundtrip collapses to x");
+    }
+
+    #[test]
+    fn dispatch_combine_topk2_scales() {
+        let mut eg = EGraph::new();
+        let scores = eg.add_leaf(t(0), vec![4, 3]);
+        let x = eg.add_leaf(t(1), vec![4, 8]);
+        let m = eg.add_op(Op::TopK { k: 2 }, vec![scores]).unwrap();
+        let ds: Vec<_> = (0..3)
+            .map(|e| eg.add_op(Op::Dispatch { expert: e, capacity: 4 }, vec![x, m]).unwrap())
+            .collect();
+        let mut args = vec![m];
+        args.extend(ds);
+        let c = eg.add_op(Op::Combine { experts: 3 }, args).unwrap();
+        run(&mut eg);
+        let scaled = eg.lookup(&Op::Scale { c: FBits::new(2.0) }, &[x]).expect("scale built");
+        assert!(eg.same(c, scaled), "top-2 roundtrip = 2·x");
+        assert!(!eg.same(c, x), "and must NOT collapse to x itself");
+    }
+
+    #[test]
+    fn crossed_router_tag_stays_opaque() {
+        // the combine is keyed by a DIFFERENT mask than the dispatches —
+        // the wrong-router wiring must not collapse
+        let mut eg = EGraph::new();
+        let s1 = eg.add_leaf(t(0), vec![4, 2]);
+        let s2 = eg.add_leaf(t(1), vec![4, 2]);
+        let x = eg.add_leaf(t(2), vec![4, 8]);
+        let m1 = eg.add_op(Op::TopK { k: 1 }, vec![s1]).unwrap();
+        let m2 = eg.add_op(Op::TopK { k: 1 }, vec![s2]).unwrap();
+        let d0 = eg.add_op(Op::Dispatch { expert: 0, capacity: 4 }, vec![x, m1]).unwrap();
+        let d1 = eg.add_op(Op::Dispatch { expert: 1, capacity: 4 }, vec![x, m1]).unwrap();
+        let c = eg.add_op(Op::Combine { experts: 2 }, vec![m2, d0, d1]).unwrap();
+        run(&mut eg);
+        assert!(!eg.same(c, x), "crossed router tags must stay opaque");
+    }
+
+    #[test]
+    fn capacity_truncated_dispatch_does_not_desugar() {
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![4, 8]);
+        let r = eg.add_leaf(t(1), vec![4, 2]);
+        let full = eg.add_op(Op::Dispatch { expert: 0, capacity: 4 }, vec![x, r]).unwrap();
+        let trunc = eg.add_op(Op::Dispatch { expert: 0, capacity: 1 }, vec![x, r]).unwrap();
+        run(&mut eg);
+        // the non-binding dispatch desugars to mul(slice(r;1,0,1), x)
+        let col = eg
+            .lookup(&Op::Slice { dim: 1, start: 0.into(), end: 1.into() }, &[r])
+            .expect("column slice built");
+        let mul = eg.lookup(&Op::Mul, &[col, x]).expect("masked mul built");
+        assert!(eg.same(full, mul), "cap >= rows dispatch = masked mul");
+        // the truncated one keeps its silent-token-drop semantics opaque
+        assert!(!eg.same(trunc, mul), "capacity-truncated dispatch must stay opaque");
+        assert!(!eg.same(trunc, full));
+    }
+
+    #[test]
+    fn disjoint_expert_slices_collapse_to_full_combine() {
+        // sum of per-rank partial combines (EP) = the sequential combine
+        let mut eg = EGraph::new();
+        let w = eg.add_leaf(t(0), vec![4, 4]);
+        let ys: Vec<_> = (1..=4).map(|i| eg.add_leaf(t(i), vec![4, 8])).collect();
+        let s0 = eg.add_op(Op::Slice { dim: 1, start: 0.into(), end: 2.into() }, vec![w]).unwrap();
+        let s1 = eg.add_op(Op::Slice { dim: 1, start: 2.into(), end: 4.into() }, vec![w]).unwrap();
+        let c0 = eg.add_op(Op::Combine { experts: 2 }, vec![s0, ys[0], ys[1]]).unwrap();
+        let c1 = eg.add_op(Op::Combine { experts: 2 }, vec![s1, ys[2], ys[3]]).unwrap();
+        let sum = eg.add_op(Op::SumN, vec![c0, c1]).unwrap();
+        let full = eg
+            .add_op(Op::Combine { experts: 4 }, vec![w, ys[0], ys[1], ys[2], ys[3]])
+            .unwrap();
+        run(&mut eg);
+        assert!(eg.same(sum, full), "partial combines over disjoint slices collapse");
+    }
+
+    #[test]
+    fn partial_expert_coverage_does_not_collapse() {
+        // missing the tail expert slice: must NOT equal the full combine
+        let mut eg = EGraph::new();
+        let w = eg.add_leaf(t(0), vec![4, 4]);
+        let ys: Vec<_> = (1..=4).map(|i| eg.add_leaf(t(i), vec![4, 8])).collect();
+        let s0 = eg.add_op(Op::Slice { dim: 1, start: 0.into(), end: 2.into() }, vec![w]).unwrap();
+        let s1 = eg.add_op(Op::Slice { dim: 1, start: 2.into(), end: 3.into() }, vec![w]).unwrap();
+        let c0 = eg.add_op(Op::Combine { experts: 2 }, vec![s0, ys[0], ys[1]]).unwrap();
+        let c1 = eg.add_op(Op::Combine { experts: 1 }, vec![s1, ys[2]]).unwrap();
+        let sum = eg.add_op(Op::SumN, vec![c0, c1]).unwrap();
+        let full = eg
+            .add_op(Op::Combine { experts: 4 }, vec![w, ys[0], ys[1], ys[2], ys[3]])
+            .unwrap();
+        run(&mut eg);
+        assert!(!eg.same(sum, full), "uncovered expert columns must stay opaque");
+    }
+
+    #[test]
+    fn dispatch_distributes_over_aligned_row_concats() {
+        let mut eg = EGraph::new();
+        let x1 = eg.add_leaf(t(0), vec![2, 8]);
+        let x2 = eg.add_leaf(t(1), vec![2, 8]);
+        let r1 = eg.add_leaf(t(2), vec![2, 2]);
+        let r2 = eg.add_leaf(t(3), vec![2, 2]);
+        let x = eg.add_op(Op::Concat { dim: 0 }, vec![x1, x2]).unwrap();
+        let r = eg.add_op(Op::Concat { dim: 0 }, vec![r1, r2]).unwrap();
+        let d = eg.add_op(Op::Dispatch { expert: 1, capacity: 4 }, vec![x, r]).unwrap();
+        run(&mut eg);
+        let d1 = eg
+            .lookup(&Op::Dispatch { expert: 1, capacity: 2 }, &[x1, r1])
+            .expect("piece dispatch built");
+        let d2 = eg.lookup(&Op::Dispatch { expert: 1, capacity: 2 }, &[x2, r2]).unwrap();
+        let cat = eg.lookup(&Op::Concat { dim: 0 }, &[d1, d2]).unwrap();
+        assert!(eg.same(d, cat), "row-local dispatch splits over row concats");
+    }
+}

@@ -396,6 +396,48 @@ pub fn identities() -> Vec<Identity> {
             positive: false,
         },
         Identity {
+            lemma: "dispatch_is_masked_mul",
+            lhs: "dispatch(x, r; expert=1, capacity=4)",
+            rhs: "mul(slice(r; dim=1, start=1, end=2), x)",
+            leaves: &[("x", S44), ("r", S42)],
+            positive: false,
+        },
+        Identity {
+            lemma: "combine_is_weighted_sum",
+            lhs: "combine(w, y0, y1; experts=2)",
+            rhs: "sum(mul(slice(w; dim=1, start=0, end=1), y0), mul(slice(w; dim=1, start=1, end=2), y1))",
+            leaves: &[("w", S42), ("y0", S44), ("y1", S44)],
+            positive: false,
+        },
+        Identity {
+            lemma: "dispatch_combine_identity",
+            lhs: "combine(topk(s; k=1), dispatch(x, topk(s; k=1); expert=0, capacity=4), dispatch(x, topk(s; k=1); expert=1, capacity=4); experts=2)",
+            rhs: "x",
+            leaves: &[("s", S42), ("x", S44)],
+            positive: false,
+        },
+        Identity {
+            lemma: "dispatch_combine_identity_topk2",
+            lhs: "combine(topk(s; k=2), dispatch(x, topk(s; k=2); expert=0, capacity=4), dispatch(x, topk(s; k=2); expert=1, capacity=4); experts=2)",
+            rhs: "scale(x; c=2.0)",
+            leaves: &[("s", S42), ("x", S44)],
+            positive: false,
+        },
+        Identity {
+            lemma: "combine_of_disjoint_expert_slices",
+            lhs: "sum(combine(slice(w; dim=1, start=0, end=1), y0; experts=1), combine(slice(w; dim=1, start=1, end=2), y1; experts=1))",
+            rhs: "combine(w, y0, y1; experts=2)",
+            leaves: &[("w", S42), ("y0", S44), ("y1", S44)],
+            positive: false,
+        },
+        Identity {
+            lemma: "dispatch_over_row_concat",
+            lhs: "dispatch(concat(x1, x2; dim=0), concat(r1, r2; dim=0); expert=0, capacity=4)",
+            rhs: "concat(dispatch(x1, r1; expert=0, capacity=2), dispatch(x2, r2; expert=0, capacity=2); dim=0)",
+            leaves: &[("x1", S24), ("x2", S24), ("r1", &[2, 2]), ("r2", &[2, 2])],
+            positive: false,
+        },
+        Identity {
             lemma: "pallas_rmsnorm_semantics",
             lhs: "pallas_rms_norm(x, w)",
             rhs: "rms_norm(x, w; eps=1e-6)",
@@ -457,6 +499,10 @@ mod tests {
             "pallas_attention_semantics",
             "recv_of_send_identity",
             "allgather_of_chunks_identity",
+            "dispatch_is_masked_mul",
+            "combine_is_weighted_sum",
+            "dispatch_combine_identity",
+            "combine_of_disjoint_expert_slices",
         ] {
             assert!(names.contains(&must), "identity table missing {must}");
         }

@@ -383,6 +383,99 @@ pub fn fsdp_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)
     Ok((gs, gd, ri))
 }
 
+/// Experts in the switch-style MoE MLP of [`moe_seq`].
+pub const MOE_EXPERTS: usize = 4;
+/// Top-k of the router gate (k = 2: each token is served by two experts,
+/// with gate weights normalized over the selected pair).
+pub const MOE_TOPK: usize = 2;
+
+/// Sequential GPT whose MLP is a switch-style top-k MoE: a learned router
+/// scores every token (`softmax` probabilities), `topk` picks the serving
+/// experts (0/1 mask), gate weights are the selected probabilities
+/// re-normalized over the top-k, each expert runs its FFN on the tokens
+/// `dispatch` assigns it (capacity = full sequence — no silent drops in
+/// the clean model), and `combine` gathers the expert outputs back,
+/// weighted by the gates.
+pub fn moe_seq(layers: usize, cfg: &GptConfig) -> Graph {
+    let h = cfg.hidden();
+    let e = MOE_EXPERTS as i64;
+    let mut g = Graph::new("gpt_moe_seq");
+    let table = g.input("wte", vec![cfg.vocab, h]);
+    let ids = g.input_typed("ids", vec![cfg.seq], crate::ir::DType::I64);
+    let mut x = g.op("emb", Op::Embedding, vec![table, ids]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let g1 = g.input(&format!("{p}_ln1_w"), vec![h]);
+        let b1 = g.input(&format!("{p}_ln1_b"), vec![h]);
+        let wq = g.input(&format!("{p}_wq"), vec![h, h]);
+        let wk = g.input(&format!("{p}_wk"), vec![h, h]);
+        let wv = g.input(&format!("{p}_wv"), vec![h, h]);
+        let wo = g.input(&format!("{p}_wo"), vec![h, h]);
+        let g2 = g.input(&format!("{p}_ln2_w"), vec![h]);
+        let b2 = g.input(&format!("{p}_ln2_b"), vec![h]);
+        let wg = g.input(&format!("{p}_router_w"), vec![h, e]);
+        let w1s: Vec<TensorId> = (0..MOE_EXPERTS)
+            .map(|ex| g.input(&format!("{p}_e{ex}_w1"), vec![h, cfg.ffn]))
+            .collect();
+        let w2s: Vec<TensorId> = (0..MOE_EXPERTS)
+            .map(|ex| g.input(&format!("{p}_e{ex}_w2"), vec![cfg.ffn, h]))
+            .collect();
+
+        let ln1 = ln(&mut g, &format!("{p}_ln1"), x, g1, b1);
+        let q = g.matmul(&format!("{p}_q"), ln1, wq);
+        let k = g.matmul(&format!("{p}_k"), ln1, wk);
+        let v = g.matmul(&format!("{p}_v"), ln1, wv);
+        let attn = attention_heads(&mut g, &p, q, k, v, cfg.heads, cfg.head_dim);
+        let proj = g.matmul(&format!("{p}_proj"), attn, wo);
+        let x1 = g.add2(&format!("{p}_res1"), x, proj);
+        let ln2 = ln(&mut g, &format!("{p}_ln2"), x1, g2, b2);
+
+        // router: probabilities -> top-k mask -> normalized gate weights
+        let scores = g.matmul(&format!("{p}_scores"), ln2, wg);
+        let probs = g.softmax(&format!("{p}_probs"), scores, 1);
+        let mask = g.topk(&format!("{p}_mask"), probs, MOE_TOPK);
+        let wts = g.mul2(&format!("{p}_wts"), mask, probs);
+        let denom = g.op(&format!("{p}_denom"), Op::ReduceSum { dim: 1, keepdim: true }, vec![wts]);
+        let gates = g.op(&format!("{p}_gates"), Op::Div, vec![wts, denom]);
+        // experts: dispatch -> FFN -> combine
+        let mut ys = Vec::with_capacity(MOE_EXPERTS);
+        for ex in 0..MOE_EXPERTS {
+            let d = g.dispatch(&format!("{p}_disp{ex}"), ln2, mask, ex, cfg.seq as usize);
+            let h1 = g.matmul(&format!("{p}_e{ex}_h1"), d, w1s[ex]);
+            let act = g.op(&format!("{p}_e{ex}_gelu"), Op::Gelu, vec![h1]);
+            ys.push(g.matmul(&format!("{p}_e{ex}_h2"), act, w2s[ex]));
+        }
+        let moe = g.combine(&format!("{p}_moe"), gates, ys);
+        x = g.add2(&format!("{p}_res2"), x1, moe);
+    }
+    let gf = g.input("lnf_w", vec![h]);
+    let bf = g.input("lnf_b", vec![h]);
+    let lnf = ln(&mut g, "lnf", x, gf, bf);
+    let wlm = g.input("lm_head", vec![h, cfg.vocab]);
+    let logits = g.matmul("logits", lnf, wlm);
+    g.mark_output(logits);
+    g
+}
+
+/// Expert parallelism over the MoE block: experts are placed on ranks and
+/// the combine is split into per-rank partial combines merged by an
+/// all-reduce (`strategies::moe_from_seq` — derived node-for-node from
+/// [`moe_seq`], so the EP variant cannot drift from the sequential model).
+/// The router is data-dependent: verification goes through the
+/// router-conditioned relation language, not a capture-time-fixed
+/// expert assignment.
+pub fn moe_ep_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)> {
+    ensure!(
+        MOE_EXPERTS % ranks == 0,
+        "{MOE_EXPERTS} experts not divisible by {ranks} ranks"
+    );
+    let cfg = GptConfig::default();
+    let gs = moe_seq(layers, &cfg);
+    let (mut gd, ri) = crate::strategies::moe_from_seq(&gs, ranks)?;
+    gd.name = "gpt_moe_ep".into();
+    Ok((gs, gd, ri))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,6 +542,40 @@ mod tests {
         let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 31).unwrap();
+    }
+
+    #[test]
+    fn moe_seq_graph_shape() {
+        let g = moe_seq(1, &GptConfig::default());
+        g.validate().unwrap();
+        assert_eq!(g.shape(g.outputs[0]), &[8, 16]);
+        assert!(
+            g.nodes().iter().any(|n| matches!(n.op, crate::ir::Op::TopK { k: MOE_TOPK })),
+            "top-k router must appear in the sequential MoE graph"
+        );
+    }
+
+    #[test]
+    fn gpt_moe_ep2_refines_with_conditional_relations() {
+        let (gs, gd, ri) = moe_ep_pair(2, 1).unwrap();
+        assert!(
+            gd.nodes().iter().any(|n| matches!(n.op, crate::ir::Op::Combine { experts: 2 })),
+            "EP variant must carry per-rank partial combines"
+        );
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 61).unwrap();
+        // the walk must have crossed the MoE block through router-guarded
+        // (conditional) mappings
+        assert!(
+            !out.relation_full.conditional_tensors().is_empty(),
+            "expected router-conditioned relations in the full relation"
+        );
+    }
+
+    #[test]
+    fn gpt_moe_ep_rejects_indivisible_expert_count() {
+        assert!(moe_ep_pair(3, 1).is_err());
     }
 
     #[test]

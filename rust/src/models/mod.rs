@@ -2,7 +2,7 @@
 //!
 //! | Framework analog      | Module         | Strategies          |
 //! |-----------------------|----------------|---------------------|
-//! | Megatron-LM GPT       | [`gpt`]        | TP, SP, VP, PP, FSDP |
+//! | Megatron-LM GPT       | [`gpt`]        | TP, SP, VP, PP, FSDP, EP (switch-MoE) |
 //! | vLLM Qwen2            | [`qwen2`]      | TP (fused kernels)  |
 //! | HF regression + MSE   | [`regression`] | gradient accumulation (fwd+bwd) |
 //! | Neuron Llama-3        | [`llama`]      | TP, PP, FSDP (via HLO frontend too) |
@@ -92,11 +92,30 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
             strategies: vec!["fsdp"],
         });
     }
+    // switch-style top-k MoE with expert parallelism (router-conditioned
+    // relations; data-dependent token-to-expert assignment). Only at degrees
+    // that divide the fixed expert count — the other workloads still run at
+    // e.g. ranks 8 or 1, where EP over 4 experts is undefined.
+    if ranks >= 2 && gpt::MOE_EXPERTS % ranks == 0 {
+        let (gs, gd, ri) = gpt::moe_ep_pair(ranks, 1).unwrap();
+        v.push(Workload { name: format!("gpt_moe_ep_{ranks}"), gs, gd, ri, strategies: vec!["ep"] });
+    }
     v
 }
 
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn moe_workload_gated_on_compatible_degrees() {
+        let names = |ranks: usize| -> Vec<String> {
+            super::table2_workloads(ranks).into_iter().map(|w| w.name).collect()
+        };
+        assert!(names(2).iter().any(|n| n == "gpt_moe_ep_2"));
+        assert!(names(4).iter().any(|n| n == "gpt_moe_ep_4"));
+        // a degenerate degree skips EP instead of panicking the whole suite
+        assert!(!names(1).iter().any(|n| n.starts_with("gpt_moe_ep")));
+    }
+
     #[test]
     fn all_table2_workloads_build_and_validate() {
         for w in super::table2_workloads(2) {

@@ -6,6 +6,16 @@
 //! the paper's self-provable pruning (§4.3.2): at most one expression per
 //! distinct leaf signature — the smallest — and a bounded number of
 //! signatures per tensor.
+//!
+//! **Conditional relations (MoE routing).** A mapping may contain the
+//! router-keyed `dispatch`/`combine` ops. Such an expression is clean only
+//! *conditioned on* its router operands (its [`Expr::guard_leaves`]): it
+//! reconstructs the `G_s` tensor because the referenced `G_d` router tensor
+//! is the very routing decision the sequential graph computed (the e-graph
+//! only ever equates router tensors that are provably the same, so crossed
+//! router tags never satisfy the guard). [`Relation::guards_for`] exposes
+//! the guard tensors per mapping; [`Relation::conditional_tensors`] lists
+//! the tensors whose mappings are router-conditioned.
 
 use crate::egraph::CleanCand;
 use crate::expr::print::Namer;
@@ -72,6 +82,29 @@ impl Relation {
     /// Completeness (§3.2): does the relation map every tensor in `required`?
     pub fn is_complete_for(&self, required: &[TensorId]) -> bool {
         required.iter().all(|&t| self.contains(t))
+    }
+
+    /// Tensors whose mappings include a router-conditioned (guarded)
+    /// expression — the MoE-style conditional relations.
+    pub fn conditional_tensors(&self) -> Vec<TensorId> {
+        let mut out: Vec<TensorId> = self
+            .map
+            .iter()
+            .filter(|(_, cands)| cands.iter().any(|c| c.expr.is_router_conditioned()))
+            .map(|(&t, _)| t)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Union of the guard (router) leaves across all mappings of `t` —
+    /// the `G_d` tensors the conditional mappings are predicated on.
+    pub fn guards_for(&self, t: TensorId) -> Vec<TensorRef> {
+        let mut out: Vec<TensorRef> =
+            self.get(t).iter().flat_map(|c| c.expr.guard_leaves()).collect();
+        out.sort();
+        out.dedup();
+        out
     }
 
     /// Restrict to `tensors`, keeping only expressions whose leaves satisfy
@@ -255,6 +288,34 @@ mod tests {
         let j = Json::parse(r#"{"A": ["A_1"]}"#).unwrap(); // [4,2] != [4,4]
         let r = Relation::from_json(&j, &gs, &gd).unwrap();
         assert!(r.validate_shapes(&gs, &gd).is_err());
+    }
+
+    #[test]
+    fn conditional_relations_parse_and_report_guards() {
+        let mut gs = Graph::new("gs");
+        gs.input("Y", vec![4, 4]);
+        let mut gd = Graph::new("gd");
+        gd.input("mask_d", vec![4, 2]);
+        gd.input("y0_d", vec![4, 4]);
+        gd.input("y1_d", vec![4, 4]);
+        let j = Json::parse(
+            r#"{"Y": ["combine(mask_d, y0_d, y1_d; experts=2)"]}"#,
+        )
+        .unwrap();
+        let r = Relation::from_json(&j, &gs, &gd).unwrap();
+        r.validate_shapes(&gs, &gd).unwrap();
+        let y = gs.tensor_by_name("Y").unwrap();
+        assert_eq!(r.conditional_tensors(), vec![y]);
+        let mask = gd.tensor_by_name("mask_d").unwrap();
+        assert_eq!(r.guards_for(y), vec![TensorRef::d(mask)], "router is the guard");
+        // an unconditional mapping reports no guards
+        let j2 = Json::parse(r#"{"Y": ["y0_d"]}"#).unwrap();
+        let r2 = Relation::from_json(&j2, &gs, &gd).unwrap();
+        assert!(r2.conditional_tensors().is_empty());
+        assert!(r2.guards_for(y).is_empty());
+        // topk stays unclean and is rejected in a relation expression
+        let bad = Json::parse(r#"{"Y": ["topk(y0_d; k=1)"]}"#).unwrap();
+        assert!(Relation::from_json(&bad, &gs, &gd).is_err());
     }
 
     #[test]

@@ -272,6 +272,77 @@ pub fn fsdp_from_seq(
     Ok((gd, rel))
 }
 
+/// Derive an expert-parallel (EP) implementation from a sequential MoE
+/// graph: every input is replicated (in single-program capture each
+/// expert's weights simply live on their owning rank), all compute is
+/// mirrored node-for-node, and every `combine` node is split into per-rank
+/// *partial combines* — rank `r` combines its own contiguous expert slice
+/// of the router weights (`slice(w; dim=1, r·E/R, (r+1)·E/R)`, node
+/// `{name}_w_r{r}`) with its local experts' outputs (`{name}_r{r}`), and an
+/// all-reduce (`{name}_ar`) merges the partials. Verification closes the
+/// loop through `allreduce_is_sum` + `combine_of_disjoint_expert_slices`:
+/// the sum of partial combines over disjoint, covering expert slices *is*
+/// the sequential combine, conditioned on the shared router tensor.
+pub fn moe_from_seq(gs: &Graph, ranks: usize) -> Result<(Graph, Relation)> {
+    ensure!(ranks >= 2, "expert parallelism needs at least 2 ranks");
+    let mut gd = Graph::new(format!("{}_ep", gs.name));
+    let mut ri = RiBuilder::new();
+    let mut val: Vec<Option<TensorId>> = vec![None; gs.num_tensors()];
+    for &i in &gs.inputs {
+        let t = gs.tensor(i);
+        val[i as usize] =
+            Some(replicate_input_typed(&mut gd, &mut ri, &t.name, &t.shape, t.dtype));
+    }
+    let mut any_combine = false;
+    for nid in gs.topo_order() {
+        let node = gs.node(nid);
+        let ins: Vec<TensorId> =
+            node.inputs.iter().map(|&t| val[t as usize].expect("topo order")).collect();
+        let out = match &node.op {
+            Op::Combine { experts } => {
+                ensure!(
+                    experts % ranks == 0,
+                    "combine '{}': {} experts not divisible by {} ranks",
+                    node.name,
+                    experts,
+                    ranks
+                );
+                any_combine = true;
+                let epr = experts / ranks;
+                let w = ins[0];
+                let mut partials = Vec::with_capacity(ranks);
+                for r in 0..ranks {
+                    let wr = gd.slice(
+                        &format!("{}_w_r{r}", node.name),
+                        w,
+                        1,
+                        (r * epr) as i64,
+                        ((r + 1) * epr) as i64,
+                    );
+                    let mut args = Vec::with_capacity(epr + 1);
+                    args.push(wr);
+                    args.extend_from_slice(&ins[1 + r * epr..1 + (r + 1) * epr]);
+                    partials.push(gd.add(
+                        &format!("{}_r{r}", node.name),
+                        Op::Combine { experts: epr },
+                        args,
+                    )?);
+                }
+                gd.all_reduce(&format!("{}_ar", node.name), partials)
+            }
+            _ => gd.add(&node.name, node.op.clone(), ins)?,
+        };
+        val[node.output as usize] = Some(out);
+    }
+    ensure!(any_combine, "moe_from_seq: sequential graph has no combine node to expert-shard");
+    for &o in &gs.outputs {
+        gd.mark_output(val[o as usize].expect("outputs computed"));
+    }
+    let rel = ri.finish(gs, &gd)?;
+    gd.validate()?;
+    Ok((gd, rel))
+}
+
 /// Cut a sequential chain into pipeline stages with micro-batch loop
 /// unrolling: the primary input (`gs.inputs[0]`) is split into `micro`
 /// micro-batches along dim 0, every other input is replicated as a
@@ -623,6 +694,66 @@ mod tests {
         let mut gd2 = Graph::new("gd2");
         let mut ri2 = RiBuilder::new();
         assert!(fsdp_shard_params(&mut gd2, &mut ri2, "W", "W_ag", &[9, 4], 4).is_err());
+    }
+
+    fn moe_chain() -> Graph {
+        // x -> router -> top-1 mask -> per-expert dispatch/identity -> combine
+        let mut gs = Graph::new("moe");
+        let x = gs.input("x", vec![4, 4]);
+        let wg = gs.input("wg", vec![4, 4]);
+        let scores = gs.matmul("b0_router", x, wg);
+        let mask = gs.topk("b0_mask", scores, 1);
+        let mut ys = Vec::new();
+        for e in 0..4usize {
+            let d = gs.dispatch(&format!("b0_disp{e}"), x, mask, e, 4);
+            ys.push(gs.op(&format!("b0_e{e}_act"), Op::Gelu, vec![d]));
+        }
+        let out = gs.combine("b0_moe", mask, ys);
+        gs.mark_output(out);
+        gs
+    }
+
+    #[test]
+    fn moe_from_seq_splits_combines_and_matches_numerically() {
+        let gs = moe_chain();
+        let (gd, ri) = moe_from_seq(&gs, 2).unwrap();
+        gd.validate().unwrap();
+        ri.validate_shapes(&gs, &gd).unwrap();
+        // combine split into 2 partial combines + an all-reduce
+        let partials = gd
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Combine { experts: 2 }))
+            .count();
+        assert_eq!(partials, 2, "one partial combine per rank");
+        assert!(gd.tensor_by_name("b0_moe_ar").is_some(), "all-reduce merges the partials");
+        // numeric: replicated G_d inputs drive both graphs to equal outputs
+        use crate::expr::eval::eval_graph;
+        let gd_in = crate::expr::eval::random_inputs(&gd, 17);
+        let mut gs_in = rustc_hash::FxHashMap::default();
+        for &i in &gs.inputs {
+            let name = format!("{}_rep", gs.tensor(i).name);
+            let did = gd.tensor_by_name(&name).unwrap();
+            gs_in.insert(i, gd_in[&did].clone());
+        }
+        let a = eval_graph(&gs, &gs_in).unwrap();
+        let b = eval_graph(&gd, &gd_in).unwrap();
+        assert!(
+            a[gs.outputs[0] as usize].allclose(&b[gd.outputs[0] as usize], 1e-5, 1e-6),
+            "partial-combine sum must equal the sequential combine"
+        );
+    }
+
+    #[test]
+    fn moe_from_seq_rejects_indivisible_or_combineless() {
+        let gs = moe_chain();
+        assert!(moe_from_seq(&gs, 3).is_err(), "4 experts % 3 ranks");
+        assert!(moe_from_seq(&gs, 1).is_err(), "EP needs >= 2 ranks");
+        let mut plain = Graph::new("plain");
+        let x = plain.input("x", vec![4, 4]);
+        let y = plain.op("y", Op::Gelu, vec![x]);
+        plain.mark_output(y);
+        assert!(moe_from_seq(&plain, 2).is_err(), "no combine to shard");
     }
 
     #[test]

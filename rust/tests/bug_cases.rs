@@ -81,6 +81,62 @@ fn each_fixed_variant_verifies_with_certificate() {
     }
 }
 
+// ---- MoE routing golden cases (router-conditioned verification) ----
+
+/// A clean expert-parallel MoE pair — top-k gating (k = 2), 4 experts,
+/// 2 ranks — verifies, and its inferred relation replays numerically.
+#[test]
+fn moe_clean_ep_pair_verifies_with_certificate() {
+    let (gs, gd, ri) = graphguard::models::gpt::moe_ep_pair(2, 1).unwrap();
+    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        .unwrap_or_else(|e| panic!("clean top-k EP pair must verify: {e}"));
+    verify_numeric(&gs, &gd, &ri, &out.relation, 4999)
+        .unwrap_or_else(|e| panic!("EP certificate must replay: {e:#}"));
+}
+
+/// Each of the four routing bug operators is rejected with a localization
+/// in the mutated block or downstream (bug effects only flow forward).
+/// These verdicts are static — they do not depend on sampled numerics.
+#[test]
+fn each_routing_mutant_rejected_with_in_region_locus() {
+    use graphguard::fuzz::{
+        apply_mutation_by_name, build_pair, parse_block, Block, Flavor, ModelSpec, MutKind,
+        UnaryKind,
+    };
+    let spec = ModelSpec {
+        seed: 31,
+        ranks: 2,
+        seq: 4,
+        hidden: 4,
+        flavor: Flavor::Moe,
+        blocks: vec![Block::Linear, Block::Moe(UnaryKind::Silu)],
+    };
+    let (gs, gd, ri) = build_pair(&spec).unwrap();
+    check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        .unwrap_or_else(|e| panic!("clean moe pair must refine: {e}"));
+    let cases = [
+        (MutKind::WrongExpertDispatch, "b1_disp0"),
+        (MutKind::DroppedTokenCombine, "b1_moe_r0"),
+        (MutKind::GateWeightUnnormalized, "b1_gates"),
+        (MutKind::CapacityTruncateSilent, "b1_disp1"),
+    ];
+    for (kind, node) in cases {
+        let (gd_mut, m) = apply_mutation_by_name(&gd, kind, node)
+            .unwrap_or_else(|e| panic!("{kind:?}@{node}: {e:#}"));
+        let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+            .err()
+            .unwrap_or_else(|| panic!("{kind:?}@{node} must be rejected"));
+        let block = parse_block(&err.node_name)
+            .unwrap_or_else(|| panic!("{kind:?}: locus '{}' not block-named", err.node_name));
+        let mutated = m.block.expect("routing sites carry block names");
+        assert!(
+            block >= mutated,
+            "{kind:?}: failure at '{}' (block {block}) precedes mutated block {mutated}",
+            err.node_name
+        );
+    }
+}
+
 #[test]
 fn taxonomy_bridge_names_real_fuzz_operators() {
     use graphguard::fuzz::MutKind;

@@ -171,3 +171,12 @@ fn differential_llama3_fsdp() {
         llama::fsdp_pair(2, 1, &llama::LlamaConfig::default()).expect("llama fsdp builds");
     assert_differential("llama3_fsdp_2", &gs, &gd, &ri);
 }
+
+/// Routing lemma family: incremental and full-rescan saturation must agree
+/// on the expert-parallel MoE workload (partial-combine collapse,
+/// dispatch desugaring, router-conditioned congruences).
+#[test]
+fn differential_gpt_moe_ep() {
+    let (gs, gd, ri) = gpt::moe_ep_pair(2, 1).expect("gpt moe ep builds");
+    assert_differential("gpt_moe_ep_2", &gs, &gd, &ri);
+}

@@ -1,4 +1,4 @@
-//! Replayable regression fixtures for the PP/FSDP strategy families.
+//! Replayable regression fixtures for the PP/FSDP/MoE strategy families.
 //!
 //! Each fixture under `fixtures/` uses the exact JSON schema the fuzzer's
 //! `record_cex` writes for minimized counterexamples, so `graphguard fuzz
@@ -40,5 +40,32 @@ fn fsdp_stale_shard_fixture_is_killed_in_region() {
     assert_eq!(
         verdict, "mutant outcome: killed_in_region",
         "stale FSDP shard must stay detected with an in-block locus"
+    );
+}
+
+#[test]
+fn moe_clean_pair_fixture_verifies() {
+    let verdict = replay(include_str!("fixtures/moe_clean_verifies.json"));
+    assert!(
+        verdict.contains("clean pair verifies"),
+        "clean expert-parallel MoE pair regressed into a false alarm: {verdict}"
+    );
+}
+
+#[test]
+fn moe_wrong_expert_dispatch_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/moe_wrong_expert_dispatch_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "wrong-expert dispatch must stay detected with an in-block locus"
+    );
+}
+
+#[test]
+fn moe_gate_unnormalized_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/moe_gate_unnormalized_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "unnormalized gate weights must stay detected at the gate operator"
     );
 }

@@ -132,6 +132,15 @@ fn known_mutants_killed_across_flavors() {
             "b0_scale",
             0usize,
         ),
+        // wrong-expert dispatch: tokens scattered to expert 0 while the
+        // combine gathers under expert 1's gates
+        (
+            Flavor::Moe,
+            vec![Block::Moe(UnaryKind::Silu), Block::Unary(UnaryKind::Gelu)],
+            MutKind::WrongExpertDispatch,
+            "b0_disp1",
+            0usize,
+        ),
     ];
     for (flavor, blocks, kind, node, min_block) in cases {
         let spec = ModelSpec { seed: 5, ranks: 2, seq: 4, hidden: 4, flavor, blocks };

@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# Bench regression gate: compare fresh BENCH_<name>.json files against the
+# committed snapshots under BENCH_baseline/ and fail on a wall-time
+# regression beyond the threshold (default 25%).
+#
+#   usage: scripts/bench_compare.sh [BASELINE_DIR] [FRESH_DIR]
+#
+# Every BENCH_*.json in BASELINE_DIR is compared with the file of the same
+# name in FRESH_DIR by *summed* wall_ns across its result rows (the schema
+# documented in EXPERIMENTS.md). Baselines marked `"bootstrap": true` are
+# skipped with a notice: they are placeholders awaiting population from a
+# trusted CI run (see BENCH_baseline/README.md). A baseline whose fresh
+# counterpart is missing fails the gate — the bench did not run.
+#
+# Environment:
+#   BENCH_REGRESSION_THRESHOLD  fractional slowdown allowed (default 0.25)
+set -euo pipefail
+
+baseline_dir="${1:-BENCH_baseline}"
+fresh_dir="${2:-.}"
+threshold="${BENCH_REGRESSION_THRESHOLD:-0.25}"
+
+if [ ! -d "$baseline_dir" ]; then
+    echo "bench_compare: baseline directory '$baseline_dir' not found" >&2
+    exit 1
+fi
+
+shopt -s nullglob
+baselines=("$baseline_dir"/BENCH_*.json)
+if [ ${#baselines[@]} -eq 0 ]; then
+    echo "bench_compare: no BENCH_*.json baselines under '$baseline_dir'" >&2
+    exit 1
+fi
+
+python3 - "$threshold" "$fresh_dir" "${baselines[@]}" <<'PY'
+import json
+import os
+import sys
+
+threshold = float(sys.argv[1])
+fresh_dir = sys.argv[2]
+failures = []
+
+print(f"{'bench':<12} {'baseline':>14} {'fresh':>14} {'ratio':>8}  verdict")
+for path in sys.argv[3:]:
+    name = os.path.basename(path)
+    with open(path) as f:
+        base = json.load(f)
+    if base.get("bootstrap"):
+        print(f"{name:<12} {'—':>14} {'—':>14} {'—':>8}  SKIP (bootstrap baseline, "
+              f"populate from a CI artifact)")
+        continue
+    base_total = sum(r["wall_ns"] for r in base.get("results", []))
+    if base_total <= 0:
+        failures.append(f"{name}: baseline has no timed results")
+        continue
+    fresh_path = os.path.join(fresh_dir, name)
+    if not os.path.exists(fresh_path):
+        failures.append(f"{name}: fresh result missing (bench did not run?)")
+        continue
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    fresh_total = sum(r["wall_ns"] for r in fresh.get("results", []))
+    if fresh_total <= 0:
+        failures.append(f"{name}: fresh result has no timed rows "
+                        f"(bench crashed or schema drifted?)")
+        continue
+    ratio = fresh_total / base_total
+    verdict = "ok" if ratio <= 1.0 + threshold else f"REGRESSION (> {threshold:.0%})"
+    print(f"{name:<12} {base_total:>14} {fresh_total:>14} {ratio:>8.3f}  {verdict}")
+    if ratio > 1.0 + threshold:
+        failures.append(f"{name}: wall time {ratio:.3f}x baseline "
+                        f"(allowed {1.0 + threshold:.2f}x)")
+
+if failures:
+    print("\nbench regression gate FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print("\nbench regression gate passed")
+PY

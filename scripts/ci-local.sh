@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI parity: run the exact gate .github/workflows/ci.yml applies to a PR,
+# in the same order, so any toolchain-bearing machine can reproduce a CI
+# verdict with one command. Steps (both CI jobs, serialized):
+#
+#   rust job:        build → test → fmt → clippy (-D warnings)
+#   fuzz-smoke job:  suite → fuzz smoke → fig4 + fuzz benches → bench gate
+#
+# Pass --quick to stop after the rust job (the fast pre-push check).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+step() {
+    echo
+    echo "==> $*"
+    "$@"
+}
+
+step cargo build --release
+step cargo test -q
+step cargo fmt --check
+step cargo clippy --all-targets -- -D warnings
+
+if [ "${1:-}" = "--quick" ]; then
+    echo
+    echo "ci-local: quick gate passed (suite/fuzz/bench skipped)"
+    exit 0
+fi
+
+step cargo run --release --bin graphguard -- suite --ranks 2
+step cargo run --release --bin graphguard -- fuzz --seeds 50 --seed 0
+step cargo bench --bench fig4_verification_time
+step cargo bench --bench fuzz_throughput
+step ./scripts/bench_compare.sh BENCH_baseline .
+
+echo
+echo "ci-local: full CI gate passed"
