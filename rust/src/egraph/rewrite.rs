@@ -12,7 +12,7 @@
 use super::ematch::{Pat, Subst};
 use super::enode::{EGraph, Id};
 use crate::symbolic::{LinExpr, Solver, Truth};
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 use std::sync::Mutex;
 
 /// Kind of a cached solver query (both reduce to a question about `a - b`).
@@ -34,6 +34,13 @@ enum CondKind {
 pub struct RewriteCtx {
     pub solver: Solver,
     cond_cache: Mutex<FxHashMap<(CondKind, LinExpr), Truth>>,
+    /// Pipeline channels whose buffer slot fails the schedule's liveness
+    /// audit (`crate::schedule::quarantined_channels`). The
+    /// `recv_of_send_identity` lemma refuses to collapse a quarantined
+    /// channel even when its send/recv tags match — a lowering that stamps
+    /// both sides of a hazardous boundary with the occupant epoch must not
+    /// verify. Empty by default (no behavior change outside scheduled PP).
+    quarantined_channels: FxHashSet<usize>,
 }
 
 impl Default for RewriteCtx {
@@ -44,7 +51,21 @@ impl Default for RewriteCtx {
 
 impl RewriteCtx {
     pub fn with_solver(solver: Solver) -> Self {
-        RewriteCtx { solver, cond_cache: Mutex::new(FxHashMap::default()) }
+        RewriteCtx {
+            solver,
+            cond_cache: Mutex::new(FxHashMap::default()),
+            quarantined_channels: FxHashSet::default(),
+        }
+    }
+
+    /// Mark channels as slot-liveness violators (see field docs).
+    pub fn quarantine_channels(&mut self, channels: impl IntoIterator<Item = usize>) {
+        self.quarantined_channels.extend(channels);
+    }
+
+    /// Is this channel's buffer slot under a liveness quarantine?
+    pub fn channel_quarantined(&self, chan: usize) -> bool {
+        self.quarantined_channels.contains(&chan)
     }
 
     /// Memoized `solver.check_eq`.

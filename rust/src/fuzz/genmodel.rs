@@ -31,6 +31,12 @@
 //!   data-dependent (top-1 gating over `2·ranks` experts); verification
 //!   relies on the router-conditioned relation language and the `routing`
 //!   lemma family.
+//! - [`Flavor::PpSched`] — schedule-aware pipeline parallelism: the Pp
+//!   construction (2 stages, here with `2·ranks` micro-batches; 2 virtual
+//!   chunks per stage when interleaved) followed by the buffer-assignment
+//!   lowering (`crate::schedule::lower_buffers`), so every send/recv
+//!   carries a physical `(boundary, slot, epoch)` buffer tag sized to the
+//!   GPipe / 1F1B / interleaved schedule's minimum safe pool depth.
 //!
 //! Every construction is covered by lemmas in `crate::lemmas`
 //! (matmul block splits, unary/softmax/rmsnorm over concat, collective
@@ -62,17 +68,23 @@ pub enum Flavor {
     /// Tensor parallelism: weights sharded, activations full.
     Tp,
     /// Pipeline parallelism: 2 stages, `ranks` micro-batches, send/recv
-    /// boundary channels.
+    /// boundary channels (schedule-agnostic logical wiring).
     Pp,
     /// ZeRO-3/FSDP: parameters 1/R-sharded, all-gathered before use.
     Fsdp,
     /// Expert parallelism: per-rank partial combines over disjoint expert
     /// slices, all-reduced (router-conditioned MoE).
     Moe,
+    /// Schedule-aware pipeline parallelism: 2 stages (× 2 virtual chunks
+    /// when interleaved), `2·ranks` micro-batches, logical channels lowered
+    /// onto physical activation buffers at the schedule's minimum safe pool
+    /// depth (`crate::schedule::lower_buffers`).
+    PpSched(crate::schedule::SchedKind),
 }
 
 impl Flavor {
     pub fn name(self) -> &'static str {
+        use crate::schedule::SchedKind;
         match self {
             Flavor::Dp => "dp",
             Flavor::Sp => "sp",
@@ -80,9 +92,13 @@ impl Flavor {
             Flavor::Pp => "pp",
             Flavor::Fsdp => "fsdp",
             Flavor::Moe => "moe",
+            Flavor::PpSched(SchedKind::GPipe) => "pp_sched_gpipe",
+            Flavor::PpSched(SchedKind::OneFOneB) => "pp_sched_1f1b",
+            Flavor::PpSched(SchedKind::Interleaved) => "pp_sched_interleaved",
         }
     }
     pub fn parse(s: &str) -> Option<Flavor> {
+        use crate::schedule::SchedKind;
         match s {
             "dp" => Some(Flavor::Dp),
             "sp" => Some(Flavor::Sp),
@@ -90,6 +106,9 @@ impl Flavor {
             "pp" => Some(Flavor::Pp),
             "fsdp" => Some(Flavor::Fsdp),
             "moe" => Some(Flavor::Moe),
+            "pp_sched_gpipe" => Some(Flavor::PpSched(SchedKind::GPipe)),
+            "pp_sched_1f1b" => Some(Flavor::PpSched(SchedKind::OneFOneB)),
+            "pp_sched_interleaved" => Some(Flavor::PpSched(SchedKind::Interleaved)),
             _ => None,
         }
     }
@@ -282,6 +301,20 @@ impl ModelSpec {
         })
     }
 
+    /// The concrete schedule of a [`Flavor::PpSched`] spec: 2 physical
+    /// stages, `2·ranks` micro-batches, 2 virtual chunks per stage when
+    /// interleaved. `None` for every other flavor.
+    pub fn sched(&self) -> Option<crate::schedule::Schedule> {
+        use crate::schedule::{SchedKind, Schedule};
+        let micro = 2 * self.ranks;
+        match self.flavor {
+            Flavor::PpSched(SchedKind::GPipe) => Some(Schedule::gpipe(2, micro)),
+            Flavor::PpSched(SchedKind::OneFOneB) => Some(Schedule::one_f_one_b(2, micro)),
+            Flavor::PpSched(SchedKind::Interleaved) => Some(Schedule::interleaved(2, micro, 2)),
+            _ => None,
+        }
+    }
+
     /// Basic well-formedness used before building (also by replay).
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.ranks >= 1, "ranks must be >= 1");
@@ -298,14 +331,31 @@ impl ModelSpec {
             self.hidden,
             self.ranks
         );
+        if matches!(self.flavor, Flavor::Pp | Flavor::PpSched(_)) {
+            anyhow::ensure!(
+                !self.blocks.contains(&Block::Attention),
+                "pipeline flavors cannot micro-batch attention (rows mix across micro-batches)"
+            );
+        }
         if self.flavor == Flavor::Pp {
             anyhow::ensure!(
                 self.blocks.len() >= 2,
                 "pp flavor needs at least 2 blocks (one per stage)"
             );
+        }
+        if let Some(sched) = self.sched() {
+            sched.validate()?;
             anyhow::ensure!(
-                !self.blocks.contains(&Block::Attention),
-                "pp flavor cannot micro-batch attention (rows mix across micro-batches)"
+                self.blocks.len() >= sched.chunks(),
+                "pp_sched flavor needs >= {} blocks (one per pipeline chunk), got {}",
+                sched.chunks(),
+                self.blocks.len()
+            );
+            anyhow::ensure!(
+                self.seq % sched.micro as i64 == 0,
+                "seq {} must divide into {} micro-batches",
+                self.seq,
+                sched.micro
             );
         }
         let has_moe = self.blocks.iter().any(|b| matches!(b, Block::Moe(_)));
@@ -341,9 +391,28 @@ const SCALE_CHOICES: [f64; 4] = [0.5, 2.0, 0.25, 1.5];
 /// strategy helper applies; block kinds are filtered per flavor so the
 /// clean distributed variant is provable by the standard lemma library.
 pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
-    let seq = ranks as i64 * (1 + rng.below(3) as i64); // R, 2R or 3R rows
+    sample_spec_for(rng, ranks, seed, None)
+}
+
+/// [`sample_spec`] with an optional forced flavor (single-flavor fuzz
+/// campaigns — `graphguard fuzz --flavor`). The rng stream is consumed
+/// exactly as in the unforced sampler, then the flavor is overridden —
+/// forcing never changes which blocks/shapes a seed draws beyond the
+/// flavor's own constraints. Degenerate combinations fall back the same way
+/// sampling does (EP at one rank becomes FSDP) — except a *forced*
+/// interleaved campaign, where a chain too short for the 4-chunk layout is
+/// padded with Linear blocks rather than silently demoted to 1F1B, so the
+/// dedicated nightly run keeps every seed interleaved.
+pub fn sample_spec_for(
+    rng: &mut Rng,
+    ranks: usize,
+    seed: u64,
+    forced: Option<Flavor>,
+) -> ModelSpec {
+    use crate::schedule::SchedKind;
+    let mut seq = ranks as i64 * (1 + rng.below(3) as i64); // R, 2R or 3R rows
     let hidden = ranks as i64 * 2 * (1 + rng.below(2) as i64); // even, % ranks == 0
-    let flavor = match rng.below(8) {
+    let mut flavor = match rng.below(9) {
         0 => Flavor::Dp,
         1 | 2 => Flavor::Sp,
         3 | 4 => Flavor::Tp,
@@ -351,10 +420,28 @@ pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
         6 => Flavor::Fsdp,
         // EP needs >= 2 ranks to place experts on; degenerate degrees fall
         // back to FSDP so every sampled spec stays buildable
-        _ if ranks >= 2 => Flavor::Moe,
-        _ => Flavor::Fsdp,
+        7 if ranks >= 2 => Flavor::Moe,
+        7 => Flavor::Fsdp,
+        _ => Flavor::PpSched(
+            [SchedKind::GPipe, SchedKind::OneFOneB, SchedKind::Interleaved]
+                [rng.below(3) as usize],
+        ),
     };
+    if let Some(f) = forced {
+        flavor = match f {
+            Flavor::Moe if ranks < 2 => Flavor::Fsdp,
+            other => other,
+        };
+    }
     let n_blocks = 2 + rng.below(4) as usize; // 2..=5
+    let forced_intlv = forced == Some(Flavor::PpSched(SchedKind::Interleaved));
+    if flavor == Flavor::PpSched(SchedKind::Interleaved) && n_blocks < 4 && !forced_intlv {
+        // 2 stages x 2 virtual chunks need 4 blocks; shorter sampled chains
+        // run the plain 1F1B schedule instead. A *forced* interleaved
+        // campaign must not silently halve its coverage this way — it pads
+        // the chain below instead.
+        flavor = Flavor::PpSched(SchedKind::OneFOneB);
+    }
     let mut blocks = Vec::with_capacity(n_blocks);
     for _ in 0..n_blocks {
         let pick = rng.below(8);
@@ -383,9 +470,9 @@ pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
             5 => Block::Norm(if rng.below(2) == 0 { NormKind::Softmax } else { NormKind::RmsNorm }),
             6 => Block::Rope,
             _ => {
-                // micro-batching cannot split attention rows — PP swaps it
-                // for the (still weight-bearing) Linear block
-                if flavor == Flavor::Pp {
+                // micro-batching cannot split attention rows — the pipeline
+                // flavors swap it for the (still weight-bearing) Linear block
+                if matches!(flavor, Flavor::Pp | Flavor::PpSched(_)) {
                     Block::Linear
                 } else {
                     Block::Attention
@@ -398,6 +485,18 @@ pub fn sample_spec(rng: &mut Rng, ranks: usize, seed: u64) -> ModelSpec {
         // the EP flavor must expert-shard something: force one MoE block
         let last = blocks.len() - 1;
         blocks[last] = Block::Moe(UnaryKind::Silu);
+    }
+    if forced_intlv {
+        // dedicated interleaved campaigns keep every seed interleaved:
+        // short chains are padded to the 4 blocks the 2x2 layout needs
+        while blocks.len() < 4 {
+            blocks.push(Block::Linear);
+        }
+    }
+    if matches!(flavor, Flavor::PpSched(_)) {
+        // 2·ranks micro-batches at 2 rows each — divisible for every kind
+        // (and micro % stages == 0, as interleaving requires)
+        seq = 4 * ranks as i64;
     }
     ModelSpec { seed, ranks, seq, hidden, flavor, blocks }
 }
@@ -514,6 +613,33 @@ pub fn build_pair(spec: &ModelSpec) -> Result<(Graph, Graph, Relation)> {
         return Ok((gs, gd, ri));
     }
 
+    if let Some(sched) = spec.sched() {
+        // schedule-aware PP: cut at the chunk boundaries the same helper
+        // the model-zoo builders use, split into sched.micro micro-batches,
+        // then lower the logical channels onto physical buffers at the
+        // schedule's minimum safe pool depth (buffer tags on every
+        // send/recv; an undersized pool would be rejected at construction)
+        let cut_blks = stage_ends(spec.blocks.len(), sched.chunks());
+        let cuts = cut_blks
+            .iter()
+            .map(|&e| {
+                gs.tensor(block_ends[e - 1])
+                    .producer
+                    .ok_or_else(|| anyhow!("stage cut fell on a graph input"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let depth = sched.min_safe_depth()?;
+        let (gd, ri) = crate::strategies::pipeline_stage_split_scheduled(
+            &gs,
+            &cuts,
+            &format!("b{}_out", spec.blocks.len()),
+            &sched,
+            depth,
+        )?;
+        gs.validate()?;
+        return Ok((gs, gd, ri));
+    }
+
     if spec.flavor == Flavor::Moe {
         // expert parallelism: compute mirrored 1:1, combines split into
         // per-rank partial combines over disjoint expert slices + all-reduce
@@ -544,7 +670,9 @@ pub fn build_pair(spec: &ModelSpec) -> Result<(Graph, Graph, Relation)> {
     let mut ri = RiBuilder::new();
 
     match spec.flavor {
-        Flavor::Pp | Flavor::Fsdp | Flavor::Moe => unreachable!("handled above"),
+        Flavor::Pp | Flavor::Fsdp | Flavor::Moe | Flavor::PpSched(_) => {
+            unreachable!("handled above")
+        }
         Flavor::Dp => {
             let mut cur = replicate_input_typed(&mut gd, &mut ri, "x", &[s, h], DType::F32);
             for (i, block) in spec.blocks.iter().enumerate() {
@@ -866,7 +994,17 @@ mod tests {
             gd.validate().unwrap();
             ri.validate_shapes(&gs, &gd).unwrap();
         }
-        for f in ["dp", "sp", "tp", "pp", "fsdp", "moe"] {
+        for f in [
+            "dp",
+            "sp",
+            "tp",
+            "pp",
+            "fsdp",
+            "moe",
+            "pp_sched_gpipe",
+            "pp_sched_1f1b",
+            "pp_sched_interleaved",
+        ] {
             assert!(seen.contains(f), "sampler never produced flavor {f}: {seen:?}");
         }
     }
@@ -958,6 +1096,97 @@ mod tests {
         let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
             .unwrap_or_else(|e| panic!("clean PP pair must refine: {e}"));
         crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 55).unwrap();
+    }
+
+    #[test]
+    fn pp_sched_clean_pairs_refine_for_every_schedule_kind() {
+        use crate::schedule::{decode_buffer_tag, SchedKind};
+        for (kind, blocks) in [
+            (SchedKind::GPipe, vec![Block::Linear, Block::Unary(UnaryKind::Gelu)]),
+            (SchedKind::OneFOneB, vec![Block::Linear, Block::Mlp(UnaryKind::Silu)]),
+            (
+                SchedKind::Interleaved,
+                vec![Block::Linear, Block::Unary(UnaryKind::Gelu), Block::Linear, Block::Linear],
+            ),
+        ] {
+            let spec = ModelSpec {
+                seed: 31,
+                ranks: 2,
+                seq: 8,
+                hidden: 4,
+                flavor: Flavor::PpSched(kind),
+                blocks,
+            };
+            let (gs, gd, ri) = build_pair(&spec).unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+            // every boundary op is buffer-tagged
+            for n in gd.nodes() {
+                if let Op::Send { chan } | Op::Recv { chan } = n.op {
+                    assert!(
+                        decode_buffer_tag(chan).is_some(),
+                        "{kind:?}: '{}' still carries logical channel {chan}",
+                        n.name
+                    );
+                }
+            }
+            let cfg = crate::infer::InferConfig::default();
+            let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+                .unwrap_or_else(|e| panic!("clean {kind:?} pair must refine: {e}"));
+            crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 59).unwrap();
+        }
+    }
+
+    #[test]
+    fn pp_sched_spec_validation() {
+        use crate::schedule::SchedKind;
+        // interleaved needs one block per chunk (2 stages x 2 chunks)
+        let spec = ModelSpec {
+            seed: 32,
+            ranks: 2,
+            seq: 8,
+            hidden: 4,
+            flavor: Flavor::PpSched(SchedKind::Interleaved),
+            blocks: vec![Block::Linear, Block::Linear],
+        };
+        assert!(build_pair(&spec).is_err());
+        // seq must divide into 2*ranks micro-batches
+        let spec = ModelSpec {
+            seed: 33,
+            ranks: 2,
+            seq: 6,
+            hidden: 4,
+            flavor: Flavor::PpSched(SchedKind::OneFOneB),
+            blocks: vec![Block::Linear, Block::Linear],
+        };
+        assert!(build_pair(&spec).is_err());
+    }
+
+    #[test]
+    fn forced_flavor_sampling_is_deterministic_and_respects_fallbacks() {
+        use crate::schedule::SchedKind;
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        let a = sample_spec_for(&mut r1, 2, 11, Some(Flavor::PpSched(SchedKind::OneFOneB)));
+        let b = sample_spec_for(&mut r2, 2, 11, Some(Flavor::PpSched(SchedKind::OneFOneB)));
+        assert_eq!(a, b);
+        assert!(matches!(a.flavor, Flavor::PpSched(_)));
+        assert_eq!(a.seq, 8, "pp_sched forces 4R rows");
+        a.validate().unwrap();
+        build_pair(&a).unwrap();
+        // degenerate EP falls back exactly like unforced sampling
+        let mut r = Rng::new(12);
+        let m = sample_spec_for(&mut r, 1, 12, Some(Flavor::Moe));
+        assert_eq!(m.flavor, Flavor::Fsdp);
+        m.validate().unwrap();
+        // a forced interleaved campaign never demotes: short chains are
+        // padded to the 4 blocks the 2x2 chunk layout needs
+        for seed in 0..32u64 {
+            let mut r = Rng::new(seed);
+            let s = sample_spec_for(&mut r, 2, seed, Some(Flavor::PpSched(SchedKind::Interleaved)));
+            assert_eq!(s.flavor, Flavor::PpSched(SchedKind::Interleaved), "seed {seed}");
+            assert!(s.blocks.len() >= 4, "seed {seed}: {} blocks", s.blocks.len());
+            s.validate().unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+            build_pair(&s).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        }
     }
 
     #[test]

@@ -8,16 +8,19 @@
 //!    / reduction / attention / MoE blocks) plus *correct* distributed
 //!    variants composed from `crate::strategies` (DP replication, SP
 //!    sequence sharding, TP weight sharding incl. the Fig-1 reduce-scatter
-//!    form, PP stage splits with micro-batched send/recv boundaries,
+//!    form, PP stage splits with micro-batched send/recv boundaries —
+//!    logical or buffer-lowered under a GPipe/1F1B/interleaved schedule —
 //!    FSDP/ZeRO parameter sharding with pre-use all-gathers, and
 //!    expert-parallel MoE with per-rank partial combines).
-//! 2. [`mutate`] — 20 single-node bug operators drawn from the §6.2
-//!    taxonomy and the PP/ZeRO/MoE wiring-bug families (wrong collective,
-//!    dropped aggregation, shifted slice offsets, wrong chunk index,
-//!    mis-scaled reductions, shard re-wiring, wrong-axis softmax, crossed
-//!    or dropped stage boundaries, stale parameter shards, off-by-one
-//!    micro-batch rescales, wrong-expert dispatch, dropped token combines,
-//!    unnormalized gate weights, silent capacity truncation).
+//! 2. [`mutate`] — 23 single-node bug operators drawn from the §6.2
+//!    taxonomy and the PP/ZeRO/MoE/schedule wiring-bug families (wrong
+//!    collective, dropped aggregation, shifted slice offsets, wrong chunk
+//!    index, mis-scaled reductions, shard re-wiring, wrong-axis softmax,
+//!    crossed or dropped stage boundaries, stale parameter shards,
+//!    off-by-one micro-batch rescales, wrong-expert dispatch, dropped
+//!    token combines, unnormalized gate weights, silent capacity
+//!    truncation, stale buffer reuse, double-buffer slot swaps, and
+//!    interleaved virtual-stage misbinding).
 //! 3. [`oracle`] — runs `check_refinement` on each (clean, mutant) pair
 //!    and cross-checks against concrete execution: clean pairs must verify
 //!    with a replaying numeric certificate, numerics-changing mutants must
@@ -26,13 +29,16 @@
 //!    replayable JSON counterexamples, byte-identical per seed.
 //!
 //! CLI: `graphguard fuzz --seeds N --seed S [--ranks R] [--mutants M]
-//! [--out DIR]`, plus `--replay FILE` for counterexample files.
+//! [--out DIR] [--flavor F]`, plus `--replay FILE` for counterexample
+//! files.
 
 pub mod genmodel;
 pub mod mutate;
 pub mod oracle;
 
-pub use genmodel::{build_pair, sample_spec, Block, Flavor, ModelSpec, NormKind, UnaryKind};
+pub use genmodel::{
+    build_pair, sample_spec, sample_spec_for, Block, Flavor, ModelSpec, NormKind, UnaryKind,
+};
 pub use mutate::{
     applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, MutKind, Mutation,
     Site, MUT_KINDS,

@@ -8,9 +8,12 @@
 //! index, mis-scaled reductions, reordered/duplicated shard wiring,
 //! wrong-axis reductions, the pipeline/ZeRO wiring family (crossed or
 //! dropped send/recv boundaries, stale parameter shards in a re-gather,
-//! off-by-one micro-batch rescales), and the MoE routing family (wrong
+//! off-by-one micro-batch rescales), the MoE routing family (wrong
 //! expert index, dropped token contributions at the combine, unnormalized
-//! gate weights, silent capacity truncation).
+//! gate weights, silent capacity truncation), and the schedule/buffer
+//! family on buffer-lowered pipeline graphs (stale buffer reuse across
+//! epochs, double-buffer slot swaps, interleaved virtual-stage
+//! misbinding).
 //!
 //! Mutations are applied by *rebuilding* the graph through [`Graph::add`],
 //! so output shapes are re-inferred and a mutant that no longer
@@ -79,9 +82,25 @@ pub enum MutKind {
     /// drops all but its first assigned token (the classic
     /// capacity-overflow token-drop bug).
     CapacityTruncateSilent,
+    /// Stale buffer reuse on a schedule-lowered pipeline graph: a recv
+    /// whose physical buffer `(boundary, slot)` is recycled across epochs
+    /// reads the slot one epoch too early — it picks up the *previous*
+    /// occupant's activation (micro-batch `m - depth`) still sitting in the
+    /// buffer. The recv keeps its intended `(slot, epoch)` tag, so the
+    /// crossed tag stays opaque and refinement fails inside the receiving
+    /// stage.
+    BufferReuseEarly,
+    /// Double-buffering index bug: a recv bound to the wrong slot of its
+    /// boundary's buffer pool — it reads a pool-mate's buffer (same epoch,
+    /// different slot), i.e. another micro-batch's activation.
+    DoubleBufferSwap,
+    /// Interleaved-virtual-stage misbinding: a recv bound to the analogous
+    /// buffer `(slot, epoch)` of a *different* chunk boundary — the classic
+    /// wrong-virtual-chunk wiring of interleaved 1F1B runtimes.
+    VirtualStageMisbind,
 }
 
-pub const MUT_KINDS: [MutKind; 20] = [
+pub const MUT_KINDS: [MutKind; 23] = [
     MutKind::GatherReorder,
     MutKind::DropAggregation,
     MutKind::GatherToReduceScatter,
@@ -102,6 +121,9 @@ pub const MUT_KINDS: [MutKind; 20] = [
     MutKind::DroppedTokenCombine,
     MutKind::GateWeightUnnormalized,
     MutKind::CapacityTruncateSilent,
+    MutKind::BufferReuseEarly,
+    MutKind::DoubleBufferSwap,
+    MutKind::VirtualStageMisbind,
 ];
 
 impl MutKind {
@@ -127,6 +149,9 @@ impl MutKind {
             MutKind::DroppedTokenCombine => "dropped_token_combine",
             MutKind::GateWeightUnnormalized => "gate_weight_unnormalized",
             MutKind::CapacityTruncateSilent => "capacity_truncate_silent",
+            MutKind::BufferReuseEarly => "buffer_reuse_early",
+            MutKind::DoubleBufferSwap => "double_buffer_swap",
+            MutKind::VirtualStageMisbind => "virtual_stage_misbind",
         }
     }
 
@@ -424,7 +449,63 @@ fn mutate_node(
             }
             _ => None,
         },
+        // The buffer-hazard operators below only fire on schedule-lowered
+        // graphs (decode_buffer_tag is None for logical channels) and, like
+        // the stage-wiring family, only rewire to tensors created earlier
+        // than the mutated node — rebuild_with's topological contract.
+        MutKind::BufferReuseEarly => match node.op {
+            Op::Recv { chan } => {
+                let (b, slot, epoch) = crate::schedule::decode_buffer_tag(chan)?;
+                // the previous occupant of this physical buffer
+                let want = crate::schedule::buffer_tag(b, slot, epoch.checked_sub(1)?);
+                let cand = earlier_send_with(g, node, |c| c == want)?;
+                Some((node.op.clone(), vec![cand]))
+            }
+            _ => None,
+        },
+        MutKind::DoubleBufferSwap => match node.op {
+            Op::Recv { chan } => {
+                let (b, slot, epoch) = crate::schedule::decode_buffer_tag(chan)?;
+                // a pool-mate: same boundary and epoch, different slot
+                // (lower slots were built earlier)
+                let cand = earlier_send_with(g, node, |c| {
+                    matches!(
+                        crate::schedule::decode_buffer_tag(c),
+                        Some((b2, s2, e2)) if b2 == b && e2 == epoch && s2 != slot
+                    )
+                })?;
+                Some((node.op.clone(), vec![cand]))
+            }
+            _ => None,
+        },
+        MutKind::VirtualStageMisbind => match node.op {
+            Op::Recv { chan } => {
+                let (b, slot, epoch) = crate::schedule::decode_buffer_tag(chan)?;
+                // the analogous buffer of a different chunk boundary
+                let cand = earlier_send_with(g, node, |c| {
+                    matches!(
+                        crate::schedule::decode_buffer_tag(c),
+                        Some((b2, s2, e2)) if b2 != b && s2 == slot && e2 == epoch
+                    )
+                })?;
+                Some((node.op.clone(), vec![cand]))
+            }
+            _ => None,
+        },
     }
+}
+
+/// First tensor before `node`'s output that is produced by a `Send` whose
+/// channel satisfies `want`, shape-compatible with the node's current
+/// input. Shared by the buffer-hazard operators.
+fn earlier_send_with(g: &Graph, node: &Node, want: impl Fn(usize) -> bool) -> Option<TensorId> {
+    let cur = node.inputs[0];
+    let shape = g.shape(cur);
+    (0..node.output).find(|&t| {
+        t != cur
+            && g.shape(t) == shape
+            && matches!(g.producer(t).map(|n| &n.op), Some(Op::Send { chan }) if want(*chan))
+    })
 }
 
 /// Enumerate every applicable (node, operator) site, in deterministic
@@ -442,51 +523,18 @@ pub fn applicable_sites(g: &Graph) -> Vec<Site> {
     out
 }
 
-/// Rebuild `g` with `edit` applied to every node. Shapes are re-inferred;
-/// an edit that breaks shape inference fails the whole rebuild.
-///
-/// Tensors are recreated in original id order — inputs *interleaved* with
-/// node outputs, exactly as the model builders declare them (weights are
-/// registered lazily per block). This keeps every `TensorId` stable, which
-/// the oracle depends on: it reuses the clean graph's input environments
-/// and its `TensorId`-keyed relation `R_i` against the mutant.
-pub fn rebuild_with(
-    g: &Graph,
-    edit: impl Fn(NodeId, &Node, &[TensorId]) -> (Op, Vec<TensorId>),
-) -> Result<Graph> {
-    let mut out = Graph::new(g.name.clone());
-    let mut remap: Vec<TensorId> = vec![0; g.num_tensors()];
-    for tid in 0..g.num_tensors() as TensorId {
-        let t = g.tensor(tid);
-        match t.producer {
-            None => {
-                remap[tid as usize] = out.input_typed(&t.name, t.shape.clone(), t.dtype);
-            }
-            Some(nid) => {
-                let node = g.node(nid);
-                debug_assert_eq!(node.output, tid, "one output tensor per node");
-                let mapped: Vec<TensorId> =
-                    node.inputs.iter().map(|&x| remap[x as usize]).collect();
-                let (op, ins) = edit(nid, node, &mapped);
-                remap[tid as usize] = out.add(&node.name, op, ins)?;
-            }
-        }
-    }
-    for &o in &g.outputs {
-        out.mark_output(remap[o as usize]);
-    }
-    out.validate()?;
-    Ok(out)
-}
-
 /// Apply one mutation site; `Err` means the mutant is stillborn (the
 /// rewritten graph no longer type-checks) or the site is inapplicable.
+/// Mutants are rebuilt through [`Graph::rebuild_with`], which owns the
+/// `TensorId`-stability contract the oracle depends on (it reuses the clean
+/// graph's input environments and its `TensorId`-keyed relation `R_i`
+/// against the mutant).
 pub fn apply_mutation(g: &Graph, site: Site) -> Result<(Graph, Mutation)> {
     let target = g.node(site.node);
     mutate_node(g, target, site.kind, &target.inputs).ok_or_else(|| {
         anyhow!("mutation {} not applicable to '{}'", site.kind.name(), target.name)
     })?;
-    let mutated = rebuild_with(g, |nid, node, mapped| {
+    let mutated = g.rebuild_with(|nid, node, mapped| {
         if nid == site.node {
             if let Some(repl) = mutate_node(g, node, site.kind, mapped) {
                 return repl;
@@ -608,7 +656,7 @@ mod tests {
             blocks: vec![Block::Linear, Block::Linear],
         };
         let (_gs, gd, _ri) = build_pair(&spec).unwrap();
-        let rebuilt = rebuild_with(&gd, |_n, node, ins| (node.op.clone(), ins.to_vec())).unwrap();
+        let rebuilt = gd.rebuild_with(|_n, node, ins| (node.op.clone(), ins.to_vec())).unwrap();
         assert_eq!(rebuilt.inputs, gd.inputs, "input ids must not renumber");
         assert_eq!(rebuilt.outputs, gd.outputs);
         assert_eq!(rebuilt.num_tensors(), gd.num_tensors());
@@ -727,6 +775,109 @@ mod tests {
             flavor: Flavor::Moe,
             blocks: vec![Block::Moe(UnaryKind::Silu), Block::Unary(UnaryKind::Gelu)],
         }
+    }
+
+    /// 1F1B at 4 micro-batches: depth-2 pool, epochs {0, 1} on each slot.
+    fn pp_sched_spec() -> ModelSpec {
+        ModelSpec {
+            seed: 24,
+            ranks: 2,
+            seq: 8,
+            hidden: 4,
+            flavor: Flavor::PpSched(crate::schedule::SchedKind::OneFOneB),
+            blocks: vec![Block::Linear, Block::Unary(UnaryKind::Tanh)],
+        }
+    }
+
+    /// Interleaved 2x2: three chunk boundaries to misbind across.
+    fn pp_intlv_spec() -> ModelSpec {
+        ModelSpec {
+            seed: 25,
+            ranks: 2,
+            seq: 8,
+            hidden: 4,
+            flavor: Flavor::PpSched(crate::schedule::SchedKind::Interleaved),
+            blocks: vec![Block::Linear, Block::Linear, Block::Linear, Block::Linear],
+        }
+    }
+
+    #[test]
+    fn buffer_reuse_early_reads_the_previous_epoch_of_the_slot() {
+        let (_gs, gd, _ri) = build_pair(&pp_sched_spec()).unwrap();
+        // micro-batch 2 shares slot 0 with micro-batch 0 (depth 2)
+        let (gdm, m) =
+            apply_mutation_by_name(&gd, MutKind::BufferReuseEarly, "b0_mm_mb2_recv").unwrap();
+        assert_eq!(m.block, Some(0));
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b0_mm_mb2_recv").unwrap();
+        let stale = gd.tensor_by_name("b0_mm_mb0_send").unwrap();
+        assert_eq!(gdm.node(site).inputs[0], stale, "recv must read micro-batch 0's buffer");
+        let inputs = crate::expr::eval::random_inputs(&gd, 51);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&gdm, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(!a[o].allclose(&b[o], 1e-4, 1e-5), "stale buffer must change numerics");
+    }
+
+    #[test]
+    fn double_buffer_swap_reads_the_pool_mate_slot() {
+        let (_gs, gd, _ri) = build_pair(&pp_sched_spec()).unwrap();
+        let (gdm, _m) =
+            apply_mutation_by_name(&gd, MutKind::DoubleBufferSwap, "b0_mm_mb1_recv").unwrap();
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b0_mm_mb1_recv").unwrap();
+        let mate = gd.tensor_by_name("b0_mm_mb0_send").unwrap();
+        assert_eq!(gdm.node(site).inputs[0], mate, "recv must read slot 0's buffer");
+        // epoch-0 slot-0 recv has no earlier pool-mate: not applicable
+        assert!(
+            apply_mutation_by_name(&gd, MutKind::DoubleBufferSwap, "b0_mm_mb0_recv").is_err()
+        );
+    }
+
+    #[test]
+    fn virtual_stage_misbind_crosses_chunk_boundaries() {
+        let (_gs, gd, _ri) = build_pair(&pp_intlv_spec()).unwrap();
+        let (gdm, m) =
+            apply_mutation_by_name(&gd, MutKind::VirtualStageMisbind, "b1_mm_mb0_recv").unwrap();
+        assert_eq!(m.block, Some(1));
+        gdm.validate().unwrap();
+        let site = gd.topo_order().find(|&n| gd.node(n).name == "b1_mm_mb0_recv").unwrap();
+        let other = gd.tensor_by_name("b0_mm_mb0_send").unwrap();
+        assert_eq!(gdm.node(site).inputs[0], other, "recv must read boundary 0's buffer");
+        let inputs = crate::expr::eval::random_inputs(&gd, 53);
+        let a = crate::expr::eval::eval_graph(&gd, &inputs).unwrap();
+        let b = crate::expr::eval::eval_graph(&gdm, &inputs).unwrap();
+        let o = gd.outputs[0] as usize;
+        assert!(!a[o].allclose(&b[o], 1e-4, 1e-5), "misbound chunk must change numerics");
+    }
+
+    #[test]
+    fn buffer_hazard_operators_skip_logical_pp_graphs() {
+        // un-lowered Pp graphs carry logical channels — the buffer family
+        // must not fire there (crossed_send_recv already covers them)
+        let (_gs, gd, _ri) = build_pair(&pp_spec()).unwrap();
+        let sites = applicable_sites(&gd);
+        assert!(
+            !sites.iter().any(|s| matches!(
+                s.kind,
+                MutKind::BufferReuseEarly
+                    | MutKind::DoubleBufferSwap
+                    | MutKind::VirtualStageMisbind
+            )),
+            "buffer operators fired on a logical-channel graph"
+        );
+        // and all three find sites on the lowered graphs
+        let (_gs, gd, _ri) = build_pair(&pp_sched_spec()).unwrap();
+        let sites = applicable_sites(&gd);
+        for kind in [MutKind::BufferReuseEarly, MutKind::DoubleBufferSwap] {
+            assert!(sites.iter().any(|s| s.kind == kind), "no {kind:?} site");
+        }
+        let (_gs, gd, _ri) = build_pair(&pp_intlv_spec()).unwrap();
+        let sites = applicable_sites(&gd);
+        assert!(
+            sites.iter().any(|s| s.kind == MutKind::VirtualStageMisbind),
+            "no VirtualStageMisbind site on the interleaved graph"
+        );
     }
 
     #[test]

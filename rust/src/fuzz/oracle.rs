@@ -18,7 +18,7 @@
 //! counterexample. Runs are fully deterministic per `--seed`: the same
 //! seed reproduces byte-identical counterexample files.
 
-use super::genmodel::{build_pair, sample_spec, ModelSpec};
+use super::genmodel::{build_pair, sample_spec_for, Flavor, ModelSpec};
 use super::mutate::{
     applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, Mutation, Site,
 };
@@ -45,6 +45,10 @@ pub struct FuzzConfig {
     pub out_dir: PathBuf,
     /// Write counterexample files (tests disable this).
     pub write_files: bool,
+    /// Restrict the campaign to one strategy flavor (`--flavor`); the rng
+    /// stream is consumed exactly as in mixed sampling, so per-seed block
+    /// and shape draws stay comparable across campaigns.
+    pub flavor: Option<Flavor>,
 }
 
 impl Default for FuzzConfig {
@@ -56,6 +60,7 @@ impl Default for FuzzConfig {
             mutants_per_model: 4,
             out_dir: PathBuf::from("fuzz_counterexamples"),
             write_files: true,
+            flavor: None,
         }
     }
 }
@@ -631,7 +636,7 @@ pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport> {
         let mut rng = Rng::new(cs);
         let ranks =
             if cfg.ranks == 0 { [2usize, 2, 2, 4][rng.below(4) as usize] } else { cfg.ranks };
-        let spec = sample_spec(&mut rng, ranks, cs);
+        let spec = sample_spec_for(&mut rng, ranks, cs, cfg.flavor);
         let (gs, gd, ri) =
             build_pair(&spec).with_context(|| format!("building case {i} (seed {cs:#x})"))?;
         report.models += 1;

@@ -30,6 +30,10 @@ pub struct InferConfig {
     /// Numerically re-check the final `R_o` on random inputs (soundness
     /// certificate). Costs one evaluation of both graphs.
     pub check_numeric: bool,
+    /// Pipeline channels whose buffer slot failed the schedule's liveness
+    /// audit (`schedule::quarantined_channels`): `recv_of_send_identity`
+    /// refuses to collapse them even when the tags match. Empty by default.
+    pub quarantined_channels: Vec<usize>,
 }
 
 impl Default for InferConfig {
@@ -38,6 +42,7 @@ impl Default for InferConfig {
             limits: SaturationLimits { max_iters: 8, max_nodes: 60_000 },
             max_frontier_iters: 12,
             check_numeric: false,
+            quarantined_channels: Vec::new(),
         }
     }
 }
@@ -109,7 +114,8 @@ pub fn check_refinement(
     cfg: &InferConfig,
 ) -> Result<InferOutput, RefinementError> {
     let rules = lemmas::standard_rewrites();
-    let ctx = RewriteCtx::default();
+    let mut ctx = RewriteCtx::default();
+    ctx.quarantine_channels(cfg.quarantined_channels.iter().copied());
     let mut r = ri.clone();
     let mut stats = SatStats { saturated: true, ..Default::default() };
     let mut per_node = Vec::with_capacity(gs.num_nodes());

@@ -322,6 +322,47 @@ impl Graph {
         g
     }
 
+    /// Rebuild the graph with `edit` applied to every node. Shapes are
+    /// re-inferred; an edit that breaks shape inference fails the whole
+    /// rebuild.
+    ///
+    /// Tensors are recreated in original id order — inputs *interleaved*
+    /// with node outputs, exactly as the model builders declare them
+    /// (weights are registered lazily per block). This keeps every
+    /// `TensorId` stable, which both the fuzzer's oracle (it reuses the
+    /// clean graph's input environments and `TensorId`-keyed `R_i` against
+    /// mutants) and the schedule lowering (it re-tags Send/Recv under an
+    /// unchanged relation) depend on. An edit may therefore only rewire a
+    /// node to tensors created *earlier* than its output.
+    pub fn rebuild_with(
+        &self,
+        edit: impl Fn(NodeId, &Node, &[TensorId]) -> (Op, Vec<TensorId>),
+    ) -> Result<Graph> {
+        let mut out = Graph::new(self.name.clone());
+        let mut remap: Vec<TensorId> = vec![0; self.num_tensors()];
+        for tid in 0..self.num_tensors() as TensorId {
+            let t = self.tensor(tid);
+            match t.producer {
+                None => {
+                    remap[tid as usize] = out.input_typed(&t.name, t.shape.clone(), t.dtype);
+                }
+                Some(nid) => {
+                    let node = self.node(nid);
+                    debug_assert_eq!(node.output, tid, "one output tensor per node");
+                    let mapped: Vec<TensorId> =
+                        node.inputs.iter().map(|&x| remap[x as usize]).collect();
+                    let (op, ins) = edit(nid, node, &mapped);
+                    remap[tid as usize] = out.add(&node.name, op, ins)?;
+                }
+            }
+        }
+        for &o in &self.outputs {
+            out.mark_output(remap[o as usize]);
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
     /// Producer node of a tensor, if any.
     pub fn producer(&self, t: TensorId) -> Option<&Node> {
         self.tensors[t as usize].producer.map(|n| &self.nodes[n as usize])

@@ -86,18 +86,22 @@ pub fn lemmas() -> Vec<Lemma> {
     // is transparent. The channel-equality condition is the whole point: a
     // crossed or stale boundary (recv wired to a different send) keeps its
     // Recv opaque, so nothing downstream of the wrong wiring maps cleanly
-    // and refinement fails at the first consumer.
+    // and refinement fails at the first consumer. Slot-liveness side
+    // condition: a channel quarantined by the schedule's buffer audit
+    // (`RewriteCtx::channel_quarantined`) never collapses even with equal
+    // tags — its physical buffer is overwritten before the read completes,
+    // so the matched pair does not deliver `x` at run time.
     v.push(Lemma::new(
         Rewrite::new(
             "recv_of_send_identity",
             Pat::bind(OpTag::Recv, 0, vec![Pat::bind(OpTag::Send, 1, vec![Pat::var(0)])]),
-            |_eg, s, _| {
+            |_eg, s, ctx| {
                 let (Some(Op::Recv { chan: rc }), Some(Op::Send { chan: sc }), Some(x)) =
                     (s.op(0), s.op(1), s.var(0))
                 else {
                     return vec![];
                 };
-                if rc == sc {
+                if rc == sc && !ctx.channel_quarantined(*rc) {
                     vec![x]
                 } else {
                     vec![]
@@ -180,6 +184,23 @@ mod tests {
         let recvd = eg.add_op(Op::Recv { chan: 7 }, vec![sent]).unwrap();
         run(&mut eg);
         assert!(eg.same(recvd, x), "matched boundary pair collapses");
+    }
+
+    #[test]
+    fn quarantined_channel_stays_opaque_despite_matching_tags() {
+        // slot-liveness side condition: the schedule audit flagged channel 7
+        // as a buffer-reuse victim — even the tag-matched pair must not
+        // collapse (its buffer does not hold x at read time)
+        let mut eg = EGraph::new();
+        let x = eg.add_leaf(t(0), vec![2, 4]);
+        let sent = eg.add_op(Op::Send { chan: 7 }, vec![x]).unwrap();
+        let recvd = eg.add_op(Op::Recv { chan: 7 }, vec![sent]).unwrap();
+        let mut ctx = RewriteCtx::default();
+        ctx.quarantine_channels([7usize]);
+        let rules: Vec<Rewrite> =
+            super::super::standard_library().into_iter().map(|l| l.rewrite).collect();
+        saturate(&mut eg, &rules, &ctx, SaturationLimits::default());
+        assert!(!eg.same(recvd, x), "quarantined boundary must stay opaque");
     }
 
     #[test]

@@ -24,8 +24,11 @@
 //!   comparisons.
 //! - [`strategies`] / [`models`] / [`bugs`] — workload generation: TP/SP/EP/
 //!   VP/grad-accum graph builders and the six §6.2 bug injectors.
+//! - [`schedule`] — pipeline execution schedules (GPipe / 1F1B / interleaved
+//!   virtual stages): buffer-assignment lowering of logical send/recv
+//!   channels with slot-liveness auditing.
 //! - [`fuzz`] — bug-injection mutation fuzzer: random model + strategy
-//!   composition, ~12 mutation operators, differential soundness oracle.
+//!   composition, 23 mutation operators, differential soundness oracle.
 //! - [`hlo`] — HLO-text frontend (XLA/JAX capture path).
 //! - [`coordinator`] — multi-threaded verification service + reports.
 //! - [`runtime`] — PJRT execution of AOT artifacts for cross-validation.
@@ -45,6 +48,7 @@ pub mod lemmas;
 pub mod models;
 pub mod relation;
 pub mod runtime;
+pub mod schedule;
 pub mod strategies;
 pub mod symbolic;
 pub mod util;

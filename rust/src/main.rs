@@ -4,7 +4,7 @@
 //!   verify  --gs <graph.json> --gd <graph.json> --ri <relation.json>
 //!   suite   [--ranks N] [--threads N]      run the Table-2 workload suite
 //!   bugs                                    run the §6.2 case studies
-//!   fuzz    [--seeds N] [--seed S] ...      bug-injection mutation fuzzer
+//!   fuzz    [--seeds N] [--seed S] [--flavor F] ...  bug-injection fuzzer
 //!   lemmas                                  list the lemma library
 //!   hlo     --file <module.hlo.txt>         parse an HLO-text module
 //!
@@ -40,7 +40,7 @@ fn run() -> Result<()> {
                  \n  suite  [--ranks N] [--threads N]\
                  \n  bugs\
                  \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
-                 \n         [--replay ce.json]\
+                 \n         [--flavor F] [--replay ce.json]\
                  \n  lemmas\
                  \n  hlo --file module.hlo.txt"
             );
@@ -143,6 +143,16 @@ fn cmd_fuzz(args: &[String]) -> Result<()> {
             .unwrap_or(d.mutants_per_model),
         out_dir: arg_value(args, "--out").map(Into::into).unwrap_or(d.out_dir),
         write_files: true,
+        flavor: arg_value(args, "--flavor")
+            .map(|v| {
+                fuzz::Flavor::parse(&v).ok_or_else(|| {
+                    anyhow!(
+                        "unknown flavor '{v}' (dp, sp, tp, pp, fsdp, moe, pp_sched_gpipe, \
+                         pp_sched_1f1b, pp_sched_interleaved)"
+                    )
+                })
+            })
+            .transpose()?,
     };
     let report = fuzz::run_fuzz(&cfg)?;
     print!("{}", report.table());

@@ -383,6 +383,86 @@ pub fn fsdp_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)
     Ok((gs, gd, ri))
 }
 
+/// Sequential attention-free GPT: embedding + pre-LN MLP blocks + final LN
+/// and LM head. Built for micro-batched pipeline schedules — every operator
+/// is row-decomposable, so `pipeline_stage_split` accepts the whole chain.
+/// (Micro-batching *attention* needs the causal/blockwise decomposition
+/// lemma family, a separate ROADMAP item; the Table-2 schedule-aware PP
+/// entries run this MLP-transformer variant instead.) The token ids are
+/// declared first because `pipeline_stage_split` micro-batches `inputs[0]`
+/// along dim 0.
+pub fn mlp_seq(layers: usize, cfg: &GptConfig) -> Graph {
+    let h = cfg.hidden();
+    let mut g = Graph::new("gpt_mlp_seq");
+    let ids = g.input_typed("ids", vec![cfg.seq], crate::ir::DType::I64);
+    let table = g.input("wte", vec![cfg.vocab, h]);
+    let mut x = g.op("emb", Op::Embedding, vec![table, ids]);
+    for l in 0..layers {
+        let p = format!("l{l}");
+        let gw = g.input(&format!("{p}_ln_w"), vec![h]);
+        let gb = g.input(&format!("{p}_ln_b"), vec![h]);
+        let w1 = g.input(&format!("{p}_w1"), vec![h, cfg.ffn]);
+        let w2 = g.input(&format!("{p}_w2"), vec![cfg.ffn, h]);
+        let lnv = ln(&mut g, &format!("{p}_ln"), x, gw, gb);
+        let h1 = g.matmul(&format!("{p}_h1"), lnv, w1);
+        let act = g.op(&format!("{p}_gelu"), Op::Gelu, vec![h1]);
+        let h2 = g.matmul(&format!("{p}_h2"), act, w2);
+        x = g.add2(&format!("{p}_res"), x, h2);
+    }
+    let gf = g.input("lnf_w", vec![h]);
+    let bf = g.input("lnf_b", vec![h]);
+    let lnf = ln(&mut g, "lnf", x, gf, bf);
+    let wlm = g.input("lm_head", vec![h, cfg.vocab]);
+    let logits = g.matmul("logits", lnf, wlm);
+    g.mark_output(logits);
+    g
+}
+
+/// Schedule-aware pipeline parallelism over [`mlp_seq`]: layer groups
+/// become pipeline chunks (one per physical stage, or `stages × virt` under
+/// interleaving), `pipeline_stage_split` unrolls `sched.micro`
+/// micro-batches, and the logical boundary channels are lowered onto
+/// per-boundary pools of physical activation buffers — sized to the
+/// schedule's minimum safe depth — whose `(boundary, slot, epoch)` tags the
+/// verifier checks pairwise (`schedule::lower_buffers`).
+pub fn pp_sched_pair(
+    sched: &crate::schedule::Schedule,
+    layers: usize,
+) -> Result<(Graph, Graph, Relation)> {
+    sched.validate()?;
+    let cfg = GptConfig::default();
+    ensure!(
+        cfg.seq % sched.micro as i64 == 0,
+        "seq {} not divisible by {} micro-batches",
+        cfg.seq,
+        sched.micro
+    );
+    let chunks = sched.chunks();
+    ensure!(
+        layers >= chunks,
+        "{chunks} pipeline chunks need at least as many layers (got {layers})"
+    );
+    let gs = mlp_seq(layers, &cfg);
+    // cut after the last residual of each non-final chunk's layer group
+    let cuts: Vec<crate::ir::NodeId> = crate::strategies::stage_ends(layers, chunks)
+        .iter()
+        .map(|&e| {
+            let t = gs.tensor_by_name(&format!("l{}_res", e - 1)).expect("layer residual");
+            gs.tensor(t).producer.expect("residual is computed")
+        })
+        .collect();
+    let depth = sched.min_safe_depth()?;
+    let (mut gd, ri) = crate::strategies::pipeline_stage_split_scheduled(
+        &gs,
+        &cuts,
+        "logits_pp",
+        sched,
+        depth,
+    )?;
+    gd.name = format!("gpt_pp_{}", sched.kind.name());
+    Ok((gs, gd, ri))
+}
+
 /// Experts in the switch-style MoE MLP of [`moe_seq`].
 pub const MOE_EXPERTS: usize = 4;
 /// Top-k of the router gate (k = 2: each token is served by two experts,
@@ -528,6 +608,86 @@ mod tests {
     #[test]
     fn gpt_pp_rejects_more_stages_than_layers() {
         assert!(pp_tp_pair(3, 2, 2).is_err());
+    }
+
+    #[test]
+    fn gpt_mlp_seq_is_row_decomposable_end_to_end() {
+        let g = mlp_seq(2, &GptConfig::default());
+        g.validate().unwrap();
+        assert_eq!(g.shape(g.outputs[0]), &[8, 16]);
+        // ids must be the primary (first) input — pipeline_stage_split
+        // micro-batches inputs[0]
+        assert_eq!(g.tensor(g.inputs[0]).name, "ids");
+    }
+
+    #[test]
+    fn gpt_pp2_1f1b_refines_with_buffer_tags() {
+        let sched = crate::schedule::Schedule::one_f_one_b(2, 4);
+        let (gs, gd, ri) = pp_sched_pair(&sched, 2).unwrap();
+        // every boundary op carries a physical-buffer tag, none logical
+        let mut sends = 0;
+        for n in gd.nodes() {
+            if let crate::ir::Op::Send { chan } = n.op {
+                assert!(
+                    crate::schedule::decode_buffer_tag(chan).is_some(),
+                    "'{}' still carries a logical channel",
+                    n.name
+                );
+                sends += 1;
+            }
+        }
+        assert_eq!(sends, 4, "one boundary x 4 micro-batches");
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 37).unwrap();
+    }
+
+    #[test]
+    fn gpt_pp2x2_interleaved_refines_across_three_boundaries() {
+        let sched = crate::schedule::Schedule::interleaved(2, 4, 2);
+        let (gs, gd, ri) = pp_sched_pair(&sched, 4).unwrap();
+        let sends = gd
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, crate::ir::Op::Send { .. }))
+            .count();
+        assert_eq!(sends, 12, "3 boundaries x 4 micro-batches");
+        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+        verify_numeric(&gs, &gd, &ri, &out.relation, 41).unwrap();
+    }
+
+    #[test]
+    fn quarantined_channels_fail_refinement_despite_matched_tags() {
+        // the slot-liveness side condition end-to-end: quarantining a
+        // boundary channel (as an external schedule audit would for a
+        // lowering that stamped both sides with the occupant epoch) must
+        // flip the verdict even though every tag pair matches
+        let sched = crate::schedule::Schedule::one_f_one_b(2, 4);
+        let (gs, gd, ri) = pp_sched_pair(&sched, 2).unwrap();
+        let mut cfg = InferConfig::default();
+        for n in gd.nodes() {
+            if let crate::ir::Op::Recv { chan } = n.op {
+                cfg.quarantined_channels.push(chan);
+            }
+        }
+        assert!(
+            check_refinement(&gs, &gd, &ri, &cfg).is_err(),
+            "quarantined boundaries must not verify"
+        );
+        // and the same pair verifies with an empty quarantine
+        check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn gpt_pp_sched_rejects_indivisible_micro_batching() {
+        // seq = 8 does not split into 3 micro-batches
+        let sched = crate::schedule::Schedule::one_f_one_b(2, 3);
+        assert!(pp_sched_pair(&sched, 2).is_err());
+        // fewer layers than chunks
+        let sched = crate::schedule::Schedule::interleaved(2, 4, 2);
+        assert!(pp_sched_pair(&sched, 3).is_err());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! | Framework analog      | Module         | Strategies          |
 //! |-----------------------|----------------|---------------------|
-//! | Megatron-LM GPT       | [`gpt`]        | TP, SP, VP, PP, FSDP, EP (switch-MoE) |
+//! | Megatron-LM GPT       | [`gpt`]        | TP, SP, VP, PP (incl. 1F1B/interleaved buffer schedules), FSDP, EP (switch-MoE) |
 //! | vLLM Qwen2            | [`qwen2`]      | TP (fused kernels)  |
 //! | HF regression + MSE   | [`regression`] | gradient accumulation (fwd+bwd) |
 //! | Neuron Llama-3        | [`llama`]      | TP, PP, FSDP (via HLO frontend too) |
@@ -100,6 +100,32 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
         let (gs, gd, ri) = gpt::moe_ep_pair(ranks, 1).unwrap();
         v.push(Workload { name: format!("gpt_moe_ep_{ranks}"), gs, gd, ri, strategies: vec!["ep"] });
     }
+    // schedule-aware pipeline parallelism (buffer-tagged 1F1B and
+    // interleaved-virtual-stage lowerings) over the attention-free
+    // MLP-transformer chain — micro-batched attention is a separate ROADMAP
+    // item. The 2R micro-batches must divide the fixed seq length; other
+    // degrees skip, like the MoE entry.
+    let micro = 2 * ranks;
+    if micro >= 2 && gpt::GptConfig::default().seq % micro as i64 == 0 {
+        let sched = crate::schedule::Schedule::one_f_one_b(2, micro);
+        let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 2).unwrap();
+        v.push(Workload {
+            name: format!("gpt_pp2_1f1b_{ranks}"),
+            gs,
+            gd,
+            ri,
+            strategies: vec!["pp", "1f1b"],
+        });
+        let sched = crate::schedule::Schedule::interleaved(2, micro, 2);
+        let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 4).unwrap();
+        v.push(Workload {
+            name: format!("gpt_pp2x2_intlv_{ranks}"),
+            gs,
+            gd,
+            ri,
+            strategies: vec!["pp", "interleaved"],
+        });
+    }
     v
 }
 
@@ -114,6 +140,18 @@ mod tests {
         assert!(names(4).iter().any(|n| n == "gpt_moe_ep_4"));
         // a degenerate degree skips EP instead of panicking the whole suite
         assert!(!names(1).iter().any(|n| n.starts_with("gpt_moe_ep")));
+    }
+
+    #[test]
+    fn pp_sched_workloads_gated_on_divisible_micro_batching() {
+        let names = |ranks: usize| -> Vec<String> {
+            super::table2_workloads(ranks).into_iter().map(|w| w.name).collect()
+        };
+        // micro = 2R divides seq = 8 at every degree the suite runs
+        for r in [1usize, 2, 4] {
+            assert!(names(r).iter().any(|n| n == &format!("gpt_pp2_1f1b_{r}")), "ranks {r}");
+            assert!(names(r).iter().any(|n| n == &format!("gpt_pp2x2_intlv_{r}")), "ranks {r}");
+        }
     }
 
     #[test]

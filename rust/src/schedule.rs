@@ -1,0 +1,687 @@
+//! Schedule-aware pipeline verification: the buffer-assignment layer.
+//!
+//! `strategies::pipeline_stage_split` models pipeline parallelism in its
+//! schedule-agnostic single-program dataflow form: one *logical* channel per
+//! (stage boundary × micro-batch), so `recv_of_send_identity` verifies the
+//! wiring but says nothing about *when* each transfer lands. Real runtimes
+//! execute a schedule (GPipe, 1F1B, interleaved virtual stages) and back
+//! every boundary with a finite pool of physical activation buffers; the
+//! numerics-silent bug class that matters in practice is a buffer being
+//! overwritten before its last reader has consumed it (stale buffer reuse —
+//! the real-world shape behind the `dropped_boundary` mutation operator).
+//!
+//! This module lowers logical channels onto explicit buffers:
+//!
+//! 1. [`Schedule`] describes the execution order (kind × stages ×
+//!    micro-batches × virtual chunks) and derives a deterministic
+//!    [`Timetable`] by discrete-event simulation: unit-time ops, one op per
+//!    physical stage per tick, forwards gated on the upstream chunk's
+//!    forward, backwards gated on the downstream chunk's backward (backwards
+//!    carry no activation transfers here — they exist to throttle forwards
+//!    exactly the way 1F1B/interleaved schedules do).
+//! 2. A buffer pool of `depth` slots per boundary assigns logical channel
+//!    `(b, m)` the slot `m % depth` with write epoch `m / depth` (the
+//!    standard round-robin double-buffering discipline).
+//! 3. [`Schedule::hazards`] audits slot liveness against the timetable: the
+//!    write of micro-batch `m` lands at the end of its producer tick; if it
+//!    lands at-or-before the tick in which slot-predecessor `m - depth` is
+//!    still being read, the buffer was reused too early.
+//! 4. [`lower_buffers`] re-tags every Send/Recv with its *buffer* tag
+//!    `(boundary, slot, epoch)` — rejecting hazardous (schedule, depth)
+//!    combinations at construction. A correct assignment keeps tags equal
+//!    pairwise, so the existing `recv_of_send_identity` machinery verifies
+//!    the lowered graph unchanged. [`lower_buffers_unchecked`] instead
+//!    materializes what a buggy runtime delivers: a hazard victim's recv
+//!    keeps its *intended* epoch tag while its send carries the epoch the
+//!    schedule actually wrote — the crossed tag never collapses, so
+//!    refinement fails at the first in-stage consumer.
+//!
+//! Tags are also the hook for the slot-liveness lemma side condition:
+//! [`quarantined_channels`] lists the victim tags of a hazardous lowering,
+//! and `recv_of_send_identity` refuses to collapse a quarantined channel
+//! even when its tags match (`RewriteCtx::channel_quarantined`) — defense in
+//! depth against a lowering that tags both sides with the occupant epoch.
+
+use crate::ir::{Graph, NodeId, Op};
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+/// Pipeline execution schedule family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedKind {
+    /// All forwards per stage, then all backwards (synchronous GPipe).
+    GPipe,
+    /// One-forward-one-backward with the standard `S - 1 - s` warmup.
+    OneFOneB,
+    /// Megatron-style interleaved 1F1B over virtual stage chunks: physical
+    /// stage `s` hosts chunks `s, s + S, ..`; forwards run in micro-batch
+    /// groups of `S`, chunk-major inside a group (backwards chunk-reversed).
+    Interleaved,
+}
+
+impl SchedKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedKind::GPipe => "gpipe",
+            SchedKind::OneFOneB => "1f1b",
+            SchedKind::Interleaved => "interleaved",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedKind> {
+        match s {
+            "gpipe" => Some(SchedKind::GPipe),
+            "1f1b" => Some(SchedKind::OneFOneB),
+            "interleaved" => Some(SchedKind::Interleaved),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete pipeline schedule: kind × physical stages × micro-batches ×
+/// virtual chunks per stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    pub kind: SchedKind,
+    /// Physical pipeline stages (devices).
+    pub stages: usize,
+    /// Micro-batches per step.
+    pub micro: usize,
+    /// Virtual model chunks per stage (1 unless interleaved).
+    pub virt: usize,
+}
+
+impl Schedule {
+    pub fn gpipe(stages: usize, micro: usize) -> Schedule {
+        Schedule { kind: SchedKind::GPipe, stages, micro, virt: 1 }
+    }
+
+    pub fn one_f_one_b(stages: usize, micro: usize) -> Schedule {
+        Schedule { kind: SchedKind::OneFOneB, stages, micro, virt: 1 }
+    }
+
+    pub fn interleaved(stages: usize, micro: usize, virt: usize) -> Schedule {
+        Schedule { kind: SchedKind::Interleaved, stages, micro, virt }
+    }
+
+    /// Model chunks in pipeline order (= stage count unless interleaved).
+    pub fn chunks(&self) -> usize {
+        self.stages * self.virt
+    }
+
+    /// Stage boundaries (one between each adjacent chunk pair).
+    pub fn boundaries(&self) -> usize {
+        self.chunks().saturating_sub(1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.stages >= 2, "a pipeline schedule needs >= 2 stages");
+        ensure!(self.micro >= 1, "a pipeline schedule needs >= 1 micro-batch");
+        ensure!(self.micro <= 1000, "micro-batch count {} exceeds the tag budget", self.micro);
+        ensure!(self.boundaries() < 1000, "chunk count {} exceeds the tag budget", self.chunks());
+        match self.kind {
+            SchedKind::GPipe | SchedKind::OneFOneB => {
+                ensure!(self.virt == 1, "{} has no virtual chunks", self.kind.name())
+            }
+            SchedKind::Interleaved => {
+                ensure!(self.virt >= 2, "interleaving needs >= 2 virtual chunks per stage");
+                ensure!(
+                    self.micro % self.stages == 0,
+                    "interleaved schedule needs micro-batches ({}) divisible by stages ({})",
+                    self.micro,
+                    self.stages
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-stage op sequence (program order on that device).
+    fn stage_ops(&self, s: usize) -> Vec<PipeOp> {
+        let m = self.micro;
+        match self.kind {
+            SchedKind::GPipe => {
+                let mut ops: Vec<PipeOp> =
+                    (0..m).map(|mb| PipeOp { chunk: s, micro: mb, fwd: true }).collect();
+                ops.extend((0..m).map(|mb| PipeOp { chunk: s, micro: mb, fwd: false }));
+                ops
+            }
+            SchedKind::OneFOneB => {
+                let w = (self.stages - 1 - s).min(m);
+                let mut ops: Vec<PipeOp> =
+                    (0..w).map(|mb| PipeOp { chunk: s, micro: mb, fwd: true }).collect();
+                for k in 0..m - w {
+                    ops.push(PipeOp { chunk: s, micro: w + k, fwd: true });
+                    ops.push(PipeOp { chunk: s, micro: k, fwd: false });
+                }
+                ops.extend((m - w..m).map(|mb| PipeOp { chunk: s, micro: mb, fwd: false }));
+                ops
+            }
+            SchedKind::Interleaved => {
+                let (groups, v) = (m / self.stages, self.virt);
+                let mut fwd = Vec::with_capacity(m * v);
+                let mut bwd = Vec::with_capacity(m * v);
+                for g in 0..groups {
+                    for ci in 0..v {
+                        for j in 0..self.stages {
+                            let micro = g * self.stages + j;
+                            fwd.push(PipeOp { chunk: ci * self.stages + s, micro, fwd: true });
+                            bwd.push(PipeOp {
+                                chunk: (v - 1 - ci) * self.stages + s,
+                                micro,
+                                fwd: false,
+                            });
+                        }
+                    }
+                }
+                let total = m * v;
+                let w = ((self.stages - 1 - s) * 2 + (v - 1) * self.stages).min(total);
+                let mut ops: Vec<PipeOp> = fwd[..w].to_vec();
+                let (mut fi, mut bi) = (w, 0);
+                while fi < total || bi < total {
+                    if fi < total {
+                        ops.push(fwd[fi]);
+                        fi += 1;
+                    }
+                    if bi < total {
+                        ops.push(bwd[bi]);
+                        bi += 1;
+                    }
+                }
+                ops
+            }
+        }
+    }
+
+    /// Simulate the schedule into per-(chunk, micro-batch) forward ticks.
+    pub fn timetable(&self) -> Result<Timetable> {
+        self.validate()?;
+        let chunks = self.chunks();
+        let seqs: Vec<Vec<PipeOp>> = (0..self.stages).map(|s| self.stage_ops(s)).collect();
+        let total: usize = seqs.iter().map(Vec::len).sum();
+        let mut ptr = vec![0usize; self.stages];
+        let mut fwd = vec![vec![u64::MAX; self.micro]; chunks];
+        let mut bwd = vec![vec![u64::MAX; self.micro]; chunks];
+        let mut done = 0usize;
+        let mut tick: u64 = 0;
+        while done < total {
+            ensure!(
+                tick <= total as u64 * 4 + 16,
+                "schedule deadlock: {} S={} M={} v={} stalled at tick {tick} ({done}/{total} ops)",
+                self.kind.name(),
+                self.stages,
+                self.micro,
+                self.virt
+            );
+            for s in 0..self.stages {
+                let Some(op) = seqs[s].get(ptr[s]).copied() else { continue };
+                let ready = if op.fwd {
+                    op.chunk == 0 || fwd[op.chunk - 1][op.micro] < tick
+                } else {
+                    fwd[op.chunk][op.micro] < tick
+                        && (op.chunk == chunks - 1 || bwd[op.chunk + 1][op.micro] < tick)
+                };
+                if ready {
+                    if op.fwd {
+                        fwd[op.chunk][op.micro] = tick;
+                    } else {
+                        bwd[op.chunk][op.micro] = tick;
+                    }
+                    ptr[s] += 1;
+                    done += 1;
+                }
+            }
+            tick += 1;
+        }
+        Ok(Timetable { fwd })
+    }
+
+    /// Slot-liveness audit of the round-robin buffer assignment at `depth`
+    /// buffers per boundary: micro-batch `m`'s write lands at the end of
+    /// its producer tick and must come strictly after its slot-predecessor
+    /// `m - depth` finished reading (same-tick overlap is a race — the
+    /// transfer and the consumer run concurrently with no sync).
+    pub fn hazards(&self, tt: &Timetable, depth: usize) -> Vec<Hazard> {
+        let mut out = Vec::new();
+        if depth == 0 {
+            return out;
+        }
+        for b in 0..self.boundaries() {
+            for m in depth..self.micro {
+                let victim = m - depth;
+                if tt.fwd_tick(b, m) <= tt.fwd_tick(b + 1, victim) {
+                    out.push(Hazard { boundary: b, slot: m % depth, writer: m, victim });
+                }
+            }
+        }
+        out
+    }
+
+    /// Smallest per-boundary pool depth with no liveness hazard (`micro`
+    /// buffers — one slot per micro-batch — is always safe).
+    pub fn min_safe_depth(&self) -> Result<usize> {
+        let tt = self.timetable()?;
+        for depth in 1..=self.micro {
+            if self.hazards(&tt, depth).is_empty() {
+                return Ok(depth);
+            }
+        }
+        Ok(self.micro)
+    }
+}
+
+/// One scheduled operation: forward or backward of (chunk, micro-batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PipeOp {
+    chunk: usize,
+    micro: usize,
+    fwd: bool,
+}
+
+/// Forward execution ticks per (chunk, micro-batch).
+#[derive(Debug, Clone)]
+pub struct Timetable {
+    fwd: Vec<Vec<u64>>,
+}
+
+impl Timetable {
+    pub fn fwd_tick(&self, chunk: usize, micro: usize) -> u64 {
+        self.fwd[chunk][micro]
+    }
+}
+
+/// A slot-liveness violation: `writer`'s transfer into `(boundary, slot)`
+/// lands before (or during) `victim`'s read of the same buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hazard {
+    pub boundary: usize,
+    pub slot: usize,
+    /// Micro-batch whose write reuses the buffer too early.
+    pub writer: usize,
+    /// Micro-batch whose pending read gets overwritten.
+    pub victim: usize,
+}
+
+/// Buffer-tag channel space — disjoint from the small logical channel ids
+/// `boundary * micro + m` that `pipeline_stage_split` emits, so mutation
+/// operators and audits can tell a lowered graph from a logical one.
+pub const SCHED_TAG_BASE: usize = 1_000_000_000;
+const BOUNDARY_STRIDE: usize = 1_000_000;
+const SLOT_STRIDE: usize = 1_000;
+
+/// Channel tag of write `epoch` into physical buffer `(boundary, slot)`.
+pub fn buffer_tag(boundary: usize, slot: usize, epoch: usize) -> usize {
+    debug_assert!(boundary < 1000 && slot < 1000 && epoch < 1000);
+    SCHED_TAG_BASE + boundary * BOUNDARY_STRIDE + slot * SLOT_STRIDE + epoch
+}
+
+/// Inverse of [`buffer_tag`]; `None` for logical (un-lowered) channels.
+pub fn decode_buffer_tag(chan: usize) -> Option<(usize, usize, usize)> {
+    let v = chan.checked_sub(SCHED_TAG_BASE)?;
+    let boundary = v / BOUNDARY_STRIDE;
+    if boundary >= 1000 {
+        return None;
+    }
+    let rest = v % BOUNDARY_STRIDE;
+    Some((boundary, rest / SLOT_STRIDE, rest % SLOT_STRIDE))
+}
+
+/// The complete logical channel grid of a `pipeline_stage_split` graph:
+/// `(boundary, micro) -> (send node, recv node)`, validated against the
+/// schedule's dimensions (every channel present exactly once, every recv
+/// wired to its own send, nothing already buffer-tagged).
+fn logical_channels(
+    gd: &Graph,
+    sched: &Schedule,
+) -> Result<BTreeMap<(usize, usize), (NodeId, NodeId)>> {
+    let micro = sched.micro;
+    let nb = sched.boundaries();
+    let mut sends: BTreeMap<usize, NodeId> = BTreeMap::new();
+    let mut recvs: BTreeMap<usize, NodeId> = BTreeMap::new();
+    for nid in gd.topo_order() {
+        let node = gd.node(nid);
+        let (chan, map) = match node.op {
+            Op::Send { chan } => (chan, &mut sends),
+            Op::Recv { chan } => (chan, &mut recvs),
+            _ => continue,
+        };
+        ensure!(
+            chan < SCHED_TAG_BASE,
+            "'{}' is already buffer-tagged (chan {chan}) — lower a logical graph",
+            node.name
+        );
+        ensure!(
+            chan < nb * micro,
+            "'{}' uses channel {chan}, outside the {} boundaries x {} micro-batches grid",
+            node.name,
+            nb,
+            micro
+        );
+        ensure!(
+            map.insert(chan, nid).is_none(),
+            "duplicate {} on channel {chan}",
+            node.op.name()
+        );
+    }
+    let mut out = BTreeMap::new();
+    for b in 0..nb {
+        for m in 0..micro {
+            let chan = b * micro + m;
+            let (Some(&snd), Some(&rcv)) = (sends.get(&chan), recvs.get(&chan)) else {
+                bail!(
+                    "incomplete channel grid: boundary {b} micro-batch {m} (chan {chan}) \
+                     is missing its send/recv pair"
+                );
+            };
+            ensure!(
+                gd.node(rcv).inputs[0] == gd.node(snd).output,
+                "recv '{}' is not wired to send '{}' on channel {chan}",
+                gd.node(rcv).name,
+                gd.node(snd).name
+            );
+            out.insert((b, m), (snd, rcv));
+        }
+    }
+    Ok(out)
+}
+
+/// Lower the logical channels of a `pipeline_stage_split` graph onto a
+/// per-boundary pool of `depth` physical buffers, re-tagging every
+/// Send/Recv with its `(boundary, slot, epoch)` buffer tag. A hazardous
+/// (schedule, depth) combination — any buffer overwritten before its last
+/// reader — is rejected here, at construction, rather than silently
+/// mis-verified downstream.
+pub fn lower_buffers(gd: &Graph, sched: &Schedule, depth: usize) -> Result<Graph> {
+    ensure!(depth >= 1, "buffer pool depth must be >= 1");
+    ensure!(depth <= 1000, "buffer pool depth {depth} exceeds the tag budget");
+    let chans = logical_channels(gd, sched)?;
+    let tt = sched.timetable()?;
+    let hz = sched.hazards(&tt, depth);
+    if let Some(h) = hz.first() {
+        bail!(
+            "buffer pool of depth {depth} is unsafe under {} (S={}, M={}, v={}): boundary {} \
+             slot {}: micro-batch {}'s send overwrites the buffer micro-batch {} is still \
+             reading ({} hazard(s) total; smallest safe depth is {})",
+            sched.kind.name(),
+            sched.stages,
+            sched.micro,
+            sched.virt,
+            h.boundary,
+            h.slot,
+            h.writer,
+            h.victim,
+            hz.len(),
+            sched.min_safe_depth()?
+        );
+    }
+    retag(gd, sched, depth, &chans, &tt, &[])
+}
+
+/// Lower WITHOUT the liveness gate, materializing what a buggy runtime
+/// actually delivers: every send is tagged with the epoch its transfer
+/// really writes, while a hazard victim's recv keeps the epoch the schedule
+/// *intended* it to read. The crossed tags never satisfy
+/// `recv_of_send_identity`, so the recv stays opaque and refinement fails
+/// at the first consumer inside the receiving stage. Returns the hazard
+/// list alongside the lowered graph (empty = identical to [`lower_buffers`]).
+pub fn lower_buffers_unchecked(
+    gd: &Graph,
+    sched: &Schedule,
+    depth: usize,
+) -> Result<(Graph, Vec<Hazard>)> {
+    ensure!(depth >= 1, "buffer pool depth must be >= 1");
+    ensure!(depth <= 1000, "buffer pool depth {depth} exceeds the tag budget");
+    let chans = logical_channels(gd, sched)?;
+    let tt = sched.timetable()?;
+    let hz = sched.hazards(&tt, depth);
+    let g = retag(gd, sched, depth, &chans, &tt, &hz)?;
+    Ok((g, hz))
+}
+
+/// Intended-tag victims of a hazardous lowering — the channel tags the
+/// slot-liveness side condition quarantines (`InferConfig`), so even a
+/// lowering that stamps *both* sides with the occupant epoch cannot collapse
+/// a hazardous boundary.
+pub fn quarantined_channels(sched: &Schedule, depth: usize) -> Result<Vec<usize>> {
+    ensure!(depth >= 1, "buffer pool depth must be >= 1");
+    let tt = sched.timetable()?;
+    let mut tags: Vec<usize> = sched
+        .hazards(&tt, depth)
+        .iter()
+        .map(|h| buffer_tag(h.boundary, h.victim % depth, h.victim / depth))
+        .collect();
+    tags.sort_unstable();
+    tags.dedup();
+    Ok(tags)
+}
+
+/// Rebuild with buffer tags. For each hazard, the victim recv keeps its
+/// intended `(slot, epoch)` tag while its matching send is stamped with the
+/// same slot's *next* epoch — exactly the byte pattern the overwrite leaves
+/// in the buffer at read time.
+fn retag(
+    gd: &Graph,
+    sched: &Schedule,
+    depth: usize,
+    chans: &BTreeMap<(usize, usize), (NodeId, NodeId)>,
+    tt: &Timetable,
+    hz: &[Hazard],
+) -> Result<Graph> {
+    // node -> buffer tag, defaulting to the micro-batch's own assignment
+    let mut send_tag: BTreeMap<NodeId, usize> = BTreeMap::new();
+    let mut recv_tag: BTreeMap<NodeId, usize> = BTreeMap::new();
+    for (&(b, m), &(snd, rcv)) in chans {
+        let tag = buffer_tag(b, m % depth, m / depth);
+        send_tag.insert(snd, tag);
+        recv_tag.insert(rcv, tag);
+    }
+    // A victim's buffer actually holds the overwriting epoch when read; the
+    // last writer at-or-before the read wins (writes on one slot are
+    // time-ordered, so scanning upward and keeping the latest is exact).
+    for h in hz {
+        let (snd, _) = chans[&(h.boundary, h.victim)];
+        let read = tt.fwd_tick(h.boundary + 1, h.victim);
+        let mut occupant = h.victim;
+        let mut m2 = h.victim + depth;
+        while m2 < sched.micro && tt.fwd_tick(h.boundary, m2) <= read {
+            occupant = m2;
+            m2 += depth;
+        }
+        send_tag.insert(snd, buffer_tag(h.boundary, h.victim % depth, occupant / depth));
+    }
+    gd.rebuild_with(|nid, node, ins| match node.op {
+        Op::Send { .. } => (Op::Send { chan: send_tag[&nid] }, ins.to_vec()),
+        Op::Recv { .. } => (Op::Recv { chan: recv_tag[&nid] }, ins.to_vec()),
+        _ => (node.op.clone(), ins.to_vec()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::pipeline_stage_split;
+
+    fn chain(blocks: usize) -> Graph {
+        let mut gs = Graph::new("chain");
+        let mut x = gs.input("x", vec![8, 4]);
+        for i in 0..blocks {
+            let w = gs.input(&format!("w{i}"), vec![4, 4]);
+            x = gs.matmul(&format!("b{i}_mm"), x, w);
+        }
+        gs.mark_output(x);
+        gs
+    }
+
+    /// gpipe wavefront: stage s runs micro-batch m at tick s + m.
+    #[test]
+    fn gpipe_timetable_is_a_wavefront() {
+        let sched = Schedule::gpipe(2, 4);
+        let tt = sched.timetable().unwrap();
+        for s in 0..2 {
+            for m in 0..4 {
+                assert_eq!(tt.fwd_tick(s, m), (s + m) as u64, "stage {s} micro {m}");
+            }
+        }
+    }
+
+    /// 1f1b: warmup wavefront, then backwards stretch the forward cadence
+    /// to every other tick (hand-derived for S=2, M=4).
+    #[test]
+    fn one_f_one_b_timetable_matches_hand_simulation() {
+        let sched = Schedule::one_f_one_b(2, 4);
+        let tt = sched.timetable().unwrap();
+        assert_eq!((0..4).map(|m| tt.fwd_tick(0, m)).collect::<Vec<_>>(), vec![0, 1, 4, 6]);
+        assert_eq!((0..4).map(|m| tt.fwd_tick(1, m)).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn interleaved_timetable_completes_and_respects_dependencies() {
+        for (stages, micro) in [(2, 4), (2, 8), (4, 8)] {
+            let sched = Schedule::interleaved(stages, micro, 2);
+            let tt = sched.timetable().unwrap_or_else(|e| panic!("S={stages} M={micro}: {e}"));
+            for c in 1..sched.chunks() {
+                for m in 0..micro {
+                    assert!(
+                        tt.fwd_tick(c, m) > tt.fwd_tick(c - 1, m),
+                        "chunk {c} micro {m} ran before its input arrived"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_buffer_pools_are_hazardous_and_double_buffers_safe() {
+        for sched in [
+            Schedule::gpipe(2, 4),
+            Schedule::one_f_one_b(2, 4),
+            Schedule::one_f_one_b(4, 8),
+            Schedule::interleaved(2, 4, 2),
+            Schedule::interleaved(2, 8, 2),
+        ] {
+            let tt = sched.timetable().unwrap();
+            assert!(
+                !sched.hazards(&tt, 1).is_empty(),
+                "{:?}: depth 1 must race the wavefront",
+                sched
+            );
+            assert!(sched.hazards(&tt, 2).is_empty(), "{:?}: double buffering suffices", sched);
+            assert_eq!(sched.min_safe_depth().unwrap(), 2, "{:?}", sched);
+        }
+    }
+
+    #[test]
+    fn hazard_names_the_slot_and_both_micro_batches() {
+        let sched = Schedule::gpipe(2, 4);
+        let tt = sched.timetable().unwrap();
+        let hz = sched.hazards(&tt, 1);
+        assert!(hz.contains(&Hazard { boundary: 0, slot: 0, writer: 1, victim: 0 }), "{hz:?}");
+    }
+
+    #[test]
+    fn schedule_validation_rejects_malformed_configs() {
+        assert!(Schedule::gpipe(1, 4).validate().is_err(), "one stage has no boundary");
+        assert!(Schedule::interleaved(2, 3, 2).validate().is_err(), "micro % stages != 0");
+        assert!(Schedule::interleaved(2, 4, 1).validate().is_err(), "interleaving needs virt >= 2");
+        assert!(
+            Schedule { kind: SchedKind::GPipe, stages: 2, micro: 4, virt: 2 }.validate().is_err(),
+            "gpipe has no virtual chunks"
+        );
+    }
+
+    #[test]
+    fn buffer_tag_roundtrip_and_logical_tags_decode_to_none() {
+        for (b, s, e) in [(0, 0, 0), (2, 1, 3), (999, 999, 999)] {
+            assert_eq!(decode_buffer_tag(buffer_tag(b, s, e)), Some((b, s, e)));
+        }
+        for chan in [0usize, 1, 7, 4095] {
+            assert_eq!(decode_buffer_tag(chan), None, "logical chan {chan}");
+        }
+    }
+
+    #[test]
+    fn lowering_retags_every_boundary_pair_consistently() {
+        let gs = chain(2);
+        let (gd, _ri) = pipeline_stage_split(&gs, &[0], 4, "b2_out").unwrap();
+        let sched = Schedule::one_f_one_b(2, 4);
+        let low = lower_buffers(&gd, &sched, 2).unwrap();
+        low.validate().unwrap();
+        let mut seen = Vec::new();
+        for nid in low.topo_order() {
+            if let Op::Send { chan } = low.node(nid).op {
+                let (b, slot, epoch) =
+                    decode_buffer_tag(chan).expect("send must be buffer-tagged");
+                assert_eq!(b, 0);
+                seen.push((slot, epoch));
+                // paired recv carries the identical tag
+                let rcv = low.consumers(low.node(nid).output)[0];
+                match low.node(rcv).op {
+                    Op::Recv { chan: rc } => assert_eq!(rc, chan),
+                    ref other => panic!("send feeds {other:?}"),
+                }
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(0, 0), (0, 1), (1, 0), (1, 1)], "round-robin slots x epochs");
+    }
+
+    #[test]
+    fn undersized_pool_is_rejected_at_construction() {
+        let gs = chain(2);
+        let (gd, _ri) = pipeline_stage_split(&gs, &[0], 4, "b2_out").unwrap();
+        let err = lower_buffers(&gd, &Schedule::gpipe(2, 4), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unsafe"), "{msg}");
+        assert!(msg.contains("smallest safe depth is 2"), "{msg}");
+    }
+
+    #[test]
+    fn unchecked_lowering_crosses_victim_tags() {
+        let gs = chain(2);
+        let (gd, _ri) = pipeline_stage_split(&gs, &[0], 4, "b2_out").unwrap();
+        let sched = Schedule::gpipe(2, 4);
+        let (low, hz) = lower_buffers_unchecked(&gd, &sched, 1).unwrap();
+        low.validate().unwrap();
+        assert!(!hz.is_empty());
+        let mut crossed = 0;
+        for nid in low.topo_order() {
+            if let Op::Recv { chan } = low.node(nid).op {
+                let producer = low.producer(low.node(nid).inputs[0]).unwrap();
+                let sc = match producer.op {
+                    Op::Send { chan } => chan,
+                    ref other => panic!("recv input feeds {other:?}"),
+                };
+                if sc != chan {
+                    crossed += 1;
+                    let (_, slot, re) = decode_buffer_tag(chan).unwrap();
+                    let (_, sslot, se) = decode_buffer_tag(sc).unwrap();
+                    assert_eq!(slot, sslot, "hazard stays within one physical buffer");
+                    assert!(se > re, "the occupant epoch is newer than the intended one");
+                }
+            }
+        }
+        assert_eq!(crossed, hz.len(), "one crossed pair per hazard");
+    }
+
+    #[test]
+    fn quarantine_lists_exactly_the_victim_tags() {
+        let sched = Schedule::gpipe(2, 4);
+        assert!(quarantined_channels(&sched, 2).unwrap().is_empty(), "safe pool: nothing");
+        let q = quarantined_channels(&sched, 1).unwrap();
+        // depth 1: victims are micro-batches 0..3 less the last writer
+        assert_eq!(q, vec![buffer_tag(0, 0, 0), buffer_tag(0, 0, 1), buffer_tag(0, 0, 2)]);
+    }
+
+    #[test]
+    fn channel_grid_validation_catches_wrong_dimensions() {
+        let gs = chain(2);
+        let (gd, _ri) = pipeline_stage_split(&gs, &[0], 4, "b2_out").unwrap();
+        // schedule claims 2 micro-batches but the graph carries 4
+        let err = lower_buffers(&gd, &Schedule::gpipe(2, 2), 2).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+        // double lowering is rejected
+        let low = lower_buffers(&gd, &Schedule::gpipe(2, 4), 2).unwrap();
+        let err = lower_buffers(&low, &Schedule::gpipe(2, 4), 2).unwrap_err();
+        assert!(format!("{err:#}").contains("already buffer-tagged"), "{err:#}");
+    }
+}

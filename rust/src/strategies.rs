@@ -354,8 +354,9 @@ pub fn moe_from_seq(gs: &Graph, ranks: usize) -> Result<(Graph, Relation)> {
 /// Per-micro-batch node names are `{orig}_mb{m}`; the final gather is
 /// `out_name`. Only row-decomposable operators are supported (elementwise,
 /// matmul against replicated weights, row-wise softmax, RMS/LayerNorm,
-/// RoPE with tables sliced per micro-batch); anything that mixes rows
-/// across micro-batches (attention, transposes, reductions over dim 0) is
+/// RoPE with tables sliced per micro-batch, embedding of micro-batched ids
+/// against a replicated table); anything that mixes rows across
+/// micro-batches (attention, transposes, reductions over dim 0) is
 /// rejected rather than silently mis-split.
 pub fn pipeline_stage_split(
     gs: &Graph,
@@ -549,11 +550,51 @@ fn build_pp_node(
             let sn = gd.slice(&format!("{name}_sin"), sin, 0, lo, hi);
             gd.add(name, Op::Rope, vec![x, cs, sn])
         }
+        Op::Embedding => {
+            // row gather: output rows track the ids rows, so micro-batching
+            // the ids (against a replicated table) is row-exact
+            ensure!(
+                mb(node.inputs[0]).is_none(),
+                "pipeline split: embedding '{}' with micro-batched table mixes rows",
+                node.name
+            );
+            let table = rep(node.inputs[0])?;
+            let ids = mb(node.inputs[1]).ok_or_else(|| {
+                anyhow::anyhow!("embedding '{}' ids must be micro-batched", node.name)
+            })?;
+            gd.add(name, Op::Embedding, vec![table, ids])
+        }
         other => bail!(
             "pipeline split: operator '{}' ({other}) mixes rows across micro-batches",
             node.name
         ),
     }
+}
+
+/// [`pipeline_stage_split`] composed with the schedule-aware buffer
+/// lowering: cut the chain, then re-tag every per-(boundary × micro-batch)
+/// logical channel with its `(boundary, slot, epoch)` physical-buffer tag
+/// under `sched` and a per-boundary pool of `depth` activation buffers. A
+/// (schedule, depth) combination with a slot-liveness hazard is rejected at
+/// construction (see `crate::schedule::lower_buffers`). The relation is
+/// untouched: lowering only renames channels, never tensors.
+pub fn pipeline_stage_split_scheduled(
+    gs: &Graph,
+    cuts: &[NodeId],
+    out_name: &str,
+    sched: &crate::schedule::Schedule,
+    depth: usize,
+) -> Result<(Graph, Relation)> {
+    ensure!(
+        cuts.len() == sched.boundaries(),
+        "schedule expects {} stage boundaries ({} chunks), got {} cuts",
+        sched.boundaries(),
+        sched.chunks(),
+        cuts.len()
+    );
+    let (gd, ri) = pipeline_stage_split(gs, cuts, sched.micro, out_name)?;
+    let lowered = crate::schedule::lower_buffers(&gd, sched, depth)?;
+    Ok((lowered, ri))
 }
 
 /// Partition `[0, total)` into `ranks` balanced chunks; (start, end) per
@@ -661,6 +702,39 @@ mod tests {
         let a = eval_graph(&gs, &gs_in).unwrap();
         let b = eval_graph(&gd, &gd_in).unwrap();
         assert!(a[gs.outputs[0] as usize].allclose(&b[gd.outputs[0] as usize], 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn pipeline_split_micro_batches_embedding_ids() {
+        // embedding = row gather: ids micro-batch, table replicated
+        let mut gs = Graph::new("emb_chain");
+        let ids = gs.input_typed("ids", vec![4], crate::ir::DType::I64);
+        let table = gs.input("wte", vec![16, 4]);
+        let emb = gs.op("b0_emb", Op::Embedding, vec![table, ids]);
+        let act = gs.op("b1_act", Op::Gelu, vec![emb]);
+        gs.mark_output(act);
+        let (gd, ri) = pipeline_stage_split(&gs, &[0], 2, "b2_out").unwrap();
+        gd.validate().unwrap();
+        ri.validate_shapes(&gs, &gd).unwrap();
+        assert!(gd.tensor_by_name("b0_emb_mb0").is_some());
+        assert_eq!(gd.shape(gd.tensor_by_name("b0_emb_mb1").unwrap()), &[2, 4]);
+    }
+
+    #[test]
+    fn scheduled_split_checks_boundary_count() {
+        let gs = pp_chain();
+        // 1 cut but an interleaved 2x2 schedule expects 3 boundaries
+        let sched = crate::schedule::Schedule::interleaved(2, 2, 2);
+        assert!(pipeline_stage_split_scheduled(&gs, &[0], "out", &sched, 2).is_err());
+        // matching dimensions lower cleanly and stay numerics-identical
+        let sched = crate::schedule::Schedule::gpipe(2, 2);
+        let (gd, _ri) = pipeline_stage_split_scheduled(&gs, &[0], "b2_out", &sched, 2).unwrap();
+        gd.validate().unwrap();
+        assert!(gd.nodes().iter().all(|n| match n.op {
+            Op::Send { chan } | Op::Recv { chan } =>
+                crate::schedule::decode_buffer_tag(chan).is_some(),
+            _ => true,
+        }));
     }
 
     #[test]

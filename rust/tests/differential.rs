@@ -180,3 +180,21 @@ fn differential_gpt_moe_ep() {
     let (gs, gd, ri) = gpt::moe_ep_pair(2, 1).expect("gpt moe ep builds");
     assert_differential("gpt_moe_ep_2", &gs, &gd, &ri);
 }
+
+/// Buffer-tagged boundary collapse: incremental and full-rescan saturation
+/// must agree on the schedule-lowered 1F1B pipeline workload (large channel
+/// tags exercise the same recv_of_send path as logical ones).
+#[test]
+fn differential_gpt_pp_1f1b() {
+    let sched = graphguard::schedule::Schedule::one_f_one_b(2, 4);
+    let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 2).expect("gpt 1f1b builds");
+    assert_differential("gpt_pp2_1f1b_2", &gs, &gd, &ri);
+}
+
+/// Same, across the three boundaries of the interleaved 2x2 lowering.
+#[test]
+fn differential_gpt_pp_interleaved() {
+    let sched = graphguard::schedule::Schedule::interleaved(2, 4, 2);
+    let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 4).expect("gpt interleaved builds");
+    assert_differential("gpt_pp2x2_intlv_2", &gs, &gd, &ri);
+}

@@ -1,4 +1,5 @@
-//! Replayable regression fixtures for the PP/FSDP/MoE strategy families.
+//! Replayable regression fixtures for the PP/FSDP/MoE/schedule strategy
+//! families.
 //!
 //! Each fixture under `fixtures/` uses the exact JSON schema the fuzzer's
 //! `record_cex` writes for minimized counterexamples, so `graphguard fuzz
@@ -40,6 +41,42 @@ fn fsdp_stale_shard_fixture_is_killed_in_region() {
     assert_eq!(
         verdict, "mutant outcome: killed_in_region",
         "stale FSDP shard must stay detected with an in-block locus"
+    );
+}
+
+#[test]
+fn pp_sched_clean_pair_fixture_verifies() {
+    let verdict = replay(include_str!("fixtures/pp_sched_clean_verifies.json"));
+    assert!(
+        verdict.contains("clean pair verifies"),
+        "clean buffer-lowered 1F1B pair regressed into a false alarm: {verdict}"
+    );
+}
+
+#[test]
+fn pp_sched_buffer_reuse_early_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/pp_sched_buffer_reuse_early_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "stale buffer reuse must stay detected with an in-stage locus"
+    );
+}
+
+#[test]
+fn pp_sched_double_buffer_swap_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/pp_sched_double_buffer_swap_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "double-buffer slot swap must stay detected with an in-stage locus"
+    );
+}
+
+#[test]
+fn pp_sched_virtual_stage_misbind_fixture_is_killed_in_region() {
+    let verdict = replay(include_str!("fixtures/pp_sched_virtual_stage_misbind_killed.json"));
+    assert_eq!(
+        verdict, "mutant outcome: killed_in_region",
+        "virtual-stage misbinding must stay detected with an in-stage locus"
     );
 }
 

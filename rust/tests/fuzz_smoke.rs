@@ -162,6 +162,62 @@ fn known_mutants_killed_across_flavors() {
     }
 }
 
+/// The three buffer-hazard operators on schedule-lowered pipeline graphs:
+/// each rewired recv keeps its intended `(boundary, slot, epoch)` tag while
+/// reading another micro-batch's buffer, so the crossed tag stays opaque
+/// and the failure localizes inside the receiving stage (the first G_s
+/// operator after the mutated boundary, never upstream of it).
+#[test]
+fn buffer_hazard_mutants_killed_with_in_stage_loci() {
+    use graphguard::schedule::SchedKind;
+    let linear4 =
+        vec![Block::Linear, Block::Linear, Block::Linear, Block::Linear];
+    let cases = [
+        // stale reuse: micro-batch 2's recv reads slot 0 one epoch early
+        (
+            Flavor::PpSched(SchedKind::OneFOneB),
+            vec![Block::Linear, Block::Unary(UnaryKind::Gelu)],
+            MutKind::BufferReuseEarly,
+            "b0_mm_mb2_recv",
+            0usize,
+        ),
+        // double-buffering index bug: micro-batch 1 reads the wrong slot
+        (
+            Flavor::PpSched(SchedKind::GPipe),
+            vec![Block::Linear, Block::Unary(UnaryKind::Gelu)],
+            MutKind::DoubleBufferSwap,
+            "b0_mm_mb1_recv",
+            0usize,
+        ),
+        // interleaved misbinding: chunk boundary 1 reads boundary 0's buffer
+        (
+            Flavor::PpSched(SchedKind::Interleaved),
+            linear4,
+            MutKind::VirtualStageMisbind,
+            "b1_mm_mb0_recv",
+            1usize,
+        ),
+    ];
+    for (flavor, blocks, kind, node, min_block) in cases {
+        let spec = ModelSpec { seed: 6, ranks: 2, seq: 8, hidden: 4, flavor, blocks };
+        let (gs, gd, ri) = build_pair(&spec).unwrap_or_else(|e| panic!("{flavor:?}: {e:#}"));
+        check_refinement(&gs, &gd, &ri, &InferConfig::default())
+            .unwrap_or_else(|e| panic!("clean {flavor:?} pair must refine: {e}"));
+        let (gd_mut, _m) = apply_mutation_by_name(&gd, kind, node)
+            .unwrap_or_else(|e| panic!("{flavor:?}: {e:#}"));
+        let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+            .err()
+            .unwrap_or_else(|| panic!("{flavor:?} mutant {kind:?}@{node} must be rejected"));
+        let block = fuzz::parse_block(&err.node_name)
+            .unwrap_or_else(|| panic!("{flavor:?}: locus '{}' not block-named", err.node_name));
+        assert!(
+            block >= min_block,
+            "{flavor:?}: failure at '{}' (block {block}) precedes mutated block {min_block}",
+            err.node_name
+        );
+    }
+}
+
 /// The SP rope construction reproduces bug 1 under the slice_shift
 /// operator: the mutant's wrong table offset is rejected at the rope.
 #[test]

@@ -12,9 +12,10 @@
 use graphguard::expr::eval::{eval_expr, eval_graph, Env};
 use graphguard::expr::TensorRef;
 use graphguard::ir::{Graph, Op};
+use graphguard::schedule::{decode_buffer_tag, lower_buffers, SchedKind, Schedule};
 use graphguard::strategies::{
-    chunks, fsdp_shard_params, pipeline_stage_split, replicate_input, shard_input, stage_ends,
-    RiBuilder,
+    chunks, fsdp_shard_params, pipeline_stage_split, pipeline_stage_split_scheduled,
+    replicate_input, shard_input, stage_ends, RiBuilder,
 };
 use graphguard::util::ndarray::NdArray;
 use graphguard::util::proptest::Prop;
@@ -266,6 +267,186 @@ fn fsdp_gather_roundtrips_numerically() {
         let got = &vals[gathered as usize];
         if !got.allclose(&full, 0.0, 0.0) {
             return Err("gathered param must equal the stored param exactly".into());
+        }
+        Ok(())
+    });
+}
+
+/// A random legal schedule. Stages 2..=3 with enough micro-batches to
+/// exercise multi-epoch slot reuse; interleaved degrees keep
+/// `micro % stages == 0`.
+fn random_schedule(rng: &mut Rng) -> Schedule {
+    let stages = 2 + rng.below(2) as usize; // 2..=3
+    let kind = [SchedKind::GPipe, SchedKind::OneFOneB, SchedKind::Interleaved]
+        [rng.below(3) as usize];
+    match kind {
+        SchedKind::GPipe => Schedule::gpipe(stages, stages * (1 + rng.below(3) as usize)),
+        SchedKind::OneFOneB => {
+            Schedule::one_f_one_b(stages, stages * (1 + rng.below(3) as usize))
+        }
+        SchedKind::Interleaved => {
+            Schedule::interleaved(stages, stages * (1 + rng.below(3) as usize), 2)
+        }
+    }
+}
+
+/// A single-output matmul chain with exactly one node per block, so cut
+/// nodes are just `0..boundaries`.
+fn matmul_chain(blocks: usize, rows: i64, cols: i64) -> Graph {
+    let mut gs = Graph::new("chain");
+    let mut x = gs.input("x", vec![rows, cols]);
+    for i in 0..blocks {
+        let w = gs.input(&format!("w{i}"), vec![cols, cols]);
+        x = gs.matmul(&format!("b{i}_mm"), x, w);
+    }
+    gs.mark_output(x);
+    gs
+}
+
+/// Every legal (schedule, safe depth) assignment covers the full logical
+/// channel grid with pairwise-equal, globally-distinct buffer tags, and no
+/// two users of one physical buffer have overlapping live ranges — checked
+/// all-pairs against the timetable, a strictly stronger statement than the
+/// adjacent-user audit `lower_buffers` itself runs.
+#[test]
+fn buffer_assignment_covers_channels_without_live_range_overlap() {
+    Prop::new("buffer assignment coverage + liveness").cases(48).check(|rng| {
+        let sched = random_schedule(rng);
+        let chunks_n = sched.chunks();
+        let rows = sched.micro as i64 * (1 + rng.below(2) as i64);
+        let gs = matmul_chain(chunks_n, rows, 4);
+        let cuts: Vec<u32> = (0..chunks_n as u32 - 1).collect();
+        let depth = sched.min_safe_depth().map_err(|e| format!("{e:#}"))?;
+        let (gd, _ri) = pipeline_stage_split(&gs, &cuts, sched.micro, "out")
+            .map_err(|e| format!("{e:#}"))?;
+        let low = lower_buffers(&gd, &sched, depth).map_err(|e| format!("{e:#}"))?;
+        low.validate().map_err(|e| format!("{e:#}"))?;
+
+        // coverage: decoded (boundary, slot, epoch) tags reconstruct the
+        // full (boundary, micro) grid exactly once, send/recv tags paired
+        let mut grid: Vec<(usize, usize)> = Vec::new();
+        for nid in low.topo_order() {
+            let node = low.node(nid);
+            if let Op::Send { chan } = node.op {
+                let (b, slot, epoch) =
+                    decode_buffer_tag(chan).ok_or("send not buffer-tagged")?;
+                if slot >= depth {
+                    return Err(format!("slot {slot} outside pool depth {depth}"));
+                }
+                let m = epoch * depth + slot;
+                grid.push((b, m));
+                let rcv = low.consumers(node.output);
+                let rc = match low.node(rcv[0]).op {
+                    Op::Recv { chan } => chan,
+                    ref o => return Err(format!("send feeds {o:?}")),
+                };
+                if rc != chan {
+                    return Err(format!("unpaired tags send={chan} recv={rc}"));
+                }
+            }
+        }
+        grid.sort_unstable();
+        let want: Vec<(usize, usize)> = (0..sched.boundaries())
+            .flat_map(|b| (0..sched.micro).map(move |m| (b, m)))
+            .collect();
+        if grid != want {
+            return Err(format!("channel grid not covered: {grid:?}"));
+        }
+
+        // all-pairs live-range disjointness per physical buffer
+        let tt = sched.timetable().map_err(|e| format!("{e:#}"))?;
+        for b in 0..sched.boundaries() {
+            for m1 in 0..sched.micro {
+                for m2 in m1 + 1..sched.micro {
+                    if m1 % depth != m2 % depth {
+                        continue; // different physical buffers
+                    }
+                    // buffer live for m1 from its write to its read; m2's
+                    // write must land strictly after m1's read completes
+                    if tt.fwd_tick(b, m2) <= tt.fwd_tick(b + 1, m1) {
+                        return Err(format!(
+                            "{:?} depth {depth}: users {m1},{m2} of boundary {b} slot {} \
+                             overlap",
+                            sched,
+                            m1 % depth
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// An undersized pool is rejected at construction — never silently lowered.
+#[test]
+fn undersized_buffer_pools_are_rejected_at_construction() {
+    Prop::new("undersized pool rejected").cases(32).check(|rng| {
+        let sched = random_schedule(rng);
+        let depth = sched.min_safe_depth().map_err(|e| format!("{e:#}"))?;
+        if depth == 1 {
+            return Ok(()); // nothing smaller to reject
+        }
+        let chunks_n = sched.chunks();
+        let gs = matmul_chain(chunks_n, sched.micro as i64, 4);
+        let cuts: Vec<u32> = (0..chunks_n as u32 - 1).collect();
+        let (gd, _ri) = pipeline_stage_split(&gs, &cuts, sched.micro, "out")
+            .map_err(|e| format!("{e:#}"))?;
+        match lower_buffers(&gd, &sched, depth - 1) {
+            Ok(_) => Err(format!("{sched:?}: depth {} must be rejected", depth - 1)),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("unsafe") {
+                    Ok(())
+                } else {
+                    Err(format!("wrong rejection: {msg}"))
+                }
+            }
+        }
+    });
+}
+
+/// The scheduled lowering is numerics-preserving: the buffer-tagged graph
+/// computes exactly what the logical split computes.
+#[test]
+fn scheduled_pipeline_split_roundtrips_numerically() {
+    Prop::new("scheduled split preserves chain semantics").cases(24).check(|rng| {
+        let sched = random_schedule(rng);
+        let chunks_n = sched.chunks();
+        let rows = sched.micro as i64 * (1 + rng.below(2) as i64);
+        let cols = 4;
+        let gs = matmul_chain(chunks_n, rows, cols);
+        let cuts: Vec<u32> = (0..chunks_n as u32 - 1).collect();
+        let depth = sched.min_safe_depth().map_err(|e| format!("{e:#}"))?;
+        let (gd, ri) = pipeline_stage_split_scheduled(&gs, &cuts, "out", &sched, depth)
+            .map_err(|e| format!("{e:#}"))?;
+        gd.validate().map_err(|e| format!("{e:#}"))?;
+        ri.validate_shapes(&gs, &gd).map_err(|e| format!("{e:#}"))?;
+
+        let mut r2 = Rng::new(rng.next_u64());
+        let full = NdArray::new(vec![rows, cols], r2.buf((rows * cols) as usize, 1.0)).unwrap();
+        let mut gs_in: FxHashMap<u32, NdArray> = FxHashMap::default();
+        gs_in.insert(gs.tensor_by_name("x").unwrap(), full.clone());
+        let mut gd_in: FxHashMap<u32, NdArray> = FxHashMap::default();
+        for (m, &(lo, hi)) in chunks(rows, sched.micro).iter().enumerate() {
+            let id = gd
+                .tensor_by_name(&format!("x_r{m}"))
+                .ok_or_else(|| format!("missing input x_r{m}"))?;
+            gd_in.insert(id, full.slice(0, lo, hi).map_err(|e| format!("{e:#}"))?);
+        }
+        for i in 0..chunks_n {
+            let wv = NdArray::new(vec![cols, cols], r2.buf((cols * cols) as usize, 1.0)).unwrap();
+            gs_in.insert(gs.tensor_by_name(&format!("w{i}")).unwrap(), wv.clone());
+            let id = gd
+                .tensor_by_name(&format!("w{i}_rep"))
+                .ok_or_else(|| format!("missing input w{i}_rep"))?;
+            gd_in.insert(id, wv);
+        }
+        let a = eval_graph(&gs, &gs_in).map_err(|e| format!("{e:#}"))?;
+        let b = eval_graph(&gd, &gd_in).map_err(|e| format!("{e:#}"))?;
+        let (ga, gb) = (&a[gs.outputs[0] as usize], &b[gd.outputs[0] as usize]);
+        if ga.shape() != gb.shape() || !ga.allclose(gb, 1e-5, 1e-6) {
+            return Err(format!("scheduled pipeline output diverges under {sched:?}"));
         }
         Ok(())
     });

@@ -10,6 +10,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci-local: ERROR: 'cargo' not found on PATH — nothing was checked." >&2
+    echo "ci-local: install a Rust toolchain (rust-toolchain.toml pins 1.79.0)" >&2
+    echo "ci-local: e.g. via https://rustup.rs, then re-run this script." >&2
+    exit 2
+fi
+
 step() {
     echo
     echo "==> $*"
