@@ -44,7 +44,7 @@ fn main() {
             &gs,
             &gd,
             &ri,
-            SaturationLimits { max_iters: 14, max_nodes: 400_000 },
+            SaturationLimits::new(14, 400_000),
         );
         let monolithic = t1.elapsed();
         let (mono_str, nodes) = match &mono {

@@ -44,6 +44,7 @@ fn main() {
                 r.duration,
                 r.lemma_applications,
             )
+            .with_verdict(r.verdict.tag())
         })
         .collect();
     let path = write_bench_json("fig4", &records).expect("write BENCH_fig4.json");

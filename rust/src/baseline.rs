@@ -81,6 +81,15 @@ pub fn check_refinement_monolithic(
         let class = eg.find(s_class[o as usize]);
         match cands.get(&class) {
             Some(cs) if !cs.is_empty() => rel.insert_all(o, cs.iter().cloned()),
+            // Same soundness-of-reporting rule as `infer`: a budget-cut
+            // saturation with no mapping is INCONCLUSIVE, not a refutation.
+            _ if stats.exhausted.is_some() => bail!(
+                "monolithic baseline: INCONCLUSIVE ({:?} budget exhausted) — no clean \
+                 mapping found for output '{}' within limits; this is a resource \
+                 verdict, not a refutation",
+                stats.exhausted.unwrap(),
+                gs.tensor(o).name
+            ),
             _ => bail!(
                 "monolithic baseline: no clean mapping for output '{}'",
                 gs.tensor(o).name
@@ -137,7 +146,7 @@ mod tests {
             &gs,
             &gd,
             &ri,
-            SaturationLimits { max_iters: 12, max_nodes: 200_000 },
+            SaturationLimits::new(12, 200_000),
         )
         .unwrap();
         assert!(out.relation.contains(gs.tensor_by_name("F").unwrap()));

@@ -16,6 +16,10 @@ pub struct BenchRecord {
     pub ops: usize,
     pub wall_ns: u128,
     pub lemma_applications: u64,
+    /// Three-valued verdict tag ("verified" / "refuted" /
+    /// "inconclusive_*") so a budget-starved bench row is distinguishable
+    /// from a fast one in the tracked perf series.
+    pub verdict: &'static str,
 }
 
 impl BenchRecord {
@@ -30,7 +34,13 @@ impl BenchRecord {
             ops,
             wall_ns: wall.as_nanos(),
             lemma_applications,
+            verdict: "verified",
         }
+    }
+
+    pub fn with_verdict(mut self, verdict: &'static str) -> Self {
+        self.verdict = verdict;
+        self
     }
 }
 
@@ -48,6 +58,7 @@ pub fn write_bench_json(
                 ("ops", Json::num(r.ops as f64)),
                 ("wall_ns", Json::num(r.wall_ns as f64)),
                 ("lemma_applications", Json::num(r.lemma_applications as f64)),
+                ("verdict", Json::str(r.verdict)),
             ])
         })
         .collect();
@@ -173,5 +184,6 @@ mod tests {
         assert_eq!(rows[0].get("ops").as_usize(), Some(7));
         assert_eq!(rows[0].get("wall_ns").as_f64(), Some(1_500_000.0));
         assert_eq!(rows[0].get("lemma_applications").as_usize(), Some(42));
+        assert_eq!(rows[0].get("verdict").as_str(), Some("verified"));
     }
 }

@@ -1,0 +1,111 @@
+//! Test-only fault injection ("chaos hooks").
+//!
+//! The saturation engine calls [`on_lemma_application`] immediately before
+//! every lemma applier. With the `chaos` Cargo feature enabled, tests can
+//! arm a fault against a named lemma — panic or a wall-clock stall on its
+//! Nth application — to prove end-to-end that the coordinator and the fuzz
+//! oracle convert worker faults into `Inconclusive` verdicts instead of
+//! aborting, hanging, or misreporting them as refutations.
+//!
+//! Without the feature (every production build) the hook is an empty
+//! `#[inline(always)]` function: zero cost, zero behavior change.
+//!
+//! Faults fire exactly once. A fired fault stays in the armed list (marked
+//! spent) so tests can assert it actually triggered; [`disarm_all`] resets
+//! the global state between tests. The armed list is process-global —
+//! chaos tests must serialize on a shared mutex (see `rust/tests/chaos.rs`)
+//! and should pin `threads = 1` for deterministic victim selection.
+
+#[cfg(feature = "chaos")]
+mod imp {
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum FaultAction {
+        /// Panic inside the applier (a poisoned-lemma crash).
+        Panic,
+        /// Stall for the given duration (a wedged applier / runaway solver).
+        Spin(Duration),
+    }
+
+    #[derive(Debug)]
+    struct Armed {
+        rule: String,
+        /// Fire on the Nth application of `rule` (1-based).
+        nth: u64,
+        action: FaultAction,
+        seen: u64,
+        fired: bool,
+    }
+
+    static FAULTS: Mutex<Vec<Armed>> = Mutex::new(Vec::new());
+
+    /// Lock that tolerates poisoning: the whole point of this module is to
+    /// panic while the lock's owner list is consistent, so recover the data.
+    fn faults() -> std::sync::MutexGuard<'static, Vec<Armed>> {
+        match FAULTS.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Arm `action` against the `nth` (1-based) application of `rule`.
+    pub fn arm(rule: &str, nth: u64, action: FaultAction) {
+        faults().push(Armed { rule: rule.to_string(), nth, action, seen: 0, fired: false });
+    }
+
+    /// Clear all armed faults and counters.
+    pub fn disarm_all() {
+        faults().clear();
+    }
+
+    /// Did an armed fault against `rule` actually fire?
+    pub fn fired(rule: &str) -> bool {
+        faults().iter().any(|f| f.rule == rule && f.fired)
+    }
+
+    pub fn on_lemma_application(rule: &str) {
+        // Decide under the lock, act after dropping it: panicking while
+        // holding the guard would be survivable (see `faults`) but a spin
+        // would serialize every other worker on this mutex.
+        let action = {
+            let mut g = faults();
+            let mut hit = None;
+            for f in g.iter_mut() {
+                if f.fired || f.rule != rule {
+                    continue;
+                }
+                f.seen += 1;
+                if f.seen == f.nth {
+                    f.fired = true;
+                    hit = Some(f.action);
+                    break;
+                }
+            }
+            hit
+        };
+        match action {
+            None => {}
+            Some(FaultAction::Panic) => {
+                panic!("chaos: injected panic in lemma applier '{rule}'")
+            }
+            Some(FaultAction::Spin(d)) => {
+                // Sleep-loop rather than busy-wait: the stall is what is
+                // being simulated, not CPU burn, and short sleeps keep the
+                // wall clock honest under test-runner load.
+                let end = Instant::now() + d;
+                while Instant::now() < end {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(feature = "chaos")]
+pub use imp::{arm, disarm_all, fired, on_lemma_application, FaultAction};
+
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn on_lemma_application(_rule: &str) {}

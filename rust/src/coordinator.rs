@@ -3,20 +3,64 @@
 //! The paper's tool runs one verification per model; at ByteDance scale a
 //! team verifies many model/strategy/degree combinations per CI run. The
 //! coordinator owns that loop: a work queue of [`Workload`]s, a thread pool
-//! of verification workers (each `check_refinement` call is independent —
-//! fresh e-graphs per operator), wall-clock metrics per job, and report
-//! rendering used by the CLI and the benches.
+//! of verification workers (each inference call is independent — fresh
+//! e-graphs per operator), wall-clock metrics per job, and report rendering
+//! used by the CLI and the benches.
+//!
+//! Fault tolerance: every job — whether submitted through [`run_one`] or
+//! [`run_batch`] — goes through the same `execute_job` path, which runs
+//! panic-isolated inference ([`check_refinement_isolated`]) under the
+//! coordinator's [`EscalationPolicy`]. A panicking lemma applier poisons
+//! only its own job (per-call e-graph arenas are dropped on unwind) and
+//! surfaces as `Inconclusive(Panic)` with the payload in
+//! [`JobResult::error`]; the worker thread and the rest of the batch keep
+//! running.
+//!
+//! [`run_one`]: Coordinator::run_one
+//! [`run_batch`]: Coordinator::run_batch
+//! [`check_refinement_isolated`]: crate::infer::check_refinement_isolated
 
-use crate::infer::{check_refinement, InferConfig, NodeTiming};
+use crate::infer::{
+    check_refinement_escalating, EscalationPolicy, InconclusiveReason, InferConfig, NodeTiming,
+    Verdict,
+};
 use crate::models::Workload;
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Job-level verdict: [`crate::infer::Verdict`] flattened to the fields a
+/// report needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobVerdict {
+    Verified,
+    Refuted,
+    Inconclusive(InconclusiveReason),
+}
+
+impl JobVerdict {
+    /// Stable string tag (matches [`crate::infer::Verdict::tag`]).
+    pub fn tag(self) -> &'static str {
+        match self {
+            JobVerdict::Verified => "verified",
+            JobVerdict::Refuted => "refuted",
+            JobVerdict::Inconclusive(InconclusiveReason::Timeout) => "inconclusive_timeout",
+            JobVerdict::Inconclusive(InconclusiveReason::NodeBudget) => {
+                "inconclusive_node_budget"
+            }
+            JobVerdict::Inconclusive(InconclusiveReason::Panic) => "inconclusive_panic",
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct JobResult {
     pub name: String,
+    /// `verdict == Verified` (kept for the many existing callers).
     pub ok: bool,
+    pub verdict: JobVerdict,
+    /// Escalation attempts spent (≥ 1).
+    pub attempts: usize,
     pub duration: Duration,
     pub gs_ops: usize,
     pub gd_ops: usize,
@@ -31,60 +75,81 @@ pub struct JobResult {
 pub struct Coordinator {
     pub threads: usize,
     pub cfg: InferConfig,
+    pub escalation: EscalationPolicy,
 }
 
 impl Default for Coordinator {
     fn default() -> Self {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Coordinator { threads, cfg: InferConfig::default() }
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).max(1);
+        Coordinator {
+            threads,
+            cfg: InferConfig::default(),
+            escalation: EscalationPolicy::default(),
+        }
     }
 }
 
 impl Coordinator {
     pub fn new(threads: usize, cfg: InferConfig) -> Self {
-        Coordinator { threads: threads.max(1), cfg }
+        Coordinator { threads: threads.max(1), cfg, escalation: EscalationPolicy::default() }
     }
 
-    /// Verify a single workload, timing it.
-    pub fn run_one(&self, w: &Workload) -> JobResult {
+    pub fn with_escalation(mut self, policy: EscalationPolicy) -> Self {
+        self.escalation = policy;
+        self
+    }
+
+    /// The single execution path both `run_one` and `run_batch` use:
+    /// panic-isolated inference under the escalation policy, timed.
+    fn execute_job(&self, w: &Workload) -> JobResult {
         let t0 = Instant::now();
-        let out = check_refinement(&w.gs, &w.gd, &w.ri, &self.cfg);
+        let (verdict, attempts) =
+            check_refinement_escalating(&w.gs, &w.gd, &w.ri, &self.cfg, &self.escalation);
         let duration = t0.elapsed();
-        match out {
-            Ok(o) => {
+        let base = |verdict, error| JobResult {
+            name: w.name.clone(),
+            ok: verdict == JobVerdict::Verified,
+            verdict,
+            attempts,
+            duration,
+            gs_ops: w.gs.num_nodes(),
+            gd_ops: w.gd.num_nodes(),
+            mappings: 0,
+            lemma_applications: 0,
+            lemma_counts: vec![],
+            per_node: vec![],
+            error,
+        };
+        match verdict {
+            Verdict::Verified(o) => {
                 let mut counts: Vec<(&'static str, u64)> =
                     o.stats.applied.iter().map(|(&k, &v)| (k, v)).collect();
                 counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
                 JobResult {
-                    name: w.name.clone(),
-                    ok: true,
-                    duration,
-                    gs_ops: w.gs.num_nodes(),
-                    gd_ops: w.gd.num_nodes(),
                     mappings: o.relation.len(),
                     lemma_applications: o.stats.total_applications(),
                     lemma_counts: counts,
                     per_node: o.per_node,
-                    error: None,
+                    ..base(JobVerdict::Verified, None)
                 }
             }
-            Err(e) => JobResult {
-                name: w.name.clone(),
-                ok: false,
-                duration,
-                gs_ops: w.gs.num_nodes(),
-                gd_ops: w.gd.num_nodes(),
-                mappings: 0,
-                lemma_applications: 0,
-                lemma_counts: vec![],
-                per_node: vec![],
-                error: Some(format!("{e}")),
-            },
+            Verdict::Refuted(e) => base(JobVerdict::Refuted, Some(format!("{e}"))),
+            Verdict::Inconclusive(i) => {
+                base(JobVerdict::Inconclusive(i.reason), Some(format!("{i}")))
+            }
         }
     }
 
+    /// Verify a single workload, timing it. Same isolation and budgets as
+    /// the batch path.
+    pub fn run_one(&self, w: &Workload) -> JobResult {
+        self.execute_job(w)
+    }
+
     /// Verify a batch of workloads across the thread pool; results come
-    /// back in submission order.
+    /// back in submission order. With `threads == 1` this degrades to a
+    /// strictly sequential run with identical verdicts and order.
     pub fn run_batch(&self, jobs: Vec<Workload>) -> Vec<JobResult> {
         // Warm the shared lemma library before spawning workers so no job's
         // wall-clock absorbs the one-time construction cost.
@@ -99,12 +164,13 @@ impl Coordinator {
                 let tx = tx.clone();
                 let cfg = self.cfg.clone();
                 let threads = self.threads;
+                let escalation = self.escalation.clone();
                 scope.spawn(move || {
-                    let me = Coordinator { threads, cfg };
+                    let me = Coordinator { threads, cfg, escalation };
                     loop {
                         let job = queue.lock().unwrap().pop_front();
                         let Some((idx, w)) = job else { break };
-                        let result = me.run_one(&w);
+                        let result = me.execute_job(&w);
                         if tx.send((idx, result)).is_err() {
                             break;
                         }
@@ -137,7 +203,11 @@ pub fn report_table(results: &[JobResult]) -> String {
             crate::bench::fmt_dur(r.duration),
             r.lemma_applications,
             r.mappings,
-            if r.ok { "refines" } else { "BUG" },
+            match r.verdict {
+                JobVerdict::Verified => "refines".to_string(),
+                JobVerdict::Refuted => "BUG".to_string(),
+                JobVerdict::Inconclusive(reason) => format!("INCONCLUSIVE({reason})"),
+            },
         ));
     }
     s
@@ -158,6 +228,8 @@ mod tests {
         for (r, name) in results.iter().zip(&names) {
             assert_eq!(&r.name, name, "order preserved");
             assert!(r.ok, "{}: {:?}", r.name, r.error);
+            assert_eq!(r.verdict, JobVerdict::Verified);
+            assert!(r.attempts >= 1);
             assert!(r.duration > Duration::ZERO);
             assert!(r.lemma_applications > 0);
         }
@@ -178,6 +250,29 @@ mod tests {
         let coord = Coordinator::default();
         let r = coord.run_one(&w);
         assert!(!r.ok);
+        assert_eq!(r.verdict, JobVerdict::Refuted, "a genuine bug must refute, not starve");
         assert!(r.error.as_deref().unwrap_or("").contains("FAILED"));
+    }
+
+    #[test]
+    fn starved_budget_yields_inconclusive_job_not_bug() {
+        let (gs, gd, ri) = crate::models::regression::grad_accum_buggy_pair(2).unwrap();
+        let w = Workload { name: "starved".into(), gs, gd, ri, strategies: vec![] };
+        let cfg = InferConfig {
+            limits: crate::egraph::SaturationLimits::new(8, 10),
+            ..InferConfig::default()
+        };
+        // single-shot so the tiny budget is not escalated away
+        let coord =
+            Coordinator::new(1, cfg).with_escalation(EscalationPolicy::single_shot());
+        let r = coord.run_one(&w);
+        assert!(!r.ok);
+        assert!(
+            matches!(r.verdict, JobVerdict::Inconclusive(_)),
+            "budget exhaustion must not read as a refutation: {:?}",
+            r.verdict
+        );
+        let table = report_table(&[r]);
+        assert!(table.contains("INCONCLUSIVE"), "{table}");
     }
 }

@@ -22,4 +22,4 @@ pub use extract::CleanCand;
 pub use ematch::{ematch, ematch_all, ematch_into, Children, POp, Pat, Subst};
 pub use extract::extract_clean;
 pub use rewrite::{saturate, saturate_full_rescan, saturate_with, MatchStrategy};
-pub use rewrite::{Rewrite, RewriteCtx, SatStats, SaturationLimits};
+pub use rewrite::{Exhaustion, Rewrite, RewriteCtx, SatStats, SaturationLimits};

@@ -14,6 +14,7 @@ use super::enode::{EGraph, Id};
 use crate::symbolic::{LinExpr, Solver, Truth};
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Kind of a cached solver query (both reduce to a question about `a - b`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -113,15 +114,49 @@ impl Rewrite {
     }
 }
 
+/// Why saturation was cut short by a *hard* resource budget.
+///
+/// Running out of `max_iters` is deliberately NOT an exhaustion: iteration
+/// caps bound rewrite depth by design and the non-saturated fixpoint is
+/// still a sound under-approximation to search in. Exhaustion marks the
+/// two events where the engine had to abandon work it would otherwise have
+/// done — and where a downstream "no clean mapping" must therefore be
+/// reported as `Inconclusive`, never as a refinement failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exhaustion {
+    /// `EGraph::n_nodes` crossed `max_nodes`; the pass aborted mid-apply.
+    NodeBudget,
+    /// The cooperative wall-clock `deadline` passed.
+    Deadline,
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct SaturationLimits {
     pub max_iters: usize,
     pub max_nodes: usize,
+    /// Cooperative wall-clock deadline. Checked at every iteration start
+    /// and periodically inside the apply phase; `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for SaturationLimits {
     fn default() -> Self {
-        SaturationLimits { max_iters: 10, max_nodes: 50_000 }
+        SaturationLimits { max_iters: 10, max_nodes: 50_000, deadline: None }
+    }
+}
+
+impl SaturationLimits {
+    pub fn new(max_iters: usize, max_nodes: usize) -> Self {
+        SaturationLimits { max_iters, max_nodes, deadline: None }
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    fn deadline_passed(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
@@ -131,6 +166,8 @@ pub struct SatStats {
     pub applied: FxHashMap<&'static str, u64>,
     pub iterations: usize,
     pub saturated: bool,
+    /// Set when a hard budget (node cap / deadline) aborted the pass.
+    pub exhausted: Option<Exhaustion>,
 }
 
 impl SatStats {
@@ -140,6 +177,9 @@ impl SatStats {
         }
         self.iterations += other.iterations;
         self.saturated &= other.saturated;
+        if self.exhausted.is_none() {
+            self.exhausted = other.exhausted;
+        }
     }
 
     pub fn total_applications(&self) -> u64 {
@@ -214,6 +254,11 @@ pub fn saturate_with(
     let mut candidates: Vec<Id> = Vec::new();
     let mut matches: Vec<Subst> = Vec::new();
     for iter in 0..limits.max_iters {
+        if limits.deadline_passed() {
+            stats.saturated = false;
+            stats.exhausted = Some(Exhaustion::Deadline);
+            return stats;
+        }
         stats.iterations = iter + 1;
         // Worklist of classes to re-match; `None` = match everything.
         // Draining even when ignored keeps the touched set bounded.
@@ -273,12 +318,21 @@ pub fn saturate_with(
         }
         // Phase 2: apply.
         let mut changed = false;
-        for (ri, root, subst) in jobs.drain(..) {
+        for (ji, (ri, root, subst)) in jobs.drain(..).enumerate() {
             if eg.n_nodes > limits.max_nodes {
                 stats.saturated = false;
+                stats.exhausted = Some(Exhaustion::NodeBudget);
+                return stats;
+            }
+            // Deadline re-check every few jobs: appliers are cheap
+            // individually but a single iteration can queue thousands.
+            if ji % 8 == 0 && limits.deadline_passed() {
+                stats.saturated = false;
+                stats.exhausted = Some(Exhaustion::Deadline);
                 return stats;
             }
             let rule = &rules[ri];
+            crate::chaos::on_lemma_application(rule.name);
             let equivs = (rule.apply)(eg, &subst, ctx);
             for id in equivs {
                 match eg.union(root, id) {
@@ -295,6 +349,15 @@ pub fn saturate_with(
             }
         }
         eg.rebuild();
+        // A slow applier (or an injected chaos spin) can blow the deadline
+        // between the periodic phase-2 checks; re-check at iteration end so
+        // an overrun is always reported as a Deadline exhaustion and never
+        // as a clean fixpoint.
+        if limits.deadline_passed() {
+            stats.saturated = false;
+            stats.exhausted = Some(Exhaustion::Deadline);
+            return stats;
+        }
         // Identical stopping rule in both strategies (no counted unions),
         // so incremental and full-rescan runs stay comparable job-for-job.
         if !changed {
@@ -383,10 +446,50 @@ mod tests {
             &mut eg,
             &[grow],
             &RewriteCtx::default(),
-            SaturationLimits { max_iters: 3, max_nodes: 100_000 },
+            SaturationLimits::new(3, 100_000),
         );
         assert!(!stats.saturated);
         assert_eq!(stats.iterations, 3);
+        assert_eq!(stats.exhausted, None, "iteration cap is not a hard exhaustion");
+    }
+
+    #[test]
+    fn node_budget_marks_exhaustion() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static COUNTER: AtomicU32 = AtomicU32::new(5000);
+        let grow = Rewrite::new(
+            "grow2",
+            Pat::bind(OpTag::Neg, 0, vec![Pat::var(0)]),
+            |eg, _s, _| {
+                let fresh = COUNTER.fetch_add(1, Ordering::Relaxed);
+                vec![eg.add_leaf(t(fresh), vec![4])]
+            },
+        );
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        eg.add_op(Op::Neg, vec![a]).unwrap();
+        let stats = saturate(
+            &mut eg,
+            &[grow],
+            &RewriteCtx::default(),
+            SaturationLimits::new(50, 4),
+        );
+        assert!(!stats.saturated);
+        assert_eq!(stats.exhausted, Some(Exhaustion::NodeBudget));
+    }
+
+    #[test]
+    fn elapsed_deadline_marks_exhaustion_before_any_work() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(t(0), vec![4]);
+        let b = eg.add_leaf(t(1), vec![4]);
+        eg.add_op(Op::Add, vec![a, b]).unwrap();
+        let limits =
+            SaturationLimits::default().with_deadline(Some(std::time::Instant::now()));
+        let stats = saturate(&mut eg, &[add_to_sum()], &RewriteCtx::default(), limits);
+        assert!(!stats.saturated);
+        assert_eq!(stats.exhausted, Some(Exhaustion::Deadline));
+        assert_eq!(stats.total_applications(), 0);
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Crash-safe fuzz-campaign journal.
+//!
+//! An append-only JSONL file (`journal.jsonl` in the campaign's `--out`
+//! directory): line 0 is a `config` record pinning the campaign parameters,
+//! every subsequent line is a `seed` record with the full per-seed outcome
+//! (clean verdict, per-mutant outcomes, counterexample summaries). Because
+//! per-seed sampling derives from `case_seed(base, i)` alone, a resumed
+//! campaign that replays journaled records and re-runs only the missing
+//! seeds reconstructs the *byte-identical* final `FUZZ_REPORT.json` of an
+//! uninterrupted run.
+//!
+//! Durability: every append rewrites the whole journal to a temp file in
+//! the same directory, fsyncs it, and atomically renames it over the
+//! previous journal. A `kill -9` therefore leaves either the old or the
+//! new journal, never a torn one; the loader still tolerates a truncated
+//! trailing line (e.g. a journal produced by some other writer) by
+//! dropping it.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+const TMP_FILE: &str = ".journal.jsonl.tmp";
+
+pub struct Journal {
+    dir: PathBuf,
+    /// Full journal contents (header + records), the rewrite buffer.
+    lines: Vec<String>,
+}
+
+impl Journal {
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(JOURNAL_FILE)
+    }
+
+    /// Start a fresh journal with the given campaign-config header,
+    /// replacing any previous journal in `dir`.
+    pub fn create(dir: &Path, header: &Json) -> Result<Journal> {
+        let mut j = Journal { dir: dir.to_path_buf(), lines: vec![header.to_string()] };
+        j.persist()?;
+        Ok(j)
+    }
+
+    /// Load an existing journal: returns the config header, the journaled
+    /// seed records keyed by seed index, and the journal handle positioned
+    /// to append further records.
+    pub fn open(dir: &Path) -> Result<(Json, BTreeMap<u64, Json>, Journal)> {
+        let path = Journal::path_in(dir);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading fuzz journal {}", path.display()))?;
+        let mut lines: Vec<String> = Vec::new();
+        let mut header: Option<Json> = None;
+        let mut records: BTreeMap<u64, Json> = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Ok(j) = Json::parse(line) else {
+                // torn tail from a non-atomic writer — drop it and
+                // everything after (records are strictly sequential)
+                break;
+            };
+            match j.get("type").as_str() {
+                Some("config") if ln == 0 => {
+                    header = Some(j);
+                }
+                Some("seed") => {
+                    let Some(idx) = j.get("index").as_usize() else { break };
+                    records.insert(idx as u64, j);
+                }
+                _ => bail!(
+                    "{}: line {} is neither a config header nor a seed record",
+                    path.display(),
+                    ln + 1
+                ),
+            }
+            lines.push(line.to_string());
+        }
+        let header = header
+            .with_context(|| format!("{}: missing config header line", path.display()))?;
+        Ok((header, records, Journal { dir: dir.to_path_buf(), lines }))
+    }
+
+    /// Append one seed record durably (write temp + fsync + atomic rename).
+    pub fn append(&mut self, record: &Json) -> Result<()> {
+        self.lines.push(record.to_string());
+        self.persist()
+    }
+
+    fn persist(&self) -> Result<()> {
+        let tmp = self.dir.join(TMP_FILE);
+        let path = Journal::path_in(&self.dir);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            for line in &self.lines {
+                f.write_all(line.as_bytes())?;
+                f.write_all(b"\n")?;
+            }
+            f.sync_all().context("fsyncing fuzz journal")?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gg_journal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn header() -> Json {
+        Json::obj(vec![
+            ("type", Json::str("config")),
+            ("seeds", Json::num(4.0)),
+            ("base_seed", Json::str("0x0")),
+        ])
+    }
+
+    fn seed_rec(i: u64) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("seed")),
+            ("index", Json::num(i as f64)),
+            ("clean", Json::str("verified")),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_create_append_open() {
+        let d = tmpdir("roundtrip");
+        let mut j = Journal::create(&d, &header()).unwrap();
+        j.append(&seed_rec(0)).unwrap();
+        j.append(&seed_rec(1)).unwrap();
+        let (h, recs, mut j2) = Journal::open(&d).unwrap();
+        assert_eq!(h.get("type").as_str(), Some("config"));
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[&1].get("clean").as_str(), Some("verified"));
+        // appending through the reopened handle keeps earlier records
+        j2.append(&seed_rec(2)).unwrap();
+        let (_, recs, _) = Journal::open(&d).unwrap();
+        assert_eq!(recs.len(), 3);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_not_fatal() {
+        let d = tmpdir("torn");
+        let mut j = Journal::create(&d, &header()).unwrap();
+        j.append(&seed_rec(0)).unwrap();
+        // simulate a non-atomic writer dying mid-line
+        let path = Journal::path_in(&d);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"type\":\"seed\",\"index\":1,\"clean\":\"ver");
+        std::fs::write(&path, text).unwrap();
+        let (_, recs, _) = Journal::open(&d).unwrap();
+        assert_eq!(recs.len(), 1, "torn record dropped");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_journal_is_clean_error() {
+        let d = tmpdir("missing");
+        let err = Journal::open(&d).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("journal"), "{msg}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn garbage_header_is_clean_error() {
+        let d = tmpdir("garbage");
+        std::fs::write(Journal::path_in(&d), "{\"type\":\"seed\",\"index\":0}\n").unwrap();
+        let err = Journal::open(&d).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("config header") || msg.contains("neither"), "{msg}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

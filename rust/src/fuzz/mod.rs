@@ -28,11 +28,18 @@
 //!    certificate must replay. Disagreements are minimized and dumped as
 //!    replayable JSON counterexamples, byte-identical per seed.
 //!
+//! Campaigns are crash-safe: every completed seed is appended durably to
+//! an on-disk [`journal`] (`journal.jsonl` in the `--out` directory), and
+//! `graphguard fuzz --resume DIR` replays the journal and continues with
+//! the remaining seeds, reproducing the byte-identical final report of an
+//! uninterrupted run.
+//!
 //! CLI: `graphguard fuzz --seeds N --seed S [--ranks R] [--mutants M]
 //! [--out DIR] [--flavor F]`, plus `--replay FILE` for counterexample
-//! files.
+//! files and `--resume DIR` for interrupted campaigns.
 
 pub mod genmodel;
+pub mod journal;
 pub mod mutate;
 pub mod oracle;
 
@@ -43,4 +50,7 @@ pub use mutate::{
     applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, MutKind, Mutation,
     Site, MUT_KINDS,
 };
-pub use oracle::{replay_counterexample, run_fuzz, FuzzConfig, FuzzReport, MutOutcome, OpStat};
+pub use journal::Journal;
+pub use oracle::{
+    replay_counterexample, resume_config, run_fuzz, FuzzConfig, FuzzReport, MutOutcome, OpStat,
+};

@@ -19,17 +19,20 @@
 //! seed reproduces byte-identical counterexample files.
 
 use super::genmodel::{build_pair, sample_spec_for, Flavor, ModelSpec};
+use super::journal::Journal;
 use super::mutate::{
     applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, Mutation, Site,
 };
-use crate::infer::{check_refinement, verify_numeric, InferConfig};
+use crate::infer::{
+    check_refinement_escalating, verify_numeric, EscalationPolicy, InferConfig, Verdict,
+};
 use crate::ir::Graph;
 use crate::relation::Relation;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
 pub struct FuzzConfig {
@@ -41,14 +44,22 @@ pub struct FuzzConfig {
     pub ranks: usize,
     /// Max mutants attempted per model.
     pub mutants_per_model: usize,
-    /// Directory for counterexample JSON files.
+    /// Directory for counterexample JSON files and the campaign journal.
     pub out_dir: PathBuf,
-    /// Write counterexample files (tests disable this).
+    /// Write counterexample files + journal (tests disable this).
     pub write_files: bool,
     /// Restrict the campaign to one strategy flavor (`--flavor`); the rng
     /// stream is consumed exactly as in mixed sampling, so per-seed block
     /// and shape draws stay comparable across campaigns.
     pub flavor: Option<Flavor>,
+    /// Resume from `out_dir`'s journal: replay journaled seeds into the
+    /// report without re-running them, then continue with the rest. The
+    /// journal's config header must match this config.
+    pub resume: bool,
+    /// Crash drill: stop after journaling this many *newly processed*
+    /// seeds, returning a report flagged `aborted` (simulates a mid-run
+    /// `kill -9` at a deterministic point; used by the resume smoke test).
+    pub abort_after: Option<u64>,
 }
 
 impl Default for FuzzConfig {
@@ -61,8 +72,69 @@ impl Default for FuzzConfig {
             out_dir: PathBuf::from("fuzz_counterexamples"),
             write_files: true,
             flavor: None,
+            resume: false,
+            abort_after: None,
         }
     }
+}
+
+impl FuzzConfig {
+    /// The journal `config` header pinning this campaign's identity.
+    /// `base_seed` is a hex string (u64 does not fit losslessly in the
+    /// JSON number type).
+    pub fn journal_header(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("config")),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("base_seed", Json::str(format!("{:#x}", self.base_seed))),
+            ("ranks", Json::num(self.ranks as f64)),
+            ("mutants_per_model", Json::num(self.mutants_per_model as f64)),
+            (
+                "flavor",
+                self.flavor.map(|f| Json::str(f.name())).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Reconstruct a resumable campaign config from the journal in `dir`
+/// (the CLI's `fuzz --resume <dir>` entrypoint).
+pub fn resume_config(dir: &Path) -> Result<FuzzConfig> {
+    let (header, _, _) = Journal::open(dir)?;
+    let field = |k: &str| -> Result<u64> {
+        header
+            .get(k)
+            .as_usize()
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow!("journal header missing numeric field '{k}'"))
+    };
+    let base_seed_str = header
+        .get("base_seed")
+        .as_str()
+        .ok_or_else(|| anyhow!("journal header missing 'base_seed'"))?;
+    let base_seed = u64::from_str_radix(base_seed_str.trim_start_matches("0x"), 16)
+        .map_err(|_| anyhow!("journal header: bad base_seed '{base_seed_str}'"))?;
+    let flavor = match header.get("flavor") {
+        Json::Null => None,
+        f => {
+            let name = f.as_str().ok_or_else(|| anyhow!("journal header: bad 'flavor'"))?;
+            Some(
+                Flavor::parse(name)
+                    .ok_or_else(|| anyhow!("journal header: unknown flavor '{name}'"))?,
+            )
+        }
+    };
+    Ok(FuzzConfig {
+        seeds: field("seeds")?,
+        base_seed,
+        ranks: field("ranks")? as usize,
+        mutants_per_model: field("mutants_per_model")? as usize,
+        out_dir: dir.to_path_buf(),
+        write_files: true,
+        flavor,
+        resume: true,
+        abort_after: None,
+    })
 }
 
 /// splitmix-style per-case seed derivation (decorrelates nearby cases).
@@ -73,10 +145,15 @@ fn case_seed(base: u64, i: u64) -> u64 {
 /// What happened to one clean pair.
 enum CleanOutcome {
     Verified,
-    /// `check_refinement` rejected a correct-by-construction pair.
+    /// The checker rejected a correct-by-construction pair.
     FalseAlarm(String),
     /// Accepted, but the inferred relation fails numeric replay.
     CertFailure(String),
+    /// Budgets ran out on a correct-by-construction pair at the oracle's
+    /// (escalated) default budgets — a soundness-of-service violation
+    /// distinct from a detection miss: the engine failed to do its job on
+    /// a clean input. Counted against `FuzzReport::sound`.
+    Inconclusive { reason: &'static str, detail: String },
 }
 
 /// What happened to one mutant.
@@ -98,6 +175,10 @@ pub enum MutOutcome {
     /// Numerics changed, checker accepted, and the certificate fails:
     /// a genuine soundness hole.
     FalseProof(String),
+    /// Budgets ran out on the mutant. A coverage loss (the mutant's fate
+    /// is unknown), not a soundness violation — unlike a clean-pair
+    /// `Inconclusive`, nothing was asserted that might be false.
+    Inconclusive(&'static str),
 }
 
 impl MutOutcome {
@@ -109,6 +190,7 @@ impl MutOutcome {
             MutOutcome::SilentAccepted => "silent_accepted",
             MutOutcome::SilentRejected => "silent_rejected",
             MutOutcome::FalseProof(_) => "false_proof",
+            MutOutcome::Inconclusive(_) => "inconclusive",
         }
     }
 }
@@ -124,6 +206,7 @@ pub struct OpStat {
     pub silent_accepted: u64,
     pub silent_rejected: u64,
     pub false_proof: u64,
+    pub inconclusive: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -140,10 +223,17 @@ pub struct FuzzReport {
     pub clean_verified: u64,
     pub false_alarms: u64,
     pub clean_cert_failures: u64,
+    /// Clean pairs on which the (escalated) default budgets ran out — a
+    /// soundness-of-service violation, see [`FuzzReport::sound`].
+    pub clean_inconclusive: u64,
     /// Per-mutation-operator outcome counts — the single source of truth
     /// for every mutant-level aggregate (see the derived methods below).
     pub per_op: BTreeMap<String, OpStat>,
     pub counterexamples: Vec<CexSummary>,
+    /// Set when the campaign stopped early via `FuzzConfig::abort_after`
+    /// (crash drill). Deliberately NOT serialized: an aborted report is
+    /// never written as a final `FUZZ_REPORT.json`.
+    pub aborted: bool,
 }
 
 impl FuzzReport {
@@ -179,13 +269,21 @@ impl FuzzReport {
     pub fn false_proofs(&self) -> u64 {
         self.sum(|s| s.false_proof)
     }
+    /// Mutants whose verdict the budgets could not decide (coverage loss,
+    /// not a soundness violation).
+    pub fn mutants_inconclusive(&self) -> u64 {
+        self.sum(|s| s.inconclusive)
+    }
 
-    /// Zero false proofs, zero false alarms, zero mislocalizations, and no
+    /// Zero false proofs, zero false alarms, zero mislocalizations, no
     /// oracle-evaluation failures (a rebuilt, validated mutant that cannot
-    /// be executed means the harness itself is broken).
+    /// be executed means the harness itself is broken), and no clean pair
+    /// starved into `Inconclusive` at default budgets. Mutant-side
+    /// `Inconclusive` is a coverage metric, not a soundness one.
     pub fn sound(&self) -> bool {
         self.false_alarms == 0
             && self.clean_cert_failures == 0
+            && self.clean_inconclusive == 0
             && self.false_proofs() == 0
             && self.locus_misses() == 0
             && self.eval_failures() == 0
@@ -208,6 +306,7 @@ impl FuzzReport {
                         ("silent_accepted", Json::num(s.silent_accepted as f64)),
                         ("silent_rejected", Json::num(s.silent_rejected as f64)),
                         ("false_proof", Json::num(s.false_proof as f64)),
+                        ("inconclusive", Json::num(s.inconclusive as f64)),
                     ]),
                 )
             })
@@ -217,6 +316,7 @@ impl FuzzReport {
             ("clean_verified", Json::num(self.clean_verified as f64)),
             ("false_alarms", Json::num(self.false_alarms as f64)),
             ("clean_cert_failures", Json::num(self.clean_cert_failures as f64)),
+            ("clean_inconclusive", Json::num(self.clean_inconclusive as f64)),
             ("mutants_attempted", Json::num(self.mutants_attempted() as f64)),
             ("stillborn", Json::num(self.stillborn() as f64)),
             ("eval_failures", Json::num(self.eval_failures() as f64)),
@@ -226,6 +326,7 @@ impl FuzzReport {
             ("silent_accepted", Json::num(self.silent_accepted() as f64)),
             ("silent_rejected", Json::num(self.silent_rejected() as f64)),
             ("false_proofs", Json::num(self.false_proofs() as f64)),
+            ("mutants_inconclusive", Json::num(self.mutants_inconclusive() as f64)),
             ("sound", Json::Bool(self.sound())),
             ("per_operator", Json::Obj(per_op)),
             (
@@ -251,13 +352,18 @@ impl FuzzReport {
     pub fn table(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "fuzz: {} models | clean verified {} | false alarms {} | cert failures {}\n",
-            self.models, self.clean_verified, self.false_alarms, self.clean_cert_failures
+            "fuzz: {} models | clean verified {} | false alarms {} | cert failures {} | \
+             clean inconclusive {}\n",
+            self.models,
+            self.clean_verified,
+            self.false_alarms,
+            self.clean_cert_failures,
+            self.clean_inconclusive
         ));
         s.push_str(&format!(
             "mutants: {} attempted | {} stillborn | {} eval-failures | {} killed-in-region | \
              {} locus-miss | {} benign | {} silent-accepted | {} silent-rejected | \
-             {} FALSE PROOFS\n",
+             {} inconclusive | {} FALSE PROOFS\n",
             self.mutants_attempted(),
             self.stillborn(),
             self.eval_failures(),
@@ -266,16 +372,17 @@ impl FuzzReport {
             self.benign_accepted(),
             self.silent_accepted(),
             self.silent_rejected(),
+            self.mutants_inconclusive(),
             self.false_proofs()
         ));
         s.push_str(&format!(
-            "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6}\n",
+            "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6} {:>6}\n",
             "operator", "tried", "still", "evalx", "killed", "miss", "benign", "sil-ok",
-            "sil-rej", "false"
+            "sil-rej", "inconc", "false"
         ));
         for (name, st) in &self.per_op {
             s.push_str(&format!(
-                "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6}\n",
+                "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6} {:>6}\n",
                 name,
                 st.attempted,
                 st.stillborn,
@@ -285,6 +392,7 @@ impl FuzzReport {
                 st.benign_accepted,
                 st.silent_accepted,
                 st.silent_rejected,
+                st.inconclusive,
                 st.false_proof
             ));
         }
@@ -329,9 +437,12 @@ fn clean_outcome(
     seed: u64,
     icfg: &InferConfig,
 ) -> CleanOutcome {
-    match check_refinement(gs, gd, ri, icfg) {
-        Err(e) => CleanOutcome::FalseAlarm(format!("{e}")),
-        Ok(out) => {
+    match check_refinement_escalating(gs, gd, ri, icfg, &EscalationPolicy::default()).0 {
+        Verdict::Refuted(e) => CleanOutcome::FalseAlarm(format!("{e}")),
+        Verdict::Inconclusive(i) => {
+            CleanOutcome::Inconclusive { reason: i.reason.tag(), detail: format!("{i}") }
+        }
+        Verdict::Verified(out) => {
             if certificate_ok(gs, gd, ri, &out.relation, seed) {
                 CleanOutcome::Verified
             } else {
@@ -370,8 +481,8 @@ fn classify_mutant(
 ) -> Result<MutOutcome> {
     let differs = outputs_differ(gd, gd_mut, seed ^ 0xD1FF, 3)
         .context("evaluating mutant numerically")?;
-    match check_refinement(gs, gd_mut, ri, icfg) {
-        Ok(out) => {
+    match check_refinement_escalating(gs, gd_mut, ri, icfg, &EscalationPolicy::default()).0 {
+        Verdict::Verified(out) => {
             if certificate_ok(gs, gd_mut, ri, &out.relation, seed ^ 0xCE57) {
                 Ok(if differs { MutOutcome::BenignAccepted } else { MutOutcome::SilentAccepted })
             } else {
@@ -382,7 +493,8 @@ fn classify_mutant(
                 )))
             }
         }
-        Err(e) => {
+        Verdict::Inconclusive(i) => Ok(MutOutcome::Inconclusive(i.reason.tag())),
+        Verdict::Refuted(e) => {
             if !differs {
                 return Ok(MutOutcome::SilentRejected);
             }
@@ -407,6 +519,8 @@ enum BadKind {
     LocusMiss,
     /// A rebuilt, validated mutant failed concrete evaluation.
     EvalFailure,
+    /// Default (escalated) budgets starved out on a clean pair.
+    CleanInconclusive,
 }
 
 impl BadKind {
@@ -417,6 +531,7 @@ impl BadKind {
             BadKind::FalseProof => "false_proof",
             BadKind::LocusMiss => "locus_miss",
             BadKind::EvalFailure => "eval_failure",
+            BadKind::CleanInconclusive => "clean_inconclusive",
         }
     }
 }
@@ -434,6 +549,7 @@ fn evaluate_candidate(
         None => match clean_outcome(&gs, &gd, &ri, seed, icfg) {
             CleanOutcome::FalseAlarm(_) => Some(BadKind::FalseAlarm),
             CleanOutcome::CertFailure(_) => Some(BadKind::CertFailure),
+            CleanOutcome::Inconclusive { .. } => Some(BadKind::CleanInconclusive),
             CleanOutcome::Verified => None,
         },
         Some(m) => {
@@ -468,6 +584,9 @@ fn describe_candidate(
         None => match clean_outcome(&gs, &gd, &ri, seed, icfg) {
             CleanOutcome::FalseAlarm(d) if kind == BadKind::FalseAlarm => Some(d),
             CleanOutcome::CertFailure(d) if kind == BadKind::CertFailure => Some(d),
+            CleanOutcome::Inconclusive { detail, .. } if kind == BadKind::CleanInconclusive => {
+                Some(detail)
+            }
             _ => None,
         },
         Some(m) => {
@@ -623,169 +742,348 @@ impl Counterexample {
 }
 
 /// Run the fuzzer. Deterministic per config; returns the aggregate report.
+///
+/// Crash safety: with `write_files` on, every completed seed is journaled
+/// durably before the next one starts, and `resume` replays the journal
+/// instead of re-running those seeds. Because each case derives everything
+/// from `case_seed(base_seed, i)` and seeds are processed in order, a
+/// killed-and-resumed campaign produces a final report byte-identical to
+/// an uninterrupted run's.
 pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport> {
     let icfg = InferConfig::default();
     let mut report = FuzzReport::default();
-    if cfg.write_files {
+    if cfg.resume && !cfg.write_files {
+        bail!("fuzz resume needs the on-disk journal (write_files is off)");
+    }
+    let mut done: BTreeMap<u64, Json> = BTreeMap::new();
+    let mut journal = if cfg.write_files {
         std::fs::create_dir_all(&cfg.out_dir)
             .with_context(|| format!("creating {}", cfg.out_dir.display()))?;
-    }
+        if cfg.resume {
+            let (header, recs, j) = Journal::open(&cfg.out_dir)?;
+            let want = cfg.journal_header();
+            if header.to_string() != want.to_string() {
+                bail!(
+                    "journal in {} belongs to a different campaign config\n  journal: {}\n  \
+                     requested: {}\nrefusing to resume",
+                    cfg.out_dir.display(),
+                    header.to_string(),
+                    want.to_string()
+                );
+            }
+            done = recs;
+            Some(j)
+        } else {
+            Some(Journal::create(&cfg.out_dir, &cfg.journal_header())?)
+        }
+    } else {
+        None
+    };
 
+    let mut fresh = 0u64; // seeds newly processed (not replayed) this run
     for i in 0..cfg.seeds {
-        let cs = case_seed(cfg.base_seed, i);
-        let mut rng = Rng::new(cs);
-        let ranks =
-            if cfg.ranks == 0 { [2usize, 2, 2, 4][rng.below(4) as usize] } else { cfg.ranks };
-        let spec = sample_spec_for(&mut rng, ranks, cs, cfg.flavor);
-        let (gs, gd, ri) =
-            build_pair(&spec).with_context(|| format!("building case {i} (seed {cs:#x})"))?;
-        report.models += 1;
-
-        match clean_outcome(&gs, &gd, &ri, cs, &icfg) {
-            CleanOutcome::Verified => report.clean_verified += 1,
-            CleanOutcome::FalseAlarm(detail) => {
-                report.false_alarms += 1;
-                record_cex(
-                    &mut report,
-                    cfg,
-                    Counterexample {
-                        kind: BadKind::FalseAlarm,
-                        case_seed: cs,
-                        mut_index: 0,
-                        detail,
-                        spec: spec.clone(),
-                        mutation: None,
-                    },
-                    cs,
-                    &icfg,
-                )?;
-                continue; // mutant verdicts are meaningless on a bad clean pair
-            }
-            CleanOutcome::CertFailure(detail) => {
-                report.clean_cert_failures += 1;
-                record_cex(
-                    &mut report,
-                    cfg,
-                    Counterexample {
-                        kind: BadKind::CertFailure,
-                        case_seed: cs,
-                        mut_index: 0,
-                        detail,
-                        spec: spec.clone(),
-                        mutation: None,
-                    },
-                    cs,
-                    &icfg,
-                )?;
-                continue;
-            }
+        if let Some(rec) = done.get(&i) {
+            replay_seed_record(&mut report, rec)
+                .with_context(|| format!("replaying journaled seed {i}"))?;
+            continue;
         }
-
-        // pick up to `mutants_per_model` distinct sites (partial
-        // Fisher-Yates on indices, deterministic in `rng`)
-        let sites = applicable_sites(&gd);
-        let take = cfg.mutants_per_model.min(sites.len());
-        let mut idx: Vec<usize> = (0..sites.len()).collect();
-        for k in 0..take {
-            let j = k + rng.below((idx.len() - k) as u64) as usize;
-            idx.swap(k, j);
+        if cfg.abort_after.is_some_and(|n| fresh >= n) {
+            report.aborted = true;
+            return Ok(report);
         }
-
-        for (mi, &si) in idx[..take].iter().enumerate() {
-            let site: Site = sites[si];
-            bump(&mut report.per_op, site.kind, |s| s.attempted += 1);
-            let (gd_mut, mutation) = match apply_mutation(&gd, site) {
-                Ok(x) => x,
-                Err(_) => {
-                    bump(&mut report.per_op, site.kind, |s| s.stillborn += 1);
-                    continue;
-                }
-            };
-            let outcome = match classify_mutant(
-                &gs,
-                &gd,
-                &ri,
-                &gd_mut,
-                &mutation,
-                spec.blocks.len(),
-                cs,
-                &icfg,
-            ) {
-                Ok(o) => o,
-                Err(err) => {
-                    // a validated mutant that cannot be evaluated is a
-                    // harness bug: tracked separately from type-check
-                    // stillborns, counted against soundness, and dumped as
-                    // a debuggable counterexample like any other violation
-                    bump(&mut report.per_op, site.kind, |s| s.eval_failure += 1);
-                    record_cex(
-                        &mut report,
-                        cfg,
-                        Counterexample {
-                            kind: BadKind::EvalFailure,
-                            case_seed: cs,
-                            mut_index: mi + 1,
-                            detail: format!("{err:#}"),
-                            spec: spec.clone(),
-                            mutation: Some(mutation.clone()),
-                        },
-                        cs,
-                        &icfg,
-                    )?;
-                    continue;
-                }
-            };
-            match &outcome {
-                MutOutcome::KilledInRegion => {
-                    bump(&mut report.per_op, site.kind, |s| s.killed_in_region += 1);
-                }
-                MutOutcome::BenignAccepted => {
-                    bump(&mut report.per_op, site.kind, |s| s.benign_accepted += 1);
-                }
-                MutOutcome::SilentAccepted => {
-                    bump(&mut report.per_op, site.kind, |s| s.silent_accepted += 1);
-                }
-                MutOutcome::SilentRejected => {
-                    bump(&mut report.per_op, site.kind, |s| s.silent_rejected += 1);
-                }
-                MutOutcome::LocusMiss(detail) => {
-                    bump(&mut report.per_op, site.kind, |s| s.locus_miss += 1);
-                    record_cex(
-                        &mut report,
-                        cfg,
-                        Counterexample {
-                            kind: BadKind::LocusMiss,
-                            case_seed: cs,
-                            mut_index: mi + 1,
-                            detail: detail.clone(),
-                            spec: spec.clone(),
-                            mutation: Some(mutation.clone()),
-                        },
-                        cs,
-                        &icfg,
-                    )?;
-                }
-                MutOutcome::FalseProof(detail) => {
-                    bump(&mut report.per_op, site.kind, |s| s.false_proof += 1);
-                    record_cex(
-                        &mut report,
-                        cfg,
-                        Counterexample {
-                            kind: BadKind::FalseProof,
-                            case_seed: cs,
-                            mut_index: mi + 1,
-                            detail: detail.clone(),
-                            spec: spec.clone(),
-                            mutation: Some(mutation.clone()),
-                        },
-                        cs,
-                        &icfg,
-                    )?;
-                }
-            }
+        let record = run_seed(cfg, &icfg, i, &mut report)?;
+        if let Some(j) = journal.as_mut() {
+            j.append(&record)?;
         }
+        fresh += 1;
     }
     Ok(report)
+}
+
+/// Process one fuzz case end-to-end, updating `report`, and return the
+/// seed's journal record (clean verdict tag, per-mutant outcomes, and the
+/// counterexample summaries it contributed).
+fn run_seed(
+    cfg: &FuzzConfig,
+    icfg: &InferConfig,
+    i: u64,
+    report: &mut FuzzReport,
+) -> Result<Json> {
+    let cs = case_seed(cfg.base_seed, i);
+    let cex_start = report.counterexamples.len();
+    let mut rng = Rng::new(cs);
+    let ranks =
+        if cfg.ranks == 0 { [2usize, 2, 2, 4][rng.below(4) as usize] } else { cfg.ranks };
+    let spec = sample_spec_for(&mut rng, ranks, cs, cfg.flavor);
+    let (gs, gd, ri) =
+        build_pair(&spec).with_context(|| format!("building case {i} (seed {cs:#x})"))?;
+    report.models += 1;
+
+    let clean_tag: &'static str;
+    let mut mutant_events: Vec<(&'static str, &'static str)> = Vec::new();
+    match clean_outcome(&gs, &gd, &ri, cs, icfg) {
+        // mutant verdicts are meaningless on a bad clean pair, so every
+        // non-Verified arm skips the mutant loop
+        CleanOutcome::FalseAlarm(detail) => {
+            report.false_alarms += 1;
+            clean_tag = "false_alarm";
+            record_cex(
+                report,
+                cfg,
+                Counterexample {
+                    kind: BadKind::FalseAlarm,
+                    case_seed: cs,
+                    mut_index: 0,
+                    detail,
+                    spec: spec.clone(),
+                    mutation: None,
+                },
+                cs,
+                icfg,
+            )?;
+        }
+        CleanOutcome::CertFailure(detail) => {
+            report.clean_cert_failures += 1;
+            clean_tag = "cert_failure";
+            record_cex(
+                report,
+                cfg,
+                Counterexample {
+                    kind: BadKind::CertFailure,
+                    case_seed: cs,
+                    mut_index: 0,
+                    detail,
+                    spec: spec.clone(),
+                    mutation: None,
+                },
+                cs,
+                icfg,
+            )?;
+        }
+        CleanOutcome::Inconclusive { detail, .. } => {
+            report.clean_inconclusive += 1;
+            clean_tag = "inconclusive";
+            record_cex(
+                report,
+                cfg,
+                Counterexample {
+                    kind: BadKind::CleanInconclusive,
+                    case_seed: cs,
+                    mut_index: 0,
+                    detail,
+                    spec: spec.clone(),
+                    mutation: None,
+                },
+                cs,
+                icfg,
+            )?;
+        }
+        CleanOutcome::Verified => {
+            report.clean_verified += 1;
+            clean_tag = "verified";
+
+            // pick up to `mutants_per_model` distinct sites (partial
+            // Fisher-Yates on indices, deterministic in `rng`)
+            let sites = applicable_sites(&gd);
+            let take = cfg.mutants_per_model.min(sites.len());
+            let mut idx: Vec<usize> = (0..sites.len()).collect();
+            for k in 0..take {
+                let j = k + rng.below((idx.len() - k) as u64) as usize;
+                idx.swap(k, j);
+            }
+
+            for (mi, &si) in idx[..take].iter().enumerate() {
+                let site: Site = sites[si];
+                bump(&mut report.per_op, site.kind, |s| s.attempted += 1);
+                let (gd_mut, mutation) = match apply_mutation(&gd, site) {
+                    Ok(x) => x,
+                    Err(_) => {
+                        bump(&mut report.per_op, site.kind, |s| s.stillborn += 1);
+                        mutant_events.push((site.kind.name(), "stillborn"));
+                        continue;
+                    }
+                };
+                let outcome = match classify_mutant(
+                    &gs,
+                    &gd,
+                    &ri,
+                    &gd_mut,
+                    &mutation,
+                    spec.blocks.len(),
+                    cs,
+                    icfg,
+                ) {
+                    Ok(o) => o,
+                    Err(err) => {
+                        // a validated mutant that cannot be evaluated is a
+                        // harness bug: tracked separately from type-check
+                        // stillborns, counted against soundness, and dumped
+                        // as a debuggable counterexample like any other
+                        // violation
+                        bump(&mut report.per_op, site.kind, |s| s.eval_failure += 1);
+                        mutant_events.push((site.kind.name(), "eval_failure"));
+                        record_cex(
+                            report,
+                            cfg,
+                            Counterexample {
+                                kind: BadKind::EvalFailure,
+                                case_seed: cs,
+                                mut_index: mi + 1,
+                                detail: format!("{err:#}"),
+                                spec: spec.clone(),
+                                mutation: Some(mutation.clone()),
+                            },
+                            cs,
+                            icfg,
+                        )?;
+                        continue;
+                    }
+                };
+                mutant_events.push((site.kind.name(), outcome.tag()));
+                match &outcome {
+                    MutOutcome::KilledInRegion => {
+                        bump(&mut report.per_op, site.kind, |s| s.killed_in_region += 1);
+                    }
+                    MutOutcome::BenignAccepted => {
+                        bump(&mut report.per_op, site.kind, |s| s.benign_accepted += 1);
+                    }
+                    MutOutcome::SilentAccepted => {
+                        bump(&mut report.per_op, site.kind, |s| s.silent_accepted += 1);
+                    }
+                    MutOutcome::SilentRejected => {
+                        bump(&mut report.per_op, site.kind, |s| s.silent_rejected += 1);
+                    }
+                    MutOutcome::Inconclusive(_) => {
+                        // unknown verdict = coverage loss, not a violation;
+                        // no counterexample to dump
+                        bump(&mut report.per_op, site.kind, |s| s.inconclusive += 1);
+                    }
+                    MutOutcome::LocusMiss(detail) => {
+                        bump(&mut report.per_op, site.kind, |s| s.locus_miss += 1);
+                        record_cex(
+                            report,
+                            cfg,
+                            Counterexample {
+                                kind: BadKind::LocusMiss,
+                                case_seed: cs,
+                                mut_index: mi + 1,
+                                detail: detail.clone(),
+                                spec: spec.clone(),
+                                mutation: Some(mutation.clone()),
+                            },
+                            cs,
+                            icfg,
+                        )?;
+                    }
+                    MutOutcome::FalseProof(detail) => {
+                        bump(&mut report.per_op, site.kind, |s| s.false_proof += 1);
+                        record_cex(
+                            report,
+                            cfg,
+                            Counterexample {
+                                kind: BadKind::FalseProof,
+                                case_seed: cs,
+                                mut_index: mi + 1,
+                                detail: detail.clone(),
+                                spec: spec.clone(),
+                                mutation: Some(mutation.clone()),
+                            },
+                            cs,
+                            icfg,
+                        )?;
+                    }
+                }
+            }
+        }
+    }
+
+    let cex: Vec<Json> = report.counterexamples[cex_start..]
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("file", Json::str(c.file.clone())),
+                ("kind", Json::str(c.kind.clone())),
+                ("case_seed", Json::str(format!("{:#018x}", c.case_seed))),
+                ("detail", Json::str(c.detail.clone())),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("type", Json::str("seed")),
+        ("index", Json::num(i as f64)),
+        ("case_seed", Json::str(format!("{:#018x}", cs))),
+        ("clean", Json::str(clean_tag)),
+        (
+            "mutants",
+            Json::Arr(
+                mutant_events
+                    .into_iter()
+                    .map(|(op, outcome)| {
+                        Json::obj(vec![
+                            ("op", Json::str(op)),
+                            ("outcome", Json::str(outcome)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("cex", Json::Arr(cex)),
+    ]))
+}
+
+/// Re-apply one journaled seed record to the report — the resume path's
+/// replacement for `run_seed`. Must bump exactly the counters `run_seed`
+/// bumps for the same outcomes, or a resumed report diverges from an
+/// uninterrupted one.
+fn replay_seed_record(report: &mut FuzzReport, rec: &Json) -> Result<()> {
+    report.models += 1;
+    let clean = rec
+        .get("clean")
+        .as_str()
+        .ok_or_else(|| anyhow!("seed record missing 'clean' tag"))?;
+    match clean {
+        "verified" => report.clean_verified += 1,
+        "false_alarm" => report.false_alarms += 1,
+        "cert_failure" => report.clean_cert_failures += 1,
+        "inconclusive" => report.clean_inconclusive += 1,
+        other => bail!("seed record: unknown clean outcome '{other}'"),
+    }
+    for m in rec.get("mutants").as_arr().unwrap_or(&[]) {
+        let op = m.get("op").as_str().ok_or_else(|| anyhow!("mutant event missing 'op'"))?;
+        let outcome = m
+            .get("outcome")
+            .as_str()
+            .ok_or_else(|| anyhow!("mutant event missing 'outcome'"))?;
+        let st = report.per_op.entry(op.to_string()).or_default();
+        st.attempted += 1;
+        match outcome {
+            "stillborn" => st.stillborn += 1,
+            "eval_failure" => st.eval_failure += 1,
+            "killed_in_region" => st.killed_in_region += 1,
+            "locus_miss" => st.locus_miss += 1,
+            "benign_accepted" => st.benign_accepted += 1,
+            "silent_accepted" => st.silent_accepted += 1,
+            "silent_rejected" => st.silent_rejected += 1,
+            "false_proof" => st.false_proof += 1,
+            "inconclusive" => st.inconclusive += 1,
+            other => bail!("mutant event: unknown outcome '{other}'"),
+        }
+    }
+    for c in rec.get("cex").as_arr().unwrap_or(&[]) {
+        let field = |k: &str| -> Result<&str> {
+            c.get(k).as_str().ok_or_else(|| anyhow!("cex summary missing '{k}'"))
+        };
+        let seed_str = field("case_seed")?;
+        let case_seed = u64::from_str_radix(seed_str.trim_start_matches("0x"), 16)
+            .map_err(|_| anyhow!("cex summary: bad case_seed '{seed_str}'"))?;
+        report.counterexamples.push(CexSummary {
+            file: field("file")?.to_string(),
+            kind: field("kind")?.to_string(),
+            case_seed,
+            detail: field("detail")?.to_string(),
+        });
+    }
+    Ok(())
 }
 
 /// Per-operator stat update helper (keeps `run_fuzz` borrow-friendly).
@@ -849,6 +1147,9 @@ pub fn replay_counterexample(j: &Json) -> Result<String> {
             }
             CleanOutcome::FalseAlarm(d) => Ok(format!("reproduced false alarm: {d}")),
             CleanOutcome::CertFailure(d) => Ok(format!("reproduced certificate failure: {d}")),
+            CleanOutcome::Inconclusive { reason, detail } => {
+                Ok(format!("reproduced clean-pair inconclusive ({reason}): {detail}"))
+            }
         },
         Some(m) => {
             let (gd_mut, m2) = apply_mutation_by_name(&gd, m.kind, &m.node_name)?;

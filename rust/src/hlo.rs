@@ -58,7 +58,10 @@ pub fn parse_hlo_text(text: &str, name: &str) -> Result<Graph> {
                 // broadcast of a tensor is handled as identity when shapes
                 // allow (JAX emits it for bias adds — our binary ops
                 // broadcast natively)
-                let src = &inst.operands[0];
+                let src = inst
+                    .operands
+                    .first()
+                    .ok_or_else(|| anyhow!("broadcast '{}' has no operand", inst.name))?;
                 if let Some(&v) = scalar_consts.get(src) {
                     scalar_consts.insert(inst.name.clone(), v);
                 } else if let Some(&t) = ids.get(src) {
@@ -97,22 +100,34 @@ fn lower_op(
     let t = |name: &String| -> Result<TensorId> {
         ids.get(name).copied().ok_or_else(|| anyhow!("unknown operand '{name}'"))
     };
+    // Checked operand access: HLO text is untrusted input, so a truncated
+    // operand list must surface as a parse error, never an index panic.
+    let operand = |i: usize| -> Result<&String> {
+        inst.operands.get(i).ok_or_else(|| {
+            anyhow!(
+                "'{}' ({op}) needs operand #{} but has {}",
+                inst.name,
+                i,
+                inst.operands.len()
+            )
+        })
+    };
     let name = inst.name.as_str();
     Ok(match op {
         "add" | "subtract" | "multiply" | "divide" | "maximum" => {
             // scalar-const operand folds into Scale / AddScalar
-            let (a, b) = (&inst.operands[0], &inst.operands[1]);
+            let (a, b) = (operand(0)?, operand(1)?);
             match (scalars.get(a), scalars.get(b)) {
                 (None, Some(&c)) | (Some(&c), None) => {
                     let tensor = if scalars.contains_key(a) { t(b)? } else { t(a)? };
                     match op {
-                        "add" => g.op(name, Op::AddScalar { c: FBits::new(c) }, vec![tensor]),
+                        "add" => g.add(name, Op::AddScalar { c: FBits::new(c) }, vec![tensor])?,
                         "subtract" if scalars.contains_key(b) => {
-                            g.op(name, Op::AddScalar { c: FBits::new(-c) }, vec![tensor])
+                            g.add(name, Op::AddScalar { c: FBits::new(-c) }, vec![tensor])?
                         }
-                        "multiply" => g.op(name, Op::Scale { c: FBits::new(c) }, vec![tensor]),
+                        "multiply" => g.add(name, Op::Scale { c: FBits::new(c) }, vec![tensor])?,
                         "divide" if scalars.contains_key(b) => {
-                            g.op(name, Op::Scale { c: FBits::new(1.0 / c) }, vec![tensor])
+                            g.add(name, Op::Scale { c: FBits::new(1.0 / c) }, vec![tensor])?
                         }
                         _ => bail!("unsupported scalar-fold for {op}"),
                     }
@@ -129,14 +144,14 @@ fn lower_op(
                 }
             }
         }
-        "negate" => g.op(name, Op::Neg, vec![t(&inst.operands[0])?]),
-        "exponential" => g.op(name, Op::Exp, vec![t(&inst.operands[0])?]),
-        "log" => g.op(name, Op::Log, vec![t(&inst.operands[0])?]),
-        "tanh" => g.op(name, Op::Tanh, vec![t(&inst.operands[0])?]),
-        "sqrt" => g.op(name, Op::Sqrt, vec![t(&inst.operands[0])?]),
-        "rsqrt" => g.op(name, Op::Rsqrt, vec![t(&inst.operands[0])?]),
-        "logistic" => g.op(name, Op::Sigmoid, vec![t(&inst.operands[0])?]),
-        "dot" => g.add(name, Op::MatMul, vec![t(&inst.operands[0])?, t(&inst.operands[1])?])?,
+        "negate" => g.add(name, Op::Neg, vec![t(operand(0)?)?])?,
+        "exponential" => g.add(name, Op::Exp, vec![t(operand(0)?)?])?,
+        "log" => g.add(name, Op::Log, vec![t(operand(0)?)?])?,
+        "tanh" => g.add(name, Op::Tanh, vec![t(operand(0)?)?])?,
+        "sqrt" => g.add(name, Op::Sqrt, vec![t(operand(0)?)?])?,
+        "rsqrt" => g.add(name, Op::Rsqrt, vec![t(operand(0)?)?])?,
+        "logistic" => g.add(name, Op::Sigmoid, vec![t(operand(0)?)?])?,
+        "dot" => g.add(name, Op::MatMul, vec![t(operand(0)?)?, t(operand(1)?)?])?,
         "transpose" => {
             let perm = inst
                 .attr_list("dimensions")
@@ -144,13 +159,13 @@ fn lower_op(
             g.add(
                 name,
                 Op::Transpose { perm: perm.iter().map(|&d| d as usize).collect() },
-                vec![t(&inst.operands[0])?],
+                vec![t(operand(0)?)?],
             )?
         }
         "reshape" => g.add(
             name,
             Op::Reshape { shape: inst.shape.iter().map(|&d| d.into()).collect() },
-            vec![t(&inst.operands[0])?],
+            vec![t(operand(0)?)?],
         )?,
         "concatenate" => {
             let dim = inst
@@ -167,29 +182,48 @@ fn lower_op(
                 .slice_ranges
                 .as_ref()
                 .ok_or_else(|| anyhow!("slice without ranges"))?;
-            let mut cur = t(&inst.operands[0])?;
+            let mut cur = t(operand(0)?)?;
+            let rank = g.shape(cur).len();
+            if ranges.len() > rank {
+                bail!("slice '{name}': {} ranges on a rank-{rank} operand", ranges.len());
+            }
             for (dim, &(a, b)) in ranges.iter().enumerate() {
+                if a < 0 || b < a {
+                    bail!("slice '{name}': bad range [{a}:{b}] in dim {dim}");
+                }
                 if g.shape(cur)[dim] != b - a {
-                    cur = g.slice(&format!("{name}.d{dim}"), cur, dim, a, b);
+                    cur = g.add(
+                        &format!("{name}.d{dim}"),
+                        Op::Slice { dim, start: a.into(), end: b.into() },
+                        vec![cur],
+                    )?;
                 }
             }
-            g.op(name, Op::Identity, vec![cur])
+            g.add(name, Op::Identity, vec![cur])?
         }
         "reduce" => {
-            let dims = inst
+            let mut dims = inst
                 .attr_list("dimensions")
                 .ok_or_else(|| anyhow!("reduce without dimensions"))?;
-            let mut cur = t(&inst.operands[0])?;
+            let mut cur = t(operand(0)?)?;
+            // sorted + deduped so the removed-axis adjustment below cannot
+            // underflow on unsorted or repeated input dimensions
+            dims.sort_unstable();
+            dims.dedup();
+            let rank = g.shape(cur).len() as i64;
+            if let Some(&d) = dims.iter().find(|&&d| d < 0 || d >= rank) {
+                bail!("reduce '{name}': dimension {d} out of range for rank {rank}");
+            }
             let mut removed = 0usize;
             for &d in &dims {
-                cur = g.op(
+                cur = g.add(
                     &format!("{name}.d{d}"),
                     Op::ReduceSum { dim: d as usize - removed, keepdim: false },
                     vec![cur],
-                );
+                )?;
                 removed += 1;
             }
-            g.op(name, Op::Identity, vec![cur])
+            g.add(name, Op::Identity, vec![cur])?
         }
         "custom-call" => {
             let target = inst
@@ -200,7 +234,7 @@ fn lower_op(
                 inst.operands.iter().map(t).collect::<Result<_>>()?;
             g.add(name, Op::Custom { name: target }, parts)?
         }
-        "copy" | "convert" | "bitcast" => g.op(name, Op::Identity, vec![t(&inst.operands[0])?]),
+        "copy" | "convert" | "bitcast" => g.add(name, Op::Identity, vec![t(operand(0)?)?])?,
         other => bail!("unsupported HLO opcode '{other}' — add a lemma/op mapping (§6.5)"),
     })
 }
@@ -474,5 +508,76 @@ ENTRY e {
         let text = "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT w = f32[2]{0} while(p0), condition=c, body=b\n}\n";
         let err = parse_hlo_text(text, "bad").unwrap_err();
         assert!(format!("{err:#}").contains("unsupported HLO opcode"));
+    }
+
+    /// Corrupted-input battery: every malformed module must come back as a
+    /// parse error, never a panic (the CLI feeds this parser untrusted
+    /// files).
+    #[test]
+    fn corrupted_modules_error_instead_of_panicking() {
+        let cases: &[(&str, &str)] = &[
+            (
+                "missing binary operand",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT a = f32[2]{0} add(p0)\n}\n",
+            ),
+            (
+                "unary with no operands",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT n = f32[2]{0} negate()\n}\n",
+            ),
+            (
+                "broadcast with no operand",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT b = f32[2,2]{1,0} broadcast(), dimensions={}\n}\n",
+            ),
+            (
+                "slice with more ranges than rank",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[4,4]{1,0} parameter(0)\n  ROOT s = f32[2,2]{1,0} slice(p0), slice={[0:2], [0:2], [0:1]}\n}\n",
+            ),
+            (
+                "slice with reversed bounds",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[4,4]{1,0} parameter(0)\n  ROOT s = f32[2,4]{1,0} slice(p0), slice={[3:1], [0:4]}\n}\n",
+            ),
+            (
+                "reduce with out-of-range dim",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[4,4]{1,0} parameter(0)\n  ROOT r = f32[4]{0} reduce(p0), dimensions={5}\n}\n",
+            ),
+            (
+                "reduce with negative dim",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[4,4]{1,0} parameter(0)\n  ROOT r = f32[4]{0} reduce(p0), dimensions={-1}\n}\n",
+            ),
+            (
+                "unknown operand name",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT a = f32[2]{0} add(p0, ghost)\n}\n",
+            ),
+            (
+                "instruction with no equals sign",
+                "HloModule m\n\nENTRY e {\n  what even is this line\n}\n",
+            ),
+            (
+                "unbalanced parens",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0\n}\n",
+            ),
+            ("no entry computation", "HloModule m\n\nnothing here\n"),
+            (
+                "garbage shape dims",
+                "HloModule m\n\nENTRY e {\n  p0 = f32[two,three]{1,0} parameter(0)\n}\n",
+            ),
+        ];
+        for (what, text) in cases {
+            let res = parse_hlo_text(text, what);
+            assert!(
+                res.is_err(),
+                "{what}: expected a parse error, got {:?}",
+                res.map(|g| g.num_nodes())
+            );
+        }
+    }
+
+    /// Repeated reduce dimensions must not underflow the removed-axis
+    /// adjustment (they dedup to a single reduction).
+    #[test]
+    fn duplicate_reduce_dims_dedup() {
+        let text = "HloModule m\n\nENTRY e {\n  p0 = f32[4,4]{1,0} parameter(0)\n  ROOT r = f32[4]{0} reduce(p0), dimensions={0,0}\n}\n";
+        let g = parse_hlo_text(text, "dup").unwrap();
+        assert_eq!(g.shape(g.outputs[0]), &[4]);
     }
 }

@@ -11,7 +11,8 @@
 //! operator — the paper's bug-localization output (§6.2).
 
 use crate::egraph::{
-    extract_clean, saturate, CleanCand, EGraph, Id, RewriteCtx, SatStats, SaturationLimits,
+    extract_clean, saturate, CleanCand, EGraph, Exhaustion, Id, RewriteCtx, SatStats,
+    SaturationLimits,
 };
 use crate::expr::{Side, TensorRef};
 use crate::ir::{Graph, NodeId, TensorId};
@@ -20,13 +21,18 @@ use crate::relation::Relation;
 use anyhow::Result;
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::fmt;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct InferConfig {
     pub limits: SaturationLimits,
     /// Max frontier-expansion iterations per operator (Listing 3 loop).
     pub max_frontier_iters: usize,
+    /// Per-region (per-operator) wall-clock budget. Each operator of the
+    /// topological walk gets a fresh deadline; exceeding it yields
+    /// `Verdict::Inconclusive(Timeout)`, never a refutation. `None`
+    /// disables the deadline.
+    pub region_deadline: Option<Duration>,
     /// Numerically re-check the final `R_o` on random inputs (soundness
     /// certificate). Costs one evaluation of both graphs.
     pub check_numeric: bool,
@@ -39,8 +45,9 @@ pub struct InferConfig {
 impl Default for InferConfig {
     fn default() -> Self {
         InferConfig {
-            limits: SaturationLimits { max_iters: 8, max_nodes: 60_000 },
+            limits: SaturationLimits::new(8, 60_000),
             max_frontier_iters: 12,
+            region_deadline: Some(Duration::from_secs(30)),
             check_numeric: false,
             quarantined_channels: Vec::new(),
         }
@@ -58,6 +65,12 @@ pub struct RefinementError {
     pub inputs: Vec<(String, usize, Option<String>)>,
     pub frontier_size: usize,
     pub explored_gd_nodes: usize,
+    /// True when some saturation pass of the walk stopped on the iteration
+    /// cap (or a frontier loop on its cap) before reaching fixpoint. The
+    /// refutation is still the verdict the configured budget supports, but
+    /// an escalation policy may retry it at a larger budget; a refutation
+    /// with `unsaturated == false` is a fixpoint and cannot be improved.
+    pub unsaturated: bool,
 }
 
 impl fmt::Display for RefinementError {
@@ -106,13 +119,162 @@ pub struct InferOutput {
     pub per_node: Vec<NodeTiming>,
 }
 
-/// Listing 1: compute the output relation, iterating operators of `G_s`.
+/// Why inference could not reach a verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InconclusiveReason {
+    /// A region's wall-clock deadline passed (`InferConfig::region_deadline`).
+    Timeout,
+    /// The e-graph node budget (`SaturationLimits::max_nodes`) was exhausted
+    /// and no clean mapping had been found by then.
+    NodeBudget,
+    /// Inference panicked (poisoned lemma applier, internal bug); caught by
+    /// [`check_refinement_isolated`].
+    Panic,
+}
+
+impl InconclusiveReason {
+    pub fn tag(self) -> &'static str {
+        match self {
+            InconclusiveReason::Timeout => "timeout",
+            InconclusiveReason::NodeBudget => "node_budget",
+            InconclusiveReason::Panic => "panic",
+        }
+    }
+}
+
+impl fmt::Display for InconclusiveReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// A resource-exhaustion (or crash) outcome: *neither* a proof *nor* a
+/// refutation. The soundness-of-reporting rule is that this must never be
+/// collapsed into `Refuted` — a budget blowup is not evidence of a bug.
+#[derive(Debug)]
+pub struct Inconclusive {
+    pub reason: InconclusiveReason,
+    /// The `G_s` operator being processed when the budget ran out.
+    pub region: String,
+    /// The relation inferred for the prefix of the walk that did complete —
+    /// useful for resuming or for narrowing a manual investigation.
+    pub partial_relation: Relation,
+    pub detail: String,
+}
+
+impl fmt::Display for Inconclusive {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "refinement INCONCLUSIVE ({}) in region '{}': {} \
+             (raise the saturation budgets or deadline and retry; \
+             this is a resource verdict, not a refutation)",
+            self.reason, self.region, self.detail
+        )
+    }
+}
+
+/// Three-valued inference verdict.
+#[derive(Debug)]
+pub enum Verdict {
+    /// Refinement holds; carries the inferred relation (the certificate).
+    Verified(Box<InferOutput>),
+    /// Refinement fails; carries the localization.
+    Refuted(Box<RefinementError>),
+    /// Budgets ran out or a worker crashed before a verdict was reached.
+    Inconclusive(Box<Inconclusive>),
+}
+
+impl Verdict {
+    /// Stable string tag used by reports, journals, and JSON artifacts.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Verdict::Verified(_) => "verified",
+            Verdict::Refuted(_) => "refuted",
+            Verdict::Inconclusive(i) => match i.reason {
+                InconclusiveReason::Timeout => "inconclusive_timeout",
+                InconclusiveReason::NodeBudget => "inconclusive_node_budget",
+                InconclusiveReason::Panic => "inconclusive_panic",
+            },
+        }
+    }
+
+    pub fn is_verified(&self) -> bool {
+        matches!(self, Verdict::Verified(_))
+    }
+}
+
+std::thread_local! {
+    /// Name of the `G_s` operator currently being processed on this thread,
+    /// so a caught panic can still name its region.
+    static CURRENT_REGION: std::cell::RefCell<String> =
+        const { std::cell::RefCell::new(String::new()) };
+}
+
+/// Listing 1 under a two-valued API, kept for the many call sites (tests,
+/// benches, examples) that run at budgets where exhaustion cannot occur.
+///
+/// Panics on `Inconclusive`: silently mapping a resource verdict onto
+/// either `Ok` or `Err` would be exactly the misreporting this layer
+/// exists to prevent. Budget-sensitive callers use
+/// [`check_refinement_verdict`] / [`check_refinement_isolated`].
 pub fn check_refinement(
     gs: &Graph,
     gd: &Graph,
     ri: &Relation,
     cfg: &InferConfig,
 ) -> Result<InferOutput, RefinementError> {
+    match check_refinement_verdict(gs, gd, ri, cfg) {
+        Verdict::Verified(out) => Ok(*out),
+        Verdict::Refuted(e) => Err(*e),
+        Verdict::Inconclusive(i) => panic!(
+            "check_refinement: {i}\n(two-valued API cannot express Inconclusive — \
+             switch this caller to check_refinement_verdict)"
+        ),
+    }
+}
+
+/// [`check_refinement_verdict`] wrapped in `catch_unwind`: a panicking
+/// lemma applier (or any internal bug) becomes `Inconclusive(Panic)` with
+/// the payload preserved, instead of unwinding into the caller. The
+/// e-graph arena and rewrite context are local to the call, so the
+/// poisoned state is dropped, not reused.
+pub fn check_refinement_isolated(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+) -> Verdict {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        check_refinement_verdict(gs, gd, ri, cfg)
+    }));
+    match result {
+        Ok(v) => v,
+        Err(payload) => {
+            let detail = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic with non-string payload".to_string());
+            let region = CURRENT_REGION.with(|r| std::mem::take(&mut *r.borrow_mut()));
+            Verdict::Inconclusive(Box::new(Inconclusive {
+                reason: InconclusiveReason::Panic,
+                region: if region.is_empty() { "<unknown>".to_string() } else { region },
+                partial_relation: Relation::default(),
+                detail,
+            }))
+        }
+    }
+}
+
+/// Listing 1: compute the output relation, iterating operators of `G_s`.
+/// Three-valued: resource exhaustion yields `Inconclusive`, never `Refuted`.
+pub fn check_refinement_verdict(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+) -> Verdict {
     let rules = lemmas::standard_rewrites();
     let mut ctx = RewriteCtx::default();
     ctx.quarantine_channels(cfg.quarantined_channels.iter().copied());
@@ -128,8 +290,15 @@ pub fn check_refinement(
     for nid in gs.topo_order() {
         let t0 = Instant::now();
         let node = gs.node(nid);
-        let out =
-            compute_node_out_rel(nid, gs, gd, &r, &rules, &ctx, cfg, &mut scratch, &mut stats);
+        CURRENT_REGION.with(|reg| node.name.clone_into(&mut reg.borrow_mut()));
+        // Fresh wall-clock budget per region: one pathological operator
+        // cannot starve the rest of the walk's allowance.
+        let limits = cfg
+            .limits
+            .with_deadline(cfg.region_deadline.map(|d| Instant::now() + d).or(cfg.limits.deadline));
+        let out = compute_node_out_rel(
+            nid, gs, gd, &r, &rules, &ctx, cfg, limits, &mut scratch, &mut stats,
+        );
         match out {
             Ok((cands, timing)) => {
                 per_node.push(NodeTiming {
@@ -141,10 +310,12 @@ pub fn check_refinement(
             }
             Err(mut e) => {
                 e.node = nid;
-                return Err(e);
+                CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
+                return fail_verdict(e, &stats, r);
             }
         }
     }
+    CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
 
     // Listing 1 line 9: restrict to O(G_s) with leaves in O(G_d). An output
     // with no such expression means G_d's outputs cannot reconstruct it —
@@ -162,7 +333,7 @@ pub fn check_refinement(
                 .topo_order()
                 .find(|&n| gs.node(n).output == o)
                 .unwrap_or(0);
-            return Err(RefinementError {
+            let e = RefinementError {
                 node: nid,
                 node_name: node,
                 op: "output filter".into(),
@@ -178,10 +349,134 @@ pub fn check_refinement(
                 )],
                 frontier_size: 0,
                 explored_gd_nodes: 0,
-            });
+                unsaturated: false,
+            };
+            return fail_verdict(e, &stats, r);
         }
     }
-    Ok(InferOutput { relation: ro, relation_full: r, stats, per_node })
+    Verdict::Verified(Box::new(InferOutput { relation: ro, relation_full: r, stats, per_node }))
+}
+
+/// Classify a walk failure: if any saturation pass of the walk was cut by a
+/// *hard* budget (node cap / deadline), the missing mapping may exist beyond
+/// the budget — report `Inconclusive`, never `Refuted`. A merely
+/// iteration-capped walk keeps the refutation but marks it `unsaturated` so
+/// escalation can retry it at a larger budget.
+fn fail_verdict(mut e: RefinementError, stats: &SatStats, partial: Relation) -> Verdict {
+    if let Some(x) = stats.exhausted {
+        let reason = match x {
+            Exhaustion::Deadline => InconclusiveReason::Timeout,
+            Exhaustion::NodeBudget => InconclusiveReason::NodeBudget,
+        };
+        let detail = format!(
+            "no clean mapping for '{}' ({}) before the {} budget ran out",
+            e.node_name,
+            e.op,
+            match x {
+                Exhaustion::Deadline => "wall-clock",
+                Exhaustion::NodeBudget => "e-graph node",
+            }
+        );
+        return Verdict::Inconclusive(Box::new(Inconclusive {
+            reason,
+            region: e.node_name,
+            partial_relation: partial,
+            detail,
+        }));
+    }
+    e.unsaturated = !stats.saturated;
+    Verdict::Refuted(Box::new(e))
+}
+
+/// Iterative-deepening schedule for saturation budgets.
+///
+/// Jobs start at a small budget (most regions verify in a few iterations
+/// over a few thousand nodes — the cheap first attempt makes the common
+/// case faster) and, on `Inconclusive(NodeBudget)` or an unsaturated
+/// refutation, retry with geometrically raised `max_iters`/`max_nodes`.
+/// The **final** attempt never runs below the caller's base limits, so the
+/// escalated verdict is at least as strong as a single direct call —
+/// escalation can only add budget, never take it away. `Timeout` and
+/// `Panic` are terminal: a wall-clock deadline re-runs into the same wall,
+/// and a crash wants a bug report, not a hotter retry.
+#[derive(Debug, Clone)]
+pub struct EscalationPolicy {
+    /// Total attempts (≥ 1); the last runs at `max(initial·growthⁿ, base)`.
+    pub max_attempts: usize,
+    /// Budget for attempt 0.
+    pub initial: SaturationLimits,
+    /// Per-attempt multiplier on `max_iters`.
+    pub iters_factor: usize,
+    /// Per-attempt multiplier on `max_nodes`.
+    pub nodes_factor: usize,
+}
+
+impl Default for EscalationPolicy {
+    fn default() -> Self {
+        EscalationPolicy {
+            max_attempts: 3,
+            initial: SaturationLimits::new(4, 15_000),
+            iters_factor: 2,
+            nodes_factor: 4,
+        }
+    }
+}
+
+impl EscalationPolicy {
+    /// A degenerate policy: one attempt at exactly the base limits (the
+    /// zero `initial` is always raised to the base by the final-attempt
+    /// floor in [`EscalationPolicy::limits_for`]).
+    pub fn single_shot() -> Self {
+        EscalationPolicy {
+            max_attempts: 1,
+            initial: SaturationLimits::new(0, 0),
+            ..Default::default()
+        }
+    }
+
+    /// Limits for `attempt` (0-based) against the caller's `base` limits.
+    pub fn limits_for(&self, attempt: usize, base: SaturationLimits) -> SaturationLimits {
+        let mut l = self.initial;
+        for _ in 0..attempt {
+            l.max_iters = l.max_iters.saturating_mul(self.iters_factor.max(1));
+            l.max_nodes = l.max_nodes.saturating_mul(self.nodes_factor.max(1));
+        }
+        if attempt + 1 >= self.max_attempts {
+            l.max_iters = l.max_iters.max(base.max_iters);
+            l.max_nodes = l.max_nodes.max(base.max_nodes);
+        }
+        l.deadline = base.deadline;
+        l
+    }
+}
+
+/// Panic-isolated inference under an escalation policy. Returns the final
+/// verdict and the number of attempts spent (≥ 1).
+pub fn check_refinement_escalating(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+    policy: &EscalationPolicy,
+) -> (Verdict, usize) {
+    let attempts = policy.max_attempts.max(1);
+    for attempt in 0..attempts {
+        let last = attempt + 1 >= attempts;
+        let mut c = cfg.clone();
+        c.limits = policy.limits_for(attempt, cfg.limits);
+        let v = check_refinement_isolated(gs, gd, ri, &c);
+        let retry = match &v {
+            Verdict::Verified(_) => false,
+            // A fixpoint refutation is budget-independent; only an
+            // unsaturated one can flip with more budget.
+            Verdict::Refuted(e) => e.unsaturated,
+            Verdict::Inconclusive(i) => i.reason == InconclusiveReason::NodeBudget,
+        };
+        if last || !retry {
+            return (v, attempt + 1);
+        }
+    }
+    unreachable!("loop returns on its final attempt")
 }
 
 /// Listing 2 + Listing 3: clean output relation for one operator.
@@ -194,6 +489,7 @@ fn compute_node_out_rel(
     rules: &[crate::egraph::Rewrite],
     ctx: &RewriteCtx,
     cfg: &InferConfig,
+    limits: SaturationLimits,
     eg: &mut EGraph,
     stats: &mut SatStats,
 ) -> Result<(Vec<CleanCand>, NodeTiming), RefinementError> {
@@ -218,6 +514,7 @@ fn compute_node_out_rel(
             .collect(),
         frontier_size: frontier,
         explored_gd_nodes: explored,
+        unsaturated: false,
     };
 
     // -- Step 1 (Listing 2): seed the e-graph with v(I(v)) and the input
@@ -253,48 +550,64 @@ fn compute_node_out_rel(
     eg.rebuild();
 
     // -- Step 2: saturate with lemmas.
-    let s = saturate(eg, rules, ctx, cfg.limits);
+    let s = saturate(eg, rules, ctx, limits);
     stats.merge(&s);
+    if s.exhausted == Some(Exhaustion::Deadline) {
+        // The deadline is authoritative: no extraction on the partial
+        // e-graph, the region is abandoned as-is (→ Inconclusive upstream).
+        return Err(mk_err(t_rel.len(), 0));
+    }
+    let mut node_budget_hit = s.exhausted == Some(Exhaustion::NodeBudget);
 
     // -- Step 3 (Listing 3): frontier exploration of G_d. Add definitional
     //    equalities t_d ≡ op(inputs) for G_d nodes all of whose inputs are
     //    in T_rel; saturate; extract; grow T_rel from clean candidates.
     let mut explored: FxHashSet<NodeId> = FxHashSet::default();
     let mut best: Vec<CleanCand> = Vec::new();
+    let mut converged = false;
     for _iter in 0..cfg.max_frontier_iters {
         let mut added = false;
-        for dnid in gd.topo_order() {
-            if explored.contains(&dnid) {
-                continue;
+        if !node_budget_hit {
+            for dnid in gd.topo_order() {
+                if explored.contains(&dnid) {
+                    continue;
+                }
+                let dnode = gd.node(dnid);
+                if !dnode.inputs.iter().all(|t| t_rel.contains(t)) {
+                    continue;
+                }
+                explored.insert(dnid);
+                added = true;
+                let children: Vec<Id> = dnode
+                    .inputs
+                    .iter()
+                    .map(|&t| eg.add_leaf(TensorRef::d(t), gd.shape(t).to_vec()))
+                    .collect();
+                let out_leaf =
+                    eg.add_leaf(TensorRef::d(dnode.output), gd.shape(dnode.output).to_vec());
+                if let Ok(def) = eg.add_op(dnode.op.clone(), children) {
+                    let _ = eg.union(out_leaf, def);
+                }
+                // Forward closure: an explored node's output is related to v's
+                // inputs, so its consumers satisfy observation (i)/(ii) of
+                // §4.3.1. (Slightly broader than Listing 3's clean-expression
+                // growth — same exclusion of unrelated tensors, see DESIGN.md.)
+                t_rel.insert(dnode.output);
             }
-            let dnode = gd.node(dnid);
-            if !dnode.inputs.iter().all(|t| t_rel.contains(t)) {
-                continue;
-            }
-            explored.insert(dnid);
-            added = true;
-            let children: Vec<Id> = dnode
-                .inputs
-                .iter()
-                .map(|&t| eg.add_leaf(TensorRef::d(t), gd.shape(t).to_vec()))
-                .collect();
-            let out_leaf = eg.add_leaf(TensorRef::d(dnode.output), gd.shape(dnode.output).to_vec());
-            if let Ok(def) = eg.add_op(dnode.op.clone(), children) {
-                let _ = eg.union(out_leaf, def);
-            }
-            // Forward closure: an explored node's output is related to v's
-            // inputs, so its consumers satisfy observation (i)/(ii) of
-            // §4.3.1. (Slightly broader than Listing 3's clean-expression
-            // growth — same exclusion of unrelated tensors, see DESIGN.md.)
-            t_rel.insert(dnode.output);
         }
         if added {
             eg.rebuild();
-            let s = saturate(eg, rules, ctx, cfg.limits);
+            let s = saturate(eg, rules, ctx, limits);
             stats.merge(&s);
+            if s.exhausted == Some(Exhaustion::Deadline) {
+                return Err(mk_err(t_rel.len(), explored.len()));
+            }
+            node_budget_hit |= s.exhausted == Some(Exhaustion::NodeBudget);
         }
 
-        // extract clean candidates for the target class over D-side leaves
+        // extract clean candidates for the target class over D-side leaves.
+        // A node-budget abort still extracts: equalities found before the
+        // cap are valid, and a mapping among them is a real proof.
         let cands = extract_clean(eg, &|t| t.side == Side::D);
         let mut grew = false;
         if let Some(target_cands) = cands.get(&eg.find(target)) {
@@ -305,13 +618,27 @@ fn compute_node_out_rel(
                 }
             }
         }
+        if node_budget_hit {
+            // Further frontier growth would only re-trip the cap; keep
+            // whatever extraction produced.
+            break;
+        }
         if !added && !grew {
+            converged = true;
             break;
         }
     }
+    if !converged && !node_budget_hit {
+        // Frontier loop stopped on its iteration cap while still growing.
+        stats.saturated = false;
+    }
 
-    let timing =
-        NodeTiming { node_name: String::new(), micros: 0, egraph_nodes: eg.n_nodes, explored_gd: explored.len() };
+    let timing = NodeTiming {
+        node_name: String::new(),
+        micros: 0,
+        egraph_nodes: eg.n_nodes,
+        explored_gd: explored.len(),
+    };
     if best.is_empty() {
         return Err(mk_err(t_rel.len(), explored.len()));
     }
@@ -524,9 +851,10 @@ mod tests {
         let cfg = InferConfig::default();
         let mut scratch = EGraph::new();
         // node 0 in gs is the matmul
-        let (cands, timing) =
-            compute_node_out_rel(0, &gs, &gd, &ri, &rules, &ctx, &cfg, &mut scratch, &mut stats)
-                .unwrap();
+        let (cands, timing) = compute_node_out_rel(
+            0, &gs, &gd, &ri, &rules, &ctx, &cfg, cfg.limits, &mut scratch, &mut stats,
+        )
+        .unwrap();
         assert!(!cands.is_empty());
         // explored G_d nodes: C_1, C_2, D_1, D_2 — but not F_1/F_2 (need E)
         assert!(
@@ -542,5 +870,111 @@ mod tests {
         let out = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap();
         assert_eq!(out.per_node.len(), gs.num_nodes());
         assert!(out.stats.total_applications() > 0, "lemmas were applied");
+    }
+
+    // ---- three-valued verdicts (resource budgets never read as bugs) ----
+
+    #[test]
+    fn node_budget_on_clean_pair_is_inconclusive_not_refuted() {
+        let (gs, gd, ri) = running_example();
+        let cfg = InferConfig {
+            limits: SaturationLimits::new(8, 10),
+            ..InferConfig::default()
+        };
+        match check_refinement_verdict(&gs, &gd, &ri, &cfg) {
+            Verdict::Inconclusive(i) => {
+                assert_eq!(i.reason, InconclusiveReason::NodeBudget);
+                assert!(!i.region.is_empty());
+            }
+            v => panic!("starved clean pair must be inconclusive, got {}", v.tag()),
+        }
+    }
+
+    #[test]
+    fn elapsed_deadline_on_clean_pair_is_inconclusive_timeout() {
+        let (gs, gd, ri) = running_example();
+        let cfg = InferConfig {
+            region_deadline: Some(Duration::ZERO),
+            ..InferConfig::default()
+        };
+        match check_refinement_verdict(&gs, &gd, &ri, &cfg) {
+            Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Timeout),
+            v => panic!("zero deadline must be inconclusive, got {}", v.tag()),
+        }
+    }
+
+    #[test]
+    fn genuine_refutation_survives_verdict_layer() {
+        // same graphs as missing_computation_is_detected, via the verdict API
+        let mut gs = Graph::new("gs");
+        let a = gs.input("A", vec![4, 6]);
+        let b = gs.input("B", vec![6, 4]);
+        let c = gs.matmul("C", a, b);
+        gs.mark_output(c);
+        let mut gd = Graph::new("gd");
+        let a1 = gd.input("A_1", vec![4, 3]);
+        let a2 = gd.input("A_2", vec![4, 3]);
+        let b1 = gd.input("B_1", vec![3, 4]);
+        let _b2 = gd.input("B_2", vec![3, 4]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        let c2 = gd.matmul("C_2", a2, b1);
+        let f = gd.all_reduce("C_sum", vec![c1, c2]);
+        gd.mark_output(f);
+        let ri = Relation::from_json(
+            &Json::parse(
+                r#"{"A": ["concat(A_1, A_2; dim=1)"], "B": ["concat(B_1, B_2; dim=0)"]}"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        match check_refinement_verdict(&gs, &gd, &ri, &InferConfig::default()) {
+            Verdict::Refuted(e) => assert_eq!(e.node_name, "C"),
+            v => panic!("genuine bug must stay refuted, got {}", v.tag()),
+        }
+    }
+
+    #[test]
+    fn escalation_recovers_clean_pair_from_starved_initial_budget() {
+        let (gs, gd, ri) = running_example();
+        let policy = EscalationPolicy {
+            max_attempts: 3,
+            initial: SaturationLimits::new(8, 10),
+            iters_factor: 2,
+            nodes_factor: 4,
+        };
+        let (v, attempts) =
+            check_refinement_escalating(&gs, &gd, &ri, &InferConfig::default(), &policy);
+        assert!(v.is_verified(), "final attempt runs at >= base budget; got {}", v.tag());
+        assert!(attempts > 1, "tiny initial budget must have been escalated");
+    }
+
+    #[test]
+    fn escalation_final_attempt_never_below_base() {
+        let policy = EscalationPolicy::default();
+        let base = SaturationLimits::new(8, 60_000);
+        let l = policy.limits_for(policy.max_attempts - 1, base);
+        assert!(l.max_iters >= base.max_iters && l.max_nodes >= base.max_nodes);
+        // first attempt is genuinely smaller (the fast path)
+        let l0 = policy.limits_for(0, base);
+        assert!(l0.max_nodes < base.max_nodes);
+    }
+
+    #[test]
+    fn two_valued_wrapper_refuses_to_misreport_inconclusive() {
+        // The compat wrapper must panic loudly on Inconclusive rather than
+        // fold it into Ok (false proof) or Err (false alarm). Applier-panic
+        // isolation end-to-end is exercised in tests/chaos.rs.
+        let (gs, gd, ri) = running_example();
+        let cfg =
+            InferConfig { limits: SaturationLimits::new(8, 10), ..InferConfig::default() };
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // keep the expected panic quiet
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_refinement(&gs, &gd, &ri, &cfg)
+        }));
+        std::panic::set_hook(prev);
+        assert!(r.is_err(), "wrapper must refuse the two-valued lie");
     }
 }

@@ -33,10 +33,12 @@
 //! - [`coordinator`] — multi-threaded verification service + reports.
 //! - [`runtime`] — PJRT execution of AOT artifacts for cross-validation.
 //! - [`bench`] — mini benchmark harness used by `cargo bench`.
+//! - [`chaos`] — test-only fault-injection hooks (feature `chaos`).
 
 pub mod baseline;
 pub mod bench;
 pub mod bugs;
+pub mod chaos;
 pub mod coordinator;
 pub mod egraph;
 pub mod expr;

@@ -8,23 +8,43 @@
 //!   lemmas                                  list the lemma library
 //!   hlo     --file <module.hlo.txt>         parse an HLO-text module
 //!
+//! Exit codes mirror the three-valued verdict plus two operational states:
+//!   0  verified / sound
+//!   1  refuted (a genuine refinement bug, or an unsound fuzz campaign)
+//!   2  operational error (bad arguments, I/O, malformed inputs)
+//!   3  inconclusive (resource budgets exhausted before a verdict)
+//!   4  fuzz campaign aborted early (crash drill via --abort-after)
+//!
 //! (Hand-rolled argument parsing — no clap in the offline crate set.)
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
+use graphguard::coordinator::JobVerdict;
+use graphguard::infer::Verdict;
 use graphguard::{bugs, coordinator, fuzz, hlo, infer, ir, lemmas, models, relation};
+use std::time::Duration;
+
+const EXIT_OK: i32 = 0;
+const EXIT_REFUTED: i32 = 1;
+const EXIT_ERROR: i32 = 2;
+const EXIT_INCONCLUSIVE: i32 = 3;
+const EXIT_ABORTED: i32 = 4;
 
 fn main() {
-    if let Err(e) = run() {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
-    }
+    let code = match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            EXIT_ERROR
+        }
+    };
+    std::process::exit(code);
 }
 
 fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn run() -> Result<()> {
+fn run() -> Result<i32> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("verify") => cmd_verify(&args[1..]),
@@ -36,15 +56,18 @@ fn run() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: graphguard <verify|suite|bugs|fuzz|lemmas|hlo> [options]\n\
-                 \n  verify --gs g_s.json --gd g_d.json --ri relation.json\
-                 \n  suite  [--ranks N] [--threads N]\
+                 \n  verify --gs g_s.json --gd g_d.json --ri relation.json [--deadline-ms N]\
+                 \n  suite  [--ranks N] [--threads N] [--deadline-ms N]\
                  \n  bugs\
                  \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
-                 \n         [--flavor F] [--replay ce.json]\
+                 \n         [--flavor F] [--replay ce.json] [--resume DIR] [--abort-after N]\
                  \n  lemmas\
-                 \n  hlo --file module.hlo.txt"
+                 \n  hlo --file module.hlo.txt\
+                 \n\
+                 \nexit codes: 0 verified/sound, 1 refuted/unsound, 2 error,\
+                 \n            3 inconclusive (budgets exhausted), 4 fuzz aborted"
             );
-            Ok(())
+            Ok(EXIT_OK)
         }
     }
 }
@@ -56,52 +79,77 @@ fn load_graph(path: &str) -> Result<ir::Graph> {
     ir::json_io::from_json(&json).with_context(|| format!("building graph from {path}"))
 }
 
-fn cmd_verify(args: &[String]) -> Result<()> {
+/// Shared budget flags → inference config. `--deadline-ms 0` disables the
+/// per-region wall-clock deadline entirely.
+fn infer_cfg(args: &[String]) -> Result<infer::InferConfig> {
+    let mut cfg = infer::InferConfig::default();
+    if let Some(ms) = arg_value(args, "--deadline-ms") {
+        let ms: u64 = ms.parse().with_context(|| format!("bad --deadline-ms '{ms}'"))?;
+        cfg.region_deadline = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    Ok(cfg)
+}
+
+fn cmd_verify(args: &[String]) -> Result<i32> {
     let gs = load_graph(&arg_value(args, "--gs").ok_or_else(|| anyhow!("--gs required"))?)?;
     let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
     let ri_path = arg_value(args, "--ri").ok_or_else(|| anyhow!("--ri required"))?;
-    let ri_text = std::fs::read_to_string(&ri_path)?;
+    let ri_text =
+        std::fs::read_to_string(&ri_path).with_context(|| format!("reading {ri_path}"))?;
     let ri_json = graphguard::util::json::Json::parse(&ri_text)
         .map_err(|e| anyhow!("{ri_path}: {e}"))?;
     let ri = relation::Relation::from_json(&ri_json, &gs, &gd)?;
     ri.validate_shapes(&gs, &gd)?;
-    match infer::check_refinement(&gs, &gd, &ri, &infer::InferConfig::default()) {
-        Ok(out) => {
+    match infer::check_refinement_isolated(&gs, &gd, &ri, &infer_cfg(args)?) {
+        Verdict::Verified(out) => {
             println!("refinement HOLDS — R_o:");
             println!("{}", out.relation.to_json(&gs, &gd).to_string_pretty());
-            if arg_value(args, "--check-numeric").is_some()
-                || args.iter().any(|a| a == "--check-numeric")
-            {
+            if args.iter().any(|a| a == "--check-numeric") {
                 infer::verify_numeric(&gs, &gd, &ri, &out.relation, 7)?;
                 println!("numeric certificate: OK");
             }
-            Ok(())
+            Ok(EXIT_OK)
         }
-        Err(e) => {
+        Verdict::Refuted(e) => {
             println!("{e}");
-            bail!("model refinement does not hold")
+            eprintln!("model refinement does not hold");
+            Ok(EXIT_REFUTED)
+        }
+        Verdict::Inconclusive(i) => {
+            println!("{i}");
+            eprintln!(
+                "verification INCONCLUSIVE — not a refutation; raise the budgets \
+                 (--deadline-ms, larger node limits) and retry"
+            );
+            Ok(EXIT_INCONCLUSIVE)
         }
     }
 }
 
-fn cmd_suite(args: &[String]) -> Result<()> {
+fn cmd_suite(args: &[String]) -> Result<i32> {
     let ranks: usize = arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(2);
     let threads: usize =
         arg_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let cfg = infer_cfg(args)?;
     let coord = if threads > 0 {
-        coordinator::Coordinator::new(threads, infer::InferConfig::default())
+        coordinator::Coordinator::new(threads, cfg)
     } else {
-        coordinator::Coordinator::default()
+        coordinator::Coordinator { cfg, ..coordinator::Coordinator::default() }
     };
     let results = coord.run_batch(models::table2_workloads(ranks));
     print!("{}", coordinator::report_table(&results));
-    if results.iter().any(|r| !r.ok) {
-        bail!("some workloads failed refinement");
+    if results.iter().any(|r| r.verdict == JobVerdict::Refuted) {
+        eprintln!("some workloads failed refinement");
+        return Ok(EXIT_REFUTED);
     }
-    Ok(())
+    if results.iter().any(|r| matches!(r.verdict, JobVerdict::Inconclusive(_))) {
+        eprintln!("some workloads were inconclusive (budgets exhausted) — not refuted");
+        return Ok(EXIT_INCONCLUSIVE);
+    }
+    Ok(EXIT_OK)
 }
 
-fn cmd_bugs() -> Result<()> {
+fn cmd_bugs() -> Result<i32> {
     println!("§6.2 case studies (buggy variants):\n");
     for case in bugs::all_cases(true) {
         let (detected, report) = case.run();
@@ -119,15 +167,28 @@ fn cmd_bugs() -> Result<()> {
         }
         println!();
     }
-    Ok(())
+    Ok(EXIT_OK)
 }
 
-fn cmd_fuzz(args: &[String]) -> Result<()> {
+fn cmd_fuzz(args: &[String]) -> Result<i32> {
     if let Some(path) = arg_value(args, "--replay") {
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
         let j = graphguard::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         println!("{}", fuzz::replay_counterexample(&j)?);
-        return Ok(());
+        return Ok(EXIT_OK);
+    }
+    let abort_after = arg_value(args, "--abort-after")
+        .map(|v| v.parse::<u64>().with_context(|| format!("bad --abort-after '{v}'")))
+        .transpose()?;
+    if let Some(dir) = arg_value(args, "--resume") {
+        let mut cfg = fuzz::resume_config(std::path::Path::new(&dir))
+            .with_context(|| format!("resuming fuzz campaign from {dir}"))?;
+        cfg.abort_after = abort_after;
+        println!(
+            "resuming campaign from {} (seeds={}, base_seed={:#x})",
+            dir, cfg.seeds, cfg.base_seed
+        );
+        return run_fuzz_and_report(&cfg);
     }
     let d = fuzz::FuzzConfig::default();
     let cfg = fuzz::FuzzConfig {
@@ -153,42 +214,62 @@ fn cmd_fuzz(args: &[String]) -> Result<()> {
                 })
             })
             .transpose()?,
+        resume: false,
+        abort_after,
     };
-    let report = fuzz::run_fuzz(&cfg)?;
+    run_fuzz_and_report(&cfg)
+}
+
+fn run_fuzz_and_report(cfg: &fuzz::FuzzConfig) -> Result<i32> {
+    let report = fuzz::run_fuzz(cfg)?;
+    if report.aborted {
+        println!(
+            "fuzz campaign ABORTED by --abort-after with {} of {} seeds journaled in {}\n\
+             resume with: graphguard fuzz --resume {}",
+            report.models,
+            cfg.seeds,
+            cfg.out_dir.display(),
+            cfg.out_dir.display()
+        );
+        return Ok(EXIT_ABORTED);
+    }
     print!("{}", report.table());
     let json_path = "FUZZ_REPORT.json";
     std::fs::write(json_path, report.to_json().to_string_pretty())
         .with_context(|| format!("writing {json_path}"))?;
     println!("report written to {json_path}");
     if !report.sound() {
-        bail!(
+        eprintln!(
             "fuzz found {} counterexample(s): {} false alarms, {} cert failures, \
-             {} false proofs, {} localization misses, {} oracle eval failures (see {})",
+             {} clean-pair inconclusives, {} false proofs, {} localization misses, \
+             {} oracle eval failures (see {})",
             report.counterexamples.len(),
             report.false_alarms,
             report.clean_cert_failures,
+            report.clean_inconclusive,
             report.false_proofs(),
             report.locus_misses(),
             report.eval_failures(),
             cfg.out_dir.display()
         );
+        return Ok(EXIT_REFUTED);
     }
-    Ok(())
+    Ok(EXIT_OK)
 }
 
-fn cmd_lemmas() -> Result<()> {
+fn cmd_lemmas() -> Result<i32> {
     let lib = lemmas::metadata();
     println!("{} lemmas:", lib.len());
     println!("{:<36} {:>6} {:>11} {:>5}", "name", "group", "complexity", "loc");
     for m in &lib {
         println!("{:<36} {:>6} {:>11} {:>5}", m.name, m.group, m.complexity, m.loc);
     }
-    Ok(())
+    Ok(EXIT_OK)
 }
 
-fn cmd_hlo(args: &[String]) -> Result<()> {
+fn cmd_hlo(args: &[String]) -> Result<i32> {
     let path = arg_value(args, "--file").ok_or_else(|| anyhow!("--file required"))?;
-    let text = std::fs::read_to_string(&path)?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
     let g = hlo::parse_hlo_text(&text, &path)?;
     println!(
         "parsed '{}': {} inputs, {} nodes, {} outputs",
@@ -198,5 +279,5 @@ fn cmd_hlo(args: &[String]) -> Result<()> {
         g.outputs.len()
     );
     println!("{}", ir::json_io::to_json(&g).to_string_pretty());
-    Ok(())
+    Ok(EXIT_OK)
 }

@@ -66,6 +66,33 @@ fn each_buggy_variant_rejected_with_golden_locus() {
     }
 }
 
+/// The three-valued verdict layer must not soften the golden table: at
+/// default budgets every buggy variant is `Refuted` (never `Inconclusive`)
+/// with its documented locus, and bug 5 still `Verified` — the budget
+/// machinery is invisible on workloads the defaults comfortably cover.
+#[test]
+fn golden_mutants_still_refuted_under_three_valued_api() {
+    use graphguard::infer::{check_refinement_isolated, Verdict};
+    for (id, name, locus) in GOLDEN {
+        let case = case_by_name(bugs::all_cases(true), name);
+        let v = check_refinement_isolated(&case.gs, &case.gd, &case.ri, &InferConfig::default());
+        match locus {
+            Some(substr) => match v {
+                Verdict::Refuted(e) => assert!(
+                    format!("{e}").contains(substr),
+                    "bug {id} ({name}): locus '{substr}' drifted:\n{e}"
+                ),
+                v => panic!("bug {id} ({name}) must stay Refuted, got {}", v.tag()),
+            },
+            None => assert!(
+                v.is_verified(),
+                "bug {id} ({name}) is refinement-invisible, got {}",
+                v.tag()
+            ),
+        }
+    }
+}
+
 #[test]
 fn each_fixed_variant_verifies_with_certificate() {
     for (id, name, _locus) in GOLDEN {

@@ -1,0 +1,126 @@
+//! Chaos-injection tests (compiled only with `--features chaos`): arm
+//! named lemma appliers to panic or spin, then prove the verification
+//! stack degrades to `Inconclusive` on exactly the poisoned jobs and keeps
+//! going — no unwinding into the coordinator, no budget blowup reported as
+//! a refutation, no aborted suite.
+//!
+//! Chaos state is process-global, so every test serializes on [`LOCK`]
+//! and pins `threads = 1` for a deterministic workload order.
+
+use graphguard::chaos::{arm, disarm_all, fired, FaultAction};
+use graphguard::coordinator::{Coordinator, JobVerdict};
+use graphguard::fuzz::{self, Flavor, FuzzConfig};
+use graphguard::infer::{EscalationPolicy, InconclusiveReason, InferConfig};
+use graphguard::models;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking chaos test poisons the mutex by design; later tests
+    // still need exclusive access, not a propagated failure.
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    disarm_all();
+    guard
+}
+
+/// The whole Table-2 suite survives one panicking applier and one spinning
+/// applier: the two poisoned jobs come back `Inconclusive` (with the right
+/// reasons), every other workload still verifies, and the batch completes.
+#[test]
+fn suite_survives_injected_panic_and_spin() {
+    let _guard = serialized();
+    // `recv_of_send_identity` first matches in the first pipeline-parallel
+    // workload; `allgather_of_chunks_identity` pattern-matches any
+    // AllGather, so its (fire-once) spin lands in the first workload whose
+    // saturation reaches an AllGather applier.
+    arm("recv_of_send_identity", 1, FaultAction::Panic);
+    arm("allgather_of_chunks_identity", 1, FaultAction::Spin(Duration::from_secs(1)));
+
+    let cfg = InferConfig {
+        region_deadline: Some(Duration::from_millis(500)),
+        ..InferConfig::default()
+    };
+    // single-shot: Timeout/Panic are terminal anyway, but an escalating
+    // NodeBudget retry must not mask a chaos fault either.
+    let coord = Coordinator::new(1, cfg).with_escalation(EscalationPolicy::single_shot());
+    let jobs = models::table2_workloads(2);
+    let n_jobs = jobs.len();
+    let results = coord.run_batch(jobs);
+    disarm_all();
+
+    assert_eq!(results.len(), n_jobs, "a chaos fault must not abort the batch");
+    assert!(fired("recv_of_send_identity"), "panic fault never fired");
+    assert!(fired("allgather_of_chunks_identity"), "spin fault never fired");
+
+    let panicked: Vec<_> = results
+        .iter()
+        .filter(|r| r.verdict == JobVerdict::Inconclusive(InconclusiveReason::Panic))
+        .collect();
+    let timed_out: Vec<_> = results
+        .iter()
+        .filter(|r| r.verdict == JobVerdict::Inconclusive(InconclusiveReason::Timeout))
+        .collect();
+    assert_eq!(
+        panicked.len(),
+        1,
+        "exactly one fire-once panic: {:?}",
+        results.iter().map(|r| (&r.name, r.verdict.tag())).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        timed_out.len(),
+        1,
+        "exactly one fire-once spin: {:?}",
+        results.iter().map(|r| (&r.name, r.verdict.tag())).collect::<Vec<_>>()
+    );
+    assert!(
+        panicked[0].error.as_deref().unwrap_or("").contains("chaos: injected panic"),
+        "panic payload must survive isolation: {:?}",
+        panicked[0].error
+    );
+    for r in &results {
+        if matches!(r.verdict, JobVerdict::Inconclusive(_)) {
+            continue;
+        }
+        assert_eq!(
+            r.verdict,
+            JobVerdict::Verified,
+            "unpoisoned workload {} must still verify",
+            r.name
+        );
+    }
+}
+
+/// A fuzz campaign survives a panicking applier mid-campaign: the poisoned
+/// clean pair is scored `clean_inconclusive` (a soundness-of-service
+/// violation, so the report is unsound), the campaign still completes, and
+/// the remaining seeds are unaffected.
+#[test]
+fn fuzz_campaign_survives_injected_panic() {
+    let _guard = serialized();
+    arm("recv_of_send_identity", 1, FaultAction::Panic);
+
+    let report = fuzz::run_fuzz(&FuzzConfig {
+        seeds: 2,
+        base_seed: 11,
+        ranks: 2,
+        mutants_per_model: 1,
+        write_files: false,
+        flavor: Some(Flavor::Pp), // every case exercises recv_of_send
+        ..FuzzConfig::default()
+    })
+    .expect("chaos panic must not abort the campaign");
+    disarm_all();
+
+    assert!(fired("recv_of_send_identity"));
+    assert_eq!(report.models, 2, "both seeds must be processed");
+    assert_eq!(report.clean_inconclusive, 1, "the poisoned seed is inconclusive");
+    assert_eq!(report.clean_verified, 1, "the fault fires once; seed 2 is clean");
+    assert_eq!(report.false_alarms, 0, "a crash must never read as a refutation");
+    assert!(!report.sound(), "a starved clean pair is a soundness-of-service violation");
+    assert!(
+        report.counterexamples.iter().any(|c| c.kind == "clean_inconclusive"),
+        "the inconclusive clean pair must be recorded for triage"
+    );
+}

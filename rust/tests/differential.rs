@@ -61,7 +61,7 @@ fn seed_egraph(gs: &Graph, gd: &Graph, ri: &Relation) -> (EGraph, Vec<Id>) {
 }
 
 fn assert_differential(name: &str, gs: &Graph, gd: &Graph, ri: &Relation) {
-    let limits = SaturationLimits { max_iters: 12, max_nodes: 200_000 };
+    let limits = SaturationLimits::new(12, 200_000);
     let ctx = RewriteCtx::default();
     let rules = lemmas::standard_rewrites();
 

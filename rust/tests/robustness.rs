@@ -1,0 +1,210 @@
+//! Fault-tolerance integration tests: resource budgets, three-valued
+//! verdicts, coordinator determinism, and crash-safe resumable fuzz
+//! campaigns. The chaos-injection counterparts (which need the `chaos`
+//! feature) live in `rust/tests/chaos.rs`.
+
+use graphguard::coordinator::Coordinator;
+use graphguard::egraph::SaturationLimits;
+use graphguard::fuzz::{self, FuzzConfig, Journal};
+use graphguard::infer::{
+    check_refinement_isolated, EscalationPolicy, InconclusiveReason, InferConfig, Verdict,
+};
+use graphguard::models;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gg_rob_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------------------
+// Verdict taxonomy: each exhaustion mode maps to its own Inconclusive reason,
+// and neither starvation nor deadlines ever masquerade as a refutation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn starved_node_budget_is_inconclusive_node_budget() {
+    let w = models::table2_workloads(2).remove(0);
+    let cfg = InferConfig {
+        limits: SaturationLimits::new(8, 10),
+        ..InferConfig::default()
+    };
+    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &cfg) {
+        Verdict::Inconclusive(i) => {
+            assert_eq!(i.reason, InconclusiveReason::NodeBudget, "{i}");
+            assert!(!i.region.is_empty(), "exhaustion must name its region");
+        }
+        v => panic!("a 10-node budget must starve, got {}", v.tag()),
+    }
+}
+
+#[test]
+fn elapsed_deadline_is_inconclusive_timeout() {
+    let w = models::table2_workloads(2).remove(0);
+    let cfg = InferConfig {
+        region_deadline: Some(Duration::ZERO),
+        ..InferConfig::default()
+    };
+    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &cfg) {
+        Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Timeout, "{i}"),
+        v => panic!("a zero deadline must time out, got {}", v.tag()),
+    }
+}
+
+#[test]
+fn genuine_bug_still_refutes_at_default_budgets() {
+    let (gs, gd, ri) = models::regression::grad_accum_buggy_pair(2).unwrap();
+    match check_refinement_isolated(&gs, &gd, &ri, &InferConfig::default()) {
+        Verdict::Refuted(e) => {
+            assert!(!e.node_name.is_empty(), "refutation must carry a locus")
+        }
+        v => panic!("known-buggy pair must be Refuted, got {}", v.tag()),
+    }
+}
+
+/// The default budgets are part of the soundness-of-service contract: no
+/// clean Table-2 workload may regress into `Inconclusive` at defaults.
+#[test]
+fn clean_table2_workloads_never_inconclusive_at_defaults() {
+    for w in models::table2_workloads(2) {
+        let v = check_refinement_isolated(&w.gs, &w.gd, &w.ri, &InferConfig::default());
+        assert!(v.is_verified(), "{}: expected verified, got {}", w.name, v.tag());
+    }
+}
+
+#[test]
+fn verdict_tags_are_stable() {
+    // Journals, FUZZ_REPORT.json, and CI log-scrapers key on these strings.
+    assert_eq!(InconclusiveReason::Timeout.tag(), "timeout");
+    assert_eq!(InconclusiveReason::NodeBudget.tag(), "node_budget");
+    assert_eq!(InconclusiveReason::Panic.tag(), "panic");
+}
+
+// ---------------------------------------------------------------------------
+// Escalation: a retryable starvation at a small initial budget must converge
+// to the same Verified verdict the defaults produce.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn escalation_recovers_from_starved_initial_budget() {
+    let w = models::table2_workloads(2).remove(0);
+    let cfg = InferConfig {
+        limits: SaturationLimits::new(8, 60_000),
+        ..InferConfig::default()
+    };
+    let policy = EscalationPolicy {
+        max_attempts: 3,
+        initial: SaturationLimits::new(4, 10),
+        ..EscalationPolicy::default()
+    };
+    let (v, attempts) =
+        graphguard::infer::check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy);
+    assert!(v.is_verified(), "escalation should reach Verified, got {}", v.tag());
+    assert!(attempts > 1, "a 10-node initial budget cannot succeed on attempt 1");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator determinism: threads=1 twice and threads=4 once must agree on
+// every verdict, mapping count, and lemma-application count.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_results_are_thread_count_invariant() {
+    let cfg = InferConfig::default();
+    let a = Coordinator::new(1, cfg.clone()).run_batch(models::table2_workloads(2));
+    let b = Coordinator::new(1, cfg.clone()).run_batch(models::table2_workloads(2));
+    let c = Coordinator::new(4, cfg).run_batch(models::table2_workloads(2));
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), c.len());
+    for ((ra, rb), rc) in a.iter().zip(&b).zip(&c) {
+        for r in [rb, rc] {
+            assert_eq!(ra.name, r.name, "submission order must be preserved");
+            assert_eq!(ra.verdict, r.verdict, "{}", ra.name);
+            assert_eq!(ra.mappings, r.mappings, "{}", ra.name);
+            assert_eq!(ra.lemma_applications, r.lemma_applications, "{}", ra.name);
+            assert_eq!(ra.attempts, r.attempts, "{}", ra.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crash-safe fuzz campaigns: a campaign killed mid-run and resumed from its
+// journal must reproduce the byte-identical final report.
+// ---------------------------------------------------------------------------
+
+fn drill_cfg(out_dir: PathBuf) -> FuzzConfig {
+    FuzzConfig {
+        seeds: 8,
+        base_seed: 7,
+        ranks: 2,
+        mutants_per_model: 2,
+        out_dir,
+        write_files: true,
+        ..FuzzConfig::default()
+    }
+}
+
+#[test]
+fn resumed_campaign_reproduces_byte_identical_report() {
+    // Reference: one uninterrupted run.
+    let full_dir = tmpdir("full");
+    let full = fuzz::run_fuzz(&drill_cfg(full_dir.clone())).unwrap();
+    assert!(!full.aborted);
+    assert_eq!(full.models, 8);
+
+    // Crash drill: abort after 3 fresh seeds, then resume from the journal.
+    let dir = tmpdir("resume");
+    let aborted = fuzz::run_fuzz(&FuzzConfig {
+        abort_after: Some(3),
+        ..drill_cfg(dir.clone())
+    })
+    .unwrap();
+    assert!(aborted.aborted, "--abort-after must stop the campaign early");
+    assert_eq!(aborted.models, 3, "exactly the journaled prefix is counted");
+    assert!(Journal::path_in(&dir).exists(), "journal must survive the crash");
+
+    let resumed_cfg = fuzz::resume_config(&dir).unwrap();
+    assert!(resumed_cfg.resume);
+    assert_eq!(resumed_cfg.seeds, 8);
+    assert_eq!(resumed_cfg.base_seed, 7);
+    let resumed = fuzz::run_fuzz(&resumed_cfg).unwrap();
+    assert!(!resumed.aborted);
+
+    assert_eq!(
+        full.to_json().to_string_pretty(),
+        resumed.to_json().to_string_pretty(),
+        "resumed campaign must be byte-identical to an uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&full_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_rejects_mismatched_campaign_config() {
+    let dir = tmpdir("mismatch");
+    let aborted = fuzz::run_fuzz(&FuzzConfig {
+        abort_after: Some(2),
+        ..drill_cfg(dir.clone())
+    })
+    .unwrap();
+    assert!(aborted.aborted);
+
+    let mut cfg = fuzz::resume_config(&dir).unwrap();
+    cfg.base_seed = 99; // a different campaign's seeds must not be mixed in
+    let err = fuzz::run_fuzz(&cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("journal"),
+        "mismatch error should point at the journal: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_without_journal_is_an_error() {
+    let dir = tmpdir("nojournal");
+    assert!(fuzz::resume_config(&dir).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

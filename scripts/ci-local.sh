@@ -3,8 +3,9 @@
 # in the same order, so any toolchain-bearing machine can reproduce a CI
 # verdict with one command. Steps (both CI jobs, serialized):
 #
-#   rust job:        build → test → fmt → clippy (-D warnings)
-#   fuzz-smoke job:  suite → fuzz smoke → fig4 + fuzz benches → bench gate
+#   rust job:        build → test (incl. chaos) → fmt → clippy (-D warnings)
+#   fuzz-smoke job:  suite → fuzz smoke → resume drill → fig4 + fuzz benches
+#                    → bench gate
 #
 # Pass --quick to stop after the rust job (the fast pre-push check).
 set -euo pipefail
@@ -25,8 +26,10 @@ step() {
 
 step cargo build --release
 step cargo test -q
+step cargo test -q --features chaos --test chaos
 step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
+step cargo clippy --all-targets --features chaos -- -D warnings
 
 if [ "${1:-}" = "--quick" ]; then
     echo
@@ -36,6 +39,7 @@ fi
 
 step cargo run --release --bin graphguard -- suite --ranks 2
 step cargo run --release --bin graphguard -- fuzz --seeds 50 --seed 0
+step ./scripts/resume_smoke.sh
 step cargo bench --bench fig4_verification_time
 step cargo bench --bench fuzz_throughput
 step ./scripts/bench_compare.sh BENCH_baseline .

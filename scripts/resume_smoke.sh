@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Crash-drill gate: a fuzz campaign killed mid-run and resumed from its
+# journal must finish with a FUZZ_REPORT.json byte-identical to an
+# uninterrupted run of the same campaign.
+#
+#   1. reference run: all seeds in one go            -> FUZZ_REPORT.json (A)
+#   2. drill run:     --abort-after N stops early    -> exit code 4, journal
+#   3. resume:        --resume DIR replays + finishes -> FUZZ_REPORT.json (B)
+#   4. diff A B — any byte of drift fails the gate
+#
+# Usage: resume_smoke.sh [SEEDS] [ABORT_AFTER] [BASE_SEED]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SEEDS="${1:-30}"
+ABORT_AFTER="${2:-11}"
+BASE_SEED="${3:-0}"
+BIN="cargo run --release --quiet --bin graphguard --"
+
+work="$(mktemp -d "${TMPDIR:-/tmp}/gg_resume_smoke.XXXXXX")"
+trap 'rm -rf "$work"' EXIT
+
+echo "==> resume smoke: reference run ($SEEDS seeds)"
+$BIN fuzz --seeds "$SEEDS" --seed "$BASE_SEED" --out "$work/full"
+mv FUZZ_REPORT.json "$work/report_full.json"
+
+echo "==> resume smoke: crash drill (abort after $ABORT_AFTER fresh seeds)"
+rc=0
+$BIN fuzz --seeds "$SEEDS" --seed "$BASE_SEED" --out "$work/drill" \
+    --abort-after "$ABORT_AFTER" || rc=$?
+if [ "$rc" -ne 4 ]; then
+    echo "resume_smoke: ERROR: expected exit code 4 from --abort-after, got $rc" >&2
+    exit 1
+fi
+if [ ! -f "$work/drill/journal.jsonl" ]; then
+    echo "resume_smoke: ERROR: aborted campaign left no journal" >&2
+    exit 1
+fi
+if [ -f FUZZ_REPORT.json ]; then
+    echo "resume_smoke: ERROR: aborted campaign must not write FUZZ_REPORT.json" >&2
+    exit 1
+fi
+
+echo "==> resume smoke: resuming from $work/drill"
+$BIN fuzz --resume "$work/drill"
+mv FUZZ_REPORT.json "$work/report_resumed.json"
+
+if ! diff -u "$work/report_full.json" "$work/report_resumed.json"; then
+    echo "resume_smoke: ERROR: resumed report differs from uninterrupted run" >&2
+    exit 1
+fi
+echo "resume_smoke: OK — resumed report is byte-identical ($SEEDS seeds, drill at $ABORT_AFTER)"
