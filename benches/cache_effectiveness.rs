@@ -1,0 +1,92 @@
+//! Certificate fingerprint-cache effectiveness on a repeated-layer GPT
+//! workload.
+//!
+//! The throughput claim this measures: a production model's L identical
+//! transformer layers should verify once, not L times. Four runs over the
+//! same L=8 tensor+sequence-parallel GPT pair:
+//!   gpt8_nocache     — cache disabled (the pre-cache baseline)
+//!   gpt8_cold        — fresh cache; repeated layers replay *within* the run
+//!   gpt8_warm        — same cache again; every region replays
+//!   gpt8_warm_jobs4  — warm cache + 4-worker parallel walk
+//!
+//! Hard assertions (the ISSUE-7 acceptance gate, also enforced on
+//! BENCH_cache.json by CI): warm hit-rate ≥ (L−1)/L, and the cold run's
+//! miss count is bounded by one layer's regions plus the embedding/head
+//! epilogue — i.e. repeated layers really do verify once.
+
+use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
+use graphguard::cache::FingerprintCache;
+use graphguard::infer::{check_refinement_isolated, InferConfig, Verdict};
+use graphguard::models::gpt::{self, GptConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+const LAYERS: usize = 8;
+
+fn main() {
+    let _ = graphguard::lemmas::standard_rewrites();
+    println!("Fingerprint-cache effectiveness — GPT TP+SP, {LAYERS} layers, 2 ranks\n");
+    let model_cfg = GptConfig::default();
+    let (gs, gd, ri) = gpt::tp_sp_pair(2, LAYERS, &model_cfg).expect("build L=8 workload");
+    let gs_one_layer = gpt::seq(1, &model_cfg);
+    let ops = gs.num_nodes() + gd.num_nodes();
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut run = |name: &'static str, cfg: &InferConfig| -> (u64, u64) {
+        let t0 = Instant::now();
+        let v = check_refinement_isolated(&gs, &gd, &ri, cfg);
+        let wall = t0.elapsed();
+        let Verdict::Verified(out) = v else {
+            panic!("{name}: expected verified, got {}", v.tag());
+        };
+        println!(
+            "{name:>16}: {:>9}  hits {:>3}  misses {:>3}",
+            fmt_dur(wall),
+            out.cache_hits,
+            out.cache_misses
+        );
+        records.push(
+            BenchRecord::new(name, ops, wall, out.stats.total_applications())
+                .with_cache(out.cache_hits, out.cache_misses),
+        );
+        (out.cache_hits, out.cache_misses)
+    };
+
+    run("gpt8_nocache", &InferConfig::default());
+
+    let cache = Arc::new(FingerprintCache::new());
+    let cached = InferConfig { cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
+    let (cold_hits, cold_misses) = run("gpt8_cold", &cached);
+    let (warm_hits, warm_misses) = run("gpt8_warm", &cached);
+    let parallel =
+        InferConfig { jobs: 4, cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
+    run("gpt8_warm_jobs4", &parallel);
+
+    // Cold-run reuse: repeated layers replay within a single walk, so
+    // misses are bounded by one layer's regions plus the embedding/LM-head
+    // epilogue (the +5 slack).
+    let per_layer_bound = gs_one_layer.num_nodes() + 5;
+    assert!(
+        (cold_misses as usize) <= per_layer_bound,
+        "cold run must reuse repeated layers: {cold_misses} misses > bound {per_layer_bound}"
+    );
+    assert!(cold_hits > 0, "cold run must replay at least the repeated layers");
+
+    // The acceptance bound: warm hit-rate ≥ (L−1)/L.
+    let warm_rate = warm_hits as f64 / ((warm_hits + warm_misses).max(1)) as f64;
+    let floor = (LAYERS - 1) as f64 / LAYERS as f64;
+    assert!(
+        warm_rate >= floor,
+        "warm hit-rate {warm_rate:.3} below acceptance floor {floor:.3}"
+    );
+    println!(
+        "\nwarm hit-rate {:.1}% (acceptance floor {:.1}%), cold misses {} (bound {})",
+        warm_rate * 100.0,
+        floor * 100.0,
+        cold_misses,
+        per_layer_bound
+    );
+
+    let path = write_bench_json("cache", &records).expect("write BENCH_cache.json");
+    println!("wrote {}", path.display());
+}

@@ -21,7 +21,14 @@ fn main() {
         ri,
         strategies: vec!["ep"],
     });
-    let coord = Coordinator::default();
+    // Certificate fingerprint cache on, as in CLI suite runs: Table-2
+    // models share layer structure, so cross-model replays show up in the
+    // recorded hit/miss columns.
+    let cfg = graphguard::infer::InferConfig {
+        cache: Some(graphguard::cache::FingerprintCache::global().clone()),
+        ..Default::default()
+    };
+    let coord = Coordinator { cfg, ..Coordinator::default() };
     // serial run_one for per-model timing fidelity (no scheduler noise)
     let results: Vec<_> = jobs.iter().map(|w| coord.run_one(w)).collect();
     print!("{}", report_table(&results));
@@ -45,6 +52,7 @@ fn main() {
                 r.lemma_applications,
             )
             .with_verdict(r.verdict.tag())
+            .with_cache(r.cache_hits, r.cache_misses)
         })
         .collect();
     let path = write_bench_json("fig4", &records).expect("write BENCH_fig4.json");

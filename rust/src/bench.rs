@@ -20,6 +20,10 @@ pub struct BenchRecord {
     /// "inconclusive_*") so a budget-starved bench row is distinguishable
     /// from a fast one in the tracked perf series.
     pub verdict: &'static str,
+    /// Fingerprint-cache counters for the measured run (both 0 when the
+    /// cache was disabled; `BENCH_cache.json` is the primary consumer).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 impl BenchRecord {
@@ -35,11 +39,19 @@ impl BenchRecord {
             wall_ns: wall.as_nanos(),
             lemma_applications,
             verdict: "verified",
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 
     pub fn with_verdict(mut self, verdict: &'static str) -> Self {
         self.verdict = verdict;
+        self
+    }
+
+    pub fn with_cache(mut self, hits: u64, misses: u64) -> Self {
+        self.cache_hits = hits;
+        self.cache_misses = misses;
         self
     }
 }
@@ -59,6 +71,8 @@ pub fn write_bench_json(
                 ("wall_ns", Json::num(r.wall_ns as f64)),
                 ("lemma_applications", Json::num(r.lemma_applications as f64)),
                 ("verdict", Json::str(r.verdict)),
+                ("cache_hits", Json::num(r.cache_hits as f64)),
+                ("cache_misses", Json::num(r.cache_misses as f64)),
             ])
         })
         .collect();
@@ -172,7 +186,7 @@ mod tests {
 
     #[test]
     fn bench_json_roundtrips() {
-        let rec = BenchRecord::new("toy", 7, Duration::from_micros(1500), 42);
+        let rec = BenchRecord::new("toy", 7, Duration::from_micros(1500), 42).with_cache(9, 3);
         let path = write_bench_json("unittest_scratch", &[rec]).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).unwrap();
@@ -185,5 +199,7 @@ mod tests {
         assert_eq!(rows[0].get("wall_ns").as_f64(), Some(1_500_000.0));
         assert_eq!(rows[0].get("lemma_applications").as_usize(), Some(42));
         assert_eq!(rows[0].get("verdict").as_str(), Some("verified"));
+        assert_eq!(rows[0].get("cache_hits").as_usize(), Some(9));
+        assert_eq!(rows[0].get("cache_misses").as_usize(), Some(3));
     }
 }

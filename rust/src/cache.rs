@@ -1,0 +1,610 @@
+//! Certificate fingerprint cache (ROADMAP "Verification-as-a-service",
+//! layer b).
+//!
+//! A production model verifies the same transformer layer 32 times: every
+//! layer is one *region* of the topological walk — a `G_s` operator, the
+//! clean candidate mappings of its inputs, and the `G_d` cone reachable
+//! from those mappings' leaves. Two regions that are isomorphic (identical
+//! op attributes, shapes, candidate-expression structure, channel-tag
+//! wiring, and quarantine membership, under a consistent renaming of
+//! tensors and channels) drive the saturation engine through identical
+//! event sequences and extract identical candidates up to that renaming —
+//! the engine consults nothing else about the graphs (the condition-solver
+//! starts empty on every walk, and `extract_clean` visits classes in
+//! sorted-id order precisely so arena capacity history cannot influence
+//! results). So the region's outcome can be memoized under a *canonical
+//! serialization* of the region and replayed into any isomorphic region by
+//! renaming the leaves back.
+//!
+//! Verdict-soundness rules (enforced in [`crate::infer`], tested in
+//! `rust/tests/cache.rs` and `rust/tests/chaos.rs`):
+//! - only *successful* regions whose saturation hit **no** hard budget
+//!   (node cap / deadline) are stored — `Inconclusive` outcomes, refuted
+//!   regions, and budget-clipped successes are never cached;
+//! - the saturation limits and frontier cap are part of the key, so a
+//!   result proven under one budget is never replayed under another (the
+//!   per-region deadline is *not* in the key: a stored entry was produced
+//!   by a deadline-untouched run, and replaying it cannot consume budget);
+//! - the stored per-region `SatStats` delta is merged on replay, keeping
+//!   lemma-application counts — and therefore reports — byte-identical
+//!   between cold and warm runs;
+//! - while any chaos fault is armed (`chaos` feature), the walk bypasses
+//!   the cache entirely: an injected panic can neither poison an entry nor
+//!   have its application accounting skewed by replayed regions.
+//!
+//! Collision-safety: the full canonical serialization string is the map
+//! key (hash maps compare keys on collision), so two distinct regions can
+//! never alias an entry — there is no 64-bit-fingerprint unsoundness to
+//! argue about.
+
+use crate::egraph::{CleanCand, SatStats, SaturationLimits};
+use crate::expr::{Expr, TensorRef};
+use crate::ir::{Graph, NodeId, Op, TensorId};
+use crate::relation::Relation;
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default entry cap for the process-global cache. Keys are a few KB of
+/// canonical serialization each; 8192 entries bounds the cache to tens of
+/// MB even under a long fuzz campaign. Inserts past the cap are dropped
+/// (counted in [`CacheStats::rejected`]) — never evicted, so a replay
+/// that hit once keeps hitting for the life of the process.
+pub const DEFAULT_MAX_ENTRIES: usize = 8192;
+
+/// Counters for hit-rate reporting (`BENCH_cache.json`, CLI summaries).
+/// Exact whenever the cache stays below its entry cap; under capacity
+/// pressure the hit/miss split of concurrent walks can vary by scheduling
+/// (the *results* never do).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    /// Inserts dropped because the entry cap was reached.
+    pub rejected: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A memoized region outcome: canonical candidates plus the bookkeeping a
+/// replay needs to keep reports identical to a recomputation.
+#[derive(Debug, Clone)]
+pub struct RegionEntry {
+    /// Clean candidates with leaves renamed to canonical indices.
+    pub cands: Vec<CleanCand>,
+    /// The region's saturation-stats delta, replayed into the walk total.
+    pub stats: SatStats,
+    pub egraph_nodes: usize,
+    pub explored_gd: usize,
+}
+
+/// Shared, thread-safe fingerprint → [`RegionEntry`] map.
+pub struct FingerprintCache {
+    map: Mutex<FxHashMap<String, Arc<RegionEntry>>>,
+    max_entries: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Default for FingerprintCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for FingerprintCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("FingerprintCache")
+            .field("entries", &self.len())
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .finish()
+    }
+}
+
+impl FingerprintCache {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_MAX_ENTRIES)
+    }
+
+    pub fn with_capacity(max_entries: usize) -> Self {
+        FingerprintCache {
+            map: Mutex::new(FxHashMap::default()),
+            max_entries: max_entries.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-global cache instance the CLI wires into verify/suite
+    /// runs. Library callers opt in per [`crate::infer::InferConfig`];
+    /// tests use private instances for isolated counters.
+    pub fn global() -> &'static Arc<FingerprintCache> {
+        static GLOBAL: OnceLock<Arc<FingerprintCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(FingerprintCache::new()))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FxHashMap<String, Arc<RegionEntry>>> {
+        // A panicking worker can only poison the lock between map
+        // operations that keep the map consistent; recover the data.
+        match self.map.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries (counters are kept; see [`Self::reset_stats`]).
+    pub fn clear(&self) {
+        self.lock().clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset_stats(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.inserts.store(0, Ordering::Relaxed);
+        self.rejected.store(0, Ordering::Relaxed);
+    }
+
+    /// Look an entry up, counting a hit or miss.
+    pub fn lookup(&self, key: &str) -> Option<Arc<RegionEntry>> {
+        let found = self.lock().get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Store an entry unless the cap is reached. Racing inserts under the
+    /// same key keep the first value — both producers computed the same
+    /// deterministic result, so which one lands is immaterial.
+    pub fn insert(&self, key: String, entry: RegionEntry) {
+        let mut map = self.lock();
+        if map.contains_key(&key) {
+            return;
+        }
+        if map.len() >= self.max_entries {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        map.insert(key, Arc::new(entry));
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The canonical serialization of one region, plus the leaf renaming that
+/// connects canonical indices back to this region's actual tensors.
+pub struct RegionFingerprint {
+    pub key: String,
+    /// canonical index → actual tensor (for replaying a stored entry here).
+    canon_to_actual: Vec<TensorRef>,
+    /// actual tensor → canonical index (for storing this region's result).
+    actual_to_canon: FxHashMap<TensorRef, u32>,
+}
+
+impl RegionFingerprint {
+    fn canon_ref(&self, t: TensorRef) -> Option<TensorRef> {
+        self.actual_to_canon.get(&t).map(|&i| TensorRef { side: t.side, id: i })
+    }
+
+    /// Rename a computed result's leaves to canonical indices for storage.
+    /// Returns `None` if any leaf is outside the fingerprinted region — a
+    /// would-be unsound entry that is skipped instead of stored (the
+    /// forward-closure argument in [`fingerprint_region`] says this cannot
+    /// happen; the `None` path is defense in depth).
+    pub fn canonicalize(&self, cands: &[CleanCand]) -> Option<Vec<CleanCand>> {
+        cands
+            .iter()
+            .map(|c| {
+                if !c.expr.leaves_all(&|t| self.actual_to_canon.contains_key(&t)) {
+                    return None;
+                }
+                let expr = c
+                    .expr
+                    .substitute(&|t| self.canon_ref(t).map(Expr::Leaf));
+                let leaves = expr.leaves();
+                Some(CleanCand { expr, cost: c.cost, leaves })
+            })
+            .collect()
+    }
+
+    /// Rename a stored entry's canonical leaves to this region's tensors.
+    pub fn instantiate(&self, cands: &[CleanCand]) -> Vec<CleanCand> {
+        cands
+            .iter()
+            .map(|c| {
+                let expr = c.expr.substitute(&|t| {
+                    self.canon_to_actual
+                        .get(t.id as usize)
+                        .map(|&actual| Expr::Leaf(actual))
+                });
+                let leaves = expr.leaves();
+                CleanCand { expr, cost: c.cost, leaves }
+            })
+            .collect()
+    }
+}
+
+/// Serialization state: first-appearance canonical renaming of tensors and
+/// channel tags.
+struct Canon {
+    tensors: FxHashMap<TensorRef, u32>,
+    order: Vec<TensorRef>,
+    /// shape of each canonical tensor, recorded at first appearance
+    shapes: Vec<Vec<i64>>,
+    channels: FxHashMap<usize, u32>,
+}
+
+impl Canon {
+    fn tensor(&mut self, t: TensorRef, shape: &[i64]) -> u32 {
+        if let Some(&i) = self.tensors.get(&t) {
+            return i;
+        }
+        let i = self.order.len() as u32;
+        self.tensors.insert(t, i);
+        self.order.push(t);
+        self.shapes.push(shape.to_vec());
+        i
+    }
+
+    fn channel(&mut self, c: usize) -> u32 {
+        let next = self.channels.len() as u32;
+        *self.channels.entry(c).or_insert(next)
+    }
+}
+
+/// Serialize one op with channel tags canonically renamed and quarantine
+/// membership made explicit. Every other attribute rides on the derived
+/// `Debug` form, which is complete (unlike `Display`, which elides
+/// attributes for several ops) and deterministic (`Scalar`/`LinExpr` hold
+/// sorted term vectors, not hash maps).
+fn push_op(out: &mut String, op: &Op, canon: &mut Canon, quarantined: &FxHashSet<usize>) {
+    match op {
+        Op::Send { chan } => {
+            let c = canon.channel(*chan);
+            let q = u8::from(quarantined.contains(chan));
+            let _ = write!(out, "Send(c{c},q{q})");
+        }
+        Op::Recv { chan } => {
+            let c = canon.channel(*chan);
+            let q = u8::from(quarantined.contains(chan));
+            let _ = write!(out, "Recv(c{c},q{q})");
+        }
+        _ => {
+            let _ = write!(out, "{op:?}");
+        }
+    }
+}
+
+fn push_expr(
+    out: &mut String,
+    e: &Expr,
+    canon: &mut Canon,
+    quarantined: &FxHashSet<usize>,
+    shape_of: &dyn Fn(TensorRef) -> Vec<i64>,
+) {
+    match e {
+        Expr::Leaf(t) => {
+            let side = if t.side == crate::expr::Side::S { 'S' } else { 'D' };
+            let shape = shape_of(*t);
+            let i = canon.tensor(*t, &shape);
+            let _ = write!(out, "{side}{i}");
+        }
+        Expr::Op(op, args) => {
+            out.push('(');
+            push_op(out, op, canon, quarantined);
+            for a in args {
+                out.push(' ');
+                push_expr(out, a, canon, quarantined, shape_of);
+            }
+            out.push(')');
+        }
+    }
+}
+
+/// Build the canonical fingerprint of the region rooted at `G_s` node
+/// `nid`: the operator (attributes and shapes), its inputs' candidate
+/// mappings, the saturation budgets, and the `G_d` cone the frontier loop
+/// of [`crate::infer`] could ever explore.
+///
+/// The cone is the forward closure of the candidate leaves under "add a
+/// node once all of its inputs are related", computed in one pass over
+/// `G_d`'s topological order. It *over*-approximates the frontier the real
+/// walk explores (the real `T_rel` grows by the same rule from the same
+/// seeds, plus extraction-found leaves that are already in the closure), so
+/// two regions with equal keys present the engine with
+/// indistinguishable inputs — equal keys imply equal (canonical) results.
+pub fn fingerprint_region(
+    nid: NodeId,
+    gs: &Graph,
+    gd: &Graph,
+    r: &Relation,
+    limits: SaturationLimits,
+    max_frontier_iters: usize,
+    quarantined: &FxHashSet<usize>,
+) -> RegionFingerprint {
+    let node = gs.node(nid);
+    let mut canon = Canon {
+        tensors: FxHashMap::default(),
+        order: Vec::new(),
+        shapes: Vec::new(),
+        channels: FxHashMap::default(),
+    };
+    let mut key = String::with_capacity(512);
+    let _ = write!(
+        key,
+        "v1;lim={},{};fr={};op=",
+        limits.max_iters, limits.max_nodes, max_frontier_iters
+    );
+    push_op(&mut key, &node.op, &mut canon, quarantined);
+    let _ = write!(key, ";out={:?};", gs.shape(node.output));
+
+    let shape_of = |t: TensorRef| -> Vec<i64> {
+        match t.side {
+            crate::expr::Side::S => gs.shape(t.id).to_vec(),
+            crate::expr::Side::D => gd.shape(t.id).to_vec(),
+        }
+    };
+
+    // Inputs: shape plus every candidate mapping, in the relation's
+    // (cost-sorted, deterministic) order. The seeds of the region's
+    // related-tensor set are exactly these candidates' leaves.
+    let mut related: FxHashSet<TensorId> = FxHashSet::default();
+    for &t in &node.inputs {
+        let _ = write!(key, "in{:?}{{", gs.shape(t));
+        for cand in r.get(t) {
+            let _ = write!(key, "{}:", cand.cost);
+            push_expr(&mut key, &cand.expr, &mut canon, quarantined, &shape_of);
+            key.push(';');
+            for &l in &cand.leaves {
+                related.insert(l.id);
+            }
+        }
+        key.push('}');
+    }
+
+    // G_d cone: forward closure in topological order. A single pass is the
+    // fixpoint — a node's inputs are produced before it, so membership is
+    // settled by the time the node is visited.
+    key.push_str("gd[");
+    for dnid in gd.topo_order() {
+        let dnode = gd.node(dnid);
+        if !dnode.inputs.iter().all(|t| related.contains(t)) {
+            continue;
+        }
+        related.insert(dnode.output);
+        push_op(&mut key, &dnode.op, &mut canon, quarantined);
+        key.push('|');
+        for &t in &dnode.inputs {
+            let shape = gd.shape(t).to_vec();
+            let i = canon.tensor(TensorRef::d(t), &shape);
+            let _ = write!(key, "D{i},");
+        }
+        key.push('>');
+        let oshape = gd.shape(dnode.output).to_vec();
+        let o = canon.tensor(TensorRef::d(dnode.output), &oshape);
+        let _ = write!(key, "D{o};");
+    }
+    key.push(']');
+
+    // Leaf-shape table in canonical order: lemma applicability depends on
+    // every subterm's shape, and all subterm shapes derive from leaf
+    // shapes through the (serialized) ops.
+    key.push_str("sh[");
+    for s in &canon.shapes {
+        let _ = write!(key, "{s:?};");
+    }
+    key.push(']');
+
+    RegionFingerprint {
+        key,
+        canon_to_actual: canon.order,
+        actual_to_canon: canon.tensors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn entry(cands: Vec<CleanCand>) -> RegionEntry {
+        RegionEntry {
+            cands,
+            stats: SatStats { saturated: true, ..Default::default() },
+            egraph_nodes: 1,
+            explored_gd: 0,
+        }
+    }
+
+    #[test]
+    fn counters_track_lookups_and_inserts() {
+        let c = FingerprintCache::new();
+        assert!(c.lookup("k").is_none());
+        c.insert("k".into(), entry(vec![]));
+        assert!(c.lookup("k").is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_rejects_instead_of_evicting() {
+        let c = FingerprintCache::with_capacity(1);
+        c.insert("a".into(), entry(vec![]));
+        c.insert("b".into(), entry(vec![]));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().rejected, 1);
+        // the original entry still hits — no eviction
+        assert!(c.lookup("a").is_some());
+        assert!(c.lookup("b").is_none());
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_first() {
+        let c = FingerprintCache::new();
+        c.insert("k".into(), entry(vec![]));
+        c.insert(
+            "k".into(),
+            RegionEntry {
+                cands: vec![],
+                stats: SatStats::default(),
+                egraph_nodes: 99,
+                explored_gd: 99,
+            },
+        );
+        assert_eq!(c.lookup("k").unwrap().egraph_nodes, 1);
+        assert_eq!(c.stats().inserts, 1);
+    }
+
+    /// Two isomorphic single-op regions (different tensor ids, same
+    /// structure/shapes) must produce byte-identical keys, and a
+    /// structurally different third region must not.
+    #[test]
+    fn isomorphic_regions_share_a_key() {
+        let mut gs = Graph::new("gs");
+        let a = gs.input("a", vec![4, 4]);
+        let b = gs.input("b", vec![4, 4]);
+        let x = gs.op("x", Op::Gelu, vec![a]);
+        let y = gs.op("y", Op::Gelu, vec![b]);
+        let z = gs.op("z", Op::Relu, vec![a]);
+        gs.mark_output(x);
+        gs.mark_output(y);
+        gs.mark_output(z);
+
+        let mut gd = Graph::new("gd");
+        let a0 = gd.input("a0", vec![4, 4]);
+        let b0 = gd.input("b0", vec![4, 4]);
+        let _x0 = gd.op("x0", Op::Gelu, vec![a0]);
+        let _y0 = gd.op("y0", Op::Gelu, vec![b0]);
+
+        let ri = Relation::from_json(
+            &crate::util::json::Json::parse(r#"{"a": ["a0"], "b": ["b0"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+
+        let lim = SaturationLimits::new(8, 1000);
+        let q = FxHashSet::default();
+        let fx = fingerprint_region(0, &gs, &gd, &ri, lim, 12, &q);
+        let fy = fingerprint_region(1, &gs, &gd, &ri, lim, 12, &q);
+        let fz = fingerprint_region(2, &gs, &gd, &ri, lim, 12, &q);
+        assert_eq!(fx.key, fy.key, "isomorphic regions must alias");
+        assert_ne!(fx.key, fz.key, "different ops must not alias");
+
+        // budgets are part of the key
+        let f_other = fingerprint_region(0, &gs, &gd, &ri, SaturationLimits::new(9, 1000), 12, &q);
+        assert_ne!(fx.key, f_other.key, "limits must namespace entries");
+    }
+
+    #[test]
+    fn canonicalize_then_instantiate_roundtrips() {
+        let mut gs = Graph::new("gs");
+        let a = gs.input("a", vec![2, 2]);
+        let x = gs.op("x", Op::Neg, vec![a]);
+        gs.mark_output(x);
+        let mut gd = Graph::new("gd");
+        let a0 = gd.input("a0", vec![2, 2]);
+        let x0 = gd.op("x0", Op::Neg, vec![a0]);
+        gd.mark_output(x0);
+        let ri = Relation::from_json(
+            &crate::util::json::Json::parse(r#"{"a": ["a0"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let fp = fingerprint_region(
+            0,
+            &gs,
+            &gd,
+            &ri,
+            SaturationLimits::new(8, 1000),
+            12,
+            &FxHashSet::default(),
+        );
+        let out = gd.tensor_by_name("x0").unwrap();
+        let cand = CleanCand {
+            expr: Expr::Leaf(TensorRef::d(out)),
+            cost: 0,
+            leaves: vec![TensorRef::d(out)],
+        };
+        let canonical = fp.canonicalize(std::slice::from_ref(&cand)).unwrap();
+        assert_ne!(canonical[0].leaves, cand.leaves, "leaves renamed for storage");
+        let back = fp.instantiate(&canonical);
+        assert_eq!(back[0].expr, cand.expr, "replay restores the region's tensors");
+        assert_eq!(back[0].leaves, cand.leaves);
+        assert_eq!(back[0].cost, 0);
+    }
+
+    /// A leaf outside the fingerprinted cone must refuse canonicalization
+    /// (defense in depth for the storage path).
+    #[test]
+    fn foreign_leaf_refuses_canonicalization() {
+        let mut gs = Graph::new("gs");
+        let a = gs.input("a", vec![2]);
+        let x = gs.op("x", Op::Neg, vec![a]);
+        gs.mark_output(x);
+        let mut gd = Graph::new("gd");
+        let a0 = gd.input("a0", vec![2]);
+        let stray = gd.input("stray", vec![2]);
+        let x0 = gd.op("x0", Op::Neg, vec![a0]);
+        gd.mark_output(x0);
+        let _ = stray;
+        let ri = Relation::from_json(
+            &crate::util::json::Json::parse(r#"{"a": ["a0"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let fp = fingerprint_region(
+            0,
+            &gs,
+            &gd,
+            &ri,
+            SaturationLimits::new(8, 1000),
+            12,
+            &FxHashSet::default(),
+        );
+        let stray_id = gd.tensor_by_name("stray").unwrap();
+        let cand = CleanCand {
+            expr: Expr::Leaf(TensorRef::d(stray_id)),
+            cost: 0,
+            leaves: vec![TensorRef::d(stray_id)],
+        };
+        assert!(fp.canonicalize(&[cand]).is_none());
+    }
+}

@@ -65,6 +65,14 @@ mod imp {
         faults().iter().any(|f| f.rule == rule && f.fired)
     }
 
+    /// Is any fault armed (fired or not)? The fingerprint cache checks this
+    /// and bypasses itself entirely while faults are in play: replayed
+    /// regions would skip lemma applications (shifting which application is
+    /// "Nth"), and a region computed mid-fault must never be stored.
+    pub fn any_armed() -> bool {
+        !faults().is_empty()
+    }
+
     pub fn on_lemma_application(rule: &str) {
         // Decide under the lock, act after dropping it: panicking while
         // holding the guard would be survivable (see `faults`) but a spin
@@ -104,8 +112,14 @@ mod imp {
 }
 
 #[cfg(feature = "chaos")]
-pub use imp::{arm, disarm_all, fired, on_lemma_application, FaultAction};
+pub use imp::{any_armed, arm, disarm_all, fired, on_lemma_application, FaultAction};
 
 #[cfg(not(feature = "chaos"))]
 #[inline(always)]
 pub fn on_lemma_application(_rule: &str) {}
+
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn any_armed() -> bool {
+    false
+}

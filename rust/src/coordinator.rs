@@ -69,6 +69,11 @@ pub struct JobResult {
     /// per-lemma application counts (Fig 7 raw data)
     pub lemma_counts: Vec<(&'static str, u64)>,
     pub per_node: Vec<NodeTiming>,
+    /// Fingerprint-cache counters for the *final* escalation attempt (both
+    /// zero when no cache is configured or the job did not verify).
+    /// Deterministic for `jobs = 1`; see [`crate::infer::InferOutput`].
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     pub error: Option<String>,
 }
 
@@ -119,6 +124,8 @@ impl Coordinator {
             lemma_applications: 0,
             lemma_counts: vec![],
             per_node: vec![],
+            cache_hits: 0,
+            cache_misses: 0,
             error,
         };
         match verdict {
@@ -131,6 +138,8 @@ impl Coordinator {
                     lemma_applications: o.stats.total_applications(),
                     lemma_counts: counts,
                     per_node: o.per_node,
+                    cache_hits: o.cache_hits,
+                    cache_misses: o.cache_misses,
                     ..base(JobVerdict::Verified, None)
                 }
             }
@@ -213,6 +222,56 @@ pub fn report_table(results: &[JobResult]) -> String {
     s
 }
 
+/// Render the byte-stable suite report used by the `--jobs N` determinism
+/// gate: everything verdict-relevant (names, op counts, lemma totals,
+/// mapping counts, attempts, verdicts, full error text) and nothing
+/// timing-dependent. Wall-clock durations and cache hit/miss splits vary
+/// run to run and across `jobs`/cache configurations while the verification
+/// *results* must not, so they are excluded; `diff`ing this report across
+/// `--jobs 1` / `--jobs 4` / `--no-cache` runs must yield zero bytes.
+pub fn canonical_report(results: &[JobResult]) -> String {
+    let w = results.iter().map(|r| r.name.len()).max().unwrap_or(8).max(8);
+    let mut s = format!(
+        "{:<w$}  {:>7}  {:>7}  {:>9}  {:>8}  {:>8}  result\n",
+        "model", "ops(Gs)", "ops(Gd)", "lemmas", "mappings", "attempts",
+    );
+    for r in results {
+        s.push_str(&format!(
+            "{:<w$}  {:>7}  {:>7}  {:>9}  {:>8}  {:>8}  {}\n",
+            r.name,
+            r.gs_ops,
+            r.gd_ops,
+            r.lemma_applications,
+            r.mappings,
+            r.attempts,
+            r.verdict.tag(),
+        ));
+        if let Some(err) = &r.error {
+            for line in err.lines() {
+                s.push_str("    | ");
+                s.push_str(line);
+                s.push('\n');
+            }
+        }
+    }
+    s
+}
+
+/// One-line cache summary for non-canonical CLI output.
+pub fn cache_summary(results: &[JobResult]) -> String {
+    let hits: u64 = results.iter().map(|r| r.cache_hits).sum();
+    let misses: u64 = results.iter().map(|r| r.cache_misses).sum();
+    let total = hits + misses;
+    if total == 0 {
+        "cache: disabled (0 lookups)".to_string()
+    } else {
+        format!(
+            "cache: {hits}/{total} region hits ({:.1}%)",
+            100.0 * hits as f64 / total as f64
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +333,37 @@ mod tests {
         );
         let table = report_table(&[r]);
         assert!(table.contains("INCONCLUSIVE"), "{table}");
+    }
+
+    #[test]
+    fn canonical_report_excludes_timing_and_cache_split() {
+        let r = JobResult {
+            name: "m".into(),
+            ok: true,
+            verdict: JobVerdict::Verified,
+            attempts: 1,
+            duration: Duration::from_millis(123_456),
+            gs_ops: 3,
+            gd_ops: 9,
+            mappings: 1,
+            lemma_applications: 42,
+            lemma_counts: vec![],
+            per_node: vec![],
+            cache_hits: 5,
+            cache_misses: 1,
+            error: Some("refinement FAILED at operator 'x'\nsecond line".into()),
+        };
+        let s = canonical_report(std::slice::from_ref(&r));
+        assert!(s.contains("verified"), "{s}");
+        assert!(!s.contains("123"), "durations must not leak into the canonical report: {s}");
+        assert!(!s.contains("hits"), "cache split must not leak into the canonical report: {s}");
+        assert!(s.contains("    | refinement FAILED"), "{s}");
+        assert!(s.contains("    | second line"), "{s}");
+        assert!(cache_summary(&[r]).contains("83.3%"));
+    }
+
+    #[test]
+    fn cache_summary_reports_disabled_without_lookups() {
+        assert!(cache_summary(&[]).contains("disabled"));
     }
 }

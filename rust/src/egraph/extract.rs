@@ -40,12 +40,21 @@ pub fn extract_clean(
     allowed: &dyn Fn(TensorRef) -> bool,
 ) -> FxHashMap<Id, Vec<CleanCand>> {
     let mut cands: FxHashMap<Id, Vec<CleanCand>> = FxHashMap::default();
+    // Class ids sorted, not in hash-map order: with K_PER_CLASS eviction and
+    // the MAX_COMBOS truncation below, the *visit order* can decide which of
+    // two equal-cost signatures survives. Hash-map order depends on the
+    // arena's capacity history (a reused `EGraph` lays out the same ids
+    // differently than a fresh one), so sorting is what makes extraction a
+    // deterministic function of the e-graph's logical content — the
+    // invariant the fingerprint cache and the parallel walk rely on.
+    let mut ids = eg.class_ids();
+    ids.sort_unstable();
     // Fixpoint: classes gain candidates as their children do. Graphs here
     // are small (per-operator subproblems), so a simple loop suffices; the
     // round bound guards against cyclic classes.
     for _round in 0..24 {
         let mut changed = false;
-        for id in eg.class_ids() {
+        for &id in &ids {
             let class = eg.class(id);
             let mut fresh: Vec<CleanCand> = Vec::new();
             for node in &class.nodes {

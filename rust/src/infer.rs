@@ -10,6 +10,7 @@
 //! with no clean mapping aborts with a [`RefinementError`] naming the
 //! operator — the paper's bug-localization output (§6.2).
 
+use crate::cache::{fingerprint_region, FingerprintCache, RegionEntry};
 use crate::egraph::{
     extract_clean, saturate, CleanCand, EGraph, Exhaustion, Id, RewriteCtx, SatStats,
     SaturationLimits,
@@ -21,6 +22,10 @@ use crate::relation::Relation;
 use anyhow::Result;
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -40,6 +45,18 @@ pub struct InferConfig {
     /// audit (`schedule::quarantined_channels`): `recv_of_send_identity`
     /// refuses to collapse them even when the tags match. Empty by default.
     pub quarantined_channels: Vec<usize>,
+    /// Worker threads for the region walk. `1` (the default) is the exact
+    /// sequential walk; `N > 1` checks independent regions of each
+    /// dependency level concurrently on a scoped worker pool with
+    /// per-worker reusable e-graph arenas. Verdicts, relations, stats, and
+    /// failure loci are identical for every `jobs` value — see the
+    /// determinism contract in EXPERIMENTS.md.
+    pub jobs: usize,
+    /// Certificate fingerprint cache shared across regions (and, via
+    /// [`crate::cache::FingerprintCache::global`], across jobs). `None`
+    /// (the default) disables memoization; the CLI enables it for
+    /// verify/suite runs. Never changes verdicts — only wall time.
+    pub cache: Option<Arc<FingerprintCache>>,
 }
 
 impl Default for InferConfig {
@@ -50,6 +67,8 @@ impl Default for InferConfig {
             region_deadline: Some(Duration::from_secs(30)),
             check_numeric: false,
             quarantined_channels: Vec::new(),
+            jobs: 1,
+            cache: None,
         }
     }
 }
@@ -117,6 +136,12 @@ pub struct InferOutput {
     /// Aggregated lemma-application counts (Figure 7 raw data).
     pub stats: SatStats,
     pub per_node: Vec<NodeTiming>,
+    /// Regions replayed from the fingerprint cache / computed fresh. Both
+    /// zero when no cache was configured. Deterministic for `jobs = 1`;
+    /// for `jobs > 1` identical regions racing within one dependency level
+    /// may each count a miss (the results never vary, only the split).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Why inference could not reach a verdict.
@@ -276,46 +301,21 @@ pub fn check_refinement_verdict(
     cfg: &InferConfig,
 ) -> Verdict {
     let rules = lemmas::standard_rewrites();
-    let mut ctx = RewriteCtx::default();
-    ctx.quarantine_channels(cfg.quarantined_channels.iter().copied());
-    let mut r = ri.clone();
-    let mut stats = SatStats { saturated: true, ..Default::default() };
-    let mut per_node = Vec::with_capacity(gs.num_nodes());
-    // One e-graph arena reused (via `reset`) across the whole topological
-    // walk: per-operator e-graphs are small but numerous, so keeping the
-    // memo-table / class-map / union-find allocations warm is a measurable
-    // win on many-operator models (see EXPERIMENTS.md §Perf).
-    let mut scratch = EGraph::new();
-
-    for nid in gs.topo_order() {
-        let t0 = Instant::now();
-        let node = gs.node(nid);
-        CURRENT_REGION.with(|reg| node.name.clone_into(&mut reg.borrow_mut()));
-        // Fresh wall-clock budget per region: one pathological operator
-        // cannot starve the rest of the walk's allowance.
-        let limits = cfg
-            .limits
-            .with_deadline(cfg.region_deadline.map(|d| Instant::now() + d).or(cfg.limits.deadline));
-        let out = compute_node_out_rel(
-            nid, gs, gd, &r, &rules, &ctx, cfg, limits, &mut scratch, &mut stats,
-        );
-        match out {
-            Ok((cands, timing)) => {
-                per_node.push(NodeTiming {
-                    node_name: node.name.clone(),
-                    micros: t0.elapsed().as_micros() as u64,
-                    ..timing
-                });
-                r.insert_all(node.output, cands);
-            }
-            Err(mut e) => {
-                e.node = nid;
-                CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
-                return fail_verdict(e, &stats, r);
-            }
-        }
-    }
-    CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
+    let quarantined: FxHashSet<usize> = cfg.quarantined_channels.iter().copied().collect();
+    // While any chaos fault is armed, bypass the cache entirely: a replayed
+    // region skips its lemma applications (shifting which application is
+    // the fault's "Nth"), and nothing computed mid-fault may be stored.
+    let cache =
+        if crate::chaos::any_armed() { None } else { cfg.cache.as_deref() };
+    let walk = if cfg.jobs > 1 && gs.num_nodes() > 1 {
+        walk_parallel(gs, gd, ri, cfg, &rules, cache, &quarantined)
+    } else {
+        walk_sequential(gs, gd, ri, cfg, &rules, cache, &quarantined)
+    };
+    let WalkOk { r, stats, per_node, cache_hits, cache_misses } = match walk {
+        Ok(w) => w,
+        Err(v) => return v,
+    };
 
     // Listing 1 line 9: restrict to O(G_s) with leaves in O(G_d). An output
     // with no such expression means G_d's outputs cannot reconstruct it —
@@ -354,7 +354,385 @@ pub fn check_refinement_verdict(
             return fail_verdict(e, &stats, r);
         }
     }
-    Verdict::Verified(Box::new(InferOutput { relation: ro, relation_full: r, stats, per_node }))
+    Verdict::Verified(Box::new(InferOutput {
+        relation: ro,
+        relation_full: r,
+        stats,
+        per_node,
+        cache_hits,
+        cache_misses,
+    }))
+}
+
+/// A completed topological walk (the happy path of Listing 1, before the
+/// output filter).
+struct WalkOk {
+    r: Relation,
+    stats: SatStats,
+    per_node: Vec<NodeTiming>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+/// Outcome of one region (one `G_s` operator) of the walk.
+enum NodeOutcome {
+    Done {
+        cands: Vec<CleanCand>,
+        timing: NodeTiming,
+        /// This region's saturation-stats delta. Merging the deltas of all
+        /// regions in ascending-nid order reproduces the cumulative stats
+        /// of the sequential walk exactly (`SatStats::merge` is associative
+        /// with `{saturated: true, ..Default}` as identity).
+        delta: SatStats,
+        from_cache: bool,
+    },
+    Fail {
+        err: RefinementError,
+        delta: SatStats,
+    },
+}
+
+/// Check one region: fingerprint-cache replay when possible, otherwise
+/// compute via [`compute_node_out_rel`] and memoize the result.
+///
+/// Cache-soundness invariants enforced here:
+/// - only `Ok` results whose own delta hit **no** hard budget are stored
+///   (`Inconclusive` precursors and refutations are never cached);
+/// - the per-region wall-clock deadline is started fresh per region and is
+///   *not* part of the key — sound, because only deadline-untouched results
+///   are ever stored and replaying one consumes no budget;
+/// - replay merges the stored stats delta, so cold and warm walks report
+///   byte-identical cumulative stats.
+#[allow(clippy::too_many_arguments)]
+fn process_node(
+    nid: NodeId,
+    gs: &Graph,
+    gd: &Graph,
+    r: &Relation,
+    rules: &[crate::egraph::Rewrite],
+    ctx: &RewriteCtx,
+    cfg: &InferConfig,
+    cache: Option<&FingerprintCache>,
+    quarantined: &FxHashSet<usize>,
+    eg: &mut EGraph,
+) -> NodeOutcome {
+    let fp = cache.map(|_| {
+        fingerprint_region(nid, gs, gd, r, cfg.limits, cfg.max_frontier_iters, quarantined)
+    });
+    if let (Some(c), Some(fp)) = (cache, fp.as_ref()) {
+        if let Some(entry) = c.lookup(&fp.key) {
+            return NodeOutcome::Done {
+                cands: fp.instantiate(&entry.cands),
+                timing: NodeTiming {
+                    node_name: String::new(),
+                    micros: 0,
+                    egraph_nodes: entry.egraph_nodes,
+                    explored_gd: entry.explored_gd,
+                },
+                delta: entry.stats.clone(),
+                from_cache: true,
+            };
+        }
+    }
+    // Fresh wall-clock budget per region: one pathological operator cannot
+    // starve the rest of the walk's allowance.
+    let limits = cfg
+        .limits
+        .with_deadline(cfg.region_deadline.map(|d| Instant::now() + d).or(cfg.limits.deadline));
+    let mut delta = SatStats { saturated: true, ..Default::default() };
+    match compute_node_out_rel(nid, gs, gd, r, rules, ctx, cfg, limits, eg, &mut delta) {
+        Ok((cands, timing)) => {
+            if let (Some(c), Some(fp)) = (cache, fp.as_ref()) {
+                if delta.exhausted.is_none() {
+                    if let Some(canonical) = fp.canonicalize(&cands) {
+                        c.insert(
+                            fp.key.clone(),
+                            RegionEntry {
+                                cands: canonical,
+                                stats: delta.clone(),
+                                egraph_nodes: timing.egraph_nodes,
+                                explored_gd: timing.explored_gd,
+                            },
+                        );
+                    }
+                }
+            }
+            NodeOutcome::Done { cands, timing, delta, from_cache: false }
+        }
+        Err(err) => NodeOutcome::Fail { err, delta },
+    }
+}
+
+/// The exact sequential walk of Listing 1 (`jobs = 1`), with one reused
+/// e-graph arena: per-operator e-graphs are small but numerous, so keeping
+/// the memo-table / class-map / union-find allocations warm is a measurable
+/// win on many-operator models (see EXPERIMENTS.md §Perf).
+#[allow(clippy::too_many_arguments)]
+fn walk_sequential(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+    rules: &[crate::egraph::Rewrite],
+    cache: Option<&FingerprintCache>,
+    quarantined: &FxHashSet<usize>,
+) -> Result<WalkOk, Verdict> {
+    let mut ctx = RewriteCtx::default();
+    ctx.quarantine_channels(cfg.quarantined_channels.iter().copied());
+    let mut r = ri.clone();
+    let mut stats = SatStats { saturated: true, ..Default::default() };
+    let mut per_node = Vec::with_capacity(gs.num_nodes());
+    let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
+    let mut scratch = EGraph::new();
+
+    for nid in gs.topo_order() {
+        let t0 = Instant::now();
+        let node = gs.node(nid);
+        CURRENT_REGION.with(|reg| node.name.clone_into(&mut reg.borrow_mut()));
+        match process_node(nid, gs, gd, &r, rules, &ctx, cfg, cache, quarantined, &mut scratch) {
+            NodeOutcome::Done { cands, timing, delta, from_cache } => {
+                stats.merge(&delta);
+                if cache.is_some() {
+                    if from_cache {
+                        cache_hits += 1;
+                    } else {
+                        cache_misses += 1;
+                    }
+                }
+                per_node.push(NodeTiming {
+                    node_name: node.name.clone(),
+                    micros: t0.elapsed().as_micros() as u64,
+                    ..timing
+                });
+                r.insert_all(node.output, cands);
+            }
+            NodeOutcome::Fail { err, delta } => {
+                stats.merge(&delta);
+                let mut e = err;
+                e.node = nid;
+                CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
+                return Err(fail_verdict(e, &stats, r));
+            }
+        }
+    }
+    CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
+    Ok(WalkOk { r, stats, per_node, cache_hits, cache_misses })
+}
+
+enum WorkerMsg {
+    Out(NodeOutcome),
+    Panicked(String, Box<dyn std::any::Any + Send + 'static>),
+}
+
+/// Wavefront-parallel walk (`jobs > 1`). Regions are grouped into
+/// dependency levels (a node's level is 1 + the max level of its
+/// producers); nodes within a level share no producer/consumer edge, so
+/// they can be checked concurrently against the same relation snapshot.
+///
+/// Determinism contract (tested in `rust/tests/cache.rs`): every level runs
+/// to completion — a failed region's consumers simply find no mapping for
+/// that input and fail immediately, which is cheap — and the walk's verdict
+/// is decided by the *smallest-nid* failed or panicked region. `G_s` node
+/// ids are topologically sorted (producers precede consumers), so every
+/// region below that nid completed with exactly the inputs the sequential
+/// walk would have given it, and the rebuilt prefix relation, merged stats,
+/// failure locus, and error text are all byte-identical to `jobs = 1`.
+///
+/// Panic isolation: a panicking region is caught in its worker, the worker's
+/// arena and rewrite context are replaced (their state is arbitrary after an
+/// unwind mid-rewrite, and a poisoned condition-cache mutex would cascade
+/// panics onto innocent regions), and the payload is re-thrown on the
+/// calling thread only if that region is the walk's authoritative outcome —
+/// exactly reproducing the sequential unwind for
+/// [`check_refinement_isolated`] to convert.
+#[allow(clippy::too_many_arguments)]
+fn walk_parallel(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+    rules: &[crate::egraph::Rewrite],
+    cache: Option<&FingerprintCache>,
+    quarantined: &FxHashSet<usize>,
+) -> Result<WalkOk, Verdict> {
+    let mut tlvl: FxHashMap<TensorId, usize> = FxHashMap::default();
+    let mut levels: Vec<Vec<NodeId>> = Vec::new();
+    for nid in gs.topo_order() {
+        let node = gs.node(nid);
+        let lvl = node
+            .inputs
+            .iter()
+            .filter_map(|t| tlvl.get(t))
+            .map(|&l| l + 1)
+            .max()
+            .unwrap_or(0);
+        tlvl.insert(node.output, lvl);
+        if levels.len() == lvl {
+            levels.push(Vec::new());
+        }
+        levels[lvl].push(nid); // ascending nid within each level
+    }
+
+    let jobs = cfg.jobs.max(1);
+    let mk_ctx = || {
+        let mut ctx = RewriteCtx::default();
+        ctx.quarantine_channels(cfg.quarantined_channels.iter().copied());
+        ctx
+    };
+    // Per-worker reusable arenas, persistent across levels.
+    let mut arenas: Vec<(EGraph, RewriteCtx)> =
+        (0..jobs).map(|_| (EGraph::new(), mk_ctx())).collect();
+    let n = gs.num_nodes();
+    let mut outcomes: Vec<Option<NodeOutcome>> = Vec::with_capacity(n);
+    outcomes.resize_with(n, || None);
+    let mut micros: Vec<u64> = vec![0; n];
+    let mut panics: FxHashMap<NodeId, (String, Box<dyn std::any::Any + Send>)> =
+        FxHashMap::default();
+    let mut r = ri.clone();
+
+    for level in &levels {
+        if level.len() == 1 {
+            // Single region: run inline on the calling thread, uncaught —
+            // a panic propagates exactly as in the sequential walk.
+            let nid = level[0];
+            let t0 = Instant::now();
+            let node = gs.node(nid);
+            CURRENT_REGION.with(|reg| node.name.clone_into(&mut reg.borrow_mut()));
+            let (eg, ctx) = &mut arenas[0];
+            let out = process_node(nid, gs, gd, &r, rules, ctx, cfg, cache, quarantined, eg);
+            micros[nid as usize] = t0.elapsed().as_micros() as u64;
+            if let NodeOutcome::Done { cands, .. } = &out {
+                r.insert_all(node.output, cands.clone());
+            }
+            outcomes[nid as usize] = Some(out);
+            continue;
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(NodeId, u64, WorkerMsg)>();
+        let workers = jobs.min(level.len());
+        let r_snap = &r;
+        let next_ref = &next;
+        let mk_ctx_ref = &mk_ctx;
+        std::thread::scope(|s| {
+            for arena in arenas.iter_mut().take(workers) {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let (eg, ctx) = arena;
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        let Some(&nid) = level.get(i) else { break };
+                        let node = gs.node(nid);
+                        CURRENT_REGION
+                            .with(|reg| node.name.clone_into(&mut reg.borrow_mut()));
+                        let t0 = Instant::now();
+                        let res = catch_unwind(AssertUnwindSafe(|| {
+                            process_node(
+                                nid, gs, gd, r_snap, rules, ctx, cfg, cache, quarantined, eg,
+                            )
+                        }));
+                        let us = t0.elapsed().as_micros() as u64;
+                        match res {
+                            Ok(out) => {
+                                let _ = tx.send((nid, us, WorkerMsg::Out(out)));
+                            }
+                            Err(payload) => {
+                                let region = CURRENT_REGION
+                                    .with(|reg| std::mem::take(&mut *reg.borrow_mut()));
+                                let _ =
+                                    tx.send((nid, us, WorkerMsg::Panicked(region, payload)));
+                                // The arena and the ctx's condition cache
+                                // hold arbitrary state from the unwound
+                                // region; replace both so later regions on
+                                // this worker cannot cascade-fail and get
+                                // misblamed.
+                                *eg = EGraph::new();
+                                *ctx = mk_ctx_ref();
+                            }
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for (nid, us, msg) in rx {
+                micros[nid as usize] = us;
+                match msg {
+                    WorkerMsg::Out(out) => outcomes[nid as usize] = Some(out),
+                    WorkerMsg::Panicked(region, payload) => {
+                        panics.insert(nid, (region, payload));
+                    }
+                }
+            }
+        });
+        // Publish this level's successes in ascending-nid order before the
+        // next level reads the relation.
+        for &nid in level {
+            if let Some(NodeOutcome::Done { cands, .. }) = &outcomes[nid as usize] {
+                r.insert_all(gs.node(nid).output, cands.clone());
+            }
+        }
+    }
+
+    // The walk's authoritative outcome is the smallest-nid region that
+    // failed or panicked — exactly where the sequential walk would stop.
+    let problem = gs.topo_order().find(|&nid| {
+        panics.contains_key(&nid)
+            || matches!(outcomes[nid as usize], Some(NodeOutcome::Fail { .. }))
+    });
+    if let Some(k) = problem {
+        // Rebuild the sequential prefix: every region below k completed
+        // (its producers are below k too), so merging their deltas and
+        // outputs in ascending order reproduces the sequential walk state.
+        let mut stats = SatStats { saturated: true, ..Default::default() };
+        let mut prefix = ri.clone();
+        for nid in gs.topo_order().take_while(|&nid| nid < k) {
+            if let Some(NodeOutcome::Done { cands, delta, .. }) = &outcomes[nid as usize] {
+                stats.merge(delta);
+                prefix.insert_all(gs.node(nid).output, cands.clone());
+            }
+        }
+        if let Some((region, payload)) = panics.remove(&k) {
+            // Re-throw on the calling thread with the worker's region name,
+            // for check_refinement_isolated to convert to
+            // Inconclusive(Panic) exactly as in sequential mode.
+            CURRENT_REGION.with(|reg| *reg.borrow_mut() = region);
+            resume_unwind(payload);
+        }
+        let Some(NodeOutcome::Fail { err, delta }) = outcomes[k as usize].take() else {
+            unreachable!("problem nid must hold a Fail outcome");
+        };
+        stats.merge(&delta);
+        let mut e = err;
+        e.node = k;
+        CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
+        return Err(fail_verdict(e, &stats, prefix));
+    }
+
+    let mut stats = SatStats { saturated: true, ..Default::default() };
+    let mut per_node = Vec::with_capacity(n);
+    let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
+    for nid in gs.topo_order() {
+        let Some(NodeOutcome::Done { timing, delta, from_cache, .. }) =
+            &outcomes[nid as usize]
+        else {
+            unreachable!("no problem nid, so every region completed");
+        };
+        stats.merge(delta);
+        if cache.is_some() {
+            if *from_cache {
+                cache_hits += 1;
+            } else {
+                cache_misses += 1;
+            }
+        }
+        per_node.push(NodeTiming {
+            node_name: gs.node(nid).name.clone(),
+            micros: micros[nid as usize],
+            egraph_nodes: timing.egraph_nodes,
+            explored_gd: timing.explored_gd,
+        });
+    }
+    CURRENT_REGION.with(|reg| reg.borrow_mut().clear());
+    Ok(WalkOk { r, stats, per_node, cache_hits, cache_misses })
 }
 
 /// Classify a walk failure: if any saturation pass of the walk was cut by a

@@ -31,6 +31,8 @@
 //!   composition, 23 mutation operators, differential soundness oracle.
 //! - [`hlo`] — HLO-text frontend (XLA/JAX capture path).
 //! - [`coordinator`] — multi-threaded verification service + reports.
+//! - [`cache`] — certificate fingerprint cache: canonical region
+//!   serialization + memoized saturation results for repeated layers.
 //! - [`runtime`] — PJRT execution of AOT artifacts for cross-validation.
 //! - [`bench`] — mini benchmark harness used by `cargo bench`.
 //! - [`chaos`] — test-only fault-injection hooks (feature `chaos`).
@@ -38,6 +40,7 @@
 pub mod baseline;
 pub mod bench;
 pub mod bugs;
+pub mod cache;
 pub mod chaos;
 pub mod coordinator;
 pub mod egraph;

@@ -57,7 +57,9 @@ fn run() -> Result<i32> {
             eprintln!(
                 "usage: graphguard <verify|suite|bugs|fuzz|lemmas|hlo> [options]\n\
                  \n  verify --gs g_s.json --gd g_d.json --ri relation.json [--deadline-ms N]\
-                 \n  suite  [--ranks N] [--threads N] [--deadline-ms N]\
+                 \n         [--jobs N] [--no-cache]\
+                 \n  suite  [--ranks N] [--threads N] [--deadline-ms N] [--jobs N]\
+                 \n         [--no-cache] [--canonical]\
                  \n  bugs\
                  \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
                  \n         [--flavor F] [--replay ce.json] [--resume DIR] [--abort-after N]\
@@ -79,13 +81,24 @@ fn load_graph(path: &str) -> Result<ir::Graph> {
     ir::json_io::from_json(&json).with_context(|| format!("building graph from {path}"))
 }
 
-/// Shared budget flags → inference config. `--deadline-ms 0` disables the
-/// per-region wall-clock deadline entirely.
+/// Shared budget/throughput flags → inference config. `--deadline-ms 0`
+/// disables the per-region wall-clock deadline entirely; `--jobs N` runs
+/// the region walk on N workers (default 1); the certificate fingerprint
+/// cache is on for verify/suite unless `--no-cache` is given (fuzz builds
+/// its own configs and stays uncached — the differential oracle is the
+/// soundness net and must exercise the full engine every time).
 fn infer_cfg(args: &[String]) -> Result<infer::InferConfig> {
     let mut cfg = infer::InferConfig::default();
     if let Some(ms) = arg_value(args, "--deadline-ms") {
         let ms: u64 = ms.parse().with_context(|| format!("bad --deadline-ms '{ms}'"))?;
         cfg.region_deadline = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(jobs) = arg_value(args, "--jobs") {
+        cfg.jobs =
+            jobs.parse::<usize>().with_context(|| format!("bad --jobs '{jobs}'"))?.max(1);
+    }
+    if !args.iter().any(|a| a == "--no-cache") {
+        cfg.cache = Some(graphguard::cache::FingerprintCache::global().clone());
     }
     Ok(cfg)
 }
@@ -104,6 +117,13 @@ fn cmd_verify(args: &[String]) -> Result<i32> {
         Verdict::Verified(out) => {
             println!("refinement HOLDS — R_o:");
             println!("{}", out.relation.to_json(&gs, &gd).to_string_pretty());
+            if out.cache_hits + out.cache_misses > 0 {
+                println!(
+                    "cache: {}/{} region hits",
+                    out.cache_hits,
+                    out.cache_hits + out.cache_misses
+                );
+            }
             if args.iter().any(|a| a == "--check-numeric") {
                 infer::verify_numeric(&gs, &gd, &ri, &out.relation, 7)?;
                 println!("numeric certificate: OK");
@@ -137,7 +157,14 @@ fn cmd_suite(args: &[String]) -> Result<i32> {
         coordinator::Coordinator { cfg, ..coordinator::Coordinator::default() }
     };
     let results = coord.run_batch(models::table2_workloads(ranks));
-    print!("{}", coordinator::report_table(&results));
+    if args.iter().any(|a| a == "--canonical") {
+        // Byte-stable report for the jobs/cache determinism gate: no
+        // durations, no cache counters (see coordinator::canonical_report).
+        print!("{}", coordinator::canonical_report(&results));
+    } else {
+        print!("{}", coordinator::report_table(&results));
+        println!("{}", coordinator::cache_summary(&results));
+    }
     if results.iter().any(|r| r.verdict == JobVerdict::Refuted) {
         eprintln!("some workloads failed refinement");
         return Ok(EXIT_REFUTED);

@@ -1,0 +1,294 @@
+//! Fingerprint-cache + parallel-walk contract tests (ISSUE 7).
+//!
+//! The invariant under test everywhere: the cache and the `jobs > 1`
+//! wavefront walk change *wall time only*. Verdicts, relations
+//! (certificates), cumulative lemma stats, failure loci, and error text are
+//! byte-identical across {cold, warm} × {cache, no-cache} × jobs ∈ {1, 4}.
+
+use graphguard::cache::FingerprintCache;
+use graphguard::coordinator::{canonical_report, Coordinator};
+use graphguard::egraph::SaturationLimits;
+use graphguard::infer::{
+    check_refinement_escalating, check_refinement_isolated, verify_numeric, EscalationPolicy,
+    InconclusiveReason, InferConfig, Verdict,
+};
+use graphguard::ir::Graph;
+use graphguard::models::gpt::{self, GptConfig};
+use graphguard::models::{regression, table2_workloads};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Render everything verdict-relevant about an outcome — and nothing
+/// timing- or counter-dependent — so runs can be compared byte for byte.
+fn render(v: &Verdict, gs: &Graph, gd: &Graph) -> String {
+    match v {
+        Verdict::Verified(o) => {
+            let mut counts: Vec<(&str, u64)> =
+                o.stats.applied.iter().map(|(&k, &v)| (k, v)).collect();
+            counts.sort_unstable();
+            let per_node: Vec<String> = o
+                .per_node
+                .iter()
+                .map(|t| format!("{}:{}:{}", t.node_name, t.egraph_nodes, t.explored_gd))
+                .collect();
+            format!(
+                "verified\nRo={}\nRfull={}\niters={} saturated={} counts={:?}\nper_node={:?}",
+                o.relation.to_json(gs, gd).to_string_pretty(),
+                o.relation_full.to_json(gs, gd).to_string_pretty(),
+                o.stats.iterations,
+                o.stats.saturated,
+                counts,
+                per_node,
+            )
+        }
+        Verdict::Refuted(e) => format!("refuted\nnode={}\n{e}", e.node),
+        Verdict::Inconclusive(i) => format!(
+            "{}\nregion={}\ndetail={}\npartial={}",
+            v.tag(),
+            i.region,
+            i.detail,
+            i.partial_relation.to_json(gs, gd).to_string_pretty(),
+        ),
+    }
+}
+
+fn cached_cfg(cache: &Arc<FingerprintCache>) -> InferConfig {
+    InferConfig { cache: Some(Arc::clone(cache)), ..InferConfig::default() }
+}
+
+#[test]
+fn cache_is_off_by_default_and_counters_stay_zero() {
+    let cfg = InferConfig::default();
+    assert!(cfg.cache.is_none(), "library default must be uncached");
+    let (gs, gd, ri) = gpt::tp_pair(2, 1);
+    match check_refinement_isolated(&gs, &gd, &ri, &cfg) {
+        Verdict::Verified(o) => {
+            assert_eq!((o.cache_hits, o.cache_misses), (0, 0));
+        }
+        v => panic!("clean pair must verify, got {}", v.tag()),
+    }
+}
+
+/// Satellite: cold-vs-warm byte-identical verdicts and certificates across
+/// the Table-2 suite (same escalation policy the coordinator uses).
+#[test]
+fn cold_and_warm_table2_outcomes_are_byte_identical() {
+    let cache = Arc::new(FingerprintCache::new());
+    let cfg = cached_cfg(&cache);
+    let nocache = InferConfig::default();
+    let policy = EscalationPolicy::default();
+    for w in table2_workloads(2) {
+        let base = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &nocache, &policy).0;
+        let cold = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy).0;
+        let warm = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy).0;
+        let b = render(&base, &w.gs, &w.gd);
+        let c = render(&cold, &w.gs, &w.gd);
+        let h = render(&warm, &w.gs, &w.gd);
+        assert_eq!(b, c, "{}: cold cached run diverged from uncached", w.name);
+        assert_eq!(c, h, "{}: warm run diverged from cold", w.name);
+    }
+    assert!(cache.stats().hits > 0, "warm pass must have replayed regions");
+}
+
+/// Acceptance: on an L=8 repeated-layer GPT workload the warm run reports
+/// hit-rate ≥ (L−1)/L, and already the cold run verifies each repeated
+/// layer only once (misses bounded by one layer plus the embed/head
+/// epilogue).
+#[test]
+fn l8_gpt_meets_the_hit_rate_floor() {
+    const LAYERS: usize = 8;
+    let model_cfg = GptConfig::default();
+    let (gs, gd, ri) = gpt::tp_sp_pair(2, LAYERS, &model_cfg).expect("build workload");
+    let cache = Arc::new(FingerprintCache::new());
+    let cfg = cached_cfg(&cache);
+    let policy = EscalationPolicy::default();
+
+    let (cold, _) = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy);
+    let Verdict::Verified(cold) = cold else { panic!("cold run must verify") };
+    let bound = gpt::seq(1, &model_cfg).num_nodes() as u64 + 5;
+    assert!(
+        cold.cache_misses <= bound,
+        "cold run recomputed repeated layers: {} misses > bound {bound}",
+        cold.cache_misses
+    );
+    assert!(cold.cache_hits > 0, "cold run must replay repeated layers");
+
+    let (warm, _) = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy);
+    let Verdict::Verified(warm) = warm else { panic!("warm run must verify") };
+    let rate =
+        warm.cache_hits as f64 / (warm.cache_hits + warm.cache_misses).max(1) as f64;
+    let floor = (LAYERS - 1) as f64 / LAYERS as f64;
+    assert!(rate >= floor, "warm hit-rate {rate:.3} < acceptance floor {floor:.3}");
+
+    // A replayed certificate must still hold numerically (§3.3).
+    verify_numeric(&gs, &gd, &ri, &warm.relation, 1234).expect("cached certificate replays");
+}
+
+/// Soundness: exhausted regions are never cached. A deadline-truncated
+/// result is a wall-clock artifact and the deadline is deliberately not
+/// part of the fingerprint key, so storing one could replay a truncated
+/// answer under a config with no deadline at all. Under a zero deadline
+/// every region exhausts before completing (see the
+/// `elapsed_deadline_marks_exhaustion_before_any_work` e-graph unit test),
+/// so the walk is `Inconclusive` and the cache must stay empty.
+#[test]
+fn inconclusive_regions_are_never_cached() {
+    let w = table2_workloads(2).remove(0);
+    let cache = Arc::new(FingerprintCache::new());
+    let starved = InferConfig {
+        region_deadline: Some(Duration::ZERO),
+        cache: Some(Arc::clone(&cache)),
+        ..InferConfig::default()
+    };
+    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &starved) {
+        Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Timeout),
+        v => panic!("zero deadline must starve the walk, got {}", v.tag()),
+    }
+    assert_eq!(cache.len(), 0, "an exhausted walk must not leave entries behind");
+    assert_eq!(cache.stats().inserts, 0);
+
+    // The same cache object then serves a real run: a fresh verification
+    // (misses, not stale replays) that still reaches Verified.
+    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &cached_cfg(&cache)) {
+        Verdict::Verified(o) => {
+            assert!(o.cache_misses > 0, "nothing stale may have been replayed")
+        }
+        v => panic!("clean pair must verify at defaults, got {}", v.tag()),
+    }
+
+    // NodeBudget starvation likewise never stores the starved region: a
+    // warm rerun through the same cache reproduces the identical verdict
+    // instead of replaying anything stale.
+    let w = table2_workloads(2).remove(0);
+    let cache = Arc::new(FingerprintCache::new());
+    let tiny = InferConfig {
+        limits: SaturationLimits::new(8, 10),
+        cache: Some(Arc::clone(&cache)),
+        ..InferConfig::default()
+    };
+    let a = check_refinement_isolated(&w.gs, &w.gd, &w.ri, &tiny);
+    let b = check_refinement_isolated(&w.gs, &w.gd, &w.ri, &tiny);
+    match &a {
+        Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::NodeBudget),
+        v => panic!("a 10-node budget must starve, got {}", v.tag()),
+    }
+    assert_eq!(render(&a, &w.gs, &w.gd), render(&b, &w.gs, &w.gd));
+}
+
+/// Soundness: refuted regions are never cached either, and a refutation is
+/// byte-identical with and without the cache (the successful prefix MAY be
+/// cached — those are genuine proofs).
+#[test]
+fn refutations_are_cache_invariant() {
+    let (gs, gd, ri) = regression::grad_accum_buggy_pair(2).unwrap();
+    let cache = Arc::new(FingerprintCache::new());
+    let cfg = cached_cfg(&cache);
+    let policy = EscalationPolicy::default();
+    let plain = check_refinement_escalating(&gs, &gd, &ri, &InferConfig::default(), &policy).0;
+    let cold = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy).0;
+    let warm = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy).0;
+    assert!(matches!(plain, Verdict::Refuted(_)), "pair is buggy by construction");
+    let p = render(&plain, &gs, &gd);
+    assert_eq!(p, render(&cold, &gs, &gd), "cache must not change a refutation");
+    assert_eq!(p, render(&warm, &gs, &gd), "warm cache must not change a refutation");
+}
+
+/// Acceptance: `jobs = 4` produces byte-identical outcomes to `jobs = 1`
+/// across the Table-2 suite — with and without the cache — and the
+/// coordinator's canonical suite report is identical too.
+#[test]
+fn jobs_4_is_byte_identical_to_jobs_1_across_table2() {
+    let policy = EscalationPolicy::default();
+    for w in table2_workloads(2) {
+        let seq_cfg = InferConfig::default();
+        let par_cfg = InferConfig { jobs: 4, ..InferConfig::default() };
+        let seq = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &seq_cfg, &policy).0;
+        let par = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &par_cfg, &policy).0;
+        assert_eq!(
+            render(&seq, &w.gs, &w.gd),
+            render(&par, &w.gs, &w.gd),
+            "{}: jobs=4 diverged from jobs=1",
+            w.name
+        );
+        // cached parallel run against a fresh private cache
+        let cache = Arc::new(FingerprintCache::new());
+        let par_cached =
+            InferConfig { jobs: 4, cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
+        let pc = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &par_cached, &policy).0;
+        assert_eq!(
+            render(&seq, &w.gs, &w.gd),
+            render(&pc, &w.gs, &w.gd),
+            "{}: jobs=4+cache diverged from jobs=1",
+            w.name
+        );
+    }
+}
+
+/// The suite-level determinism gate the CI step scripts drive through the
+/// CLI: coordinator batches at (threads, jobs) ∈ {(1,1), (4,4)} with a
+/// shared cache render identical canonical reports.
+#[test]
+fn canonical_suite_report_is_invariant_across_threads_and_jobs() {
+    let mk = |threads: usize, jobs: usize, cache: Option<Arc<FingerprintCache>>| {
+        let cfg = InferConfig { jobs, cache, ..InferConfig::default() };
+        let coord = Coordinator::new(threads, cfg);
+        canonical_report(&coord.run_batch(table2_workloads(2)))
+    };
+    let baseline = mk(1, 1, None);
+    let cache = Arc::new(FingerprintCache::new());
+    let parallel = mk(4, 4, Some(Arc::clone(&cache)));
+    assert_eq!(baseline, parallel, "threads=4/jobs=4/cache must not change the report");
+    let warm = mk(4, 4, Some(cache));
+    assert_eq!(baseline, warm, "a warm shared cache must not change the report");
+}
+
+/// Failure localization is jobs-invariant: the buggy grad-accum pair
+/// refutes at the same operator with the same error text under the
+/// parallel walk.
+#[test]
+fn refutation_locus_is_jobs_invariant() {
+    let (gs, gd, ri) = regression::grad_accum_buggy_pair(2).unwrap();
+    let policy = EscalationPolicy::default();
+    let seq =
+        check_refinement_escalating(&gs, &gd, &ri, &InferConfig::default(), &policy).0;
+    let par = check_refinement_escalating(
+        &gs,
+        &gd,
+        &ri,
+        &InferConfig { jobs: 4, ..InferConfig::default() },
+        &policy,
+    )
+    .0;
+    let (Verdict::Refuted(a), Verdict::Refuted(b)) = (&seq, &par) else {
+        panic!("both walks must refute: {} / {}", seq.tag(), par.tag());
+    };
+    assert_eq!(a.node, b.node, "locus node must match");
+    assert_eq!(a.node_name, b.node_name);
+    assert_eq!(format!("{a}"), format!("{b}"), "error text must match byte for byte");
+}
+
+/// Resource verdicts are jobs-invariant too: a starved budget yields the
+/// same Inconclusive(NodeBudget) region and detail under the parallel walk.
+#[test]
+fn node_budget_verdict_is_jobs_invariant() {
+    let w = table2_workloads(2).remove(0);
+    let starve = |jobs: usize| {
+        let cfg = InferConfig {
+            limits: SaturationLimits::new(8, 10),
+            jobs,
+            ..InferConfig::default()
+        };
+        check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &EscalationPolicy::single_shot())
+            .0
+    };
+    let seq = starve(1);
+    let par = starve(4);
+    let (Verdict::Inconclusive(a), Verdict::Inconclusive(b)) = (&seq, &par) else {
+        panic!("both walks must starve: {} / {}", seq.tag(), par.tag());
+    };
+    assert_eq!(a.reason, InconclusiveReason::NodeBudget);
+    assert_eq!(a.reason, b.reason);
+    assert_eq!(a.region, b.region, "starved region must match");
+    assert_eq!(a.detail, b.detail);
+    assert_eq!(render(&seq, &w.gs, &w.gd), render(&par, &w.gs, &w.gd));
+}

@@ -7,12 +7,15 @@
 //! Chaos state is process-global, so every test serializes on [`LOCK`]
 //! and pins `threads = 1` for a deterministic workload order.
 
+use graphguard::cache::FingerprintCache;
 use graphguard::chaos::{arm, disarm_all, fired, FaultAction};
 use graphguard::coordinator::{Coordinator, JobVerdict};
 use graphguard::fuzz::{self, Flavor, FuzzConfig};
-use graphguard::infer::{EscalationPolicy, InconclusiveReason, InferConfig};
+use graphguard::infer::{
+    check_refinement_isolated, EscalationPolicy, InconclusiveReason, InferConfig, Verdict,
+};
 use graphguard::models;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 static LOCK: Mutex<()> = Mutex::new(());
@@ -89,6 +92,45 @@ fn suite_survives_injected_panic_and_spin() {
             "unpoisoned workload {} must still verify",
             r.name
         );
+    }
+}
+
+/// An injected panic must never poison the fingerprint cache. While any
+/// fault is armed the cache is bypassed entirely (no lookups, no inserts —
+/// see `chaos::any_armed`), so the poisoned run stores nothing; after
+/// disarming, the same cache object serves a fresh, fully verified run
+/// whose warm rerun replays it.
+#[test]
+fn injected_panic_never_poisons_the_cache() {
+    let _guard = serialized();
+    let (gs, gd, ri) = models::gpt::pp_tp_pair(2, 2, 2).unwrap();
+    let cache = Arc::new(FingerprintCache::new());
+    let cfg = InferConfig { cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
+
+    arm("recv_of_send_identity", 1, FaultAction::Panic);
+    let v = check_refinement_isolated(&gs, &gd, &ri, &cfg);
+    disarm_all();
+    assert!(fired("recv_of_send_identity"), "panic fault never fired");
+    match v {
+        Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Panic),
+        v => panic!("poisoned run must be Inconclusive(Panic), got {}", v.tag()),
+    }
+    assert_eq!(cache.len(), 0, "an armed-chaos run must bypass the cache entirely");
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.inserts), (0, 0, 0), "no lookups while armed");
+
+    // Disarmed, the same cache object serves a fresh verification (misses,
+    // not stale replays of anything the poisoned run touched)...
+    match check_refinement_isolated(&gs, &gd, &ri, &cfg) {
+        Verdict::Verified(o) => {
+            assert!(o.cache_misses > 0, "disarmed run must verify from scratch")
+        }
+        v => panic!("disarmed run must verify, got {}", v.tag()),
+    }
+    // ...and a warm rerun replays it.
+    match check_refinement_isolated(&gs, &gd, &ri, &cfg) {
+        Verdict::Verified(o) => assert!(o.cache_hits > 0, "warm rerun must hit"),
+        v => panic!("warm rerun must verify, got {}", v.tag()),
     }
 }
 

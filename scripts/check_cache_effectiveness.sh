@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Cache-effectiveness gate: assert the fingerprint-cache acceptance floor
+# on a fresh BENCH_cache.json (written by `cargo bench --bench
+# cache_effectiveness` — an L=8 repeated-layer GPT workload).
+#
+#   usage: scripts/check_cache_effectiveness.sh [BENCH_cache.json]
+#
+# Asserts, independently of wall time (that part is bench_compare.sh's
+# job): the warm run's hit-rate meets the (L−1)/L floor, the cold run
+# actually exercised the cache, and the no-cache control reported zero
+# cache traffic. The bench binary asserts the same bounds before writing
+# the file; this re-checks the committed artifact so a schema drift or a
+# stale file can't silently pass the job.
+set -euo pipefail
+
+file="${1:-BENCH_cache.json}"
+if [ ! -f "$file" ]; then
+    echo "check_cache_effectiveness: '$file' not found — run" >&2
+    echo "  cargo bench --bench cache_effectiveness" >&2
+    exit 1
+fi
+
+python3 - "$file" <<'PY'
+import json
+import sys
+
+L = 8  # layers in the bench workload (benches/cache_effectiveness.rs)
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+rows = {r["workload"]: r for r in doc.get("results", [])}
+
+def row(name):
+    if name not in rows:
+        sys.exit(f"{path}: missing row '{name}' (bench schema drifted?)")
+    return rows[name]
+
+nocache = row("gpt8_nocache")
+if nocache["cache_hits"] or nocache["cache_misses"]:
+    sys.exit(f"{path}: gpt8_nocache control must report zero cache traffic, "
+             f"got {nocache['cache_hits']}/{nocache['cache_misses']}")
+
+cold = row("gpt8_cold")
+if cold["cache_hits"] + cold["cache_misses"] == 0:
+    sys.exit(f"{path}: gpt8_cold reports no cache traffic at all")
+
+floor = (L - 1) / L
+for name in ("gpt8_warm", "gpt8_warm_jobs4"):
+    warm = row(name)
+    total = warm["cache_hits"] + warm["cache_misses"]
+    rate = warm["cache_hits"] / total if total else 0.0
+    print(f"{name}: hit-rate {rate:.3f} ({warm['cache_hits']}/{total}, "
+          f"floor {floor:.3f})")
+    if rate < floor:
+        sys.exit(f"{path}: {name} hit-rate {rate:.3f} below the "
+                 f"(L-1)/L acceptance floor {floor:.3f}")
+
+print("cache effectiveness gate passed")
+PY

@@ -4,8 +4,9 @@
 # verdict with one command. Steps (both CI jobs, serialized):
 #
 #   rust job:        build → test (incl. chaos) → fmt → clippy (-D warnings)
-#   fuzz-smoke job:  suite → fuzz smoke → resume drill → fig4 + fuzz benches
-#                    → bench gate
+#   fuzz-smoke job:  suite → parallel-determinism gate → fuzz smoke →
+#                    resume drill → fig4 + fuzz + cache benches →
+#                    cache-effectiveness gate → bench gate
 #
 # Pass --quick to stop after the rust job (the fast pre-push check).
 set -euo pipefail
@@ -38,10 +39,30 @@ if [ "${1:-}" = "--quick" ]; then
 fi
 
 step cargo run --release --bin graphguard -- suite --ranks 2
+
+# Parallel-walk determinism gate: the canonical suite report (no durations,
+# no cache counters) must be byte-identical across jobs∈{1,4}, cached or
+# not. Separate processes, so each run starts with a cold global cache.
+echo
+echo "==> parallel-walk determinism gate (suite --jobs 4 == --jobs 1)"
+tmpdir="$(mktemp -d)"
+trap 'rm -rf "$tmpdir"' EXIT
+cargo run --release --bin graphguard -- suite --ranks 2 --jobs 1 --canonical \
+    > "$tmpdir/suite_jobs1.txt"
+cargo run --release --bin graphguard -- suite --ranks 2 --jobs 4 --canonical \
+    > "$tmpdir/suite_jobs4.txt"
+diff -u "$tmpdir/suite_jobs1.txt" "$tmpdir/suite_jobs4.txt"
+cargo run --release --bin graphguard -- suite --ranks 2 --jobs 4 --no-cache --canonical \
+    > "$tmpdir/suite_jobs4_nocache.txt"
+diff -u "$tmpdir/suite_jobs1.txt" "$tmpdir/suite_jobs4_nocache.txt"
+echo "canonical suite report is jobs- and cache-invariant"
+
 step cargo run --release --bin graphguard -- fuzz --seeds 50 --seed 0
 step ./scripts/resume_smoke.sh
 step cargo bench --bench fig4_verification_time
 step cargo bench --bench fuzz_throughput
+step cargo bench --bench cache_effectiveness
+step ./scripts/check_cache_effectiveness.sh BENCH_cache.json
 step ./scripts/bench_compare.sh BENCH_baseline .
 
 echo

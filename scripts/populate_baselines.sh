@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Promote freshly measured BENCH_<name>.json files into BENCH_baseline/,
+# replacing the bootstrap placeholders and arming the regression gate.
+#
+#   usage: scripts/populate_baselines.sh [FRESH_DIR] [BASELINE_DIR]
+#
+# FRESH_DIR (default .) should hold BENCH_*.json files written by the
+# cargo bench targets — either locally or extracted from the CI
+# `fuzz-and-bench` artifact (the trusted source; see
+# BENCH_baseline/README.md). Only benches that already have a slot in
+# BASELINE_DIR are promoted, so a new bench must first commit a bootstrap
+# placeholder — this keeps the set of gated benches an explicit, reviewed
+# decision. A fresh file that itself carries `"bootstrap": true` or has no
+# timed rows is refused: the gate must never be armed with fabricated or
+# empty timings.
+set -euo pipefail
+
+fresh_dir="${1:-.}"
+baseline_dir="${2:-BENCH_baseline}"
+
+if [ ! -d "$baseline_dir" ]; then
+    echo "populate_baselines: baseline directory '$baseline_dir' not found" >&2
+    exit 1
+fi
+
+shopt -s nullglob
+slots=("$baseline_dir"/BENCH_*.json)
+if [ ${#slots[@]} -eq 0 ]; then
+    echo "populate_baselines: no baseline slots under '$baseline_dir'" >&2
+    exit 1
+fi
+
+promoted=0
+for slot in "${slots[@]}"; do
+    name="$(basename "$slot")"
+    fresh="$fresh_dir/$name"
+    if [ ! -f "$fresh" ]; then
+        echo "  SKIP $name: no fresh measurement in '$fresh_dir'"
+        continue
+    fi
+    python3 - "$fresh" <<'PY'
+import json
+import sys
+
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+if doc.get("bootstrap"):
+    sys.exit(f"{path}: refusing to promote a bootstrap placeholder as a baseline")
+rows = doc.get("results", [])
+if not rows or sum(r.get("wall_ns", 0) for r in rows) <= 0:
+    sys.exit(f"{path}: refusing to promote a baseline with no timed rows")
+PY
+    cp "$fresh" "$slot"
+    echo "  PROMOTED $name"
+    promoted=$((promoted + 1))
+done
+
+if [ "$promoted" -eq 0 ]; then
+    echo "populate_baselines: nothing promoted (run the cargo bench targets first)" >&2
+    exit 1
+fi
+echo "populate_baselines: $promoted baseline(s) updated — review and commit $baseline_dir/"
