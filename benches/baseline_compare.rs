@@ -3,6 +3,9 @@
 //! (Aerify/Tensat-style). Shape to reproduce: iterative wins, and the gap
 //! (and the baseline's e-graph size) grows with model size.
 
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
 use graphguard::baseline::check_refinement_monolithic;
 use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
 use graphguard::egraph::SaturationLimits;

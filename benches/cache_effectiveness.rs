@@ -14,6 +14,9 @@
 //! miss count is bounded by one layer's regions plus the embedding/head
 //! epilogue — i.e. repeated layers really do verify once.
 
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
 use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
 use graphguard::cache::FingerprintCache;
 use graphguard::infer::{check_refinement_isolated, InferConfig, Verdict};

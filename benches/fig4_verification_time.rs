@@ -3,6 +3,9 @@
 //! positively correlated with operator count; all models well under the
 //! 3-minute envelope; ByteDance bwd > fwd.
 
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
 use graphguard::bench::{write_bench_json, BenchRecord};
 use graphguard::coordinator::{report_table, Coordinator};
 use graphguard::models;

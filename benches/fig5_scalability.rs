@@ -7,6 +7,9 @@
 //! wall-clock ns, lemma applications) so the perf trajectory is tracked
 //! across PRs — see EXPERIMENTS.md §Perf.
 
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
 use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
 use graphguard::coordinator::Coordinator;
 use graphguard::models::{gpt, llama, Workload};

@@ -3,6 +3,9 @@
 //! clean-op ("c" group) lemmas dominate, counts grow with parallelism,
 //! HLO/vLLM/Pallas custom-op lemmas appear only for their models.
 
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
 use graphguard::bench::{write_bench_json, BenchRecord};
 use graphguard::coordinator::Coordinator;
 use graphguard::models;

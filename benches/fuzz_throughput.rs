@@ -3,6 +3,9 @@
 //! adversarial test bed so CI fuzz budgets can be sized; writes
 //! `BENCH_fuzz.json` like every other bench target.
 
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
 use graphguard::bench::{measure, table, BenchRecord};
 use graphguard::fuzz::{run_fuzz, FuzzConfig};
 

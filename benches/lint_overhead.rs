@@ -1,0 +1,63 @@
+//! ShardFlow static-analysis overhead on the Table-2 workloads.
+//!
+//! The analysis runs before every saturation (`check_refinement*` attaches
+//! its findings to the report), so its cost rides on every verification.
+//! The claim this bench tracks: the lint is a single O(|G_d|) pass —
+//! microseconds against the paper's seconds-scale saturation — and stays
+//! linear as the parallelism degree grows. Each row is the mean wall time
+//! of `ITERS` analyze() calls over one workload; verdict is "verified"
+//! when the clean workload produced zero findings (the soundness
+//! contract), "refuted" if any finding fired.
+
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
+use graphguard::analysis;
+use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
+use graphguard::models;
+use std::time::{Duration, Instant};
+
+const ITERS: u32 = 100;
+
+fn main() {
+    println!("ShardFlow lint overhead — Table-2 workloads, {ITERS} iterations each\n");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for ranks in [2usize, 4, 8] {
+        for w in models::table2_workloads(ranks) {
+            // warm-up + correctness: the clean workload must lint clean
+            let report = analysis::analyze(&w.gd, Some(&w.ri));
+            let t0 = Instant::now();
+            for _ in 0..ITERS {
+                std::hint::black_box(analysis::analyze(
+                    std::hint::black_box(&w.gd),
+                    Some(std::hint::black_box(&w.ri)),
+                ));
+            }
+            let mean = t0.elapsed() / ITERS;
+            let ops = w.gs.num_nodes() + w.gd.num_nodes();
+            println!(
+                "{:<24} ops {:>5}  {:>9}/analyze  findings {}",
+                w.name,
+                ops,
+                fmt_dur(mean),
+                report.findings.len()
+            );
+            let verdict = if report.is_clean() { "verified" } else { "refuted" };
+            records.push(
+                BenchRecord::new(w.name.clone(), ops, mean, 0).with_verdict(verdict),
+            );
+        }
+    }
+    let total: Duration = records
+        .iter()
+        .map(|r| Duration::from_nanos(r.wall_ns as u64))
+        .sum();
+    println!("\ntotal mean analyze() time across the suite: {}", fmt_dur(total));
+    match write_bench_json("lint", &records) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_lint.json: {e}");
+            std::process::exit(2);
+        }
+    }
+}

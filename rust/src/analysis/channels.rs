@@ -1,0 +1,233 @@
+//! Channel-wiring and liveness lints over the `Send`/`Recv` graph.
+//!
+//! Pipeline lowerings allocate one channel per (stage boundary,
+//! micro-batch) — or, for buffer-pool schedules, per (boundary, slot,
+//! epoch) via [`crate::schedule::buffer_tag`]. These lints check the wiring
+//! is a well-formed matching:
+//!
+//! - `chan_crossed` — a `Recv` wired to a `Send` on a different channel;
+//! - `recv_unmatched` — a `Recv` whose input is not a `Send` output at all;
+//! - `send_orphan` — a `Send` whose value no `Recv` ever consumes;
+//! - `chan_duplicate` — one channel id carrying two sends or two recvs;
+//! - `buffer_epoch_gap` — a buffer slot whose send epochs are not the
+//!   contiguous run `0..n` the schedule lowering emits;
+//! - `stage_cycle` — the stage graph (nodes contracted over all non-
+//!   boundary edges) has a cycle: every schedule would deadlock on it.
+
+use super::report::LintFinding;
+use crate::ir::{Graph, Op};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Run all channel lints, appending findings.
+pub fn check(g: &Graph, findings: &mut Vec<LintFinding>) {
+    let mut sends: FxHashMap<usize, Vec<usize>> = FxHashMap::default(); // chan -> node ids
+    let mut recvs: FxHashMap<usize, Vec<usize>> = FxHashMap::default();
+    for nid in g.topo_order() {
+        let node = g.node(nid);
+        match node.op {
+            Op::Send { chan } => sends.entry(chan).or_default().push(nid as usize),
+            Op::Recv { chan } => recvs.entry(chan).or_default().push(nid as usize),
+            _ => {}
+        }
+    }
+    if sends.is_empty() && recvs.is_empty() {
+        return;
+    }
+
+    // ---- per-recv: the producer must be the matching send ----
+    for ids in recvs.values() {
+        for &rid in ids {
+            let rnode = g.node(rid as u32);
+            let Op::Recv { chan } = rnode.op else { continue };
+            match g.producer(rnode.inputs[0]) {
+                Some(p) => match p.op {
+                    Op::Send { chan: sc } if sc == chan => {}
+                    Op::Send { chan: sc } => findings.push(LintFinding::new(
+                        "chan_crossed",
+                        rnode.name.clone(),
+                        format!(
+                            "recv on channel {chan} is wired to send '{}' on channel {sc}",
+                            p.name
+                        ),
+                    )),
+                    _ => findings.push(LintFinding::new(
+                        "recv_unmatched",
+                        rnode.name.clone(),
+                        format!(
+                            "recv on channel {chan} reads '{}', which is not a send output",
+                            p.name
+                        ),
+                    )),
+                },
+                None => findings.push(LintFinding::new(
+                    "recv_unmatched",
+                    rnode.name.clone(),
+                    format!(
+                        "recv on channel {chan} reads graph input '{}' — the stage \
+                         boundary transfer was dropped",
+                        g.tensor(rnode.inputs[0]).name
+                    ),
+                )),
+            }
+        }
+    }
+
+    // ---- per-send: somebody must receive the value ----
+    for ids in sends.values() {
+        for &sid in ids {
+            let snode = g.node(sid as u32);
+            let received = g
+                .consumers(snode.output)
+                .iter()
+                .any(|&c| matches!(g.node(c).op, Op::Recv { .. }));
+            if !received && !g.is_output(snode.output) {
+                findings.push(LintFinding::new(
+                    "send_orphan",
+                    snode.name.clone(),
+                    "send value is never received by any recv".to_string(),
+                ));
+            }
+        }
+    }
+
+    // ---- duplicate channel ids ----
+    for (chan, ids) in sends.iter().chain(recvs.iter()) {
+        for &nid in &ids[1..] {
+            findings.push(LintFinding::new(
+                "chan_duplicate",
+                g.node(nid as u32).name.clone(),
+                format!("channel {chan} already carries '{}'", g.node(ids[0] as u32).name),
+            ));
+        }
+    }
+
+    // ---- buffer-pool epoch discipline (schedule-lowered graphs only) ----
+    let mut slots: FxHashMap<(usize, usize), Vec<(usize, usize)>> = FxHashMap::default();
+    for ids in sends.values() {
+        for &sid in ids {
+            let Op::Send { chan } = g.node(sid as u32).op else { continue };
+            if let Some((boundary, slot, epoch)) = crate::schedule::decode_buffer_tag(chan) {
+                slots.entry((boundary, slot)).or_default().push((epoch, sid));
+            }
+        }
+    }
+    for ((boundary, slot), mut uses) in slots {
+        uses.sort_unstable();
+        let contiguous =
+            uses.iter().enumerate().all(|(i, &(epoch, _))| epoch == i);
+        if !contiguous {
+            // deterministic locus: the send with the smallest name
+            let node = uses
+                .iter()
+                .map(|&(_, sid)| &g.node(sid as u32).name)
+                .min()
+                .expect("slot group is non-empty");
+            findings.push(LintFinding::new(
+                "buffer_epoch_gap",
+                node.clone(),
+                format!(
+                    "buffer {slot} at boundary {boundary} is written in epochs {:?}; \
+                     expected the contiguous run 0..{}",
+                    uses.iter().map(|&(e, _)| e).collect::<Vec<_>>(),
+                    uses.len()
+                ),
+            ));
+        }
+    }
+
+    // ---- stage-graph cycle = communication deadlock ----
+    check_stage_cycle(g, findings);
+}
+
+/// Contract the graph over every edge *except* send→recv boundaries; the
+/// resulting components are the pipeline stages. A cycle among stages means
+/// every rank would wait on a value transitively derived from its own
+/// output — a deadlock under any schedule.
+fn check_stage_cycle(g: &Graph, findings: &mut Vec<LintFinding>) {
+    let n = g.num_nodes();
+    let mut uf: Vec<usize> = (0..n).collect();
+    fn find(uf: &mut [usize], mut x: usize) -> usize {
+        while uf[x] != x {
+            uf[x] = uf[uf[x]];
+            x = uf[x];
+        }
+        x
+    }
+    // union along all intra-stage edges
+    let mut boundary: Vec<(usize, usize)> = Vec::new(); // (send node, recv node)
+    for nid in g.topo_order() {
+        let node = g.node(nid);
+        for &t in &node.inputs {
+            let Some(p) = g.producer(t) else { continue };
+            let pid = g
+                .tensor(t)
+                .producer
+                .expect("producer() and tensor.producer agree") as usize;
+            let is_boundary = matches!(p.op, Op::Send { .. }) && matches!(node.op, Op::Recv { .. });
+            if is_boundary {
+                boundary.push((pid, nid as usize));
+            } else {
+                let (a, b) = (find(&mut uf, pid), find(&mut uf, nid as usize));
+                if a != b {
+                    uf[a] = b;
+                }
+            }
+        }
+    }
+    if boundary.is_empty() {
+        return;
+    }
+    // directed component graph over the boundary edges
+    let mut edges: FxHashSet<(usize, usize)> = FxHashSet::default();
+    for &(s, r) in &boundary {
+        edges.insert((find(&mut uf, s), find(&mut uf, r)));
+    }
+    let mut indeg: FxHashMap<usize, usize> = FxHashMap::default();
+    let mut adj: FxHashMap<usize, Vec<usize>> = FxHashMap::default();
+    let mut comps: FxHashSet<usize> = FxHashSet::default();
+    for &(a, b) in &edges {
+        comps.insert(a);
+        comps.insert(b);
+        adj.entry(a).or_default().push(b);
+        *indeg.entry(b).or_insert(0) += 1;
+    }
+    // Kahn's algorithm
+    let mut queue: Vec<usize> =
+        comps.iter().copied().filter(|c| !indeg.contains_key(c)).collect();
+    let mut done: FxHashSet<usize> = FxHashSet::default();
+    while let Some(c) = queue.pop() {
+        done.insert(c);
+        if let Some(next) = adj.get(&c) {
+            for &b in next {
+                let d = indeg.get_mut(&b).expect("edge target has an indegree entry");
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(b);
+                }
+            }
+        }
+    }
+    if done.len() == comps.len() {
+        return;
+    }
+    // cycle: anchor the finding at the smallest-named recv in a stuck stage
+    let stuck: FxHashSet<usize> = comps.difference(&done).copied().collect();
+    let locus = boundary
+        .iter()
+        .filter(|&&(_, r)| stuck.contains(&find(&mut uf, r)))
+        .map(|&(_, r)| &g.node(r as u32).name)
+        .min();
+    if let Some(name) = locus {
+        findings.push(LintFinding::new(
+            "stage_cycle",
+            name.clone(),
+            format!(
+                "stage graph has a cycle through {} of {} stages: the receiving \
+                 stage transitively feeds its own sender — a communication deadlock \
+                 under any schedule",
+                stuck.len(),
+                comps.len()
+            ),
+        ));
+    }
+}

@@ -1,0 +1,206 @@
+//! ShardFlow: pre-saturation static analysis of distributed graphs.
+//!
+//! An O(|G|) pass that runs *before* e-graph saturation and produces
+//! [`LintFinding`]s — node-precise diagnostics for the distribution bugs
+//! that are visible to a linear dataflow walk, without paying for
+//! saturation. Two layers:
+//!
+//! 1. **Distribution-lattice dataflow** ([`placement`], [`transfer`]):
+//!    per-tensor placement facts (`Replicated` / `Sharded` / `Partial` /
+//!    `Unknown`) seeded from the iterative relation `R_i` and pushed
+//!    through every op by a transfer function. Contradictions (a partial
+//!    sum hitting an activation, a softmax over a collectively-split axis,
+//!    shards re-gathered out of order, collective arity ≠ inputs, MoE
+//!    mis-routing) become findings.
+//! 2. **Channel wiring** ([`channels`]): the `Send`/`Recv` graph must be a
+//!    well-formed matching (no crossed/orphaned/duplicated channels, buffer
+//!    epochs contiguous per slot) and the contracted stage graph must be
+//!    acyclic (a cycle is a communication deadlock under any schedule).
+//!
+//! ## Soundness contract
+//!
+//! The lint **never changes a verdict**: `check_refinement*` attaches
+//! findings to its report, but Verified/Refuted/Inconclusive comes from the
+//! e-graph oracle alone, and the canonical report (the `--canonical`
+//! byte-determinism surface) excludes findings entirely. Dually, the
+//! analysis must be **false-alarm-free**: a clean (G_s, G_d, R_i) triple
+//! yields zero findings — every transfer rule goes to `Unknown` silently
+//! unless the contradiction is definite. The fuzz oracle enforces both
+//! directions with triage counters (`lint_flagged` / `lint_silent_refuted`
+//! / `lint_false_alarms`; a false alarm on a clean pair fails `sound()`).
+//!
+//! ## Finding codes
+//!
+//! | code | meaning |
+//! |---|---|
+//! | `partial_no_reduce` | unreduced partial sum consumed by a nonlinear op |
+//! | `softmax_shard_axis` | softmax along a collectively-split dim |
+//! | `norm_shard_axis` | RmsNorm/LayerNorm over a split last dim |
+//! | `elementwise_shard_mismatch` | elementwise op on misaligned shards |
+//! | `gather_order` | shards gathered duplicated / out of rank order |
+//! | `gather_mixed_source` | gather mixes shards of different tensors |
+//! | `gather_dim_mismatch` | gather dim ≠ the dim the shards split |
+//! | `scatter_over_shards` | ReduceScatter sums chunks instead of addends |
+//! | `collective_arity` | collective `ranks` attr ≠ number of inputs |
+//! | `dispatch_capacity` | MoE dispatch capacity < token rows |
+//! | `combine_expert_mismatch` | combine slot fed by the wrong dispatch |
+//! | `combine_gate_unnormalized` | gate weights not per-row normalized |
+//! | `send_orphan` | send whose value no recv consumes |
+//! | `recv_unmatched` | recv not wired to any send output |
+//! | `chan_crossed` | recv wired to a send on a different channel |
+//! | `chan_duplicate` | one channel id used by two sends / two recvs |
+//! | `buffer_epoch_gap` | non-contiguous buffer-slot epoch sequence |
+//! | `stage_cycle` | stage-graph cycle (communication deadlock) |
+
+pub mod channels;
+pub mod placement;
+pub mod report;
+pub mod transfer;
+
+pub use placement::{Fact, ShardOf};
+pub use report::{LintFinding, LintReport};
+
+use crate::ir::Graph;
+use crate::relation::Relation;
+
+/// Run the full static analysis on a distributed graph.
+///
+/// `ri` (when available) seeds input placement facts from the relation; a
+/// `None` relation runs the channel lints and whatever dataflow can be done
+/// from an all-`Unknown` seeding (still enough for wiring and structural
+/// MoE checks).
+pub fn analyze(gd: &Graph, ri: Option<&Relation>) -> LintReport {
+    let mut findings = Vec::new();
+    let seeds = match ri {
+        Some(r) => placement::seed_facts(gd, r),
+        None => Default::default(),
+    };
+    transfer::propagate(gd, &seeds, &mut findings);
+    channels::check(gd, &mut findings);
+    let mut report = LintReport { findings };
+    report.normalize();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn lint(g: &Graph) -> LintReport {
+        analyze(g, None)
+    }
+
+    fn codes(r: &LintReport) -> Vec<&'static str> {
+        r.findings.iter().map(|f| f.code).collect()
+    }
+
+    #[test]
+    fn clean_boundary_is_silent() {
+        let mut g = Graph::new("clean_pp");
+        let x = g.input("x", vec![4, 4]);
+        let t = g.op("stage0", Op::Identity, vec![x]);
+        let s = g.op("b0_send", Op::Send { chan: 0 }, vec![t]);
+        let r = g.op("b0_recv", Op::Recv { chan: 0 }, vec![s]);
+        let y = g.op("stage1", Op::Identity, vec![r]);
+        g.mark_output(y);
+        assert!(lint(&g).is_clean());
+    }
+
+    #[test]
+    fn crossed_and_orphaned_wiring_flagged() {
+        let mut g = Graph::new("crossed");
+        let x = g.input("x", vec![4, 4]);
+        let s0 = g.op("s0", Op::Send { chan: 0 }, vec![x]);
+        let s1 = g.op("s1", Op::Send { chan: 1 }, vec![x]);
+        // r0 reads s1's value: crossed; s0's value is never received: orphan
+        let r0 = g.op("r0", Op::Recv { chan: 0 }, vec![s1]);
+        let _ = s0;
+        g.mark_output(r0);
+        let rep = lint(&g);
+        assert!(codes(&rep).contains(&"chan_crossed"), "{rep:?}");
+        assert!(codes(&rep).contains(&"send_orphan"), "{rep:?}");
+    }
+
+    #[test]
+    fn recv_of_graph_input_is_unmatched() {
+        let mut g = Graph::new("dropped");
+        let x = g.input("x", vec![4, 4]);
+        let r = g.op("r0", Op::Recv { chan: 0 }, vec![x]);
+        g.mark_output(r);
+        assert_eq!(codes(&lint(&g)), vec!["recv_unmatched"]);
+    }
+
+    #[test]
+    fn duplicate_channel_flagged() {
+        let mut g = Graph::new("dup");
+        let x = g.input("x", vec![4, 4]);
+        let s0 = g.op("s0", Op::Send { chan: 7 }, vec![x]);
+        let s1 = g.op("s1", Op::Send { chan: 7 }, vec![x]);
+        let r0 = g.op("r0", Op::Recv { chan: 7 }, vec![s0]);
+        let r1 = g.op("r1", Op::Recv { chan: 7 }, vec![s1]);
+        let y = g.op("y", Op::Add, vec![r0, r1]);
+        g.mark_output(y);
+        let rep = lint(&g);
+        assert!(codes(&rep).contains(&"chan_duplicate"), "{rep:?}");
+    }
+
+    #[test]
+    fn buffer_epoch_gap_flagged() {
+        use crate::schedule::buffer_tag;
+        let mut g = Graph::new("epochs");
+        let x = g.input("x", vec![4, 4]);
+        // slot 0 at boundary 0 written in epochs {0, 2}: epoch 1 missing
+        let s0 = g.op("s0", Op::Send { chan: buffer_tag(0, 0, 0) }, vec![x]);
+        let s1 = g.op("s1", Op::Send { chan: buffer_tag(0, 0, 2) }, vec![x]);
+        let r0 = g.op("r0", Op::Recv { chan: buffer_tag(0, 0, 0) }, vec![s0]);
+        let r1 = g.op("r1", Op::Recv { chan: buffer_tag(0, 0, 2) }, vec![s1]);
+        let y = g.op("y", Op::Add, vec![r0, r1]);
+        g.mark_output(y);
+        let rep = lint(&g);
+        assert!(codes(&rep).contains(&"buffer_epoch_gap"), "{rep:?}");
+    }
+
+    #[test]
+    fn stage_cycle_detected() {
+        // Stage A = {t, u, r1} (t feeds u, r1 feeds u), stage B = {r0, s1}:
+        // A sends to B (s0→r0) and B sends back to A (s1→r1) — deadlock.
+        let mut g = Graph::new("cycle");
+        let x = g.input("x", vec![4, 4]);
+        let t = g.op("t", Op::Identity, vec![x]);
+        let s0 = g.op("s0", Op::Send { chan: 0 }, vec![t]);
+        let r0 = g.op("r0", Op::Recv { chan: 0 }, vec![s0]);
+        let s1 = g.op("s1", Op::Send { chan: 1 }, vec![r0]);
+        let r1 = g.op("r1", Op::Recv { chan: 1 }, vec![s1]);
+        let u = g.op("u", Op::Add, vec![t, r1]);
+        g.mark_output(u);
+        let rep = lint(&g);
+        assert!(codes(&rep).contains(&"stage_cycle"), "{rep:?}");
+    }
+
+    #[test]
+    fn acyclic_two_stage_chain_has_no_cycle() {
+        let mut g = Graph::new("chain");
+        let x = g.input("x", vec![4, 4]);
+        let t = g.op("t", Op::Identity, vec![x]);
+        let s0 = g.op("s0", Op::Send { chan: 0 }, vec![t]);
+        let r0 = g.op("r0", Op::Recv { chan: 0 }, vec![s0]);
+        let u = g.op("u", Op::Identity, vec![r0]);
+        let s1 = g.op("s1", Op::Send { chan: 1 }, vec![u]);
+        let r1 = g.op("r1", Op::Recv { chan: 1 }, vec![s1]);
+        let v = g.op("v", Op::Identity, vec![r1]);
+        g.mark_output(v);
+        assert!(lint(&g).is_clean());
+    }
+
+    #[test]
+    fn dispatch_capacity_flagged() {
+        let mut g = Graph::new("cap");
+        let x = g.input("x", vec![4, 4]);
+        let router = g.input("router", vec![4, 2]);
+        let d = g.op("disp", Op::Dispatch { expert: 0, capacity: 1 }, vec![x, router]);
+        g.mark_output(d);
+        let rep = lint(&g);
+        assert_eq!(codes(&rep), vec!["dispatch_capacity"]);
+    }
+}

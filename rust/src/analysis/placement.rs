@@ -1,0 +1,210 @@
+//! The distribution lattice and its seeding from the iterative relation `R_i`.
+//!
+//! A [`Fact`] abstracts *how a `G_d` tensor decomposes relative to the
+//! sequential value it corresponds to*:
+//!
+//! - `Replicated` — the full value, deterministically identical everywhere;
+//! - `Sharded{dim, ranks, index, ..}` — the `index`-th of `ranks` equal
+//!   chunks along `dim`;
+//! - `Partial{ranks}` — one of `ranks` addends whose sum is the full value;
+//! - `Unknown` — top: no claim (always sound).
+//!
+//! Two refinements keep the analysis false-alarm-free on clean graphs:
+//!
+//! - `of` records *which* full value a shard is a chunk of
+//!   ([`ShardOf::Gs`] = a sequential tensor named by `R_i`, [`ShardOf::Dt`]
+//!   = a `G_d` tensor sliced locally, [`ShardOf::Anon`] = untracked). Order
+//!   and mixed-source checks only fire when provenances *definitely*
+//!   disagree.
+//! - `dist` distinguishes chunks produced by the distribution itself
+//!   (seeded per-rank inputs, `ReduceScatter` outputs) from local slices of
+//!   replicated data (e.g. rotate-half `Slice`s). Re-gather discipline is
+//!   only enforced on `dist: true` shards — a local slice re-concatenated
+//!   in any order is the model's own business.
+
+use crate::expr::{Expr, Side, TensorRef};
+use crate::ir::{Graph, Op, TensorId};
+use crate::relation::Relation;
+use rustc_hash::FxHashMap;
+
+/// Which full value a [`Fact::Sharded`] is a chunk of.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardOf {
+    /// Chunk of the sequential (`G_s`) tensor with this id, per `R_i`.
+    Gs(TensorId),
+    /// Chunk of the distributed (`G_d`) tensor with this id (local slice).
+    Dt(TensorId),
+    /// Provenance not tracked (result of arithmetic on a shard).
+    Anon,
+}
+
+impl ShardOf {
+    /// True only when both sides *definitely* name different sources.
+    /// `Anon` never conflicts; neither do a `Gs` and a `Dt` (a local slice
+    /// of a replicated copy of `t` is bit-identical to the seeded shard).
+    pub fn conflicts(self, other: ShardOf) -> bool {
+        match (self, other) {
+            (ShardOf::Gs(a), ShardOf::Gs(b)) => a != b,
+            (ShardOf::Dt(a), ShardOf::Dt(b)) => a != b,
+            _ => false,
+        }
+    }
+}
+
+/// Per-tensor placement fact — the abstract domain of the dataflow pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fact {
+    /// Top: nothing is claimed. The default, and the join of any conflict.
+    Unknown,
+    /// The full sequential-corresponding value, identical on every path.
+    Replicated,
+    /// The `index`-th of `ranks` equal chunks along `dim`. `dist` marks
+    /// collective provenance (seeded per-rank input or `ReduceScatter`
+    /// output) as opposed to a local slice of replicated data.
+    Sharded { dim: usize, ranks: usize, index: usize, of: ShardOf, dist: bool },
+    /// One of `ranks` addends; the full value is their elementwise sum.
+    Partial { ranks: usize },
+}
+
+impl Fact {
+    pub fn is_unknown(self) -> bool {
+        matches!(self, Fact::Unknown)
+    }
+
+    /// Lattice join: equal facts (ignoring shard provenance tags) stay,
+    /// anything else goes to `Unknown`.
+    pub fn join(self, other: Fact) -> Fact {
+        match (self, other) {
+            (Fact::Replicated, Fact::Replicated) => Fact::Replicated,
+            (Fact::Partial { ranks: a }, Fact::Partial { ranks: b }) if a == b => {
+                Fact::Partial { ranks: a }
+            }
+            (
+                Fact::Sharded { dim: da, ranks: ra, index: ia, of: oa, dist: qa },
+                Fact::Sharded { dim: db, ranks: rb, index: ib, of: ob, dist: qb },
+            ) if da == db && ra == rb && ia == ib => Fact::Sharded {
+                dim: da,
+                ranks: ra,
+                index: ia,
+                of: if oa == ob { oa } else { ShardOf::Anon },
+                dist: qa && qb,
+            },
+            _ => Fact::Unknown,
+        }
+    }
+
+    /// Short human-readable form for finding details.
+    pub fn describe(self) -> String {
+        match self {
+            Fact::Unknown => "unknown".into(),
+            Fact::Replicated => "replicated".into(),
+            Fact::Sharded { dim, ranks, index, .. } => {
+                format!("shard {index}/{ranks} along dim {dim}")
+            }
+            Fact::Partial { ranks } => format!("partial sum (1 of {ranks} addends)"),
+        }
+    }
+}
+
+/// Derive seed facts for `G_d` *input* tensors from the relation `R_i`.
+///
+/// Only the syntactic shapes `RiBuilder` emits are recognized; anything
+/// else (router-conditioned MoE candidates, composite expressions) is
+/// skipped — seeds may be missing but never wrong. Conflicting seeds for
+/// the same `G_d` tensor join to `Unknown`.
+pub fn seed_facts(gd: &Graph, ri: &Relation) -> FxHashMap<TensorId, Fact> {
+    let mut seeds: FxHashMap<TensorId, Fact> = FxHashMap::default();
+    let mut put = |seeds: &mut FxHashMap<TensorId, Fact>, id: TensorId, f: Fact| {
+        let merged = match seeds.get(&id) {
+            Some(prev) => prev.join(f),
+            None => f,
+        };
+        seeds.insert(id, merged);
+    };
+
+    for t in ri.tensors() {
+        for cand in ri.get(t) {
+            match &cand.expr {
+                // `x` — the G_d tensor holds the full sequential value.
+                Expr::Leaf(TensorRef { side: Side::D, id }) => {
+                    put(&mut seeds, *id, Fact::Replicated);
+                }
+                Expr::Op(op, args) if args.len() >= 2 => {
+                    let leaves: Option<Vec<TensorId>> = args
+                        .iter()
+                        .map(|a| match a {
+                            Expr::Leaf(TensorRef { side: Side::D, id }) => Some(*id),
+                            _ => None,
+                        })
+                        .collect();
+                    let Some(leaves) = leaves else { continue };
+                    let ranks = leaves.len();
+                    match op {
+                        // `concat(x_r0, .., x_rk; dim)` / all_gather — each
+                        // leaf is one distribution-produced chunk of `t`.
+                        Op::Concat { dim } | Op::AllGather { dim, .. } => {
+                            for (i, id) in leaves.iter().enumerate() {
+                                put(
+                                    &mut seeds,
+                                    *id,
+                                    Fact::Sharded {
+                                        dim: *dim,
+                                        ranks,
+                                        index: i,
+                                        of: ShardOf::Gs(t),
+                                        dist: true,
+                                    },
+                                );
+                            }
+                        }
+                        // `sum(x_r0, .., x_rk)` — each leaf is an addend.
+                        Op::SumN => {
+                            for id in &leaves {
+                                put(&mut seeds, *id, Fact::Partial { ranks });
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Seeds describe graph inputs; a produced tensor that happens to appear
+    // in R_i gets its fact from the transfer pass, not from here.
+    seeds.retain(|&id, _| (id as usize) < gd.num_tensors() && gd.producer(id).is_none());
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_is_conservative() {
+        let s = Fact::Sharded { dim: 0, ranks: 2, index: 1, of: ShardOf::Anon, dist: true };
+        assert_eq!(s.join(s), s);
+        assert_eq!(s.join(Fact::Replicated), Fact::Unknown);
+        assert_eq!(Fact::Partial { ranks: 2 }.join(Fact::Partial { ranks: 4 }), Fact::Unknown);
+        assert_eq!(Fact::Replicated.join(Fact::Replicated), Fact::Replicated);
+    }
+
+    #[test]
+    fn join_demotes_conflicting_provenance_not_the_shard() {
+        let a = Fact::Sharded { dim: 0, ranks: 2, index: 0, of: ShardOf::Gs(1), dist: true };
+        let b = Fact::Sharded { dim: 0, ranks: 2, index: 0, of: ShardOf::Gs(2), dist: false };
+        assert_eq!(
+            a.join(b),
+            Fact::Sharded { dim: 0, ranks: 2, index: 0, of: ShardOf::Anon, dist: false }
+        );
+    }
+
+    #[test]
+    fn shard_of_conflicts_only_same_kind() {
+        assert!(ShardOf::Gs(1).conflicts(ShardOf::Gs(2)));
+        assert!(!ShardOf::Gs(1).conflicts(ShardOf::Gs(1)));
+        assert!(!ShardOf::Gs(1).conflicts(ShardOf::Dt(2)));
+        assert!(!ShardOf::Anon.conflicts(ShardOf::Gs(1)));
+    }
+}

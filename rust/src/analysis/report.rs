@@ -1,0 +1,110 @@
+//! Lint findings — the stable output surface of the static analysis.
+//!
+//! A [`LintFinding`] is a *diagnostic*, never a verdict: findings ride along
+//! with whatever the e-graph oracle decides (`EXPERIMENTS.md §Static
+//! analysis` states the soundness contract). Codes and the JSON shape are
+//! stable so CI gates and downstream tooling can key on them.
+
+use crate::util::json::Json;
+
+/// One static-analysis diagnostic, anchored to a `G_d` node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LintFinding {
+    /// Stable machine-readable code (e.g. `partial_no_reduce`,
+    /// `chan_crossed`). The full vocabulary is listed in
+    /// [`crate::analysis`]'s module docs.
+    pub code: &'static str,
+    /// Name of the `G_d` node the finding anchors to (the locus).
+    pub node: String,
+    /// One-line human-readable explanation.
+    pub detail: String,
+}
+
+impl LintFinding {
+    pub fn new(code: &'static str, node: impl Into<String>, detail: impl Into<String>) -> Self {
+        LintFinding { code, node: node.into(), detail: detail.into() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("node", Json::str(self.node.clone())),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// All findings of one `analyze` run, in a canonical order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LintReport {
+    pub findings: Vec<LintFinding>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Canonicalize: sort by (node, code, detail) and drop exact duplicates,
+    /// so the report is a pure function of the graph — independent of
+    /// traversal order. CI diffing depends on this.
+    pub fn normalize(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (a.node.as_str(), a.code, a.detail.as_str())
+                .cmp(&(b.node.as_str(), b.code, b.detail.as_str()))
+        });
+        self.findings.dedup();
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.findings.len() as f64)),
+            ("findings", Json::Arr(self.findings.iter().map(LintFinding::to_json).collect())),
+        ])
+    }
+
+    /// Plain-text rendering for the CLI (one line per finding).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        if self.findings.is_empty() {
+            out.push_str("lint: clean (0 findings)\n");
+            return out;
+        }
+        let _ = writeln!(out, "lint: {} finding(s)", self.findings.len());
+        for f in &self.findings {
+            let _ = writeln!(out, "  [{}] at '{}': {}", f.code, f.node, f.detail);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_sorts_and_dedups() {
+        let mut r = LintReport {
+            findings: vec![
+                LintFinding::new("b_code", "n2", "y"),
+                LintFinding::new("a_code", "n1", "x"),
+                LintFinding::new("a_code", "n1", "x"),
+            ],
+        };
+        r.normalize();
+        assert_eq!(r.findings.len(), 2);
+        assert_eq!(r.findings[0].node, "n1");
+        assert_eq!(r.findings[1].node, "n2");
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let r = LintReport { findings: vec![LintFinding::new("c", "n", "d")] };
+        let j = r.to_json();
+        assert_eq!(j.get("count").as_usize(), Some(1));
+        let arr = j.get("findings").as_arr().unwrap();
+        assert_eq!(arr[0].get("code").as_str(), Some("c"));
+        assert_eq!(arr[0].get("node").as_str(), Some("n"));
+    }
+}

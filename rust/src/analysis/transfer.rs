@@ -1,0 +1,624 @@
+//! Per-op transfer functions: one linear pass over `G_d` in topological
+//! order, propagating [`Fact`]s and emitting findings on *definite*
+//! contradictions.
+//!
+//! The pass is deliberately one-sided: whenever an op's behaviour on a fact
+//! is not exactly characterized (nonlinear op on a partial sum that autodiff
+//! may legitimately compose, slice along a sharded dim, mixed placements),
+//! the output goes to `Unknown` *silently*. A finding is emitted only for
+//! op/fact combinations that cannot appear in a correct lowering:
+//!
+//! - `partial_no_reduce` — an unreduced partial sum flowing into an
+//!   activation, `Softmax`, a norm, or the loss (nonlinear in a way no
+//!   correct strategy defers reduction across);
+//! - `softmax_shard_axis` / `norm_shard_axis` — normalizing along an axis
+//!   that a collective actually split;
+//! - `gather_order` / `gather_mixed_source` / `gather_dim_mismatch` /
+//!   `scatter_over_shards` / `elementwise_shard_mismatch` — re-gather
+//!   discipline, enforced only on `dist: true` shards;
+//! - `collective_arity` — collective `ranks` attr ≠ its input count;
+//! - `dispatch_capacity` / `combine_expert_mismatch` /
+//!   `combine_gate_unnormalized` — MoE routing structure.
+
+use super::placement::{Fact, ShardOf};
+use super::report::LintFinding;
+use crate::ir::{Graph, Node, Op, OpTag, TensorId};
+use rustc_hash::FxHashMap;
+
+/// Max producer-chain length the MoE structural traces will walk.
+const TRACE_DEPTH: usize = 64;
+
+/// Run the dataflow pass. Returns the per-tensor fact table (indexed by
+/// `TensorId`) and appends findings.
+pub fn propagate(
+    gd: &Graph,
+    seeds: &FxHashMap<TensorId, Fact>,
+    findings: &mut Vec<LintFinding>,
+) -> Vec<Fact> {
+    let mut facts = vec![Fact::Unknown; gd.num_tensors()];
+    for (id, f) in facts.iter_mut().enumerate() {
+        let id = id as TensorId;
+        if gd.producer(id).is_none() {
+            if let Some(&seed) = seeds.get(&id) {
+                *f = seed;
+            }
+        }
+    }
+    for nid in gd.topo_order() {
+        let node = gd.node(nid);
+        let fs: Vec<Fact> = node.inputs.iter().map(|&t| facts[t as usize]).collect();
+        facts[node.output as usize] = transfer(gd, node, &fs, findings);
+    }
+    facts
+}
+
+/// Strip shard provenance (arithmetic on a chunk yields a chunk of
+/// *something else*); other facts pass through.
+fn anon(f: Fact) -> Fact {
+    match f {
+        Fact::Sharded { dim, ranks, index, dist, .. } => {
+            Fact::Sharded { dim, ranks, index, of: ShardOf::Anon, dist }
+        }
+        other => other,
+    }
+}
+
+fn flag(findings: &mut Vec<LintFinding>, code: &'static str, node: &Node, detail: String) {
+    findings.push(LintFinding::new(code, node.name.clone(), detail));
+}
+
+fn partial_no_reduce(findings: &mut Vec<LintFinding>, node: &Node, ranks: usize) -> Fact {
+    flag(
+        findings,
+        "partial_no_reduce",
+        node,
+        format!(
+            "nonlinear op {:?} consumes an unreduced partial sum (1 of {ranks} addends); \
+             a reduction (AllReduce/SumN/ReduceScatter) is required first",
+            node.op.tag()
+        ),
+    );
+    Fact::Unknown
+}
+
+/// Shared rule for the five binary elementwise ops once the
+/// replicated/partial special cases are exhausted.
+fn binary_shard_pair(g: &Graph, node: &Node, a: Fact, b: Fact, out: &mut Vec<LintFinding>) -> Fact {
+    match (a, b) {
+        (
+            Fact::Sharded { dim: da, ranks: ra, index: ia, of: oa, dist: qa },
+            Fact::Sharded { dim: db, ranks: rb, index: ib, of: ob, dist: qb },
+        ) => {
+            if g.shape(node.inputs[0]) != g.shape(node.inputs[1]) {
+                return Fact::Unknown;
+            }
+            if da == db && ra == rb && ia == ib {
+                let of = if oa == ob { oa } else { ShardOf::Anon };
+                Fact::Sharded { dim: da, ranks: ra, index: ia, of, dist: qa || qb }
+            } else if ra == rb && qa && qb {
+                flag(
+                    out,
+                    "elementwise_shard_mismatch",
+                    node,
+                    format!(
+                        "elementwise {:?} combines misaligned shards: lhs is shard {ia}/{ra} \
+                         along dim {da}, rhs is shard {ib}/{rb} along dim {db}",
+                        node.op.tag()
+                    ),
+                );
+                Fact::Unknown
+            } else {
+                Fact::Unknown
+            }
+        }
+        // shard ⊕ replicated = the same chunk of (full ⊕ full): valid for
+        // all five ops because the replicated side corresponds elementwise.
+        (s @ Fact::Sharded { .. }, Fact::Replicated)
+        | (Fact::Replicated, s @ Fact::Sharded { .. }) => anon(s),
+        _ => Fact::Unknown,
+    }
+}
+
+/// Shared gather rule for `AllGather` and `Concat`: all-replicated inputs
+/// reassemble to a replicated value; a full set of collective-provenance
+/// shards must be gathered along the shard dim, from one source, in rank
+/// order. Anything less than definite stays silent.
+fn check_gather(node: &Node, dim: usize, fs: &[Fact], out: &mut Vec<LintFinding>) -> Fact {
+    if !fs.is_empty() && fs.iter().all(|f| matches!(f, Fact::Replicated)) {
+        return Fact::Replicated;
+    }
+    let mut shards = Vec::with_capacity(fs.len());
+    for f in fs {
+        match *f {
+            Fact::Sharded { dim: sdim, ranks, index, of, dist: true } if ranks == fs.len() => {
+                shards.push((sdim, ranks, index, of));
+            }
+            _ => return Fact::Unknown,
+        }
+    }
+    let sd = shards[0].0;
+    if shards.iter().any(|s| s.0 != sd) {
+        return Fact::Unknown;
+    }
+    if sd != dim {
+        flag(
+            out,
+            "gather_dim_mismatch",
+            node,
+            format!("gathers along dim {dim} but inputs are sharded along dim {sd}"),
+        );
+        return Fact::Unknown;
+    }
+    let mut bad = false;
+    for (i, si) in shards.iter().enumerate() {
+        for sj in shards.iter().skip(i + 1) {
+            if si.3.conflicts(sj.3) {
+                flag(
+                    out,
+                    "gather_mixed_source",
+                    node,
+                    "gather mixes shards of two different source tensors".to_string(),
+                );
+                bad = true;
+            }
+        }
+        if bad {
+            break;
+        }
+    }
+    for (j, s) in shards.iter().enumerate() {
+        if s.2 != j {
+            flag(
+                out,
+                "gather_order",
+                node,
+                format!("operand {j} holds shard index {} (expected {j}): shards are \
+                         duplicated or out of rank order", s.2),
+            );
+            bad = true;
+            break;
+        }
+    }
+    if bad {
+        Fact::Unknown
+    } else {
+        Fact::Replicated
+    }
+}
+
+/// Walk producers through unary-elementwise ops / matmul-lhs / send / recv
+/// to the `Dispatch` feeding an expert output, if one is syntactically
+/// reachable.
+fn trace_to_dispatch(g: &Graph, mut t: TensorId) -> Option<&Node> {
+    for _ in 0..TRACE_DEPTH {
+        let n = g.producer(t)?;
+        match &n.op {
+            Op::Dispatch { .. } => return Some(n),
+            Op::MatMul => t = n.inputs[0],
+            Op::Send { .. } | Op::Recv { .. } => t = n.inputs[0],
+            op if op.is_unary_elementwise() => t = n.inputs[0],
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Column offset of a combine's gate matrix: per-rank lowerings slice the
+/// `[rows, E]` gate tensor along dim 1, so expert slot `j` locally is
+/// global expert `offset + j`.
+fn gate_col_offset(g: &Graph, mut t: TensorId) -> usize {
+    for _ in 0..TRACE_DEPTH {
+        let Some(n) = g.producer(t) else { return 0 };
+        match &n.op {
+            Op::Slice { dim: 1, start, .. } => {
+                return start.as_const().map(|v| v.max(0) as usize).unwrap_or(0)
+            }
+            op if op.is_unary_elementwise() => t = n.inputs[0],
+            _ => return 0,
+        }
+    }
+    0
+}
+
+/// The node that actually *computes* a combine's gate weights, looking
+/// through slices and unary elementwise ops. `None` when the chain ends at
+/// a graph input (nothing to check).
+fn gate_landing(g: &Graph, mut t: TensorId) -> Option<&Node> {
+    for _ in 0..TRACE_DEPTH {
+        let n = g.producer(t)?;
+        match &n.op {
+            Op::Slice { .. } => t = n.inputs[0],
+            op if op.is_unary_elementwise() => t = n.inputs[0],
+            _ => return Some(n),
+        }
+    }
+    None
+}
+
+fn check_combine(g: &Graph, node: &Node, experts: usize, out: &mut Vec<LintFinding>) {
+    // (1) each expert slot must be fed by the dispatch for that expert.
+    let offset = gate_col_offset(g, node.inputs[0]);
+    for j in 0..experts {
+        let Some(&yt) = node.inputs.get(1 + j) else { break };
+        if let Some(disp) = trace_to_dispatch(g, yt) {
+            if let Op::Dispatch { expert, .. } = disp.op {
+                if expert != offset + j {
+                    out.push(LintFinding::new(
+                        "combine_expert_mismatch",
+                        disp.name.clone(),
+                        format!(
+                            "combine '{}' slot {j} (global expert {}) is fed by the \
+                             dispatch for expert {expert}",
+                            node.name,
+                            offset + j
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // (2) gate weights must come from a per-row normalization (Div).
+    if let Some(landing) = gate_landing(g, node.inputs[0]) {
+        if landing.op.tag() != OpTag::Div {
+            flag(
+                out,
+                "combine_gate_unnormalized",
+                node,
+                format!(
+                    "gate weights come from {:?} node '{}', not a per-row \
+                     normalizing Div",
+                    landing.op.tag(),
+                    landing.name
+                ),
+            );
+        }
+    }
+}
+
+/// The per-op transfer function.
+fn transfer(g: &Graph, node: &Node, fs: &[Fact], out: &mut Vec<LintFinding>) -> Fact {
+    use Fact::{Partial, Replicated, Sharded, Unknown};
+    match &node.op {
+        // ---- placement-preserving ----
+        Op::Identity | Op::Send { .. } | Op::Recv { .. } => fs[0],
+
+        // ---- linear unaries: every fact survives ----
+        Op::Neg | Op::Scale { .. } => anon(fs[0]),
+
+        // affine, not linear: shifts each addend, so Partial is lost
+        // (silently — autodiff composes these freely on non-partial data).
+        Op::AddScalar { .. } => match fs[0] {
+            Replicated => Replicated,
+            s @ Sharded { .. } => anon(s),
+            _ => Unknown,
+        },
+
+        // ---- nonlinear math primitives: no flag on Partial (backward
+        // graphs apply these to forward activations; a partial sum reaching
+        // one is handled, if ever observable, by the e-graph oracle) ----
+        Op::Exp | Op::Log | Op::Sqrt | Op::Rsqrt | Op::Square => match fs[0] {
+            Replicated => Replicated,
+            s @ Sharded { .. } => anon(s),
+            _ => Unknown,
+        },
+
+        // ---- activations: a partial sum here is definitely wrong ----
+        Op::Tanh | Op::Gelu | Op::Silu | Op::Sigmoid | Op::Relu => match fs[0] {
+            Partial { ranks } => partial_no_reduce(out, node, ranks),
+            Replicated => Replicated,
+            s @ Sharded { .. } => anon(s),
+            Unknown => Unknown,
+        },
+
+        // ---- binary elementwise ----
+        Op::Add | Op::Sub => match (fs[0], fs[1]) {
+            (Replicated, Replicated) => Replicated,
+            (Partial { ranks: a }, Partial { ranks: b }) if a == b => Partial { ranks: a },
+            (a, b) => binary_shard_pair(g, node, a, b, out),
+        },
+        Op::Mul => match (fs[0], fs[1]) {
+            (Replicated, Replicated) => Replicated,
+            (Partial { ranks }, Replicated) | (Replicated, Partial { ranks }) => {
+                Partial { ranks }
+            }
+            (Partial { .. }, Partial { .. }) => Unknown,
+            (a, b) => binary_shard_pair(g, node, a, b, out),
+        },
+        Op::Div => match (fs[0], fs[1]) {
+            (Replicated, Replicated) => Replicated,
+            (Partial { ranks }, Replicated) => Partial { ranks },
+            (a @ Sharded { .. }, b) | (a, b @ Sharded { .. }) => {
+                binary_shard_pair(g, node, a, b, out)
+            }
+            _ => Unknown,
+        },
+        Op::Maximum => match (fs[0], fs[1]) {
+            (Replicated, Replicated) => Replicated,
+            (Partial { .. }, _) | (_, Partial { .. }) => Unknown,
+            (a, b) => binary_shard_pair(g, node, a, b, out),
+        },
+
+        // ---- matmul: the contraction is where partial sums are born ----
+        Op::MatMul => {
+            let ar = g.shape(node.inputs[0]).len();
+            let br = g.shape(node.inputs[1]).len();
+            let or = g.shape(node.output).len();
+            match (fs[0], fs[1]) {
+                (Replicated, Replicated) => Replicated,
+                (Partial { ranks }, Replicated) | (Replicated, Partial { ranks }) => {
+                    Partial { ranks }
+                }
+                (Sharded { dim, ranks, index, dist, .. }, Replicated) => {
+                    if dim + 1 == ar {
+                        Unknown // contraction dim sharded vs full rhs
+                    } else if dim + 2 == ar {
+                        Sharded { dim: or - 2, ranks, index, of: ShardOf::Anon, dist }
+                    } else if br <= ar {
+                        // batch dim of lhs only: rhs broadcasts across it
+                        Sharded { dim, ranks, index, of: ShardOf::Anon, dist }
+                    } else {
+                        Unknown
+                    }
+                }
+                (Replicated, Sharded { dim, ranks, index, dist, .. }) => {
+                    if dim + 1 == br {
+                        Sharded { dim: or - 1, ranks, index, of: ShardOf::Anon, dist }
+                    } else {
+                        Unknown
+                    }
+                }
+                (
+                    Sharded { dim: da, ranks: ra, index: ia, of: oa, dist: qa },
+                    Sharded { dim: db, ranks: rb, index: ib, of: ob, dist: qb },
+                ) => {
+                    // k-sharded × k-sharded with matching chunks: each rank
+                    // computes one addend of the full product.
+                    if da + 1 == ar
+                        && db + 2 == br
+                        && ra == rb
+                        && ia == ib
+                        && (qa || qb)
+                        && !oa.conflicts(ob)
+                    {
+                        Partial { ranks: ra }
+                    } else {
+                        Unknown
+                    }
+                }
+                _ => Unknown,
+            }
+        }
+
+        // ---- structural ----
+        Op::Transpose { perm } => match fs[0] {
+            Replicated => Replicated,
+            p @ Partial { .. } => p,
+            Sharded { dim, ranks, index, dist, .. } => {
+                match perm.iter().position(|&p| p == dim) {
+                    Some(nd) => Sharded { dim: nd, ranks, index, of: ShardOf::Anon, dist },
+                    None => Unknown,
+                }
+            }
+            Unknown => Unknown,
+        },
+        Op::Reshape { .. } => match fs[0] {
+            Replicated => Replicated,
+            p @ Partial { .. } => p,
+            _ => Unknown,
+        },
+        Op::Pad { .. } => match fs[0] {
+            Replicated => Replicated,
+            _ => Unknown,
+        },
+        Op::Slice { dim, start, end } => match fs[0] {
+            Replicated => {
+                // An aligned 1/k slice of a replicated tensor is a local
+                // chunk (dist: false — no re-gather discipline applies);
+                // any other slice of a replicated value is still
+                // deterministic-everywhere, which is all `Replicated`
+                // promises to the checks.
+                if let (Some(lo), Some(hi)) = (start.as_const(), end.as_const()) {
+                    let total = g.shape(node.inputs[0])[*dim];
+                    let w = hi - lo;
+                    if w > 0 && w < total && lo >= 0 && total % w == 0 && lo % w == 0 {
+                        return Sharded {
+                            dim: *dim,
+                            ranks: (total / w) as usize,
+                            index: (lo / w) as usize,
+                            of: ShardOf::Dt(node.inputs[0]),
+                            dist: false,
+                        };
+                    }
+                }
+                Replicated
+            }
+            s @ Sharded { dim: sd, .. } if sd != *dim => anon(s),
+            p @ Partial { .. } => p,
+            _ => Unknown,
+        },
+
+        // ---- reductions ----
+        Op::ReduceSum { dim, keepdim } | Op::ReduceMean { dim, keepdim } => match fs[0] {
+            Replicated => Replicated,
+            p @ Partial { .. } => p, // linear: reduce each addend, then sum
+            Sharded { dim: sd, ranks, index, dist, .. } if sd != *dim => {
+                let nd = if !keepdim && *dim < sd { sd - 1 } else { sd };
+                Sharded { dim: nd, ranks, index, of: ShardOf::Anon, dist }
+            }
+            _ => Unknown,
+        },
+        Op::ReduceMax { dim, keepdim } => match fs[0] {
+            Replicated => Replicated,
+            Sharded { dim: sd, ranks, index, dist, .. } if sd != *dim => {
+                let nd = if !keepdim && *dim < sd { sd - 1 } else { sd };
+                Sharded { dim: nd, ranks, index, of: ShardOf::Anon, dist }
+            }
+            _ => Unknown,
+        },
+
+        // ---- normalizers: flag partial sums and split normalization axes ----
+        Op::Softmax { dim } => match fs[0] {
+            Replicated => Replicated,
+            Partial { ranks } => partial_no_reduce(out, node, ranks),
+            Sharded { dim: sd, ranks, dist: true, .. } if sd == *dim => {
+                flag(
+                    out,
+                    "softmax_shard_axis",
+                    node,
+                    format!(
+                        "softmax normalizes dim {dim}, but the input is split into \
+                         {ranks} shards along that dim — each rank normalizes over \
+                         a fraction of the row"
+                    ),
+                );
+                Unknown
+            }
+            s @ Sharded { dim: sd, .. } if sd != *dim => anon(s),
+            _ => Unknown,
+        },
+        Op::RmsNorm { .. } | Op::LayerNorm { .. } => {
+            let last = g.shape(node.inputs[0]).len().saturating_sub(1);
+            let others_replicated = fs[1..].iter().all(|f| matches!(f, Replicated));
+            match fs[0] {
+                Partial { ranks } => partial_no_reduce(out, node, ranks),
+                Sharded { dim, ranks, dist: true, .. } if dim == last => {
+                    flag(
+                        out,
+                        "norm_shard_axis",
+                        node,
+                        format!(
+                            "{:?} normalizes the last dim ({last}), but the input is \
+                             split into {ranks} shards along it",
+                            node.op.tag()
+                        ),
+                    );
+                    Unknown
+                }
+                s @ Sharded { dim, .. } if dim != last && others_replicated => anon(s),
+                Replicated if others_replicated => Replicated,
+                _ => Unknown,
+            }
+        }
+        Op::Rope => match (fs[0], fs[1], fs[2]) {
+            (Replicated, Replicated, Replicated) => Replicated,
+            (
+                Sharded { dim: d0, ranks: r0, index: i0, dist: q0, .. },
+                Sharded { dim: d1, ranks: r1, index: i1, dist: q1, .. },
+                Sharded { dim: d2, ranks: r2, index: i2, dist: q2, .. },
+            ) if d0 == d1 && d1 == d2 && r0 == r1 && r1 == r2 && i0 == i1 && i1 == i2 => {
+                Sharded { dim: d0, ranks: r0, index: i0, of: ShardOf::Anon, dist: q0 || q1 || q2 }
+            }
+            _ => Unknown,
+        },
+        Op::Embedding => match (fs[0], fs[1]) {
+            (Replicated, Replicated) => Replicated,
+            (Replicated, Sharded { dim: 0, ranks, index, dist, .. }) => {
+                Sharded { dim: 0, ranks, index, of: ShardOf::Anon, dist }
+            }
+            _ => Unknown,
+        },
+        Op::MseLoss => match (fs[0], fs[1]) {
+            (Partial { ranks }, _) | (_, Partial { ranks }) => {
+                partial_no_reduce(out, node, ranks)
+            }
+            (Replicated, Replicated) => Replicated,
+            _ => Unknown, // per-shard losses are legitimately averaged later
+        },
+
+        // ---- reductions across ranks ----
+        Op::SumN => {
+            if !fs.is_empty()
+                && fs.iter().all(|f| matches!(f, Partial { ranks } if *ranks == fs.len()))
+            {
+                Replicated
+            } else if !fs.is_empty() && fs.iter().all(|f| matches!(f, Replicated)) {
+                Replicated
+            } else {
+                Unknown
+            }
+        }
+
+        // ---- collectives ----
+        Op::AllReduce { ranks } => {
+            if *ranks != fs.len() {
+                flag(
+                    out,
+                    "collective_arity",
+                    node,
+                    format!("AllReduce declares ranks={ranks} but has {} inputs", fs.len()),
+                );
+            }
+            Replicated
+        }
+        Op::AllGather { dim, ranks } => {
+            if *ranks != fs.len() {
+                flag(
+                    out,
+                    "collective_arity",
+                    node,
+                    format!("AllGather declares ranks={ranks} but has {} inputs", fs.len()),
+                );
+            }
+            check_gather(node, *dim, fs, out)
+        }
+        Op::Concat { dim } => check_gather(node, *dim, fs, out),
+        Op::ReduceScatter { dim, ranks, index } => {
+            if *ranks != fs.len() {
+                flag(
+                    out,
+                    "collective_arity",
+                    node,
+                    format!("ReduceScatter declares ranks={ranks} but has {} inputs", fs.len()),
+                );
+            }
+            if !fs.is_empty()
+                && fs.iter().all(|f| matches!(f, Sharded { dist: true, .. }))
+            {
+                flag(
+                    out,
+                    "scatter_over_shards",
+                    node,
+                    "ReduceScatter sums collective-produced shards — these are chunks \
+                     of the full value, not addends; an AllGather/Concat was expected"
+                        .to_string(),
+                );
+                return Unknown;
+            }
+            if !fs.is_empty()
+                && fs.iter().all(|f| matches!(f, Partial { ranks: r } if *r == fs.len()))
+                && *ranks == fs.len()
+            {
+                Sharded { dim: *dim, ranks: *ranks, index: *index, of: ShardOf::Anon, dist: true }
+            } else {
+                Unknown
+            }
+        }
+
+        // ---- MoE routing ----
+        Op::TopK { .. } => match fs[0] {
+            Replicated => Replicated,
+            _ => Unknown,
+        },
+        Op::Dispatch { capacity, .. } => {
+            let rows = g.shape(node.inputs[0]).first().copied().unwrap_or(0);
+            if (*capacity as i64) < rows {
+                flag(
+                    out,
+                    "dispatch_capacity",
+                    node,
+                    format!(
+                        "dispatch capacity {capacity} < {rows} rows: overflowing tokens \
+                         are silently zeroed"
+                    ),
+                );
+            }
+            Unknown
+        }
+        Op::Combine { experts } => {
+            check_combine(g, node, *experts, out);
+            Unknown
+        }
+
+        Op::Custom { .. } => Unknown,
+    }
+}

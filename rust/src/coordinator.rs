@@ -74,6 +74,12 @@ pub struct JobResult {
     /// Deterministic for `jobs = 1`; see [`crate::infer::InferOutput`].
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// ShardFlow static-analysis findings on `G_d` ([`crate::analysis`]).
+    /// Attached for *every* verdict (the pass is independent of
+    /// saturation), rendered by [`report_table`] as a lint column, and
+    /// deliberately excluded from [`canonical_report`] — findings are
+    /// diagnostics, not part of the verdict determinism surface.
+    pub lint: Vec<crate::analysis::LintFinding>,
     pub error: Option<String>,
 }
 
@@ -112,7 +118,11 @@ impl Coordinator {
         let (verdict, attempts) =
             check_refinement_escalating(&w.gs, &w.gd, &w.ri, &self.cfg, &self.escalation);
         let duration = t0.elapsed();
-        let base = |verdict, error| JobResult {
+        // ShardFlow findings accompany every verdict: the pass is
+        // independent of saturation, so Refuted/Inconclusive jobs still get
+        // their diagnostics (that is the triage value).
+        let lint = crate::analysis::analyze(&w.gd, Some(&w.ri)).findings;
+        let base = |verdict, error, lint| JobResult {
             name: w.name.clone(),
             ok: verdict == JobVerdict::Verified,
             verdict,
@@ -126,6 +136,7 @@ impl Coordinator {
             per_node: vec![],
             cache_hits: 0,
             cache_misses: 0,
+            lint,
             error,
         };
         match verdict {
@@ -140,12 +151,12 @@ impl Coordinator {
                     per_node: o.per_node,
                     cache_hits: o.cache_hits,
                     cache_misses: o.cache_misses,
-                    ..base(JobVerdict::Verified, None)
+                    ..base(JobVerdict::Verified, None, lint)
                 }
             }
-            Verdict::Refuted(e) => base(JobVerdict::Refuted, Some(format!("{e}"))),
+            Verdict::Refuted(e) => base(JobVerdict::Refuted, Some(format!("{e}")), lint),
             Verdict::Inconclusive(i) => {
-                base(JobVerdict::Inconclusive(i.reason), Some(format!("{i}")))
+                base(JobVerdict::Inconclusive(i.reason), Some(format!("{i}")), lint)
             }
         }
     }
@@ -200,24 +211,28 @@ impl Coordinator {
 pub fn report_table(results: &[JobResult]) -> String {
     let w = results.iter().map(|r| r.name.len()).max().unwrap_or(8).max(8);
     let mut s = format!(
-        "{:<w$}  {:>7}  {:>7}  {:>9}  {:>9}  {:>8}  result\n",
-        "model", "ops(Gs)", "ops(Gd)", "time", "lemmas", "mappings",
+        "{:<w$}  {:>7}  {:>7}  {:>9}  {:>9}  {:>8}  {:>4}  result\n",
+        "model", "ops(Gs)", "ops(Gd)", "time", "lemmas", "mappings", "lint",
     );
     for r in results {
         s.push_str(&format!(
-            "{:<w$}  {:>7}  {:>7}  {:>9}  {:>9}  {:>8}  {}\n",
+            "{:<w$}  {:>7}  {:>7}  {:>9}  {:>9}  {:>8}  {:>4}  {}\n",
             r.name,
             r.gs_ops,
             r.gd_ops,
             crate::bench::fmt_dur(r.duration),
             r.lemma_applications,
             r.mappings,
+            r.lint.len(),
             match r.verdict {
                 JobVerdict::Verified => "refines".to_string(),
                 JobVerdict::Refuted => "BUG".to_string(),
                 JobVerdict::Inconclusive(reason) => format!("INCONCLUSIVE({reason})"),
             },
         ));
+        for f in &r.lint {
+            s.push_str(&format!("    lint [{}] at '{}': {}\n", f.code, f.node, f.detail));
+        }
     }
     s
 }
@@ -351,12 +366,21 @@ mod tests {
             per_node: vec![],
             cache_hits: 5,
             cache_misses: 1,
+            lint: vec![crate::analysis::LintFinding::new(
+                "partial_no_reduce",
+                "b1_act",
+                "must not appear in the canonical report",
+            )],
             error: Some("refinement FAILED at operator 'x'\nsecond line".into()),
         };
         let s = canonical_report(std::slice::from_ref(&r));
         assert!(s.contains("verified"), "{s}");
         assert!(!s.contains("123"), "durations must not leak into the canonical report: {s}");
         assert!(!s.contains("hits"), "cache split must not leak into the canonical report: {s}");
+        assert!(
+            !s.contains("partial_no_reduce"),
+            "lint findings must not leak into the canonical report: {s}"
+        );
         assert!(s.contains("    | refinement FAILED"), "{s}");
         assert!(s.contains("    | second line"), "{s}");
         assert!(cache_summary(&[r]).contains("83.3%"));

@@ -16,6 +16,11 @@
 //! trailing line (e.g. a journal produced by some other writer) by
 //! dropping it.
 
+// The journal is an untrusted input path (a resumed campaign parses
+// whatever is on disk): parse errors must propagate as Results, never
+// panic. Enforced via clippy.toml's disallowed-methods list.
+#![deny(clippy::disallowed_methods)]
+
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -109,6 +114,7 @@ impl Journal {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic on failure by design
 mod tests {
     use super::*;
 

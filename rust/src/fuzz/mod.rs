@@ -52,5 +52,6 @@ pub use mutate::{
 };
 pub use journal::Journal;
 pub use oracle::{
-    replay_counterexample, resume_config, run_fuzz, FuzzConfig, FuzzReport, MutOutcome, OpStat,
+    lint_counterexample, replay_counterexample, resume_config, run_fuzz, FuzzConfig, FuzzReport,
+    MutOutcome, OpStat,
 };

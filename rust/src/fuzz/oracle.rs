@@ -207,6 +207,11 @@ pub struct OpStat {
     pub silent_rejected: u64,
     pub false_proof: u64,
     pub inconclusive: u64,
+    /// Rejected mutants the ShardFlow static analysis also flagged —
+    /// lint triage, orthogonal to the verdict-level outcome columns.
+    pub lint_flagged: u64,
+    /// Rejected mutants only the e-graph caught (the lint stayed silent).
+    pub lint_silent_refuted: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -226,6 +231,10 @@ pub struct FuzzReport {
     /// Clean pairs on which the (escalated) default budgets ran out — a
     /// soundness-of-service violation, see [`FuzzReport::sound`].
     pub clean_inconclusive: u64,
+    /// Clean pairs the ShardFlow static analysis flagged. The lint is
+    /// specified to be silent on correct graphs, so any nonzero count is a
+    /// soundness violation (see [`FuzzReport::sound`]).
+    pub lint_false_alarms: u64,
     /// Per-mutation-operator outcome counts — the single source of truth
     /// for every mutant-level aggregate (see the derived methods below).
     pub per_op: BTreeMap<String, OpStat>,
@@ -274,16 +283,28 @@ impl FuzzReport {
     pub fn mutants_inconclusive(&self) -> u64 {
         self.sum(|s| s.inconclusive)
     }
+    /// Rejected mutants the static analysis also flagged (lint triage).
+    pub fn lint_flagged(&self) -> u64 {
+        self.sum(|s| s.lint_flagged)
+    }
+    /// Rejected mutants only the e-graph caught — expected for
+    /// numerics-only bugs the placement lattice cannot see.
+    pub fn lint_silent_refuted(&self) -> u64 {
+        self.sum(|s| s.lint_silent_refuted)
+    }
 
     /// Zero false proofs, zero false alarms, zero mislocalizations, no
     /// oracle-evaluation failures (a rebuilt, validated mutant that cannot
     /// be executed means the harness itself is broken), and no clean pair
-    /// starved into `Inconclusive` at default budgets. Mutant-side
-    /// `Inconclusive` is a coverage metric, not a soundness one.
+    /// starved into `Inconclusive` at default budgets, and no lint finding
+    /// on any clean pair (the static analysis must stay silent on correct
+    /// graphs). Mutant-side `Inconclusive` is a coverage metric, not a
+    /// soundness one, and `lint_silent_refuted` is expected triage noise.
     pub fn sound(&self) -> bool {
         self.false_alarms == 0
             && self.clean_cert_failures == 0
             && self.clean_inconclusive == 0
+            && self.lint_false_alarms == 0
             && self.false_proofs() == 0
             && self.locus_misses() == 0
             && self.eval_failures() == 0
@@ -307,6 +328,11 @@ impl FuzzReport {
                         ("silent_rejected", Json::num(s.silent_rejected as f64)),
                         ("false_proof", Json::num(s.false_proof as f64)),
                         ("inconclusive", Json::num(s.inconclusive as f64)),
+                        ("lint_flagged", Json::num(s.lint_flagged as f64)),
+                        (
+                            "lint_silent_refuted",
+                            Json::num(s.lint_silent_refuted as f64),
+                        ),
                     ]),
                 )
             })
@@ -317,6 +343,7 @@ impl FuzzReport {
             ("false_alarms", Json::num(self.false_alarms as f64)),
             ("clean_cert_failures", Json::num(self.clean_cert_failures as f64)),
             ("clean_inconclusive", Json::num(self.clean_inconclusive as f64)),
+            ("lint_false_alarms", Json::num(self.lint_false_alarms as f64)),
             ("mutants_attempted", Json::num(self.mutants_attempted() as f64)),
             ("stillborn", Json::num(self.stillborn() as f64)),
             ("eval_failures", Json::num(self.eval_failures() as f64)),
@@ -327,6 +354,8 @@ impl FuzzReport {
             ("silent_rejected", Json::num(self.silent_rejected() as f64)),
             ("false_proofs", Json::num(self.false_proofs() as f64)),
             ("mutants_inconclusive", Json::num(self.mutants_inconclusive() as f64)),
+            ("lint_flagged", Json::num(self.lint_flagged() as f64)),
+            ("lint_silent_refuted", Json::num(self.lint_silent_refuted() as f64)),
             ("sound", Json::Bool(self.sound())),
             ("per_operator", Json::Obj(per_op)),
             (
@@ -374,6 +403,13 @@ impl FuzzReport {
             self.silent_rejected(),
             self.mutants_inconclusive(),
             self.false_proofs()
+        ));
+        s.push_str(&format!(
+            "lint: {} false alarms on clean pairs | {} rejected mutants flagged | \
+             {} silent-refuted (e-graph only)\n",
+            self.lint_false_alarms,
+            self.lint_flagged(),
+            self.lint_silent_refuted()
         ));
         s.push_str(&format!(
             "{:<26} {:>6} {:>6} {:>6} {:>7} {:>6} {:>7} {:>7} {:>7} {:>6} {:>6}\n",
@@ -819,8 +855,16 @@ fn run_seed(
         build_pair(&spec).with_context(|| format!("building case {i} (seed {cs:#x})"))?;
     report.models += 1;
 
+    // ShardFlow triage, clean side: the static analysis is specified to be
+    // silent on every correct pair, so a finding here is a soundness
+    // violation regardless of what the e-graph later concludes.
+    let clean_lint = crate::analysis::analyze(&gd, Some(&ri)).findings.len() as u64;
+    if clean_lint > 0 {
+        report.lint_false_alarms += 1;
+    }
+
     let clean_tag: &'static str;
-    let mut mutant_events: Vec<(&'static str, &'static str)> = Vec::new();
+    let mut mutant_events: Vec<(&'static str, &'static str, Option<&'static str>)> = Vec::new();
     match clean_outcome(&gs, &gd, &ri, cs, icfg) {
         // mutant verdicts are meaningless on a bad clean pair, so every
         // non-Verified arm skips the mutant loop
@@ -899,7 +943,7 @@ fn run_seed(
                     Ok(x) => x,
                     Err(_) => {
                         bump(&mut report.per_op, site.kind, |s| s.stillborn += 1);
-                        mutant_events.push((site.kind.name(), "stillborn"));
+                        mutant_events.push((site.kind.name(), "stillborn", None));
                         continue;
                     }
                 };
@@ -921,7 +965,7 @@ fn run_seed(
                         // as a debuggable counterexample like any other
                         // violation
                         bump(&mut report.per_op, site.kind, |s| s.eval_failure += 1);
-                        mutant_events.push((site.kind.name(), "eval_failure"));
+                        mutant_events.push((site.kind.name(), "eval_failure", None));
                         record_cex(
                             report,
                             cfg,
@@ -939,7 +983,32 @@ fn run_seed(
                         continue;
                     }
                 };
-                mutant_events.push((site.kind.name(), outcome.tag()));
+                // ShardFlow triage, mutant side: partition the rejected
+                // mutants into lint-flagged vs. e-graph-only catches.
+                // Accepted / inconclusive mutants are not triaged — the
+                // lint has nothing to agree or disagree with there.
+                let lint_tag = match &outcome {
+                    MutOutcome::KilledInRegion
+                    | MutOutcome::SilentRejected
+                    | MutOutcome::LocusMiss(_) => {
+                        if crate::analysis::analyze(&gd_mut, Some(&ri)).is_clean() {
+                            Some("lint_silent_refuted")
+                        } else {
+                            Some("lint_flagged")
+                        }
+                    }
+                    _ => None,
+                };
+                match lint_tag {
+                    Some("lint_flagged") => {
+                        bump(&mut report.per_op, site.kind, |s| s.lint_flagged += 1);
+                    }
+                    Some("lint_silent_refuted") => {
+                        bump(&mut report.per_op, site.kind, |s| s.lint_silent_refuted += 1);
+                    }
+                    _ => {}
+                }
+                mutant_events.push((site.kind.name(), outcome.tag(), lint_tag));
                 match &outcome {
                     MutOutcome::KilledInRegion => {
                         bump(&mut report.per_op, site.kind, |s| s.killed_in_region += 1);
@@ -1013,16 +1082,21 @@ fn run_seed(
         ("index", Json::num(i as f64)),
         ("case_seed", Json::str(format!("{:#018x}", cs))),
         ("clean", Json::str(clean_tag)),
+        ("clean_lint", Json::num(clean_lint as f64)),
         (
             "mutants",
             Json::Arr(
                 mutant_events
                     .into_iter()
-                    .map(|(op, outcome)| {
-                        Json::obj(vec![
+                    .map(|(op, outcome, lint)| {
+                        let mut fields = vec![
                             ("op", Json::str(op)),
                             ("outcome", Json::str(outcome)),
-                        ])
+                        ];
+                        if let Some(l) = lint {
+                            fields.push(("lint", Json::str(l)));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
@@ -1048,6 +1122,10 @@ fn replay_seed_record(report: &mut FuzzReport, rec: &Json) -> Result<()> {
         "inconclusive" => report.clean_inconclusive += 1,
         other => bail!("seed record: unknown clean outcome '{other}'"),
     }
+    // pre-lint journals (no "clean_lint" field) replay as lint-silent
+    if rec.get("clean_lint").as_f64().is_some_and(|n| n > 0.0) {
+        report.lint_false_alarms += 1;
+    }
     for m in rec.get("mutants").as_arr().unwrap_or(&[]) {
         let op = m.get("op").as_str().ok_or_else(|| anyhow!("mutant event missing 'op'"))?;
         let outcome = m
@@ -1067,6 +1145,12 @@ fn replay_seed_record(report: &mut FuzzReport, rec: &Json) -> Result<()> {
             "false_proof" => st.false_proof += 1,
             "inconclusive" => st.inconclusive += 1,
             other => bail!("mutant event: unknown outcome '{other}'"),
+        }
+        match m.get("lint").as_str() {
+            Some("lint_flagged") => st.lint_flagged += 1,
+            Some("lint_silent_refuted") => st.lint_silent_refuted += 1,
+            Some(other) => bail!("mutant event: unknown lint tag '{other}'"),
+            None => {}
         }
     }
     for c in rec.get("cex").as_arr().unwrap_or(&[]) {
@@ -1158,6 +1242,27 @@ pub fn replay_counterexample(j: &Json) -> Result<String> {
             Ok(format!("mutant outcome: {}", out.tag()))
         }
     }
+}
+
+/// Static-analysis-only replay of a counterexample/fixture JSON: rebuild
+/// the pair (applying the recorded mutation when present) and run ShardFlow
+/// on `G_d` — no saturation, no numerics. Returns a display name and the
+/// lint report. Backs `graphguard lint --fixture`.
+pub fn lint_counterexample(j: &Json) -> Result<(String, crate::analysis::LintReport)> {
+    let spec = ModelSpec::from_json(j.get("spec"))?;
+    let mutation = match j.get("mutation") {
+        Json::Null => None,
+        m => Some(Mutation::from_json(m)?),
+    };
+    let (_gs, gd, ri) = build_pair(&spec)?;
+    let (gd, name) = match &mutation {
+        None => (gd, format!("{} (clean)", spec.flavor.name())),
+        Some(m) => {
+            let (gd_mut, m2) = apply_mutation_by_name(&gd, m.kind, &m.node_name)?;
+            (gd_mut, format!("{} + {}@{}", spec.flavor.name(), m2.kind.name(), m2.node_name))
+        }
+    };
+    Ok((name, crate::analysis::analyze(&gd, Some(&ri))))
 }
 
 #[cfg(test)]

@@ -9,6 +9,11 @@
 //! `Scale`/`AddScalar` attrs; `custom-call`s map to `Op::Custom` so users
 //! can attach lemmas (§6.5, "h"-group).
 
+// This module parses untrusted input (HLO text from arbitrary toolchains):
+// malformed input must surface as `Err`, never a panic. Enforced via
+// `disallowed-methods` in clippy.toml (unwrap/expect banned).
+#![deny(clippy::disallowed_methods)]
+
 use crate::ir::{DType, FBits, Graph, Op, TensorId};
 use anyhow::{anyhow, bail, Context, Result};
 use rustc_hash::FxHashMap;
@@ -235,8 +240,40 @@ fn lower_op(
             g.add(name, Op::Custom { name: target }, parts)?
         }
         "copy" | "convert" | "bitcast" => g.add(name, Op::Identity, vec![t(operand(0)?)?])?,
-        other => bail!("unsupported HLO opcode '{other}' — add a lemma/op mapping (§6.5)"),
+        other => bail!(
+            "unsupported HLO opcode '{other}' at instruction '{}'{} — add a lemma/op \
+             mapping (§6.5)",
+            inst.name,
+            suggest_opcodes(other)
+        ),
     })
+}
+
+/// Every opcode `lower_op` (or the frontend's pre-pass) accepts, for
+/// unknown-opcode diagnostics.
+const KNOWN_OPCODES: &[&str] = &[
+    "add", "bitcast", "broadcast", "concatenate", "constant", "convert", "copy",
+    "custom-call", "divide", "dot", "exponential", "log", "logistic", "maximum",
+    "multiply", "negate", "parameter", "reduce", "reshape", "rsqrt", "slice",
+    "sqrt", "subtract", "tanh", "transpose", "tuple",
+];
+
+/// ` (did you mean ...?)` listing known opcodes sharing a prefix with the
+/// unknown one (e.g. a truncated `exponen` or a versioned `reduce-window`),
+/// or empty when nothing is close.
+fn suggest_opcodes(unknown: &str) -> String {
+    let pfx = |a: &str, b: &str| a.chars().zip(b.chars()).take_while(|(x, y)| x == y).count();
+    let mut near: Vec<&str> = KNOWN_OPCODES
+        .iter()
+        .copied()
+        .filter(|k| pfx(k, unknown) >= 3.min(k.len()).min(unknown.len()).max(2))
+        .collect();
+    near.truncate(3);
+    if near.is_empty() {
+        String::new()
+    } else {
+        format!(" (did you mean {}?)", near.join(", "))
+    }
 }
 
 struct Instruction {
@@ -430,6 +467,7 @@ fn split_top_level(s: &str) -> Vec<&str> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic on failure by design
 mod tests {
     use super::*;
 
@@ -507,7 +545,22 @@ ENTRY e {
     fn unsupported_opcode_errors_helpfully() {
         let text = "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT w = f32[2]{0} while(p0), condition=c, body=b\n}\n";
         let err = parse_hlo_text(text, "bad").unwrap_err();
-        assert!(format!("{err:#}").contains("unsupported HLO opcode"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unsupported HLO opcode"));
+        assert!(msg.contains("'w'"), "must name the offending instruction: {msg}");
+    }
+
+    #[test]
+    fn unsupported_opcode_suggests_near_misses() {
+        // a truncated / versioned opcode gets prefix-matched suggestions
+        let text = "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT r = f32[2]{0} reduce-window(p0)\n}\n";
+        let msg = format!("{:#}", parse_hlo_text(text, "bad").unwrap_err());
+        assert!(msg.contains("did you mean"), "expected suggestions: {msg}");
+        assert!(msg.contains("reduce"), "nearest opcode should be listed: {msg}");
+        // something with no shared prefix gets no suggestion list
+        let text2 = "HloModule m\n\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT q = f32[2]{0} zzz(p0)\n}\n";
+        let msg2 = format!("{:#}", parse_hlo_text(text2, "bad").unwrap_err());
+        assert!(!msg2.contains("did you mean"), "no suggestions expected: {msg2}");
     }
 
     /// Corrupted-input battery: every malformed module must come back as a

@@ -142,6 +142,11 @@ pub struct InferOutput {
     /// may each count a miss (the results never vary, only the split).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Pre-saturation static-analysis findings on `G_d` (ShardFlow,
+    /// [`crate::analysis`]). Diagnostics only: they ride along with the
+    /// verdict and are excluded from the canonical report — the e-graph
+    /// remains the sole verdict oracle.
+    pub lint: Vec<crate::analysis::LintFinding>,
 }
 
 /// Why inference could not reach a verdict.
@@ -300,6 +305,9 @@ pub fn check_refinement_verdict(
     ri: &Relation,
     cfg: &InferConfig,
 ) -> Verdict {
+    // ShardFlow pre-pass: O(|G_d|) static diagnostics, attached to a
+    // Verified output below. Never consulted for the verdict itself.
+    let lint = crate::analysis::analyze(gd, Some(ri)).findings;
     let rules = lemmas::standard_rewrites();
     let quarantined: FxHashSet<usize> = cfg.quarantined_channels.iter().copied().collect();
     // While any chaos fault is armed, bypass the cache entirely: a replayed
@@ -361,6 +369,7 @@ pub fn check_refinement_verdict(
         per_node,
         cache_hits,
         cache_misses,
+        lint,
     }))
 }
 

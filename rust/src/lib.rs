@@ -20,6 +20,9 @@
 //! - [`egraph`] — equality-saturation engine (the egg role).
 //! - [`lemmas`] — the rewrite-lemma library (+ per-model custom-op lemmas).
 //! - [`relation`] / [`infer`] — the paper's core algorithm (Listings 1–3).
+//! - [`analysis`] — ShardFlow pre-saturation static analysis: distribution-
+//!   lattice dataflow + channel-wiring/deadlock lints (diagnostics only;
+//!   the e-graph stays the verdict oracle).
 //! - [`baseline`] — monolithic whole-graph checker for scalability
 //!   comparisons.
 //! - [`strategies`] / [`models`] / [`bugs`] — workload generation: TP/SP/EP/
@@ -37,6 +40,7 @@
 //! - [`bench`] — mini benchmark harness used by `cargo bench`.
 //! - [`chaos`] — test-only fault-injection hooks (feature `chaos`).
 
+pub mod analysis;
 pub mod baseline;
 pub mod bench;
 pub mod bugs;

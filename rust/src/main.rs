@@ -5,17 +5,23 @@
 //!   suite   [--ranks N] [--threads N]      run the Table-2 workload suite
 //!   bugs                                    run the §6.2 case studies
 //!   fuzz    [--seeds N] [--seed S] [--flavor F] ...  bug-injection fuzzer
+//!   lint    [--ranks N] [--json] [--fixture ce.json]  ShardFlow static
+//!           analysis only (no saturation): Table-2 sweep or one fixture
 //!   lemmas                                  list the lemma library
 //!   hlo     --file <module.hlo.txt>         parse an HLO-text module
 //!
 //! Exit codes mirror the three-valued verdict plus two operational states:
-//!   0  verified / sound
-//!   1  refuted (a genuine refinement bug, or an unsound fuzz campaign)
+//!   0  verified / sound (for `lint`: zero findings)
+//!   1  refuted (a genuine refinement bug, an unsound fuzz campaign, or —
+//!      for `lint` — one or more findings)
 //!   2  operational error (bad arguments, I/O, malformed inputs)
 //!   3  inconclusive (resource budgets exhausted before a verdict)
 //!   4  fuzz campaign aborted early (crash drill via --abort-after)
 //!
 //! (Hand-rolled argument parsing — no clap in the offline crate set.)
+
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
 
 use anyhow::{anyhow, Context, Result};
 use graphguard::coordinator::JobVerdict;
@@ -51,11 +57,12 @@ fn run() -> Result<i32> {
         Some("suite") => cmd_suite(&args[1..]),
         Some("bugs") => cmd_bugs(),
         Some("fuzz") => cmd_fuzz(&args[1..]),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("lemmas") => cmd_lemmas(),
         Some("hlo") => cmd_hlo(&args[1..]),
         _ => {
             eprintln!(
-                "usage: graphguard <verify|suite|bugs|fuzz|lemmas|hlo> [options]\n\
+                "usage: graphguard <verify|suite|bugs|fuzz|lint|lemmas|hlo> [options]\n\
                  \n  verify --gs g_s.json --gd g_d.json --ri relation.json [--deadline-ms N]\
                  \n         [--jobs N] [--no-cache]\
                  \n  suite  [--ranks N] [--threads N] [--deadline-ms N] [--jobs N]\
@@ -63,11 +70,12 @@ fn run() -> Result<i32> {
                  \n  bugs\
                  \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
                  \n         [--flavor F] [--replay ce.json] [--resume DIR] [--abort-after N]\
+                 \n  lint   [--ranks N] [--json] [--fixture ce.json]\
                  \n  lemmas\
                  \n  hlo --file module.hlo.txt\
                  \n\
-                 \nexit codes: 0 verified/sound, 1 refuted/unsound, 2 error,\
-                 \n            3 inconclusive (budgets exhausted), 4 fuzz aborted"
+                 \nexit codes: 0 verified/sound/lint-clean, 1 refuted/unsound/lint-findings,\
+                 \n            2 error, 3 inconclusive (budgets exhausted), 4 fuzz aborted"
             );
             Ok(EXIT_OK)
         }
@@ -282,6 +290,57 @@ fn run_fuzz_and_report(cfg: &fuzz::FuzzConfig) -> Result<i32> {
         return Ok(EXIT_REFUTED);
     }
     Ok(EXIT_OK)
+}
+
+/// ShardFlow static analysis, standalone: sweep the Table-2 workloads (or a
+/// single replayable counterexample via `--fixture`) and report findings —
+/// no e-graph saturation, no verdicts. Exit 0 when every graph is clean,
+/// 1 when any finding fires; the JSON shape (sorted by node/code/detail)
+/// is byte-stable for CI gates.
+fn cmd_lint(args: &[String]) -> Result<i32> {
+    use graphguard::util::json::Json;
+    let as_json = args.iter().any(|a| a == "--json");
+    let entries: Vec<(String, graphguard::analysis::LintReport)> =
+        if let Some(path) = arg_value(args, "--fixture") {
+            let text =
+                std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            vec![fuzz::lint_counterexample(&j).with_context(|| format!("linting {path}"))?]
+        } else {
+            let ranks: usize =
+                arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(2);
+            models::table2_workloads(ranks)
+                .iter()
+                .map(|w| (w.name.clone(), graphguard::analysis::analyze(&w.gd, Some(&w.ri))))
+                .collect()
+        };
+    let total: usize = entries.iter().map(|(_, r)| r.findings.len()).sum();
+    if as_json {
+        let graphs: Vec<Json> = entries
+            .iter()
+            .map(|(name, r)| {
+                Json::obj(vec![
+                    ("graph", Json::str(name.clone())),
+                    ("count", Json::num(r.findings.len() as f64)),
+                    ("findings", Json::Arr(r.findings.iter().map(|f| f.to_json()).collect())),
+                ])
+            })
+            .collect();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("total", Json::num(total as f64)),
+                ("graphs", Json::Arr(graphs)),
+            ])
+            .to_string_pretty()
+        );
+    } else {
+        for (name, r) in &entries {
+            print!("{name}: {}", r.render());
+        }
+        println!("total: {total} finding(s) across {} graph(s)", entries.len());
+    }
+    Ok(if total == 0 { EXIT_OK } else { EXIT_REFUTED })
 }
 
 fn cmd_lemmas() -> Result<i32> {

@@ -182,3 +182,119 @@ fn taxonomy_bridge_names_real_fuzz_operators() {
         }
     }
 }
+
+// ---- ShardFlow lint triage golden table (all 23 mutation operators) ----
+
+/// Per-kind pin of the static-analysis triage classification: for each
+/// mutation operator, its first applicable site on a representative spec is
+/// either `lint_flagged` (the distribution lattice / channel lints see the
+/// bug pre-saturation, with a locus in or downstream of the mutated block)
+/// or `lint_silent_refuted` (a numerics-only bug only the e-graph can
+/// catch). A FLAGGED kind regressing to silent means lost static coverage;
+/// a SILENT kind starting to fire means the lattice got a new definite
+/// contradiction — either way this table must be updated consciously.
+#[test]
+fn lint_triage_classification_is_pinned() {
+    use graphguard::analysis;
+    use graphguard::fuzz::{
+        applicable_sites, apply_mutation, build_pair, parse_block, Block, Flavor, ModelSpec,
+        MutKind, NormKind, UnaryKind, MUT_KINDS,
+    };
+    use graphguard::schedule::SchedKind;
+
+    fn spec(seed: u64, seq: i64, flavor: Flavor, blocks: Vec<Block>) -> ModelSpec {
+        ModelSpec { seed, ranks: 2, seq, hidden: 4, flavor, blocks }
+    }
+    let sp3 = spec(
+        3,
+        4,
+        Flavor::Sp,
+        vec![Block::Linear, Block::Unary(UnaryKind::Gelu), Block::Norm(NormKind::Softmax)],
+    );
+    let sp_sm =
+        spec(11, 4, Flavor::Sp, vec![Block::Unary(UnaryKind::Tanh), Block::Norm(NormKind::Softmax)]);
+    let sp_scale = spec(5, 4, Flavor::Sp, vec![Block::Linear, Block::Scale(0.5)]);
+    let tp_mlp =
+        spec(7, 4, Flavor::Tp, vec![Block::Mlp(UnaryKind::Tanh), Block::Unary(UnaryKind::Tanh)]);
+    let tp_rs =
+        spec(9, 4, Flavor::Tp, vec![Block::LinearRs, Block::Unary(UnaryKind::Tanh)]);
+    let pp = spec(21, 4, Flavor::Pp, vec![Block::Linear, Block::Unary(UnaryKind::Tanh)]);
+    let fsdp = spec(22, 4, Flavor::Fsdp, vec![Block::Linear, Block::Mlp(UnaryKind::Gelu)]);
+    let moe = spec(31, 4, Flavor::Moe, vec![Block::Linear, Block::Moe(UnaryKind::Silu)]);
+    let sched_1f1b = spec(
+        41,
+        8,
+        Flavor::PpSched(SchedKind::OneFOneB),
+        vec![Block::Linear, Block::Unary(UnaryKind::Gelu)],
+    );
+    let sched_inter = spec(
+        42,
+        8,
+        Flavor::PpSched(SchedKind::Interleaved),
+        vec![Block::Linear, Block::Linear, Block::Linear, Block::Linear],
+    );
+
+    // (operator, spec to probe it on, expected: true = lint_flagged)
+    let table: [(MutKind, &ModelSpec, bool); 23] = [
+        (MutKind::GatherReorder, &sp3, true),
+        (MutKind::DropAggregation, &tp_mlp, true),
+        (MutKind::GatherToReduceScatter, &sp3, true),
+        (MutKind::ScatterIndexPerturb, &tp_rs, true),
+        (MutKind::SliceShift, &tp_rs, false),
+        (MutKind::SliceDimSwap, &tp_rs, false),
+        (MutKind::ScalePerturb, &sp_scale, false),
+        (MutKind::ScaleDrop, &sp_scale, false),
+        (MutKind::MatMulSwap, &moe, false),
+        (MutKind::WrongUnary, &sp3, false),
+        (MutKind::DupShardInput, &sp3, true),
+        (MutKind::SoftmaxDimSwap, &sp_sm, true),
+        (MutKind::CrossedSendRecv, &pp, true),
+        (MutKind::DroppedBoundary, &pp, true),
+        (MutKind::StaleShardGather, &fsdp, true),
+        (MutKind::MicrobatchScaleOffby, &sp_scale, false),
+        (MutKind::WrongExpertDispatch, &moe, true),
+        (MutKind::DroppedTokenCombine, &moe, true),
+        (MutKind::GateWeightUnnormalized, &moe, true),
+        (MutKind::CapacityTruncateSilent, &moe, true),
+        (MutKind::BufferReuseEarly, &sched_1f1b, true),
+        (MutKind::DoubleBufferSwap, &sched_1f1b, true),
+        (MutKind::VirtualStageMisbind, &sched_inter, true),
+    ];
+    assert_eq!(table.len(), MUT_KINDS.len(), "a mutation operator is missing from the pin");
+
+    for (kind, spec, expect_flagged) in &table {
+        let (_gs, gd, ri) = build_pair(spec).unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+        assert!(
+            analysis::analyze(&gd, Some(&ri)).is_clean(),
+            "{kind:?}: probe spec must lint clean before mutation"
+        );
+        let site = applicable_sites(&gd)
+            .into_iter()
+            .find(|s| s.kind == *kind)
+            .unwrap_or_else(|| panic!("{kind:?}: no applicable site on its probe spec"));
+        let (gd_mut, m) = apply_mutation(&gd, site)
+            .unwrap_or_else(|e| panic!("{kind:?}: mutation must build: {e:#}"));
+        let r = analysis::analyze(&gd_mut, Some(&ri));
+        if *expect_flagged {
+            assert!(
+                !r.is_clean(),
+                "{kind:?}@{}: pinned lint_flagged, but the analysis stayed silent",
+                m.node_name
+            );
+            let mutated = m.block.unwrap_or(0);
+            assert!(
+                r.findings.iter().any(|f| parse_block(&f.node).is_some_and(|b| b >= mutated)),
+                "{kind:?}@{}: no finding in or downstream of mutated block {mutated}:\n{}",
+                m.node_name,
+                r.render()
+            );
+        } else {
+            assert!(
+                r.is_clean(),
+                "{kind:?}@{}: pinned lint_silent_refuted, but the analysis fired:\n{}",
+                m.node_name,
+                r.render()
+            );
+        }
+    }
+}

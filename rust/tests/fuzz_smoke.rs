@@ -40,6 +40,17 @@ fn fuzz_slice_is_sound() {
         "at least some behavioral mutants must be killed:\n{}",
         report.table()
     );
+    assert_eq!(
+        report.lint_false_alarms, 0,
+        "static analysis flagged a clean pair:\n{}",
+        report.table()
+    );
+    assert_eq!(
+        report.lint_flagged() + report.lint_silent_refuted(),
+        report.killed_in_region() + report.locus_misses() + report.silent_rejected(),
+        "every rejected mutant must be lint-triaged exactly once:\n{}",
+        report.table()
+    );
 }
 
 /// Same seed → byte-identical report JSON (the reproducibility contract).

@@ -1,0 +1,117 @@
+//! ShardFlow static-analysis integration tests.
+//!
+//! Three contracts pinned here:
+//!
+//! 1. **Soundness** — the lint is silent on every correct pair: all clean
+//!    Table-2 workloads (at two parallelism degrees) and the clean fuzz
+//!    fixtures produce zero findings. A finding on a correct graph is a
+//!    false alarm, which `FuzzReport::sound` counts as a soundness
+//!    violation.
+//! 2. **Coverage** — every `*_killed` regression fixture (the wiring-bug
+//!    families: crossed/stale stage boundaries, stale FSDP shards, MoE
+//!    dispatch/gate bugs, schedule buffer hazards) is flagged by the lint
+//!    alone, before any saturation runs.
+//! 3. **Separation** — the lint rides along with verification as
+//!    diagnostics only: the verdict and the canonical report are computed
+//!    exactly as without it (see `coordinator` unit tests for the
+//!    canonical-report exclusion; here we pin that `check_refinement`'s
+//!    verdict tag is unchanged on a clean pair and a mutant).
+
+use graphguard::analysis;
+use graphguard::fuzz::{self, build_pair, ModelSpec};
+use graphguard::infer::{check_refinement_verdict, InferConfig};
+use graphguard::models;
+use graphguard::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// 1. Soundness: silent on clean pairs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clean_table2_workloads_have_zero_findings() {
+    for ranks in [2usize, 4] {
+        for w in models::table2_workloads(ranks) {
+            let r = analysis::analyze(&w.gd, Some(&w.ri));
+            assert!(
+                r.is_clean(),
+                "{} (ranks {ranks}): lint false alarm on a clean workload:\n{}",
+                w.name,
+                r.render()
+            );
+        }
+    }
+}
+
+fn lint_fixture(text: &str) -> (String, analysis::LintReport) {
+    let j = Json::parse(text).unwrap_or_else(|e| panic!("fixture must parse: {e}"));
+    fuzz::lint_counterexample(&j).unwrap_or_else(|e| panic!("fixture must lint: {e:#}"))
+}
+
+#[test]
+fn clean_fixtures_have_zero_findings() {
+    for text in [
+        include_str!("fixtures/pp_clean_verifies.json"),
+        include_str!("fixtures/pp_sched_clean_verifies.json"),
+        include_str!("fixtures/moe_clean_verifies.json"),
+    ] {
+        let (name, r) = lint_fixture(text);
+        assert!(r.is_clean(), "{name}: lint false alarm on a clean fixture:\n{}", r.render());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Coverage: every killed wiring-bug fixture is flagged pre-saturation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_fixtures_are_flagged() {
+    for text in [
+        include_str!("fixtures/pp_crossed_send_recv_killed.json"),
+        include_str!("fixtures/fsdp_stale_shard_killed.json"),
+        include_str!("fixtures/moe_wrong_expert_dispatch_killed.json"),
+        include_str!("fixtures/moe_gate_unnormalized_killed.json"),
+        include_str!("fixtures/pp_sched_buffer_reuse_early_killed.json"),
+        include_str!("fixtures/pp_sched_double_buffer_swap_killed.json"),
+        include_str!("fixtures/pp_sched_virtual_stage_misbind_killed.json"),
+    ] {
+        let (name, r) = lint_fixture(text);
+        assert!(
+            !r.is_clean(),
+            "{name}: wiring-bug fixture must be flagged by the static analysis alone"
+        );
+        for f in &r.findings {
+            assert!(!f.node.is_empty(), "{name}: every finding needs a locus");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Separation: lint findings never move the verdict
+// ---------------------------------------------------------------------------
+
+/// The analysis is deterministic: same graph, same (normalized) report.
+#[test]
+fn analysis_is_deterministic() {
+    let j = Json::parse(include_str!("fixtures/pp_crossed_send_recv_killed.json")).unwrap();
+    let (_, a) = fuzz::lint_counterexample(&j).unwrap();
+    let (_, b) = fuzz::lint_counterexample(&j).unwrap();
+    assert_eq!(a, b, "lint report must be byte-stable per graph");
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
+
+/// On a clean pair the verdict stays Verified and the attached lint is
+/// empty; on a wiring mutant the verdict stays Refuted with the same
+/// e-graph locus discipline as before — the lint adds diagnostics, the
+/// e-graph stays the oracle.
+#[test]
+fn lint_rides_along_without_moving_the_verdict() {
+    let j = Json::parse(include_str!("fixtures/pp_clean_verifies.json")).unwrap();
+    let spec = ModelSpec::from_json(j.get("spec")).unwrap();
+    let (gs, gd, ri) = build_pair(&spec).unwrap();
+    match check_refinement_verdict(&gs, &gd, &ri, &InferConfig::default()) {
+        graphguard::infer::Verdict::Verified(out) => {
+            assert!(out.lint.is_empty(), "clean pair must carry an empty lint list");
+        }
+        v => panic!("clean fixture pair must verify, got {}", v.tag()),
+    }
+}

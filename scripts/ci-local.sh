@@ -4,8 +4,9 @@
 # verdict with one command. Steps (both CI jobs, serialized):
 #
 #   rust job:        build → test (incl. chaos) → fmt → clippy (-D warnings)
-#   fuzz-smoke job:  suite → parallel-determinism gate → fuzz smoke →
-#                    resume drill → fig4 + fuzz + cache benches →
+#   fuzz-smoke job:  suite → parallel-determinism gate → lint gate →
+#                    fuzz smoke → lint-triage gate → resume drill →
+#                    fig4 + fuzz + cache benches →
 #                    cache-effectiveness gate → bench gate
 #
 # Pass --quick to stop after the rust job (the fast pre-push check).
@@ -57,7 +58,40 @@ cargo run --release --bin graphguard -- suite --ranks 2 --jobs 4 --no-cache --ca
 diff -u "$tmpdir/suite_jobs1.txt" "$tmpdir/suite_jobs4_nocache.txt"
 echo "canonical suite report is jobs- and cache-invariant"
 
+# ShardFlow lint gate: silent on every clean graph, loud (exit 1, JSON
+# loci) on every *_killed wiring-bug fixture.
+echo
+echo "==> lint gate (clean graphs silent, wiring-bug fixtures flagged)"
+cargo run --release --bin graphguard -- lint --ranks 2
+cargo run --release --bin graphguard -- lint --ranks 4 --json > /dev/null
+for f in rust/tests/fixtures/*_clean_verifies.json; do
+    cargo run --release --bin graphguard -- lint --fixture "$f"
+done
+for f in rust/tests/fixtures/*_killed.json; do
+    if cargo run --release --bin graphguard -- lint --json --fixture "$f" > "$tmpdir/lint_out.json"; then
+        echo "lint gate: $f must be flagged" >&2
+        exit 1
+    fi
+    grep -q '"node"' "$tmpdir/lint_out.json" \
+        || { echo "lint gate: $f findings need loci" >&2; exit 1; }
+done
+echo "lint gate passed"
+
 step cargo run --release --bin graphguard -- fuzz --seeds 50 --seed 0
+
+# triage counters ride in FUZZ_REPORT.json; a lint finding on a clean pair
+# is a soundness violation (sound() already fails the fuzz step — this
+# re-asserts it on the artifact)
+echo
+echo "==> lint triage gate (lint_false_alarms == 0)"
+python3 - <<'EOF'
+import json
+r = json.load(open('FUZZ_REPORT.json'))
+assert r['lint_false_alarms'] == 0, r
+print('lint_false_alarms == 0; flagged', r['lint_flagged'],
+      '/ silent-refuted', r['lint_silent_refuted'])
+EOF
+
 step ./scripts/resume_smoke.sh
 step cargo bench --bench fig4_verification_time
 step cargo bench --bench fuzz_throughput
