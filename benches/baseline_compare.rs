@@ -9,7 +9,7 @@
 use graphguard::baseline::check_refinement_monolithic;
 use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
 use graphguard::egraph::SaturationLimits;
-use graphguard::infer::{check_refinement, InferConfig};
+use graphguard::Verifier;
 use graphguard::models::llama::{self, LlamaConfig};
 use std::time::Instant;
 
@@ -29,7 +29,7 @@ fn main() {
         let ops = gs.num_nodes() + gd.num_nodes();
 
         let t0 = Instant::now();
-        let it = check_refinement(&gs, &gd, &ri, &InferConfig::default());
+        let it = Verifier::new().expect(&gs, &gd, &ri);
         let iterative = t0.elapsed();
         let it = match it {
             Ok(out) => out,

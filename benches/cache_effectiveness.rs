@@ -19,7 +19,8 @@
 
 use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
 use graphguard::cache::FingerprintCache;
-use graphguard::infer::{check_refinement_isolated, InferConfig, Verdict};
+use graphguard::infer::{InferConfig, Verdict};
+use graphguard::Verifier;
 use graphguard::models::gpt::{self, GptConfig};
 use std::sync::Arc;
 use std::time::Instant;
@@ -37,7 +38,7 @@ fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut run = |name: &'static str, cfg: &InferConfig| -> (u64, u64) {
         let t0 = Instant::now();
-        let v = check_refinement_isolated(&gs, &gd, &ri, cfg);
+        let v = Verifier::with_config(cfg.clone()).isolated(true).run(&gs, &gd, &ri);
         let wall = t0.elapsed();
         let Verdict::Verified(out) = v else {
             panic!("{name}: expected verified, got {}", v.tag());

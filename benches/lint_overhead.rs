@@ -1,6 +1,6 @@
 //! ShardFlow static-analysis overhead on the Table-2 workloads.
 //!
-//! The analysis runs before every saturation (`check_refinement*` attaches
+//! The analysis runs before every saturation (each `Verifier` run attaches
 //! its findings to the report), so its cost rides on every verification.
 //! The claim this bench tracks: the lint is a single O(|G_d|) pass —
 //! microseconds against the paper's seconds-scale saturation — and stays

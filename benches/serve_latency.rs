@@ -1,0 +1,106 @@
+//! `graphguard serve` request latency on a repeated-layer GPT workload.
+//!
+//! The service claim this measures: a long-lived server amortizes
+//! verification across requests through its shared fingerprint cache, so a
+//! warm request is a replay, not a re-verification. One cold request over
+//! the L=8 tensor+sequence-parallel GPT pair, then a stream of warm
+//! requests against the same server options:
+//!   serve_cold      — first request, fresh shared cache
+//!   serve_warm_p50  — warm request latency, 50th percentile
+//!   serve_warm_p95  — warm request latency, 95th percentile
+//!
+//! Hard assertion (the ISSUE-9 acceptance gate, also enforced on
+//! BENCH_serve.json by CI): warm hit-rate ≥ (L−1)/L. Each measured request
+//! runs the full service path — request parse, verifier run, lint pass,
+//! response serialization — over an in-memory pipe.
+
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
+use graphguard::bench::{bench, fmt_dur, write_bench_json, BenchRecord};
+use graphguard::ir::json_io;
+use graphguard::models::gpt::{self, GptConfig};
+use graphguard::serve::{serve_loop, ServeOptions};
+use graphguard::util::json::Json;
+use std::io::Cursor;
+use std::time::Instant;
+
+const LAYERS: usize = 8;
+const WARM_ITERS: usize = 20;
+
+/// One request through the in-process serve loop; returns the parsed
+/// response line.
+fn serve_one(line: &str, opts: &ServeOptions) -> Json {
+    let mut out = Vec::new();
+    serve_loop(Cursor::new(line.as_bytes()), &mut out, opts).expect("serve transport");
+    let text = String::from_utf8(out).expect("utf-8 response");
+    Json::parse(text.lines().next().expect("one response")).expect("valid response json")
+}
+
+fn cache_counters(resp: &Json) -> (u64, u64) {
+    (
+        resp.get("cache_hits").as_f64().unwrap_or(0.0) as u64,
+        resp.get("cache_misses").as_f64().unwrap_or(0.0) as u64,
+    )
+}
+
+fn main() {
+    let _ = graphguard::lemmas::standard_rewrites();
+    println!("graphguard serve latency — GPT TP+SP, {LAYERS} layers, 2 ranks\n");
+    let model_cfg = GptConfig::default();
+    let (gs, gd, ri) = gpt::tp_sp_pair(2, LAYERS, &model_cfg).expect("build L=8 workload");
+    let request = Json::obj(vec![
+        ("id", Json::str("bench")),
+        ("gs", json_io::to_json(&gs)),
+        ("gd", json_io::to_json(&gd)),
+        ("ri", ri.to_json(&gs, &gd)),
+    ]);
+    let line = format!("{request}\n");
+    let ops = gs.num_nodes() + gd.num_nodes();
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let opts = ServeOptions::default(); // one fresh shared cache for the session
+
+    let t0 = Instant::now();
+    let cold = serve_one(&line, &opts);
+    let cold_wall = t0.elapsed();
+    assert_eq!(cold.get("verdict").as_str(), Some("verified"), "cold request must verify");
+    let (cold_hits, cold_misses) = cache_counters(&cold);
+    println!(
+        "{:>14}: {:>9}  hits {:>3}  misses {:>3}",
+        "serve_cold",
+        fmt_dur(cold_wall),
+        cold_hits,
+        cold_misses
+    );
+    records.push(
+        BenchRecord::new("serve_cold", ops, cold_wall, 0).with_cache(cold_hits, cold_misses),
+    );
+
+    let mut last = Json::Null;
+    let warm = bench("serve_warm", 2, WARM_ITERS, || last = serve_one(&line, &opts));
+    assert_eq!(last.get("verdict").as_str(), Some("verified"), "warm request must verify");
+    let (warm_hits, warm_misses) = cache_counters(&last);
+
+    // The acceptance bound: warm hit-rate ≥ (L−1)/L.
+    let rate = warm_hits as f64 / ((warm_hits + warm_misses).max(1)) as f64;
+    let floor = (LAYERS - 1) as f64 / LAYERS as f64;
+    assert!(rate >= floor, "warm hit-rate {rate:.3} below acceptance floor {floor:.3}");
+    println!(
+        "{:>14}: p50 {:>9}  p95 {:>9}  hit-rate {:.1}% (floor {:.1}%)",
+        "serve_warm",
+        fmt_dur(warm.p50),
+        fmt_dur(warm.p95),
+        rate * 100.0,
+        floor * 100.0
+    );
+    records.push(
+        BenchRecord::new("serve_warm_p50", ops, warm.p50, 0).with_cache(warm_hits, warm_misses),
+    );
+    records.push(
+        BenchRecord::new("serve_warm_p95", ops, warm.p95, 0).with_cache(warm_hits, warm_misses),
+    );
+
+    let path = write_bench_json("serve", &records).expect("write BENCH_serve.json");
+    println!("wrote {}", path.display());
+}

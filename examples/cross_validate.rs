@@ -16,7 +16,7 @@
 use anyhow::{ensure, Context, Result};
 use graphguard::expr::eval::{eval_expr, Env};
 use graphguard::expr::TensorRef;
-use graphguard::infer::{check_refinement, InferConfig};
+use graphguard::Verifier;
 use graphguard::ir::{json_io, Graph};
 use graphguard::relation::Relation;
 use graphguard::runtime::Runtime;
@@ -67,7 +67,7 @@ fn cross_validate(pair: &str, gs_name: &str, gd_name: &str, ri_name: &str) -> Re
 
     // static: infer R_o on the captured graphs
     let t0 = Instant::now();
-    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+    let out = Verifier::new().expect(&gs, &gd, &ri)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "  static:  refinement holds in {} ({} G_s ops, {} lemma applications)",

@@ -8,7 +8,8 @@
 //! Run: `cargo run --example quickstart`
 
 use graphguard::expr::print::{render, Namer};
-use graphguard::infer::{check_refinement, verify_numeric, InferConfig};
+use graphguard::infer::verify_numeric;
+use graphguard::Verifier;
 use graphguard::ir::Graph;
 use graphguard::relation::Relation;
 use graphguard::util::json::Json;
@@ -55,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     println!("checking that {} refines {} ...\n", gd.name, gs.name);
-    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+    let out = Verifier::new().expect(&gs, &gd, &ri)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let namer = Namer { gs: &gs, gd: &gd };

@@ -19,7 +19,7 @@
 //!
 //! ## Soundness contract
 //!
-//! The lint **never changes a verdict**: `check_refinement*` attaches
+//! The lint **never changes a verdict**: every `Verifier` run attaches
 //! findings to its report, but Verified/Refuted/Inconclusive comes from the
 //! e-graph oracle alone, and the canonical report (the `--canonical`
 //! byte-determinism surface) excludes findings entirely. Dually, the

@@ -76,7 +76,11 @@ pub fn write_bench_json(
             ])
         })
         .collect();
-    let doc = Json::obj(vec![("bench", Json::str(name)), ("results", Json::arr(rows))]);
+    let doc = Json::obj(vec![
+        ("schema_version", crate::util::schema::version_field()),
+        ("bench", Json::str(name)),
+        ("results", Json::arr(rows)),
+    ]);
     let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
     std::fs::write(&path, doc.to_string_pretty())?;
     Ok(path)

@@ -6,7 +6,6 @@
 //! the paper it does NOT fail refinement — the user spots it by reading the
 //! inferred relation — and our reproduction returns the suspicious `R_o`.
 
-use crate::infer::{check_refinement, InferConfig};
 use crate::ir::{Graph, Op};
 use crate::relation::Relation;
 use crate::strategies::{chunks, replicate_input, shard_input, RiBuilder};
@@ -29,7 +28,7 @@ impl BugCase {
     /// successful run also renders how `G_d` computes each of its outputs —
     /// the "inspect the relation/implementation" step of bug 5's workflow.
     pub fn run(&self) -> (bool, String) {
-        match check_refinement(&self.gs, &self.gd, &self.ri, &InferConfig::default()) {
+        match crate::verifier::Verifier::new().expect(&self.gs, &self.gd, &self.ri) {
             Ok(out) => {
                 let ro = out.relation.to_json(&self.gs, &self.gd).to_string_pretty();
                 let mut trace = String::new();
@@ -368,12 +367,13 @@ pub fn all_cases(buggy: bool) -> Vec<BugCase> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+    use crate::infer::verify_numeric;
+    use crate::verifier::Verifier;
 
     #[test]
     fn fixed_variants_all_refine() {
         for case in all_cases(false) {
-            let out = check_refinement(&case.gs, &case.gd, &case.ri, &InferConfig::default())
+            let out = Verifier::new().expect(&case.gs, &case.gd, &case.ri)
                 .unwrap_or_else(|e| panic!("fixed {} failed: {e}", case.name));
             if case.id != 5 {
                 // bug 5's user-assumed replication relation is not

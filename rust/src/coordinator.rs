@@ -8,23 +8,19 @@
 //! used by the CLI and the benches.
 //!
 //! Fault tolerance: every job — whether submitted through [`run_one`] or
-//! [`run_batch`] — goes through the same `execute_job` path, which runs
-//! panic-isolated inference ([`check_refinement_isolated`]) under the
-//! coordinator's [`EscalationPolicy`]. A panicking lemma applier poisons
-//! only its own job (per-call e-graph arenas are dropped on unwind) and
-//! surfaces as `Inconclusive(Panic)` with the payload in
-//! [`JobResult::error`]; the worker thread and the rest of the batch keep
-//! running.
+//! [`run_batch`] — goes through the same `execute_job` path, which runs a
+//! panic-isolated [`crate::verifier::Verifier`] under the coordinator's
+//! [`EscalationPolicy`]. A panicking lemma applier poisons only its own
+//! job (per-call e-graph arenas are dropped on unwind) and surfaces as
+//! `Inconclusive(Panic)` with the payload in [`JobResult::error`]; the
+//! worker thread and the rest of the batch keep running.
 //!
 //! [`run_one`]: Coordinator::run_one
 //! [`run_batch`]: Coordinator::run_batch
-//! [`check_refinement_isolated`]: crate::infer::check_refinement_isolated
 
-use crate::infer::{
-    check_refinement_escalating, EscalationPolicy, InconclusiveReason, InferConfig, NodeTiming,
-    Verdict,
-};
+use crate::infer::{EscalationPolicy, InconclusiveReason, InferConfig, NodeTiming, Verdict};
 use crate::models::Workload;
+use crate::verifier::Verifier;
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -115,8 +111,9 @@ impl Coordinator {
     /// panic-isolated inference under the escalation policy, timed.
     fn execute_job(&self, w: &Workload) -> JobResult {
         let t0 = Instant::now();
-        let (verdict, attempts) =
-            check_refinement_escalating(&w.gs, &w.gd, &w.ri, &self.cfg, &self.escalation);
+        let (verdict, attempts) = Verifier::with_config(self.cfg.clone())
+            .escalation(self.escalation.clone())
+            .run_counted(&w.gs, &w.gd, &w.ri);
         let duration = t0.elapsed();
         // ShardFlow findings accompany every verdict: the pass is
         // independent of saturation, so Refuted/Inconclusive jobs still get

@@ -29,7 +29,7 @@ enum CondKind {
 /// side-conditions are keyed by the normalized difference `a - b`, and the
 /// same symbolic comparisons recur for every operator of a model (slice
 /// bounds, partition offsets), so each distinct condition is proved once per
-/// `check_refinement` call instead of once per operator. The cache assumes
+/// verification run instead of once per operator. The cache assumes
 /// the solver's constraint store is fixed after construction — which holds
 /// for the inference walk, where constraints come from capture, not lemmas.
 pub struct RewriteCtx {

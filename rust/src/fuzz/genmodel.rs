@@ -1041,8 +1041,7 @@ mod tests {
             gd.nodes().iter().any(|n| matches!(n.op, Op::AllReduce { .. })),
             "EP graph must all-reduce the partials"
         );
-        let cfg = crate::infer::InferConfig::default();
-        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+        let out = crate::verifier::Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("clean MoE pair must refine: {e}"));
         crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 57).unwrap();
         assert!(
@@ -1092,8 +1091,7 @@ mod tests {
             gd.nodes().iter().any(|n| matches!(n.op, Op::Send { .. })),
             "pp graph must contain stage boundaries"
         );
-        let cfg = crate::infer::InferConfig::default();
-        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+        let out = crate::verifier::Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("clean PP pair must refine: {e}"));
         crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 55).unwrap();
     }
@@ -1128,8 +1126,7 @@ mod tests {
                     );
                 }
             }
-            let cfg = crate::infer::InferConfig::default();
-            let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+            let out = crate::verifier::Verifier::new().expect(&gs, &gd, &ri)
                 .unwrap_or_else(|e| panic!("clean {kind:?} pair must refine: {e}"));
             crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 59).unwrap();
         }
@@ -1204,8 +1201,7 @@ mod tests {
             gd.nodes().iter().any(|n| matches!(n.op, Op::AllGather { .. })),
             "fsdp graph must re-gather its params"
         );
-        let cfg = crate::infer::InferConfig::default();
-        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+        let out = crate::verifier::Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("clean FSDP pair must refine: {e}"));
         crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 56).unwrap();
     }
@@ -1240,8 +1236,7 @@ mod tests {
             ],
         };
         let (gs, gd, ri) = build_pair(&spec).unwrap();
-        let cfg = crate::infer::InferConfig::default();
-        let out = crate::infer::check_refinement(&gs, &gd, &ri, &cfg)
+        let out = crate::verifier::Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("clean SP pair must refine: {e}"));
         crate::infer::verify_numeric(&gs, &gd, &ri, &out.relation, 99).unwrap();
     }

@@ -21,7 +21,8 @@
 //!    token combines, unnormalized gate weights, silent capacity
 //!    truncation, stale buffer reuse, double-buffer slot swaps, and
 //!    interleaved virtual-stage misbinding).
-//! 3. [`oracle`] — runs `check_refinement` on each (clean, mutant) pair
+//! 3. [`oracle`] — runs the [`crate::verifier::Verifier`] on each (clean,
+//!    mutant) pair
 //!    and cross-checks against concrete execution: clean pairs must verify
 //!    with a replaying numeric certificate, numerics-changing mutants must
 //!    be rejected with an in-region localization, and any accepted graph's

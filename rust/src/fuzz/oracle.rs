@@ -3,7 +3,7 @@
 //! For every fuzz case the oracle builds a clean `(G_s, G_d, R_i)` pair and
 //! checks, against both the static checker and concrete execution:
 //!
-//! 1. **No false alarms.** The clean pair must pass `check_refinement`,
+//! 1. **No false alarms.** The clean pair must pass verification,
 //!    and the inferred `R_o` must replay numerically (`verify_numeric`).
 //! 2. **No false proofs.** Any accepted graph's inferred relation must
 //!    replay numerically on several random input draws — a proof whose own
@@ -23,13 +23,13 @@ use super::journal::Journal;
 use super::mutate::{
     applicable_sites, apply_mutation, apply_mutation_by_name, parse_block, Mutation, Site,
 };
-use crate::infer::{
-    check_refinement_escalating, verify_numeric, EscalationPolicy, InferConfig, Verdict,
-};
+use crate::infer::{verify_numeric, EscalationPolicy, InferConfig, Verdict};
 use crate::ir::Graph;
 use crate::relation::Relation;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::schema;
+use crate::verifier::Verifier;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -84,6 +84,7 @@ impl FuzzConfig {
     /// JSON number type).
     pub fn journal_header(&self) -> Json {
         Json::obj(vec![
+            ("schema_version", schema::version_field()),
             ("type", Json::str("config")),
             ("seeds", Json::num(self.seeds as f64)),
             ("base_seed", Json::str(format!("{:#x}", self.base_seed))),
@@ -101,6 +102,7 @@ impl FuzzConfig {
 /// (the CLI's `fuzz --resume <dir>` entrypoint).
 pub fn resume_config(dir: &Path) -> Result<FuzzConfig> {
     let (header, _, _) = Journal::open(dir)?;
+    schema::check(&header, "fuzz journal")?;
     let field = |k: &str| -> Result<u64> {
         header
             .get(k)
@@ -140,6 +142,20 @@ pub fn resume_config(dir: &Path) -> Result<FuzzConfig> {
 /// splitmix-style per-case seed derivation (decorrelates nearby cases).
 fn case_seed(base: u64, i: u64) -> u64 {
     crate::util::rng::mix64(base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A copy of `j` with the `schema_version` stamp removed — what this
+/// build's journal header looked like before versioning existed, for
+/// comparing against v0 journals on resume.
+fn without_schema_version(j: &Json) -> Json {
+    match j {
+        Json::Obj(map) => {
+            let mut map = map.clone();
+            map.remove("schema_version");
+            Json::Obj(map)
+        }
+        other => other.clone(),
+    }
 }
 
 /// What happened to one clean pair.
@@ -338,6 +354,7 @@ impl FuzzReport {
             })
             .collect();
         Json::obj(vec![
+            ("schema_version", schema::version_field()),
             ("models", Json::num(self.models as f64)),
             ("clean_verified", Json::num(self.clean_verified as f64)),
             ("false_alarms", Json::num(self.false_alarms as f64)),
@@ -473,7 +490,10 @@ fn clean_outcome(
     seed: u64,
     icfg: &InferConfig,
 ) -> CleanOutcome {
-    match check_refinement_escalating(gs, gd, ri, icfg, &EscalationPolicy::default()).0 {
+    match Verifier::with_config(icfg.clone())
+        .escalation(EscalationPolicy::default())
+        .run(gs, gd, ri)
+    {
         Verdict::Refuted(e) => CleanOutcome::FalseAlarm(format!("{e}")),
         Verdict::Inconclusive(i) => {
             CleanOutcome::Inconclusive { reason: i.reason.tag(), detail: format!("{i}") }
@@ -517,7 +537,10 @@ fn classify_mutant(
 ) -> Result<MutOutcome> {
     let differs = outputs_differ(gd, gd_mut, seed ^ 0xD1FF, 3)
         .context("evaluating mutant numerically")?;
-    match check_refinement_escalating(gs, gd_mut, ri, icfg, &EscalationPolicy::default()).0 {
+    match Verifier::with_config(icfg.clone())
+        .escalation(EscalationPolicy::default())
+        .run(gs, gd_mut, ri)
+    {
         Verdict::Verified(out) => {
             if certificate_ok(gs, gd_mut, ri, &out.relation, seed ^ 0xCE57) {
                 Ok(if differs { MutOutcome::BenignAccepted } else { MutOutcome::SilentAccepted })
@@ -760,6 +783,7 @@ impl Counterexample {
         let nulls = (Json::Null, Json::Null, Json::Null, Json::Null);
         let (gs_j, gd_j, ri_j, gd_mut_j) = graphs.unwrap_or(nulls);
         Json::obj(vec![
+            ("schema_version", schema::version_field()),
             ("kind", Json::str(self.kind.name())),
             ("case_seed", Json::str(format!("{:#018x}", self.case_seed))),
             ("detail", Json::str(self.detail.clone())),
@@ -797,7 +821,14 @@ pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport> {
             .with_context(|| format!("creating {}", cfg.out_dir.display()))?;
         if cfg.resume {
             let (header, recs, j) = Journal::open(&cfg.out_dir)?;
-            let want = cfg.journal_header();
+            // Explicit version mismatch fails here, naming both versions;
+            // a version-less (v0) header is still resumable and compared
+            // against this build's header minus the stamp.
+            schema::check(&header, "fuzz journal")?;
+            let want = match schema::declared_version(&header) {
+                Some(_) => cfg.journal_header(),
+                None => without_schema_version(&cfg.journal_header()),
+            };
             if header.to_string() != want.to_string() {
                 bail!(
                     "journal in {} belongs to a different campaign config\n  journal: {}\n  \
@@ -1211,6 +1242,7 @@ fn record_cex(
 /// Replay a counterexample JSON (as written by `record_cex`): rebuild the
 /// pair from its spec, re-apply the mutation, and report the verdict.
 pub fn replay_counterexample(j: &Json) -> Result<String> {
+    schema::check(j, "counterexample")?;
     let spec = ModelSpec::from_json(j.get("spec"))?;
     let mutation = match j.get("mutation") {
         Json::Null => None,
@@ -1249,6 +1281,7 @@ pub fn replay_counterexample(j: &Json) -> Result<String> {
 /// on `G_d` — no saturation, no numerics. Returns a display name and the
 /// lint report. Backs `graphguard lint --fixture`.
 pub fn lint_counterexample(j: &Json) -> Result<(String, crate::analysis::LintReport)> {
+    schema::check(j, "fixture")?;
     let spec = ModelSpec::from_json(j.get("spec"))?;
     let mutation = match j.get("mutation") {
         Json::Null => None,

@@ -1,8 +1,9 @@
 //! The iterative relation-inference algorithm — the paper's core
 //! contribution (Listings 1–3).
 //!
-//! [`check_refinement`] walks `G_s` in topological order (Listing 1). For
-//! each operator it builds a *fresh, small* e-graph seeded with the
+//! [`crate::verifier::Verifier::run`] walks `G_s` in topological order
+//! (Listing 1). For each operator it builds a *fresh, small* e-graph seeded
+//! with the
 //! operator's expression over already-mapped inputs, saturates it against
 //! the lemma library, then iteratively unions in `G_d` definitional
 //! equalities restricted to the `T_rel` frontier (Listing 3) and extracts
@@ -158,7 +159,7 @@ pub enum InconclusiveReason {
     /// and no clean mapping had been found by then.
     NodeBudget,
     /// Inference panicked (poisoned lemma applier, internal bug); caught by
-    /// [`check_refinement_isolated`].
+    /// the isolation layer ([`crate::verifier::Verifier::isolated`]).
     Panic,
 }
 
@@ -241,42 +242,57 @@ std::thread_local! {
         const { std::cell::RefCell::new(String::new()) };
 }
 
-/// Listing 1 under a two-valued API, kept for the many call sites (tests,
-/// benches, examples) that run at budgets where exhaustion cannot occur.
+/// Listing 1 under a two-valued API, kept as a deprecated compatibility
+/// wrapper for external fixtures and scripts.
 ///
 /// Panics on `Inconclusive`: silently mapping a resource verdict onto
 /// either `Ok` or `Err` would be exactly the misreporting this layer
-/// exists to prevent. Budget-sensitive callers use
-/// [`check_refinement_verdict`] / [`check_refinement_isolated`].
+/// exists to prevent (same contract as [`crate::verifier::Verifier::expect`]).
+#[deprecated(
+    since = "0.1.0",
+    note = "use graphguard::verifier::Verifier::new().expect(gs, gd, ri) \
+            (migration table in EXPERIMENTS.md §Serve)"
+)]
 pub fn check_refinement(
     gs: &Graph,
     gd: &Graph,
     ri: &Relation,
     cfg: &InferConfig,
 ) -> Result<InferOutput, RefinementError> {
-    match check_refinement_verdict(gs, gd, ri, cfg) {
-        Verdict::Verified(out) => Ok(*out),
-        Verdict::Refuted(e) => Err(*e),
-        Verdict::Inconclusive(i) => panic!(
-            "check_refinement: {i}\n(two-valued API cannot express Inconclusive — \
-             switch this caller to check_refinement_verdict)"
-        ),
-    }
+    crate::verifier::Verifier::with_config(cfg.clone()).expect(gs, gd, ri)
 }
 
-/// [`check_refinement_verdict`] wrapped in `catch_unwind`: a panicking
-/// lemma applier (or any internal bug) becomes `Inconclusive(Panic)` with
-/// the payload preserved, instead of unwinding into the caller. The
-/// e-graph arena and rewrite context are local to the call, so the
-/// poisoned state is dropped, not reused.
+/// Deprecated wrapper over [`crate::verifier::Verifier`] with
+/// `isolated(true)`: a panicking lemma applier (or any internal bug)
+/// becomes `Inconclusive(Panic)` with the payload preserved, instead of
+/// unwinding into the caller.
+#[deprecated(
+    since = "0.1.0",
+    note = "use graphguard::verifier::Verifier::with_config(cfg).isolated(true).run(gs, gd, ri) \
+            (migration table in EXPERIMENTS.md §Serve)"
+)]
 pub fn check_refinement_isolated(
     gs: &Graph,
     gd: &Graph,
     ri: &Relation,
     cfg: &InferConfig,
 ) -> Verdict {
+    crate::verifier::Verifier::with_config(cfg.clone()).isolated(true).run(gs, gd, ri)
+}
+
+/// [`verdict_core`] wrapped in `catch_unwind`: a panicking lemma applier
+/// becomes `Inconclusive(Panic)` with the payload preserved. The e-graph
+/// arena and rewrite context are local to the call, so the poisoned state
+/// is dropped, not reused. This is the isolation layer behind
+/// [`crate::verifier::Verifier::isolated`].
+pub(crate) fn isolated_core(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+) -> Verdict {
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        check_refinement_verdict(gs, gd, ri, cfg)
+        verdict_core(gs, gd, ri, cfg)
     }));
     match result {
         Ok(v) => v,
@@ -297,9 +313,27 @@ pub fn check_refinement_isolated(
     }
 }
 
+/// Deprecated wrapper over [`crate::verifier::Verifier::run`] (no
+/// isolation, no escalation): Listing 1, three-valued.
+#[deprecated(
+    since = "0.1.0",
+    note = "use graphguard::verifier::Verifier::with_config(cfg).run(gs, gd, ri) \
+            (migration table in EXPERIMENTS.md §Serve)"
+)]
+pub fn check_refinement_verdict(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+) -> Verdict {
+    crate::verifier::Verifier::with_config(cfg.clone()).run(gs, gd, ri)
+}
+
 /// Listing 1: compute the output relation, iterating operators of `G_s`.
 /// Three-valued: resource exhaustion yields `Inconclusive`, never `Refuted`.
-pub fn check_refinement_verdict(
+/// The single saturation entry point every [`crate::verifier::Verifier`]
+/// mode bottoms out in.
+pub(crate) fn verdict_core(
     gs: &Graph,
     gd: &Graph,
     ri: &Relation,
@@ -552,8 +586,8 @@ enum WorkerMsg {
 /// unwind mid-rewrite, and a poisoned condition-cache mutex would cascade
 /// panics onto innocent regions), and the payload is re-thrown on the
 /// calling thread only if that region is the walk's authoritative outcome —
-/// exactly reproducing the sequential unwind for
-/// [`check_refinement_isolated`] to convert.
+/// exactly reproducing the sequential unwind for [`isolated_core`] to
+/// convert.
 #[allow(clippy::too_many_arguments)]
 fn walk_parallel(
     gs: &Graph,
@@ -701,8 +735,8 @@ fn walk_parallel(
         }
         if let Some((region, payload)) = panics.remove(&k) {
             // Re-throw on the calling thread with the worker's region name,
-            // for check_refinement_isolated to convert to
-            // Inconclusive(Panic) exactly as in sequential mode.
+            // for isolated_core to convert to Inconclusive(Panic) exactly
+            // as in sequential mode.
             CURRENT_REGION.with(|reg| *reg.borrow_mut() = region);
             resume_unwind(payload);
         }
@@ -837,9 +871,29 @@ impl EscalationPolicy {
     }
 }
 
-/// Panic-isolated inference under an escalation policy. Returns the final
-/// verdict and the number of attempts spent (≥ 1).
+/// Deprecated wrapper over [`crate::verifier::Verifier`] with an
+/// escalation policy: panic-isolated inference under iterative deepening.
+#[deprecated(
+    since = "0.1.0",
+    note = "use graphguard::verifier::Verifier::with_config(cfg).escalation(policy)\
+            .run_counted(gs, gd, ri) (migration table in EXPERIMENTS.md §Serve)"
+)]
 pub fn check_refinement_escalating(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+    policy: &EscalationPolicy,
+) -> (Verdict, usize) {
+    crate::verifier::Verifier::with_config(cfg.clone())
+        .escalation(policy.clone())
+        .run_counted(gs, gd, ri)
+}
+
+/// Panic-isolated inference under an escalation policy. Returns the final
+/// verdict and the number of attempts spent (≥ 1). Escalation implies
+/// isolation: every attempt runs through [`isolated_core`].
+pub(crate) fn escalating_core(
     gs: &Graph,
     gd: &Graph,
     ri: &Relation,
@@ -851,7 +905,7 @@ pub fn check_refinement_escalating(
         let last = attempt + 1 >= attempts;
         let mut c = cfg.clone();
         c.limits = policy.limits_for(attempt, cfg.limits);
-        let v = check_refinement_isolated(gs, gd, ri, &c);
+        let v = isolated_core(gs, gd, ri, &c);
         let retry = match &v {
             Verdict::Verified(_) => false,
             // A fixpoint refutation is budget-independent; only an
@@ -1094,6 +1148,7 @@ mod tests {
     use super::*;
     use crate::ir::Op;
     use crate::util::json::Json;
+    use crate::verifier::Verifier;
 
     /// Figure 1/2 running example: G_s = matsub(matmul(A,B), E);
     /// G_d = TP over the inner dim with reduce-scatter + all-gather.
@@ -1142,8 +1197,7 @@ mod tests {
     #[test]
     fn running_example_refines() {
         let (gs, gd, ri) = running_example();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
-            .unwrap_or_else(|e| panic!("{e}"));
+        let out = Verifier::new().expect(&gs, &gd, &ri).unwrap_or_else(|e| panic!("{e}"));
         let f = gs.tensor_by_name("F").unwrap();
         assert!(out.relation.contains(f), "F must be mapped");
         // the O(G_d)-only mapping should be the gathered output itself
@@ -1195,7 +1249,7 @@ mod tests {
             &gd,
         )
         .unwrap();
-        let err = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap_err();
+        let err = Verifier::new().expect(&gs, &gd, &ri).unwrap_err();
         assert_eq!(err.node_name, "C", "error localizes the matmul");
         let msg = format!("{err}");
         assert!(msg.contains("refinement FAILED"), "{msg}");
@@ -1221,7 +1275,7 @@ mod tests {
             &gd,
         )
         .unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap();
+        let out = Verifier::new().expect(&gs, &gd, &ri).unwrap();
         let y_id = gs.tensor_by_name("Y").unwrap();
         assert_eq!(out.relation.get(y_id)[0].cost, 0, "direct leaf mapping");
         verify_numeric(&gs, &gd, &ri, &out.relation, 7).unwrap();
@@ -1254,7 +1308,7 @@ mod tests {
     #[test]
     fn per_node_timings_recorded() {
         let (gs, gd, ri) = running_example();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap();
+        let out = Verifier::new().expect(&gs, &gd, &ri).unwrap();
         assert_eq!(out.per_node.len(), gs.num_nodes());
         assert!(out.stats.total_applications() > 0, "lemmas were applied");
     }
@@ -1268,7 +1322,7 @@ mod tests {
             limits: SaturationLimits::new(8, 10),
             ..InferConfig::default()
         };
-        match check_refinement_verdict(&gs, &gd, &ri, &cfg) {
+        match Verifier::with_config(cfg).run(&gs, &gd, &ri) {
             Verdict::Inconclusive(i) => {
                 assert_eq!(i.reason, InconclusiveReason::NodeBudget);
                 assert!(!i.region.is_empty());
@@ -1284,7 +1338,7 @@ mod tests {
             region_deadline: Some(Duration::ZERO),
             ..InferConfig::default()
         };
-        match check_refinement_verdict(&gs, &gd, &ri, &cfg) {
+        match Verifier::with_config(cfg).run(&gs, &gd, &ri) {
             Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Timeout),
             v => panic!("zero deadline must be inconclusive, got {}", v.tag()),
         }
@@ -1316,7 +1370,7 @@ mod tests {
             &gd,
         )
         .unwrap();
-        match check_refinement_verdict(&gs, &gd, &ri, &InferConfig::default()) {
+        match Verifier::new().run(&gs, &gd, &ri) {
             Verdict::Refuted(e) => assert_eq!(e.node_name, "C"),
             v => panic!("genuine bug must stay refuted, got {}", v.tag()),
         }
@@ -1331,8 +1385,7 @@ mod tests {
             iters_factor: 2,
             nodes_factor: 4,
         };
-        let (v, attempts) =
-            check_refinement_escalating(&gs, &gd, &ri, &InferConfig::default(), &policy);
+        let (v, attempts) = Verifier::new().escalation(policy).run_counted(&gs, &gd, &ri);
         assert!(v.is_verified(), "final attempt runs at >= base budget; got {}", v.tag());
         assert!(attempts > 1, "tiny initial budget must have been escalated");
     }
@@ -1349,10 +1402,12 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // pins the deprecated shim's contract on purpose
     fn two_valued_wrapper_refuses_to_misreport_inconclusive() {
-        // The compat wrapper must panic loudly on Inconclusive rather than
-        // fold it into Ok (false proof) or Err (false alarm). Applier-panic
-        // isolation end-to-end is exercised in tests/chaos.rs.
+        // The compat wrapper (and Verifier::expect underneath it) must panic
+        // loudly on Inconclusive rather than fold it into Ok (false proof)
+        // or Err (false alarm). Applier-panic isolation end-to-end is
+        // exercised in tests/chaos.rs.
         let (gs, gd, ri) = running_example();
         let cfg =
             InferConfig { limits: SaturationLimits::new(8, 10), ..InferConfig::default() };

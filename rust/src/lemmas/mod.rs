@@ -76,7 +76,7 @@ static REWRITE_BUILDS: AtomicUsize = AtomicUsize::new(0);
 /// Engine-facing view: the shared, built-once rewrite library. Every
 /// operator, workload, and coordinator worker thread clones the same `Arc`,
 /// so the ~100 boxed applier closures are constructed once per process
-/// instead of once per `check_refinement` call.
+/// instead of once per verification run.
 pub fn standard_rewrites() -> Arc<[Rewrite]> {
     Arc::clone(REWRITES.get_or_init(|| {
         REWRITE_BUILDS.fetch_add(1, Ordering::Relaxed);

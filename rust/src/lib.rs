@@ -33,6 +33,10 @@
 //! - [`fuzz`] — bug-injection mutation fuzzer: random model + strategy
 //!   composition, 23 mutation operators, differential soundness oracle.
 //! - [`hlo`] — HLO-text frontend (XLA/JAX capture path).
+//! - [`verifier`] — the unified [`Verifier`] builder every consumer goes
+//!   through (CLI, serve loop, coordinator, fuzz oracle).
+//! - [`serve`] — long-lived verification service: newline-delimited JSON
+//!   requests over stdin/stdout or a Unix socket, shared warm cache.
 //! - [`coordinator`] — multi-threaded verification service + reports.
 //! - [`cache`] — certificate fingerprint cache: canonical region
 //!   serialization + memoized saturation results for repeated layers.
@@ -58,6 +62,10 @@ pub mod models;
 pub mod relation;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod strategies;
 pub mod symbolic;
 pub mod util;
+pub mod verifier;
+
+pub use verifier::Verifier;

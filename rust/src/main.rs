@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   verify  --gs <graph.json> --gd <graph.json> --ri <relation.json>
+//!   serve   [--socket PATH] [--canonical]     long-lived verification
+//!           service: newline-delimited JSON requests on stdin (or a Unix
+//!           socket), one response per line, shared warm cache
 //!   suite   [--ranks N] [--threads N]      run the Table-2 workload suite
 //!   bugs                                    run the §6.2 case studies
 //!   fuzz    [--seeds N] [--seed S] [--flavor F] ...  bug-injection fuzzer
@@ -10,7 +13,11 @@
 //!   lemmas                                  list the lemma library
 //!   hlo     --file <module.hlo.txt>         parse an HLO-text module
 //!
-//! Exit codes mirror the three-valued verdict plus two operational states:
+//! Options shared across subcommands (`--ranks`, `--jobs`, `--no-cache`,
+//! `--canonical`, `--deadline-ms`) are parsed once by [`CommonOpts`];
+//! `<subcommand> --help` prints per-command usage plus the exit-code
+//! contract. Exit codes mirror the three-valued verdict plus two
+//! operational states:
 //!   0  verified / sound (for `lint`: zero findings)
 //!   1  refuted (a genuine refinement bug, an unsound fuzz campaign, or —
 //!      for `lint` — one or more findings)
@@ -26,7 +33,9 @@
 use anyhow::{anyhow, Context, Result};
 use graphguard::coordinator::JobVerdict;
 use graphguard::infer::Verdict;
-use graphguard::{bugs, coordinator, fuzz, hlo, infer, ir, lemmas, models, relation};
+use graphguard::{
+    bugs, coordinator, fuzz, hlo, infer, ir, lemmas, models, relation, serve, Verifier,
+};
 use std::time::Duration;
 
 const EXIT_OK: i32 = 0;
@@ -34,6 +43,14 @@ const EXIT_REFUTED: i32 = 1;
 const EXIT_ERROR: i32 = 2;
 const EXIT_INCONCLUSIVE: i32 = 3;
 const EXIT_ABORTED: i32 = 4;
+
+/// The contract every `--help` screen repeats, verbatim.
+const EXIT_CONTRACT: &str = "exit codes:\n\
+    \x20 0  verified / sound (for lint: zero findings)\n\
+    \x20 1  refuted / unsound campaign / lint findings\n\
+    \x20 2  operational error (bad arguments, I/O, malformed inputs)\n\
+    \x20 3  inconclusive (resource budgets exhausted before a verdict)\n\
+    \x20 4  fuzz campaign aborted early (--abort-after crash drill)";
 
 fn main() {
     let code = match run() {
@@ -50,10 +67,150 @@ fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Flags shared by every subcommand, parsed in one place. `ranks` has no
+/// hard default here because subcommands disagree (suite/lint default to
+/// 2, fuzz defaults to per-case choice) — use [`CommonOpts::ranks_or`].
+struct CommonOpts {
+    ranks: Option<usize>,
+    jobs: Option<usize>,
+    /// `Some(0)` disables the per-region deadline entirely.
+    deadline_ms: Option<u64>,
+    no_cache: bool,
+    canonical: bool,
+}
+
+impl CommonOpts {
+    fn parse(args: &[String]) -> Result<Self> {
+        let num = |key: &str| -> Result<Option<usize>> {
+            arg_value(args, key)
+                .map(|v| v.parse().with_context(|| format!("bad {key} '{v}'")))
+                .transpose()
+        };
+        Ok(CommonOpts {
+            ranks: num("--ranks")?,
+            jobs: num("--jobs")?,
+            deadline_ms: arg_value(args, "--deadline-ms")
+                .map(|v| v.parse().with_context(|| format!("bad --deadline-ms '{v}'")))
+                .transpose()?,
+            no_cache: args.iter().any(|a| a == "--no-cache"),
+            canonical: args.iter().any(|a| a == "--canonical"),
+        })
+    }
+
+    fn ranks_or(&self, default: usize) -> usize {
+        self.ranks.unwrap_or(default)
+    }
+
+    /// Budget/throughput flags → inference config. `--deadline-ms 0`
+    /// disables the per-region wall-clock deadline entirely; `--jobs N`
+    /// runs the region walk on N workers (default 1); the certificate
+    /// fingerprint cache is on unless `--no-cache` is given (fuzz builds
+    /// its own configs and stays uncached — the differential oracle is the
+    /// soundness net and must exercise the full engine every time).
+    fn infer_cfg(&self) -> infer::InferConfig {
+        let mut cfg = infer::InferConfig::default();
+        if let Some(ms) = self.deadline_ms {
+            cfg.region_deadline = (ms > 0).then(|| Duration::from_millis(ms));
+        }
+        if let Some(jobs) = self.jobs {
+            cfg.jobs = jobs.max(1);
+        }
+        if !self.no_cache {
+            cfg.cache = Some(graphguard::cache::FingerprintCache::global().clone());
+        }
+        cfg
+    }
+}
+
+/// Per-subcommand usage; every screen ends with [`EXIT_CONTRACT`].
+fn help_for(cmd: &str) -> String {
+    let body = match cmd {
+        "verify" => {
+            "usage: graphguard verify --gs g_s.json --gd g_d.json --ri relation.json\n\
+             \x20               [--deadline-ms N] [--jobs N] [--no-cache] [--check-numeric]\n\
+             \n\
+             One-shot refinement check: infer a clean output relation for the\n\
+             inline (G_s, G_d, R_i) triple, or localize where inference stops."
+        }
+        "serve" => {
+            "usage: graphguard serve [--socket PATH] [--canonical] [--deadline-ms N]\n\
+             \x20               [--jobs N] [--no-cache]\n\
+             \n\
+             Long-lived verification service. Reads one JSON request per line on\n\
+             stdin (or sequential connections on --socket PATH), answers each on\n\
+             stdout with one JSON response per line, and shares a warm\n\
+             fingerprint cache across requests. Malformed requests produce\n\
+             structured error responses, never a process exit; the exit code\n\
+             reflects only transport health (0 on EOF, 2 on I/O failure).\n\
+             --canonical drops run-varying response fields (wall time, cache\n\
+             counters) for byte-stable golden diffing. Request/response schema:\n\
+             EXPERIMENTS.md §Serve."
+        }
+        "suite" => {
+            "usage: graphguard suite [--ranks N] [--threads N] [--deadline-ms N]\n\
+             \x20               [--jobs N] [--no-cache] [--canonical]\n\
+             \n\
+             Run the Table-2 workload suite through the coordinator.\n\
+             --canonical prints the byte-stable report used by the determinism\n\
+             CI gates (no durations, no cache counters)."
+        }
+        "bugs" => "usage: graphguard bugs\n\nRun the §6.2 case studies (buggy variants).",
+        "fuzz" => {
+            "usage: graphguard fuzz [--seeds N] [--seed S] [--ranks R] [--mutants M]\n\
+             \x20               [--out DIR] [--flavor F] [--replay ce.json]\n\
+             \x20               [--resume DIR] [--abort-after N]\n\
+             \n\
+             Bug-injection mutation fuzzer with a differential soundness oracle.\n\
+             Artifacts (journal, FUZZ_REPORT.json, counterexamples) carry a\n\
+             schema_version; --replay/--resume reject files written by a\n\
+             different schema version (version-less files read as v0)."
+        }
+        "lint" => {
+            "usage: graphguard lint [--ranks N] [--json] [--fixture ce.json]\n\
+             \n\
+             ShardFlow static analysis only (no saturation): Table-2 sweep or a\n\
+             single replayable counterexample fixture."
+        }
+        "lemmas" => "usage: graphguard lemmas\n\nList the rewrite-lemma library.",
+        "hlo" => {
+            "usage: graphguard hlo --file module.hlo.txt\n\
+             \n\
+             Parse an HLO-text module and print its graph JSON."
+        }
+        _ => USAGE,
+    };
+    format!("{body}\n\n{EXIT_CONTRACT}")
+}
+
+const USAGE: &str =
+    "usage: graphguard <verify|serve|suite|bugs|fuzz|lint|lemmas|hlo> [options]\n\
+     \n  verify --gs g_s.json --gd g_d.json --ri relation.json [--deadline-ms N]\
+     \n         [--jobs N] [--no-cache] [--check-numeric]\
+     \n  serve  [--socket PATH] [--canonical] [--deadline-ms N] [--jobs N] [--no-cache]\
+     \n  suite  [--ranks N] [--threads N] [--deadline-ms N] [--jobs N]\
+     \n         [--no-cache] [--canonical]\
+     \n  bugs\
+     \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
+     \n         [--flavor F] [--replay ce.json] [--resume DIR] [--abort-after N]\
+     \n  lint   [--ranks N] [--json] [--fixture ce.json]\
+     \n  lemmas\
+     \n  hlo --file module.hlo.txt\
+     \n\
+     \nrun '<subcommand> --help' for details and the exit-code contract\
+     \nexit codes: 0 verified/sound/lint-clean, 1 refuted/unsound/lint-findings,\
+     \n            2 error, 3 inconclusive (budgets exhausted), 4 fuzz aborted";
+
 fn run() -> Result<i32> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(cmd) = args.first().map(String::as_str) {
+        if args.iter().skip(1).any(|a| a == "--help" || a == "-h") {
+            println!("{}", help_for(cmd));
+            return Ok(EXIT_OK);
+        }
+    }
     match args.first().map(String::as_str) {
         Some("verify") => cmd_verify(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
         Some("bugs") => cmd_bugs(),
         Some("fuzz") => cmd_fuzz(&args[1..]),
@@ -61,22 +218,7 @@ fn run() -> Result<i32> {
         Some("lemmas") => cmd_lemmas(),
         Some("hlo") => cmd_hlo(&args[1..]),
         _ => {
-            eprintln!(
-                "usage: graphguard <verify|suite|bugs|fuzz|lint|lemmas|hlo> [options]\n\
-                 \n  verify --gs g_s.json --gd g_d.json --ri relation.json [--deadline-ms N]\
-                 \n         [--jobs N] [--no-cache]\
-                 \n  suite  [--ranks N] [--threads N] [--deadline-ms N] [--jobs N]\
-                 \n         [--no-cache] [--canonical]\
-                 \n  bugs\
-                 \n  fuzz   [--seeds N] [--seed S] [--ranks R] [--mutants M] [--out DIR]\
-                 \n         [--flavor F] [--replay ce.json] [--resume DIR] [--abort-after N]\
-                 \n  lint   [--ranks N] [--json] [--fixture ce.json]\
-                 \n  lemmas\
-                 \n  hlo --file module.hlo.txt\
-                 \n\
-                 \nexit codes: 0 verified/sound/lint-clean, 1 refuted/unsound/lint-findings,\
-                 \n            2 error, 3 inconclusive (budgets exhausted), 4 fuzz aborted"
-            );
+            eprintln!("{USAGE}");
             Ok(EXIT_OK)
         }
     }
@@ -89,29 +231,8 @@ fn load_graph(path: &str) -> Result<ir::Graph> {
     ir::json_io::from_json(&json).with_context(|| format!("building graph from {path}"))
 }
 
-/// Shared budget/throughput flags → inference config. `--deadline-ms 0`
-/// disables the per-region wall-clock deadline entirely; `--jobs N` runs
-/// the region walk on N workers (default 1); the certificate fingerprint
-/// cache is on for verify/suite unless `--no-cache` is given (fuzz builds
-/// its own configs and stays uncached — the differential oracle is the
-/// soundness net and must exercise the full engine every time).
-fn infer_cfg(args: &[String]) -> Result<infer::InferConfig> {
-    let mut cfg = infer::InferConfig::default();
-    if let Some(ms) = arg_value(args, "--deadline-ms") {
-        let ms: u64 = ms.parse().with_context(|| format!("bad --deadline-ms '{ms}'"))?;
-        cfg.region_deadline = (ms > 0).then(|| Duration::from_millis(ms));
-    }
-    if let Some(jobs) = arg_value(args, "--jobs") {
-        cfg.jobs =
-            jobs.parse::<usize>().with_context(|| format!("bad --jobs '{jobs}'"))?.max(1);
-    }
-    if !args.iter().any(|a| a == "--no-cache") {
-        cfg.cache = Some(graphguard::cache::FingerprintCache::global().clone());
-    }
-    Ok(cfg)
-}
-
 fn cmd_verify(args: &[String]) -> Result<i32> {
+    let opts = CommonOpts::parse(args)?;
     let gs = load_graph(&arg_value(args, "--gs").ok_or_else(|| anyhow!("--gs required"))?)?;
     let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
     let ri_path = arg_value(args, "--ri").ok_or_else(|| anyhow!("--ri required"))?;
@@ -121,7 +242,7 @@ fn cmd_verify(args: &[String]) -> Result<i32> {
         .map_err(|e| anyhow!("{ri_path}: {e}"))?;
     let ri = relation::Relation::from_json(&ri_json, &gs, &gd)?;
     ri.validate_shapes(&gs, &gd)?;
-    match infer::check_refinement_isolated(&gs, &gd, &ri, &infer_cfg(args)?) {
+    match Verifier::with_config(opts.infer_cfg()).isolated(true).run(&gs, &gd, &ri) {
         Verdict::Verified(out) => {
             println!("refinement HOLDS — R_o:");
             println!("{}", out.relation.to_json(&gs, &gd).to_string_pretty());
@@ -154,18 +275,63 @@ fn cmd_verify(args: &[String]) -> Result<i32> {
     }
 }
 
+/// The long-lived service. Exit code reflects transport health only —
+/// per-request verdicts travel in the responses, not the exit code.
+fn cmd_serve(args: &[String]) -> Result<i32> {
+    let opts = CommonOpts::parse(args)?;
+    let mut cfg = infer::InferConfig::default();
+    if let Some(ms) = opts.deadline_ms {
+        cfg.region_deadline = (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(jobs) = opts.jobs {
+        cfg.jobs = jobs.max(1);
+    }
+    let sopts = serve::ServeOptions {
+        cfg,
+        cache: (!opts.no_cache)
+            .then(|| graphguard::cache::FingerprintCache::global().clone()),
+        canonical: opts.canonical,
+    };
+    if let Some(path) = arg_value(args, "--socket") {
+        #[cfg(unix)]
+        {
+            serve::serve_unix(std::path::Path::new(&path), &sopts)?;
+            return Ok(EXIT_OK);
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            anyhow::bail!("--socket requires a Unix platform; use stdin/stdout instead");
+        }
+    }
+    let stats = serve::serve_stdio(&sopts)?;
+    eprintln!(
+        "serve: {} request(s) — {} verified, {} refuted, {} inconclusive, {} errors; \
+         cache {}/{} hits",
+        stats.requests,
+        stats.verified,
+        stats.refuted,
+        stats.inconclusive,
+        stats.errors,
+        stats.cache_hits,
+        stats.cache_hits + stats.cache_misses
+    );
+    Ok(EXIT_OK)
+}
+
 fn cmd_suite(args: &[String]) -> Result<i32> {
-    let ranks: usize = arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let opts = CommonOpts::parse(args)?;
+    let ranks = opts.ranks_or(2);
     let threads: usize =
         arg_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
-    let cfg = infer_cfg(args)?;
+    let cfg = opts.infer_cfg();
     let coord = if threads > 0 {
         coordinator::Coordinator::new(threads, cfg)
     } else {
         coordinator::Coordinator { cfg, ..coordinator::Coordinator::default() }
     };
     let results = coord.run_batch(models::table2_workloads(ranks));
-    if args.iter().any(|a| a == "--canonical") {
+    if opts.canonical {
         // Byte-stable report for the jobs/cache determinism gate: no
         // durations, no cache counters (see coordinator::canonical_report).
         print!("{}", coordinator::canonical_report(&results));
@@ -206,6 +372,7 @@ fn cmd_bugs() -> Result<i32> {
 }
 
 fn cmd_fuzz(args: &[String]) -> Result<i32> {
+    let opts = CommonOpts::parse(args)?;
     if let Some(path) = arg_value(args, "--replay") {
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
         let j = graphguard::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
@@ -232,7 +399,7 @@ fn cmd_fuzz(args: &[String]) -> Result<i32> {
             .map(|v| v.parse())
             .transpose()?
             .unwrap_or(d.base_seed),
-        ranks: arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(d.ranks),
+        ranks: opts.ranks_or(d.ranks),
         mutants_per_model: arg_value(args, "--mutants")
             .map(|v| v.parse())
             .transpose()?
@@ -299,6 +466,7 @@ fn run_fuzz_and_report(cfg: &fuzz::FuzzConfig) -> Result<i32> {
 /// is byte-stable for CI gates.
 fn cmd_lint(args: &[String]) -> Result<i32> {
     use graphguard::util::json::Json;
+    let opts = CommonOpts::parse(args)?;
     let as_json = args.iter().any(|a| a == "--json");
     let entries: Vec<(String, graphguard::analysis::LintReport)> =
         if let Some(path) = arg_value(args, "--fixture") {
@@ -307,9 +475,7 @@ fn cmd_lint(args: &[String]) -> Result<i32> {
             let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
             vec![fuzz::lint_counterexample(&j).with_context(|| format!("linting {path}"))?]
         } else {
-            let ranks: usize =
-                arg_value(args, "--ranks").map(|v| v.parse()).transpose()?.unwrap_or(2);
-            models::table2_workloads(ranks)
+            models::table2_workloads(opts.ranks_or(2))
                 .iter()
                 .map(|w| (w.name.clone(), graphguard::analysis::analyze(&w.gd, Some(&w.ri))))
                 .collect()

@@ -328,7 +328,8 @@ pub fn bwd_pair(ranks: usize) -> Result<(Graph, Graph, Relation)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+    use crate::infer::verify_numeric;
+    use crate::verifier::Verifier;
 
     #[test]
     fn seq_fwd_builds() {
@@ -340,7 +341,7 @@ mod tests {
     #[test]
     fn bytedance_fwd_tp_sp_ep2_refines() {
         let (gs, gd, ri) = tp_sp_ep_pair(2, 1).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 41).unwrap();
     }
@@ -348,7 +349,7 @@ mod tests {
     #[test]
     fn bytedance_bwd_ep2_refines() {
         let (gs, gd, ri) = bwd_pair(2).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 43).unwrap();
     }

@@ -559,7 +559,8 @@ pub fn moe_ep_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relatio
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+    use crate::infer::{verify_numeric, InferConfig};
+    use crate::verifier::Verifier;
 
     #[test]
     fn seq_graph_shape() {
@@ -572,7 +573,7 @@ mod tests {
     #[test]
     fn gpt_tp2_refines() {
         let (gs, gd, ri) = tp_pair(2, 1);
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 11).unwrap();
     }
@@ -580,7 +581,7 @@ mod tests {
     #[test]
     fn gpt_tp_sp2_refines() {
         let (gs, gd, ri) = tp_sp_pair(2, 1, &GptConfig::default()).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 13).unwrap();
     }
@@ -588,7 +589,7 @@ mod tests {
     #[test]
     fn gpt_tp_sp_vp2_refines() {
         let (gs, gd, ri) = tp_sp_vp_pair(2, 1, &GptConfig::default()).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 17).unwrap();
     }
@@ -600,7 +601,7 @@ mod tests {
             gd.nodes().iter().any(|n| matches!(n.op, crate::ir::Op::Send { .. })),
             "stage boundary must appear in G_d"
         );
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 29).unwrap();
     }
@@ -637,7 +638,7 @@ mod tests {
             }
         }
         assert_eq!(sends, 4, "one boundary x 4 micro-batches");
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 37).unwrap();
     }
@@ -652,7 +653,7 @@ mod tests {
             .filter(|n| matches!(n.op, crate::ir::Op::Send { .. }))
             .count();
         assert_eq!(sends, 12, "3 boundaries x 4 micro-batches");
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 41).unwrap();
     }
@@ -672,11 +673,11 @@ mod tests {
             }
         }
         assert!(
-            check_refinement(&gs, &gd, &ri, &cfg).is_err(),
+            Verifier::with_config(cfg).expect(&gs, &gd, &ri).is_err(),
             "quarantined boundaries must not verify"
         );
         // and the same pair verifies with an empty quarantine
-        check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
     }
 
@@ -699,7 +700,7 @@ mod tests {
             .filter(|n| matches!(n.op, crate::ir::Op::AllGather { .. }))
             .count();
         assert!(gathers >= 12, "every param must be re-gathered, saw {gathers}");
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 31).unwrap();
     }
@@ -722,7 +723,7 @@ mod tests {
             gd.nodes().iter().any(|n| matches!(n.op, crate::ir::Op::Combine { experts: 2 })),
             "EP variant must carry per-rank partial combines"
         );
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 61).unwrap();
         // the walk must have crossed the MoE block through router-guarded

@@ -216,12 +216,13 @@ pub fn fsdp_pair(ranks: usize, layers: usize, cfg: &LlamaConfig) -> Result<(Grap
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+    use crate::infer::verify_numeric;
+    use crate::verifier::Verifier;
 
     #[test]
     fn llama_tp2_refines() {
         let (gs, gd, ri) = tp_pair(2, 1, &LlamaConfig::default()).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 23).unwrap();
     }
@@ -230,7 +231,7 @@ mod tests {
     fn llama_pp2_tp2_refines() {
         let (gs, gd, ri) = pp_tp_pair(2, 2, 2, &LlamaConfig::default()).unwrap();
         assert!(gd.nodes().iter().any(|n| matches!(n.op, Op::Recv { .. })));
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 37).unwrap();
     }
@@ -238,7 +239,7 @@ mod tests {
     #[test]
     fn llama_fsdp2_refines() {
         let (gs, gd, ri) = fsdp_pair(2, 1, &LlamaConfig::default()).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 41).unwrap();
     }

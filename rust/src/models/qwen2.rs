@@ -139,12 +139,13 @@ pub fn tp_pair(ranks: usize, layers: usize) -> Result<(Graph, Graph, Relation)> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+    use crate::infer::verify_numeric;
+    use crate::verifier::Verifier;
 
     #[test]
     fn qwen2_tp2_refines() {
         let (gs, gd, ri) = tp_pair(2, 1).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 29).unwrap();
     }

@@ -82,12 +82,13 @@ pub fn grad_accum_buggy_pair(k: usize) -> Result<(Graph, Graph, Relation)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::{check_refinement, verify_numeric, InferConfig};
+    use crate::infer::verify_numeric;
+    use crate::verifier::Verifier;
 
     #[test]
     fn correct_grad_accum_refines_including_gradients() {
         let (gs, gd, ri) = grad_accum_pair(2).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         // loss AND both gradients must be mapped
         for name in ["loss", "grad_w", "grad_b"] {
@@ -100,7 +101,7 @@ mod tests {
     #[test]
     fn buggy_grad_accum_fails_at_loss() {
         let (gs, gd, ri) = grad_accum_buggy_pair(2).unwrap();
-        let err = check_refinement(&gs, &gd, &ri, &InferConfig::default()).unwrap_err();
+        let err = Verifier::new().expect(&gs, &gd, &ri).unwrap_err();
         // §6.2 bug 6: "the accumulated loss cannot cleanly represent the
         // loss in G_s" — inference stops at the MSE (or a gradient op fed by
         // it); the operator name localizes the problem.
@@ -114,7 +115,7 @@ mod tests {
     #[test]
     fn four_microbatches_also_refine() {
         let (gs, gd, ri) = grad_accum_pair(4).unwrap();
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("{e}"));
         verify_numeric(&gs, &gd, &ri, &out.relation, 37).unwrap();
     }

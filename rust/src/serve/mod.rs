@@ -1,0 +1,270 @@
+//! `graphguard serve`: a long-lived verification service.
+//!
+//! Reads newline-delimited JSON requests from any [`BufRead`] (stdin by
+//! default, or one Unix-socket connection at a time), answers each on the
+//! paired [`Write`], and keeps a single [`FingerprintCache`] warm across
+//! requests — the amortization a one-shot CLI run cannot get. Request and
+//! response schema live in [`protocol`]; the versioning policy and the
+//! determinism contract are documented in EXPERIMENTS.md §Serve.
+//!
+//! Failure containment: a malformed line, an unknown workload name, or a
+//! bad inline graph produces a structured `verdict: "error"` response and
+//! the loop moves on. Verification itself runs panic-isolated (or under
+//! escalation when the request asks), so a crashing lemma applier yields
+//! `inconclusive_panic`, not a dead server. Only transport errors (broken
+//! pipe, unreadable socket) end the loop.
+
+pub mod protocol;
+
+use crate::analysis;
+use crate::cache::FingerprintCache;
+use crate::egraph::SaturationLimits;
+use crate::infer::{EscalationPolicy, InferConfig, Verdict};
+use crate::models::{self, Workload};
+use crate::util::json::Json;
+use crate::verifier::Verifier;
+use anyhow::{Context, Result};
+use protocol::{Payload, Request};
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server-side knobs: the base [`InferConfig`] every request starts from,
+/// the cache shared across requests, and whether responses are canonical
+/// (run-varying fields dropped; see [`protocol::verdict_response`]).
+pub struct ServeOptions {
+    pub cfg: InferConfig,
+    pub cache: Option<Arc<FingerprintCache>>,
+    pub canonical: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            cfg: InferConfig::default(),
+            cache: Some(Arc::new(FingerprintCache::new())),
+            canonical: false,
+        }
+    }
+}
+
+/// What the loop did, for the operator summary on stderr (stdout is the
+/// protocol stream and must carry nothing but responses).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub verified: u64,
+    pub refuted: u64,
+    pub inconclusive: u64,
+    pub errors: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Named workloads are rebuilt per distinct `ranks`, then reused for the
+/// rest of the session.
+#[derive(Default)]
+struct WorkloadTable {
+    by_ranks: BTreeMap<usize, Vec<Workload>>,
+}
+
+impl WorkloadTable {
+    fn find(&mut self, name: &str, ranks: usize) -> Result<&Workload, String> {
+        let table = self.by_ranks.entry(ranks).or_insert_with(|| models::table2_workloads(ranks));
+        match table.iter().position(|w| w.name == name) {
+            Some(i) => Ok(&table[i]),
+            None => {
+                let known: Vec<&str> = table.iter().map(|w| w.name.as_str()).collect();
+                Err(format!(
+                    "unknown workload '{name}' at ranks={ranks}; known: {}",
+                    known.join(", ")
+                ))
+            }
+        }
+    }
+}
+
+/// Per-request [`Verifier`]: the server's base config plus this request's
+/// overrides. Default mode is a single panic-isolated attempt with the
+/// shared cache — the same configuration `graphguard verify` runs, so
+/// verdict and locus content are byte-identical to the one-shot CLI.
+fn verifier_for(req: &Request, opts: &ServeOptions) -> Verifier {
+    let mut cfg = opts.cfg.clone();
+    cfg.cache = if req.no_cache { None } else { opts.cache.clone() };
+    if let Some(jobs) = req.jobs {
+        cfg.jobs = jobs.max(1);
+    }
+    if let Some(ms) = req.deadline_ms {
+        cfg.region_deadline = if ms == 0 { None } else { Some(Duration::from_millis(ms)) };
+    }
+    if req.max_iters.is_some() || req.max_nodes.is_some() {
+        cfg.limits = SaturationLimits::new(
+            req.max_iters.unwrap_or(cfg.limits.max_iters),
+            req.max_nodes.unwrap_or(cfg.limits.max_nodes),
+        );
+    }
+    let v = Verifier::with_config(cfg);
+    if req.escalate {
+        v.escalation(EscalationPolicy::default())
+    } else {
+        v.isolated(true)
+    }
+}
+
+fn answer(req: &Request, opts: &ServeOptions, workloads: &mut WorkloadTable) -> Json {
+    let id = req.id.as_deref();
+    let verifier = verifier_for(req, opts);
+    let (gs, gd, ri) = match &req.payload {
+        Payload::Inline { gs, gd, ri } => (gs.as_ref(), gd.as_ref(), ri),
+        Payload::Workload { name, ranks } => match workloads.find(name, *ranks) {
+            Ok(w) => (&w.gs, &w.gd, &w.ri),
+            Err(msg) => return protocol::error_response(id, &msg),
+        },
+    };
+    let started = Instant::now();
+    let (verdict, attempts) = verifier.run_counted(gs, gd, ri);
+    let wall_us = started.elapsed().as_micros() as u64;
+    let lint = analysis::analyze(gd, Some(ri)).findings;
+    protocol::verdict_response(id, &verdict, gs, gd, &lint, attempts, wall_us, opts.canonical)
+}
+
+fn tally(stats: &mut ServeStats, response: &Json) {
+    match response.get("verdict").as_str() {
+        Some("verified") => stats.verified += 1,
+        Some("refuted") => stats.refuted += 1,
+        Some(tag) if tag.starts_with("inconclusive") => stats.inconclusive += 1,
+        _ => stats.errors += 1,
+    }
+}
+
+/// The request loop: one response line per request line, in order, flushed
+/// after every response so pipelined clients never deadlock. Returns when
+/// the reader reaches EOF. Transport failures are the only errors.
+pub fn serve_loop<R: BufRead, W: Write>(
+    reader: R,
+    writer: &mut W,
+    opts: &ServeOptions,
+) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    let mut workloads = WorkloadTable::default();
+    for line in reader.lines() {
+        let line = line.context("reading request stream")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        stats.requests += 1;
+        let response = match protocol::parse_request(&line) {
+            Ok(req) => answer(&req, opts, &mut workloads),
+            Err(bad) => protocol::error_response(bad.id.as_deref(), &bad.error),
+        };
+        tally(&mut stats, &response);
+        writeln!(writer, "{response}").context("writing response stream")?;
+        writer.flush().context("flushing response stream")?;
+    }
+    if let Some(cache) = &opts.cache {
+        let s = cache.stats();
+        stats.cache_hits = s.hits;
+        stats.cache_misses = s.misses;
+    }
+    Ok(stats)
+}
+
+/// Serve over stdin/stdout until EOF.
+pub fn serve_stdio(opts: &ServeOptions) -> Result<ServeStats> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    serve_loop(stdin.lock(), &mut out, opts)
+}
+
+/// Serve over a Unix socket: accept connections sequentially, running the
+/// request loop to EOF on each, sharing one cache across all of them.
+/// A pre-existing socket file at `path` is replaced. Accepts forever —
+/// the operator stops the server with a signal; per-connection stats go
+/// to stderr.
+#[cfg(unix)]
+pub fn serve_unix(path: &std::path::Path, opts: &ServeOptions) -> Result<()> {
+    use std::os::unix::net::UnixListener;
+    if path.exists() {
+        std::fs::remove_file(path)
+            .with_context(|| format!("removing stale socket {}", path.display()))?;
+    }
+    let listener = UnixListener::bind(path)
+        .with_context(|| format!("binding unix socket {}", path.display()))?;
+    for conn in listener.incoming() {
+        let conn = conn.context("accepting connection")?;
+        let reader = std::io::BufReader::new(conn.try_clone().context("cloning socket")?);
+        let mut writer = conn;
+        let stats = serve_loop(reader, &mut writer, opts)?;
+        eprintln!(
+            "serve: connection closed after {} request(s) ({} verified, {} refuted, \
+             {} inconclusive, {} errors)",
+            stats.requests, stats.verified, stats.refuted, stats.inconclusive, stats.errors
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn run(lines: &str, opts: &ServeOptions) -> (Vec<Json>, ServeStats) {
+        let mut out = Vec::new();
+        let stats = serve_loop(Cursor::new(lines.as_bytes()), &mut out, opts).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let responses =
+            text.lines().map(|l| Json::parse(l).expect("response is valid json")).collect();
+        (responses, stats)
+    }
+
+    #[test]
+    fn workload_request_round_trips() {
+        let (rs, stats) = run(
+            "{\"id\":\"w1\",\"workload\":\"gpt_tp_sp_2\",\"ranks\":2}\n",
+            &ServeOptions::default(),
+        );
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("id").as_str(), Some("w1"));
+        assert_eq!(rs[0].get("verdict").as_str(), Some("verified"));
+        assert_eq!(stats.verified, 1);
+    }
+
+    #[test]
+    fn malformed_and_unknown_lines_do_not_stop_the_loop() {
+        let input = "garbage\n\
+                     {\"id\":\"u\",\"workload\":\"no_such_model\"}\n\
+                     {\"id\":\"ok\",\"workload\":\"qwen2_tp_2\"}\n";
+        let (rs, stats) = run(input, &ServeOptions::default());
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0].get("verdict").as_str(), Some("error"));
+        assert_eq!(rs[1].get("verdict").as_str(), Some("error"));
+        assert!(
+            rs[1].get("error").as_str().unwrap_or("").contains("qwen2_tp_2"),
+            "unknown-workload error names the known workloads"
+        );
+        assert_eq!(rs[2].get("verdict").as_str(), Some("verified"));
+        assert_eq!((stats.errors, stats.verified), (2, 1));
+    }
+
+    #[test]
+    fn canonical_mode_drops_run_varying_fields() {
+        let opts = ServeOptions { canonical: true, ..ServeOptions::default() };
+        let (rs, _) = run("{\"workload\":\"gpt_tp_sp_2\"}\n", &opts);
+        assert!(matches!(rs[0].get("wall_us"), Json::Null));
+        assert!(matches!(rs[0].get("cache_hits"), Json::Null));
+        assert!(matches!(rs[0].get("per_region"), Json::Null));
+        assert!(!matches!(rs[0].get("relation"), Json::Null));
+    }
+
+    #[test]
+    fn shared_cache_warms_across_requests() {
+        let opts = ServeOptions::default();
+        let line = "{\"workload\":\"gpt_tp_sp_2\"}\n";
+        let (_, stats) = run(&line.repeat(3), &opts);
+        assert_eq!(stats.requests, 3);
+        assert!(stats.cache_hits > 0, "repeat requests must hit the shared cache");
+    }
+}

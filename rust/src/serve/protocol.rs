@@ -1,0 +1,293 @@
+//! Versioned request/response schema for `graphguard serve`.
+//!
+//! Wire format: newline-delimited JSON — one request object per line in,
+//! one response object per line out (responses are compact single-line
+//! JSON; the hand-rolled serializer never emits raw newlines). Schema
+//! documented in EXPERIMENTS.md §Serve.
+//!
+//! Requests (`schema_version` optional, v0 = current layout):
+//! - named workload: `{"id": "r1", "workload": "gpt_tp_sp_2", "ranks": 2}`
+//! - inline pair:    `{"id": "r2", "gs": {…}, "gd": {…}, "ri": {…}}`
+//! - per-request overrides: `"jobs"`, `"deadline_ms"` (0 disables),
+//!   `"no_cache"`, `"escalate"`, `"max_iters"`, `"max_nodes"`.
+//!
+//! Responses always carry `schema_version`, the echoed `id`, and a
+//! `verdict` tag (`verified` / `refuted` / `inconclusive_*` / `error`);
+//! verdict-specific fields are documented on [`verdict_response`].
+
+// The request stream is an untrusted input path (arbitrary bytes from a
+// client): parse errors must become structured error responses, never
+// panics. Enforced via clippy.toml's disallowed-methods list.
+#![deny(clippy::disallowed_methods)]
+
+use crate::ir::{self, Graph};
+use crate::relation::Relation;
+use crate::util::json::Json;
+use crate::util::schema;
+
+/// What a request asks to verify.
+pub enum Payload {
+    /// A named Table-2 workload (resolved by the serve loop), at `ranks`.
+    Workload { name: String, ranks: usize },
+    /// An inline `(G_s, G_d, R_i)` triple, already parsed and validated.
+    Inline { gs: Box<Graph>, gd: Box<Graph>, ri: Relation },
+}
+
+/// One parsed request line.
+pub struct Request {
+    /// Client-chosen correlation id, echoed verbatim in the response.
+    pub id: Option<String>,
+    pub payload: Payload,
+    /// Per-request overrides of the server's base config.
+    pub jobs: Option<usize>,
+    /// `Some(0)` disables the per-region deadline.
+    pub deadline_ms: Option<u64>,
+    pub no_cache: bool,
+    /// Run under the default escalation policy instead of a single
+    /// isolated attempt.
+    pub escalate: bool,
+    pub max_iters: Option<usize>,
+    pub max_nodes: Option<usize>,
+}
+
+/// A request that could not be parsed: the id when it was recoverable,
+/// plus the message for the structured error response.
+pub struct BadRequest {
+    pub id: Option<String>,
+    pub error: String,
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => v.as_usize().map(Some).ok_or_else(|| format!("field '{key}' must be a number")),
+    }
+}
+
+fn opt_flag(j: &Json, key: &str) -> Result<bool, String> {
+    match j.get(key) {
+        Json::Null => Ok(false),
+        v => v.as_bool().ok_or_else(|| format!("field '{key}' must be a boolean")),
+    }
+}
+
+/// Parse one request line. Every failure carries the id when the line was
+/// at least valid JSON with one, so the client can correlate the error.
+pub fn parse_request(line: &str) -> Result<Request, BadRequest> {
+    let j = Json::parse(line)
+        .map_err(|e| BadRequest { id: None, error: format!("malformed request: {e}") })?;
+    let id = match j.get("id") {
+        Json::Null => None,
+        v => Some(v.as_str().map(str::to_string).unwrap_or_else(|| v.to_string())),
+    };
+    let fail = |error: String| BadRequest { id: id.clone(), error };
+    schema::check(&j, "serve request").map_err(|e| fail(format!("{e:#}")))?;
+
+    let payload = match j.get("workload") {
+        Json::Null => {
+            let (gs_j, gd_j, ri_j) = (j.get("gs"), j.get("gd"), j.get("ri"));
+            if matches!(gs_j, Json::Null)
+                || matches!(gd_j, Json::Null)
+                || matches!(ri_j, Json::Null)
+            {
+                return Err(fail(
+                    "request needs either 'workload' or all of 'gs'/'gd'/'ri'".into(),
+                ));
+            }
+            let gs = ir::json_io::from_json(gs_j)
+                .map_err(|e| fail(format!("bad 'gs' graph: {e:#}")))?;
+            let gd = ir::json_io::from_json(gd_j)
+                .map_err(|e| fail(format!("bad 'gd' graph: {e:#}")))?;
+            let ri = Relation::from_json(ri_j, &gs, &gd)
+                .map_err(|e| fail(format!("bad 'ri' relation: {e:#}")))?;
+            ri.validate_shapes(&gs, &gd)
+                .map_err(|e| fail(format!("bad 'ri' relation: {e:#}")))?;
+            Payload::Inline { gs: Box::new(gs), gd: Box::new(gd), ri }
+        }
+        w => {
+            let name = w
+                .as_str()
+                .ok_or_else(|| fail("field 'workload' must be a string".into()))?
+                .to_string();
+            let ranks = opt_usize(&j, "ranks").map_err(&fail)?.unwrap_or(2);
+            if ranks == 0 {
+                return Err(fail("field 'ranks' must be >= 1".into()));
+            }
+            Payload::Workload { name, ranks }
+        }
+    };
+
+    Ok(Request {
+        id,
+        payload,
+        jobs: opt_usize(&j, "jobs").map_err(&fail)?,
+        deadline_ms: match j.get("deadline_ms") {
+            Json::Null => None,
+            v => Some(
+                v.as_f64()
+                    .filter(|n| *n >= 0.0)
+                    .map(|n| n as u64)
+                    .ok_or_else(|| fail("field 'deadline_ms' must be a number".into()))?,
+            ),
+        },
+        no_cache: opt_flag(&j, "no_cache").map_err(&fail)?,
+        escalate: opt_flag(&j, "escalate").map_err(&fail)?,
+        max_iters: opt_usize(&j, "max_iters").map_err(&fail)?,
+        max_nodes: opt_usize(&j, "max_nodes").map_err(&fail)?,
+    })
+}
+
+fn id_field(id: Option<&str>) -> Json {
+    id.map(Json::str).unwrap_or(Json::Null)
+}
+
+/// Base response object: `schema_version`, echoed `id`, `verdict` tag.
+fn base(id: Option<&str>, verdict: &str) -> Vec<(&'static str, Json)> {
+    vec![
+        ("schema_version", schema::version_field()),
+        ("id", id_field(id)),
+        ("verdict", Json::str(verdict)),
+    ]
+}
+
+/// Structured error response (`verdict: "error"`): malformed JSON, unknown
+/// workload, bad graphs. The loop answers these and keeps serving — a
+/// request error must never exit the process.
+pub fn error_response(id: Option<&str>, error: &str) -> Json {
+    let mut fields = base(id, "error");
+    fields.push(("error", Json::str(error)));
+    Json::obj(fields)
+}
+
+/// Verdict-carrying response. `canonical` drops the fields that vary run
+/// to run (wall time, per-region micros, cache counters) so responses are
+/// byte-stable for golden diffing; verdict/locus content is identical
+/// either way and matches the one-shot CLI's output strings.
+pub fn verdict_response(
+    id: Option<&str>,
+    verdict: &crate::infer::Verdict,
+    gs: &Graph,
+    gd: &Graph,
+    lint: &[crate::analysis::LintFinding],
+    attempts: usize,
+    wall_us: u64,
+    canonical: bool,
+) -> Json {
+    use crate::infer::Verdict;
+    let mut fields = base(id, verdict.tag());
+    fields.push(("attempts", Json::num(attempts as f64)));
+    fields.push(("lint", Json::Arr(lint.iter().map(|f| f.to_json()).collect())));
+    match verdict {
+        Verdict::Verified(out) => {
+            // Exactly the relation JSON `graphguard verify` prints.
+            fields.push(("relation", out.relation.to_json(gs, gd)));
+            fields.push(("mappings", Json::num(out.relation.len() as f64)));
+            if !canonical {
+                fields.push(("cache_hits", Json::num(out.cache_hits as f64)));
+                fields.push(("cache_misses", Json::num(out.cache_misses as f64)));
+                fields.push((
+                    "per_region",
+                    Json::Arr(
+                        out.per_node
+                            .iter()
+                            .map(|t| {
+                                Json::obj(vec![
+                                    ("node", Json::str(t.node_name.clone())),
+                                    ("micros", Json::num(t.micros as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+        }
+        // The same Display strings the one-shot CLI prints — byte-identical
+        // verdict/locus content between serve and `graphguard verify`.
+        Verdict::Refuted(e) => {
+            fields.push(("error", Json::str(format!("{e}"))));
+            fields.push(("locus", Json::str(e.node_name.clone())));
+            fields.push(("op", Json::str(e.op.clone())));
+        }
+        Verdict::Inconclusive(i) => {
+            fields.push(("error", Json::str(format!("{i}"))));
+            fields.push(("reason", Json::str(i.reason.tag())));
+            fields.push(("region", Json::str(i.region.clone())));
+        }
+    }
+    if !canonical {
+        fields.push(("wall_us", Json::num(wall_us as f64)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic on failure by design
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_request_parses_with_defaults() {
+        let r = parse_request(r#"{"id":"a","workload":"gpt_tp_sp_2"}"#).unwrap();
+        assert_eq!(r.id.as_deref(), Some("a"));
+        let Payload::Workload { name, ranks } = r.payload else { panic!("workload") };
+        assert_eq!((name.as_str(), ranks), ("gpt_tp_sp_2", 2));
+        assert!(!r.no_cache && !r.escalate);
+        assert!(r.jobs.is_none() && r.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let r = parse_request(
+            r#"{"workload":"x","ranks":4,"jobs":3,"deadline_ms":0,"no_cache":true,
+                "escalate":true,"max_iters":5,"max_nodes":1000}"#,
+        )
+        .unwrap();
+        assert_eq!(r.jobs, Some(3));
+        assert_eq!(r.deadline_ms, Some(0));
+        assert!(r.no_cache && r.escalate);
+        assert_eq!((r.max_iters, r.max_nodes), (Some(5), Some(1000)));
+    }
+
+    #[test]
+    fn malformed_json_reports_without_id() {
+        let e = parse_request("not json").unwrap_err();
+        assert!(e.id.is_none());
+        assert!(e.error.contains("malformed"), "{}", e.error);
+    }
+
+    #[test]
+    fn bad_field_recovers_the_id() {
+        let e = parse_request(r#"{"id":"r9","workload":"w","jobs":"three"}"#).unwrap_err();
+        assert_eq!(e.id.as_deref(), Some("r9"));
+        assert!(e.error.contains("jobs"), "{}", e.error);
+    }
+
+    #[test]
+    fn missing_payload_is_an_error() {
+        let e = parse_request(r#"{"id":"x"}"#).unwrap_err();
+        assert!(e.error.contains("workload"), "{}", e.error);
+    }
+
+    #[test]
+    fn version_mismatch_names_both_versions() {
+        let e = parse_request(r#"{"id":"v","workload":"w","schema_version":42}"#).unwrap_err();
+        assert!(e.error.contains("42"), "{}", e.error);
+        assert!(
+            e.error.contains(&schema::SCHEMA_VERSION.to_string()),
+            "{}",
+            e.error
+        );
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let r = error_response(Some("q"), "boom");
+        assert_eq!(r.get("verdict").as_str(), Some("error"));
+        assert_eq!(r.get("id").as_str(), Some("q"));
+        assert_eq!(r.get("error").as_str(), Some("boom"));
+        assert_eq!(
+            r.get("schema_version").as_usize(),
+            Some(schema::SCHEMA_VERSION as usize)
+        );
+    }
+}

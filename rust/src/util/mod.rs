@@ -6,3 +6,4 @@ pub mod json;
 pub mod ndarray;
 pub mod proptest;
 pub mod rng;
+pub mod schema;

@@ -1,0 +1,85 @@
+//! Versioning for every JSON artifact the crate reads or writes.
+//!
+//! One shared `schema_version` field stamps FUZZ_REPORT.json, counterexample
+//! / fixture JSON, the fuzz-campaign journal header, `BENCH_*.json`, and the
+//! serve protocol (requests and responses). Readers of untrusted artifacts
+//! call [`check`] first: a file carrying a *different* explicit version is
+//! rejected with an error naming both versions, while a version-less file is
+//! read as v0 for back-compat (everything written before the field existed).
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Current artifact schema version. Bump on any incompatible change to the
+/// JSON shapes listed in the module docs.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The version an artifact declares: `None` for version-less (v0) files.
+/// A non-numeric `schema_version` field reads as a declared-but-bogus
+/// version and is reported by [`check`].
+pub fn declared_version(j: &Json) -> Option<&Json> {
+    match j.get("schema_version") {
+        Json::Null => None,
+        v => Some(v),
+    }
+}
+
+/// Accept v0 (version-less) and the current version; reject anything else
+/// with an error naming both the file's version and the supported one.
+/// `what` names the artifact for the error message ("counterexample",
+/// "fuzz journal", "serve request", …).
+pub fn check(j: &Json, what: &str) -> Result<()> {
+    match declared_version(j) {
+        None => Ok(()), // v0 back-compat: files written before versioning
+        Some(v) => match v.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n as u64 == SCHEMA_VERSION => Ok(()),
+            Some(n) => bail!(
+                "{what}: schema_version {n} does not match this build's \
+                 schema_version {SCHEMA_VERSION} (version-less files read as v0)"
+            ),
+            None => bail!(
+                "{what}: schema_version must be a number, got {} \
+                 (this build supports schema_version {SCHEMA_VERSION})",
+                v.to_string()
+            ),
+        },
+    }
+}
+
+/// The stamp writers attach: `("schema_version", version_field())`.
+pub fn version_field() -> Json {
+    Json::num(SCHEMA_VERSION as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versionless_reads_as_v0() {
+        let j = Json::parse(r#"{"kind":"x"}"#).unwrap();
+        assert!(check(&j, "fixture").is_ok());
+        assert!(declared_version(&j).is_none());
+    }
+
+    #[test]
+    fn current_version_accepted() {
+        let j = Json::obj(vec![("schema_version", version_field())]);
+        assert!(check(&j, "fixture").is_ok());
+    }
+
+    #[test]
+    fn mismatch_names_both_versions() {
+        let j = Json::obj(vec![("schema_version", Json::num(99.0))]);
+        let msg = format!("{:#}", check(&j, "counterexample").unwrap_err());
+        assert!(msg.contains("99"), "{msg}");
+        assert!(msg.contains(&SCHEMA_VERSION.to_string()), "{msg}");
+        assert!(msg.contains("counterexample"), "{msg}");
+    }
+
+    #[test]
+    fn non_numeric_version_rejected() {
+        let j = Json::obj(vec![("schema_version", Json::str("one"))]);
+        assert!(check(&j, "request").is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! The unified verification entry point.
+//!
+//! Every consumer of the inference engine — the CLI one-shot commands, the
+//! long-lived [`crate::serve`] loop, the [`crate::coordinator`] batch
+//! service, and the fuzz oracle — builds a [`Verifier`] and calls
+//! [`Verifier::run`]. The builder replaces the four historical free
+//! functions, which survive only as `#[deprecated]` shims in
+//! [`crate::infer`]:
+//!
+//! | deprecated free function      | builder form                                       |
+//! |-------------------------------|----------------------------------------------------|
+//! | `check_refinement(…, cfg)`    | `Verifier::with_config(cfg).expect(gs, gd, ri)`    |
+//! | `check_refinement_verdict`    | `Verifier::with_config(cfg).run(gs, gd, ri)`       |
+//! | `check_refinement_isolated`   | `…with_config(cfg).isolated(true).run(…)`          |
+//! | `check_refinement_escalating` | `…with_config(cfg).escalation(p).run_counted(…)`   |
+//!
+//! Semantics are layered, not orthogonal: an [`EscalationPolicy`] implies
+//! panic isolation (every attempt runs `catch_unwind`-wrapped), and
+//! `isolated(true)` without a policy is a single panic-isolated attempt at
+//! the configured limits. `run` with neither knob is the bare three-valued
+//! walk of Listing 1 — panics propagate, exactly as the old
+//! `check_refinement_verdict` behaved.
+
+use crate::cache::FingerprintCache;
+use crate::egraph::SaturationLimits;
+use crate::infer::{
+    self, EscalationPolicy, InferConfig, InferOutput, RefinementError, Verdict,
+};
+use crate::ir::Graph;
+use crate::relation::Relation;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Builder-style verification front end. Construct, set knobs, then call
+/// [`run`](Verifier::run) / [`run_counted`](Verifier::run_counted) /
+/// [`expect`](Verifier::expect) any number of times — the builder borrows
+/// nothing and can be reused across requests (the serve loop keeps one per
+/// connection).
+#[derive(Debug, Clone, Default)]
+pub struct Verifier {
+    cfg: InferConfig,
+    isolated: bool,
+    escalation: Option<EscalationPolicy>,
+}
+
+impl Verifier {
+    /// Default config, no isolation, no escalation.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from an existing [`InferConfig`] (limits, deadline, jobs,
+    /// cache, quarantined channels).
+    pub fn with_config(cfg: InferConfig) -> Self {
+        Verifier { cfg, ..Self::default() }
+    }
+
+    /// The effective inference config.
+    pub fn config(&self) -> &InferConfig {
+        &self.cfg
+    }
+
+    /// Mutable access for knobs without a dedicated setter.
+    pub fn config_mut(&mut self) -> &mut InferConfig {
+        &mut self.cfg
+    }
+
+    /// Saturation budgets (`max_iters` / `max_nodes`).
+    pub fn limits(mut self, limits: SaturationLimits) -> Self {
+        self.cfg.limits = limits;
+        self
+    }
+
+    /// Per-region wall-clock budget; `None` disables the deadline.
+    pub fn deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.cfg.region_deadline = deadline;
+        self
+    }
+
+    /// Worker threads for the region walk (min 1). Verdicts are identical
+    /// for every value — see the determinism contract in EXPERIMENTS.md.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.cfg.jobs = jobs.max(1);
+        self
+    }
+
+    /// Certificate fingerprint cache shared across regions/requests;
+    /// `None` disables memoization. Never changes verdicts, only wall time.
+    pub fn cache(mut self, cache: Option<Arc<FingerprintCache>>) -> Self {
+        self.cfg.cache = cache;
+        self
+    }
+
+    /// Pipeline channels quarantined by the schedule liveness audit.
+    pub fn quarantined_channels(mut self, channels: Vec<usize>) -> Self {
+        self.cfg.quarantined_channels = channels;
+        self
+    }
+
+    /// Catch panics from lemma appliers and report them as
+    /// `Inconclusive(Panic)` instead of unwinding into the caller.
+    pub fn isolated(mut self, isolated: bool) -> Self {
+        self.isolated = isolated;
+        self
+    }
+
+    /// Iterative-deepening retry policy. Implies isolation: every attempt
+    /// is panic-caught, and `Timeout`/`Panic` outcomes stay terminal.
+    pub fn escalation(mut self, policy: EscalationPolicy) -> Self {
+        self.escalation = Some(policy);
+        self
+    }
+
+    /// Run inference, returning the three-valued [`Verdict`].
+    pub fn run(&self, gs: &Graph, gd: &Graph, ri: &Relation) -> Verdict {
+        self.run_counted(gs, gd, ri).0
+    }
+
+    /// Like [`run`](Verifier::run), also reporting the number of
+    /// escalation attempts spent (always 1 without a policy).
+    pub fn run_counted(&self, gs: &Graph, gd: &Graph, ri: &Relation) -> (Verdict, usize) {
+        match &self.escalation {
+            Some(policy) => infer::escalating_core(gs, gd, ri, &self.cfg, policy),
+            None if self.isolated => (infer::isolated_core(gs, gd, ri, &self.cfg), 1),
+            None => (infer::verdict_core(gs, gd, ri, &self.cfg), 1),
+        }
+    }
+
+    /// Two-valued convenience for callers running at budgets where
+    /// exhaustion cannot occur (most tests and benches).
+    ///
+    /// Panics on `Inconclusive`: silently mapping a resource verdict onto
+    /// either `Ok` (false proof) or `Err` (false alarm) would be exactly
+    /// the misreporting the three-valued layer exists to prevent.
+    pub fn expect(
+        &self,
+        gs: &Graph,
+        gd: &Graph,
+        ri: &Relation,
+    ) -> Result<InferOutput, RefinementError> {
+        match self.run(gs, gd, ri) {
+            Verdict::Verified(out) => Ok(*out),
+            Verdict::Refuted(e) => Err(*e),
+            Verdict::Inconclusive(i) => panic!(
+                "Verifier::expect: {i}\n(two-valued API cannot express Inconclusive — \
+                 switch this caller to Verifier::run)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::gpt::{self, GptConfig};
+
+    #[test]
+    fn builder_modes_agree_on_a_clean_pair() {
+        let (gs, gd, ri) = gpt::tp_sp_pair(2, 1, &GptConfig::default()).unwrap();
+        let plain = Verifier::new().run(&gs, &gd, &ri);
+        let isolated = Verifier::new().isolated(true).run(&gs, &gd, &ri);
+        let (escalated, attempts) = Verifier::new()
+            .escalation(EscalationPolicy::default())
+            .run_counted(&gs, &gd, &ri);
+        assert!(plain.is_verified() && isolated.is_verified() && escalated.is_verified());
+        assert!(attempts >= 1);
+    }
+
+    #[test]
+    fn knobs_land_in_the_config() {
+        let v = Verifier::new()
+            .jobs(0) // clamped to 1
+            .deadline(None)
+            .limits(SaturationLimits::new(3, 500))
+            .quarantined_channels(vec![7]);
+        assert_eq!(v.config().jobs, 1);
+        assert!(v.config().region_deadline.is_none());
+        assert_eq!(v.config().limits.max_iters, 3);
+        assert_eq!(v.config().quarantined_channels, vec![7]);
+        assert!(v.config().cache.is_none());
+    }
+
+    #[test]
+    fn cache_knob_threads_through_to_counters() {
+        let cache = Arc::new(FingerprintCache::new());
+        let (gs, gd, ri) = gpt::tp_sp_pair(2, 2, &GptConfig::default()).unwrap();
+        let v = Verifier::new().cache(Some(Arc::clone(&cache)));
+        let Verdict::Verified(out) = v.run(&gs, &gd, &ri) else {
+            panic!("clean pair must verify")
+        };
+        assert!(out.cache_hits + out.cache_misses > 0, "cache was consulted");
+        assert!(!cache.is_empty(), "regions were memoized");
+    }
+}

@@ -8,7 +8,8 @@
 //! or the localization moving — fails loudly with the case name.
 
 use graphguard::bugs::{self, BugCase};
-use graphguard::infer::{check_refinement, verify_numeric, InferConfig};
+use graphguard::infer::verify_numeric;
+use graphguard::Verifier;
 
 /// (bug id, case name, expected localization substring for the buggy
 /// variant; None = refinement passes and the bug is found by relation
@@ -72,10 +73,10 @@ fn each_buggy_variant_rejected_with_golden_locus() {
 /// machinery is invisible on workloads the defaults comfortably cover.
 #[test]
 fn golden_mutants_still_refuted_under_three_valued_api() {
-    use graphguard::infer::{check_refinement_isolated, Verdict};
+    use graphguard::infer::Verdict;
     for (id, name, locus) in GOLDEN {
         let case = case_by_name(bugs::all_cases(true), name);
-        let v = check_refinement_isolated(&case.gs, &case.gd, &case.ri, &InferConfig::default());
+        let v = Verifier::new().isolated(true).run(&case.gs, &case.gd, &case.ri);
         match locus {
             Some(substr) => match v {
                 Verdict::Refuted(e) => assert!(
@@ -97,7 +98,7 @@ fn golden_mutants_still_refuted_under_three_valued_api() {
 fn each_fixed_variant_verifies_with_certificate() {
     for (id, name, _locus) in GOLDEN {
         let case = case_by_name(bugs::all_cases(false), name);
-        let out = check_refinement(&case.gs, &case.gd, &case.ri, &InferConfig::default())
+        let out = Verifier::new().expect(&case.gs, &case.gd, &case.ri)
             .unwrap_or_else(|e| panic!("fixed bug {id} ({name}) failed refinement: {e}"));
         if id != 5 {
             // bug 5's user-assumed replication of partial gradients is not
@@ -115,7 +116,7 @@ fn each_fixed_variant_verifies_with_certificate() {
 #[test]
 fn moe_clean_ep_pair_verifies_with_certificate() {
     let (gs, gd, ri) = graphguard::models::gpt::moe_ep_pair(2, 1).unwrap();
-    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+    let out = Verifier::new().expect(&gs, &gd, &ri)
         .unwrap_or_else(|e| panic!("clean top-k EP pair must verify: {e}"));
     verify_numeric(&gs, &gd, &ri, &out.relation, 4999)
         .unwrap_or_else(|e| panic!("EP certificate must replay: {e:#}"));
@@ -139,7 +140,7 @@ fn each_routing_mutant_rejected_with_in_region_locus() {
         blocks: vec![Block::Linear, Block::Moe(UnaryKind::Silu)],
     };
     let (gs, gd, ri) = build_pair(&spec).unwrap();
-    check_refinement(&gs, &gd, &ri, &InferConfig::default())
+    Verifier::new().expect(&gs, &gd, &ri)
         .unwrap_or_else(|e| panic!("clean moe pair must refine: {e}"));
     let cases = [
         (MutKind::WrongExpertDispatch, "b1_disp0"),
@@ -150,7 +151,7 @@ fn each_routing_mutant_rejected_with_in_region_locus() {
     for (kind, node) in cases {
         let (gd_mut, m) = apply_mutation_by_name(&gd, kind, node)
             .unwrap_or_else(|e| panic!("{kind:?}@{node}: {e:#}"));
-        let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+        let err = Verifier::new().expect(&gs, &gd_mut, &ri)
             .err()
             .unwrap_or_else(|| panic!("{kind:?}@{node} must be rejected"));
         let block = parse_block(&err.node_name)

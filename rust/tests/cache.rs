@@ -9,10 +9,11 @@ use graphguard::cache::FingerprintCache;
 use graphguard::coordinator::{canonical_report, Coordinator};
 use graphguard::egraph::SaturationLimits;
 use graphguard::infer::{
-    check_refinement_escalating, check_refinement_isolated, verify_numeric, EscalationPolicy,
-    InconclusiveReason, InferConfig, Verdict,
+    verify_numeric, EscalationPolicy, InconclusiveReason, InferConfig, Verdict,
 };
 use graphguard::ir::Graph;
+use graphguard::relation::Relation;
+use graphguard::Verifier;
 use graphguard::models::gpt::{self, GptConfig};
 use graphguard::models::{regression, table2_workloads};
 use std::sync::Arc;
@@ -52,6 +53,24 @@ fn render(v: &Verdict, gs: &Graph, gd: &Graph) -> String {
     }
 }
 
+/// The retired free-function shapes, routed through the [`Verifier`]
+/// builder (migration table in EXPERIMENTS.md §Serve) — these tests
+/// exercise every (cfg, policy) combination, so the thin adapters keep
+/// each call site readable.
+fn isolated(gs: &Graph, gd: &Graph, ri: &Relation, cfg: &InferConfig) -> Verdict {
+    Verifier::with_config(cfg.clone()).isolated(true).run(gs, gd, ri)
+}
+
+fn escalating(
+    gs: &Graph,
+    gd: &Graph,
+    ri: &Relation,
+    cfg: &InferConfig,
+    policy: &EscalationPolicy,
+) -> (Verdict, usize) {
+    Verifier::with_config(cfg.clone()).escalation(policy.clone()).run_counted(gs, gd, ri)
+}
+
 fn cached_cfg(cache: &Arc<FingerprintCache>) -> InferConfig {
     InferConfig { cache: Some(Arc::clone(cache)), ..InferConfig::default() }
 }
@@ -61,7 +80,7 @@ fn cache_is_off_by_default_and_counters_stay_zero() {
     let cfg = InferConfig::default();
     assert!(cfg.cache.is_none(), "library default must be uncached");
     let (gs, gd, ri) = gpt::tp_pair(2, 1);
-    match check_refinement_isolated(&gs, &gd, &ri, &cfg) {
+    match isolated(&gs, &gd, &ri, &cfg) {
         Verdict::Verified(o) => {
             assert_eq!((o.cache_hits, o.cache_misses), (0, 0));
         }
@@ -78,9 +97,9 @@ fn cold_and_warm_table2_outcomes_are_byte_identical() {
     let nocache = InferConfig::default();
     let policy = EscalationPolicy::default();
     for w in table2_workloads(2) {
-        let base = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &nocache, &policy).0;
-        let cold = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy).0;
-        let warm = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy).0;
+        let base = escalating(&w.gs, &w.gd, &w.ri, &nocache, &policy).0;
+        let cold = escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy).0;
+        let warm = escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy).0;
         let b = render(&base, &w.gs, &w.gd);
         let c = render(&cold, &w.gs, &w.gd);
         let h = render(&warm, &w.gs, &w.gd);
@@ -103,7 +122,7 @@ fn l8_gpt_meets_the_hit_rate_floor() {
     let cfg = cached_cfg(&cache);
     let policy = EscalationPolicy::default();
 
-    let (cold, _) = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy);
+    let (cold, _) = escalating(&gs, &gd, &ri, &cfg, &policy);
     let Verdict::Verified(cold) = cold else { panic!("cold run must verify") };
     let bound = gpt::seq(1, &model_cfg).num_nodes() as u64 + 5;
     assert!(
@@ -113,7 +132,7 @@ fn l8_gpt_meets_the_hit_rate_floor() {
     );
     assert!(cold.cache_hits > 0, "cold run must replay repeated layers");
 
-    let (warm, _) = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy);
+    let (warm, _) = escalating(&gs, &gd, &ri, &cfg, &policy);
     let Verdict::Verified(warm) = warm else { panic!("warm run must verify") };
     let rate =
         warm.cache_hits as f64 / (warm.cache_hits + warm.cache_misses).max(1) as f64;
@@ -140,7 +159,7 @@ fn inconclusive_regions_are_never_cached() {
         cache: Some(Arc::clone(&cache)),
         ..InferConfig::default()
     };
-    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &starved) {
+    match isolated(&w.gs, &w.gd, &w.ri, &starved) {
         Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Timeout),
         v => panic!("zero deadline must starve the walk, got {}", v.tag()),
     }
@@ -149,7 +168,7 @@ fn inconclusive_regions_are_never_cached() {
 
     // The same cache object then serves a real run: a fresh verification
     // (misses, not stale replays) that still reaches Verified.
-    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &cached_cfg(&cache)) {
+    match isolated(&w.gs, &w.gd, &w.ri, &cached_cfg(&cache)) {
         Verdict::Verified(o) => {
             assert!(o.cache_misses > 0, "nothing stale may have been replayed")
         }
@@ -166,8 +185,8 @@ fn inconclusive_regions_are_never_cached() {
         cache: Some(Arc::clone(&cache)),
         ..InferConfig::default()
     };
-    let a = check_refinement_isolated(&w.gs, &w.gd, &w.ri, &tiny);
-    let b = check_refinement_isolated(&w.gs, &w.gd, &w.ri, &tiny);
+    let a = isolated(&w.gs, &w.gd, &w.ri, &tiny);
+    let b = isolated(&w.gs, &w.gd, &w.ri, &tiny);
     match &a {
         Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::NodeBudget),
         v => panic!("a 10-node budget must starve, got {}", v.tag()),
@@ -184,9 +203,9 @@ fn refutations_are_cache_invariant() {
     let cache = Arc::new(FingerprintCache::new());
     let cfg = cached_cfg(&cache);
     let policy = EscalationPolicy::default();
-    let plain = check_refinement_escalating(&gs, &gd, &ri, &InferConfig::default(), &policy).0;
-    let cold = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy).0;
-    let warm = check_refinement_escalating(&gs, &gd, &ri, &cfg, &policy).0;
+    let plain = escalating(&gs, &gd, &ri, &InferConfig::default(), &policy).0;
+    let cold = escalating(&gs, &gd, &ri, &cfg, &policy).0;
+    let warm = escalating(&gs, &gd, &ri, &cfg, &policy).0;
     assert!(matches!(plain, Verdict::Refuted(_)), "pair is buggy by construction");
     let p = render(&plain, &gs, &gd);
     assert_eq!(p, render(&cold, &gs, &gd), "cache must not change a refutation");
@@ -202,8 +221,8 @@ fn jobs_4_is_byte_identical_to_jobs_1_across_table2() {
     for w in table2_workloads(2) {
         let seq_cfg = InferConfig::default();
         let par_cfg = InferConfig { jobs: 4, ..InferConfig::default() };
-        let seq = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &seq_cfg, &policy).0;
-        let par = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &par_cfg, &policy).0;
+        let seq = escalating(&w.gs, &w.gd, &w.ri, &seq_cfg, &policy).0;
+        let par = escalating(&w.gs, &w.gd, &w.ri, &par_cfg, &policy).0;
         assert_eq!(
             render(&seq, &w.gs, &w.gd),
             render(&par, &w.gs, &w.gd),
@@ -214,7 +233,7 @@ fn jobs_4_is_byte_identical_to_jobs_1_across_table2() {
         let cache = Arc::new(FingerprintCache::new());
         let par_cached =
             InferConfig { jobs: 4, cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
-        let pc = check_refinement_escalating(&w.gs, &w.gd, &w.ri, &par_cached, &policy).0;
+        let pc = escalating(&w.gs, &w.gd, &w.ri, &par_cached, &policy).0;
         assert_eq!(
             render(&seq, &w.gs, &w.gd),
             render(&pc, &w.gs, &w.gd),
@@ -249,9 +268,8 @@ fn canonical_suite_report_is_invariant_across_threads_and_jobs() {
 fn refutation_locus_is_jobs_invariant() {
     let (gs, gd, ri) = regression::grad_accum_buggy_pair(2).unwrap();
     let policy = EscalationPolicy::default();
-    let seq =
-        check_refinement_escalating(&gs, &gd, &ri, &InferConfig::default(), &policy).0;
-    let par = check_refinement_escalating(
+    let seq = escalating(&gs, &gd, &ri, &InferConfig::default(), &policy).0;
+    let par = escalating(
         &gs,
         &gd,
         &ri,
@@ -278,7 +296,7 @@ fn node_budget_verdict_is_jobs_invariant() {
             jobs,
             ..InferConfig::default()
         };
-        check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &EscalationPolicy::single_shot())
+        escalating(&w.gs, &w.gd, &w.ri, &cfg, &EscalationPolicy::single_shot())
             .0
     };
     let seq = starve(1);

@@ -11,10 +11,9 @@ use graphguard::cache::FingerprintCache;
 use graphguard::chaos::{arm, disarm_all, fired, FaultAction};
 use graphguard::coordinator::{Coordinator, JobVerdict};
 use graphguard::fuzz::{self, Flavor, FuzzConfig};
-use graphguard::infer::{
-    check_refinement_isolated, EscalationPolicy, InconclusiveReason, InferConfig, Verdict,
-};
+use graphguard::infer::{EscalationPolicy, InconclusiveReason, InferConfig, Verdict};
 use graphguard::models;
+use graphguard::Verifier;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -108,7 +107,7 @@ fn injected_panic_never_poisons_the_cache() {
     let cfg = InferConfig { cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
 
     arm("recv_of_send_identity", 1, FaultAction::Panic);
-    let v = check_refinement_isolated(&gs, &gd, &ri, &cfg);
+    let v = Verifier::with_config(cfg.clone()).isolated(true).run(&gs, &gd, &ri);
     disarm_all();
     assert!(fired("recv_of_send_identity"), "panic fault never fired");
     match v {
@@ -121,14 +120,14 @@ fn injected_panic_never_poisons_the_cache() {
 
     // Disarmed, the same cache object serves a fresh verification (misses,
     // not stale replays of anything the poisoned run touched)...
-    match check_refinement_isolated(&gs, &gd, &ri, &cfg) {
+    match Verifier::with_config(cfg.clone()).isolated(true).run(&gs, &gd, &ri) {
         Verdict::Verified(o) => {
             assert!(o.cache_misses > 0, "disarmed run must verify from scratch")
         }
         v => panic!("disarmed run must verify, got {}", v.tag()),
     }
     // ...and a warm rerun replays it.
-    match check_refinement_isolated(&gs, &gd, &ri, &cfg) {
+    match Verifier::with_config(cfg.clone()).isolated(true).run(&gs, &gd, &ri) {
         Verdict::Verified(o) => assert!(o.cache_hits > 0, "warm rerun must hit"),
         v => panic!("warm rerun must verify, got {}", v.tag()),
     }

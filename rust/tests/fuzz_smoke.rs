@@ -8,7 +8,7 @@ use graphguard::fuzz::{
     self, applicable_sites, apply_mutation_by_name, build_pair, run_fuzz, sample_spec, Block,
     Flavor, FuzzConfig, ModelSpec, MutKind, NormKind, UnaryKind,
 };
-use graphguard::infer::{check_refinement, InferConfig};
+use graphguard::Verifier;
 use graphguard::util::rng::Rng;
 
 fn smoke_cfg(seeds: u64, base_seed: u64) -> FuzzConfig {
@@ -156,11 +156,11 @@ fn known_mutants_killed_across_flavors() {
     for (flavor, blocks, kind, node, min_block) in cases {
         let spec = ModelSpec { seed: 5, ranks: 2, seq: 4, hidden: 4, flavor, blocks };
         let (gs, gd, ri) = build_pair(&spec).unwrap();
-        check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("clean {flavor:?} pair must refine: {e}"));
         let (gd_mut, _m) = apply_mutation_by_name(&gd, kind, node)
             .unwrap_or_else(|e| panic!("{flavor:?}: {e:#}"));
-        let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+        let err = Verifier::new().expect(&gs, &gd_mut, &ri)
             .err()
             .unwrap_or_else(|| panic!("{flavor:?} mutant {kind:?}@{node} must be rejected"));
         let block = fuzz::parse_block(&err.node_name)
@@ -212,11 +212,11 @@ fn buffer_hazard_mutants_killed_with_in_stage_loci() {
     for (flavor, blocks, kind, node, min_block) in cases {
         let spec = ModelSpec { seed: 6, ranks: 2, seq: 8, hidden: 4, flavor, blocks };
         let (gs, gd, ri) = build_pair(&spec).unwrap_or_else(|e| panic!("{flavor:?}: {e:#}"));
-        check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        Verifier::new().expect(&gs, &gd, &ri)
             .unwrap_or_else(|e| panic!("clean {flavor:?} pair must refine: {e}"));
         let (gd_mut, _m) = apply_mutation_by_name(&gd, kind, node)
             .unwrap_or_else(|e| panic!("{flavor:?}: {e:#}"));
-        let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+        let err = Verifier::new().expect(&gs, &gd_mut, &ri)
             .err()
             .unwrap_or_else(|| panic!("{flavor:?} mutant {kind:?}@{node} must be rejected"));
         let block = fuzz::parse_block(&err.node_name)
@@ -242,10 +242,10 @@ fn rope_slice_shift_reproduces_bug1() {
         blocks: vec![Block::Rope, Block::Unary(UnaryKind::Relu)],
     };
     let (gs, gd, ri) = build_pair(&spec).unwrap();
-    check_refinement(&gs, &gd, &ri, &InferConfig::default())
+    Verifier::new().expect(&gs, &gd, &ri)
         .unwrap_or_else(|e| panic!("clean rope pair must refine: {e}"));
     let (gd_mut, _) = apply_mutation_by_name(&gd, MutKind::SliceShift, "b0_cos_r1").unwrap();
-    let err = check_refinement(&gs, &gd_mut, &ri, &InferConfig::default())
+    let err = Verifier::new().expect(&gs, &gd_mut, &ri)
         .err()
         .expect("shifted rope table offset must be rejected");
     assert!(

@@ -2,7 +2,8 @@
 //! HLO frontend on real JAX artifacts (when built), and soundness
 //! properties over randomized workloads.
 
-use graphguard::infer::{check_refinement, verify_numeric, InferConfig};
+use graphguard::infer::{verify_numeric, InferConfig};
+use graphguard::Verifier;
 use graphguard::ir::{json_io, Graph, Op};
 use graphguard::models;
 use graphguard::relation::Relation;
@@ -16,7 +17,7 @@ use graphguard::util::proptest::Prop;
 fn suite_refines_across_degrees_with_certificates() {
     for ranks in [2usize, 4] {
         for w in models::table2_workloads(ranks) {
-            let out = check_refinement(&w.gs, &w.gd, &w.ri, &InferConfig::default())
+            let out = Verifier::new().expect(&w.gs, &w.gd, &w.ri)
                 .unwrap_or_else(|e| panic!("{} @ {ranks}: {e}", w.name));
             verify_numeric(&w.gs, &w.gd, &w.ri, &out.relation, ranks as u64 * 131)
                 .unwrap_or_else(|e| panic!("{} @ {ranks} numeric: {e:#}", w.name));
@@ -31,7 +32,7 @@ fn json_roundtrip_preserves_verification() {
     let gs2 = json_io::from_json(&json_io::to_json(&gs)).unwrap();
     let gd2 = json_io::from_json(&json_io::to_json(&gd)).unwrap();
     let ri2 = Relation::from_json(&ri.to_json(&gs, &gd), &gs2, &gd2).unwrap();
-    let out = check_refinement(&gs2, &gd2, &ri2, &InferConfig::default())
+    let out = Verifier::new().expect(&gs2, &gd2, &ri2)
         .unwrap_or_else(|e| panic!("{e}"));
     assert!(out.relation.is_complete_for(&gs2.outputs));
 }
@@ -76,7 +77,7 @@ fn property_random_elementwise_pipelines() {
             &gd,
         )
         .map_err(|e| format!("{e}"))?;
-        let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+        let out = Verifier::new().expect(&gs, &gd, &ri)
             .map_err(|e| format!("depth {depth}: {e}"))?;
         verify_numeric(&gs, &gd, &ri, &out.relation, rng.next_u64()).map_err(|e| format!("{e:#}"))?;
         Ok(())
@@ -117,7 +118,7 @@ fn property_corrupted_matmul_detected() {
             &gd,
         )
         .map_err(|e| format!("{e}"))?;
-        match check_refinement(&gs, &gd, &ri, &InferConfig::default()) {
+        match Verifier::new().expect(&gs, &gd, &ri) {
             Err(_) => Ok(()),
             Ok(_) => Err("corrupted pairing verified as refinement!".into()),
         }
@@ -209,7 +210,7 @@ fn captured_graphs_refine_from_json() {
     let gs = json_io::from_json(&gs_j).unwrap();
     let gd = json_io::from_json(&gd_j).unwrap();
     let ri = Relation::from_json(&ri_j, &gs, &gd).unwrap();
-    let out = check_refinement(&gs, &gd, &ri, &InferConfig::default())
+    let out = Verifier::new().expect(&gs, &gd, &ri)
         .unwrap_or_else(|e| panic!("{e}"));
     assert!(out.relation.is_complete_for(&gs.outputs));
     if check_numeric {

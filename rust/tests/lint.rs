@@ -14,12 +14,12 @@
 //! 3. **Separation** — the lint rides along with verification as
 //!    diagnostics only: the verdict and the canonical report are computed
 //!    exactly as without it (see `coordinator` unit tests for the
-//!    canonical-report exclusion; here we pin that `check_refinement`'s
+//!    canonical-report exclusion; here we pin that the `Verifier`'s
 //!    verdict tag is unchanged on a clean pair and a mutant).
 
 use graphguard::analysis;
 use graphguard::fuzz::{self, build_pair, ModelSpec};
-use graphguard::infer::{check_refinement_verdict, InferConfig};
+use graphguard::Verifier;
 use graphguard::models;
 use graphguard::util::json::Json;
 
@@ -108,7 +108,7 @@ fn lint_rides_along_without_moving_the_verdict() {
     let j = Json::parse(include_str!("fixtures/pp_clean_verifies.json")).unwrap();
     let spec = ModelSpec::from_json(j.get("spec")).unwrap();
     let (gs, gd, ri) = build_pair(&spec).unwrap();
-    match check_refinement_verdict(&gs, &gd, &ri, &InferConfig::default()) {
+    match Verifier::new().run(&gs, &gd, &ri) {
         graphguard::infer::Verdict::Verified(out) => {
             assert!(out.lint.is_empty(), "clean pair must carry an empty lint list");
         }

@@ -6,10 +6,9 @@
 use graphguard::coordinator::Coordinator;
 use graphguard::egraph::SaturationLimits;
 use graphguard::fuzz::{self, FuzzConfig, Journal};
-use graphguard::infer::{
-    check_refinement_isolated, EscalationPolicy, InconclusiveReason, InferConfig, Verdict,
-};
+use graphguard::infer::{EscalationPolicy, InconclusiveReason, InferConfig, Verdict};
 use graphguard::models;
+use graphguard::Verifier;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -32,7 +31,7 @@ fn starved_node_budget_is_inconclusive_node_budget() {
         limits: SaturationLimits::new(8, 10),
         ..InferConfig::default()
     };
-    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &cfg) {
+    match Verifier::with_config(cfg).isolated(true).run(&w.gs, &w.gd, &w.ri) {
         Verdict::Inconclusive(i) => {
             assert_eq!(i.reason, InconclusiveReason::NodeBudget, "{i}");
             assert!(!i.region.is_empty(), "exhaustion must name its region");
@@ -48,7 +47,7 @@ fn elapsed_deadline_is_inconclusive_timeout() {
         region_deadline: Some(Duration::ZERO),
         ..InferConfig::default()
     };
-    match check_refinement_isolated(&w.gs, &w.gd, &w.ri, &cfg) {
+    match Verifier::with_config(cfg).isolated(true).run(&w.gs, &w.gd, &w.ri) {
         Verdict::Inconclusive(i) => assert_eq!(i.reason, InconclusiveReason::Timeout, "{i}"),
         v => panic!("a zero deadline must time out, got {}", v.tag()),
     }
@@ -57,7 +56,7 @@ fn elapsed_deadline_is_inconclusive_timeout() {
 #[test]
 fn genuine_bug_still_refutes_at_default_budgets() {
     let (gs, gd, ri) = models::regression::grad_accum_buggy_pair(2).unwrap();
-    match check_refinement_isolated(&gs, &gd, &ri, &InferConfig::default()) {
+    match Verifier::new().isolated(true).run(&gs, &gd, &ri) {
         Verdict::Refuted(e) => {
             assert!(!e.node_name.is_empty(), "refutation must carry a locus")
         }
@@ -70,7 +69,7 @@ fn genuine_bug_still_refutes_at_default_budgets() {
 #[test]
 fn clean_table2_workloads_never_inconclusive_at_defaults() {
     for w in models::table2_workloads(2) {
-        let v = check_refinement_isolated(&w.gs, &w.gd, &w.ri, &InferConfig::default());
+        let v = Verifier::new().isolated(true).run(&w.gs, &w.gd, &w.ri);
         assert!(v.is_verified(), "{}: expected verified, got {}", w.name, v.tag());
     }
 }
@@ -101,7 +100,7 @@ fn escalation_recovers_from_starved_initial_budget() {
         ..EscalationPolicy::default()
     };
     let (v, attempts) =
-        graphguard::infer::check_refinement_escalating(&w.gs, &w.gd, &w.ri, &cfg, &policy);
+        Verifier::with_config(cfg).escalation(policy).run_counted(&w.gs, &w.gd, &w.ri);
     assert!(v.is_verified(), "escalation should reach Verified, got {}", v.tag());
     assert!(attempts > 1, "a 10-node initial budget cannot succeed on attempt 1");
 }

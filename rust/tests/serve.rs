@@ -1,0 +1,202 @@
+//! In-process pipe tests for `graphguard serve` (ISSUE-9 acceptance).
+//!
+//! Drives [`graphguard::serve::serve_loop`] over an in-memory reader/writer
+//! pair — the same code path `graphguard serve` runs on stdin/stdout — and
+//! checks the service contract end to end:
+//!   - a mixed request stream (named workloads + an inline refuted pair)
+//!     answers with verdict/locus content byte-identical to the one-shot
+//!     CLI path (a single panic-isolated [`Verifier`] run);
+//!   - a repeated-layer stream meets the warm hit-rate floor (L−1)/L on
+//!     the shared fingerprint cache;
+//!   - malformed lines, version mismatches, unknown workloads, and missing
+//!     payloads produce structured error responses and never stop the loop;
+//!   - (with `--features chaos`) an armed fault yields `inconclusive_panic`
+//!     and never populates the shared cache.
+
+use graphguard::infer::Verdict;
+use graphguard::ir::{json_io, Graph};
+use graphguard::models::{self, gpt, gpt::GptConfig};
+use graphguard::relation::Relation;
+use graphguard::serve::{serve_loop, ServeOptions, ServeStats};
+use graphguard::util::json::Json;
+use graphguard::util::schema::SCHEMA_VERSION;
+use graphguard::Verifier;
+use std::io::Cursor;
+use std::sync::{Mutex, MutexGuard};
+
+/// Chaos state is process-global; when this binary is compiled with the
+/// chaos feature, every test serializes here so an armed fault (which
+/// bypasses the fingerprint cache globally) can't leak into a neighbouring
+/// test's cache assertions. Without the feature this is a no-op guard.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One serve session over an in-memory pipe: feed `input` (NDJSON request
+/// lines), collect one parsed response per line plus the session stats.
+fn run_serve(input: &str, opts: &ServeOptions) -> (Vec<Json>, ServeStats) {
+    let mut out = Vec::new();
+    let stats = serve_loop(Cursor::new(input.as_bytes()), &mut out, opts).expect("transport ok");
+    let text = String::from_utf8(out).expect("responses are utf-8");
+    let responses =
+        text.lines().map(|l| Json::parse(l).expect("response is valid json")).collect();
+    (responses, stats)
+}
+
+fn inline_request(id: &str, gs: &Graph, gd: &Graph, ri: &Relation) -> String {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("gs", json_io::to_json(gs)),
+        ("gd", json_io::to_json(gd)),
+        ("ri", ri.to_json(gs, gd)),
+    ])
+    .to_string()
+}
+
+/// Three mixed requests — verified workload, inline refuted pair, second
+/// verified workload — each answered with the relation JSON / error text /
+/// locus the one-shot CLI produces, byte for byte.
+#[test]
+fn mixed_stream_matches_the_one_shot_cli_byte_for_byte() {
+    let _guard = serialized();
+    let workloads = models::table2_workloads(2);
+    let gpt_w = workloads.iter().find(|w| w.name == "gpt_tp_sp_2").expect("gpt workload");
+    let qwen_w = workloads.iter().find(|w| w.name == "qwen2_tp_2").expect("qwen2 workload");
+    let (bgs, bgd, bri) = models::regression::grad_accum_buggy_pair(2).expect("buggy pair");
+
+    let input = format!(
+        "{}\n{}\n{}\n",
+        r#"{"id":"r1","workload":"gpt_tp_sp_2","ranks":2}"#,
+        inline_request("r2", &bgs, &bgd, &bri),
+        r#"{"id":"r3","workload":"qwen2_tp_2","ranks":2}"#,
+    );
+    let (rs, stats) = run_serve(&input, &ServeOptions::default());
+    assert_eq!(rs.len(), 3, "one response per request line");
+    assert_eq!((stats.verified, stats.refuted, stats.errors), (2, 1, 0));
+
+    for (resp, w) in [(&rs[0], gpt_w), (&rs[2], qwen_w)] {
+        assert_eq!(resp.get("verdict").as_str(), Some("verified"), "{}", w.name);
+        assert_eq!(resp.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
+        let one_shot = match Verifier::new().isolated(true).run(&w.gs, &w.gd, &w.ri) {
+            Verdict::Verified(out) => out.relation.to_json(&w.gs, &w.gd).to_string(),
+            v => panic!("{} must verify one-shot, got {}", w.name, v.tag()),
+        };
+        assert_eq!(
+            resp.get("relation").to_string(),
+            one_shot,
+            "{}: serve relation must match the one-shot CLI byte for byte",
+            w.name
+        );
+    }
+
+    assert_eq!(rs[1].get("id").as_str(), Some("r2"));
+    assert_eq!(rs[1].get("verdict").as_str(), Some("refuted"));
+    match Verifier::new().isolated(true).run(&bgs, &bgd, &bri) {
+        Verdict::Refuted(e) => {
+            assert_eq!(rs[1].get("error").as_str(), Some(format!("{e}").as_str()));
+            assert_eq!(rs[1].get("locus").as_str(), Some(e.node_name.as_str()));
+        }
+        v => panic!("buggy pair must refute one-shot, got {}", v.tag()),
+    }
+}
+
+const LAYERS: usize = 8;
+
+/// The amortization the service exists for: the second request over the
+/// same L=8 repeated-layer pair replays from the shared cache at a hit-rate
+/// of at least (L−1)/L, and even the cold request's misses are bounded by
+/// one layer plus the embedding/LM-head epilogue.
+#[test]
+fn repeated_layer_stream_meets_the_warm_hit_rate_floor() {
+    let _guard = serialized();
+    let model_cfg = GptConfig::default();
+    let (gs, gd, ri) = gpt::tp_sp_pair(2, LAYERS, &model_cfg).expect("build L=8 workload");
+    let line = inline_request("rep", &gs, &gd, &ri);
+    let opts = ServeOptions::default(); // fresh shared cache
+    let (rs, stats) = run_serve(&format!("{line}\n{line}\n"), &opts);
+    assert_eq!(rs.len(), 2);
+    for r in &rs {
+        assert_eq!(r.get("verdict").as_str(), Some("verified"));
+    }
+
+    let cold_misses = rs[0].get("cache_misses").as_usize().expect("cold misses");
+    let bound = gpt::seq(1, &model_cfg).num_nodes() + 5;
+    assert!(
+        cold_misses <= bound,
+        "cold request must reuse repeated layers: {cold_misses} misses > bound {bound}"
+    );
+
+    let hits = rs[1].get("cache_hits").as_f64().expect("warm hits");
+    let misses = rs[1].get("cache_misses").as_f64().expect("warm misses");
+    let rate = hits / (hits + misses).max(1.0);
+    let floor = (LAYERS - 1) as f64 / LAYERS as f64;
+    assert!(rate >= floor, "warm hit-rate {rate:.3} below acceptance floor {floor:.3}");
+    assert!(stats.cache_hits > 0, "session stats must see the shared-cache hits");
+}
+
+/// Every request-level failure — unparseable bytes, a future schema
+/// version, an unknown workload, a missing payload — answers with a
+/// structured `verdict: "error"` response (id echoed whenever the line was
+/// valid JSON) and the loop keeps serving.
+#[test]
+fn request_errors_answer_structurally_and_never_stop_the_loop() {
+    let _guard = serialized();
+    let input = "not json at all\n\
+                 {\"id\":\"v\",\"workload\":\"gpt_tp_sp_2\",\"schema_version\":99}\n\
+                 {\"id\":\"u\",\"workload\":\"no_such_model\",\"ranks\":2}\n\
+                 {\"id\":\"m\"}\n\
+                 {\"id\":\"ok\",\"workload\":\"gpt_tp_sp_2\",\"ranks\":2}\n";
+    let (rs, stats) = run_serve(input, &ServeOptions::default());
+    assert_eq!(rs.len(), 5, "one response per request line");
+    for r in &rs[..4] {
+        assert_eq!(r.get("verdict").as_str(), Some("error"));
+        assert!(r.get("error").as_str().is_some(), "error responses carry a message");
+        assert_eq!(r.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
+    }
+    assert!(matches!(rs[0].get("id"), Json::Null), "unparseable line has no id to echo");
+    assert_eq!(rs[1].get("id").as_str(), Some("v"));
+    let msg = rs[1].get("error").as_str().expect("version error");
+    assert!(
+        msg.contains("99") && msg.contains(&SCHEMA_VERSION.to_string()),
+        "version mismatch must name both versions: {msg}"
+    );
+    assert_eq!(rs[2].get("id").as_str(), Some("u"));
+    assert_eq!(rs[3].get("id").as_str(), Some("m"));
+    assert_eq!(rs[4].get("verdict").as_str(), Some("verified"));
+    assert_eq!((stats.errors, stats.verified), (4, 1));
+}
+
+#[cfg(feature = "chaos")]
+mod chaos {
+    use super::*;
+    use graphguard::cache::FingerprintCache;
+    use graphguard::chaos::{arm, disarm_all, fired, FaultAction};
+    use std::sync::Arc;
+
+    /// A chaos-armed request degrades to `inconclusive_panic` and must
+    /// never populate the cache shared with every other client; once
+    /// disarmed, the same server options verify and warm it normally.
+    #[test]
+    fn armed_request_never_populates_the_shared_cache() {
+        let _guard = serialized();
+        disarm_all();
+        let (gs, gd, ri) = models::gpt::pp_tp_pair(2, 2, 2).expect("build pp workload");
+        let line = inline_request("poisoned", &gs, &gd, &ri);
+        let cache = Arc::new(FingerprintCache::new());
+        let opts = ServeOptions { cache: Some(Arc::clone(&cache)), ..ServeOptions::default() };
+
+        arm("recv_of_send_identity", 1, FaultAction::Panic);
+        let (rs, stats) = run_serve(&format!("{line}\n"), &opts);
+        disarm_all();
+        assert!(fired("recv_of_send_identity"), "panic fault never fired");
+        assert_eq!(rs[0].get("verdict").as_str(), Some("inconclusive_panic"));
+        assert!(cache.is_empty(), "armed request must never populate the shared cache");
+        assert_eq!((stats.cache_hits, stats.cache_misses), (0, 0), "no lookups while armed");
+
+        let (rs, _) = run_serve(&format!("{line}\n"), &opts);
+        assert_eq!(rs[0].get("verdict").as_str(), Some("verified"));
+        assert!(!cache.is_empty(), "disarmed request populates the shared cache");
+    }
+}

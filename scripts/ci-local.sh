@@ -4,9 +4,9 @@
 # verdict with one command. Steps (both CI jobs, serialized):
 #
 #   rust job:        build → test (incl. chaos) → fmt → clippy (-D warnings)
-#   fuzz-smoke job:  suite → parallel-determinism gate → lint gate →
-#                    fuzz smoke → lint-triage gate → resume drill →
-#                    fig4 + fuzz + cache benches →
+#   fuzz-smoke job:  suite → parallel-determinism gate → serve smoke →
+#                    lint gate → fuzz smoke → lint-triage gate →
+#                    resume drill → fig4 + fuzz + cache + serve benches →
 #                    cache-effectiveness gate → bench gate
 #
 # Pass --quick to stop after the rust job (the fast pre-push check).
@@ -58,6 +58,8 @@ cargo run --release --bin graphguard -- suite --ranks 2 --jobs 4 --no-cache --ca
 diff -u "$tmpdir/suite_jobs1.txt" "$tmpdir/suite_jobs4_nocache.txt"
 echo "canonical suite report is jobs- and cache-invariant"
 
+step ./scripts/serve_smoke.sh
+
 # ShardFlow lint gate: silent on every clean graph, loud (exit 1, JSON
 # loci) on every *_killed wiring-bug fixture.
 echo
@@ -97,6 +99,7 @@ step cargo bench --bench fig4_verification_time
 step cargo bench --bench fuzz_throughput
 step cargo bench --bench cache_effectiveness
 step ./scripts/check_cache_effectiveness.sh BENCH_cache.json
+step cargo bench --bench serve_latency
 step ./scripts/bench_compare.sh BENCH_baseline .
 
 echo

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Smoke-test `graphguard serve` end to end over stdin/stdout: a canned
+# NDJSON request stream (two named workloads, an unparseable line, an
+# unknown workload, a repeated workload) must produce one structured
+# response per request line, byte-stable canonical output across server
+# sessions, and warm shared-cache hits on the repeated request. Run by CI
+# (fuzz-smoke job) and scripts/ci-local.sh after the release build exists.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+bin=(cargo run --release --bin graphguard --)
+tmpdir="$(mktemp -d)"
+trap 'rm -rf "$tmpdir"' EXIT
+
+cat > "$tmpdir/requests.ndjson" <<'EOF'
+{"id":"r1","workload":"gpt_tp_sp_2","ranks":2}
+{"id":"r2","workload":"qwen2_tp_2","ranks":2}
+this line is not json
+{"id":"r3","workload":"no_such_model","ranks":2}
+{"id":"r4","workload":"gpt_tp_sp_2","ranks":2}
+EOF
+
+echo "==> serve answers every request line (canonical, session A)"
+"${bin[@]}" serve --canonical < "$tmpdir/requests.ndjson" > "$tmpdir/responses_a.ndjson"
+
+echo "==> canonical responses are byte-stable across server sessions"
+"${bin[@]}" serve --canonical < "$tmpdir/requests.ndjson" > "$tmpdir/responses_b.ndjson"
+diff -u "$tmpdir/responses_a.ndjson" "$tmpdir/responses_b.ndjson"
+
+echo "==> response stream checks (ids, verdicts, schema_version)"
+python3 - "$tmpdir/responses_a.ndjson" <<'PY'
+import json
+import sys
+
+rows = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+assert len(rows) == 5, f"expected 5 responses, got {len(rows)}"
+got = [(r.get("id"), r["verdict"]) for r in rows]
+want = [("r1", "verified"), ("r2", "verified"), (None, "error"),
+        ("r3", "error"), ("r4", "verified")]
+assert got == want, f"{got} != {want}"
+for r in rows:
+    assert isinstance(r.get("schema_version"), int) and r["schema_version"] >= 1, r
+assert "no_such_model" in rows[3]["error"], rows[3]
+for r in rows:
+    if r["verdict"] == "verified":
+        assert r.get("relation") is not None, f"verified response needs a relation: {r}"
+        assert "wall_us" not in r, f"canonical response must drop wall_us: {r}"
+print("ids, verdicts and schema_version all as expected")
+PY
+
+echo "==> shared cache warms across requests (r4 replays r1)"
+"${bin[@]}" serve < "$tmpdir/requests.ndjson" > "$tmpdir/responses_warm.ndjson"
+python3 - "$tmpdir/responses_warm.ndjson" <<'PY'
+import json
+import sys
+
+rows = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+r4 = rows[4]
+assert r4["verdict"] == "verified", r4
+assert r4["cache_hits"] > 0, f"repeat request must hit the shared cache: {r4}"
+print(f"r4 cache_hits={r4['cache_hits']} cache_misses={r4['cache_misses']}")
+PY
+
+echo
+echo "serve_smoke: all serve gates passed"
