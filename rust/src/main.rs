@@ -330,7 +330,7 @@ fn cmd_suite(args: &[String]) -> Result<i32> {
     } else {
         coordinator::Coordinator { cfg, ..coordinator::Coordinator::default() }
     };
-    let results = coord.run_batch(models::table2_workloads(ranks));
+    let results = coord.run_batch(models::try_table2_workloads(ranks)?);
     if opts.canonical {
         // Byte-stable report for the jobs/cache determinism gate: no
         // durations, no cache counters (see coordinator::canonical_report).
@@ -475,7 +475,7 @@ fn cmd_lint(args: &[String]) -> Result<i32> {
             let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
             vec![fuzz::lint_counterexample(&j).with_context(|| format!("linting {path}"))?]
         } else {
-            models::table2_workloads(opts.ranks_or(2))
+            models::try_table2_workloads(opts.ranks_or(2))?
                 .iter()
                 .map(|w| (w.name.clone(), graphguard::analysis::analyze(&w.gd, Some(&w.ri))))
                 .collect()

@@ -21,8 +21,10 @@ pub mod regression;
 
 use crate::ir::Graph;
 use crate::relation::Relation;
+use anyhow::{Context, Result};
 
 /// A ready-to-verify workload.
+#[derive(Debug)]
 pub struct Workload {
     pub name: String,
     pub gs: Graph,
@@ -33,18 +35,25 @@ pub struct Workload {
 }
 
 /// All Table-2 workloads at a given parallelism degree (1 layer each).
-pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
+/// Fails — instead of panicking — when a builder rejects the degree (e.g.
+/// attention heads not divisible by `ranks`), naming the workload that
+/// failed, so untrusted input paths (the serve request loop, CLI flags)
+/// can turn an incompatible degree into a structured error.
+pub fn try_table2_workloads(ranks: usize) -> Result<Vec<Workload>> {
     let mut v = Vec::new();
     {
-        let (gs, gd, ri) = gpt::tp_sp_pair(ranks, 1, &gpt::GptConfig::default()).unwrap();
+        let (gs, gd, ri) = gpt::tp_sp_pair(ranks, 1, &gpt::GptConfig::default())
+            .with_context(|| format!("building gpt_tp_sp_{ranks}"))?;
         v.push(Workload { name: format!("gpt_tp_sp_{ranks}"), gs, gd, ri, strategies: vec!["tp", "sp"] });
     }
     {
-        let (gs, gd, ri) = qwen2::tp_pair(ranks, 1).unwrap();
+        let (gs, gd, ri) =
+            qwen2::tp_pair(ranks, 1).with_context(|| format!("building qwen2_tp_{ranks}"))?;
         v.push(Workload { name: format!("qwen2_tp_{ranks}"), gs, gd, ri, strategies: vec!["tp"] });
     }
     {
-        let (gs, gd, ri) = regression::grad_accum_pair(ranks.max(2)).unwrap();
+        let (gs, gd, ri) = regression::grad_accum_pair(ranks.max(2))
+            .with_context(|| format!("building regression_ga_{}", ranks.max(2)))?;
         v.push(Workload {
             name: format!("regression_ga_{}", ranks.max(2)),
             gs,
@@ -54,11 +63,13 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
         });
     }
     {
-        let (gs, gd, ri) = llama::tp_pair(ranks, 1, &llama::LlamaConfig::default()).unwrap();
+        let (gs, gd, ri) = llama::tp_pair(ranks, 1, &llama::LlamaConfig::default())
+            .with_context(|| format!("building llama3_tp_{ranks}"))?;
         v.push(Workload { name: format!("llama3_tp_{ranks}"), gs, gd, ri, strategies: vec!["tp"] });
     }
     {
-        let (gs, gd, ri) = bytedance::tp_sp_ep_pair(ranks, 1).unwrap();
+        let (gs, gd, ri) = bytedance::tp_sp_ep_pair(ranks, 1)
+            .with_context(|| format!("building bytedance_tp_sp_ep_{ranks}"))?;
         v.push(Workload {
             name: format!("bytedance_tp_sp_ep_{ranks}"),
             gs,
@@ -69,7 +80,8 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
     }
     {
         // 2 pipeline stages over 2 layers, TP inside each stage
-        let (gs, gd, ri) = gpt::pp_tp_pair(2, ranks, 2).unwrap();
+        let (gs, gd, ri) = gpt::pp_tp_pair(2, ranks, 2)
+            .with_context(|| format!("building gpt_pp2_tp_{ranks}"))?;
         v.push(Workload {
             name: format!("gpt_pp2_tp_{ranks}"),
             gs,
@@ -79,11 +91,13 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
         });
     }
     {
-        let (gs, gd, ri) = gpt::fsdp_pair(ranks, 1).unwrap();
+        let (gs, gd, ri) =
+            gpt::fsdp_pair(ranks, 1).with_context(|| format!("building gpt_fsdp_{ranks}"))?;
         v.push(Workload { name: format!("gpt_fsdp_{ranks}"), gs, gd, ri, strategies: vec!["fsdp"] });
     }
     {
-        let (gs, gd, ri) = llama::fsdp_pair(ranks, 1, &llama::LlamaConfig::default()).unwrap();
+        let (gs, gd, ri) = llama::fsdp_pair(ranks, 1, &llama::LlamaConfig::default())
+            .with_context(|| format!("building llama3_fsdp_{ranks}"))?;
         v.push(Workload {
             name: format!("llama3_fsdp_{ranks}"),
             gs,
@@ -97,7 +111,8 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
     // that divide the fixed expert count — the other workloads still run at
     // e.g. ranks 8 or 1, where EP over 4 experts is undefined.
     if ranks >= 2 && gpt::MOE_EXPERTS % ranks == 0 {
-        let (gs, gd, ri) = gpt::moe_ep_pair(ranks, 1).unwrap();
+        let (gs, gd, ri) =
+            gpt::moe_ep_pair(ranks, 1).with_context(|| format!("building gpt_moe_ep_{ranks}"))?;
         v.push(Workload { name: format!("gpt_moe_ep_{ranks}"), gs, gd, ri, strategies: vec!["ep"] });
     }
     // schedule-aware pipeline parallelism (buffer-tagged 1F1B and
@@ -108,7 +123,8 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
     let micro = 2 * ranks;
     if micro >= 2 && gpt::GptConfig::default().seq % micro as i64 == 0 {
         let sched = crate::schedule::Schedule::one_f_one_b(2, micro);
-        let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 2).unwrap();
+        let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 2)
+            .with_context(|| format!("building gpt_pp2_1f1b_{ranks}"))?;
         v.push(Workload {
             name: format!("gpt_pp2_1f1b_{ranks}"),
             gs,
@@ -117,7 +133,8 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
             strategies: vec!["pp", "1f1b"],
         });
         let sched = crate::schedule::Schedule::interleaved(2, micro, 2);
-        let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 4).unwrap();
+        let (gs, gd, ri) = gpt::pp_sched_pair(&sched, 4)
+            .with_context(|| format!("building gpt_pp2x2_intlv_{ranks}"))?;
         v.push(Workload {
             name: format!("gpt_pp2x2_intlv_{ranks}"),
             gs,
@@ -126,7 +143,15 @@ pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
             strategies: vec!["pp", "interleaved"],
         });
     }
-    v
+    Ok(v)
+}
+
+/// Infallible convenience for trusted callers (tests, benches, examples)
+/// running at known-good degrees. Panics when a builder rejects `ranks`;
+/// untrusted input paths must use [`try_table2_workloads`] instead.
+pub fn table2_workloads(ranks: usize) -> Vec<Workload> {
+    try_table2_workloads(ranks)
+        .unwrap_or_else(|e| panic!("table2 workloads at ranks={ranks}: {e:#}"))
 }
 
 #[cfg(test)]
@@ -152,6 +177,16 @@ mod tests {
             assert!(names(r).iter().any(|n| n == &format!("gpt_pp2_1f1b_{r}")), "ranks {r}");
             assert!(names(r).iter().any(|n| n == &format!("gpt_pp2x2_intlv_{r}")), "ranks {r}");
         }
+    }
+
+    #[test]
+    fn incompatible_degree_is_an_error_not_a_panic() {
+        // heads=4 is not divisible by 3: the fallible builder must report
+        // which workload rejected the degree instead of unwinding (the serve
+        // loop turns this into a structured error response).
+        let e = super::try_table2_workloads(3).expect_err("ranks=3 must not build");
+        let msg = format!("{e:#}");
+        assert!(msg.contains("gpt_tp_sp_3"), "error names the workload: {msg}");
     }
 
     #[test]

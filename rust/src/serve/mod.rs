@@ -25,7 +25,7 @@ use crate::util::json::Json;
 use crate::verifier::Verifier;
 use anyhow::{Context, Result};
 use protocol::{Payload, Request};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -62,16 +62,39 @@ pub struct ServeStats {
     pub cache_misses: u64,
 }
 
+/// How many distinct `ranks` values keep their built workload table in
+/// memory at once. Combined with the `ranks` bound in
+/// [`protocol::parse_request`], this keeps a client sweeping `ranks`
+/// values from growing server memory without limit.
+const WORKLOAD_MEMO_CAP: usize = 4;
+
 /// Named workloads are rebuilt per distinct `ranks`, then reused for the
-/// rest of the session.
+/// rest of the session; the memo is bounded (FIFO eviction at
+/// [`WORKLOAD_MEMO_CAP`] entries). A degree the model builders reject
+/// (e.g. heads not divisible by `ranks`) is a request error, never a
+/// panic — the client gets a structured response and the loop keeps
+/// serving.
 #[derive(Default)]
 struct WorkloadTable {
     by_ranks: BTreeMap<usize, Vec<Workload>>,
+    /// Insertion order of `by_ranks` keys, oldest first, for eviction.
+    order: VecDeque<usize>,
 }
 
 impl WorkloadTable {
     fn find(&mut self, name: &str, ranks: usize) -> Result<&Workload, String> {
-        let table = self.by_ranks.entry(ranks).or_insert_with(|| models::table2_workloads(ranks));
+        if !self.by_ranks.contains_key(&ranks) {
+            let table = models::try_table2_workloads(ranks)
+                .map_err(|e| format!("cannot build workloads at ranks={ranks}: {e:#}"))?;
+            if self.by_ranks.len() >= WORKLOAD_MEMO_CAP {
+                if let Some(oldest) = self.order.pop_front() {
+                    self.by_ranks.remove(&oldest);
+                }
+            }
+            self.order.push_back(ranks);
+            self.by_ranks.insert(ranks, table);
+        }
+        let table = &self.by_ranks[&ranks];
         match table.iter().position(|w| w.name == name) {
             Some(i) => Ok(&table[i]),
             None => {
@@ -113,7 +136,7 @@ fn verifier_for(req: &Request, opts: &ServeOptions) -> Verifier {
 }
 
 fn answer(req: &Request, opts: &ServeOptions, workloads: &mut WorkloadTable) -> Json {
-    let id = req.id.as_deref();
+    let id = req.id.as_ref();
     let verifier = verifier_for(req, opts);
     let (gs, gd, ri) = match &req.payload {
         Payload::Inline { gs, gd, ri } => (gs.as_ref(), gd.as_ref(), ri),
@@ -156,7 +179,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         stats.requests += 1;
         let response = match protocol::parse_request(&line) {
             Ok(req) => answer(&req, opts, &mut workloads),
-            Err(bad) => protocol::error_response(bad.id.as_deref(), &bad.error),
+            Err(bad) => protocol::error_response(bad.id.as_ref(), &bad.error),
         };
         tally(&mut stats, &response);
         writeln!(writer, "{response}").context("writing response stream")?;
@@ -182,7 +205,9 @@ pub fn serve_stdio(opts: &ServeOptions) -> Result<ServeStats> {
 /// request loop to EOF on each, sharing one cache across all of them.
 /// A pre-existing socket file at `path` is replaced. Accepts forever —
 /// the operator stops the server with a signal; per-connection stats go
-/// to stderr.
+/// to stderr. One client's transport failure (e.g. disconnecting before
+/// reading its responses) only ends that connection — the next client is
+/// accepted as usual. Only listener/accept failures are fatal.
 #[cfg(unix)]
 pub fn serve_unix(path: &std::path::Path, opts: &ServeOptions) -> Result<()> {
     use std::os::unix::net::UnixListener;
@@ -194,14 +219,22 @@ pub fn serve_unix(path: &std::path::Path, opts: &ServeOptions) -> Result<()> {
         .with_context(|| format!("binding unix socket {}", path.display()))?;
     for conn in listener.incoming() {
         let conn = conn.context("accepting connection")?;
-        let reader = std::io::BufReader::new(conn.try_clone().context("cloning socket")?);
+        let reader = match conn.try_clone() {
+            Ok(c) => std::io::BufReader::new(c),
+            Err(e) => {
+                eprintln!("serve: dropping connection (cloning socket: {e})");
+                continue;
+            }
+        };
         let mut writer = conn;
-        let stats = serve_loop(reader, &mut writer, opts)?;
-        eprintln!(
-            "serve: connection closed after {} request(s) ({} verified, {} refuted, \
-             {} inconclusive, {} errors)",
-            stats.requests, stats.verified, stats.refuted, stats.inconclusive, stats.errors
-        );
+        match serve_loop(reader, &mut writer, opts) {
+            Ok(stats) => eprintln!(
+                "serve: connection closed after {} request(s) ({} verified, {} refuted, \
+                 {} inconclusive, {} errors)",
+                stats.requests, stats.verified, stats.refuted, stats.inconclusive, stats.errors
+            ),
+            Err(e) => eprintln!("serve: connection aborted ({e:#}); still accepting"),
+        }
     }
     Ok(())
 }
@@ -247,6 +280,47 @@ mod tests {
         );
         assert_eq!(rs[2].get("verdict").as_str(), Some("verified"));
         assert_eq!((stats.errors, stats.verified), (2, 1));
+    }
+
+    #[test]
+    fn incompatible_ranks_is_a_request_error_not_a_crash() {
+        // heads=4 % ranks=3 fails inside the gpt builder: the untrusted
+        // request must get a structured error (id echoed) and the loop must
+        // keep serving — this used to panic out of the whole process.
+        let input = "{\"id\":3,\"workload\":\"gpt_tp_sp_3\",\"ranks\":3}\n\
+                     {\"id\":\"after\",\"workload\":\"qwen2_tp_2\",\"ranks\":2}\n";
+        let (rs, stats) = run(input, &ServeOptions::default());
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("verdict").as_str(), Some("error"));
+        assert_eq!(rs[0].get("id"), &Json::num(3.0), "numeric id echoed as a number");
+        let msg = rs[0].get("error").as_str().unwrap_or("");
+        assert!(msg.contains("ranks=3"), "error names the degree: {msg}");
+        assert_eq!(rs[1].get("verdict").as_str(), Some("verified"));
+        assert_eq!((stats.errors, stats.verified), (1, 1));
+    }
+
+    #[test]
+    fn workload_memo_stays_bounded_under_a_ranks_sweep() {
+        let mut table = WorkloadTable::default();
+        // degrees the builders reject never occupy a memo slot
+        for ranks in 1..=16usize {
+            let _ = table.find("no_such_workload", ranks);
+        }
+        assert!(
+            table.by_ranks.len() <= WORKLOAD_MEMO_CAP,
+            "memo holds {} entries, cap is {WORKLOAD_MEMO_CAP}",
+            table.by_ranks.len()
+        );
+        // a full memo evicts its oldest entry instead of growing
+        let mut table = WorkloadTable::default();
+        for r in [7usize, 9, 11, 13] {
+            table.order.push_back(r);
+            table.by_ranks.insert(r, Vec::new());
+        }
+        table.find("no_such_workload", 2).expect_err("unknown workload");
+        assert_eq!(table.by_ranks.len(), WORKLOAD_MEMO_CAP);
+        assert!(!table.by_ranks.contains_key(&7), "oldest entry evicted");
+        assert!(table.by_ranks.contains_key(&2), "fresh entry memoized");
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //!
 //! Requests (`schema_version` optional, v0 = current layout):
 //! - named workload: `{"id": "r1", "workload": "gpt_tp_sp_2", "ranks": 2}`
+//!   (`ranks` bounded to 1..=[`MAX_RANKS`])
 //! - inline pair:    `{"id": "r2", "gs": {…}, "gd": {…}, "ri": {…}}`
 //! - per-request overrides: `"jobs"`, `"deadline_ms"` (0 disables),
 //!   `"no_cache"`, `"escalate"`, `"max_iters"`, `"max_nodes"`.
 //!
-//! Responses always carry `schema_version`, the echoed `id`, and a
+//! Responses always carry `schema_version`, the echoed `id` (the client's
+//! original JSON value, whatever its type), and a
 //! `verdict` tag (`verified` / `refuted` / `inconclusive_*` / `error`);
 //! verdict-specific fields are documented on [`verdict_response`].
 
@@ -26,6 +28,7 @@ use crate::util::json::Json;
 use crate::util::schema;
 
 /// What a request asks to verify.
+#[derive(Debug)]
 pub enum Payload {
     /// A named Table-2 workload (resolved by the serve loop), at `ranks`.
     Workload { name: String, ranks: usize },
@@ -33,10 +36,18 @@ pub enum Payload {
     Inline { gs: Box<Graph>, gd: Box<Graph>, ri: Relation },
 }
 
+/// Largest accepted `ranks` in a workload request: every Table-2 builder
+/// tops out far below this, and the bound keeps a client from demanding
+/// arbitrarily large graph builds (each distinct degree also occupies a
+/// slot in the serve loop's bounded workload memo).
+pub const MAX_RANKS: usize = 64;
+
 /// One parsed request line.
+#[derive(Debug)]
 pub struct Request {
-    /// Client-chosen correlation id, echoed verbatim in the response.
-    pub id: Option<String>,
+    /// Client-chosen correlation id — any JSON value, echoed verbatim
+    /// (same type, not stringified) in the response.
+    pub id: Option<Json>,
     pub payload: Payload,
     /// Per-request overrides of the server's base config.
     pub jobs: Option<usize>,
@@ -52,8 +63,9 @@ pub struct Request {
 
 /// A request that could not be parsed: the id when it was recoverable,
 /// plus the message for the structured error response.
+#[derive(Debug)]
 pub struct BadRequest {
-    pub id: Option<String>,
+    pub id: Option<Json>,
     pub error: String,
 }
 
@@ -78,7 +90,7 @@ pub fn parse_request(line: &str) -> Result<Request, BadRequest> {
         .map_err(|e| BadRequest { id: None, error: format!("malformed request: {e}") })?;
     let id = match j.get("id") {
         Json::Null => None,
-        v => Some(v.as_str().map(str::to_string).unwrap_or_else(|| v.to_string())),
+        v => Some(v.clone()),
     };
     let fail = |error: String| BadRequest { id: id.clone(), error };
     schema::check(&j, "serve request").map_err(|e| fail(format!("{e:#}")))?;
@@ -110,39 +122,41 @@ pub fn parse_request(line: &str) -> Result<Request, BadRequest> {
                 .ok_or_else(|| fail("field 'workload' must be a string".into()))?
                 .to_string();
             let ranks = opt_usize(&j, "ranks").map_err(&fail)?.unwrap_or(2);
-            if ranks == 0 {
-                return Err(fail("field 'ranks' must be >= 1".into()));
+            if !(1..=MAX_RANKS).contains(&ranks) {
+                return Err(fail(format!(
+                    "field 'ranks' must be between 1 and {MAX_RANKS}, got {ranks}"
+                )));
             }
             Payload::Workload { name, ranks }
         }
     };
 
-    Ok(Request {
-        id,
-        payload,
-        jobs: opt_usize(&j, "jobs").map_err(&fail)?,
-        deadline_ms: match j.get("deadline_ms") {
-            Json::Null => None,
-            v => Some(
-                v.as_f64()
-                    .filter(|n| *n >= 0.0)
-                    .map(|n| n as u64)
-                    .ok_or_else(|| fail("field 'deadline_ms' must be a number".into()))?,
-            ),
-        },
-        no_cache: opt_flag(&j, "no_cache").map_err(&fail)?,
-        escalate: opt_flag(&j, "escalate").map_err(&fail)?,
-        max_iters: opt_usize(&j, "max_iters").map_err(&fail)?,
-        max_nodes: opt_usize(&j, "max_nodes").map_err(&fail)?,
-    })
+    // All override fields parse before `id` moves into the Request —
+    // `fail` borrows `id` to echo it in error responses.
+    let jobs = opt_usize(&j, "jobs").map_err(&fail)?;
+    let deadline_ms = match j.get("deadline_ms") {
+        Json::Null => None,
+        v => Some(
+            v.as_f64()
+                .filter(|n| *n >= 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| fail("field 'deadline_ms' must be a number".into()))?,
+        ),
+    };
+    let no_cache = opt_flag(&j, "no_cache").map_err(&fail)?;
+    let escalate = opt_flag(&j, "escalate").map_err(&fail)?;
+    let max_iters = opt_usize(&j, "max_iters").map_err(&fail)?;
+    let max_nodes = opt_usize(&j, "max_nodes").map_err(&fail)?;
+    Ok(Request { id, payload, jobs, deadline_ms, no_cache, escalate, max_iters, max_nodes })
 }
 
-fn id_field(id: Option<&str>) -> Json {
-    id.map(Json::str).unwrap_or(Json::Null)
+fn id_field(id: Option<&Json>) -> Json {
+    id.cloned().unwrap_or(Json::Null)
 }
 
-/// Base response object: `schema_version`, echoed `id`, `verdict` tag.
-fn base(id: Option<&str>, verdict: &str) -> Vec<(&'static str, Json)> {
+/// Base response object: `schema_version`, echoed `id` (the client's
+/// original JSON value — a number stays a number), `verdict` tag.
+fn base(id: Option<&Json>, verdict: &str) -> Vec<(&'static str, Json)> {
     vec![
         ("schema_version", schema::version_field()),
         ("id", id_field(id)),
@@ -153,7 +167,7 @@ fn base(id: Option<&str>, verdict: &str) -> Vec<(&'static str, Json)> {
 /// Structured error response (`verdict: "error"`): malformed JSON, unknown
 /// workload, bad graphs. The loop answers these and keeps serving — a
 /// request error must never exit the process.
-pub fn error_response(id: Option<&str>, error: &str) -> Json {
+pub fn error_response(id: Option<&Json>, error: &str) -> Json {
     let mut fields = base(id, "error");
     fields.push(("error", Json::str(error)));
     Json::obj(fields)
@@ -164,7 +178,7 @@ pub fn error_response(id: Option<&str>, error: &str) -> Json {
 /// byte-stable for golden diffing; verdict/locus content is identical
 /// either way and matches the one-shot CLI's output strings.
 pub fn verdict_response(
-    id: Option<&str>,
+    id: Option<&Json>,
     verdict: &crate::infer::Verdict,
     gs: &Graph,
     gd: &Graph,
@@ -228,7 +242,7 @@ mod tests {
     #[test]
     fn workload_request_parses_with_defaults() {
         let r = parse_request(r#"{"id":"a","workload":"gpt_tp_sp_2"}"#).unwrap();
-        assert_eq!(r.id.as_deref(), Some("a"));
+        assert_eq!(r.id, Some(Json::str("a")));
         let Payload::Workload { name, ranks } = r.payload else { panic!("workload") };
         assert_eq!((name.as_str(), ranks), ("gpt_tp_sp_2", 2));
         assert!(!r.no_cache && !r.escalate);
@@ -258,8 +272,32 @@ mod tests {
     #[test]
     fn bad_field_recovers_the_id() {
         let e = parse_request(r#"{"id":"r9","workload":"w","jobs":"three"}"#).unwrap_err();
-        assert_eq!(e.id.as_deref(), Some("r9"));
+        assert_eq!(e.id, Some(Json::str("r9")));
         assert!(e.error.contains("jobs"), "{}", e.error);
+    }
+
+    #[test]
+    fn non_string_id_round_trips_as_its_original_json_value() {
+        let r = parse_request(r#"{"id":42,"workload":"w"}"#).unwrap();
+        assert_eq!(r.id, Some(Json::num(42.0)), "id must keep the client's value type");
+        let resp = error_response(r.id.as_ref(), "boom");
+        assert_eq!(resp.get("id"), &Json::num(42.0));
+        assert_eq!(resp.get("id").to_string(), "42", "serialized as a bare number, not \"42\"");
+    }
+
+    #[test]
+    fn out_of_range_ranks_rejected_at_parse_time() {
+        for bad in [r#"{"workload":"w","ranks":0}"#, r#"{"workload":"w","ranks":1000000}"#] {
+            let e = parse_request(bad).unwrap_err();
+            assert!(
+                e.error.contains(&MAX_RANKS.to_string()),
+                "ranks bound error names the limit: {}",
+                e.error
+            );
+        }
+        let r = parse_request(r#"{"workload":"w","ranks":64}"#).unwrap();
+        let Payload::Workload { ranks, .. } = r.payload else { panic!("workload") };
+        assert_eq!(ranks, MAX_RANKS);
     }
 
     #[test]
@@ -281,7 +319,7 @@ mod tests {
 
     #[test]
     fn error_response_shape() {
-        let r = error_response(Some("q"), "boom");
+        let r = error_response(Some(&Json::str("q")), "boom");
         assert_eq!(r.get("verdict").as_str(), Some("error"));
         assert_eq!(r.get("id").as_str(), Some("q"));
         assert_eq!(r.get("error").as_str(), Some("boom"));

@@ -151,6 +151,14 @@ impl Json {
     }
 }
 
+/// Compact single-line form, same bytes as [`Json::to_string`] — the serve
+/// protocol writes responses with `writeln!("{response}")`.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');

@@ -147,10 +147,12 @@ fn request_errors_answer_structurally_and_never_stop_the_loop() {
                  {\"id\":\"v\",\"workload\":\"gpt_tp_sp_2\",\"schema_version\":99}\n\
                  {\"id\":\"u\",\"workload\":\"no_such_model\",\"ranks\":2}\n\
                  {\"id\":\"m\"}\n\
+                 {\"id\":3,\"workload\":\"gpt_tp_sp_3\",\"ranks\":3}\n\
+                 {\"id\":\"big\",\"workload\":\"gpt_tp_sp_2\",\"ranks\":100000}\n\
                  {\"id\":\"ok\",\"workload\":\"gpt_tp_sp_2\",\"ranks\":2}\n";
     let (rs, stats) = run_serve(input, &ServeOptions::default());
-    assert_eq!(rs.len(), 5, "one response per request line");
-    for r in &rs[..4] {
+    assert_eq!(rs.len(), 7, "one response per request line");
+    for r in &rs[..6] {
         assert_eq!(r.get("verdict").as_str(), Some("error"));
         assert!(r.get("error").as_str().is_some(), "error responses carry a message");
         assert_eq!(r.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
@@ -164,8 +166,15 @@ fn request_errors_answer_structurally_and_never_stop_the_loop() {
     );
     assert_eq!(rs[2].get("id").as_str(), Some("u"));
     assert_eq!(rs[3].get("id").as_str(), Some("m"));
-    assert_eq!(rs[4].get("verdict").as_str(), Some("verified"));
-    assert_eq!((stats.errors, stats.verified), (4, 1));
+    // a degree the model builders reject (heads 4 % ranks 3) is a request
+    // error, not a server panic; a non-string id echoes as its own type
+    assert_eq!(rs[4].get("id"), &Json::Num(3.0), "numeric id round-trips as a number");
+    assert!(rs[4].get("error").as_str().expect("builder error").contains("ranks=3"));
+    // absurd degrees are rejected at parse time, before any graph building
+    assert_eq!(rs[5].get("id").as_str(), Some("big"));
+    assert!(rs[5].get("error").as_str().expect("ranks bound error").contains("100000"));
+    assert_eq!(rs[6].get("verdict").as_str(), Some("verified"));
+    assert_eq!((stats.errors, stats.verified), (6, 1));
 }
 
 #[cfg(feature = "chaos")]
