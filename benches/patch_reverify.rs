@@ -1,0 +1,139 @@
+//! Patch-driven incremental re-verification on a repeated-layer GPT
+//! workload (ISSUE 10).
+//!
+//! The throughput claim this measures: after a local edit to one layer of
+//! an already-verified L-layer model, re-verification should cost one
+//! dirty cone, not L layers. Three runs over the L=8 tensor+sequence-
+//! parallel GPT pair and a single-node identity splice near the LM head:
+//!   patch_full_cold     — full from-scratch verification of the patched
+//!                         pair, no cache (the non-incremental baseline)
+//!   patch_warmup        — full verification of the *original* pair into a
+//!                         fresh cache (the run that "already happened")
+//!   patch_reverify_warm — `Verifier::reverify` against that warm cache:
+//!                         Clean regions replay, the dirty cone re-saturates
+//!
+//! Hard assertions (the ISSUE-10 acceptance gate, also enforced on
+//! BENCH_patch.json by CI): the impact analysis proves a strict majority
+//! of regions Clean (dirty cone < total), the incremental certificate is
+//! byte-identical to the full run's, and Clean regions replay as cache
+//! hits rather than re-saturating.
+
+// stdout is this target's product (CLI output / bench tables) — opt back in.
+#![allow(clippy::print_stdout)]
+
+use graphguard::analysis::remap_relation;
+use graphguard::bench::{fmt_dur, write_bench_json, BenchRecord};
+use graphguard::cache::FingerprintCache;
+use graphguard::infer::{InferConfig, Verdict};
+use graphguard::ir::{GraphPatch, Op};
+use graphguard::models::gpt::{self, GptConfig};
+use graphguard::Verifier;
+use std::sync::Arc;
+use std::time::Instant;
+
+const LAYERS: usize = 8;
+
+fn main() {
+    let _ = graphguard::lemmas::standard_rewrites();
+    println!("Patch impact + incremental re-verification — GPT TP+SP, {LAYERS} layers, 2 ranks");
+    println!();
+    let model_cfg = GptConfig::default();
+    let (gs, gd, ri) = gpt::tp_sp_pair(2, LAYERS, &model_cfg).expect("build L=8 workload");
+    let ops = gs.num_nodes() + gd.num_nodes();
+
+    // A strictly local, semantics-preserving edit: splice an identity in
+    // front of slot 0 of the topologically last G_d node.
+    let last = gd.topo_order().last().expect("nonempty graph");
+    let node = gd.node(last);
+    let src = gd.tensor(node.inputs[0]).name.clone();
+    let tgt = gd.tensor(node.output).name.clone();
+    let patch = GraphPatch::new("late_identity")
+        .add("late_id", Op::Identity, vec![src])
+        .rewire(tgt, 0, "late_id");
+    let patched = patch.apply(&gd).expect("identity splice applies");
+    // the splice shifts TensorIds, so the full-verification baseline needs
+    // R_i re-keyed by name — exactly what reverify does internally
+    let ri_patched = remap_relation(&ri, &gd, &patched).expect("relation survives the splice");
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    fn record(
+        name: &'static str,
+        ops: usize,
+        wall: std::time::Duration,
+        out: &graphguard::infer::InferOutput,
+        records: &mut Vec<BenchRecord>,
+    ) {
+        println!(
+            "{name:>20}: {:>9}  hits {:>3}  misses {:>3}",
+            fmt_dur(wall),
+            out.cache_hits,
+            out.cache_misses
+        );
+        records.push(
+            BenchRecord::new(name, ops, wall, out.stats.total_applications())
+                .with_cache(out.cache_hits, out.cache_misses),
+        );
+    }
+
+    // 1. the non-incremental baseline: full verification of the patched pair
+    let t0 = Instant::now();
+    let v = Verifier::new().isolated(true).run(&gs, &patched, &ri_patched);
+    let wall_full = t0.elapsed();
+    let Verdict::Verified(full) = v else {
+        panic!("patch_full_cold: expected verified, got {}", v.tag());
+    };
+    record("patch_full_cold", ops, wall_full, &full, &mut records);
+
+    // 2. the run that "already happened": original pair into a fresh cache
+    let cache = Arc::new(FingerprintCache::new());
+    let cached = InferConfig { cache: Some(Arc::clone(&cache)), ..InferConfig::default() };
+    let warm_verifier = Verifier::with_config(cached).isolated(true);
+    let t0 = Instant::now();
+    let v = warm_verifier.run(&gs, &gd, &ri);
+    let wall_warmup = t0.elapsed();
+    let Verdict::Verified(warmup) = v else {
+        panic!("patch_warmup: expected verified, got {}", v.tag());
+    };
+    record("patch_warmup", ops, wall_warmup, &warmup, &mut records);
+
+    // 3. the incremental path: reverify against the warm cache
+    let t0 = Instant::now();
+    let rv = warm_verifier.reverify(&gs, &gd, &ri, &patch).expect("reverify runs");
+    let wall_rv = t0.elapsed();
+    let Verdict::Verified(inc) = &rv.verdict else {
+        panic!("patch_reverify_warm: expected verified, got {}", rv.verdict.tag());
+    };
+    record("patch_reverify_warm", ops, wall_rv, inc, &mut records);
+
+    // ---- acceptance gates ----
+    let (clean, total) = (rv.impact.clean(), rv.impact.regions.len());
+    let dirty = rv.impact.dirty_cone();
+    assert!(dirty >= 1, "the patched tail must be re-verified");
+    assert!(
+        dirty < total,
+        "impact analysis must prove reuse: dirty cone {dirty} covers all {total} regions"
+    );
+    assert!(
+        clean * LAYERS >= (LAYERS - 1) * total,
+        "single-layer patch proved only {clean}/{total} regions Clean \
+         (acceptance floor is {}/{LAYERS})",
+        LAYERS - 1
+    );
+    assert!(
+        inc.cache_hits as usize >= clean,
+        "Clean regions must replay: {} hits < {clean} clean regions",
+        inc.cache_hits
+    );
+    let a = full.relation.to_json(&gs, &patched).to_string_pretty();
+    let b = inc.relation.to_json(&gs, &rv.patched).to_string_pretty();
+    assert!(a == b, "incremental certificate diverged from full verification");
+
+    println!(
+        "\nimpact: {clean}/{total} regions clean ({dirty} dirty), \
+         acceptance floor {}/{LAYERS}; certificates byte-identical",
+        LAYERS - 1
+    );
+
+    let path = write_bench_json("patch", &records).expect("write BENCH_patch.json");
+    println!("wrote {}", path.display());
+}

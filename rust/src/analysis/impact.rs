@@ -1,0 +1,678 @@
+//! Patch impact analysis — static dirty-cone diffing for incremental
+//! re-verification.
+//!
+//! Given the old implementation graph, the patched one, and the initial
+//! relation `R_i`, this pass runs **before any e-graph work** and decides,
+//! per `G_s` region, whether the patch can possibly change what the
+//! saturation walk sees there:
+//!
+//! * [`RegionClass::Clean`] — *proven* untouched: no tensor in the region's
+//!   explorable `G_d` cone was edited, and the cone's structure is
+//!   identical in both graphs. The region's fingerprint key
+//!   ([`crate::cache::fingerprint_region`]) is therefore byte-equal to the
+//!   old run's, so its cached certificate is reusable — soundly, not
+//!   fingerprint-lucky (see `EXPERIMENTS.md §Incremental re-verification`
+//!   for the induction).
+//! * [`RegionClass::BoundaryShifted`] — the only edits reaching the region
+//!   are `Send`/`Recv` channel retags with identical wiring. Shapes and
+//!   dataflow are unchanged, but channel identity is part of `R_i`'s
+//!   semantics, so the region must re-verify.
+//! * [`RegionClass::Dirty`] — an operator, wiring, or shape edit reaches
+//!   the region's cone; it must re-saturate.
+//!
+//! The per-region cone is the same forward closure the fingerprint
+//! serializes — "add a `G_d` node once all of its inputs are related" —
+//! seeded from the region's initial mappings plus (recursively) the cones
+//! of its producer regions, which over-approximates every leaf the walk
+//! can ever hand the region. Findings ride the [`LintFinding`] surface so
+//! patches that *silently* change `R_i` semantics (channel retags,
+//! quarantine crossings, edits under initial-mapping leaves) surface even
+//! when every verdict stays green.
+
+use crate::analysis::report::{LintFinding, LintReport};
+use crate::egraph::CleanCand;
+use crate::ir::{Graph, NodeId, Op, TensorId};
+use crate::relation::Relation;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::fmt;
+
+/// What the patch can do to a region's verification inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RegionClass {
+    /// No edit reaches the region's cone; certificate reuse is proven sound.
+    Clean,
+    /// Only consistent channel retags reach the cone — structure unchanged,
+    /// `R_i` channel semantics shifted; re-verify.
+    BoundaryShifted,
+    /// A structural/shape edit reaches the cone; re-saturate.
+    Dirty,
+}
+
+impl RegionClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            RegionClass::Clean => "clean",
+            RegionClass::BoundaryShifted => "boundary_shifted",
+            RegionClass::Dirty => "dirty",
+        }
+    }
+}
+
+impl fmt::Display for RegionClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Classification of one `G_s` region (= one `G_s` operator).
+#[derive(Debug, Clone)]
+pub struct RegionImpact {
+    pub node: NodeId,
+    pub node_name: String,
+    pub class: RegionClass,
+}
+
+/// The full pre-saturation impact report.
+#[derive(Debug, Clone, Default)]
+pub struct ImpactReport {
+    /// One entry per `G_s` node, in topological (walk) order.
+    pub regions: Vec<RegionImpact>,
+    /// Names of directly edited `G_d` tensors (sorted).
+    pub changed: Vec<String>,
+    /// Forward taint cone over the *patched* graph: every `G_d` tensor a
+    /// direct edit can influence (sorted ids, patched-graph numbering).
+    pub tainted: Vec<TensorId>,
+    /// `LintFinding`-style diagnostics (`IMPACT_*` codes), normalized.
+    pub findings: Vec<LintFinding>,
+}
+
+impl ImpactReport {
+    pub fn count(&self, class: RegionClass) -> usize {
+        self.regions.iter().filter(|r| r.class == class).count()
+    }
+
+    pub fn clean(&self) -> usize {
+        self.count(RegionClass::Clean)
+    }
+
+    /// Regions that must re-verify (`Dirty` + `BoundaryShifted`).
+    pub fn dirty_cone(&self) -> usize {
+        self.regions.len() - self.clean()
+    }
+
+    pub fn class_of(&self, node: NodeId) -> Option<RegionClass> {
+        self.regions.iter().find(|r| r.node == node).map(|r| r.class)
+    }
+
+    pub fn is_tainted(&self, t: TensorId) -> bool {
+        self.tainted.binary_search(&t).is_ok()
+    }
+
+    /// Deterministic JSON (sorted regions/findings, no timings).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("regions", Json::num(self.regions.len() as f64)),
+            ("clean", Json::num(self.clean() as f64)),
+            ("dirty", Json::num(self.count(RegionClass::Dirty) as f64)),
+            (
+                "boundary_shifted",
+                Json::num(self.count(RegionClass::BoundaryShifted) as f64),
+            ),
+            (
+                "changed",
+                Json::arr(self.changed.iter().map(|c| Json::str(c.clone())).collect()),
+            ),
+            (
+                "classes",
+                Json::arr(
+                    self.regions
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("node", Json::str(r.node_name.clone())),
+                                ("class", Json::str(r.class.name())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(LintFinding::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// One-paragraph plain-text summary (CLI stderr).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "impact: {} region(s) — {} clean, {} dirty, {} boundary-shifted; \
+             {} G_d tensor(s) edited",
+            self.regions.len(),
+            self.clean(),
+            self.count(RegionClass::Dirty),
+            self.count(RegionClass::BoundaryShifted),
+            self.changed.len(),
+        );
+        for r in self.regions.iter().filter(|r| r.class != RegionClass::Clean) {
+            let _ = writeln!(out, "  {} region at '{}'", r.class, r.node_name);
+        }
+        for f in &self.findings {
+            let _ = writeln!(out, "  [{}] at '{}': {}", f.code, f.node, f.detail);
+        }
+        out
+    }
+}
+
+/// Taint level a direct edit (or its forward propagation) carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Taint {
+    None,
+    Retag,
+    Hard,
+}
+
+/// Re-key a relation from the old graph's `TensorId`s onto the patched
+/// graph's, matching leaves by tensor *name* (patches keep names stable;
+/// splices shift ids). A leaf whose tensor the patch deleted is a hard
+/// error — the caller must supply an updated `R_i` in that case.
+pub fn remap_relation(ri: &Relation, old_gd: &Graph, new_gd: &Graph) -> Result<Relation> {
+    use crate::expr::{Expr, Side, TensorRef};
+    let mut out = Relation::new();
+    for t in ri.tensors() {
+        for cand in ri.get(t) {
+            // `substitute` keeps unmatched leaves untouched, which would
+            // silently alias an old id onto an unrelated new tensor — so
+            // check every leaf resolves *before* substituting.
+            for l in &cand.leaves {
+                let name = &old_gd.tensor(l.id).name;
+                if l.side == Side::D && new_gd.tensor_by_name(name).is_none() {
+                    return Err(anyhow!(
+                        "R_i mapping for G_s tensor #{t} references G_d tensor '{name}', \
+                         which the patch removed or renamed — supply an updated relation",
+                    ));
+                }
+            }
+            let expr = cand.expr.substitute(&|l: TensorRef| {
+                if l.side != Side::D {
+                    return None;
+                }
+                let name = &old_gd.tensor(l.id).name;
+                new_gd.tensor_by_name(name).map(|id| Expr::Leaf(TensorRef::d(id)))
+            });
+            let leaves = expr.leaves();
+            out.insert(t, CleanCand { expr, cost: cand.cost, leaves });
+        }
+    }
+    Ok(out)
+}
+
+/// Run the static impact analysis. `ri_old` is keyed by `old_gd` ids,
+/// `ri_new` by `new_gd` ids (see [`remap_relation`]); `quarantined` is the
+/// channel quarantine set the verifier will run with.
+pub fn analyze_patch(
+    gs: &Graph,
+    old_gd: &Graph,
+    new_gd: &Graph,
+    ri_old: &Relation,
+    ri_new: &Relation,
+    quarantined: &[usize],
+) -> ImpactReport {
+    let q: FxHashSet<usize> = quarantined.iter().copied().collect();
+    let mut findings: Vec<LintFinding> = Vec::new();
+
+    // ---- direct edits: name-aligned old/new tensor diff ----
+    let mut direct: Vec<Taint> = vec![Taint::None; new_gd.num_tensors()];
+    let mut changed: Vec<String> = Vec::new();
+    for tid in 0..new_gd.num_tensors() as TensorId {
+        let t = new_gd.tensor(tid);
+        let taint = match old_gd.tensor_by_name(&t.name) {
+            None => Taint::Hard, // spliced-in tensor
+            Some(old_id) => {
+                let ot = old_gd.tensor(old_id);
+                if ot.shape != t.shape || ot.dtype != t.dtype {
+                    Taint::Hard
+                } else {
+                    diff_producer(old_gd, old_id, new_gd, tid, &q, &mut findings)
+                }
+            }
+        };
+        if taint != Taint::None {
+            changed.push(t.name.clone());
+        }
+        direct[tid as usize] = taint;
+    }
+    changed.sort_unstable();
+
+    // ---- forward taint closure over the patched graph ----
+    // Node outputs inherit the strongest taint among their inputs; a single
+    // topological pass is the fixpoint.
+    let mut taint = direct;
+    for nid in new_gd.topo_order() {
+        let node = new_gd.node(nid);
+        let flow = node
+            .inputs
+            .iter()
+            .map(|&t| taint[t as usize])
+            .max()
+            .unwrap_or(Taint::None);
+        let slot = &mut taint[node.output as usize];
+        *slot = (*slot).max(flow);
+    }
+    let tainted: Vec<TensorId> = (0..new_gd.num_tensors() as TensorId)
+        .filter(|&t| taint[t as usize] != Taint::None)
+        .collect();
+
+    // ---- R_i semantics: edits directly under initial-mapping leaves ----
+    for t in ri_new.tensors() {
+        for cand in ri_new.get(t) {
+            for l in &cand.leaves {
+                if taint[l.id as usize] != Taint::None {
+                    findings.push(LintFinding::new(
+                        "IMPACT_RELATION_LEAF",
+                        new_gd.tensor(l.id).name.clone(),
+                        format!(
+                            "initial mapping for G_s tensor '{}' rests on an edited \
+                             G_d tensor — R_i semantics changed by the patch",
+                            gs.tensor(t).name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- per-region cones and classification ----
+    let mut cones_new: Vec<FxHashSet<TensorId>> = Vec::with_capacity(gs.num_nodes());
+    let mut cones_old: Vec<FxHashSet<TensorId>> = Vec::with_capacity(gs.num_nodes());
+    let mut regions: Vec<RegionImpact> = Vec::with_capacity(gs.num_nodes());
+    for nid in gs.topo_order() {
+        let node = gs.node(nid);
+        let seed = |ri: &Relation, cones: &[FxHashSet<TensorId>]| -> FxHashSet<TensorId> {
+            let mut related: FxHashSet<TensorId> = FxHashSet::default();
+            for &t in &node.inputs {
+                for cand in ri.get(t) {
+                    related.extend(cand.leaves.iter().map(|l| l.id));
+                }
+                if let Some(p) = gs.tensor(t).producer {
+                    related.extend(cones[p as usize].iter().copied());
+                }
+            }
+            related
+        };
+        let mut cone_new = seed(ri_new, &cones_new);
+        close_forward(new_gd, &mut cone_new);
+        let mut cone_old = seed(ri_old, &cones_old);
+        close_forward(old_gd, &mut cone_old);
+
+        let hit = cone_new.iter().map(|&t| taint[t as usize]).max().unwrap_or(Taint::None);
+        let class = match hit {
+            Taint::Hard => RegionClass::Dirty,
+            Taint::Retag => RegionClass::BoundaryShifted,
+            Taint::None => {
+                // No edited tensor is reachable — but a *removed* node can
+                // still change what the old cone serialized. Prove key
+                // equality by comparing the cones' structure.
+                if cone_signature(new_gd, &cone_new) == cone_signature(old_gd, &cone_old) {
+                    RegionClass::Clean
+                } else {
+                    findings.push(LintFinding::new(
+                        "IMPACT_CONE_SHIFT",
+                        gs.tensor(node.output).name.clone(),
+                        "region touches no edited tensor, but its explorable G_d cone \
+                         changed structure (node removed/reordered) — re-verifying"
+                            .to_string(),
+                    ));
+                    RegionClass::Dirty
+                }
+            }
+        };
+        regions.push(RegionImpact {
+            node: nid,
+            node_name: gs.tensor(node.output).name.clone(),
+            class,
+        });
+        cones_new.push(cone_new);
+        cones_old.push(cone_old);
+    }
+
+    let mut lr = LintReport { findings };
+    lr.normalize();
+    ImpactReport { regions, changed, tainted, findings: lr.findings }
+}
+
+/// Classify one name-aligned produced tensor: does its producer differ, and
+/// if so, is the difference a pure channel retag?
+fn diff_producer(
+    old_gd: &Graph,
+    old_id: TensorId,
+    new_gd: &Graph,
+    new_id: TensorId,
+    quarantined: &FxHashSet<usize>,
+    findings: &mut Vec<LintFinding>,
+) -> Taint {
+    let (old_p, new_p) = (old_gd.producer(old_id), new_gd.producer(new_id));
+    let (old_node, new_node) = match (old_p, new_p) {
+        (None, None) => return Taint::None, // both graph inputs
+        (Some(o), Some(n)) => (o, n),
+        _ => return Taint::Hard, // input became produced or vice versa
+    };
+    let same_wiring = old_node.inputs.len() == new_node.inputs.len()
+        && old_node.inputs.iter().zip(&new_node.inputs).all(|(&o, &n)| {
+            old_gd.tensor(o).name == new_gd.tensor(n).name
+        });
+    if same_wiring && old_node.op == new_node.op {
+        return Taint::None;
+    }
+    if same_wiring {
+        if let Some((oc, nc)) = retag_pair(&old_node.op, &new_node.op) {
+            let name = &new_gd.tensor(new_id).name;
+            findings.push(LintFinding::new(
+                "IMPACT_RETAG",
+                name.clone(),
+                format!(
+                    "Send/Recv channel retagged {oc} -> {nc} with unchanged wiring — \
+                     R_i channel semantics silently shifted"
+                ),
+            ));
+            if quarantined.contains(&oc) != quarantined.contains(&nc) {
+                findings.push(LintFinding::new(
+                    "IMPACT_QUARANTINE_CROSS",
+                    name.clone(),
+                    format!(
+                        "retag {oc} -> {nc} crosses the quarantined-channel set — \
+                         the region's verification semantics change, not just its tag"
+                    ),
+                ));
+                return Taint::Hard;
+            }
+            return Taint::Retag;
+        }
+    }
+    Taint::Hard
+}
+
+/// `Some((old_chan, new_chan))` when the two ops differ only by channel.
+fn retag_pair(old: &Op, new: &Op) -> Option<(usize, usize)> {
+    match (old, new) {
+        (Op::Send { chan: oc }, Op::Send { chan: nc })
+        | (Op::Recv { chan: oc }, Op::Recv { chan: nc })
+            if oc != nc =>
+        {
+            Some((*oc, *nc))
+        }
+        _ => None,
+    }
+}
+
+/// Forward closure, identical to the fingerprint's: add a node's output
+/// once all of its inputs are in the set (single topological pass).
+fn close_forward(gd: &Graph, related: &mut FxHashSet<TensorId>) {
+    for nid in gd.topo_order() {
+        let node = gd.node(nid);
+        if node.inputs.iter().all(|t| related.contains(t)) {
+            related.insert(node.output);
+        }
+    }
+}
+
+/// Structural signature of a cone, in the graph's topological order —
+/// exactly the facts `fingerprint_region` serializes for the `gd[…]`
+/// section (ops, wiring, shapes), keyed by stable names instead of ids.
+fn cone_signature(gd: &Graph, cone: &FxHashSet<TensorId>) -> Vec<String> {
+    let mut sig: Vec<String> = cone
+        .iter()
+        .filter(|t| gd.tensor(**t).producer.is_none())
+        .map(|&t| {
+            let ten = gd.tensor(t);
+            format!("leaf {}:{:?}", ten.name, ten.shape)
+        })
+        .collect();
+    sig.sort_unstable();
+    for nid in gd.topo_order() {
+        let node = gd.node(nid);
+        if !cone.contains(&node.output) || gd.tensor(node.output).producer.is_none() {
+            continue;
+        }
+        if !node.inputs.iter().all(|t| cone.contains(t)) {
+            continue;
+        }
+        let ins: Vec<&str> =
+            node.inputs.iter().map(|&t| gd.tensor(t).name.as_str()).collect();
+        sig.push(format!(
+            "{:?}|{}>{}:{:?}",
+            node.op,
+            ins.join(","),
+            gd.tensor(node.output).name,
+            gd.shape(node.output)
+        ));
+    }
+    sig
+}
+
+/// ShardFlow over the dirty cone only: merge the old report's findings for
+/// nodes outside the taint cone (provably unchanged) with the fresh
+/// findings inside it, and *assert* the two agree outside the cone. A
+/// mismatch means the impact analysis under-approximated — surfaced as an
+/// error, never silently absorbed (the fuzz triage gate keeps
+/// `lint_false_alarms == 0` on clean patched pairs).
+pub fn relint(
+    old_full: &LintReport,
+    new_full: &LintReport,
+    old_gd: &Graph,
+    new_gd: &Graph,
+    report: &ImpactReport,
+) -> Result<LintReport> {
+    // A finding is "inside the cone" if its anchor node resolves to a
+    // tainted tensor; unresolvable anchors are conservatively inside.
+    let outside = |gd: &Graph, f: &LintFinding| -> bool {
+        match gd.tensor_by_name(&f.node) {
+            Some(t) if gd.tensor(t).producer.is_some() => {
+                // compare via the patched graph's taint cone, matching by name
+                match new_gd.tensor_by_name(&f.node) {
+                    Some(nt) => !report.is_tainted(nt),
+                    None => false,
+                }
+            }
+            _ => false,
+        }
+    };
+    let old_outside: Vec<&LintFinding> =
+        old_full.findings.iter().filter(|f| outside(old_gd, f)).collect();
+    let new_outside: Vec<&LintFinding> =
+        new_full.findings.iter().filter(|f| outside(new_gd, f)).collect();
+    if old_outside != new_outside {
+        return Err(anyhow!(
+            "impact invariant violated: lint findings outside the dirty cone \
+             changed ({} old vs {} new) — the static cone under-approximated",
+            old_outside.len(),
+            new_outside.len()
+        ));
+    }
+    let mut merged = LintReport {
+        findings: old_outside
+            .into_iter()
+            .cloned()
+            .chain(new_full.findings.iter().filter(|f| !outside(new_gd, f)).cloned())
+            .collect(),
+    };
+    merged.normalize();
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphPatch;
+    use crate::util::json::Json;
+
+    /// fig1 running example: C = A·B (TP over 2 ranks), F = C - E.
+    fn fig1() -> (Graph, Graph, Relation) {
+        let mut gs = Graph::new("fig1_gs");
+        let a = gs.input("A", vec![4, 6]);
+        let b = gs.input("B", vec![6, 4]);
+        let e = gs.input("E", vec![4, 4]);
+        let c = gs.matmul("C", a, b);
+        let f = gs.sub2("F", c, e);
+        gs.mark_output(f);
+
+        let mut gd = Graph::new("fig1_gd");
+        let a1 = gd.input("A_1", vec![4, 3]);
+        let a2 = gd.input("A_2", vec![4, 3]);
+        let b1 = gd.input("B_1", vec![3, 4]);
+        let b2 = gd.input("B_2", vec![3, 4]);
+        let e1 = gd.input("E_1", vec![2, 4]);
+        let e2 = gd.input("E_2", vec![2, 4]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        let c2 = gd.matmul("C_2", a2, b2);
+        let d1 = gd.reduce_scatter("D_1", vec![c1, c2], 0, 0);
+        let d2 = gd.reduce_scatter("D_2", vec![c1, c2], 0, 1);
+        let f1 = gd.sub2("F_1", d1, e1);
+        let f2 = gd.sub2("F_2", d2, e2);
+        let f = gd.all_gather("F_full", vec![f1, f2], 0);
+        gd.mark_output(f);
+
+        let ri = Relation::from_json(
+            &Json::parse(
+                r#"{
+                "A": ["concat(A_1, A_2; dim=1)"],
+                "B": ["concat(B_1, B_2; dim=0)"],
+                "E": ["concat(E_1, E_2; dim=0)"]
+            }"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        (gs, gd, ri)
+    }
+
+    fn classes(report: &ImpactReport) -> Vec<(String, RegionClass)> {
+        report.regions.iter().map(|r| (r.node_name.clone(), r.class)).collect()
+    }
+
+    #[test]
+    fn unpatched_pair_is_all_clean() {
+        let (gs, gd, ri) = fig1();
+        let report = analyze_patch(&gs, &gd, &gd, &ri, &ri, &[]);
+        assert_eq!(report.regions.len(), gs.num_nodes());
+        assert!(report.regions.iter().all(|r| r.class == RegionClass::Clean), "{report:?}");
+        assert!(report.changed.is_empty());
+        assert!(report.findings.is_empty());
+    }
+
+    #[test]
+    fn late_edit_leaves_upstream_clean() {
+        let (gs, gd, ri) = fig1();
+        // edit F_1 (sub -> add): region C never reaches it, region F does
+        let patched = GraphPatch::new("bug").replace("F_1", Op::Add).apply(&gd).unwrap();
+        let ri_new = remap_relation(&ri, &gd, &patched).unwrap();
+        let report = analyze_patch(&gs, &gd, &patched, &ri, &ri_new, &[]);
+        let by_name: FxHashMap<String, RegionClass> = classes(&report).into_iter().collect();
+        assert_eq!(by_name["C"], RegionClass::Clean, "{report:?}");
+        assert_eq!(by_name["F"], RegionClass::Dirty, "{report:?}");
+        assert_eq!(report.changed, vec!["F_1".to_string()]);
+    }
+
+    #[test]
+    fn early_edit_dirties_the_forward_cone() {
+        let (gs, gd, ri) = fig1();
+        let patched =
+            GraphPatch::new("bug").rewire("C_2", 0, "A_1").apply(&gd).unwrap();
+        let ri_new = remap_relation(&ri, &gd, &patched).unwrap();
+        let report = analyze_patch(&gs, &gd, &patched, &ri, &ri_new, &[]);
+        // C_2 feeds both regions' cones: everything re-verifies
+        assert!(report.regions.iter().all(|r| r.class == RegionClass::Dirty), "{report:?}");
+    }
+
+    #[test]
+    fn consistent_retag_is_boundary_shifted() {
+        let mut gs = Graph::new("gs");
+        let x = gs.input("X", vec![4]);
+        let y = gs.op("Y", Op::Neg, vec![x]);
+        gs.mark_output(y);
+        let mut gd = Graph::new("gd");
+        let xd = gd.input("X_d", vec![4]);
+        let s = gd.op("snd", Op::Send { chan: 1 }, vec![xd]);
+        let r = gd.op("rcv", Op::Recv { chan: 1 }, vec![s]);
+        let yd = gd.op("Y_d", Op::Neg, vec![r]);
+        gd.mark_output(yd);
+        let ri = Relation::from_json(
+            &Json::parse(r#"{"X": ["X_d"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let patched =
+            GraphPatch::new("retag").retag("snd", 5).retag("rcv", 5).apply(&gd).unwrap();
+        let ri_new = remap_relation(&ri, &gd, &patched).unwrap();
+        let report = analyze_patch(&gs, &gd, &patched, &ri, &ri_new, &[]);
+        assert!(
+            report.regions.iter().all(|r| r.class == RegionClass::BoundaryShifted),
+            "{report:?}"
+        );
+        assert!(report.findings.iter().any(|f| f.code == "IMPACT_RETAG"), "{report:?}");
+        // the same retag across the quarantine set escalates to Dirty
+        let report_q = analyze_patch(&gs, &gd, &patched, &ri, &ri_new, &[5]);
+        assert!(
+            report_q.regions.iter().all(|r| r.class == RegionClass::Dirty),
+            "{report_q:?}"
+        );
+        assert!(
+            report_q.findings.iter().any(|f| f.code == "IMPACT_QUARANTINE_CROSS"),
+            "{report_q:?}"
+        );
+    }
+
+    #[test]
+    fn dead_node_removal_is_a_cone_shift_not_a_silent_clean() {
+        let mut gs = Graph::new("gs");
+        let x = gs.input("X", vec![4]);
+        let y = gs.op("Y", Op::Neg, vec![x]);
+        gs.mark_output(y);
+        let mut gd = Graph::new("gd");
+        let xd = gd.input("X_d", vec![4]);
+        // dead: consumes X_d but feeds nothing
+        let dead = gd.op("dead", Op::Exp, vec![xd]);
+        let _ = dead;
+        let yd = gd.op("Y_d", Op::Neg, vec![xd]);
+        gd.mark_output(yd);
+        let ri = Relation::from_json(
+            &Json::parse(r#"{"X": ["X_d"]}"#).unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        let patched = GraphPatch::new("rm").remove("dead", "X_d").apply(&gd).unwrap();
+        let ri_new = remap_relation(&ri, &gd, &patched).unwrap();
+        let report = analyze_patch(&gs, &gd, &patched, &ri, &ri_new, &[]);
+        // no reachable tensor changed, but the old cone serialized 'dead':
+        // the key differs, so Clean would be a lie
+        assert!(
+            report.regions.iter().all(|r| r.class == RegionClass::Dirty),
+            "{report:?}"
+        );
+        assert!(report.findings.iter().any(|f| f.code == "IMPACT_CONE_SHIFT"), "{report:?}");
+    }
+
+    #[test]
+    fn remap_relation_rejects_deleted_leaves() {
+        let (gs, gd, ri) = fig1();
+        let _ = gs;
+        // build a gd' that renames E_1 away
+        let mut gd2 = Graph::new("fig1_gd");
+        for &i in &gd.inputs {
+            let t = gd.tensor(i);
+            let name = if t.name == "E_1" { "E_1_renamed".to_string() } else { t.name.clone() };
+            gd2.input_typed(&name, t.shape.clone(), t.dtype);
+        }
+        let e = remap_relation(&ri, &gd, &gd2).unwrap_err();
+        assert!(format!("{e:#}").contains("E_1"), "{e:#}");
+    }
+}

@@ -51,12 +51,20 @@
 //! | `chan_duplicate` | one channel id used by two sends / two recvs |
 //! | `buffer_epoch_gap` | non-contiguous buffer-slot epoch sequence |
 //! | `stage_cycle` | stage-graph cycle (communication deadlock) |
+//!
+//! The patch impact analysis ([`impact`]) reports on the same surface with
+//! `IMPACT_*` codes (`IMPACT_RETAG`, `IMPACT_QUARANTINE_CROSS`,
+//! `IMPACT_RELATION_LEAF`, `IMPACT_CONE_SHIFT`) — diagnostics about what a
+//! [`crate::ir::GraphPatch`] does to verification semantics, not about the
+//! graph itself.
 
 pub mod channels;
+pub mod impact;
 pub mod placement;
 pub mod report;
 pub mod transfer;
 
+pub use impact::{analyze_patch, remap_relation, ImpactReport, RegionClass, RegionImpact};
 pub use placement::{Fact, ShardOf};
 pub use report::{LintFinding, LintReport};
 

@@ -15,12 +15,16 @@
 //! epochs, double-buffer slot swaps, interleaved virtual-stage
 //! misbinding).
 //!
-//! Mutations are applied by *rebuilding* the graph through [`Graph::add`],
-//! so output shapes are re-inferred and a mutant that no longer
-//! type-checks is reported as stillborn (`apply_mutation` returns `Err`)
-//! rather than silently kept.
+//! Mutations are applied as single-node [`GraphPatch`]es — the same
+//! splice/validation path `graphguard reverify` runs, so every fuzz
+//! mutant also exercises the incremental-verification machinery for
+//! free. Output shapes are re-inferred during the patch rebuild and a
+//! mutant that no longer type-checks is reported as stillborn
+//! (`apply_mutation` returns `Err`) rather than silently kept;
+//! `patched_matches_direct_rebuild` pins the patch route byte-identical
+//! to a direct [`Graph::rebuild_with`].
 
-use crate::ir::{FBits, Graph, Node, NodeId, Op, OpTag, TensorId};
+use crate::ir::{FBits, Graph, GraphPatch, Node, NodeId, Op, OpTag, TensorId};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -523,25 +527,31 @@ pub fn applicable_sites(g: &Graph) -> Vec<Site> {
     out
 }
 
-/// Apply one mutation site; `Err` means the mutant is stillborn (the
-/// rewritten graph no longer type-checks) or the site is inapplicable.
-/// Mutants are rebuilt through [`Graph::rebuild_with`], which owns the
-/// `TensorId`-stability contract the oracle depends on (it reuses the clean
-/// graph's input environments and its `TensorId`-keyed relation `R_i`
-/// against the mutant).
-pub fn apply_mutation(g: &Graph, site: Site) -> Result<(Graph, Mutation)> {
+/// Express one mutation site as a single-node [`GraphPatch`]: every
+/// operator replaces exactly one node's `(op, inputs)`, which is one
+/// `replace` op with an explicit input list. Rewire targets are always
+/// *earlier* tensors (the operators guarantee `id < node.output`), so the
+/// patch's non-splice fast path — `rebuild_with` underneath — preserves
+/// every `TensorId`, which is the stability contract the oracle depends
+/// on (it reuses the clean graph's input environments and its
+/// `TensorId`-keyed relation `R_i` against the mutant).
+pub fn mutation_patch(g: &Graph, site: Site) -> Result<GraphPatch> {
     let target = g.node(site.node);
-    mutate_node(g, target, site.kind, &target.inputs).ok_or_else(|| {
+    let (op, ins) = mutate_node(g, target, site.kind, &target.inputs).ok_or_else(|| {
         anyhow!("mutation {} not applicable to '{}'", site.kind.name(), target.name)
     })?;
-    let mutated = g.rebuild_with(|nid, node, mapped| {
-        if nid == site.node {
-            if let Some(repl) = mutate_node(g, node, site.kind, mapped) {
-                return repl;
-            }
-        }
-        (node.op.clone(), mapped.to_vec())
-    })?;
+    let input_names = ins.iter().map(|&t| g.tensor(t).name.clone()).collect();
+    Ok(GraphPatch::new(format!("mut_{}", site.kind.name()))
+        .replace_wired(&g.tensor(target.output).name, op, input_names))
+}
+
+/// Apply one mutation site; `Err` means the mutant is stillborn (the
+/// rewritten graph no longer type-checks) or the site is inapplicable.
+/// Mutants are built by applying [`mutation_patch`], so output shapes are
+/// re-inferred by the patch's strict validation.
+pub fn apply_mutation(g: &Graph, site: Site) -> Result<(Graph, Mutation)> {
+    let target = g.node(site.node);
+    let mutated = mutation_patch(g, site)?.apply(g)?;
     let mutation = Mutation {
         kind: site.kind,
         node_name: target.name.clone(),
@@ -953,6 +963,46 @@ mod tests {
         assert_eq!(muta.inputs[0], clean.inputs[0], "weights operand untouched");
         assert_eq!(muta.inputs[2], muta.inputs[1], "last expert slot now duplicates the first");
         assert_ne!(clean.inputs[2], clean.inputs[1]);
+    }
+
+    #[test]
+    fn patched_matches_direct_rebuild() {
+        // The GraphPatch route must produce byte-identical mutants to a
+        // direct rebuild_with closure (the pre-patch implementation), for
+        // every applicable site across every flavor family.
+        let specs =
+            [sp_spec(), pp_spec(), fsdp_spec(), moe_spec(), pp_sched_spec(), pp_intlv_spec()];
+        let mut sites_checked = 0usize;
+        for spec in specs {
+            let (_gs, gd, _ri) = build_pair(&spec).unwrap();
+            for site in applicable_sites(&gd) {
+                let direct = gd.rebuild_with(|nid, node, mapped| {
+                    if nid == site.node {
+                        if let Some(repl) = mutate_node(&gd, node, site.kind, mapped) {
+                            return repl;
+                        }
+                    }
+                    (node.op.clone(), mapped.to_vec())
+                });
+                match (apply_mutation(&gd, site), direct) {
+                    (Ok((via_patch, _)), Ok(d)) => {
+                        assert_eq!(
+                            crate::ir::json_io::to_json(&via_patch).to_string(),
+                            crate::ir::json_io::to_json(&d).to_string(),
+                            "{site:?} diverges between patch and direct rebuild"
+                        );
+                        sites_checked += 1;
+                    }
+                    (Err(_), Err(_)) => {} // stillborn either way
+                    (p, d) => panic!(
+                        "{site:?}: patch route ok={} but direct rebuild ok={}",
+                        p.is_ok(),
+                        d.is_ok()
+                    ),
+                }
+            }
+        }
+        assert!(sites_checked > 20, "differential coverage too thin: {sites_checked}");
     }
 
     #[test]

@@ -62,7 +62,7 @@ pub fn to_json(g: &Graph) -> Json {
     ])
 }
 
-fn op_attrs_json(op: &Op) -> Json {
+pub(crate) fn op_attrs_json(op: &Op) -> Json {
     let mut pairs: Vec<(&str, Json)> = Vec::new();
     match op {
         Op::Slice { dim, start, end } => {
@@ -160,7 +160,7 @@ pub fn from_json(j: &Json) -> Result<Graph> {
     Ok(g)
 }
 
-fn op_from_json(name: &str, attrs: &Json) -> Result<Op> {
+pub(crate) fn op_from_json(name: &str, attrs: &Json) -> Result<Op> {
     let dim = || attrs.get("dim").as_usize().ok_or_else(|| anyhow!("op '{name}' needs 'dim'"));
     let int = |k: &str| attrs.get(k).as_i64().ok_or_else(|| anyhow!("op '{name}' needs '{k}'"));
     let flt = |k: &str| attrs.get(k).as_f64().ok_or_else(|| anyhow!("op '{name}' needs '{k}'"));

@@ -10,6 +10,8 @@ pub mod autodiff;
 pub mod graph;
 pub mod json_io;
 pub mod ops;
+pub mod patch;
 
 pub use graph::{DType, Graph, Node, NodeId, Tensor, TensorId};
 pub use ops::{FBits, Op, OpTag};
+pub use patch::{GraphPatch, PatchOp};

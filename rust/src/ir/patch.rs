@@ -1,0 +1,773 @@
+//! Serializable graph edits — the `GraphPatch` (modeled on tract's
+//! `ModelPatch`): a reviewable, replayable description of how a deployed
+//! implementation graph was edited, applied via [`GraphPatch::apply`] to
+//! produce the patched [`Graph`] without rebuilding it from scratch.
+//!
+//! Patches address nodes by their **output tensor name** (unique by
+//! construction, and the name `json_io` serializes nodes under), so a patch
+//! file survives graph re-serialization. Five edit kinds compose:
+//!
+//! | kind      | effect                                                    |
+//! |-----------|-----------------------------------------------------------|
+//! | `replace` | swap a node's operator (and optionally its input list)    |
+//! | `rewire`  | point one input slot of a node at another tensor          |
+//! | `retag`   | change the channel of a `Send`/`Recv` node                |
+//! | `add`     | splice in a new node consuming existing (or added) tensors|
+//! | `remove`  | drop a node, shunting its consumers to a replacement      |
+//!
+//! Validation is strict and *total*: dangling tensor references, name/id
+//! collisions, conflicting edits on one node, rewires that would break
+//! topological order, and shape re-inference failures in the spliced
+//! region are all reported as structured errors — never panics — because
+//! patches arrive from untrusted inputs (CLI files, serve requests).
+//!
+//! Patches without `add`/`remove` are applied through
+//! [`Graph::rebuild_with`], which preserves **every** `TensorId` (tensors
+//! are recreated in original id order). The fuzzer's oracle and the patch
+//! impact analysis ([`crate::analysis::impact`]) rely on this: a
+//! replace/rewire/retag patch leaves the old and patched graphs id-aligned.
+//! Splicing patches shift ids after the insertion point; consumers must
+//! re-align by tensor *name* (names persist — see
+//! [`crate::analysis::impact::remap_relation`]).
+
+// Patch JSON arrives from untrusted inputs (CLI files, serve requests):
+// parsing and application must propagate errors, never panic.
+#![deny(clippy::disallowed_methods)]
+
+use super::graph::{Graph, NodeId, TensorId};
+use super::json_io::{op_attrs_json, op_from_json};
+use super::ops::Op;
+use crate::util::json::Json;
+use crate::util::schema;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use rustc_hash::FxHashMap;
+
+/// One edit. Nodes are addressed by output tensor name; `tensor` operands
+/// name any tensor of the (patched) graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PatchOp {
+    /// Swap the operator of `node`; `inputs: None` keeps its input list.
+    Replace { node: String, op: Op, inputs: Option<Vec<String>> },
+    /// Point input slot `slot` of `node` at `tensor`.
+    Rewire { node: String, slot: usize, tensor: String },
+    /// Change the channel of a `Send`/`Recv` node.
+    Retag { node: String, chan: usize },
+    /// Splice in a new node `name = op(inputs…)`. The node is inserted at
+    /// the earliest point where all its inputs exist, so later `rewire`
+    /// ops may target it.
+    Add { name: String, op: Op, inputs: Vec<String> },
+    /// Drop `node`, shunting every consumer of its output (and any graph
+    /// output it fed) to `replacement`, which must be shape-compatible and
+    /// live before the removal site.
+    Remove { node: String, replacement: String },
+}
+
+impl PatchOp {
+    fn kind(&self) -> &'static str {
+        match self {
+            PatchOp::Replace { .. } => "replace",
+            PatchOp::Rewire { .. } => "rewire",
+            PatchOp::Retag { .. } => "retag",
+            PatchOp::Add { .. } => "add",
+            PatchOp::Remove { .. } => "remove",
+        }
+    }
+}
+
+/// A named, serializable sequence of edits. An empty patch is the identity.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GraphPatch {
+    /// Free-form label carried through reports (defaults to `"patch"`).
+    pub name: String,
+    pub ops: Vec<PatchOp>,
+}
+
+impl GraphPatch {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphPatch { name: name.into(), ops: Vec::new() }
+    }
+
+    // ---- builders (the fuzzer and tests construct patches in code) ----
+
+    pub fn replace(mut self, node: impl Into<String>, op: Op) -> Self {
+        self.ops.push(PatchOp::Replace { node: node.into(), op, inputs: None });
+        self
+    }
+
+    /// Replace both the operator and the input list of `node` in one op —
+    /// exactly the shape of a fuzz mutation.
+    pub fn replace_wired(
+        mut self,
+        node: impl Into<String>,
+        op: Op,
+        inputs: Vec<String>,
+    ) -> Self {
+        self.ops.push(PatchOp::Replace { node: node.into(), op, inputs: Some(inputs) });
+        self
+    }
+
+    pub fn rewire(
+        mut self,
+        node: impl Into<String>,
+        slot: usize,
+        tensor: impl Into<String>,
+    ) -> Self {
+        self.ops.push(PatchOp::Rewire { node: node.into(), slot, tensor: tensor.into() });
+        self
+    }
+
+    pub fn retag(mut self, node: impl Into<String>, chan: usize) -> Self {
+        self.ops.push(PatchOp::Retag { node: node.into(), chan });
+        self
+    }
+
+    pub fn add(mut self, name: impl Into<String>, op: Op, inputs: Vec<String>) -> Self {
+        self.ops.push(PatchOp::Add { name: name.into(), op, inputs });
+        self
+    }
+
+    pub fn remove(mut self, node: impl Into<String>, replacement: impl Into<String>) -> Self {
+        self.ops.push(PatchOp::Remove { node: node.into(), replacement: replacement.into() });
+        self
+    }
+
+    /// Does this patch add or remove nodes? Splicing patches shift
+    /// `TensorId`s after the insertion point; pure replace/rewire/retag
+    /// patches keep the old and patched graphs id-aligned.
+    pub fn is_splice(&self) -> bool {
+        self.ops.iter().any(|o| matches!(o, PatchOp::Add { .. } | PatchOp::Remove { .. }))
+    }
+
+    // ---- application ----
+
+    /// Apply the patch, returning the patched graph. Every malformed edit
+    /// is a structured error naming the offending op.
+    pub fn apply(&self, g: &Graph) -> Result<Graph> {
+        let plan = Plan::build(self, g)?;
+        let out = if self.is_splice() { plan.splice(g) } else { plan.fast(g) }?;
+        out.validate().context("patched graph fails validation")?;
+        Ok(out)
+    }
+
+    // ---- JSON interchange ----
+
+    /// `{"schema_version": 1, "name": …, "ops": [{"kind": …, …}, …]}`.
+    /// Operator encodings reuse the graph-JSON `op`/`attrs` fields.
+    pub fn to_json(&self) -> Json {
+        let ops: Vec<Json> = self
+            .ops
+            .iter()
+            .map(|op| {
+                let mut fields = vec![("kind", Json::str(op.kind()))];
+                match op {
+                    PatchOp::Replace { node, op, inputs } => {
+                        fields.push(("node", Json::str(node.clone())));
+                        fields.push(("op", Json::str(op.name().to_string())));
+                        push_attrs(&mut fields, op);
+                        if let Some(ins) = inputs {
+                            fields.push((
+                                "inputs",
+                                Json::arr(ins.iter().map(|i| Json::str(i.clone())).collect()),
+                            ));
+                        }
+                    }
+                    PatchOp::Rewire { node, slot, tensor } => {
+                        fields.push(("node", Json::str(node.clone())));
+                        fields.push(("slot", Json::num(*slot as f64)));
+                        fields.push(("tensor", Json::str(tensor.clone())));
+                    }
+                    PatchOp::Retag { node, chan } => {
+                        fields.push(("node", Json::str(node.clone())));
+                        fields.push(("chan", Json::num(*chan as f64)));
+                    }
+                    PatchOp::Add { name, op, inputs } => {
+                        fields.push(("name", Json::str(name.clone())));
+                        fields.push(("op", Json::str(op.name().to_string())));
+                        push_attrs(&mut fields, op);
+                        fields.push((
+                            "inputs",
+                            Json::arr(inputs.iter().map(|i| Json::str(i.clone())).collect()),
+                        ));
+                    }
+                    PatchOp::Remove { node, replacement } => {
+                        fields.push(("node", Json::str(node.clone())));
+                        fields.push(("replacement", Json::str(replacement.clone())));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", schema::version_field()),
+            ("name", Json::str(&self.name)),
+            ("ops", Json::arr(ops)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GraphPatch> {
+        schema::check(j, "graph patch")?;
+        let name = j.get("name").as_str().unwrap_or("patch").to_string();
+        let arr = j.get("ops").as_arr().ok_or_else(|| anyhow!("patch without 'ops' array"))?;
+        let mut ops = Vec::with_capacity(arr.len());
+        for (i, o) in arr.iter().enumerate() {
+            ops.push(patch_op_from_json(o).with_context(|| format!("patch op #{i}"))?);
+        }
+        Ok(GraphPatch { name, ops })
+    }
+}
+
+fn push_attrs(fields: &mut Vec<(&str, Json)>, op: &Op) {
+    let attrs = op_attrs_json(op);
+    if let Json::Obj(ref o) = attrs {
+        if !o.is_empty() {
+            fields.push(("attrs", attrs));
+        }
+    }
+}
+
+fn patch_op_from_json(o: &Json) -> Result<PatchOp> {
+    let s = |k: &str| -> Result<String> {
+        o.get(k)
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("missing string field '{k}'"))
+    };
+    let kind = s("kind")?;
+    Ok(match kind.as_str() {
+        "replace" => {
+            let op = op_from_json(&s("op")?, o.get("attrs"))?;
+            let inputs = match o.get("inputs") {
+                Json::Null => None,
+                v => Some(
+                    v.as_arr()
+                        .ok_or_else(|| anyhow!("'inputs' must be an array"))?
+                        .iter()
+                        .map(|i| {
+                            i.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow!("non-string input name"))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                ),
+            };
+            PatchOp::Replace { node: s("node")?, op, inputs }
+        }
+        "rewire" => PatchOp::Rewire {
+            node: s("node")?,
+            slot: o.get("slot").as_usize().ok_or_else(|| anyhow!("missing 'slot'"))?,
+            tensor: s("tensor")?,
+        },
+        "retag" => PatchOp::Retag {
+            node: s("node")?,
+            chan: o.get("chan").as_usize().ok_or_else(|| anyhow!("missing 'chan'"))?,
+        },
+        "add" => PatchOp::Add {
+            name: s("name")?,
+            op: op_from_json(&s("op")?, o.get("attrs"))?,
+            inputs: o
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("'add' needs an 'inputs' array"))?
+                .iter()
+                .map(|i| {
+                    i.as_str().map(str::to_string).ok_or_else(|| anyhow!("non-string input name"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "remove" => PatchOp::Remove { node: s("node")?, replacement: s("replacement")? },
+        other => bail!("unknown patch op kind '{other}'"),
+    })
+}
+
+// ---- resolved edit plan ----
+
+/// Per-node edits resolved and cross-validated against the target graph.
+struct Plan {
+    /// node → (new op, new input names); both optional (keep).
+    edits: FxHashMap<NodeId, NodeEdit>,
+    /// node → replacement tensor name.
+    removed: FxHashMap<NodeId, String>,
+    /// spliced-in nodes, in patch order.
+    added: Vec<(String, Op, Vec<String>)>,
+    splice: bool,
+}
+
+#[derive(Default)]
+struct NodeEdit {
+    op: Option<Op>,
+    /// full input-list override (from `replace … inputs`)
+    inputs: Option<Vec<String>>,
+    /// per-slot rewires (slot → tensor name)
+    rewires: Vec<(usize, String)>,
+}
+
+impl Plan {
+    fn build(patch: &GraphPatch, g: &Graph) -> Result<Plan> {
+        let mut plan = Plan {
+            edits: FxHashMap::default(),
+            removed: FxHashMap::default(),
+            added: Vec::new(),
+            splice: patch.is_splice(),
+        };
+        let mut added_names: Vec<&str> = Vec::new();
+        let resolve_node = |name: &str| -> Result<NodeId> {
+            let t = g
+                .tensor_by_name(name)
+                .ok_or_else(|| anyhow!("targets unknown node '{name}'"))?;
+            g.tensor(t)
+                .producer
+                .ok_or_else(|| anyhow!("targets graph input '{name}', not a node"))
+        };
+        for (i, op) in patch.ops.iter().enumerate() {
+            let ctx = || format!("patch op #{i} ({})", op.kind());
+            match op {
+                PatchOp::Replace { node, op: new_op, inputs } => {
+                    let nid = resolve_node(node).with_context(ctx)?;
+                    ensure!(
+                        !plan.removed.contains_key(&nid),
+                        "{}: node '{node}' is also removed by this patch",
+                        ctx()
+                    );
+                    let e = plan.edits.entry(nid).or_default();
+                    ensure!(
+                        e.op.is_none(),
+                        "{}: conflicting replace/retag on node '{node}'",
+                        ctx()
+                    );
+                    e.op = Some(new_op.clone());
+                    if inputs.is_some() {
+                        ensure!(
+                            e.rewires.is_empty() && e.inputs.is_none(),
+                            "{}: input list for '{node}' conflicts with other rewires",
+                            ctx()
+                        );
+                        e.inputs = inputs.clone();
+                    }
+                }
+                PatchOp::Rewire { node, slot, tensor } => {
+                    let nid = resolve_node(node).with_context(ctx)?;
+                    ensure!(
+                        !plan.removed.contains_key(&nid),
+                        "{}: node '{node}' is also removed by this patch",
+                        ctx()
+                    );
+                    ensure!(
+                        *slot < g.node(nid).inputs.len(),
+                        "{}: node '{node}' has {} input slot(s), no slot {slot}",
+                        ctx(),
+                        g.node(nid).inputs.len()
+                    );
+                    let e = plan.edits.entry(nid).or_default();
+                    ensure!(
+                        e.inputs.is_none(),
+                        "{}: rewire of '{node}' conflicts with a full input-list replace",
+                        ctx()
+                    );
+                    ensure!(
+                        e.rewires.iter().all(|(s, _)| s != slot),
+                        "{}: slot {slot} of '{node}' rewired twice",
+                        ctx()
+                    );
+                    e.rewires.push((*slot, tensor.clone()));
+                }
+                PatchOp::Retag { node, chan } => {
+                    let nid = resolve_node(node).with_context(ctx)?;
+                    ensure!(
+                        !plan.removed.contains_key(&nid),
+                        "{}: node '{node}' is also removed by this patch",
+                        ctx()
+                    );
+                    let retagged = match g.node(nid).op {
+                        Op::Send { .. } => Op::Send { chan: *chan },
+                        Op::Recv { .. } => Op::Recv { chan: *chan },
+                        ref other => bail!(
+                            "{}: node '{node}' is {other}, not a Send/Recv",
+                            ctx()
+                        ),
+                    };
+                    let e = plan.edits.entry(nid).or_default();
+                    ensure!(
+                        e.op.is_none(),
+                        "{}: conflicting replace/retag on node '{node}'",
+                        ctx()
+                    );
+                    e.op = Some(retagged);
+                }
+                PatchOp::Add { name, op: new_op, inputs } => {
+                    ensure!(
+                        g.tensor_by_name(name).is_none(),
+                        "{}: name '{name}' collides with an existing tensor",
+                        ctx()
+                    );
+                    ensure!(
+                        !added_names.contains(&name.as_str()),
+                        "{}: name '{name}' added twice",
+                        ctx()
+                    );
+                    added_names.push(name);
+                    plan.added.push((name.clone(), new_op.clone(), inputs.clone()));
+                }
+                PatchOp::Remove { node, replacement } => {
+                    let nid = resolve_node(node).with_context(ctx)?;
+                    ensure!(
+                        !plan.edits.contains_key(&nid),
+                        "{}: node '{node}' is also edited by this patch",
+                        ctx()
+                    );
+                    ensure!(
+                        replacement != node,
+                        "{}: '{node}' cannot replace itself",
+                        ctx()
+                    );
+                    ensure!(
+                        plan.removed.insert(nid, replacement.clone()).is_none(),
+                        "{}: node '{node}' removed twice",
+                        ctx()
+                    );
+                }
+            }
+        }
+        // Input names referenced by edits must exist somewhere — in the old
+        // graph or among the added nodes. (Splice-time ordering is checked
+        // during application; here we reject plainly dangling names.)
+        let known = |name: &str| {
+            g.tensor_by_name(name).is_some() || added_names.contains(&name)
+        };
+        for e in plan.edits.values() {
+            for name in e
+                .inputs
+                .iter()
+                .flatten()
+                .chain(e.rewires.iter().map(|(_, t)| t))
+            {
+                ensure!(known(name), "patch references unknown tensor '{name}'");
+            }
+        }
+        for (added, _, inputs) in &plan.added {
+            for name in inputs {
+                ensure!(
+                    known(name),
+                    "added node '{added}' references unknown tensor '{name}'"
+                );
+            }
+        }
+        for (nid, repl) in &plan.removed {
+            ensure!(
+                known(repl),
+                "removal of '{}' shunts to unknown tensor '{repl}'",
+                g.tensor(g.node(*nid).output).name
+            );
+        }
+        Ok(plan)
+    }
+
+    /// The edited `(op, inputs)` for node `nid`, with input names resolved
+    /// through `lookup` (old-graph ids in the fast path, patched-graph ids
+    /// in the splice path). `current` is the node's default input list.
+    fn edited_node(
+        &self,
+        g: &Graph,
+        nid: NodeId,
+        current: &[TensorId],
+        lookup: impl Fn(&str) -> Option<TensorId>,
+    ) -> Result<(Op, Vec<TensorId>)> {
+        let node = g.node(nid);
+        let node_name = &g.tensor(node.output).name;
+        let Some(e) = self.edits.get(&nid) else {
+            return Ok((node.op.clone(), current.to_vec()));
+        };
+        let op = e.op.clone().unwrap_or_else(|| node.op.clone());
+        let resolve = |name: &str| {
+            lookup(name).ok_or_else(|| {
+                anyhow!(
+                    "patch rewires '{node_name}' to '{name}', which does not exist \
+                     before it — dangling or non-topological"
+                )
+            })
+        };
+        let ins = match &e.inputs {
+            Some(names) => names.iter().map(|n| resolve(n)).collect::<Result<Vec<_>>>()?,
+            None => {
+                let mut ins = current.to_vec();
+                for (slot, name) in &e.rewires {
+                    ins[*slot] = resolve(name)?;
+                }
+                ins
+            }
+        };
+        Ok((op, ins))
+    }
+
+    /// Fast path: no adds/removes — splice through [`Graph::rebuild_with`],
+    /// preserving every `TensorId`. Name resolution happens *before* the
+    /// rebuild (against the old graph, whose ids the rebuild preserves) so
+    /// a dangling or non-topological rewire is an error, not a panic.
+    fn fast(&self, g: &Graph) -> Result<Graph> {
+        let mut resolved: FxHashMap<NodeId, (Op, Vec<TensorId>)> = FxHashMap::default();
+        for &nid in self.edits.keys() {
+            let node = g.node(nid);
+            // only earlier tensors keep the rebuild topological
+            let lookup = |name: &str| {
+                g.tensor_by_name(name).filter(|&t| t < node.output)
+            };
+            resolved.insert(nid, self.edited_node(g, nid, &node.inputs, lookup)?);
+        }
+        g.rebuild_with(|nid, node, mapped| match resolved.get(&nid) {
+            Some((op, ins)) => (op.clone(), ins.clone()),
+            None => (node.op.clone(), mapped.to_vec()),
+        })
+        .context("splicing patched region (shape re-inference failed)")
+    }
+
+    /// Splice path: adds and removes present. Walk old tensors in id order
+    /// (like `rebuild_with`); removed nodes shunt their consumers to the
+    /// replacement; added nodes are inserted as soon as all their inputs
+    /// exist in the output graph.
+    fn splice(&self, g: &Graph) -> Result<Graph> {
+        let mut out = Graph::new(g.name.clone());
+        let mut remap: Vec<Option<TensorId>> = vec![None; g.num_tensors()];
+        let mut pending: Vec<Option<(String, Op, Vec<String>)>> =
+            self.added.iter().cloned().map(Some).collect();
+        // Insert every pending added node whose inputs all resolve; repeat
+        // until a full sweep adds nothing (added nodes may feed each other).
+        fn flush(out: &mut Graph, pending: &mut [Option<(String, Op, Vec<String>)>]) -> Result<()> {
+            loop {
+                let mut progressed = false;
+                for slot in pending.iter_mut() {
+                    let ready = match slot {
+                        Some((_, _, inputs)) => {
+                            inputs.iter().all(|n| out.tensor_by_name(n).is_some())
+                        }
+                        None => false,
+                    };
+                    if !ready {
+                        continue;
+                    }
+                    if let Some((name, op, inputs)) = slot.take() {
+                        let ins: Vec<TensorId> = inputs
+                            .iter()
+                            .filter_map(|n| out.tensor_by_name(n))
+                            .collect();
+                        out.add(&name, op, ins)
+                            .with_context(|| format!("splicing added node '{name}'"))?;
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    return Ok(());
+                }
+            }
+        }
+        for tid in 0..g.num_tensors() as TensorId {
+            let t = g.tensor(tid);
+            match t.producer {
+                None => {
+                    remap[tid as usize] = Some(out.input_typed(&t.name, t.shape.clone(), t.dtype));
+                }
+                Some(nid) if self.removed.contains_key(&nid) => {
+                    let repl = &self.removed[&nid];
+                    let new_id = out.tensor_by_name(repl).ok_or_else(|| {
+                        anyhow!(
+                            "removal of '{}' shunts to '{repl}', which does not exist \
+                             before it — dangling or non-topological",
+                            t.name
+                        )
+                    })?;
+                    ensure!(
+                        out.shape(new_id) == t.shape.as_slice(),
+                        "removal of '{}' shunts to '{repl}' of shape {:?}, expected {:?}",
+                        t.name,
+                        out.shape(new_id),
+                        t.shape
+                    );
+                    remap[tid as usize] = Some(new_id);
+                }
+                Some(nid) => {
+                    let node = g.node(nid);
+                    let current: Vec<TensorId> = node
+                        .inputs
+                        .iter()
+                        .map(|&x| {
+                            remap[x as usize].ok_or_else(|| {
+                                anyhow!("internal: input of '{}' not yet rebuilt", t.name)
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    let (op, ins) =
+                        self.edited_node(g, nid, &current, |name| out.tensor_by_name(name))?;
+                    let new_out = out
+                        .add(&t.name, op, ins)
+                        .with_context(|| format!("splicing patched node '{}'", t.name))?;
+                    remap[tid as usize] = Some(new_out);
+                }
+            }
+            flush(&mut out, &mut pending)?;
+        }
+        for slot in &pending {
+            if let Some((name, _, inputs)) = slot {
+                bail!(
+                    "added node '{name}' has dangling inputs {:?} — never became insertable",
+                    inputs
+                        .iter()
+                        .filter(|n| out.tensor_by_name(n).is_none())
+                        .collect::<Vec<_>>()
+                );
+            }
+        }
+        for &o in &g.outputs {
+            let mapped = remap[o as usize]
+                .ok_or_else(|| anyhow!("internal: output tensor not rebuilt"))?;
+            out.mark_output(mapped);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests assert on trusted fixtures
+mod tests {
+    use super::*;
+    use crate::ir::json_io;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let a = g.input("A", vec![4, 6]);
+        let b = g.input("B", vec![6, 4]);
+        let c = g.matmul("C", a, b);
+        let e = g.input("E", vec![4, 4]);
+        let f = g.sub2("F", c, e);
+        g.mark_output(f);
+        g
+    }
+
+    #[test]
+    fn replace_preserves_tensor_ids() {
+        let g = tiny();
+        let p = GraphPatch::new("swap").replace("F", Op::Add);
+        let g2 = p.apply(&g).unwrap();
+        assert_eq!(g2.num_tensors(), g.num_tensors());
+        for tid in 0..g.num_tensors() as TensorId {
+            assert_eq!(g2.tensor(tid).name, g.tensor(tid).name, "id-aligned");
+        }
+        let f = g2.tensor_by_name("F").unwrap();
+        assert!(matches!(g2.producer(f).unwrap().op, Op::Add));
+    }
+
+    #[test]
+    fn rewire_changes_one_slot() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 2]);
+        let b = g.input("b", vec![2, 2]);
+        let s = g.add2("s", a, b);
+        g.mark_output(s);
+        let g2 = GraphPatch::new("w").rewire("s", 1, "a").apply(&g).unwrap();
+        let s2 = g2.tensor_by_name("s").unwrap();
+        let node = g2.producer(s2).unwrap();
+        assert_eq!(node.inputs, vec![a, a]);
+    }
+
+    #[test]
+    fn retag_only_applies_to_channels() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        let s = g.op("snd", Op::Send { chan: 1 }, vec![a]);
+        let r = g.op("rcv", Op::Recv { chan: 1 }, vec![s]);
+        g.mark_output(r);
+        let g2 = GraphPatch::new("c").retag("snd", 7).retag("rcv", 7).apply(&g).unwrap();
+        let snd = g2.producer(g2.tensor_by_name("snd").unwrap()).unwrap();
+        assert!(matches!(snd.op, Op::Send { chan: 7 }));
+        let e = GraphPatch::new("c").retag("a", 7).apply(&g).unwrap_err();
+        assert!(format!("{e:#}").contains("graph input"), "{e:#}");
+        let e = GraphPatch::new("c").retag("r", 7).apply(&g).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown node"), "{e:#}");
+    }
+
+    #[test]
+    fn add_splices_and_rewires_consumers() {
+        let g = tiny();
+        let p = GraphPatch::new("id")
+            .add("C_id", Op::Identity, vec!["C".into()])
+            .rewire("F", 0, "C_id");
+        let g2 = p.apply(&g).unwrap();
+        assert_eq!(g2.num_nodes(), g.num_nodes() + 1);
+        let f = g2.tensor_by_name("F").unwrap();
+        let cid = g2.tensor_by_name("C_id").unwrap();
+        assert_eq!(g2.producer(f).unwrap().inputs[0], cid);
+        g2.validate().unwrap();
+    }
+
+    #[test]
+    fn remove_shunts_consumers_and_outputs() {
+        let g = tiny();
+        // splice an identity in, then remove it again: round-trips to the
+        // original wiring (names and structure; ids shift and return)
+        let with_id = GraphPatch::new("id")
+            .add("C_id", Op::Identity, vec!["C".into()])
+            .rewire("F", 0, "C_id")
+            .apply(&g)
+            .unwrap();
+        let back = GraphPatch::new("rm").remove("C_id", "C").apply(&with_id).unwrap();
+        assert_eq!(
+            json_io::to_json(&back).to_string(),
+            json_io::to_json(&g).to_string(),
+            "remove(add(g)) == g"
+        );
+    }
+
+    #[test]
+    fn strict_validation_is_errors_not_panics() {
+        let g = tiny();
+        // dangling rewire target
+        let e = GraphPatch::new("x").rewire("F", 0, "nope").apply(&g).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown tensor 'nope'"), "{e:#}");
+        // rewire to a later tensor breaks topological order
+        let e = GraphPatch::new("x").rewire("C", 0, "F").apply(&g).unwrap_err();
+        assert!(format!("{e:#}").contains("does not exist before"), "{e:#}");
+        // name collision on add
+        let e = GraphPatch::new("x")
+            .add("C", Op::Identity, vec!["A".into()])
+            .apply(&g)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("collides"), "{e:#}");
+        // shape re-inference failure in the spliced region
+        let e = GraphPatch::new("x").replace("C", Op::Add).apply(&g).unwrap_err();
+        assert!(format!("{e:#}").contains("shape"), "{e:#}");
+        // bad slot
+        let e = GraphPatch::new("x").rewire("F", 9, "C").apply(&g).unwrap_err();
+        assert!(format!("{e:#}").contains("no slot 9"), "{e:#}");
+        // conflicting edits
+        let e = GraphPatch::new("x")
+            .replace("F", Op::Add)
+            .remove("F", "C")
+            .apply(&g)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("also edited"), "{e:#}");
+    }
+
+    #[test]
+    fn empty_patch_is_identity() {
+        let g = tiny();
+        let g2 = GraphPatch::new("noop").apply(&g).unwrap();
+        assert_eq!(json_io::to_json(&g2).to_string(), json_io::to_json(&g).to_string());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = GraphPatch::new("rt")
+            .replace_wired("F", Op::Add, vec!["C".into(), "E".into()])
+            .rewire("F", 1, "E")
+            .retag("snd", 3)
+            .add("n", Op::Scale { c: crate::ir::FBits::new(2.0) }, vec!["C".into()])
+            .remove("old", "C");
+        let j = p.to_json();
+        let p2 = GraphPatch::from_json(&j).unwrap();
+        assert_eq!(p2, p);
+        assert_eq!(p2.to_json().to_string(), j.to_string());
+        // version mismatch is rejected
+        let bad = Json::parse(r#"{"schema_version": 99, "ops": []}"#).unwrap();
+        assert!(GraphPatch::from_json(&bad).is_err());
+        // unknown kind is rejected
+        let bad = Json::parse(r#"{"ops": [{"kind": "frobnicate"}]}"#).unwrap();
+        assert!(GraphPatch::from_json(&bad).is_err());
+    }
+}

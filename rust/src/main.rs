@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   verify  --gs <graph.json> --gd <graph.json> --ri <relation.json>
+//!   reverify --gs g_s.json --gd g_d.json --ri relation.json --patch p.json
+//!           incremental re-verification: apply a GraphPatch, classify the
+//!           dirty cone statically, reuse certificates for Clean regions
+//!   patch   --gd g_d.json --patch p.json    apply a patch, print the graph
 //!   serve   [--socket PATH] [--canonical]     long-lived verification
 //!           service: newline-delimited JSON requests on stdin (or a Unix
 //!           socket), one response per line, shared warm cache
@@ -128,9 +132,34 @@ fn help_for(cmd: &str) -> String {
         "verify" => {
             "usage: graphguard verify --gs g_s.json --gd g_d.json --ri relation.json\n\
              \x20               [--deadline-ms N] [--jobs N] [--no-cache] [--check-numeric]\n\
+             \x20               [--canonical]\n\
              \n\
              One-shot refinement check: infer a clean output relation for the\n\
-             inline (G_s, G_d, R_i) triple, or localize where inference stops."
+             inline (G_s, G_d, R_i) triple, or localize where inference stops.\n\
+             --canonical drops run-varying output (cache counters) for\n\
+             byte-stable diffing against `reverify`."
+        }
+        "reverify" => {
+            "usage: graphguard reverify --gs g_s.json --gd g_d.json --ri relation.json\n\
+             \x20               --patch p.json [--impact-only] [--deadline-ms N] [--jobs N]\n\
+             \x20               [--no-cache] [--check-numeric] [--canonical]\n\
+             \n\
+             Incremental re-verification of a patched implementation. Applies\n\
+             the GraphPatch to G_d, statically classifies every region\n\
+             Clean | Dirty | BoundaryShifted (impact summary on stderr), then\n\
+             verifies the patched pair with certificates warmed on the old\n\
+             pair — Clean regions replay instead of re-saturating. stdout is\n\
+             byte-identical under --canonical to `verify` on the patched\n\
+             files. --impact-only prints the impact report as JSON and skips\n\
+             verification entirely. Patch schema: EXPERIMENTS.md\n\
+             §Incremental re-verification."
+        }
+        "patch" => {
+            "usage: graphguard patch --gd g_d.json --patch p.json\n\
+             \n\
+             Apply a GraphPatch to a graph and print the patched graph JSON\n\
+             (strict validation: dangling inputs, id collisions, or failed\n\
+             shape re-inference of the spliced region exit 2)."
         }
         "serve" => {
             "usage: graphguard serve [--socket PATH] [--canonical] [--deadline-ms N]\n\
@@ -183,9 +212,13 @@ fn help_for(cmd: &str) -> String {
 }
 
 const USAGE: &str =
-    "usage: graphguard <verify|serve|suite|bugs|fuzz|lint|lemmas|hlo> [options]\n\
+    "usage: graphguard <verify|reverify|patch|serve|suite|bugs|fuzz|lint|lemmas|hlo> [options]\n\
      \n  verify --gs g_s.json --gd g_d.json --ri relation.json [--deadline-ms N]\
-     \n         [--jobs N] [--no-cache] [--check-numeric]\
+     \n         [--jobs N] [--no-cache] [--check-numeric] [--canonical]\
+     \n  reverify --gs g_s.json --gd g_d.json --ri relation.json --patch p.json\
+     \n         [--impact-only] [--deadline-ms N] [--jobs N] [--no-cache]\
+     \n         [--check-numeric] [--canonical]\
+     \n  patch  --gd g_d.json --patch p.json\
      \n  serve  [--socket PATH] [--canonical] [--deadline-ms N] [--jobs N] [--no-cache]\
      \n  suite  [--ranks N] [--threads N] [--deadline-ms N] [--jobs N]\
      \n         [--no-cache] [--canonical]\
@@ -210,6 +243,8 @@ fn run() -> Result<i32> {
     }
     match args.first().map(String::as_str) {
         Some("verify") => cmd_verify(&args[1..]),
+        Some("reverify") => cmd_reverify(&args[1..]),
+        Some("patch") => cmd_patch(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
         Some("bugs") => cmd_bugs(),
@@ -231,30 +266,50 @@ fn load_graph(path: &str) -> Result<ir::Graph> {
     ir::json_io::from_json(&json).with_context(|| format!("building graph from {path}"))
 }
 
-fn cmd_verify(args: &[String]) -> Result<i32> {
-    let opts = CommonOpts::parse(args)?;
-    let gs = load_graph(&arg_value(args, "--gs").ok_or_else(|| anyhow!("--gs required"))?)?;
-    let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
+/// Parse `--ri` against an already-loaded graph pair.
+fn load_relation(args: &[String], gs: &ir::Graph, gd: &ir::Graph) -> Result<relation::Relation> {
     let ri_path = arg_value(args, "--ri").ok_or_else(|| anyhow!("--ri required"))?;
     let ri_text =
         std::fs::read_to_string(&ri_path).with_context(|| format!("reading {ri_path}"))?;
     let ri_json = graphguard::util::json::Json::parse(&ri_text)
         .map_err(|e| anyhow!("{ri_path}: {e}"))?;
-    let ri = relation::Relation::from_json(&ri_json, &gs, &gd)?;
-    ri.validate_shapes(&gs, &gd)?;
-    match Verifier::with_config(opts.infer_cfg()).isolated(true).run(&gs, &gd, &ri) {
+    let ri = relation::Relation::from_json(&ri_json, gs, gd)?;
+    ri.validate_shapes(gs, gd)?;
+    Ok(ri)
+}
+
+fn load_patch(args: &[String]) -> Result<ir::GraphPatch> {
+    let path = arg_value(args, "--patch").ok_or_else(|| anyhow!("--patch required"))?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let j = graphguard::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    ir::GraphPatch::from_json(&j).with_context(|| format!("parsing patch {path}"))
+}
+
+/// Shared verdict reporting for `verify` and `reverify` — both print the
+/// *same bytes* for the same (gs, gd, ri) outcome, which is what the CI
+/// incremental-determinism gate diffs. The cache line is run-varying and
+/// suppressed under `--canonical`.
+fn report_verdict(
+    verdict: Verdict,
+    gs: &ir::Graph,
+    gd: &ir::Graph,
+    ri: &relation::Relation,
+    canonical: bool,
+    check_numeric: bool,
+) -> Result<i32> {
+    match verdict {
         Verdict::Verified(out) => {
             println!("refinement HOLDS — R_o:");
-            println!("{}", out.relation.to_json(&gs, &gd).to_string_pretty());
-            if out.cache_hits + out.cache_misses > 0 {
+            println!("{}", out.relation.to_json(gs, gd).to_string_pretty());
+            if !canonical && out.cache_hits + out.cache_misses > 0 {
                 println!(
                     "cache: {}/{} region hits",
                     out.cache_hits,
                     out.cache_hits + out.cache_misses
                 );
             }
-            if args.iter().any(|a| a == "--check-numeric") {
-                infer::verify_numeric(&gs, &gd, &ri, &out.relation, 7)?;
+            if check_numeric {
+                infer::verify_numeric(gs, gd, ri, &out.relation, 7)?;
                 println!("numeric certificate: OK");
             }
             Ok(EXIT_OK)
@@ -273,6 +328,60 @@ fn cmd_verify(args: &[String]) -> Result<i32> {
             Ok(EXIT_INCONCLUSIVE)
         }
     }
+}
+
+fn cmd_verify(args: &[String]) -> Result<i32> {
+    let opts = CommonOpts::parse(args)?;
+    let gs = load_graph(&arg_value(args, "--gs").ok_or_else(|| anyhow!("--gs required"))?)?;
+    let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
+    let ri = load_relation(args, &gs, &gd)?;
+    let verdict = Verifier::with_config(opts.infer_cfg()).isolated(true).run(&gs, &gd, &ri);
+    report_verdict(
+        verdict,
+        &gs,
+        &gd,
+        &ri,
+        opts.canonical,
+        args.iter().any(|a| a == "--check-numeric"),
+    )
+}
+
+/// Incremental re-verification: `verify` semantics on the patched pair,
+/// with certificates warmed on the old pair and the static impact
+/// classification on stderr (stdout stays byte-comparable to `verify`).
+fn cmd_reverify(args: &[String]) -> Result<i32> {
+    let opts = CommonOpts::parse(args)?;
+    let gs = load_graph(&arg_value(args, "--gs").ok_or_else(|| anyhow!("--gs required"))?)?;
+    let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
+    let ri = load_relation(args, &gs, &gd)?;
+    let patch = load_patch(args)?;
+    let rv = Verifier::with_config(opts.infer_cfg())
+        .isolated(true)
+        .reverify(&gs, &gd, &ri, &patch)?;
+    if args.iter().any(|a| a == "--impact-only") {
+        println!("{}", rv.impact.to_json().to_string_pretty());
+        return Ok(EXIT_OK);
+    }
+    eprint!("{}", rv.impact.render());
+    report_verdict(
+        rv.verdict,
+        &gs,
+        &rv.patched,
+        &rv.ri,
+        opts.canonical,
+        args.iter().any(|a| a == "--check-numeric"),
+    )
+}
+
+/// Apply a patch and print the resulting graph JSON (no verification) —
+/// the tool the CI determinism gate uses to produce the "full verify"
+/// side of the diff.
+fn cmd_patch(args: &[String]) -> Result<i32> {
+    let gd = load_graph(&arg_value(args, "--gd").ok_or_else(|| anyhow!("--gd required"))?)?;
+    let patch = load_patch(args)?;
+    let patched = patch.apply(&gd)?;
+    println!("{}", ir::json_io::to_json(&patched).to_string_pretty());
+    Ok(EXIT_OK)
 }
 
 /// The long-lived service. Exit code reflects transport health only —

@@ -146,10 +146,37 @@ fn answer(req: &Request, opts: &ServeOptions, workloads: &mut WorkloadTable) -> 
         },
     };
     let started = Instant::now();
+    if let Some(patch) = &req.patch {
+        // Incremental path: a patch is *targeted* cache invalidation —
+        // edited regions miss on their new fingerprints naturally, clean
+        // regions replay certificates the earlier requests (or the warm-up
+        // pass inside `reverify`) deposited. The shared cache is never
+        // flushed. Structural failures (invalid patch, deleted relation
+        // leaves) are request errors; the loop keeps serving.
+        let rv = match verifier.reverify(gs, gd, ri, patch) {
+            Ok(rv) => rv,
+            Err(e) => return protocol::error_response(id, &format!("{e:#}")),
+        };
+        let wall_us = started.elapsed().as_micros() as u64;
+        let lint = analysis::analyze(&rv.patched, Some(&rv.ri)).findings;
+        return protocol::verdict_response(
+            id,
+            &rv.verdict,
+            gs,
+            &rv.patched,
+            &lint,
+            rv.attempts,
+            wall_us,
+            opts.canonical,
+            Some(&rv.impact),
+        );
+    }
     let (verdict, attempts) = verifier.run_counted(gs, gd, ri);
     let wall_us = started.elapsed().as_micros() as u64;
     let lint = analysis::analyze(gd, Some(ri)).findings;
-    protocol::verdict_response(id, &verdict, gs, gd, &lint, attempts, wall_us, opts.canonical)
+    protocol::verdict_response(
+        id, &verdict, gs, gd, &lint, attempts, wall_us, opts.canonical, None,
+    )
 }
 
 fn tally(stats: &mut ServeStats, response: &Json) {
@@ -331,6 +358,39 @@ mod tests {
         assert!(matches!(rs[0].get("cache_hits"), Json::Null));
         assert!(matches!(rs[0].get("per_region"), Json::Null));
         assert!(!matches!(rs[0].get("relation"), Json::Null));
+    }
+
+    #[test]
+    fn patch_requests_reverify_and_report_impact() {
+        let opts = ServeOptions { canonical: true, ..ServeOptions::default() };
+        // warm the cache, then a noop patch: every region must classify
+        // Clean and the verdict must match the plain request's
+        let input = "{\"id\":1,\"workload\":\"gpt_tp_sp_2\"}\n\
+                     {\"id\":2,\"workload\":\"gpt_tp_sp_2\",\
+                      \"patch\":{\"name\":\"noop\",\"ops\":[]}}\n\
+                     {\"id\":3,\"workload\":\"gpt_tp_sp_2\",\
+                      \"patch\":{\"ops\":[{\"kind\":\"rewire\",\"node\":\"nope\",\
+                      \"slot\":0,\"tensor\":\"x\"}]}}\n";
+        let (rs, stats) = run(input, &opts);
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0].get("verdict").as_str(), Some("verified"));
+        assert_eq!(rs[1].get("verdict").as_str(), Some("verified"));
+        let impact = rs[1].get("impact");
+        assert!(!matches!(impact, Json::Null), "patch response carries impact");
+        assert_eq!(
+            impact.get("dirty").as_usize(),
+            Some(0),
+            "noop patch dirties nothing: {impact}"
+        );
+        assert_eq!(
+            rs[0].get("relation").to_string(),
+            rs[1].get("relation").to_string(),
+            "incremental relation must be byte-identical to the full run's"
+        );
+        // structural patch failure = request error, loop keeps serving
+        assert_eq!(rs[2].get("verdict").as_str(), Some("error"));
+        assert_eq!((stats.verified, stats.errors), (2, 1));
+        assert!(stats.cache_hits > 0, "clean regions replayed certificates");
     }
 
     #[test]

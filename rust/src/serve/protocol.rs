@@ -9,6 +9,12 @@
 //! - named workload: `{"id": "r1", "workload": "gpt_tp_sp_2", "ranks": 2}`
 //!   (`ranks` bounded to 1..=[`MAX_RANKS`])
 //! - inline pair:    `{"id": "r2", "gs": {…}, "gd": {…}, "ri": {…}}`
+//! - patch (either payload + `"patch"`): incremental re-verification —
+//!   the [`crate::ir::GraphPatch`] is applied to `G_d`, the impact
+//!   analysis classifies the dirty cone, and only non-Clean regions
+//!   re-saturate. A patch is *targeted* cache invalidation: edited
+//!   regions miss on their new fingerprints naturally; the shared cache
+//!   is never flushed.
 //! - per-request overrides: `"jobs"`, `"deadline_ms"` (0 disables),
 //!   `"no_cache"`, `"escalate"`, `"max_iters"`, `"max_nodes"`.
 //!
@@ -59,6 +65,9 @@ pub struct Request {
     pub escalate: bool,
     pub max_iters: Option<usize>,
     pub max_nodes: Option<usize>,
+    /// Incremental re-verification: apply this patch to the payload's
+    /// `G_d` and verify the patched pair with warm certificates.
+    pub patch: Option<ir::GraphPatch>,
 }
 
 /// A request that could not be parsed: the id when it was recoverable,
@@ -147,7 +156,13 @@ pub fn parse_request(line: &str) -> Result<Request, BadRequest> {
     let escalate = opt_flag(&j, "escalate").map_err(&fail)?;
     let max_iters = opt_usize(&j, "max_iters").map_err(&fail)?;
     let max_nodes = opt_usize(&j, "max_nodes").map_err(&fail)?;
-    Ok(Request { id, payload, jobs, deadline_ms, no_cache, escalate, max_iters, max_nodes })
+    let patch = match j.get("patch") {
+        Json::Null => None,
+        p => Some(
+            ir::GraphPatch::from_json(p).map_err(|e| fail(format!("bad 'patch': {e:#}")))?,
+        ),
+    };
+    Ok(Request { id, payload, jobs, deadline_ms, no_cache, escalate, max_iters, max_nodes, patch })
 }
 
 fn id_field(id: Option<&Json>) -> Json {
@@ -177,6 +192,7 @@ pub fn error_response(id: Option<&Json>, error: &str) -> Json {
 /// to run (wall time, per-region micros, cache counters) so responses are
 /// byte-stable for golden diffing; verdict/locus content is identical
 /// either way and matches the one-shot CLI's output strings.
+#[allow(clippy::too_many_arguments)] // wire-shape assembly, not an API surface
 pub fn verdict_response(
     id: Option<&Json>,
     verdict: &crate::infer::Verdict,
@@ -186,11 +202,17 @@ pub fn verdict_response(
     attempts: usize,
     wall_us: u64,
     canonical: bool,
+    impact: Option<&crate::analysis::ImpactReport>,
 ) -> Json {
     use crate::infer::Verdict;
     let mut fields = base(id, verdict.tag());
     fields.push(("attempts", Json::num(attempts as f64)));
     fields.push(("lint", Json::Arr(lint.iter().map(|f| f.to_json()).collect())));
+    if let Some(imp) = impact {
+        // Deterministic (no timings) — present in canonical mode too, so
+        // golden diffs pin the classification alongside the verdict.
+        fields.push(("impact", imp.to_json()));
+    }
     match verdict {
         Verdict::Verified(out) => {
             // Exactly the relation JSON `graphguard verify` prints.
@@ -298,6 +320,25 @@ mod tests {
         let r = parse_request(r#"{"workload":"w","ranks":64}"#).unwrap();
         let Payload::Workload { ranks, .. } = r.payload else { panic!("workload") };
         assert_eq!(ranks, MAX_RANKS);
+    }
+
+    #[test]
+    fn patch_field_parses_and_rejects_malformed_patches() {
+        let r = parse_request(
+            r#"{"id":"p1","workload":"gpt_tp_sp_2",
+                "patch":{"name":"edit","ops":[{"kind":"retag","node":"snd","chan":3}]}}"#,
+        )
+        .unwrap();
+        let p = r.patch.expect("patch parsed");
+        assert_eq!(p.name, "edit");
+        assert_eq!(p.ops.len(), 1);
+
+        let e = parse_request(
+            r#"{"id":"p2","workload":"w","patch":{"ops":[{"kind":"frobnicate"}]}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.id, Some(Json::str("p2")));
+        assert!(e.error.contains("patch"), "{}", e.error);
     }
 
     #[test]

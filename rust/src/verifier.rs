@@ -21,13 +21,15 @@
 //! walk of Listing 1 — panics propagate, exactly as the old
 //! `check_refinement_verdict` behaved.
 
+use crate::analysis::impact::{analyze_patch, remap_relation, ImpactReport};
 use crate::cache::FingerprintCache;
 use crate::egraph::SaturationLimits;
 use crate::infer::{
     self, EscalationPolicy, InferConfig, InferOutput, RefinementError, Verdict,
 };
-use crate::ir::Graph;
+use crate::ir::{Graph, GraphPatch};
 use crate::relation::Relation;
+use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -126,6 +128,60 @@ impl Verifier {
         }
     }
 
+    /// Incrementally re-verify a patched implementation.
+    ///
+    /// Applies `patch` to `old_gd`, re-keys `ri` onto the patched graph
+    /// (by tensor name — see [`remap_relation`]), runs the static impact
+    /// analysis, and then verifies the patched pair with a certificate
+    /// cache warmed on the *old* pair. Regions the impact pass proves
+    /// [`Clean`](crate::analysis::RegionClass::Clean) hit the cache and
+    /// reuse their certificates without re-saturating; dirty regions
+    /// re-saturate. The verdict, relation, and locus are byte-identical
+    /// under `--canonical` to a cold full verification of the patched
+    /// pair — the cache never changes verdicts, and the impact analysis
+    /// makes the reuse *sound* rather than fingerprint-lucky.
+    ///
+    /// If the builder already carries a non-empty cache (e.g. the serve
+    /// loop's), it is reused as-is; otherwise a fresh cache is warmed by
+    /// verifying the old pair first (the "cold" half of the bench).
+    ///
+    /// Errors are *structural* — invalid patch, shape re-inference
+    /// failure, or a relation leaf the patch deleted. Verification
+    /// outcomes, including refutations, come back inside
+    /// [`Reverified::verdict`].
+    pub fn reverify(
+        &self,
+        gs: &Graph,
+        old_gd: &Graph,
+        ri: &Relation,
+        patch: &GraphPatch,
+    ) -> Result<Reverified> {
+        let patched = patch
+            .apply(old_gd)
+            .with_context(|| format!("applying patch '{}'", patch.name))?;
+        let ri_new = remap_relation(ri, old_gd, &patched)
+            .with_context(|| format!("re-keying R_i after patch '{}'", patch.name))?;
+        let impact =
+            analyze_patch(gs, old_gd, &patched, ri, &ri_new, &self.cfg.quarantined_channels);
+
+        let mut warm = self.clone();
+        let needs_warmup = match &self.cfg.cache {
+            Some(c) => c.is_empty(),
+            None => {
+                warm.cfg.cache = Some(Arc::new(FingerprintCache::new()));
+                true
+            }
+        };
+        if needs_warmup {
+            // Certificate source: one full pass over the old pair. Its
+            // verdict is irrelevant here — refuted/inconclusive regions
+            // are simply not memoized, so the patched run re-derives them.
+            let _ = warm.run(gs, old_gd, ri);
+        }
+        let (verdict, attempts) = warm.run_counted(gs, &patched, &ri_new);
+        Ok(Reverified { verdict, attempts, impact, patched, ri: ri_new })
+    }
+
     /// Two-valued convenience for callers running at budgets where
     /// exhaustion cannot occur (most tests and benches).
     ///
@@ -149,9 +205,28 @@ impl Verifier {
     }
 }
 
+/// Result of [`Verifier::reverify`]: the verification outcome plus the
+/// artifacts incremental callers need (patched graph, re-keyed relation,
+/// impact classification).
+#[derive(Debug)]
+pub struct Reverified {
+    /// Three-valued outcome for the patched pair — byte-identical under
+    /// `--canonical` to a cold full verification.
+    pub verdict: Verdict,
+    /// Escalation attempts spent on the patched run (1 without a policy).
+    pub attempts: usize,
+    /// Pre-saturation impact classification of every region.
+    pub impact: ImpactReport,
+    /// The patched implementation graph.
+    pub patched: Graph,
+    /// `R_i` re-keyed onto the patched graph's tensor ids.
+    pub ri: Relation,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::Op;
     use crate::models::gpt::{self, GptConfig};
 
     #[test]
@@ -178,6 +253,109 @@ mod tests {
         assert_eq!(v.config().limits.max_iters, 3);
         assert_eq!(v.config().quarantined_channels, vec![7]);
         assert!(v.config().cache.is_none());
+    }
+
+    /// fig1 running example (same workload as `infer::tests::running_example`).
+    fn fig1() -> (Graph, Graph, Relation) {
+        let mut gs = Graph::new("fig1_gs");
+        let a = gs.input("A", vec![4, 6]);
+        let b = gs.input("B", vec![6, 4]);
+        let e = gs.input("E", vec![4, 4]);
+        let c = gs.matmul("C", a, b);
+        let f = gs.sub2("F", c, e);
+        gs.mark_output(f);
+
+        let mut gd = Graph::new("fig1_gd");
+        let a1 = gd.input("A_1", vec![4, 3]);
+        let a2 = gd.input("A_2", vec![4, 3]);
+        let b1 = gd.input("B_1", vec![3, 4]);
+        let b2 = gd.input("B_2", vec![3, 4]);
+        let e1 = gd.input("E_1", vec![2, 4]);
+        let e2 = gd.input("E_2", vec![2, 4]);
+        let c1 = gd.matmul("C_1", a1, b1);
+        let c2 = gd.matmul("C_2", a2, b2);
+        let d1 = gd.reduce_scatter("D_1", vec![c1, c2], 0, 0);
+        let d2 = gd.reduce_scatter("D_2", vec![c1, c2], 0, 1);
+        let f1 = gd.sub2("F_1", d1, e1);
+        let f2 = gd.sub2("F_2", d2, e2);
+        let f = gd.all_gather("F_full", vec![f1, f2], 0);
+        gd.mark_output(f);
+
+        let ri = Relation::from_json(
+            &crate::util::json::Json::parse(
+                r#"{
+                "A": ["concat(A_1, A_2; dim=1)"],
+                "B": ["concat(B_1, B_2; dim=0)"],
+                "E": ["concat(E_1, E_2; dim=0)"]
+            }"#,
+            )
+            .unwrap(),
+            &gs,
+            &gd,
+        )
+        .unwrap();
+        (gs, gd, ri)
+    }
+
+    #[test]
+    fn reverify_noop_patch_reuses_every_certificate() {
+        let (gs, gd, ri) = fig1();
+        let rv = Verifier::new()
+            .reverify(&gs, &gd, &ri, &GraphPatch::new("noop"))
+            .unwrap();
+        assert_eq!(rv.impact.clean(), gs.num_nodes(), "{:?}", rv.impact);
+        let Verdict::Verified(out) = rv.verdict else { panic!("noop patch must verify") };
+        assert_eq!(
+            out.cache_hits as usize,
+            gs.num_nodes(),
+            "every region must replay its certificate"
+        );
+        assert_eq!(out.cache_misses, 0);
+    }
+
+    #[test]
+    fn reverify_matches_full_verification_of_the_patched_pair() {
+        let (gs, gd, ri) = fig1();
+        // clean splice: identity inserted between F_1 and the gather
+        let patch = GraphPatch::new("id_splice")
+            .add("F_1_id", Op::Identity, vec!["F_1".into()])
+            .rewire("F_full", 0, "F_1_id");
+        let rv = Verifier::new().reverify(&gs, &gd, &ri, &patch).unwrap();
+        let Verdict::Verified(warm) = rv.verdict else { panic!("clean patch must verify") };
+        // cold full verification of the same patched pair
+        let Verdict::Verified(cold) = Verifier::new().run(&gs, &rv.patched, &rv.ri) else {
+            panic!("cold run must verify")
+        };
+        assert_eq!(
+            warm.relation.to_json(&gs, &rv.patched).to_string(),
+            cold.relation.to_json(&gs, &rv.patched).to_string(),
+            "incremental and full relations must be byte-identical"
+        );
+        // the untouched matmul region reused its certificate
+        assert!(warm.cache_hits >= 1, "clean region must hit the warm cache");
+    }
+
+    #[test]
+    fn reverify_refutes_inside_the_dirty_cone() {
+        let (gs, gd, ri) = fig1();
+        let patch = GraphPatch::new("bug").replace("F_1", Op::Add);
+        let rv = Verifier::new().reverify(&gs, &gd, &ri, &patch).unwrap();
+        let Verdict::Refuted(e) = rv.verdict else { panic!("bug patch must refute") };
+        let class = rv.impact.class_of(e.node).unwrap();
+        assert_eq!(
+            class,
+            crate::analysis::RegionClass::Dirty,
+            "locus '{}' must lie inside the dirty cone",
+            e.node_name
+        );
+    }
+
+    #[test]
+    fn reverify_rejects_invalid_patches_structurally() {
+        let (gs, gd, ri) = fig1();
+        let patch = GraphPatch::new("bad").rewire("F_full", 0, "no_such_tensor");
+        let err = Verifier::new().reverify(&gs, &gd, &ri, &patch).unwrap_err();
+        assert!(format!("{err:#}").contains("no_such_tensor"), "{err:#}");
     }
 
     #[test]

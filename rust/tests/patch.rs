@@ -1,0 +1,285 @@
+//! GraphPatch + impact-analysis integration tests (ISSUE 10).
+//!
+//! The contract under test: `Verifier::reverify` (patch-driven incremental
+//! re-verification) is an *optimization only*. Its verdict, certificate
+//! relation, and failure locus are byte-identical to a full from-scratch
+//! verification of the patched pair; the impact analysis merely decides
+//! which cached region certificates may be reused soundly.
+//!
+//! Fixture files under `fixtures/patch/` carry the paper's Fig-1 running
+//! example plus three patches (clean identity splice, semantic bug,
+//! structurally invalid) — the same files the CI determinism gate drives
+//! through the CLI (`scripts/ci-local.sh`).
+
+use graphguard::analysis::{self, analyze_patch, impact::relint, remap_relation, RegionClass};
+use graphguard::infer::Verdict;
+use graphguard::ir::{json_io, Graph, GraphPatch, Op};
+use graphguard::models::gpt::{self, GptConfig};
+use graphguard::models::table2_workloads;
+use graphguard::relation::Relation;
+use graphguard::util::json::Json;
+use graphguard::Verifier;
+
+const GS: &str = include_str!("fixtures/patch/fig1_gs.json");
+const GD: &str = include_str!("fixtures/patch/fig1_gd.json");
+const RI: &str = include_str!("fixtures/patch/fig1_ri.json");
+const CLEAN_PATCH: &str = include_str!("fixtures/patch/fig1_clean.patch.json");
+const BUG_PATCH: &str = include_str!("fixtures/patch/fig1_bug.patch.json");
+const INVALID_PATCH: &str = include_str!("fixtures/patch/fig1_invalid.patch.json");
+
+fn fig1() -> (Graph, Graph, Relation) {
+    let gs = json_io::from_json(&Json::parse(GS).expect("gs parses")).expect("gs loads");
+    let gd = json_io::from_json(&Json::parse(GD).expect("gd parses")).expect("gd loads");
+    let ri = Relation::from_json(&Json::parse(RI).expect("ri parses"), &gs, &gd)
+        .expect("ri loads");
+    (gs, gd, ri)
+}
+
+fn patch(text: &str) -> GraphPatch {
+    GraphPatch::from_json(&Json::parse(text).expect("patch parses")).expect("patch loads")
+}
+
+fn relation_bytes(v: &Verdict, gs: &Graph, gd: &Graph) -> String {
+    match v {
+        Verdict::Verified(o) => o.relation.to_json(gs, gd).to_string_pretty(),
+        other => panic!("expected Verified, got {}", other.tag()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixture hygiene: the JSON files the CI gate replays must parse, apply,
+// and round-trip through the patch codec.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_patches_parse_and_roundtrip() {
+    for (name, text) in
+        [("clean", CLEAN_PATCH), ("bug", BUG_PATCH), ("invalid", INVALID_PATCH)]
+    {
+        let p = patch(text);
+        let p2 = GraphPatch::from_json(&p.to_json())
+            .unwrap_or_else(|e| panic!("{name}: roundtrip failed: {e:#}"));
+        assert_eq!(p, p2, "{name}: codec roundtrip changed the patch");
+    }
+}
+
+#[test]
+fn clean_and_bug_fixture_patches_apply() {
+    let (_gs, gd, _ri) = fig1();
+    let spliced = patch(CLEAN_PATCH).apply(&gd).expect("clean patch applies");
+    assert_eq!(spliced.num_nodes(), gd.num_nodes() + 1, "identity splice adds one node");
+    let buggy = patch(BUG_PATCH).apply(&gd).expect("bug patch is shape-valid");
+    assert_eq!(buggy.num_nodes(), gd.num_nodes());
+}
+
+#[test]
+fn invalid_fixture_patch_is_a_structured_error() {
+    let (_gs, gd, _ri) = fig1();
+    let e = patch(INVALID_PATCH).apply(&gd).expect_err("dangling rewire must fail");
+    let msg = format!("{e:#}");
+    assert!(msg.contains("no_such_tensor"), "error must name the tensor: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Impact classification pinned on hand-built diffs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bug_patch_impact_classes_are_pinned() {
+    let (gs, gd, ri) = fig1();
+    let patched = patch(BUG_PATCH).apply(&gd).expect("applies");
+    let ri2 = remap_relation(&ri, &gd, &patched).expect("noop remap");
+    let imp = analyze_patch(&gs, &gd, &patched, &ri, &ri2, &[]);
+    assert_eq!(imp.regions.len(), gs.num_nodes());
+    for r in &imp.regions {
+        let want = match r.node_name.as_str() {
+            "C" => RegionClass::Clean, // cone ends at D_1/D_2, before the edit
+            "F" => RegionClass::Dirty,
+            other => panic!("unexpected region '{other}'"),
+        };
+        assert_eq!(r.class, want, "region {}", r.node_name);
+    }
+    assert_eq!(imp.changed, vec!["F_1".to_string()]);
+}
+
+#[test]
+fn identity_splice_impact_dirties_only_the_tail() {
+    let (gs, gd, ri) = fig1();
+    let patched = patch(CLEAN_PATCH).apply(&gd).expect("applies");
+    let ri2 = remap_relation(&ri, &gd, &patched).expect("remap survives the splice");
+    let imp = analyze_patch(&gs, &gd, &patched, &ri, &ri2, &[]);
+    // the spliced F_1_id + rewired F_full taint only region F's cone
+    assert_eq!(imp.class_of_name(&gs, "C"), Some(RegionClass::Clean));
+    assert_eq!(imp.class_of_name(&gs, "F"), Some(RegionClass::Dirty));
+}
+
+/// Name-based region lookup for tests (regions are keyed by `G_s` node id).
+trait ClassOfName {
+    fn class_of_name(&self, gs: &Graph, name: &str) -> Option<RegionClass>;
+}
+
+impl ClassOfName for graphguard::analysis::ImpactReport {
+    fn class_of_name(&self, gs: &Graph, name: &str) -> Option<RegionClass> {
+        let t = gs.tensor_by_name(name)?;
+        self.class_of(gs.tensor(t).producer?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Differential: incremental == full, across every Table-2 workload.
+// ---------------------------------------------------------------------------
+
+/// A noop patch re-verifies every workload to the byte-identical
+/// certificate, with every region certificate replayed from the warm-up
+/// run (zero misses) and an all-Clean impact report.
+#[test]
+fn noop_reverify_is_byte_identical_across_table2() {
+    let noop = GraphPatch::new("noop");
+    for w in table2_workloads(2) {
+        let v = Verifier::new().isolated(true);
+        let full = v.run(&w.gs, &w.gd, &w.ri);
+        let rv = v
+            .reverify(&w.gs, &w.gd, &w.ri, &noop)
+            .unwrap_or_else(|e| panic!("{}: noop reverify failed: {e:#}", w.name));
+        assert_eq!(rv.impact.dirty_cone(), 0, "{}: noop patch dirtied regions", w.name);
+        assert_eq!(
+            relation_bytes(&full, &w.gs, &w.gd),
+            relation_bytes(&rv.verdict, &w.gs, &rv.patched),
+            "{}: incremental certificate diverged from full verification",
+            w.name
+        );
+        let Verdict::Verified(o) = &rv.verdict else { unreachable!() };
+        assert_eq!(o.cache_misses, 0, "{}: clean region re-saturated", w.name);
+        assert!(o.cache_hits > 0, "{}: nothing was reused", w.name);
+    }
+}
+
+/// A real (but semantics-preserving) splice: incremental verification of
+/// the patched pair matches a cold full verification of the same pair.
+#[test]
+fn clean_splice_reverify_matches_full_verification() {
+    let (gs, gd, ri) = fig1();
+    let v = Verifier::new().isolated(true);
+    let rv = v.reverify(&gs, &gd, &ri, &patch(CLEAN_PATCH)).expect("reverify runs");
+    let cold = v.run(&gs, &rv.patched, &rv.ri);
+    assert_eq!(
+        relation_bytes(&cold, &gs, &rv.patched),
+        relation_bytes(&rv.verdict, &gs, &rv.patched),
+        "incremental certificate diverged from full verification of the patched pair"
+    );
+    let Verdict::Verified(o) = &rv.verdict else { unreachable!() };
+    assert!(o.cache_hits >= 1, "region C's certificate must be replayed");
+}
+
+/// A semantic bug refutes, and the failure locus lies inside the dirty
+/// cone the impact analysis predicted.
+#[test]
+fn bug_patch_refutes_inside_the_dirty_cone() {
+    let (gs, gd, ri) = fig1();
+    let v = Verifier::new().isolated(true);
+    let rv = v.reverify(&gs, &gd, &ri, &patch(BUG_PATCH)).expect("reverify runs");
+    let Verdict::Refuted(e) = &rv.verdict else {
+        panic!("sub→add must refute, got {}", rv.verdict.tag());
+    };
+    assert_eq!(
+        rv.impact.class_of(e.node),
+        Some(RegionClass::Dirty),
+        "refutation at '{}' fell outside the predicted dirty cone",
+        e.node_name
+    );
+    // and the full run of the patched pair refutes at the same locus
+    let cold = v.run(&gs, &rv.patched, &rv.ri);
+    let Verdict::Refuted(c) = &cold else { panic!("full run must refute too") };
+    assert_eq!(c.node, e.node);
+    assert_eq!(format!("{c}"), format!("{e}"), "error text must match byte for byte");
+}
+
+/// A structurally invalid patch is a structured error from `reverify` —
+/// never a panic, never a verdict.
+#[test]
+fn invalid_patch_reverify_is_a_structured_error() {
+    let (gs, gd, ri) = fig1();
+    let e = Verifier::new()
+        .isolated(true)
+        .reverify(&gs, &gd, &ri, &patch(INVALID_PATCH))
+        .expect_err("invalid patch must not produce a verdict");
+    assert!(format!("{e:#}").contains("no_such_tensor"), "{e:#}");
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: a single-layer patch of the L=8 GPT workload leaves at
+// least (L-1)/L of the regions Clean, and those certificates replay.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gpt8_single_layer_patch_keeps_most_regions_clean() {
+    const LAYERS: usize = 8;
+    let (gs, gd, ri) =
+        gpt::tp_sp_pair(2, LAYERS, &GptConfig::default()).expect("build workload");
+    // splice an identity in front of slot 0 of the topologically last G_d
+    // node — a strictly local, semantics-preserving single-layer edit
+    let last = gd.topo_order().last().expect("nonempty graph");
+    let node = gd.node(last);
+    let src = gd.tensor(node.inputs[0]).name.clone();
+    let tgt = gd.tensor(node.output).name.clone();
+    let p = GraphPatch::new("late_identity")
+        .add("late_id", Op::Identity, vec![src])
+        .rewire(tgt, 0, "late_id");
+
+    let v = Verifier::new().isolated(true);
+    let rv = v.reverify(&gs, &gd, &ri, &p).expect("reverify runs");
+    let Verdict::Verified(o) = &rv.verdict else {
+        panic!("identity splice must still verify, got {}", rv.verdict.tag());
+    };
+
+    let (clean, total) = (rv.impact.clean(), rv.impact.regions.len());
+    assert!(clean < total, "the patched tail must be re-verified, not reused");
+    assert!(
+        clean * LAYERS >= (LAYERS - 1) * total,
+        "single-layer patch proved only {clean}/{total} regions Clean \
+         (acceptance floor is {}/{LAYERS})",
+        LAYERS - 1
+    );
+    assert!(
+        o.cache_hits as usize >= clean,
+        "every Clean region must replay its certificate: {} hits < {clean} clean",
+        o.cache_hits
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Lint integration: relint over the dirty cone only, zero false alarms.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn relint_is_false_alarm_free_on_clean_patched_pairs() {
+    // fig1 + the clean splice
+    let (gs, gd, ri) = fig1();
+    let patched = patch(CLEAN_PATCH).apply(&gd).expect("applies");
+    let ri2 = remap_relation(&ri, &gd, &patched).expect("remap");
+    let imp = analyze_patch(&gs, &gd, &patched, &ri, &ri2, &[]);
+    let old_lint = analysis::analyze(&gd, Some(&ri));
+    let new_lint = analysis::analyze(&patched, Some(&ri2));
+    let merged = relint(&old_lint, &new_lint, &gd, &patched, &imp)
+        .expect("impact cone must cover every lint change");
+    assert!(merged.is_clean(), "false alarm on a clean patched pair:\n{}", merged.render());
+
+    // every Table-2 workload under the noop patch: relint reduces to the
+    // (empty) full report, with zero findings migrating across the cone
+    let noop = GraphPatch::new("noop");
+    for w in table2_workloads(2) {
+        let patched = noop.apply(&w.gd).expect("noop applies");
+        let ri2 = remap_relation(&w.ri, &w.gd, &patched).expect("remap");
+        let imp = analyze_patch(&w.gs, &w.gd, &patched, &w.ri, &ri2, &[]);
+        let old_lint = analysis::analyze(&w.gd, Some(&w.ri));
+        let new_lint = analysis::analyze(&patched, Some(&ri2));
+        let merged = relint(&old_lint, &new_lint, &w.gd, &patched, &imp)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", w.name));
+        assert!(
+            merged.is_clean(),
+            "{}: lint false alarm under noop patch:\n{}",
+            w.name,
+            merged.render()
+        );
+    }
+}

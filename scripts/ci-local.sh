@@ -5,8 +5,9 @@
 #
 #   rust job:        build → test (incl. chaos) → fmt → clippy (-D warnings)
 #   fuzz-smoke job:  suite → parallel-determinism gate → serve smoke →
-#                    lint gate → fuzz smoke → lint-triage gate →
-#                    resume drill → fig4 + fuzz + cache + serve benches →
+#                    lint gate → incremental-determinism gate →
+#                    fuzz smoke → lint-triage gate → resume drill →
+#                    fig4 + fuzz + cache + serve + patch benches →
 #                    cache-effectiveness gate → bench gate
 #
 # Pass --quick to stop after the rust job (the fast pre-push check).
@@ -79,6 +80,48 @@ for f in rust/tests/fixtures/*_killed.json; do
 done
 echo "lint gate passed"
 
+# Incremental-determinism gate: `reverify --canonical` (old pair + patch)
+# must match `verify --canonical` of the patched pair (produced by
+# `graphguard patch`) byte for byte on stdout AND in exit code, for both a
+# clean and a refuting patch; a structurally invalid patch must exit 2.
+echo
+echo "==> incremental-determinism gate (reverify --canonical == verify --canonical)"
+fix=rust/tests/fixtures/patch
+cargo run --release --bin graphguard -- patch --gd "$fix/fig1_gd.json" \
+    --patch "$fix/fig1_clean.patch.json" > "$tmpdir/gd_clean.json"
+cargo run --release --bin graphguard -- patch --gd "$fix/fig1_gd.json" \
+    --patch "$fix/fig1_bug.patch.json" > "$tmpdir/gd_bug.json"
+for p in clean bug; do
+    set +e
+    cargo run --release --bin graphguard -- verify --canonical \
+        --gs "$fix/fig1_gs.json" --gd "$tmpdir/gd_$p.json" \
+        --ri "$fix/fig1_ri.json" > "$tmpdir/full_$p.txt" 2>/dev/null
+    full_rc=$?
+    cargo run --release --bin graphguard -- reverify --canonical \
+        --gs "$fix/fig1_gs.json" --gd "$fix/fig1_gd.json" \
+        --ri "$fix/fig1_ri.json" --patch "$fix/fig1_$p.patch.json" \
+        > "$tmpdir/inc_$p.txt" 2>/dev/null
+    inc_rc=$?
+    set -e
+    if [ "$full_rc" != "$inc_rc" ]; then
+        echo "incremental gate: exit codes diverged on $p patch: full=$full_rc reverify=$inc_rc" >&2
+        exit 1
+    fi
+    diff -u "$tmpdir/full_$p.txt" "$tmpdir/inc_$p.txt"
+done
+set +e
+cargo run --release --bin graphguard -- reverify --canonical \
+    --gs "$fix/fig1_gs.json" --gd "$fix/fig1_gd.json" \
+    --ri "$fix/fig1_ri.json" --patch "$fix/fig1_invalid.patch.json" \
+    > /dev/null 2>&1
+invalid_rc=$?
+set -e
+if [ "$invalid_rc" != 2 ]; then
+    echo "incremental gate: invalid patch must exit 2, got $invalid_rc" >&2
+    exit 1
+fi
+echo "incremental re-verification is byte-identical to full verification"
+
 step cargo run --release --bin graphguard -- fuzz --seeds 50 --seed 0
 
 # triage counters ride in FUZZ_REPORT.json; a lint finding on a clean pair
@@ -100,6 +143,7 @@ step cargo bench --bench fuzz_throughput
 step cargo bench --bench cache_effectiveness
 step ./scripts/check_cache_effectiveness.sh BENCH_cache.json
 step cargo bench --bench serve_latency
+step cargo bench --bench patch_reverify
 step ./scripts/bench_compare.sh BENCH_baseline .
 
 echo
